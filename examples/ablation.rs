@@ -1,0 +1,82 @@
+//! Ablations of the two training techniques the paper credits for
+//! stability (§III-B: "the alternate W and theta training and the softmax
+//! temperature were not present [in EdMIPS]. However, we found
+//! experimentally that both techniques improve the training stability and
+//! final result quality"):
+//!
+//!   A. temperature annealing ON (tau 5 -> ~0.25) vs OFF (tau = 1 fixed);
+//!   B. 20/80 alternated theta/W epochs vs joint updates (theta and W
+//!      stepped on every batch — emulated as 50/50 interleave).
+//!
+//! Run: `cargo run --release --example ablation [-- <bench>]`
+
+use anyhow::Result;
+use cwmix::baselines;
+use cwmix::nas::{Mode, SearchConfig, Target, Trainer};
+use cwmix::runtime::Runtime;
+
+fn run_variant(
+    rt: &Runtime,
+    base: &SearchConfig,
+    warm: &cwmix::nas::trainer::StateSnapshot,
+    label: &str,
+    tau0: f32,
+    tau_decay: f32,
+) -> Result<()> {
+    let mut cfg = base.clone();
+    cfg.tau0 = tau0;
+    cfg.tau_decay = tau_decay;
+    let mut tr = Trainer::new(rt, cfg)?;
+    tr.restore(warm);
+    let r = tr.run_after_warmup()?;
+    // search-phase val-score stability: std-dev across search epochs
+    let scores: Vec<f32> = r
+        .history
+        .iter()
+        .filter(|h| h.phase == "search")
+        .map(|h| h.val_score)
+        .collect();
+    let stab = cwmix::util::std_dev(&scores);
+    println!(
+        "  {label:<34} score {:.4}  size {:.3} Mbit  energy {:.2} uJ  search-std {:.4}",
+        r.test_score,
+        r.size_mb(),
+        r.energy_uj(),
+        stab
+    );
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let bench = std::env::args().nth(1).unwrap_or_else(|| "ad".to_string());
+    let rt = Runtime::cpu(std::path::Path::new("artifacts"))?;
+    let mut base = SearchConfig::quick(&bench, Mode::ChannelWise, Target::Size, 0.0);
+    let tr0 = Trainer::new(&rt, base.clone())?;
+    let (reg_s0, _) = tr0.initial_regs()?;
+    drop(tr0);
+    base.lambda = 0.5 / reg_s0;
+
+    println!("ablation on {bench} (size target, lambda = {:.3e})", base.lambda);
+    let warm = baselines::shared_warmup(&rt, &base)?;
+
+    println!("[A] softmax temperature:");
+    run_variant(&rt, &base, &warm, "annealed tau 5 -> 0.25 (paper)", 5.0, base.tau_decay)?;
+    run_variant(&rt, &base, &warm, "fixed tau = 1 (no annealing)", 1.0, 1.0)?;
+    run_variant(&rt, &base, &warm, "fixed tau = 5 (never decisive)", 5.0, 1.0)?;
+
+    println!("[B] theta/W sample split (paper = 20/80 alternated):");
+    for (label, frac) in [("20/80 (paper)", 0.2f32), ("50/50", 0.5), ("5/95", 0.05)] {
+        let mut cfg = base.clone();
+        cfg.theta_frac = frac;
+        let mut tr = Trainer::new(&rt, cfg)?;
+        tr.restore(&warm);
+        let r = tr.run_after_warmup()?;
+        println!(
+            "  {label:<34} score {:.4}  size {:.3} Mbit  energy {:.2} uJ",
+            r.test_score,
+            r.size_mb(),
+            r.energy_uj()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,69 @@
+//! §III-C deployment walkthrough on the VWW benchmark: train briefly,
+//! pick a mixed assignment, reorder + split + BN-fold, verify against
+//! the HLO `infer` graph, and compare the MPIC cost of the mixed model
+//! vs the w8x8 and w2x8 fixed baselines.
+//!
+//! ```bash
+//! cargo run --release --example deploy_mpic [-- <bench>]
+//! ```
+
+use anyhow::Result;
+use cwmix::data::{make_dataset, Split};
+use cwmix::deploy;
+use cwmix::energy::CostLut;
+use cwmix::nas::{Mode, SearchConfig, Target, Trainer};
+use cwmix::quant::Assignment;
+use cwmix::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let bench = std::env::args().nth(1).unwrap_or_else(|| "vww".to_string());
+    let rt = Runtime::cpu(std::path::Path::new("artifacts"))?;
+    let mut cfg = SearchConfig::quick(&bench, Mode::ChannelWise, Target::Energy, 0.0);
+    let tr0 = Trainer::new(&rt, cfg.clone())?;
+    let (_, reg_e0) = tr0.initial_regs()?;
+    drop(tr0);
+    cfg.lambda = 0.5 / reg_e0;
+    let mut tr = Trainer::new(&rt, cfg)?;
+    let r = tr.run()?;
+    println!("searched mixed assignment: score {:.3}", r.test_score);
+
+    let lut = CostLut::default();
+    let ds = make_dataset(&bench, Split::Test, 64, 0);
+    let feat = tr.manifest.feat_len();
+
+    // verification of the transform (the §III-C "fully compatible" claim)
+    let rep = deploy::verify::verify_against_hlo(&tr, &r.assignment, &ds, 1)?;
+    println!(
+        "verify: n={} max|d|={:.2e} argmax agreement {:.1}%",
+        rep.n_samples,
+        rep.max_abs_diff,
+        rep.argmax_agreement * 100.0
+    );
+    assert!(rep.argmax_agreement > 0.95, "deployment diverged from HLO");
+
+    // cost comparison: mixed vs fixed
+    let qnames = tr.manifest.qnames();
+    let qcouts = tr.manifest.qcouts();
+    let candidates = vec![
+        ("searched-mixed".to_string(), r.assignment.clone()),
+        ("w8x8".to_string(), Assignment::fixed(&qnames, &qcouts, 8, 8)),
+        ("w4x4".to_string(), Assignment::fixed(&qnames, &qcouts, 4, 4)),
+        ("w2x8".to_string(), Assignment::fixed(&qnames, &qcouts, 2, 8)),
+    ];
+    println!("\n{:<16} {:>9} {:>10} {:>10} {:>9} {:>9}",
+             "assignment", "us/inf", "uJ total", "uJ MAC", "KB flash", "subconvs");
+    for (name, a) in candidates {
+        let d = deploy::build(&tr.manifest, &tr.params_map(), &tr.bn_map(), &a)?;
+        let (_, cost) = cwmix::mpic::run_batch(&d, &ds.x[0..feat], feat, &lut)?;
+        println!(
+            "{:<16} {:>9.1} {:>10.2} {:>10.2} {:>9.1} {:>9}",
+            name,
+            cost.latency_us(),
+            cost.total_energy_uj(),
+            cost.mac_energy_pj() * 1e-6,
+            d.packed_bytes() as f64 / 1024.0,
+            d.n_subconvs()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,42 @@
+//! Fig. 3 panel regeneration: λ sweep of ours vs EdMIPS vs fixed
+//! precision on one benchmark/target, with ASCII Pareto plot and the
+//! iso-accuracy headline savings.
+//!
+//! ```bash
+//! cargo run --release --example pareto_sweep -- kws size [--full]
+//! ```
+
+use anyhow::Result;
+use cwmix::coordinator::results;
+use cwmix::coordinator::sweep::{run_sweep, DEFAULT_STRENGTHS};
+use cwmix::nas::Target;
+use cwmix::report;
+use cwmix::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let bench = args.first().map(|s| s.as_str()).unwrap_or("kws");
+    let target = match args.get(1).map(|s| s.as_str()).unwrap_or("size") {
+        "energy" => Target::Energy,
+        _ => Target::Size,
+    };
+    let quick = !args.iter().any(|a| a == "--full");
+
+    let rt = Runtime::cpu(std::path::Path::new("artifacts"))?;
+    let mut log = |s: &str| println!("{s}");
+    let sw = run_sweep(&rt, bench, target, &DEFAULT_STRENGTHS, quick, &mut log)?;
+
+    let path = results::save_sweep(
+        std::path::Path::new("results"),
+        bench,
+        target.name(),
+        &sw.ours,
+        &sw.edmips,
+        &sw.fixed,
+    )?;
+    println!("saved {}", path.display());
+    let (b, t, o, e, f) = results::load_sweep(&path)?;
+    let target = if t == "energy" { Target::Energy } else { Target::Size };
+    println!("{}", report::fig3_panel(&b, target, &o, &e, &f));
+    Ok(())
+}

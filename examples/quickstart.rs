@@ -1,0 +1,33 @@
+//! Quickstart: load the AOT artifacts, run one fixed-precision QAT
+//! baseline on the Keyword Spotting benchmark, and print score + cost.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+use cwmix::baselines;
+use cwmix::nas::{Mode, SearchConfig, Target};
+use cwmix::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let rt = Runtime::cpu(std::path::Path::new("artifacts"))?;
+    println!("PJRT platform: {}", rt.platform());
+
+    // A small QAT run: warmup at 8 bit, then w4x8 fixed-precision.
+    let cfg = SearchConfig::quick("kws", Mode::ChannelWise, Target::Size, 0.0);
+    println!("warmup ({} epochs, {} samples)...", cfg.warmup_epochs, cfg.train_n);
+    let warm = baselines::shared_warmup(&rt, &cfg)?;
+
+    for (wb, xb) in [(8u32, 8u32), (4, 8), (2, 8)] {
+        let r = baselines::run_fixed(&rt, &cfg, &warm, wb, xb)?;
+        println!(
+            "w{wb}x{xb}: accuracy {:.3}  size {:.3} Mbit  energy {:.2} uJ",
+            r.test_score,
+            r.size_mb(),
+            r.energy_uj()
+        );
+    }
+    println!("(mixed-precision search: see examples/search_ic.rs)");
+    Ok(())
+}

@@ -1,0 +1,80 @@
+//! End-to-end driver (the repo's E2E validation run, EXPERIMENTS.md §E2E):
+//! the full Alg. 1 channel-wise DNAS on the Image Classification
+//! benchmark — warmup, 20/80 alternated search with tau annealing,
+//! argmax freeze, fine-tune — logging the loss curve at every epoch,
+//! then §III-C deployment, HLO-vs-MPIC verification, and the simulated
+//! on-target cost.
+//!
+//! ```bash
+//! cargo run --release --example search_ic            # full budget
+//! cargo run --release --example search_ic -- --quick # smoke budget
+//! ```
+
+use anyhow::Result;
+use cwmix::data::{make_dataset, Split};
+use cwmix::deploy;
+use cwmix::nas::{Mode, SearchConfig, Target, Trainer};
+use cwmix::report;
+use cwmix::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let rt = Runtime::cpu(std::path::Path::new("artifacts"))?;
+    println!("PJRT platform: {}", rt.platform());
+
+    let mut cfg = if quick {
+        SearchConfig::quick("ic", Mode::ChannelWise, Target::Energy, 0.0)
+    } else {
+        SearchConfig::new("ic", Mode::ChannelWise, Target::Energy, 0.0)
+    };
+    // moderate energy pressure: lambda = 0.3 / reg0
+    let tr0 = Trainer::new(&rt, cfg.clone())?;
+    let (_, reg_e0) = tr0.initial_regs()?;
+    drop(tr0);
+    cfg.lambda = 0.3 / reg_e0;
+    println!(
+        "IC ResNet-8 channel-wise search: lambda = {:.3e}, {} train samples",
+        cfg.lambda, cfg.train_n
+    );
+
+    let mut tr = Trainer::new(&rt, cfg)?;
+    let r = tr.run()?;
+
+    println!("\nloss curve:");
+    for h in &r.history {
+        println!(
+            "  [{:8}] epoch {:>2}  train {:.4}  val {:.4}  val_acc {:.3}  tau {:.2}",
+            h.phase, h.epoch, h.train_loss, h.val_loss, h.val_score, h.tau
+        );
+    }
+    println!(
+        "\nresult: test accuracy {:.3}  size {:.3} Mbit  energy {:.2} uJ (Eq.8)",
+        r.test_score,
+        r.size_mb(),
+        r.energy_uj()
+    );
+    println!("{}", report::fig4_dump(&r.config_label, &r.assignment));
+
+    // --- deployment: reorder, split, fold, verify, simulate ---------------
+    let ds = make_dataset("ic", Split::Test, 64, 0);
+    let rep = deploy::verify::verify_against_hlo(&tr, &r.assignment, &ds, 1)?;
+    println!(
+        "deploy verification: max|d| = {:.2e}, argmax agreement = {:.1}%",
+        rep.max_abs_diff,
+        rep.argmax_agreement * 100.0
+    );
+
+    let deployed = deploy::build(
+        &tr.manifest, &tr.params_map(), &tr.bn_map(), &r.assignment)?;
+    let feat = tr.manifest.feat_len();
+    let (_, cost) = cwmix::mpic::run_batch(
+        &deployed, &ds.x[0..feat], feat, &tr.manifest.lut)?;
+    println!(
+        "MPIC simulation: {:.1} us/inference @250MHz, {:.2} uJ total, {} sub-convs, {} weight bytes",
+        cost.latency_us(),
+        cost.total_energy_uj(),
+        deployed.n_subconvs(),
+        deployed.packed_bytes()
+    );
+    Ok(())
+}

@@ -1,0 +1,197 @@
+"""AOT lowering: JAX graphs -> HLO text artifacts + manifest.json.
+
+Usage (from ``python/``):
+    python -m compile.aot --out ../artifacts [--bench ic,kws,vww,ad]
+
+For every benchmark this emits::
+
+    artifacts/<bench>/
+        train_w_hard.hlo.txt      # warmup / finetune / fixed baselines
+        search_theta_cw.hlo.txt   # Alg.1 line 5, channel-wise (ours)
+        search_theta_lw.hlo.txt   # Alg.1 line 5, layer-wise (EdMIPS)
+        search_w_cw.hlo.txt       # Alg.1 line 7
+        search_w_lw.hlo.txt
+        eval.hlo.txt
+        infer.hlo.txt
+        manifest.json             # tensor order/shapes, model geometry, LUT
+
+HLO **text** is the interchange format (not ``.serialize()``): jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Python runs exactly once per artifact set; the Rust binary is self-contained
+afterwards.  ``make artifacts`` skips this when inputs are unchanged.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .energy_lut import cycles_per_mac, energy_lut
+from .models import get_model
+from .models.common import init_params
+from .quantlib import PRECISIONS
+from .train_graphs import GraphSet
+
+BATCH = 32
+SEED = 0
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _scalar():
+    return _spec(())
+
+
+class Lowerer:
+    """Builds the input specs for one benchmark and lowers all graphs."""
+
+    def __init__(self, bench: str):
+        self.bench = bench
+        self.model = get_model(bench)
+        self.gs_cw = GraphSet(self.model, "cw", SEED)
+        self.gs_lw = GraphSet(self.model, "lw", SEED)
+
+    # ---- spec helpers ------------------------------------------------------
+
+    def param_specs(self, gs: GraphSet):
+        return [_spec(gs.pshapes[k]) for k in gs.pnames]
+
+    def bn_specs(self, gs: GraphSet):
+        return [_spec(gs.bshapes[k]) for k in gs.bnames]
+
+    def nas_specs(self, gs: GraphSet):
+        return [_spec(gs.nshapes[k]) for k in gs.nnames]
+
+    def hard_specs(self, gs: GraphSet):
+        return [_spec(shape) for _, shape in gs.hard_shapes()]
+
+    def batch_specs(self):
+        m = self.model
+        x = _spec((BATCH,) + m.input_shape)
+        if m.loss == "ce":
+            y = _spec((BATCH,), jnp.int32)
+        else:
+            y = _spec((BATCH,) + m.input_shape)
+        return x, y
+
+    # ---- graph lowering ----------------------------------------------------
+
+    def lower_all(self):
+        gs = self.gs_cw
+        p, b = self.param_specs(gs), self.bn_specs(gs)
+        hard = self.hard_specs(gs)
+        x, y = self.batch_specs()
+        s = _scalar()
+
+        graphs = {}
+
+        graphs["train_w_hard"] = jax.jit(gs.train_w_hard, keep_unused=True).lower(
+            p, b, p, p, s, hard, x, y, s)
+
+        for mode, g in (("cw", self.gs_cw), ("lw", self.gs_lw)):
+            n = self.nas_specs(g)
+            graphs[f"search_theta_{mode}"] = jax.jit(g.search_theta, keep_unused=True).lower(
+                p, b, n, n, n, s, x, y, s, s, s, s, s)
+            graphs[f"search_w_{mode}"] = jax.jit(g.search_w, keep_unused=True).lower(
+                p, b, n, p, p, s, x, y, s, s)
+
+        graphs["eval"] = jax.jit(gs.eval_hard, keep_unused=True).lower(p, b, hard, x, y)
+        graphs["infer"] = jax.jit(gs.infer_hard, keep_unused=True).lower(p, b, hard, x)
+        return graphs
+
+    # ---- manifest ----------------------------------------------------------
+
+    def manifest(self) -> dict:
+        gs = self.gs_cw
+        m = self.model
+        p0, b0, n0 = init_params(m, SEED, "cw")
+        _, _, n0_lw = init_params(m, SEED, "lw")
+        return {
+            "benchmark": self.bench,
+            "batch": BATCH,
+            "seed": SEED,
+            "precisions": list(PRECISIONS),
+            "loss": m.loss,
+            "n_classes": m.n_classes,
+            "input_shape": list(m.input_shape),
+            "layers": m.manifest_layers(),
+            "params": [{"name": k, "shape": list(np.shape(v))}
+                       for k, v in p0.items()],
+            "bn_state": [{"name": k, "shape": list(np.shape(v))}
+                         for k, v in b0.items()],
+            "nas_cw": [{"name": k, "shape": list(np.shape(v))}
+                       for k, v in n0.items()],
+            "nas_lw": [{"name": k, "shape": list(np.shape(v))}
+                       for k, v in n0_lw.items()],
+            "hard_assign": [{"name": n, "shape": list(s)}
+                            for n, s in gs.hard_shapes()],
+            "energy_lut_pj_per_mac": [[float(v) for v in row]
+                                      for row in energy_lut()],
+            "cycles_per_mac": [[float(v) for v in row]
+                               for row in cycles_per_mac()],
+            "graphs": {
+                "train_w_hard": {
+                    "inputs": "params,bn,adam_m,adam_v,t,hard,x,y,lr",
+                    "outputs": "params,bn,adam_m,adam_v,loss,metric"},
+                "search_theta": {
+                    "inputs": "params,bn,nas,adam_m,adam_v,t,x,y,tau,"
+                              "lam_size,lam_energy,lr,act_freeze",
+                    "outputs": "nas,adam_m,adam_v,loss,reg_size,reg_energy"},
+                "search_w": {
+                    "inputs": "params,bn,nas,adam_m,adam_v,t,x,y,tau,lr",
+                    "outputs": "params,bn,adam_m,adam_v,loss,metric"},
+                "eval": {
+                    "inputs": "params,bn,hard,x,y",
+                    "outputs": "loss,metric,per_sample,reg_size,reg_energy"},
+                "infer": {"inputs": "params,bn,hard,x", "outputs": "out"},
+            },
+        }
+
+
+def emit_benchmark(bench: str, outdir: str) -> None:
+    os.makedirs(os.path.join(outdir, bench), exist_ok=True)
+    low = Lowerer(bench)
+    for name, lowered in low.lower_all().items():
+        path = os.path.join(outdir, bench, f"{name}.hlo.txt")
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"  {bench}/{name}: {len(text) / 1e6:.1f} MB")
+    with open(os.path.join(outdir, bench, "manifest.json"), "w") as f:
+        json.dump(low.manifest(), f, indent=1)
+    print(f"  {bench}/manifest.json")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--bench", default="ic,kws,vww,ad")
+    args = ap.parse_args()
+    for bench in args.bench.split(","):
+        print(f"[aot] lowering {bench} ...")
+        emit_benchmark(bench.strip(), args.out)
+    print("[aot] done")
+
+
+if __name__ == "__main__":
+    main()

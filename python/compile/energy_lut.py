@@ -1,0 +1,52 @@
+"""The MPIC energy/OP LUT ``C(p_x, p_w)`` (Eq. (8)) — single source of truth.
+
+Derived from the MPIC core's mixed-precision SIMD dot-product unit (Ottavi
+et al., ISVLSI 2020) as documented in DESIGN.md §7: lane throughput is set
+by the *wider* operand (8-bit: 4 MACs/cycle, 4-bit: 8, 2-bit: 16); energy/OP
+is core power x cycle time / throughput with a datapath factor kappa < 1
+for narrower operands (narrower multipliers gate less logic).
+
+Values are pJ/MAC at 250 MHz with P_core = 1.75 mW.  The table is emitted
+into every ``manifest.json`` by ``aot.py``; ``rust/src/energy/lut.rs``
+mirrors it and an integration test cross-checks the two, so the NAS
+regularizer (Eq. 8, baked into the HLO graphs) and the Rust-side reporting
+can never drift apart.
+
+The paper's key property is preserved: energy is **not** linear in
+bit-width (2x2 is 4.4x — not 16x — cheaper than 8x8).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# Index order: [p_x][p_w] over PRECISIONS = (2, 4, 8).
+# thr(p_x, p_w) = MACs/cycle = 16 / max(p_x, p_w) * (lane pairing factor 1)
+_THR = np.array([
+    # p_w:  2     4     8
+    [16.0, 8.0, 4.0],   # p_x = 2
+    [8.0, 8.0, 4.0],    # p_x = 4
+    [4.0, 4.0, 4.0],    # p_x = 8
+])
+
+# Datapath gating factor: narrower operand pairs burn slightly less
+# switching energy per cycle.
+_KAPPA = np.array([
+    [0.85, 0.88, 0.92],
+    [0.88, 0.90, 0.95],
+    [0.92, 0.95, 1.00],
+])
+
+_P_CORE_MW = 1.75
+_F_MHZ = 250.0
+_PJ_PER_CYCLE = _P_CORE_MW * 1e-3 / (_F_MHZ * 1e6) * 1e12  # = 7.0 pJ/cycle
+
+
+def energy_lut() -> np.ndarray:
+    """(3, 3) float32 pJ/MAC table, rows = p_x in (2,4,8), cols = p_w."""
+    return (_PJ_PER_CYCLE / _THR * _KAPPA).astype(np.float32)
+
+
+def cycles_per_mac() -> np.ndarray:
+    """(3, 3) float32 cycles/MAC table (for the latency model)."""
+    return (1.0 / _THR).astype(np.float32)

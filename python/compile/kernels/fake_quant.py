@@ -1,0 +1,187 @@
+"""Pallas kernels for PACT fake-quantization (the NAS hot-spot, Eq. (1)).
+
+TPU-shaped design
+-----------------
+The paper's PyTorch implementation materialises ``|P|`` fake-quantized copies
+of every tensor on every forward pass (its stated memory/compute overhead).
+On a TPU-like memory hierarchy that is an HBM-bandwidth problem, not a FLOP
+problem: fake-quant is pure VPU elementwise work.  These kernels therefore:
+
+  * fuse *all* |P| fake-quantizations and the NAS blend into a single pass
+    over the tensor (see ``mixed_weight.py`` for the weight analogue);
+  * tile the tensor with ``BlockSpec``: whole-array blocks while the
+    operand fits the per-core working-set budget (every benchmark layer
+    does), falling back to (8 x 128)-multiple row tiles above it — the
+    VPU register shape, so the TPU lowering keeps lanes full;
+  * keep scalars (``alpha``, blend coefficients) in (1, n) blocks
+    broadcast to every tile.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; interpret-mode lowers to plain HLO, which both the build-time
+pytest checks and the Rust runtime execute.  Real-TPU perf is *estimated*
+from the VMEM footprint / MXU-VPU utilisation in DESIGN.md §Perf.
+
+Gradients: the kernels are wrapped in ``jax.custom_vjp`` (STE / PACT rules,
+same as ``quantlib``), so the training graphs can call them directly and
+the backward pass is plain fused-elementwise XLA.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# VPU-register-shaped tile (sublane x lane) used above the single-block cap.
+_TILE_ROWS = 256
+_TILE_COLS = 128
+
+# Whole-array blocks below this element count (all benchmark-model tensors
+# qualify; the tiled path exists for larger deployments and is exercised
+# directly by the pytest suite).
+_MAX_SINGLE_BLOCK = 1 << 22
+
+
+def _tiles(n: int, t: int) -> int:
+    return pl.cdiv(n, t)
+
+
+def _as2d(x: jax.Array):
+    """Collapse to 2D: lanes = trailing 128 when possible, else last dim."""
+    if x.ndim == 2:
+        return x, x.shape
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    if n % _TILE_COLS == 0:
+        return flat.reshape(n // _TILE_COLS, _TILE_COLS), x.shape
+    return flat.reshape(1, n), x.shape
+
+
+def _elementwise_call(kernel, x2d: jax.Array, *scalars):
+    """Launch an elementwise kernel over ``x2d`` with broadcast scalars.
+
+    ``scalars`` are small (1, k) arrays fetched whole into every block.
+    """
+    r, c = x2d.shape
+    if r * c <= _MAX_SINGLE_BLOCK:
+        grid = (1, 1)
+        blk = (r, c)
+    else:
+        blk = (min(_TILE_ROWS, r), min(_TILE_COLS, c))
+        grid = (_tiles(r, blk[0]), _tiles(c, blk[1]))
+    in_specs = [pl.BlockSpec(blk, lambda i, j: (i, j))]
+    for s in scalars:
+        sshape = s.shape
+        in_specs.append(pl.BlockSpec(sshape, lambda i, j: (0, 0)))
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(x2d.shape, x2d.dtype),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec(blk, lambda i, j: (i, j)),
+        interpret=True,
+    )(x2d, *scalars)
+
+
+# ---------------------------------------------------------------------------
+# PACT activation fake-quant kernel (single precision).
+# ---------------------------------------------------------------------------
+
+def _pact_kernel(x_ref, a_ref, o_ref, *, levels: float):
+    a = jnp.maximum(a_ref[0, 0], 1e-6)
+    eps = a / levels
+    xc = jnp.clip(x_ref[...], 0.0, a)
+    o_ref[...] = jnp.round(xc / eps) * eps
+
+
+def _make_pact_pallas():
+    @functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+    def _f(x, alpha, n_bits):
+        x2d, shape = _as2d(x)
+        levels = float((1 << n_bits) - 1)
+        y = _elementwise_call(
+            functools.partial(_pact_kernel, levels=levels),
+            x2d, jnp.reshape(alpha, (1, 1)))
+        return y.reshape(shape)
+
+    def fwd(x, alpha, n_bits):
+        return _f(x, alpha, n_bits), (x, alpha)
+
+    def bwd(n_bits, res, g):
+        x, alpha = res
+        a = jnp.maximum(alpha, 1e-6)
+        in_range = jnp.logical_and(x >= 0.0, x <= a)
+        gx = jnp.where(in_range, g, 0.0)
+        galpha = jnp.sum(jnp.where(x > a, g, 0.0))
+        return gx, galpha.reshape(jnp.shape(alpha)).astype(g.dtype)
+
+    _f.defvjp(fwd, bwd)
+    return _f
+
+
+pact_fake_quant_pallas = _make_pact_pallas()
+"""``pact_fake_quant_pallas(x, alpha, n_bits)`` — tiled PACT fake quant.
+
+Any-rank ``x``, scalar array ``alpha``, static int ``n_bits``.  Forward runs
+the Pallas kernel; backward is the analytic STE/PACT rule.
+"""
+
+
+# ---------------------------------------------------------------------------
+# Per-channel weight fake-quant kernel (rows = output channels).
+# ---------------------------------------------------------------------------
+
+def _wfq_kernel(w_ref, o_ref, *, levels: float):
+    w = w_ref[...]
+    amax = jnp.max(jnp.abs(w), axis=1, keepdims=True)
+    s = jnp.maximum(amax, 1e-8) / levels
+    q = jnp.clip(jnp.round(w / s), -levels, levels)
+    o_ref[...] = q * s
+
+
+def rowwise_call(kernel, w2d: jax.Array, *row_blocks):
+    """Launch a row-wise kernel: blocks hold *entire rows* (full K) so
+    per-channel reductions never cross block boundaries.  ``row_blocks``
+    are per-row side inputs (rows x k_i) tiled with the same row split."""
+    rows, k = w2d.shape
+    if rows * k <= _MAX_SINGLE_BLOCK:
+        br = rows
+        grid = (1,)
+    else:
+        br = min(_TILE_ROWS, rows)
+        grid = (_tiles(rows, br),)
+    in_specs = [pl.BlockSpec((br, k), lambda i: (i, 0))]
+    for rb in row_blocks:
+        cols = rb.shape[1]
+        in_specs.append(pl.BlockSpec((br, cols), lambda i: (i, 0)))
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(w2d.shape, w2d.dtype),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((br, k), lambda i: (i, 0)),
+        interpret=True,
+    )(w2d, *row_blocks)
+
+
+def _make_weight_fq_pallas():
+    @functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+    def _f(w2d, n_bits):
+        levels = float((1 << (n_bits - 1)) - 1)
+        return rowwise_call(
+            functools.partial(_wfq_kernel, levels=levels), w2d)
+
+    def fwd(w2d, n_bits):
+        return _f(w2d, n_bits), ()
+
+    def bwd(n_bits, res, g):
+        return (g,)  # STE
+
+    _f.defvjp(fwd, bwd)
+    return _f
+
+
+weight_fake_quant_pallas = _make_weight_fq_pallas()
+"""Per-channel symmetric weight fake quant over (Cout, K); STE backward."""

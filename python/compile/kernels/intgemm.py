@@ -1,0 +1,49 @@
+"""Tiled Pallas integer-GEMM kernel (deployment cross-check path).
+
+The MPIC simulator in ``rust/src/mpic/`` executes deployed layers as
+integer GEMMs (im2col).  To cross-validate it against the HLO world, the
+``infer_deployed`` artifact runs the same integer contraction through this
+kernel: operands are f32 tensors holding exact small integers (quantized
+activations in [0, 2^px - 1], weights in [-(2^(pw-1)-1), +]), accumulation
+is exact in f32 for all supported magnitudes (|acc| < 2^24 guaranteed by
+8-bit operands and K <= 2^9 in every benchmark model).
+
+MXU-shaped tiling: (TM x TK) @ (TK x TN) blocks with TM = TN = 128 when the
+problem is big enough, K kept whole per block (all benchmark layers have
+K = Cin*Kx*Ky <= 576, i.e. at most 4.5 MXU passes of 128).  The grid walks
+output tiles; each output tile is computed by one kernel invocation, so no
+cross-block accumulator is needed.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_TM = 128
+_TN = 128
+
+
+def _gemm_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = jnp.dot(a_ref[...], b_ref[...], precision="highest")
+
+
+def int_gemm_pallas(a: jax.Array, b: jax.Array) -> jax.Array:
+    """(M,K) @ (K,N) with exact f32 accumulation of integer-valued operands."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"contraction mismatch {a.shape} @ {b.shape}"
+    tm = _TM if m > _TM else m
+    tn = _TN if n > _TN else n
+    return pl.pallas_call(
+        _gemm_kernel,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        grid=(pl.cdiv(m, tm), pl.cdiv(n, tn)),
+        in_specs=[
+            pl.BlockSpec((tm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, tn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j: (i, j)),
+        interpret=True,
+    )(a.astype(jnp.float32), b.astype(jnp.float32))

@@ -1,0 +1,68 @@
+"""Pure-jnp reference oracle for every Pallas kernel in this package.
+
+These are the *semantics* the kernels must match bit-for-bit (float32).
+pytest (``python/tests/test_kernels_vs_ref.py``) sweeps shapes and dtypes
+with hypothesis and asserts ``allclose`` between each kernel and its oracle.
+
+Nothing here is used at runtime; kernels call into the same math via their
+tiled Pallas implementations and the training graphs call the kernels.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pact_fake_quant_ref(x: jnp.ndarray, alpha: jnp.ndarray, n_bits: int) -> jnp.ndarray:
+    """PACT fake quantization, Eq. (1) with [alpha_t, beta_t] = [0, alpha]."""
+    levels = (1 << n_bits) - 1
+    a = jnp.maximum(alpha, 1e-6)
+    eps = a / levels
+    xc = jnp.clip(x, 0.0, a)
+    return jnp.round(xc / eps) * eps
+
+
+def weight_fake_quant_ref(w2d: jnp.ndarray, n_bits: int) -> jnp.ndarray:
+    """Per-row symmetric weight fake quantization (w2d: (Cout, K))."""
+    levels = (1 << (n_bits - 1)) - 1
+    amax = jnp.max(jnp.abs(w2d), axis=1, keepdims=True)
+    s = jnp.maximum(amax, 1e-8) / levels
+    q = jnp.clip(jnp.round(w2d / s), -levels, levels)
+    return q * s
+
+
+def mixed_weight_ref(w2d: jnp.ndarray, gamma_hat: jnp.ndarray,
+                     precisions=(2, 4, 8)) -> jnp.ndarray:
+    """Effective weight tensor, Eq. (5).
+
+    ``w2d``:       (Cout, K) float weights (shared storage).
+    ``gamma_hat``: (Cout, |P_W|) softmax-ed NAS parameters (rows sum to 1),
+                   or (1, |P_W|) for the layer-wise (EdMIPS) mode.
+    Returns (Cout, K): ``sum_p gamma_hat[:, p:p+1] * fq(w2d, p)``.
+    """
+    out = jnp.zeros_like(w2d)
+    for j, p in enumerate(precisions):
+        out = out + gamma_hat[:, j:j + 1] * weight_fake_quant_ref(w2d, p)
+    return out
+
+
+def mixed_act_ref(x: jnp.ndarray, alpha: jnp.ndarray, delta_hat: jnp.ndarray,
+                  precisions=(2, 4, 8)) -> jnp.ndarray:
+    """Effective activation tensor, Eq. (4).
+
+    ``delta_hat``: (|P_X|,) softmax-ed NAS parameters (sums to 1).
+    """
+    out = jnp.zeros_like(x)
+    for j, p in enumerate(precisions):
+        out = out + delta_hat[j] * pact_fake_quant_ref(x, alpha, p)
+    return out
+
+
+def int_gemm_ref(a_int: jnp.ndarray, b_int: jnp.ndarray) -> jnp.ndarray:
+    """Integer GEMM oracle: (M,K) x (K,N) matmul with exact accumulation.
+
+    Inputs are float arrays holding exact small integers (the HLO path keeps
+    everything in f32; values are integral so f32 accumulation is exact for
+    the magnitudes used by <=8-bit operands and K <= 2^15).
+    """
+    return jnp.dot(a_int, b_int, precision="highest")

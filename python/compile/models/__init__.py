@@ -1,0 +1,6 @@
+"""The four MLPerf Tiny benchmark models (scaled — see DESIGN.md §5)."""
+
+from .common import LayerDef, ModelDef, build_model
+from .zoo import BENCHMARKS, get_model
+
+__all__ = ["LayerDef", "ModelDef", "build_model", "BENCHMARKS", "get_model"]

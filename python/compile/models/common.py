@@ -1,0 +1,266 @@
+"""Generic layer-graph model definition shared by all four benchmarks.
+
+A model is a sequential list of :class:`LayerDef` with optional residual
+taps (``save_as`` / ``add_from`` / ``input_from``), enough to express
+ResNet-8, DS-CNN, MobileNetV1 and the AD autoencoder.  The same structure
+is exported to ``manifest.json`` and re-parsed by ``rust/src/models/`` so
+the Rust coordinator, the energy model and the MPIC simulator all see the
+exact geometry that was trained.
+
+Quantized layers (conv / dwconv / fc) are numbered in appearance order;
+layer ``q`` owns NAS parameters ``delta_q`` (|P_X|) and ``gamma_q``
+(C_out x |P_W| channel-wise, 1 x |P_W| layer-wise) plus a PACT ``alpha_q``.
+
+Parameter naming convention (manifest + Rust side rely on it):
+    <layer>.w, <layer>.b, <layer>.bn_scale, <layer>.bn_bias, <layer>.alpha
+    state:  <layer>.bn_mean, <layer>.bn_var
+    nas:    <layer>.delta, <layer>.gamma
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import nas_layers as nl
+from ..quantlib import PRECISIONS
+
+QUANT_KINDS = ("conv", "dwconv", "fc")
+
+
+@dataclass
+class LayerDef:
+    """One node of the sequential layer graph."""
+    name: str
+    kind: str                 # conv | dwconv | fc | avgpool | flatten | add | tap
+    cout: int = 0
+    kx: int = 1
+    ky: int = 1
+    stride: int = 1
+    relu: bool = True
+    bn: bool = True
+    bias: bool = False
+    save_as: str | None = None    # store this layer's output under a tag
+    add_from: str | None = None   # residual add with a saved tag (before relu)
+    input_from: str | None = None  # read input from a saved tag, not the chain
+    # filled in by build_model:
+    cin: int = 0
+    in_h: int = 0
+    in_w: int = 0
+    out_h: int = 0
+    out_w: int = 0
+    qidx: int = -1            # index among quantized layers, -1 if structural
+
+    @property
+    def is_quant(self) -> bool:
+        return self.kind in QUANT_KINDS
+
+    @property
+    def groups(self) -> int:
+        return self.cin if self.kind == "dwconv" else 1
+
+    @property
+    def weight_shape(self):
+        if self.kind == "fc":
+            return (self.cout, self.cin)
+        cin_g = 1 if self.kind == "dwconv" else self.cin
+        return (self.cout, self.kx, self.ky, cin_g)
+
+    @property
+    def weights_per_channel(self) -> int:
+        """K = C_in * Kx * Ky of Eq. (7) (per output channel)."""
+        if self.kind == "fc":
+            return self.cin
+        return (1 if self.kind == "dwconv" else self.cin) * self.kx * self.ky
+
+    @property
+    def ops(self) -> int:
+        """Total MACs to produce this layer's output (Omega of Eq. (8))."""
+        if self.kind == "fc":
+            return self.cout * self.cin
+        return self.out_h * self.out_w * self.cout * self.weights_per_channel
+
+
+@dataclass
+class ModelDef:
+    """A built model: geometry-resolved layers + loss/score type."""
+    name: str
+    layers: list[LayerDef]
+    input_shape: tuple          # (H, W, C) or (D,) for the autoencoder
+    n_classes: int              # 0 for the AD reconstruction task
+    loss: str                   # 'ce' | 'mse'
+    qlayers: list[LayerDef] = field(default_factory=list)
+
+    def manifest_layers(self):
+        out = []
+        for l in self.layers:
+            out.append({
+                "name": l.name, "kind": l.kind, "cin": l.cin, "cout": l.cout,
+                "kx": l.kx, "ky": l.ky, "stride": l.stride,
+                "relu": l.relu, "bn": l.bn, "bias": l.bias,
+                "in_h": l.in_h, "in_w": l.in_w,
+                "out_h": l.out_h, "out_w": l.out_w,
+                "qidx": l.qidx, "ops": l.ops if l.is_quant else 0,
+                "weights_per_channel": l.weights_per_channel if l.is_quant else 0,
+                "save_as": l.save_as, "add_from": l.add_from,
+                "input_from": l.input_from,
+            })
+        return out
+
+
+def build_model(name: str, layers: list[LayerDef], input_shape, n_classes,
+                loss="ce") -> ModelDef:
+    """Resolve geometry (SAME padding, strides) through the graph."""
+    if len(input_shape) == 3:
+        h, w, c = input_shape
+    else:
+        h, w, c = 1, 1, input_shape[0]
+    tags: dict[str, tuple] = {}
+    qidx = 0
+    for l in layers:
+        if l.input_from is not None:
+            h, w, c = tags[l.input_from]
+        l.in_h, l.in_w, l.cin = h, w, c
+        if l.kind in ("conv", "dwconv"):
+            if l.kind == "dwconv":
+                l.cout = c
+            h = -(-h // l.stride)   # ceil division == SAME padding
+            w = -(-w // l.stride)
+            c = l.cout
+        elif l.kind == "fc":
+            c = l.cout
+            h = w = 1
+        elif l.kind == "avgpool":
+            h = w = 1
+            l.cout = c
+        elif l.kind == "flatten":
+            c = h * w * c
+            h = w = 1
+            l.cout = c
+        elif l.kind in ("add", "tap"):
+            l.cout = c
+        else:
+            raise ValueError(f"unknown layer kind {l.kind}")
+        l.out_h, l.out_w = h, w
+        if l.is_quant:
+            l.qidx = qidx
+            qidx += 1
+        if l.save_as is not None:
+            tags[l.save_as] = (h, w, c)
+    md = ModelDef(name, layers, tuple(input_shape), n_classes, loss)
+    md.qlayers = [l for l in layers if l.is_quant]
+    return md
+
+
+# ---------------------------------------------------------------------------
+# Initialisation.
+# ---------------------------------------------------------------------------
+
+def init_params(model: ModelDef, seed: int, mode: str):
+    """Returns (params, bn_state, nas) dicts of numpy arrays.
+
+    ``mode``: 'cw' (channel-wise gamma, ours) or 'lw' (layer-wise, EdMIPS).
+    """
+    rng = np.random.default_rng(seed)
+    params: dict[str, np.ndarray] = {}
+    bn_state: dict[str, np.ndarray] = {}
+    nas: dict[str, np.ndarray] = {}
+    np_w = len(PRECISIONS)
+    for l in model.layers:
+        if not l.is_quant:
+            continue
+        fan_in = l.weights_per_channel
+        std = float(np.sqrt(2.0 / max(fan_in, 1)))
+        params[f"{l.name}.w"] = rng.normal(0.0, std, l.weight_shape).astype(np.float32)
+        if l.bias:
+            params[f"{l.name}.b"] = np.zeros((l.cout,), np.float32)
+        if l.bn:
+            params[f"{l.name}.bn_scale"] = np.ones((l.cout,), np.float32)
+            params[f"{l.name}.bn_bias"] = np.zeros((l.cout,), np.float32)
+            bn_state[f"{l.name}.bn_mean"] = np.zeros((l.cout,), np.float32)
+            bn_state[f"{l.name}.bn_var"] = np.ones((l.cout,), np.float32)
+        params[f"{l.name}.alpha"] = np.asarray(6.0, np.float32)
+        rows = l.cout if mode == "cw" else 1
+        nas[f"{l.name}.delta"] = np.zeros((np_w,), np.float32)
+        nas[f"{l.name}.gamma"] = np.zeros((rows, np_w), np.float32)
+    return params, bn_state, nas
+
+
+# ---------------------------------------------------------------------------
+# Forward pass.
+# ---------------------------------------------------------------------------
+
+def apply_model(model: ModelDef, params: dict, bn_state: dict,
+                assign: dict, x: jax.Array, *, train: bool,
+                update_stats, lut: jax.Array):
+    """Run the graph.
+
+    ``assign`` maps layer name -> (delta_hat (|P_X|,), gamma_hat (rows,|P_W|))
+    — already softmax-ed (search) or one-hot (eval/deploy/warmup).
+
+    Returns ``(out, new_bn_state, reg_size, reg_energy)`` where the regs are
+    the summed Eq. (7) / Eq. (8) over all quantized layers (differentiable
+    through ``assign``).
+    """
+    saved: dict[str, jax.Array] = {}
+    new_bn = dict(bn_state)
+    reg_size = jnp.zeros((), jnp.float32)
+    reg_energy = jnp.zeros((), jnp.float32)
+    u = update_stats if train else None
+
+    for l in model.layers:
+        if l.input_from is not None:
+            x = saved[l.input_from]
+        if l.kind == "tap":
+            pass
+        elif l.kind == "avgpool":
+            x = jnp.mean(x, axis=(1, 2))
+        elif l.kind == "flatten":
+            x = x.reshape(x.shape[0], -1)
+        elif l.kind == "add":
+            x = x + saved[l.add_from]
+            if l.relu:
+                x = jax.nn.relu(x)
+        elif l.is_quant:
+            d_hat, g_hat = assign[l.name]
+            alpha = params[f"{l.name}.alpha"]
+            w = params[f"{l.name}.w"]
+            if l.kind == "fc":
+                b = params.get(f"{l.name}.b")
+                x = nl.mixed_dense(x, w, b, alpha, d_hat, g_hat)
+            else:
+                x = nl.mixed_conv2d(x, w, alpha, d_hat, g_hat,
+                                    l.stride, groups=l.groups)
+            if l.bn:
+                sc = params[f"{l.name}.bn_scale"]
+                bi = params[f"{l.name}.bn_bias"]
+                if train:
+                    x, nm, nv = nl.batchnorm_train(
+                        x, sc, bi,
+                        bn_state[f"{l.name}.bn_mean"],
+                        bn_state[f"{l.name}.bn_var"], u)
+                    new_bn[f"{l.name}.bn_mean"] = nm
+                    new_bn[f"{l.name}.bn_var"] = nv
+                else:
+                    x = nl.batchnorm_apply(
+                        x, sc, bi,
+                        bn_state[f"{l.name}.bn_mean"],
+                        bn_state[f"{l.name}.bn_var"])
+            if l.relu and l.add_from is None:
+                x = jax.nn.relu(x)
+            if l.add_from is not None:
+                x = x + saved[l.add_from]
+                if l.relu:
+                    x = jax.nn.relu(x)
+            reg_size = reg_size + nl.reg_size_term(
+                g_hat, l.cin if l.kind != "dwconv" else 1, l.kx, l.ky, l.cout)
+            reg_energy = reg_energy + nl.reg_energy_term(
+                d_hat, g_hat, l.ops, l.cout, lut)
+        else:
+            raise ValueError(l.kind)
+        if l.save_as is not None:
+            saved[l.save_as] = x
+    return x, new_bn, reg_size, reg_energy

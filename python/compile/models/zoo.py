@@ -1,0 +1,102 @@
+"""The four MLPerf Tiny benchmark models.
+
+Topologies follow the MLPerf Tiny reference implementations (Banbury et
+al. 2021) with the scaling documented in DESIGN.md §5:
+
+  * **IC**  — ResNet-8 (16/32/64, 3 stages), 32x32x3, 10 classes.  Exact
+    MLPerf geometry.  Layer naming matches Fig. 4 of the paper: ``c1``,
+    ``b<i>c<j>`` for stage convs, ``b<i>sc`` for residual 1x1 shortcuts.
+  * **KWS** — DS-CNN small (64ch, 4 depthwise-separable blocks), 49x10x1
+    MFCC grid, 12 classes.  Exact MLPerf geometry.
+  * **VWW** — MobileNetV1 width 0.25; input scaled 96x96 -> 48x48 for the
+    CPU training budget (all 27 quantizable layers preserved), 2 classes.
+  * **AD**  — dense autoencoder, 256 -> 128x2 -> 8 -> 128x2 -> 256 (the
+    paper's 128-neuron FC width is preserved; input 640 -> 256).
+"""
+
+from __future__ import annotations
+
+from .common import LayerDef as L, ModelDef, build_model
+
+
+def resnet8_ic() -> ModelDef:
+    layers = [
+        L("c1", "conv", cout=16, kx=3, ky=3, stride=1),
+        # stage 1: identity skip
+        L("b1_tap", "tap", save_as="b1_in"),
+        L("b1c1", "conv", cout=16, kx=3, ky=3, stride=1),
+        L("b1c2", "conv", cout=16, kx=3, ky=3, stride=1, relu=True,
+          add_from="b1_in"),
+        # stage 2: downsample, 1x1 conv skip
+        L("b2_tap", "tap", save_as="b2_in"),
+        L("b2c1", "conv", cout=32, kx=3, ky=3, stride=2),
+        L("b2c2", "conv", cout=32, kx=3, ky=3, stride=1, relu=False,
+          save_as="b2_main"),
+        L("b2sc", "conv", cout=32, kx=1, ky=1, stride=2, relu=True,
+          input_from="b2_in", add_from="b2_main"),
+        # stage 3: downsample, 1x1 conv skip
+        L("b3_tap", "tap", save_as="b3_in"),
+        L("b3c1", "conv", cout=64, kx=3, ky=3, stride=2),
+        L("b3c2", "conv", cout=64, kx=3, ky=3, stride=1, relu=False,
+          save_as="b3_main"),
+        L("b3sc", "conv", cout=64, kx=1, ky=1, stride=2, relu=True,
+          input_from="b3_in", add_from="b3_main"),
+        L("pool", "avgpool"),
+        L("fc", "fc", cout=10, relu=False, bn=False, bias=True),
+    ]
+    return build_model("ic", layers, (32, 32, 3), 10, "ce")
+
+
+def dscnn_kws() -> ModelDef:
+    layers = [
+        L("c1", "conv", cout=64, kx=10, ky=4, stride=2),
+    ]
+    for i in range(1, 5):
+        layers += [
+            L(f"dw{i}", "dwconv", kx=3, ky=3, stride=1),
+            L(f"pw{i}", "conv", cout=64, kx=1, ky=1, stride=1),
+        ]
+    layers += [
+        L("pool", "avgpool"),
+        L("fc", "fc", cout=12, relu=False, bn=False, bias=True),
+    ]
+    return build_model("kws", layers, (49, 10, 1), 12, "ce")
+
+
+def mobilenet_vww() -> ModelDef:
+    # MobileNetV1 x0.25 channel plan (full-size plan scaled by 1/4).
+    plan = [(16, 1), (32, 2), (32, 1), (64, 2), (64, 1),
+            (128, 2), (128, 1), (128, 1), (128, 1), (128, 1),
+            (128, 1), (256, 2), (256, 1)]
+    layers = [L("c1", "conv", cout=8, kx=3, ky=3, stride=2)]
+    for i, (cout, s) in enumerate(plan, start=1):
+        layers += [
+            L(f"dw{i}", "dwconv", kx=3, ky=3, stride=s),
+            L(f"pw{i}", "conv", cout=cout, kx=1, ky=1, stride=1),
+        ]
+    layers += [
+        L("pool", "avgpool"),
+        L("fc", "fc", cout=2, relu=False, bn=False, bias=True),
+    ]
+    return build_model("vww", layers, (48, 48, 3), 2, "ce")
+
+
+def autoencoder_ad() -> ModelDef:
+    dims = [128, 128, 8, 128, 128]
+    layers = []
+    for i, d in enumerate(dims, start=1):
+        layers.append(L(f"fc{i}", "fc", cout=d))
+    layers.append(L("out", "fc", cout=256, relu=False, bn=False, bias=True))
+    return build_model("ad", layers, (256,), 0, "mse")
+
+
+BENCHMARKS = {
+    "ic": resnet8_ic,
+    "kws": dscnn_kws,
+    "vww": mobilenet_vww,
+    "ad": autoencoder_ad,
+}
+
+
+def get_model(name: str) -> ModelDef:
+    return BENCHMARKS[name]()

@@ -1,0 +1,160 @@
+"""Mixed-precision NAS layers (Eq. (4)–(6)) and their cost terms (Eq. (7)–(8)).
+
+Every quantized layer (Conv2D, depthwise Conv2D, FC) follows the paper's
+recipe:
+
+  1. the input activation ``X`` is blended from its ``|P_X|`` PACT
+     fake-quantized copies by the layer's softmax-ed ``delta_hat`` (Eq. 4);
+  2. the weight tensor is blended *per output channel* from its ``|P_W|``
+     fake-quantized copies by ``gamma_hat`` (Eq. 5) — rows of ``gamma_hat``
+     are per-channel in the channel-wise mode (ours) and a single broadcast
+     row in the layer-wise mode (EdMIPS baseline);
+  3. an ordinary convolution / matmul consumes the effective tensors (Eq. 6).
+
+Both blends run through the fused Pallas kernels in ``kernels/``.
+
+The layer also returns its two differentiable cost terms:
+  * ``reg_size``  — Eq. (7): effective weight bits;
+  * ``reg_energy``— Eq. (8): ops x LUT-expected energy/OP. ``Omega`` in the
+    paper is the layer's total MAC count; the inner double sum is an
+    *average over channels* of the expected energy/OP, so we scale by
+    ``Omega / C_out`` (each channel produces ``Omega / C_out`` of the ops).
+
+Batch-norm here is a plain explicit implementation (folded into the requant
+scales at deployment by ``rust/src/deploy/``); running stats are threaded
+through the training graphs as explicit state tensors.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.fake_quant import pact_fake_quant_pallas
+from .kernels.mixed_weight import mixed_weight_pallas, mixed_act_pallas
+from .quantlib import PRECISIONS
+
+BN_EPS = 1e-3
+BN_MOMENTUM = 0.9
+
+
+# ---------------------------------------------------------------------------
+# Cost terms.
+# ---------------------------------------------------------------------------
+
+def reg_size_term(gamma_hat: jax.Array, cin: int, kx: int, ky: int,
+                  cout: int, precisions=PRECISIONS) -> jax.Array:
+    """Eq. (7) for one layer: effective number of weight bits.
+
+    ``gamma_hat`` is (Cout, |P_W|) or (1, |P_W|); the layer-wise row is
+    weighted by ``cout`` so both modes measure the same quantity.
+    """
+    pvec = jnp.asarray(precisions, dtype=jnp.float32)
+    per_row_bits = jnp.sum(gamma_hat * pvec[None, :], axis=1)  # (rows,)
+    if gamma_hat.shape[0] == 1:
+        total_rows = per_row_bits[0] * cout
+    else:
+        total_rows = jnp.sum(per_row_bits)
+    return float(cin * kx * ky) * total_rows
+
+
+def reg_energy_term(delta_hat: jax.Array, gamma_hat: jax.Array,
+                    ops: float, cout: int, lut: jax.Array,
+                    precisions=PRECISIONS) -> jax.Array:
+    """Eq. (8) for one layer.
+
+    ``lut`` is the (|P_X|, |P_W|) energy/OP table ``C(p_x, p_w)`` profiled
+    from the MPIC model (single source of truth: emitted into the manifest
+    and mirrored by ``rust/src/energy/lut.rs``).  The inner sums compute the
+    channel-expectation of energy/OP; each channel accounts for
+    ``ops / cout`` MACs.
+    """
+    # expected energy per op for each channel row: (rows,)
+    # e_row_i = sum_px delta_px * sum_pw gamma_i_pw * lut[px, pw]
+    per_px = gamma_hat @ lut.T          # (rows, |P_X|)
+    e_row = per_px @ delta_hat          # (rows,)
+    if gamma_hat.shape[0] == 1:
+        expected = e_row[0] * cout
+    else:
+        expected = jnp.sum(e_row)
+    return (float(ops) / float(cout)) * expected
+
+
+# ---------------------------------------------------------------------------
+# Batch norm.
+# ---------------------------------------------------------------------------
+
+def batchnorm_apply(x: jax.Array, scale: jax.Array, bias: jax.Array,
+                    mean: jax.Array, var: jax.Array) -> jax.Array:
+    inv = scale * jax.lax.rsqrt(var + BN_EPS)
+    return (x - mean) * inv + bias
+
+
+def batchnorm_train(x: jax.Array, scale: jax.Array, bias: jax.Array,
+                    run_mean: jax.Array, run_var: jax.Array,
+                    update_stats: jax.Array):
+    """Batch-stat BN; returns (y, new_run_mean, new_run_var).
+
+    ``update_stats`` is a 0/1 scalar: theta-only steps keep running stats
+    frozen (they train NAS parameters on a 20% split, Alg. 1 line 5).
+    """
+    axes = tuple(range(x.ndim - 1))
+    mean = jnp.mean(x, axis=axes)
+    var = jnp.var(x, axis=axes)
+    y = batchnorm_apply(x, scale, bias, mean, var)
+    m = BN_MOMENTUM
+    new_mean = run_mean * m + mean * (1.0 - m)
+    new_var = run_var * m + var * (1.0 - m)
+    u = update_stats
+    return (y,
+            u * new_mean + (1.0 - u) * run_mean,
+            u * new_var + (1.0 - u) * run_var)
+
+
+# ---------------------------------------------------------------------------
+# Mixed-precision layers.
+# ---------------------------------------------------------------------------
+
+def effective_act(x: jax.Array, alpha: jax.Array, delta_hat: jax.Array) -> jax.Array:
+    """Eq. (4) — blend of PACT fake-quantized copies of the input."""
+    return mixed_act_pallas(x, alpha, delta_hat)
+
+
+def effective_weight(w: jax.Array, gamma_hat: jax.Array) -> jax.Array:
+    """Eq. (5) — per-channel blend; ``w`` is (Cout, ...) any layout."""
+    cout = w.shape[0]
+    gh = gamma_hat
+    if gh.shape[0] == 1 and cout != 1:
+        gh = jnp.broadcast_to(gh, (cout, gh.shape[1]))
+    flat = w.reshape(cout, -1)
+    return mixed_weight_pallas(flat, gh).reshape(w.shape)
+
+
+def mixed_conv2d(x: jax.Array, w: jax.Array, alpha: jax.Array,
+                 delta_hat: jax.Array, gamma_hat: jax.Array,
+                 stride: int, groups: int = 1) -> jax.Array:
+    """Eq. (6): Conv(X_hat, stack(W_hat_i)), NHWC x (Cout, Kx, Ky, Cin/g).
+
+    SAME padding everywhere (all four benchmark models use it).
+    """
+    xq = effective_act(x, alpha, delta_hat)
+    wq = effective_weight(w, gamma_hat)
+    # lax conv wants OIHW-style filter (Cout, Cin/g, Kx, Ky) given NHWC io.
+    return jax.lax.conv_general_dilated(
+        xq, jnp.transpose(wq, (1, 2, 3, 0)),
+        window_strides=(stride, stride), padding="SAME",
+        feature_group_count=groups,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def mixed_dense(x: jax.Array, w: jax.Array, b: jax.Array | None,
+                alpha: jax.Array, delta_hat: jax.Array,
+                gamma_hat: jax.Array) -> jax.Array:
+    """FC layer: per-output-neuron weight precision (w is (Cout, Cin))."""
+    xq = effective_act(x, alpha, delta_hat)
+    wq = effective_weight(w, gamma_hat)
+    y = xq @ wq.T
+    if b is not None:
+        y = y + b
+    return y

@@ -1,0 +1,137 @@
+"""L1/L2 performance analysis (the §Perf evidence for EXPERIMENTS.md).
+
+Usage: ``python -m compile.perf_report``
+
+L1 (Pallas): interpret=True gives CPU-numpy timing only — NOT a TPU
+proxy — so kernel quality is assessed *structurally*:
+  * VMEM working set per BlockSpec tile (must fit the ~16 MiB/core VMEM
+    with double-buffering headroom);
+  * HBM traffic of the fused kernels vs the naive |P|-copy formulation
+    (the paper's PyTorch baseline materialises |P| fake-quantized copies);
+  * arithmetic intensity (fake-quant is VPU-bound; the blend adds 2 FLOPs
+    per copy per element).
+
+L2 (lowered graphs): HLO op counts of the fused vs naive formulation and
+wall-clock of one jitted step on this host (same backend the Rust runtime
+executes, so relative changes transfer).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.fake_quant import _MAX_SINGLE_BLOCK, _TILE_COLS, _TILE_ROWS
+from .kernels.mixed_weight import mixed_act_pallas, mixed_weight_pallas
+from .kernels.ref import mixed_act_ref, mixed_weight_ref
+from .models import BENCHMARKS, get_model
+
+P = 3  # |P_W| = |P_X|
+
+
+def tile_of(rows: int, cols: int):
+    if rows * cols <= _MAX_SINGLE_BLOCK:
+        return rows, cols
+    return min(_TILE_ROWS, rows), min(_TILE_COLS, cols)
+
+
+def l1_report():
+    print("=" * 72)
+    print("L1 — Pallas kernel structural analysis (per benchmark layer)")
+    print("=" * 72)
+    print(f"{'bench/layer':<18}{'shape':<16}{'tile':<12}"
+          f"{'VMEM KB':>9}{'naiveMB':>9}{'fusedMB':>9}{'saving':>8}")
+    for bench in BENCHMARKS:
+        m = get_model(bench)
+        for l in m.qlayers:
+            cout = l.cout
+            k = l.weights_per_channel
+            tr, tc = tile_of(cout, k)
+            # fused mixed-weight kernel: w tile + gamma tile + out tile
+            vmem = (tr * tc * 2 + tr * P) * 4 / 1024
+            # HBM bytes: naive = read W, write P copies, read P copies + gamma
+            n_el = cout * k * 4
+            naive = (n_el * (1 + 2 * P) + cout * P * 4) / 1e6
+            fused = (n_el * 2 + cout * P * 4) / 1e6
+            print(f"{bench + '/' + l.name:<18}{str((cout, k)):<16}"
+                  f"{str((tr, tc)):<12}{vmem:>9.1f}{naive:>9.3f}"
+                  f"{fused:>9.3f}{naive / fused:>7.2f}x")
+        # activation blend for the largest activation
+        big = max(m.qlayers, key=lambda l: l.in_h * l.in_w * l.cin)
+        n = 32 * big.in_h * big.in_w * big.cin  # batch 32
+        rows = n // 128 if n % 128 == 0 else 1
+        cols = 128 if n % 128 == 0 else n
+        tr, tc = tile_of(rows, cols)
+        vmem = (tr * tc * 2) * 4 / 1024
+        naive = n * 4 * (1 + 2 * P) / 1e6
+        fused = n * 4 * 2 / 1e6
+        print(f"{bench + '/act(' + big.name + ')':<18}{str((rows, cols)):<16}"
+              f"{str((tr, tc)):<12}{vmem:>9.1f}{naive:>9.3f}"
+              f"{fused:>9.3f}{naive / fused:>7.2f}x")
+
+
+def count_hlo_ops(fn, *args) -> tuple[int, int]:
+    lowered = jax.jit(fn).lower(*args)
+    txt = lowered.compile().as_text()
+    fusions = txt.count("fusion")
+    lines = len(txt.splitlines())
+    return lines, fusions
+
+
+def time_jit(fn, *args, iters=20) -> float:
+    f = jax.jit(fn)
+    r = f(*args)
+    jax.block_until_ready(r)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        r = f(*args)
+    jax.block_until_ready(r)
+    return (time.perf_counter() - t0) / iters * 1e3
+
+
+def l2_report():
+    print()
+    print("=" * 72)
+    print("L2 — fused (Pallas single-pass) vs naive (|P|-copy ref) lowering")
+    print("=" * 72)
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(0, 0.2, (64, 576)).astype(np.float32))
+    g = jax.nn.softmax(jnp.asarray(rng.normal(0, 1, (64, 3)).astype(np.float32)))
+    x = jnp.asarray(np.abs(rng.normal(0.8, 0.5, (32, 32, 32, 16))).astype(np.float32))
+    a = jnp.float32(6.0)
+    d = jnp.array([0.2, 0.5, 0.3], jnp.float32)
+
+    for name, fused, naive, args in [
+        ("mixed_weight (64x576)", mixed_weight_pallas, mixed_weight_ref, (w, g)),
+        ("mixed_act (32x32x32x16)", mixed_act_pallas,
+         lambda x_, a_, d_: mixed_act_ref(x_, a_, d_), (x, a, d)),
+    ]:
+        tf = time_jit(lambda *z: fused(*z), *args)
+        tn = time_jit(lambda *z: naive(*z), *args)
+        print(f"  {name:<26} fused {tf:7.3f} ms | naive {tn:7.3f} ms "
+              f"| speedup {tn / tf:4.2f}x (CPU; structural HBM saving is the "
+              f"TPU-relevant number)")
+
+    # gradient path (the training hot loop)
+    def loss_fused(w, g):
+        return jnp.sum(mixed_weight_pallas(w, g) ** 2)
+
+    def loss_naive(w, g):
+        return jnp.sum(mixed_weight_ref(w, g) ** 2)
+
+    tf = time_jit(jax.grad(loss_fused, argnums=(0, 1)), w, g)
+    tn = time_jit(jax.grad(loss_naive, argnums=(0, 1)), w, g)
+    print(f"  {'mixed_weight fwd+bwd':<26} fused {tf:7.3f} ms | naive "
+          f"{tn:7.3f} ms | speedup {tn / tf:4.2f}x")
+
+
+def main():
+    l1_report()
+    l2_report()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,164 @@
+"""Affine / PACT quantization primitives (Eq. (1) of the paper).
+
+This module is the *mathematical* definition shared by:
+  * the Pallas kernels in ``kernels/`` (which implement the same functions as
+    tiled TPU-shaped kernels and are checked against ``kernels/ref.py``);
+  * the pure-jnp reference oracle (``kernels/ref.py``);
+  * the straight-through-estimator (STE) custom VJPs used by the training
+    graphs in ``train_graphs.py``.
+
+Quantization schemes
+--------------------
+Activations use **PACT** [Choi et al. 2018]: a learned clipping value
+``alpha`` per layer, unsigned range ``[0, alpha]`` mapped onto
+``[0, 2^n - 1]`` integers:
+
+    eps   = alpha / (2^n - 1)
+    x_q   = round(clamp(x, 0, alpha) / eps) * eps
+
+Weights use symmetric per-channel affine quantization onto signed
+``[-(2^(n-1) - 1), 2^(n-1) - 1]`` with a per-output-channel scale equal to
+the channel's max absolute value:
+
+    s_i   = max|W_i| / (2^(n-1) - 1)
+    w_q,i = round(clamp(W_i, -max|W_i|, max|W_i|) / s_i) * s_i
+
+Both are *fake* quantization: the returned tensors are float but take only
+``2^n`` distinct values, so the forward pass sees exactly the deployed
+arithmetic (the MPIC integer pipeline is ``scale * int_conv``, which is the
+same numbers modulo float rounding).
+
+Gradients
+---------
+``round`` is a step function; the STE passes gradients through inside the
+clipping range and blocks them outside.  For PACT, ``d x_q / d alpha = 1``
+for saturated inputs (the original PACT rule), which is what lets the
+clipping range be learned jointly with the weights.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+# Bit-width sets searched by the NAS (the paper's P_W = P_X = {2, 4, 8}).
+PRECISIONS = (2, 4, 8)
+PMAX = 8
+
+
+def qlevels_act(n_bits: int) -> int:
+    """Number of positive quantization steps for an unsigned activation."""
+    return (1 << n_bits) - 1
+
+
+def qlevels_weight(n_bits: int) -> int:
+    """Max magnitude of the signed symmetric integer grid for weights."""
+    return (1 << (n_bits - 1)) - 1
+
+
+# ---------------------------------------------------------------------------
+# PACT activation fake-quantization (per-tensor alpha), with custom VJP.
+# ---------------------------------------------------------------------------
+
+def _make_pact():
+    @functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+    def _f(x, alpha, n_bits):
+        levels = (1 << n_bits) - 1
+        a = jnp.maximum(alpha, 1e-6)
+        eps = a / levels
+        xc = jnp.clip(x, 0.0, a)
+        return jnp.round(xc / eps) * eps
+
+    def fwd(x, alpha, n_bits):
+        return _f(x, alpha, n_bits), (x, alpha)
+
+    def bwd(n_bits, res, g):
+        x, alpha = res
+        a = jnp.maximum(alpha, 1e-6)
+        in_range = jnp.logical_and(x >= 0.0, x <= a)
+        gx = jnp.where(in_range, g, 0.0)
+        # PACT: saturated inputs contribute d y / d alpha = 1.
+        galpha = jnp.sum(jnp.where(x > a, g, 0.0))
+        return gx, galpha.reshape(jnp.shape(alpha)).astype(g.dtype)
+
+    _f.defvjp(fwd, bwd)
+    return _f
+
+
+pact_fake_quant = _make_pact()
+"""``pact_fake_quant(x, alpha, n_bits)`` — PACT fake quantization.
+
+``alpha`` is a scalar array (per-layer learned clipping value); ``n_bits``
+must be a static Python int.  Custom VJP: STE on ``x`` inside ``[0, alpha]``,
+PACT rule on ``alpha`` (gradient collected from saturated inputs).
+"""
+
+
+# ---------------------------------------------------------------------------
+# Per-channel symmetric weight fake-quantization, with STE VJP.
+# ---------------------------------------------------------------------------
+
+def weight_scale(w2d: jax.Array, n_bits: int) -> jax.Array:
+    """Per-row (= per output channel) quantization step, shape (Cout, 1)."""
+    levels = qlevels_weight(n_bits)
+    amax = jnp.max(jnp.abs(w2d), axis=1, keepdims=True)
+    return jnp.maximum(amax, 1e-8) / levels
+
+
+def _make_weight_fq():
+    @functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+    def _f(w2d, n_bits):
+        levels = (1 << (n_bits - 1)) - 1
+        s = weight_scale(w2d, n_bits)
+        q = jnp.clip(jnp.round(w2d / s), -levels, levels)
+        return q * s
+
+    def fwd(w2d, n_bits):
+        return _f(w2d, n_bits), ()
+
+    def bwd(n_bits, res, g):
+        # Pure STE: the scale is data-dependent (max|w|) but is treated as a
+        # constant for the backward pass, matching standard QAT practice.
+        return (g,)
+
+    _f.defvjp(fwd, bwd)
+    return _f
+
+
+weight_fake_quant = _make_weight_fq()
+"""``weight_fake_quant(w2d, n_bits)`` — per-channel symmetric fake quant.
+
+``w2d`` must be reshaped to ``(C_out, K)`` where ``K = C_in * Kx * Ky``; the
+scale is per row.  STE backward.
+"""
+
+
+def weight_fake_quant_nd(w: jax.Array, n_bits: int) -> jax.Array:
+    """Fake-quantize a conv weight of shape (Cout, ...) channel-wise."""
+    flat = w.reshape(w.shape[0], -1)
+    return weight_fake_quant(flat, n_bits).reshape(w.shape)
+
+
+# ---------------------------------------------------------------------------
+# Softmax with temperature (Eq. (3)).
+# ---------------------------------------------------------------------------
+
+def softmax_temperature(theta: jax.Array, tau: jax.Array) -> jax.Array:
+    """Row-wise softmax with temperature ``tau`` along the last axis.
+
+    Matches Eq. (3): ``SM(x; tau)_i = exp(x_i / tau) / sum_j exp(x_j / tau)``.
+    As ``tau`` is annealed towards 0 the output approaches a one-hot argmax.
+    """
+    t = jnp.maximum(tau, 1e-4)
+    z = theta / t
+    z = z - jnp.max(z, axis=-1, keepdims=True)
+    e = jnp.exp(z)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def one_hot_argmax(theta: jax.Array, n: int) -> jax.Array:
+    """Hard argmax selection used after the search phase (row-wise)."""
+    idx = jnp.argmax(theta, axis=-1)
+    return jax.nn.one_hot(idx, n, dtype=theta.dtype)

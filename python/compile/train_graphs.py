@@ -1,0 +1,255 @@
+"""The six AOT-exported compute graphs per benchmark (DESIGN.md §3).
+
+All training state lives in the Rust coordinator and is threaded through
+every call as flat tensor lists, so the graphs are pure functions:
+
+  * ``train_w_hard``     — one QAT step with a *hard* (one-hot) precision
+    assignment.  Serves Alg. 1's warmup (8-bit one-hots), its fine-tuning
+    phase (argmax one-hots), and every fixed-precision ``wNxM`` baseline.
+  * ``search_theta``     — Alg. 1 line 5: update NAS parameters theta by
+    Adam on ``L_T + lambda_s * L_size + lambda_e * L_energy`` (Eq. 2/7/8).
+  * ``search_w``         — Alg. 1 line 7: update weights (incl. PACT
+    alphas, BN affine) by Adam on ``L_T`` with the *soft* assignment.
+  * ``eval_hard``        — loss + score under a hard assignment with
+    frozen BN running stats (validation / early-stop / final scoring).
+  * ``infer_hard``       — logits (or reconstructions) only; deployment
+    cross-check against the MPIC simulator.
+
+Conventions (mirrored in manifest.json and rust/src/runtime):
+  * parameter, BN-state and NAS tensors travel in the insertion order of
+    ``models.common.init_params`` (recorded by name in the manifest);
+  * hard assignments are always per-channel ``(Cout, |P_W|)`` one-hot
+    matrices plus ``(|P_X|,)`` activation one-hots (layer-wise results are
+    just broadcast rows);
+  * scalars (lr, tau, lambdas, step counter, flags) are f32 0-d tensors.
+
+Adam is the optimizer for both W and theta (lr passed per call so the Rust
+side owns the schedule).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .energy_lut import energy_lut
+from .models.common import ModelDef, apply_model, init_params
+from .quantlib import PRECISIONS, softmax_temperature
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+NP = len(PRECISIONS)
+
+
+# ---------------------------------------------------------------------------
+# Loss / metric.
+# ---------------------------------------------------------------------------
+
+def task_loss(model: ModelDef, out: jax.Array, y: jax.Array):
+    """Returns (scalar loss, scalar metric).
+
+    Classification: mean CE, metric = #correct in batch.
+    Reconstruction (AD): mean MSE, metric = mean per-sample MSE.
+    """
+    if model.loss == "ce":
+        logz = jax.nn.log_softmax(out, axis=-1)
+        onehot = jax.nn.one_hot(y, model.n_classes, dtype=out.dtype)
+        loss = -jnp.mean(jnp.sum(onehot * logz, axis=-1))
+        metric = jnp.sum((jnp.argmax(out, axis=-1) == y).astype(jnp.float32))
+        return loss, metric
+    # mse: y is the target (== input for the autoencoder)
+    per_sample = jnp.mean((out - y) ** 2, axis=-1)
+    loss = jnp.mean(per_sample)
+    return loss, loss
+
+
+def per_sample_score(model: ModelDef, out: jax.Array, y: jax.Array):
+    """Per-sample statistic for eval: 1/0 correctness or reconstruction MSE
+    (the Rust side turns AD reconstruction errors into AUC)."""
+    if model.loss == "ce":
+        return (jnp.argmax(out, axis=-1) == y).astype(jnp.float32)
+    return jnp.mean((out - y) ** 2, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Adam (flat-list states).
+# ---------------------------------------------------------------------------
+
+def adam_update(params, grads, m, v, t, lr):
+    """One Adam step over flat lists; ``t`` is the 0-based step count."""
+    t1 = t + 1.0
+    c1 = 1.0 - ADAM_B1 ** t1
+    c2 = 1.0 - ADAM_B2 ** t1
+    new_p, new_m, new_v = [], [], []
+    for p, g, mi, vi in zip(params, grads, m, v):
+        mi = ADAM_B1 * mi + (1.0 - ADAM_B1) * g
+        vi = ADAM_B2 * vi + (1.0 - ADAM_B2) * (g * g)
+        step = lr * (mi / c1) / (jnp.sqrt(vi / c2) + ADAM_EPS)
+        new_p.append(p - step)
+        new_m.append(mi)
+        new_v.append(vi)
+    return new_p, new_m, new_v
+
+
+# ---------------------------------------------------------------------------
+# Graph builders.
+# ---------------------------------------------------------------------------
+
+class GraphSet:
+    """All lowered-function builders for one (benchmark, mode) pair."""
+
+    def __init__(self, model: ModelDef, mode: str, seed: int = 0):
+        assert mode in ("cw", "lw")
+        self.model = model
+        self.mode = mode
+        p0, b0, n0 = init_params(model, seed, mode)
+        self.pnames = list(p0)
+        self.bnames = list(b0)
+        self.nnames = list(n0)
+        self.pshapes = {k: v.shape for k, v in p0.items()}
+        self.bshapes = {k: v.shape for k, v in b0.items()}
+        self.nshapes = {k: v.shape for k, v in n0.items()}
+        self.lut = jnp.asarray(energy_lut())
+        self.qnames = [l.name for l in model.qlayers]
+
+    # -- plumbing -----------------------------------------------------------
+
+    def _pdict(self, plist):
+        return dict(zip(self.pnames, plist))
+
+    def _bdict(self, blist):
+        return dict(zip(self.bnames, blist))
+
+    def _ndict(self, nlist):
+        return dict(zip(self.nnames, nlist))
+
+    def _soft_assign(self, nas: dict, tau):
+        """Softmax-with-temperature assignment (Eq. 3) for every layer."""
+        assign = {}
+        for q in self.qnames:
+            d = softmax_temperature(nas[f"{q}.delta"], tau)
+            g = softmax_temperature(nas[f"{q}.gamma"], tau)
+            assign[q] = (d, g)
+        return assign
+
+    def _hard_assign(self, hard_list):
+        """hard_list alternates [delta_oh_0, gamma_oh_0, delta_oh_1, ...]."""
+        assign = {}
+        for i, q in enumerate(self.qnames):
+            assign[q] = (hard_list[2 * i], hard_list[2 * i + 1])
+        return assign
+
+    def hard_shapes(self):
+        """Shapes of the hard-assignment inputs (always per-channel)."""
+        out = []
+        for l in self.model.qlayers:
+            out.append(("delta_oh." + l.name, (NP,)))
+            out.append(("gamma_oh." + l.name, (l.cout, NP)))
+        return out
+
+    # -- graphs -------------------------------------------------------------
+
+    def train_w_hard(self, plist, blist, mlist, vlist, t, hard_list, x, y, lr):
+        """QAT step with hard assignment (warmup / finetune / baselines)."""
+        model = self.model
+
+        def loss_fn(plist_):
+            params = self._pdict(plist_)
+            bn = self._bdict(blist)
+            assign = self._hard_assign(hard_list)
+            out, new_bn, _, _ = apply_model(
+                model, params, bn, assign, x,
+                train=True, update_stats=jnp.float32(1.0), lut=self.lut)
+            loss, metric = task_loss(model, out, y)
+            return loss, (new_bn, metric)
+
+        (loss, (new_bn, metric)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(list(plist))
+        new_p, new_m, new_v = adam_update(plist, grads, mlist, vlist, t, lr)
+        new_blist = [new_bn[k] for k in self.bnames]
+        return tuple(new_p) + tuple(new_blist) + tuple(new_m) + tuple(new_v) \
+            + (loss, metric)
+
+    def search_theta(self, plist, blist, nlist, mlist, vlist, t, x, y,
+                     tau, lam_size, lam_energy, lr, act_freeze):
+        """Alg. 1 line 5: Adam on theta for L_T + lambda * L_R.
+
+        ``act_freeze`` (0/1): masks delta gradients (size-target runs pin
+        activations to 8 bit).  BN running stats are NOT updated here.
+        """
+        model = self.model
+
+        def loss_fn(nlist_):
+            params = self._pdict(plist)
+            bn = self._bdict(blist)
+            nas = self._ndict(nlist_)
+            assign = self._soft_assign(nas, tau)
+            out, _, reg_s, reg_e = apply_model(
+                model, params, bn, assign, x,
+                train=True, update_stats=jnp.float32(0.0), lut=self.lut)
+            loss, _ = task_loss(model, out, y)
+            total = loss + lam_size * reg_s + lam_energy * reg_e
+            return total, (loss, reg_s, reg_e)
+
+        (_, (loss, reg_s, reg_e)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(list(nlist))
+        # mask activation (delta) gradients when the search is size-only
+        masked = []
+        for name, g in zip(self.nnames, grads):
+            if name.endswith(".delta"):
+                masked.append(g * (1.0 - act_freeze))
+            else:
+                masked.append(g)
+        new_n, new_m, new_v = adam_update(nlist, masked, mlist, vlist, t, lr)
+        return tuple(new_n) + tuple(new_m) + tuple(new_v) \
+            + (loss, reg_s, reg_e)
+
+    def search_w(self, plist, blist, nlist, mlist, vlist, t, x, y, tau, lr):
+        """Alg. 1 line 7: Adam on W for L_T with the soft assignment."""
+        model = self.model
+
+        def loss_fn(plist_):
+            params = self._pdict(plist_)
+            bn = self._bdict(blist)
+            nas = self._ndict(nlist)
+            assign = self._soft_assign(nas, tau)
+            out, new_bn, _, _ = apply_model(
+                model, params, bn, assign, x,
+                train=True, update_stats=jnp.float32(1.0), lut=self.lut)
+            loss, metric = task_loss(model, out, y)
+            return loss, (new_bn, metric)
+
+        (loss, (new_bn, metric)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(list(plist))
+        new_p, new_m, new_v = adam_update(plist, grads, mlist, vlist, t, lr)
+        new_blist = [new_bn[k] for k in self.bnames]
+        return tuple(new_p) + tuple(new_blist) + tuple(new_m) + tuple(new_v) \
+            + (loss, metric)
+
+    def eval_hard(self, plist, blist, hard_list, x, y):
+        """Frozen-BN evaluation under a hard assignment.
+
+        Returns (loss, metric, per_sample) — per_sample feeds the Rust AUC
+        computation for AD and per-class accounting for the classifiers.
+        """
+        model = self.model
+        params = self._pdict(plist)
+        bn = self._bdict(blist)
+        assign = self._hard_assign(hard_list)
+        out, _, reg_s, reg_e = apply_model(
+            model, params, bn, assign, x,
+            train=False, update_stats=None, lut=self.lut)
+        loss, metric = task_loss(model, out, y)
+        return loss, metric, per_sample_score(model, out, y), reg_s, reg_e
+
+    def infer_hard(self, plist, blist, hard_list, x):
+        """Deployment-path forward (logits / reconstructions)."""
+        model = self.model
+        params = self._pdict(plist)
+        bn = self._bdict(blist)
+        assign = self._hard_assign(hard_list)
+        out, _, _, _ = apply_model(
+            model, params, bn, assign, x,
+            train=False, update_stats=None, lut=self.lut)
+        return out

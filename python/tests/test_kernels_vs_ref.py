@@ -1,0 +1,203 @@
+"""L1 correctness: every Pallas kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes and value ranges; results must match to 1 ULP
+(same math; interpret-mode may fuse mul/div differently).  This is the
+CORE correctness signal for the kernels inside every AOT'd graph.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.fake_quant import (
+    pact_fake_quant_pallas,
+    weight_fake_quant_pallas,
+)
+from compile.kernels.intgemm import int_gemm_pallas
+from compile.kernels.mixed_weight import mixed_act_pallas, mixed_weight_pallas
+from compile.quantlib import PRECISIONS, softmax_temperature
+
+settings.register_profile("kernels", deadline=None, max_examples=25)
+settings.load_profile("kernels")
+
+
+dims = st.integers(min_value=1, max_value=40)
+bits = st.sampled_from(PRECISIONS)
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.normal(0.4, 1.0, shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# PACT fake-quant.
+# ---------------------------------------------------------------------------
+
+@given(r=dims, c=dims, n=bits, alpha=st.floats(0.1, 8.0), seed=st.integers(0, 999))
+def test_pact_matches_ref_2d(r, c, n, alpha, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, r, c)
+    a = jnp.float32(alpha)
+    got = pact_fake_quant_pallas(x, a, n)
+    want = ref.pact_fake_quant_ref(x, a, n)
+    # interpret-mode fuses mul/div differently: allow 1-ULP drift
+    np.testing.assert_allclose(got, want, rtol=2e-7, atol=1e-7)
+
+
+@given(shape=st.lists(dims, min_size=1, max_size=4), n=bits, seed=st.integers(0, 99))
+def test_pact_any_rank(shape, n, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, *shape)
+    a = jnp.float32(2.5)
+    got = pact_fake_quant_pallas(x, a, n)
+    want = ref.pact_fake_quant_ref(x, a, n)
+    assert got.shape == tuple(shape)
+    np.testing.assert_allclose(got, want, rtol=2e-7, atol=1e-7)
+
+
+def test_pact_quant_levels():
+    # outputs must take at most 2^n distinct values
+    rng = np.random.default_rng(0)
+    x = rand(rng, 64, 64)
+    for n in PRECISIONS:
+        y = np.unique(np.asarray(pact_fake_quant_pallas(x, jnp.float32(4.0), n)))
+        assert len(y) <= 2 ** n
+
+
+def test_pact_gradients_ste_and_alpha():
+    x = jnp.array([[-1.0, 0.5, 3.0, 10.0]], jnp.float32)
+    a = jnp.float32(4.0)
+
+    def f(x, a):
+        return jnp.sum(pact_fake_quant_pallas(x, a, 4) * 2.0)
+
+    gx, ga = jax.grad(f, argnums=(0, 1))(x, a)
+    # STE: in-range passes, clipped blocks
+    np.testing.assert_allclose(gx, [[0.0, 2.0, 2.0, 0.0]])
+    # PACT: saturated element contributes to alpha
+    assert float(ga) == pytest.approx(2.0)
+
+
+# ---------------------------------------------------------------------------
+# Per-channel weight fake-quant.
+# ---------------------------------------------------------------------------
+
+@given(cout=dims, k=dims, n=bits, seed=st.integers(0, 999))
+def test_weight_fq_matches_ref(cout, k, n, seed):
+    rng = np.random.default_rng(seed)
+    w = rand(rng, cout, k) * 0.3
+    got = weight_fake_quant_pallas(w, n)
+    want = ref.weight_fake_quant_ref(w, n)
+    np.testing.assert_allclose(got, want, rtol=2e-7, atol=1e-7)
+
+
+def test_weight_fq_is_per_channel():
+    # scaling one row must not change another row's quantization
+    rng = np.random.default_rng(1)
+    w = rand(rng, 4, 16) * 0.2
+    base = np.asarray(weight_fake_quant_pallas(w, 4))
+    w2 = w.at[0].multiply(100.0)
+    scaled = np.asarray(weight_fake_quant_pallas(w2, 4))
+    np.testing.assert_allclose(base[1:], scaled[1:])
+
+
+def test_weight_fq_ste_gradient():
+    w = jnp.ones((3, 5), jnp.float32) * 0.3
+    g = jax.grad(lambda w: jnp.sum(weight_fake_quant_pallas(w, 2) * 3.0))(w)
+    np.testing.assert_allclose(g, np.full((3, 5), 3.0))
+
+
+# ---------------------------------------------------------------------------
+# Eq. (5) fused blend.
+# ---------------------------------------------------------------------------
+
+@given(cout=dims, k=dims, seed=st.integers(0, 999), tau=st.floats(0.05, 5.0))
+def test_mixed_weight_matches_ref(cout, k, seed, tau):
+    rng = np.random.default_rng(seed)
+    w = rand(rng, cout, k) * 0.3
+    gamma = rand(rng, cout, 3)
+    gh = softmax_temperature(gamma, jnp.float32(tau))
+    got = mixed_weight_pallas(w, gh)
+    want = ref.mixed_weight_ref(w, gh)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_mixed_weight_one_hot_equals_single_precision():
+    rng = np.random.default_rng(3)
+    w = rand(rng, 8, 20) * 0.2
+    for j, p in enumerate(PRECISIONS):
+        gh = jnp.zeros((8, 3), jnp.float32).at[:, j].set(1.0)
+        got = mixed_weight_pallas(w, gh)
+        want = ref.weight_fake_quant_ref(w, p)
+        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-7)
+
+
+def test_mixed_weight_gradients():
+    rng = np.random.default_rng(4)
+    w = rand(rng, 6, 10) * 0.3
+    gh = jnp.full((6, 3), 1.0 / 3.0, jnp.float32)
+
+    def f(w, gh):
+        return jnp.sum(mixed_weight_pallas(w, gh) ** 2)
+
+    gw, gg = jax.grad(f, argnums=(0, 1))(w, gh)
+    assert gw.shape == w.shape
+    assert gg.shape == gh.shape
+    # gamma gradient columns = <2*what, fq(w,p)>: verify one numerically
+    y = np.asarray(mixed_weight_pallas(w, gh))
+    want_col0 = np.sum(2 * y * np.asarray(ref.weight_fake_quant_ref(w, 2)), axis=1)
+    np.testing.assert_allclose(gg[:, 0], want_col0, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Eq. (4) fused blend.
+# ---------------------------------------------------------------------------
+
+@given(r=dims, c=dims, seed=st.integers(0, 999))
+def test_mixed_act_matches_ref(r, c, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, r, c)
+    a = jnp.float32(3.0)
+    dh = softmax_temperature(rand(rng, 3).reshape(3), jnp.float32(1.0))
+    got = mixed_act_pallas(x, a, dh)
+    want = ref.mixed_act_ref(x, a, dh)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_mixed_act_gradients_flow_to_all():
+    rng = np.random.default_rng(5)
+    x = rand(rng, 4, 8)
+    a = jnp.float32(2.0)
+    dh = jnp.array([0.2, 0.3, 0.5], jnp.float32)
+
+    def f(x, a, d):
+        return jnp.sum(mixed_act_pallas(x, a, d))
+
+    gx, ga, gd = jax.grad(f, argnums=(0, 1, 2))(x, a, dh)
+    assert gx.shape == x.shape
+    assert gd.shape == (3,)
+    assert np.all(np.asarray(gd) > 0)  # each precision contributes
+
+
+# ---------------------------------------------------------------------------
+# Integer GEMM.
+# ---------------------------------------------------------------------------
+
+@given(m=dims, k=dims, n=dims, seed=st.integers(0, 999))
+def test_int_gemm_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.integers(0, 256, (m, k)).astype(np.float32))
+    b = jnp.asarray(rng.integers(-128, 128, (k, n)).astype(np.float32))
+    got = int_gemm_pallas(a, b)
+    want = ref.int_gemm_ref(a, b)
+    np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+
+def test_int_gemm_large_tiled():
+    rng = np.random.default_rng(7)
+    a = jnp.asarray(rng.integers(0, 16, (300, 64)).astype(np.float32))
+    b = jnp.asarray(rng.integers(-8, 8, (64, 200)).astype(np.float32))
+    np.testing.assert_allclose(int_gemm_pallas(a, b), ref.int_gemm_ref(a, b))

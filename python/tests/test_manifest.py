@@ -1,0 +1,71 @@
+"""Manifest emission invariants (what the Rust side depends on)."""
+
+import numpy as np
+import pytest
+
+from compile.aot import Lowerer
+from compile.energy_lut import energy_lut
+from compile.models import BENCHMARKS
+
+
+@pytest.fixture(scope="module", params=list(BENCHMARKS))
+def manifest(request):
+    return Lowerer(request.param).manifest()
+
+
+def test_manifest_has_all_sections(manifest):
+    for key in ["benchmark", "batch", "precisions", "loss", "layers",
+                "params", "bn_state", "nas_cw", "nas_lw", "hard_assign",
+                "energy_lut_pj_per_mac", "cycles_per_mac", "graphs"]:
+        assert key in manifest, key
+
+
+def test_qidx_is_dense(manifest):
+    q = [l for l in manifest["layers"] if l["qidx"] >= 0]
+    assert sorted(l["qidx"] for l in q) == list(range(len(q)))
+
+
+def test_hard_assign_alternates_delta_gamma(manifest):
+    q = [l for l in manifest["layers"] if l["qidx"] >= 0]
+    ha = manifest["hard_assign"]
+    assert len(ha) == 2 * len(q)
+    for i, l in enumerate(sorted(q, key=lambda l: l["qidx"])):
+        assert ha[2 * i]["shape"] == [3]
+        assert ha[2 * i + 1]["shape"] == [l["cout"], 3]
+
+
+def test_params_order_matches_layer_order(manifest):
+    # every quant layer contributes <name>.w and <name>.alpha
+    q = [l["name"] for l in manifest["layers"] if l["qidx"] >= 0]
+    pnames = [p["name"] for p in manifest["params"]]
+    for name in q:
+        assert f"{name}.w" in pnames
+        assert f"{name}.alpha" in pnames
+
+
+def test_nas_shapes(manifest):
+    q = {l["name"]: l for l in manifest["layers"] if l["qidx"] >= 0}
+    cw = {p["name"]: p["shape"] for p in manifest["nas_cw"]}
+    lw = {p["name"]: p["shape"] for p in manifest["nas_lw"]}
+    for name, l in q.items():
+        assert cw[f"{name}.gamma"] == [l["cout"], 3]
+        assert lw[f"{name}.gamma"] == [1, 3]
+        assert cw[f"{name}.delta"] == [3]
+
+
+def test_lut_roundtrip(manifest):
+    np.testing.assert_allclose(
+        np.asarray(manifest["energy_lut_pj_per_mac"], dtype=np.float32),
+        energy_lut())
+
+
+def test_ops_formula(manifest):
+    for l in manifest["layers"]:
+        if l["qidx"] < 0:
+            continue
+        if l["kind"] == "fc":
+            assert l["ops"] == l["cout"] * l["cin"]
+        else:
+            cin_g = 1 if l["kind"] == "dwconv" else l["cin"]
+            want = l["out_h"] * l["out_w"] * l["cout"] * cin_g * l["kx"] * l["ky"]
+            assert l["ops"] == want, l["name"]

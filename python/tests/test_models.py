@@ -1,0 +1,176 @@
+"""L2 correctness: model geometry, forward shapes, regularizer values."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.energy_lut import cycles_per_mac, energy_lut
+from compile.models import BENCHMARKS, get_model
+from compile.models.common import apply_model, init_params
+from compile.quantlib import PRECISIONS, one_hot_argmax, softmax_temperature
+
+LUT = jnp.asarray(energy_lut())
+
+
+def hard_assign(model, wbits=8, xbits=8):
+    iw = PRECISIONS.index(wbits)
+    ix = PRECISIONS.index(xbits)
+    assign = {}
+    for l in model.qlayers:
+        d = jnp.zeros((3,), jnp.float32).at[ix].set(1.0)
+        g = jnp.zeros((l.cout, 3), jnp.float32).at[:, iw].set(1.0)
+        assign[l.name] = (d, g)
+    return assign
+
+
+def jnp_params(model, mode="cw"):
+    p, b, nas = init_params(model, 0, mode)
+    return (
+        {k: jnp.asarray(v) for k, v in p.items()},
+        {k: jnp.asarray(v) for k, v in b.items()},
+        {k: jnp.asarray(v) for k, v in nas.items()},
+    )
+
+
+# ---------------------------------------------------------------------------
+# Geometry.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bench", list(BENCHMARKS))
+def test_geometry_resolves(bench):
+    m = get_model(bench)
+    assert m.qlayers, bench
+    for l in m.qlayers:
+        assert l.cin > 0 and l.cout > 0
+        assert l.ops > 0
+        assert l.weights_per_channel > 0
+
+
+def test_resnet8_matches_mlperf_tiny():
+    m = get_model("ic")
+    names = [l.name for l in m.qlayers]
+    assert names == ["c1", "b1c1", "b1c2", "b2c1", "b2c2", "b2sc",
+                     "b3c1", "b3c2", "b3sc", "fc"]
+    # params ~78k (MLPerf ResNet-8)
+    total = sum(l.cout * l.weights_per_channel for l in m.qlayers)
+    assert 70_000 < total < 90_000, total
+
+
+def test_vww_mobilenet_channel_plan():
+    m = get_model("vww")
+    convs = [l for l in m.qlayers if l.kind == "conv"]
+    assert convs[0].cout == 8  # 32 * 0.25
+    assert convs[-1].cout == 256  # 1024 * 0.25
+
+
+def test_ad_keeps_128_neurons():
+    m = get_model("ad")
+    widths = [l.cout for l in m.qlayers]
+    assert widths == [128, 128, 8, 128, 128, 256]
+
+
+# ---------------------------------------------------------------------------
+# Forward passes.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bench", list(BENCHMARKS))
+def test_forward_shapes(bench):
+    m = get_model(bench)
+    params, bn, _ = jnp_params(m)
+    x = jnp.ones((2,) + m.input_shape, jnp.float32)
+    out, new_bn, reg_s, reg_e = apply_model(
+        m, params, bn, hard_assign(m), x,
+        train=False, update_stats=None, lut=LUT)
+    if m.loss == "ce":
+        assert out.shape == (2, m.n_classes)
+    else:
+        assert out.shape == (2,) + m.input_shape
+    assert float(reg_s) > 0 and float(reg_e) > 0
+
+
+def test_bn_state_updates_only_when_asked():
+    m = get_model("ic")
+    params, bn, _ = jnp_params(m)
+    x = jnp.ones((2,) + m.input_shape, jnp.float32) * 2.0
+    _, bn_frozen, _, _ = apply_model(
+        m, params, bn, hard_assign(m), x,
+        train=True, update_stats=jnp.float32(0.0), lut=LUT)
+    _, bn_updated, _, _ = apply_model(
+        m, params, bn, hard_assign(m), x,
+        train=True, update_stats=jnp.float32(1.0), lut=LUT)
+    k = "c1.bn_mean"
+    np.testing.assert_allclose(bn_frozen[k], bn[k])
+    assert not np.allclose(bn_updated[k], bn[k])
+
+
+# ---------------------------------------------------------------------------
+# Regularizers (Eq. 7 / Eq. 8) against hand computation.
+# ---------------------------------------------------------------------------
+
+def test_reg_size_w8_equals_8x_weight_count():
+    m = get_model("ad")
+    params, bn, _ = jnp_params(m)
+    x = jnp.ones((2,) + m.input_shape, jnp.float32)
+    _, _, reg_s, _ = apply_model(
+        m, params, bn, hard_assign(m, wbits=8), x,
+        train=False, update_stats=None, lut=LUT)
+    total_weights = sum(l.cout * l.weights_per_channel for l in m.qlayers)
+    assert float(reg_s) == pytest.approx(8.0 * total_weights, rel=1e-6)
+
+
+def test_reg_size_w2_is_quarter_of_w8():
+    m = get_model("kws")
+    params, bn, _ = jnp_params(m)
+    x = jnp.ones((2,) + m.input_shape, jnp.float32)
+    _, _, s8, _ = apply_model(m, params, bn, hard_assign(m, 8), x,
+                              train=False, update_stats=None, lut=LUT)
+    _, _, s2, _ = apply_model(m, params, bn, hard_assign(m, 2), x,
+                              train=False, update_stats=None, lut=LUT)
+    assert float(s2) == pytest.approx(float(s8) / 4.0, rel=1e-6)
+
+
+def test_reg_energy_matches_ops_times_lut():
+    m = get_model("ad")
+    params, bn, _ = jnp_params(m)
+    x = jnp.ones((2,) + m.input_shape, jnp.float32)
+    lut = energy_lut()
+    for (wb, xb) in [(8, 8), (2, 4), (4, 2)]:
+        _, _, _, reg_e = apply_model(
+            m, params, bn, hard_assign(m, wb, xb), x,
+            train=False, update_stats=None, lut=LUT)
+        total_ops = sum(l.ops for l in m.qlayers)
+        want = total_ops * lut[PRECISIONS.index(xb)][PRECISIONS.index(wb)]
+        assert float(reg_e) == pytest.approx(want, rel=1e-5), (wb, xb)
+
+
+def test_energy_lut_properties():
+    lut = energy_lut()
+    cyc = cycles_per_mac()
+    assert lut.shape == (3, 3) and cyc.shape == (3, 3)
+    # monotone in each operand, non-linear overall
+    for i in range(3):
+        assert np.all(np.diff(lut[i]) >= 0)
+        assert np.all(np.diff(lut[:, i]) >= 0)
+    assert lut[2][2] / lut[0][0] < 8  # 8x8 not 16x cheaper than 2x2
+
+
+# ---------------------------------------------------------------------------
+# Softmax / argmax consistency (search -> finetune transition).
+# ---------------------------------------------------------------------------
+
+def test_softmax_temperature_anneals_to_argmax():
+    theta = jnp.array([[0.3, 1.2, -0.5]], jnp.float32)
+    hot = one_hot_argmax(theta, 3)
+    cold = softmax_temperature(theta, jnp.float32(0.01))
+    np.testing.assert_allclose(cold, hot, atol=1e-4)
+    warm = softmax_temperature(theta, jnp.float32(5.0))
+    assert float(jnp.max(warm)) < 0.5  # still soft at tau=5
+
+
+def test_softmax_rows_sum_to_one():
+    rng = np.random.default_rng(0)
+    theta = jnp.asarray(rng.normal(0, 3, (16, 3)).astype(np.float32))
+    for tau in [5.0, 1.0, 0.1]:
+        s = softmax_temperature(theta, jnp.float32(tau))
+        np.testing.assert_allclose(jnp.sum(s, axis=-1), np.ones(16), rtol=1e-5)

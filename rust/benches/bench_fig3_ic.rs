@@ -1,0 +1,15 @@
+//! Regenerates both Fig. 3 panels (score vs energy, score vs size) for
+//! the IC benchmark: our channel-wise DNAS vs EdMIPS vs fixed wNxM.
+//! See common/mod.rs for budget env vars.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use cwmix::nas::Target;
+
+fn main() -> anyhow::Result<()> {
+    println!("=== Fig. 3 / ic ===");
+    common::fig3_bench("ic", Target::Energy)?;
+    common::fig3_bench("ic", Target::Size)?;
+    Ok(())
+}

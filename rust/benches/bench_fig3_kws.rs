@@ -1,0 +1,15 @@
+//! Regenerates both Fig. 3 panels (score vs energy, score vs size) for
+//! the KWS benchmark: our channel-wise DNAS vs EdMIPS vs fixed wNxM.
+//! See common/mod.rs for budget env vars.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use cwmix::nas::Target;
+
+fn main() -> anyhow::Result<()> {
+    println!("=== Fig. 3 / kws ===");
+    common::fig3_bench("kws", Target::Energy)?;
+    common::fig3_bench("kws", Target::Size)?;
+    Ok(())
+}

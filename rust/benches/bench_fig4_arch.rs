@@ -1,0 +1,64 @@
+//! Fig. 4 regeneration: the example precision assignments on IC with the
+//! energy regularizer — ours (channel-wise) vs EdMIPS (layer-wise) at
+//! matched λ, printed as the per-layer table the paper draws (activation
+//! bits + fraction of weight channels per precision), plus the energy
+//! delta between the two (the circled Pareto points' 26.4% claim).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use cwmix::baselines;
+use cwmix::nas::{Mode, SearchConfig, Target, Trainer};
+use cwmix::report;
+use cwmix::runtime::Runtime;
+use cwmix::util::Stopwatch;
+
+fn main() -> anyhow::Result<()> {
+    println!("=== Fig. 4 / IC energy-regularized assignments ===");
+    let rt = Runtime::cpu(std::path::Path::new("artifacts"))?;
+    let mk = |mode| {
+        if common::full() {
+            SearchConfig::new("ic", mode, Target::Energy, 0.0)
+        } else {
+            SearchConfig::quick("ic", mode, Target::Energy, 0.0)
+        }
+    };
+    let sw = Stopwatch::start();
+    let base = mk(Mode::ChannelWise);
+    let warm = baselines::shared_warmup(&rt, &base)?;
+    let (_, reg_e0) = Trainer::new(&rt, base.clone())?.initial_regs()?;
+    let lambda = 0.3 / reg_e0;
+
+    let mut cfg_cw = mk(Mode::ChannelWise);
+    cfg_cw.lambda = lambda;
+    let ours = baselines::run_ours(&rt, &cfg_cw, &warm)?;
+
+    let mut cfg_lw = mk(Mode::LayerWise);
+    cfg_lw.lambda = lambda;
+    let edmips = baselines::run_edmips(&rt, &cfg_lw, &warm)?;
+
+    println!("{}", report::fig4_dump("ours (channel-wise)", &ours.assignment));
+    println!("{}", report::fig4_dump("EdMIPS (layer-wise)", &edmips.assignment));
+    println!(
+        "ours:   acc {:.3}  energy {:.2} uJ   | EdMIPS: acc {:.3}  energy {:.2} uJ",
+        ours.test_score,
+        ours.energy_uj(),
+        edmips.test_score,
+        edmips.energy_uj()
+    );
+    if ours.test_score >= edmips.test_score - 0.002 {
+        println!(
+            "energy saving at >= EdMIPS accuracy: {:.1}%  (paper circled points: 26.4%)",
+            (1.0 - ours.energy_pj / edmips.energy_pj) * 100.0
+        );
+    }
+    // the paper's qualitative observation: first/last activations stay 8-bit
+    let first = &ours.assignment.layers[0];
+    let last = ours.assignment.layers.last().unwrap();
+    println!(
+        "first/last layer activations: x{} / x{} (paper: both remain 8-bit)",
+        first.act_bits, last.act_bits
+    );
+    println!("bench_fig4_arch: {:.1}s wall", sw.elapsed_s());
+    Ok(())
+}

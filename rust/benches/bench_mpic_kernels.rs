@@ -1,0 +1,115 @@
+//! MPIC simulator micro-benchmarks:
+//!
+//! 1. simulated MAC throughput by (p_x, p_w) — must follow the LUT's
+//!    lane structure (the MPIC SIMD claim);
+//! 2. §III-C sub-convolution scheduling overhead as group count grows —
+//!    the paper's "negligible compared to the benefits" claim, quantified;
+//! 3. host-side simulator throughput (engineering number for §Perf);
+//! 4. pack/unpack bandwidth for the sub-byte flash layout.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use cwmix::data::{make_dataset, Split};
+use cwmix::deploy;
+use cwmix::energy::CostLut;
+use cwmix::nas::{Mode, SearchConfig, Target, Trainer};
+use cwmix::quant::{pack_subbyte, unpack_subbyte, Assignment, LayerAssignment};
+use cwmix::runtime::Runtime;
+use cwmix::util::timer::measure;
+use cwmix::util::Pcg32;
+
+fn main() -> anyhow::Result<()> {
+    println!("=== MPIC simulator micro-benchmarks ===");
+    let rt = Runtime::cpu(std::path::Path::new("artifacts"))?;
+    let cfg = SearchConfig::quick("kws", Mode::ChannelWise, Target::Size, 0.0);
+    let tr = Trainer::new(&rt, cfg)?;
+    let lut = CostLut::default();
+    let ds = make_dataset("kws", Split::Test, 4, 0);
+    let feat = tr.manifest.feat_len();
+    let names = tr.manifest.qnames();
+    let couts = tr.manifest.qcouts();
+
+    // 1. modelled cycles by precision combo (uniform nets)
+    println!("\n[1] simulated inference cost by (p_x, p_w):");
+    println!("    {:<8} {:>12} {:>10} {:>9}", "combo", "cycles", "us@250MHz", "uJ");
+    for &(px, pw) in &[(8u32, 8u32), (8, 4), (8, 2), (4, 4), (4, 2), (2, 2)] {
+        let a = Assignment::fixed(&names, &couts, pw, px);
+        let d = deploy::build(&tr.manifest, &tr.params_map(), &tr.bn_map(), &a)?;
+        let (_, cost) = cwmix::mpic::run_batch(&d, &ds.x[0..feat], feat, &lut)?;
+        println!(
+            "    w{pw}x{px}    {:>12.0} {:>10.1} {:>9.3}",
+            cost.total_cycles(),
+            cost.latency_us(),
+            cost.total_energy_uj()
+        );
+    }
+
+    // 2. sub-conv scheduling overhead vs fragmentation
+    println!("\n[2] sub-conv scheduling overhead (vs 1-group baseline):");
+    let mut rng = Pcg32::seeded(7);
+    let base_a = Assignment::fixed(&names, &couts, 8, 8);
+    let d0 = deploy::build(&tr.manifest, &tr.params_map(), &tr.bn_map(), &base_a)?;
+    let (_, c0) = cwmix::mpic::run_batch(&d0, &ds.x[0..feat], feat, &lut)?;
+    for frag in [2usize, 3, 8, 16] {
+        // random interleaving with `frag` alternations per layer
+        let a = Assignment {
+            layers: names
+                .iter()
+                .zip(&couts)
+                .map(|(n, &c)| LayerAssignment {
+                    name: n.clone(),
+                    act_bits: 8,
+                    weight_bits: (0..c)
+                        .map(|i| {
+                            let band = i * frag / c.max(1);
+                            if band % 2 == 0 { 8 } else { [2u32, 4][rng.below(2) as usize] }
+                        })
+                        .collect(),
+                })
+                .collect(),
+        };
+        let d = deploy::build(&tr.manifest, &tr.params_map(), &tr.bn_map(), &a)?;
+        let (_, c) = cwmix::mpic::run_batch(&d, &ds.x[0..feat], feat, &lut)?;
+        let overhead: f64 = c.layers.iter().map(|l| l.overhead_cycles).sum();
+        println!(
+            "    {:>3} groups total: overhead {:>7.0} cyc = {:.2}% of inference ({:.0} cyc)",
+            d.n_subconvs(),
+            overhead,
+            overhead / c0.total_cycles() * 100.0,
+            c.total_cycles(),
+        );
+    }
+
+    // 3. host-side simulator throughput
+    println!("\n[3] host simulator throughput:");
+    let a = Assignment::fixed(&names, &couts, 8, 8);
+    let d = deploy::build(&tr.manifest, &tr.params_map(), &tr.bn_map(), &a)?;
+    let (mean_ms, min_ms, max_ms) = measure(2, 10, || {
+        let _ = cwmix::mpic::run_batch(&d, &ds.x[0..feat], feat, &lut).unwrap();
+    });
+    let macs = 2.6e6; // DS-CNN ~2.6 MMAC
+    println!(
+        "    kws inference: mean {mean_ms:.2} ms (min {min_ms:.2}, max {max_ms:.2}) = {:.0} MMAC/s",
+        macs / mean_ms / 1e3
+    );
+
+    // 4. pack/unpack bandwidth
+    println!("\n[4] sub-byte pack/unpack:");
+    let vals: Vec<i32> = (0..1_000_000).map(|i| (i % 3) as i32 - 1).collect();
+    for bits in [2u32, 4, 8] {
+        let (pack_ms, _, _) = measure(1, 5, || {
+            let _ = pack_subbyte(&vals, bits);
+        });
+        let packed = pack_subbyte(&vals, bits);
+        let (unpack_ms, _, _) = measure(1, 5, || {
+            let _ = unpack_subbyte(&packed, bits, vals.len());
+        });
+        println!(
+            "    {bits}-bit: pack {:.0} MB/s, unpack {:.0} MB/s",
+            vals.len() as f64 / pack_ms / 1e3,
+            vals.len() as f64 / unpack_ms / 1e3
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,66 @@
+//! L3 runtime benchmarks (the §Perf step-latency numbers): per-graph
+//! compile time and per-step execute latency for every benchmark, plus
+//! the literal-conversion overhead share (host tensor -> xla literal ->
+//! device and back).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use cwmix::data::{make_dataset, BatchIter, Split};
+use cwmix::nas::{Mode, SearchConfig, Target, Trainer};
+use cwmix::quant::Assignment;
+use cwmix::runtime::Runtime;
+use cwmix::tensor::Tensor;
+use cwmix::util::timer::measure;
+use cwmix::util::{Pcg32, Stopwatch};
+
+fn main() -> anyhow::Result<()> {
+    println!("=== runtime benchmarks (PJRT CPU) ===");
+    let rt = Runtime::cpu(std::path::Path::new("artifacts"))?;
+    println!("platform: {}", rt.platform());
+
+    // literal conversion overhead
+    let t = Tensor::new(vec![32, 32, 32, 3], vec![0.5; 32 * 32 * 32 * 3]);
+    let (ms, _, _) = measure(3, 50, || {
+        let _ = t.to_literal().unwrap();
+    });
+    println!(
+        "literal conversion: {:.3} ms for a 393 KB batch tensor ({:.1} GB/s)",
+        ms,
+        t.len() as f64 * 4.0 / ms / 1e6
+    );
+
+    for bench in ["ad", "kws", "ic", "vww"] {
+        println!("\n[{bench}]");
+        // compile times
+        for g in ["train_w_hard", "search_theta_cw", "search_w_cw", "eval"] {
+            let sw = Stopwatch::start();
+            let _ = rt.graph(bench, g)?;
+            println!("  compile {g:<16} {:>7.2} s", sw.elapsed_s());
+        }
+        // step latency through the Trainer path (includes literal I/O)
+        let mut cfg = SearchConfig::quick(bench, Mode::ChannelWise, Target::Size, 0.0);
+        cfg.warmup_epochs = 1;
+        cfg.train_n = 64;
+        let mut tr = Trainer::new(&rt, cfg)?;
+        let sw = Stopwatch::start();
+        tr.warmup()?; // 2 batches + eval
+        let warm_s = sw.elapsed_s();
+        let a8 = Assignment::fixed(&tr.manifest.qnames(), &tr.manifest.qcouts(), 8, 8);
+        let ds = make_dataset(bench, Split::Val, 64, 0);
+        let mut rng = Pcg32::seeded(0);
+        let _b = BatchIter::new(&ds, 32, &mut rng).next().unwrap();
+        let sw = Stopwatch::start();
+        let mut evals = 0;
+        while sw.elapsed_s() < 2.0 {
+            let _ = tr.evaluate(Split::Val, &a8)?;
+            evals += 1;
+        }
+        println!(
+            "  warmup epoch (2 steps + eval): {:.2} s; eval epoch: {:.3} s",
+            warm_s,
+            sw.elapsed_s() / evals as f64
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,73 @@
+//! Shared harness for the criterion-less bench binaries (`harness = false`;
+//! criterion is not in the offline crate set).  Each bench prints the
+//! paper-figure series it regenerates plus wall-clock timings, and honours:
+//!
+//! * `CWMIX_BENCH_FULL=1` — full search budgets (paper-scale runs; the
+//!   default is the quick budget so `cargo bench` completes in minutes);
+//! * `CWMIX_BENCH_OUT=dir` — where to store the sweep JSONs (default
+//!   `results/bench`).
+
+// Shared across bench binaries; not every binary uses every helper.
+#![allow(dead_code)]
+
+use std::path::PathBuf;
+
+use cwmix::coordinator::results;
+use cwmix::coordinator::sweep::run_sweep;
+use cwmix::nas::Target;
+use cwmix::report;
+use cwmix::runtime::Runtime;
+use cwmix::util::Stopwatch;
+
+pub fn full() -> bool {
+    std::env::var("CWMIX_BENCH_FULL").map(|v| v == "1").unwrap_or(false)
+}
+
+pub fn out_dir() -> PathBuf {
+    PathBuf::from(
+        std::env::var("CWMIX_BENCH_OUT").unwrap_or_else(|_| "results/bench".into()),
+    )
+}
+
+/// Bench-budget λ strengths.  The default single-λ point keeps a full
+/// `cargo bench` run tractable on one core (a representative
+/// ours-vs-EdMIPS-vs-fixed panel); `CWMIX_BENCH_FULL=1` uses the paper
+/// grid, and the recorded multi-λ sweeps live in `results/` via
+/// `cwmix sweep` (EXPERIMENTS.md).
+pub fn strengths() -> Vec<f32> {
+    if full() {
+        cwmix::coordinator::sweep::DEFAULT_STRENGTHS.to_vec()
+    } else {
+        vec![0.5]
+    }
+}
+
+/// Regenerate one Fig. 3 panel and print it.
+pub fn fig3_bench(bench: &str, target: Target) -> anyhow::Result<()> {
+    let rt = Runtime::cpu(std::path::Path::new("artifacts"))?;
+    let sw = Stopwatch::start();
+    let mut log = |s: &str| eprintln!("  {s}");
+    let out = run_sweep(&rt, bench, target, &strengths(), !full(), &mut log)?;
+    // (bench-mode budgets are the `quick` SearchConfig; the recorded
+    // multi-lambda paper-scale sweeps live in results/ — EXPERIMENTS.md)
+    let secs = sw.elapsed_s();
+    let path = results::save_sweep(
+        &out_dir(),
+        bench,
+        target.name(),
+        &out.ours,
+        &out.edmips,
+        &out.fixed,
+    )?;
+    let (b, _, o, e, f) = results::load_sweep(&path)?;
+    println!("{}", report::fig3_panel(&b, target, &o, &e, &f));
+    println!(
+        "bench_fig3_{bench}/{}: {:.1}s wall ({} searches + {} baselines), saved {}",
+        target.name(),
+        secs,
+        out.ours.len() + out.edmips.len(),
+        out.fixed.len(),
+        path.display()
+    );
+    Ok(())
+}

@@ -1,0 +1,107 @@
+//! Comparison baselines of Fig. 3.
+//!
+//! * **EdMIPS** (Cai et al., CVPR 2020) — layer-wise DNAS.  Per the
+//!   paper's fair-comparison protocol it shares *everything* with our
+//!   method (PACT quantizer, 20/80 alternation, tau annealing, LUT
+//!   regularizer) except the gamma granularity — so it is simply the
+//!   [`Mode::LayerWise`] search space driven by the same
+//!   [`crate::nas::Trainer`] (the `search_*_lw` graphs).
+//!
+//! * **Fixed precision** `wNxM` — uniform N-bit weights / M-bit
+//!   activations QAT, N, M in {2, 4, 8}.  Runs as a warmup-restore +
+//!   hard-assignment QAT phase (the same `train_w_hard` graph that
+//!   serves warmup and fine-tuning).
+
+use anyhow::Result;
+
+use crate::nas::trainer::{StateSnapshot, Trainer};
+use crate::nas::{Mode, SearchConfig, SearchResult, Target};
+use crate::quant::Assignment;
+use crate::runtime::Runtime;
+
+/// The `wNxM` grid of Fig. 3.  For the size plots the paper only shows
+/// `wNx8` (activation bits don't change model size); for energy it shows
+/// all combos except the non-convergent `w?x2` on VWW — the caller
+/// filters, we just train.
+pub fn fixed_grid(weights: &[u32], acts: &[u32]) -> Vec<(u32, u32)> {
+    let mut out = Vec::new();
+    for &w in weights {
+        for &x in acts {
+            out.push((w, x));
+        }
+    }
+    out
+}
+
+/// Train one fixed-precision baseline from a shared warmup snapshot.
+pub fn run_fixed(
+    rt: &Runtime,
+    cfg: &SearchConfig,
+    warm: &StateSnapshot,
+    wbits: u32,
+    xbits: u32,
+) -> Result<SearchResult> {
+    let mut cfg = cfg.clone();
+    cfg.mode = Mode::ChannelWise; // irrelevant for hard assignments
+    let mut tr = Trainer::new(rt, cfg)?;
+    tr.restore(warm);
+    let a = Assignment::fixed(
+        &tr.manifest.qnames(), &tr.manifest.qcouts(), wbits, xbits);
+    let epochs = tr.cfg.finetune_epochs + tr.cfg.search_epochs / 2;
+    tr.train_hard_phase("baseline", epochs, &a, true)?;
+    let mut r = tr.result_for(&a)?;
+    r.config_label = format!("{}-w{wbits}x{xbits}", tr.cfg.bench);
+    Ok(r)
+}
+
+/// Run the EdMIPS comparison search (layer-wise mode) for one lambda.
+pub fn run_edmips(
+    rt: &Runtime,
+    cfg: &SearchConfig,
+    warm: &StateSnapshot,
+) -> Result<SearchResult> {
+    let mut cfg = cfg.clone();
+    cfg.mode = Mode::LayerWise;
+    let mut tr = Trainer::new(rt, cfg)?;
+    tr.restore(warm);
+    tr.run_after_warmup()
+}
+
+/// Run our channel-wise search for one lambda.
+pub fn run_ours(
+    rt: &Runtime,
+    cfg: &SearchConfig,
+    warm: &StateSnapshot,
+) -> Result<SearchResult> {
+    let mut cfg = cfg.clone();
+    cfg.mode = Mode::ChannelWise;
+    let mut tr = Trainer::new(rt, cfg)?;
+    tr.restore(warm);
+    tr.run_after_warmup()
+}
+
+/// Shared warmup for a whole sweep (Alg. 1: "Warmup needs to be performed
+/// only once, reusing the result for multiple searches").
+pub fn shared_warmup(rt: &Runtime, cfg: &SearchConfig) -> Result<StateSnapshot> {
+    let mut tr = Trainer::new(rt, cfg.clone())?;
+    tr.warmup()?;
+    Ok(tr.snapshot())
+}
+
+/// Which fixed baselines Fig. 3 shows for a (bench, target) pair.
+/// `quick` keeps the representative diagonal only (one-core budgets).
+pub fn fig3_fixed_combos(bench: &str, target: Target, quick: bool) -> Vec<(u32, u32)> {
+    match target {
+        // memory plots: only wNx8 (activation bits don't affect size)
+        Target::Size => fixed_grid(&[2, 4, 8], &[8]),
+        Target::Energy if quick => vec![(8, 8), (4, 4), (2, 2)],
+        Target::Energy => {
+            let acts: &[u32] = if bench == "vww" {
+                &[4, 8] // w?x2 does not converge on VWW (paper §IV-B)
+            } else {
+                &[2, 4, 8]
+            };
+            fixed_grid(&[2, 4, 8], acts)
+        }
+    }
+}

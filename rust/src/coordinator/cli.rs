@@ -1,0 +1,370 @@
+//! Hand-rolled CLI (clap is not in the offline crate set).
+//!
+//! ```text
+//! cwmix sweep    --bench ic --target energy [--quick] [--strengths 0.1,1] [--out results]
+//! cwmix search   --bench ic --mode cw --target size --strength 1.0 [--quick]
+//! cwmix baseline --bench ic --wbits 4 --xbits 8 [--quick]
+//! cwmix deploy   --bench ic [--quick]           # train, deploy, verify, simulate
+//! cwmix simulate --bench ic --wbits 8 --xbits 8 # MPIC cost model, no training
+//! cwmix report   [--dir results]                # Fig.3 panels + Fig.4 dump
+//! cwmix lut                                     # print the C(px,pw) tables
+//! ```
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::baselines;
+use crate::coordinator::results;
+use crate::coordinator::sweep::{run_sweep, DEFAULT_STRENGTHS};
+use crate::data::{make_dataset, Split};
+use crate::deploy;
+use crate::energy::CostLut;
+use crate::nas::{Mode, SearchConfig, Target, Trainer};
+use crate::quant::Assignment;
+use crate::report;
+use crate::runtime::Runtime;
+
+/// Parse `--key value` and bare flags into a map.
+pub fn parse_flags(args: &[String]) -> Result<HashMap<String, String>> {
+    let mut out = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(key) = a.strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                out.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                out.insert(key.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            bail!("unexpected argument {a:?}");
+        }
+    }
+    Ok(out)
+}
+
+fn target_of(s: &str) -> Result<Target> {
+    match s {
+        "size" => Ok(Target::Size),
+        "energy" => Ok(Target::Energy),
+        other => bail!("unknown target {other} (size|energy)"),
+    }
+}
+
+fn mode_of(s: &str) -> Result<Mode> {
+    match s {
+        "cw" | "ours" => Ok(Mode::ChannelWise),
+        "lw" | "edmips" => Ok(Mode::LayerWise),
+        other => bail!("unknown mode {other} (cw|lw)"),
+    }
+}
+
+fn artifacts_dir(flags: &HashMap<String, String>) -> PathBuf {
+    PathBuf::from(
+        flags
+            .get("artifacts")
+            .cloned()
+            .unwrap_or_else(|| "artifacts".to_string()),
+    )
+}
+
+const HELP: &str = "\
+cwmix — channel-wise mixed-precision DNAS (Risso et al., IGSC 2022)
+
+USAGE: cwmix <command> [--flags]
+
+COMMANDS
+  sweep    --bench <ic|kws|vww|ad> --target <size|energy>
+           [--quick] [--strengths 0.1,1,3] [--out results] [--artifacts artifacts]
+           Regenerate one Fig.3 panel (ours vs EdMIPS vs fixed).
+  search   --bench B --mode <cw|lw> --target T --strength S [--quick]
+           One Alg.1 run; prints the result + Fig.4-style dump.
+  baseline --bench B --wbits N --xbits M [--quick]
+           One fixed-precision wNxM QAT run.
+  deploy   --bench B [--quick]
+           Short search, §III-C transform, HLO-vs-simulator verification,
+           MPIC cost breakdown.
+  simulate --bench B [--wbits N] [--xbits M]
+           MPIC cost model on an untrained fixed assignment (no training).
+  report   [--dir results]
+           Render every stored sweep as a Fig.3 panel + headline savings.
+  lut      Print the MPIC C(p_x, p_w) energy/latency tables.
+";
+
+/// Top-level dispatch.
+pub fn dispatch(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        println!("{HELP}");
+        return Ok(());
+    };
+    let flags = parse_flags(&args[1..])?;
+    match cmd.as_str() {
+        "help" | "--help" | "-h" => {
+            println!("{HELP}");
+            Ok(())
+        }
+        "lut" => cmd_lut(),
+        "sweep" => cmd_sweep(&flags),
+        "search" => cmd_search(&flags),
+        "baseline" => cmd_baseline(&flags),
+        "deploy" => cmd_deploy(&flags),
+        "simulate" => cmd_simulate(&flags),
+        "report" => cmd_report(&flags),
+        other => bail!("unknown command {other}; try `cwmix help`"),
+    }
+}
+
+fn req<'a>(flags: &'a HashMap<String, String>, key: &str) -> Result<&'a str> {
+    flags
+        .get(key)
+        .map(|s| s.as_str())
+        .ok_or_else(|| anyhow!("missing --{key}"))
+}
+
+fn cmd_lut() -> Result<()> {
+    let lut = CostLut::default();
+    println!("MPIC C(p_x, p_w) — energy pJ/MAC (rows p_x, cols p_w in 2/4/8):");
+    for &px in &[2u32, 4, 8] {
+        let row: Vec<String> = [2u32, 4, 8]
+            .iter()
+            .map(|&pw| format!("{:6.3}", lut.energy_pj(px, pw)))
+            .collect();
+        println!("  px={px}: {}", row.join(" "));
+    }
+    println!("cycles/MAC:");
+    for &px in &[2u32, 4, 8] {
+        let row: Vec<String> = [2u32, 4, 8]
+            .iter()
+            .map(|&pw| format!("{:6.4}", lut.cycles(px, pw)))
+            .collect();
+        println!("  px={px}: {}", row.join(" "));
+    }
+    Ok(())
+}
+
+fn cmd_sweep(flags: &HashMap<String, String>) -> Result<()> {
+    let bench = req(flags, "bench")?;
+    let target = target_of(req(flags, "target")?)?;
+    let quick = flags.contains_key("quick");
+    let strengths: Vec<f32> = match flags.get("strengths") {
+        Some(s) => s
+            .split(',')
+            .map(|v| v.parse::<f32>().map_err(|e| anyhow!("bad strength: {e}")))
+            .collect::<Result<Vec<_>>>()?,
+        None => DEFAULT_STRENGTHS.to_vec(),
+    };
+    let out_dir = PathBuf::from(flags.get("out").cloned().unwrap_or("results".into()));
+    let rt = Runtime::cpu(&artifacts_dir(flags))?;
+    println!("platform: {}", rt.platform());
+    let mut log = |s: &str| println!("{s}");
+    let sw = run_sweep(&rt, bench, target, &strengths, quick, &mut log)?;
+    let path = results::save_sweep(
+        &out_dir, bench, target.name(), &sw.ours, &sw.edmips, &sw.fixed)?;
+    println!("saved {}", path.display());
+    // render immediately
+    let (b, t, o, e, f) = results::load_sweep(&path)?;
+    println!("{}", report::fig3_panel(&b, target_of(&t)?, &o, &e, &f));
+    Ok(())
+}
+
+fn cmd_search(flags: &HashMap<String, String>) -> Result<()> {
+    let bench = req(flags, "bench")?;
+    let mode = mode_of(flags.get("mode").map(|s| s.as_str()).unwrap_or("cw"))?;
+    let target = target_of(req(flags, "target")?)?;
+    let strength: f32 = req(flags, "strength")?.parse()?;
+    let quick = flags.contains_key("quick");
+    let rt = Runtime::cpu(&artifacts_dir(flags))?;
+    let mk = if quick { SearchConfig::quick } else { SearchConfig::new };
+    let mut cfg = mk(bench, mode, target, 0.0);
+    let tr0 = Trainer::new(&rt, cfg.clone())?;
+    let (rs0, re0) = tr0.initial_regs()?;
+    drop(tr0);
+    cfg.lambda = strength / match target {
+        Target::Size => rs0,
+        Target::Energy => re0,
+    };
+    println!("lambda = {:.3e}", cfg.lambda);
+    let mut tr = Trainer::new(&rt, cfg)?;
+    let r = tr.run()?;
+    for h in &r.history {
+        println!(
+            "  [{}] epoch {:>2} loss {:.4} val_loss {:.4} val_score {:.4} tau {:.2}",
+            h.phase, h.epoch, h.train_loss, h.val_loss, h.val_score, h.tau
+        );
+    }
+    println!(
+        "{}: score {:.4}  size {:.3} Mbit  energy {:.2} uJ",
+        r.config_label,
+        r.test_score,
+        r.size_mb(),
+        r.energy_uj()
+    );
+    println!("{}", report::fig4_dump(&r.config_label, &r.assignment));
+    Ok(())
+}
+
+fn cmd_baseline(flags: &HashMap<String, String>) -> Result<()> {
+    let bench = req(flags, "bench")?;
+    let wbits: u32 = req(flags, "wbits")?.parse()?;
+    let xbits: u32 = req(flags, "xbits")?.parse()?;
+    let quick = flags.contains_key("quick");
+    let rt = Runtime::cpu(&artifacts_dir(flags))?;
+    let mk = if quick { SearchConfig::quick } else { SearchConfig::new };
+    let cfg = mk(bench, Mode::ChannelWise, Target::Size, 0.0);
+    let warm = baselines::shared_warmup(&rt, &cfg)?;
+    let r = baselines::run_fixed(&rt, &cfg, &warm, wbits, xbits)?;
+    println!(
+        "{}: score {:.4}  size {:.3} Mbit  energy {:.2} uJ",
+        r.config_label,
+        r.test_score,
+        r.size_mb(),
+        r.energy_uj()
+    );
+    Ok(())
+}
+
+fn cmd_deploy(flags: &HashMap<String, String>) -> Result<()> {
+    let bench = req(flags, "bench")?;
+    let rt = Runtime::cpu(&artifacts_dir(flags))?;
+    let mut cfg = SearchConfig::quick(bench, Mode::ChannelWise, Target::Energy, 0.0);
+    if !flags.contains_key("quick") {
+        cfg.warmup_epochs = 4;
+    }
+    // short warmup + a mixed assignment from a brief search
+    let tr0 = Trainer::new(&rt, cfg.clone())?;
+    let (_, re0) = tr0.initial_regs()?;
+    drop(tr0);
+    cfg.lambda = 0.3 / re0;
+    let mut tr = Trainer::new(&rt, cfg)?;
+    let r = tr.run()?;
+    println!("searched assignment:");
+    println!("{}", report::fig4_dump(&r.config_label, &r.assignment));
+
+    let ds = make_dataset(bench, Split::Test, 64, 0);
+    let rep = deploy::verify::verify_against_hlo(&tr, &r.assignment, &ds, 1)?;
+    println!(
+        "verify vs HLO infer: n={} max|d|={:.3e} mean|d|={:.3e} argmax agreement {:.1}%",
+        rep.n_samples,
+        rep.max_abs_diff,
+        rep.mean_abs_diff,
+        rep.argmax_agreement * 100.0
+    );
+
+    let deployed =
+        deploy::build(&tr.manifest, &tr.params_map(), &tr.bn_map(), &r.assignment)?;
+    let feat = tr.manifest.feat_len();
+    let (_, cost) = crate::mpic::run_batch(
+        &deployed, &ds.x[0..feat], feat, &tr.manifest.lut)?;
+    println!(
+        "MPIC: {} sub-convs, {} packed weight bytes",
+        deployed.n_subconvs(),
+        deployed.packed_bytes()
+    );
+    println!(
+        "MPIC per-inference: {:.0} cycles = {:.1} us @250MHz, {:.2} uJ total ({:.2} uJ MAC)",
+        cost.total_cycles(),
+        cost.latency_us(),
+        cost.total_energy_uj(),
+        cost.mac_energy_pj() * 1e-6
+    );
+    for lc in &cost.layers {
+        println!(
+            "   {:<10} cycles {:>10.0}  E {:>8.2} nJ  groups {:?}",
+            lc.name,
+            lc.total_cycles(),
+            lc.total_energy_pj() * 1e-3,
+            lc.macs_by_group.iter().map(|&(b, _)| b).collect::<Vec<_>>()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
+    let bench = req(flags, "bench")?;
+    let wbits: u32 = flags.get("wbits").map(|s| s.parse()).transpose()?.unwrap_or(8);
+    let xbits: u32 = flags.get("xbits").map(|s| s.parse()).transpose()?.unwrap_or(8);
+    let rt = Runtime::cpu(&artifacts_dir(flags))?;
+    let cfg = SearchConfig::quick(bench, Mode::ChannelWise, Target::Energy, 0.0);
+    let tr = Trainer::new(&rt, cfg)?;
+    let a = Assignment::fixed(
+        &tr.manifest.qnames(), &tr.manifest.qcouts(), wbits, xbits);
+    let deployed = deploy::build(&tr.manifest, &tr.params_map(), &tr.bn_map(), &a)?;
+    let ds = make_dataset(bench, Split::Test, 4, 0);
+    let feat = tr.manifest.feat_len();
+    let (_, cost) =
+        crate::mpic::run_batch(&deployed, &ds.x[0..feat], feat, &tr.manifest.lut)?;
+    println!(
+        "{bench} w{wbits}x{xbits}: {:.0} MACs, {:.1} us, {:.2} uJ, {} bytes packed",
+        cost.total_macs() as f64,
+        cost.latency_us(),
+        cost.total_energy_uj(),
+        deployed.packed_bytes()
+    );
+    Ok(())
+}
+
+fn cmd_report(flags: &HashMap<String, String>) -> Result<()> {
+    let dir = PathBuf::from(flags.get("dir").cloned().unwrap_or("results".into()));
+    let mut found = 0;
+    let entries = std::fs::read_dir(&dir)
+        .map_err(|e| anyhow!("reading {}: {e}", dir.display()))?;
+    let mut paths: Vec<PathBuf> = entries
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().map(|x| x == "json").unwrap_or(false))
+        .collect();
+    paths.sort();
+    for p in paths {
+        let (b, t, o, e, f) = results::load_sweep(&p)?;
+        println!("{}", report::fig3_panel(&b, target_of(&t)?, &o, &e, &f));
+        // Fig. 4 dump for the best 'ours' point
+        if let Some(best) = o.iter().max_by(|a, b| {
+            a.test_score.partial_cmp(&b.test_score).unwrap()
+        }) {
+            println!("{}", report::fig4_dump(&best.label, &best.assignment));
+        }
+        found += 1;
+    }
+    if found == 0 {
+        println!("no sweep results in {} — run `cwmix sweep` first", dir.display());
+    }
+    Ok(())
+}
+
+/// Shared helper for examples/benches: artifacts dir fallback.
+pub fn default_artifacts() -> &'static Path {
+    Path::new("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flag_parsing() {
+        let args: Vec<String> = ["--bench", "ic", "--quick", "--target", "size"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let f = parse_flags(&args).unwrap();
+        assert_eq!(f["bench"], "ic");
+        assert_eq!(f["quick"], "true");
+        assert_eq!(f["target"], "size");
+    }
+
+    #[test]
+    fn rejects_positional() {
+        let args = vec!["oops".to_string()];
+        assert!(parse_flags(&args).is_err());
+    }
+
+    #[test]
+    fn target_mode_parsing() {
+        assert_eq!(target_of("size").unwrap(), Target::Size);
+        assert_eq!(mode_of("edmips").unwrap(), Mode::LayerWise);
+        assert!(target_of("latency").is_err());
+    }
+}

@@ -1,0 +1,18 @@
+//! Experiment coordination: λ sweeps, Pareto fronts, result stores, CLI.
+//!
+//! One process drives a whole Fig. 3 panel: shared warmup → λ-grid of
+//! channel-wise searches → λ-grid of EdMIPS searches → fixed-precision
+//! grid → Pareto extraction → JSON result store + report.
+//!
+//! Note on parallelism: the `xla` crate's `PjRtClient` is `Rc`-backed
+//! (not `Send`), so one process = one runtime = sequential searches; the
+//! Makefile-level `bench` targets run benchmarks as separate processes
+//! for coarse parallelism.
+
+pub mod cli;
+pub mod pareto;
+pub mod results;
+pub mod sweep;
+
+pub use pareto::pareto_front;
+pub use sweep::{run_sweep, SweepOutput};

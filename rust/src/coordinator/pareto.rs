@@ -1,0 +1,125 @@
+//! Pareto-front extraction for the Fig. 3 trade-off plots.
+//!
+//! Points are `(cost, score)`; lower cost and higher score are better.
+//! The paper plots *all* searched models and highlights the front; we
+//! return the front indices so reports can do the same.
+
+/// Indices of non-dominated points (sorted by increasing cost).
+///
+/// Point i dominates j iff `cost_i <= cost_j` and `score_i >= score_j`
+/// with at least one strict inequality.
+pub fn pareto_front(points: &[(f64, f32)]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..points.len()).collect();
+    idx.sort_by(|&a, &b| {
+        points[a]
+            .0
+            .partial_cmp(&points[b].0)
+            .unwrap()
+            .then(points[b].1.partial_cmp(&points[a].1).unwrap())
+    });
+    let mut front = Vec::new();
+    let mut best_score = f32::NEG_INFINITY;
+    for &i in &idx {
+        if points[i].1 > best_score {
+            front.push(i);
+            best_score = points[i].1;
+        }
+    }
+    front
+}
+
+/// True iff point `a` dominates point `b`.
+pub fn dominates(a: (f64, f32), b: (f64, f32)) -> bool {
+    a.0 <= b.0 && a.1 >= b.1 && (a.0 < b.0 || a.1 > b.1)
+}
+
+/// Iso-accuracy cost saving of front `ours` vs front `base`: the largest
+/// relative cost reduction at (approximately) equal-or-better score —
+/// the paper's "up to X% at iso-accuracy" headline numbers.
+///
+/// For each point in `base`, find the cheapest point of `ours` whose
+/// score is >= (base score - tol); report the max relative saving.
+pub fn iso_score_saving(
+    ours: &[(f64, f32)],
+    base: &[(f64, f32)],
+    tol: f32,
+) -> Option<f64> {
+    let mut best: Option<f64> = None;
+    for &(bc, bs) in base {
+        let candidate = ours
+            .iter()
+            .filter(|&&(_, s)| s >= bs - tol)
+            .map(|&(c, _)| c)
+            .fold(f64::INFINITY, f64::min);
+        if candidate.is_finite() && candidate < bc {
+            let saving = 1.0 - candidate / bc;
+            best = Some(best.map_or(saving, |b: f64| b.max(saving)));
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn simple_front() {
+        let pts = vec![(1.0, 0.5), (2.0, 0.7), (3.0, 0.6), (4.0, 0.9)];
+        assert_eq!(pareto_front(&pts), vec![0, 1, 3]);
+    }
+
+    #[test]
+    fn duplicate_costs_keep_best_score() {
+        let pts = vec![(1.0, 0.5), (1.0, 0.8), (2.0, 0.6)];
+        let f = pareto_front(&pts);
+        assert_eq!(f, vec![1]);
+    }
+
+    #[test]
+    fn front_invariants_randomized() {
+        // property: every non-front point is dominated by some front point;
+        // no front point dominates another.
+        let mut rng = Pcg32::seeded(17);
+        for _ in 0..50 {
+            let n = 2 + rng.below(40) as usize;
+            let pts: Vec<(f64, f32)> = (0..n)
+                .map(|_| (rng.uniform() as f64, rng.uniform()))
+                .collect();
+            let front = pareto_front(&pts);
+            assert!(!front.is_empty());
+            for (k, &i) in front.iter().enumerate() {
+                for &j in front.iter().skip(k + 1) {
+                    assert!(!dominates(pts[i], pts[j]), "{i} dominates {j}");
+                    assert!(!dominates(pts[j], pts[i]), "{j} dominates {i}");
+                }
+            }
+            for j in 0..n {
+                if front.contains(&j) {
+                    continue;
+                }
+                assert!(
+                    front.iter().any(|&i| dominates(pts[i], pts[j])
+                        || (pts[i].0 == pts[j].0 && pts[i].1 == pts[j].1)),
+                    "point {j} neither on front nor dominated"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn iso_saving_basic() {
+        let ours = vec![(1.0, 0.8), (0.5, 0.6)];
+        let base = vec![(2.0, 0.8)];
+        let s = iso_score_saving(&ours, &base, 0.0).unwrap();
+        assert!((s - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn iso_saving_none_when_worse() {
+        let ours = vec![(3.0, 0.7)];
+        let base = vec![(2.0, 0.8)];
+        assert!(iso_score_saving(&ours, &base, 0.0).is_none());
+    }
+}

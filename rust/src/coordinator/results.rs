@@ -1,0 +1,182 @@
+//! JSON result store: every sweep writes one self-describing file that
+//! `cwmix report` and the bench harnesses re-read, and EXPERIMENTS.md
+//! references.  Format is stable and versioned.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::minijson::{parse_file, Json};
+use crate::nas::SearchResult;
+use crate::quant::{Assignment, LayerAssignment};
+
+pub const STORE_VERSION: f64 = 1.0;
+
+fn assignment_json(a: &Assignment) -> Json {
+    Json::Arr(
+        a.layers
+            .iter()
+            .map(|l| {
+                Json::obj(vec![
+                    ("name", Json::str(&l.name)),
+                    ("act_bits", Json::num(l.act_bits as f64)),
+                    (
+                        "weight_bits",
+                        Json::Arr(
+                            l.weight_bits
+                                .iter()
+                                .map(|&b| Json::num(b as f64))
+                                .collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect(),
+    )
+}
+
+fn assignment_from_json(j: &Json) -> Result<Assignment> {
+    let layers = j
+        .as_arr()?
+        .iter()
+        .map(|l| {
+            Ok(LayerAssignment {
+                name: l.get("name")?.as_str()?.to_string(),
+                act_bits: l.get("act_bits")?.as_usize()? as u32,
+                weight_bits: l
+                    .get("weight_bits")?
+                    .as_arr()?
+                    .iter()
+                    .map(|b| b.as_usize().map(|u| u as u32))
+                    .collect::<Result<Vec<_>>>()?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(Assignment { layers })
+}
+
+/// One search result as JSON.
+pub fn result_json(r: &SearchResult) -> Json {
+    Json::obj(vec![
+        ("label", Json::str(&r.config_label)),
+        ("test_score", Json::num(r.test_score as f64)),
+        ("test_loss", Json::num(r.test_loss as f64)),
+        ("size_bits", Json::num(r.size_bits)),
+        ("energy_pj", Json::num(r.energy_pj)),
+        ("assignment", assignment_json(&r.assignment)),
+        (
+            "history",
+            Json::Arr(
+                r.history
+                    .iter()
+                    .map(|h| {
+                        Json::obj(vec![
+                            ("phase", Json::str(h.phase)),
+                            ("epoch", Json::num(h.epoch as f64)),
+                            ("train_loss", Json::num(h.train_loss as f64)),
+                            ("val_loss", Json::num(h.val_loss as f64)),
+                            ("val_score", Json::num(h.val_score as f64)),
+                            ("tau", Json::num(h.tau as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Parsed-back view of a stored result (enough for reports/benches).
+#[derive(Clone, Debug)]
+pub struct StoredResult {
+    pub label: String,
+    pub test_score: f32,
+    pub size_bits: f64,
+    pub energy_pj: f64,
+    pub assignment: Assignment,
+}
+
+pub fn stored_from_json(j: &Json) -> Result<StoredResult> {
+    Ok(StoredResult {
+        label: j.get("label")?.as_str()?.to_string(),
+        test_score: j.get("test_score")?.as_f64()? as f32,
+        size_bits: j.get("size_bits")?.as_f64()?,
+        energy_pj: j.get("energy_pj")?.as_f64()?,
+        assignment: assignment_from_json(j.get("assignment")?)?,
+    })
+}
+
+/// Write a sweep's three series to `<dir>/<bench>_<target>.json`.
+pub fn save_sweep(
+    dir: &Path,
+    bench: &str,
+    target: &str,
+    ours: &[SearchResult],
+    edmips: &[SearchResult],
+    fixed: &[SearchResult],
+) -> Result<std::path::PathBuf> {
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(format!("{bench}_{target}.json"));
+    let doc = Json::obj(vec![
+        ("version", Json::num(STORE_VERSION)),
+        ("bench", Json::str(bench)),
+        ("target", Json::str(target)),
+        ("ours", Json::Arr(ours.iter().map(result_json).collect())),
+        ("edmips", Json::Arr(edmips.iter().map(result_json).collect())),
+        ("fixed", Json::Arr(fixed.iter().map(result_json).collect())),
+    ]);
+    std::fs::write(&path, doc.pretty())
+        .with_context(|| format!("writing {}", path.display()))?;
+    Ok(path)
+}
+
+/// Load a sweep file back.
+pub fn load_sweep(path: &Path) -> Result<(String, String, Vec<StoredResult>, Vec<StoredResult>, Vec<StoredResult>)> {
+    let j = parse_file(path)?;
+    let series = |key: &str| -> Result<Vec<StoredResult>> {
+        j.get(key)?.as_arr()?.iter().map(stored_from_json).collect()
+    };
+    Ok((
+        j.get("bench")?.as_str()?.to_string(),
+        j.get("target")?.as_str()?.to_string(),
+        series("ours")?,
+        series("edmips")?,
+        series("fixed")?,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nas::SearchResult;
+
+    fn fake_result(label: &str, score: f32) -> SearchResult {
+        SearchResult {
+            config_label: label.into(),
+            assignment: Assignment::fixed(
+                &["a".to_string()], &[2], 4, 8),
+            test_score: score,
+            test_loss: 0.5,
+            size_bits: 1000.0,
+            energy_pj: 2000.0,
+            history: vec![],
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join("cwmix_test_results");
+        let _ = std::fs::remove_dir_all(&dir);
+        let ours = vec![fake_result("o1", 0.9)];
+        let ed = vec![fake_result("e1", 0.85)];
+        let fx = vec![fake_result("w8x8", 0.88)];
+        let path = save_sweep(&dir, "ic", "size", &ours, &ed, &fx).unwrap();
+        let (bench, target, o, e, f) = load_sweep(&path).unwrap();
+        assert_eq!(bench, "ic");
+        assert_eq!(target, "size");
+        assert_eq!(o.len(), 1);
+        assert_eq!(e[0].label, "e1");
+        assert_eq!(f[0].assignment.layers[0].weight_bits, vec![4, 4]);
+        assert!((o[0].test_score - 0.9).abs() < 1e-6);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,99 @@
+//! λ-sweep driver: regenerates one Fig. 3 panel (one benchmark x one
+//! regularizer target) end to end.
+
+use anyhow::Result;
+
+use crate::baselines;
+use crate::nas::{Mode, SearchConfig, SearchResult, Target};
+use crate::runtime::Runtime;
+
+/// Relative λ grid: λ = strength / reg0 where reg0 is the 8-bit model's
+/// regularizer value, so one grid works across benchmarks and targets
+/// (the paper tunes λ per run; this is the reproducible equivalent).
+pub const DEFAULT_STRENGTHS: [f32; 5] = [0.02, 0.08, 0.3, 1.0, 3.0];
+
+/// Everything a Fig. 3 panel needs.
+pub struct SweepOutput {
+    pub bench: String,
+    pub target: Target,
+    pub ours: Vec<SearchResult>,
+    pub edmips: Vec<SearchResult>,
+    pub fixed: Vec<SearchResult>,
+}
+
+impl SweepOutput {
+    /// (cost, score) series for Pareto analysis; cost = Mbit or µJ.
+    pub fn points(results: &[SearchResult], target: Target) -> Vec<(f64, f32)> {
+        results
+            .iter()
+            .map(|r| {
+                let cost = match target {
+                    Target::Size => r.size_mb(),
+                    Target::Energy => r.energy_uj(),
+                };
+                (cost, r.test_score)
+            })
+            .collect()
+    }
+}
+
+/// Run the full three-series sweep for one (bench, target) panel.
+///
+/// `strengths` are relative λ values (see [`DEFAULT_STRENGTHS`]);
+/// `quick` shrinks every budget for smoke runs.
+pub fn run_sweep(
+    rt: &Runtime,
+    bench: &str,
+    target: Target,
+    strengths: &[f32],
+    quick: bool,
+    log: &mut dyn FnMut(&str),
+) -> Result<SweepOutput> {
+    let mk = |mode: Mode, lambda: f32| {
+        if quick {
+            SearchConfig::quick(bench, mode, target, lambda)
+        } else {
+            SearchConfig::new(bench, mode, target, lambda)
+        }
+    };
+
+    // shared warmup (Alg. 1: warmup once, reuse for every search)
+    let base_cfg = mk(Mode::ChannelWise, 0.0);
+    log(&format!("[{bench}/{}] warmup ({} epochs)", target.name(),
+                 base_cfg.warmup_epochs));
+    let warm = baselines::shared_warmup(rt, &base_cfg)?;
+
+    // λ normalisation from the 8-bit regularizer magnitudes
+    let tr = crate::nas::Trainer::new(rt, base_cfg.clone())?;
+    let (reg_s0, reg_e0) = tr.initial_regs()?;
+    let reg0 = match target {
+        Target::Size => reg_s0,
+        Target::Energy => reg_e0,
+    };
+    drop(tr);
+
+    let mut ours = Vec::new();
+    let mut edmips = Vec::new();
+    for &s in strengths {
+        let lambda = s / reg0;
+        log(&format!("[{bench}/{}] ours: lambda = {s} / reg0 = {lambda:.3e}",
+                     target.name()));
+        ours.push(baselines::run_ours(rt, &mk(Mode::ChannelWise, lambda), &warm)?);
+        log(&format!("[{bench}/{}] edmips: lambda = {lambda:.3e}", target.name()));
+        edmips.push(baselines::run_edmips(rt, &mk(Mode::LayerWise, lambda), &warm)?);
+    }
+
+    let mut fixed = Vec::new();
+    for (wb, xb) in baselines::fig3_fixed_combos(bench, target, quick) {
+        log(&format!("[{bench}/{}] fixed w{wb}x{xb}", target.name()));
+        fixed.push(baselines::run_fixed(rt, &base_cfg, &warm, wb, xb)?);
+    }
+
+    Ok(SweepOutput {
+        bench: bench.to_string(),
+        target,
+        ours,
+        edmips,
+        fixed,
+    })
+}

@@ -1,0 +1,393 @@
+//! The four seeded synthetic dataset generators.
+//!
+//! Shared construction: every class owns a smooth deterministic *template*
+//! in the benchmark's native tensor geometry; samples are
+//! `template[class] + noise` with per-benchmark structured variation.
+//! Smoothness comes from summing a few random low-frequency sinusoids, so
+//! the class signal survives 8-bit quantization but starts eroding at 2
+//! bits — giving the precision/accuracy trade-off the NAS explores.
+//!
+//! | bench | geometry   | classes | variation                         |
+//! |-------|------------|---------|-----------------------------------|
+//! | ic    | 32x32x3    | 10      | additive noise + global gain      |
+//! | kws   | 49x10x1    | 12      | time jitter of spectral ridges    |
+//! | vww   | 48x48x3    | 2       | object blob present / absent      |
+//! | ad    | 256 (flat) | normal  | low-rank manifold; anomalies off-manifold |
+//!
+//! Train/val/test use disjoint RNG streams of one seed, so every
+//! experiment in EXPERIMENTS.md is exactly reproducible.
+
+use crate::util::Pcg32;
+
+/// Which split to generate (disjoint RNG streams; same templates).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Val,
+    Test,
+}
+
+impl Split {
+    fn stream(self) -> u64 {
+        match self {
+            Split::Train => 101,
+            Split::Val => 202,
+            Split::Test => 303,
+        }
+    }
+}
+
+/// An in-memory dataset: `n` samples of `feat` geometry.
+pub struct Dataset {
+    pub name: String,
+    pub feat: Vec<usize>,
+    pub n: usize,
+    /// row-major `n * prod(feat)`
+    pub x: Vec<f32>,
+    /// class labels; for AD: 0 = normal, 1 = anomaly (train is all 0)
+    pub y: Vec<i32>,
+    pub n_classes: usize,
+}
+
+impl Dataset {
+    pub fn feat_len(&self) -> usize {
+        self.feat.iter().product()
+    }
+}
+
+/// Build `n` samples of the given benchmark/split.
+///
+/// Templates depend only on `seed`, never on the split, so train and test
+/// measure generalisation over the noise/variation process.
+pub fn make_dataset(bench: &str, split: Split, n: usize, seed: u64) -> Dataset {
+    match bench {
+        "ic" => gen_ic(split, n, seed),
+        "kws" => gen_kws(split, n, seed),
+        "vww" => gen_vww(split, n, seed),
+        "ad" => gen_ad(split, n, seed),
+        other => panic!("unknown benchmark {other}"),
+    }
+}
+
+/// Smooth 2D field: sum of `k` random sinusoids, normalised to [0, amp].
+fn smooth_field(h: usize, w: usize, k: usize, amp: f32, rng: &mut Pcg32) -> Vec<f32> {
+    let mut field = vec![0.0f32; h * w];
+    for _ in 0..k {
+        let fx = rng.uniform_in(0.5, 3.0);
+        let fy = rng.uniform_in(0.5, 3.0);
+        let px = rng.uniform_in(0.0, std::f32::consts::TAU);
+        let py = rng.uniform_in(0.0, std::f32::consts::TAU);
+        let a = rng.uniform_in(0.5, 1.0);
+        for i in 0..h {
+            for j in 0..w {
+                let u = i as f32 / h as f32 * std::f32::consts::TAU;
+                let v = j as f32 / w as f32 * std::f32::consts::TAU;
+                field[i * w + j] += a * ((fx * u + px).sin() * (fy * v + py).cos());
+            }
+        }
+    }
+    // normalise to [0, amp]
+    let lo = field.iter().cloned().fold(f32::INFINITY, f32::min);
+    let hi = field.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let range = (hi - lo).max(1e-6);
+    for v in &mut field {
+        *v = (*v - lo) / range * amp;
+    }
+    field
+}
+
+// ---------------------------------------------------------------------------
+// IC — CIFAR-10-shaped: 32x32x3, 10 classes.
+// ---------------------------------------------------------------------------
+
+fn gen_ic(split: Split, n: usize, seed: u64) -> Dataset {
+    let (h, w, c, ncls) = (32usize, 32usize, 3usize, 10usize);
+    let mut trng = Pcg32::new(seed, 7); // template stream (split-independent)
+    // Difficulty model: a strong *shared* base image carries most of the
+    // dynamic range; classes differ only by small smooth deltas.  Coarse
+    // quantization preserves the common mode but erases the deltas, so
+    // accuracy genuinely degrades with precision (the Fig. 3 axis).
+    let base: Vec<Vec<f32>> =
+        (0..c).map(|_| smooth_field(h, w, 4, 2.0, &mut trng)).collect();
+    let mut templates = Vec::with_capacity(ncls);
+    for _ in 0..ncls {
+        let mut hwc = vec![0.0f32; h * w * c];
+        for ch in 0..c {
+            let delta = smooth_field(h, w, 5, 0.55, &mut trng);
+            for p in 0..h * w {
+                hwc[p * c + ch] = base[ch][p] + delta[p];
+            }
+        }
+        templates.push(hwc);
+    }
+    let mut rng = Pcg32::new(seed, split.stream());
+    let feat = h * w * c;
+    let mut x = Vec::with_capacity(n * feat);
+    let mut y = Vec::with_capacity(n);
+    for _ in 0..n {
+        let cls = rng.below(ncls as u32) as usize;
+        let gain = rng.uniform_in(0.9, 1.1);
+        // smooth per-sample nuisance (illumination-like), shared across
+        // channels: a structured confuser that does not average out
+        let nuisance = smooth_field(h, w, 3, rng.uniform_in(0.2, 0.9), &mut rng);
+        for (i, &t) in templates[cls].iter().enumerate() {
+            let v = t * gain + nuisance[i / c] + rng.normal_ms(0.0, 0.45);
+            x.push(v.max(0.0));
+        }
+        y.push(cls as i32);
+    }
+    Dataset { name: "ic".into(), feat: vec![h, w, c], n, x, y, n_classes: ncls }
+}
+
+// ---------------------------------------------------------------------------
+// KWS — Speech-Commands-shaped MFCC grid: 49x10x1, 12 classes.
+// ---------------------------------------------------------------------------
+
+fn gen_kws(split: Split, n: usize, seed: u64) -> Dataset {
+    let (t_len, f_len, ncls) = (49usize, 10usize, 12usize);
+    let mut trng = Pcg32::new(seed, 7);
+    // each class: 2-3 spectral ridges with characteristic (freq, slope)
+    struct Ridge {
+        f0: f32,
+        slope: f32,
+        amp: f32,
+        width: f32,
+    }
+    // Shared loud "speech-like" background ridges (common mode) + small
+    // class-specific ridges: coarse quantization keeps the background but
+    // blurs the class signal (same difficulty model as IC).
+    let mut shared = Vec::new();
+    for _ in 0..3 {
+        shared.push(Ridge {
+            f0: trng.uniform_in(0.5, f_len as f32 - 1.5),
+            slope: trng.uniform_in(-0.04, 0.04),
+            amp: trng.uniform_in(1.4, 2.0),
+            width: trng.uniform_in(1.0, 2.0),
+        });
+    }
+    let mut class_ridges = Vec::with_capacity(ncls);
+    for _ in 0..ncls {
+        let k = 2 + trng.below(2) as usize;
+        let mut ridges = Vec::with_capacity(k);
+        for _ in 0..k {
+            ridges.push(Ridge {
+                f0: trng.uniform_in(0.5, f_len as f32 - 1.5),
+                slope: trng.uniform_in(-0.06, 0.06),
+                amp: trng.uniform_in(0.35, 0.7),
+                width: trng.uniform_in(0.6, 1.4),
+            });
+        }
+        class_ridges.push(ridges);
+    }
+    let mut rng = Pcg32::new(seed, split.stream());
+    let feat = t_len * f_len;
+    let mut x = Vec::with_capacity(n * feat);
+    let mut y = Vec::with_capacity(n);
+    for _ in 0..n {
+        let cls = rng.below(ncls as u32) as usize;
+        let jitter = rng.uniform_in(-5.0, 5.0); // time shift
+        let gain = rng.uniform_in(0.85, 1.15);
+        for ti in 0..t_len {
+            for fi in 0..f_len {
+                let mut v = 0.0f32;
+                for r in shared.iter().chain(&class_ridges[cls]) {
+                    let center = r.f0 + r.slope * (ti as f32 + jitter);
+                    let d = fi as f32 - center;
+                    v += r.amp * (-d * d / (2.0 * r.width * r.width)).exp();
+                }
+                v = v * gain + rng.normal_ms(0.0, 0.5);
+                x.push(v.max(0.0));
+            }
+        }
+        y.push(cls as i32);
+    }
+    Dataset { name: "kws".into(), feat: vec![t_len, f_len, 1], n, x, y, n_classes: ncls }
+}
+
+// ---------------------------------------------------------------------------
+// VWW — person-presence-shaped: 48x48x3, binary.
+// ---------------------------------------------------------------------------
+
+fn gen_vww(split: Split, n: usize, seed: u64) -> Dataset {
+    let (h, w, c) = (48usize, 48usize, 3usize);
+    let mut trng = Pcg32::new(seed, 7);
+    // a fixed "object" appearance shared by all positives (coloured blob
+    // with internal structure), composited onto varied backgrounds.
+    let obj_size = 16usize;
+    let mut obj = Vec::with_capacity(obj_size * obj_size * c);
+    for _ in 0..c {
+        obj.extend(smooth_field(obj_size, obj_size, 3, 2.2, &mut trng));
+    }
+    let mut rng = Pcg32::new(seed, split.stream());
+    let feat = h * w * c;
+    let mut x = Vec::with_capacity(n * feat);
+    let mut y = Vec::with_capacity(n);
+    for _ in 0..n {
+        let cls = rng.below(2) as usize;
+        // varied smooth background
+        let mut img = vec![0.0f32; feat];
+        let bg_level = rng.uniform_in(0.3, 1.0);
+        for v in img.iter_mut() {
+            *v = bg_level + rng.normal_ms(0.0, 0.35);
+        }
+        if cls == 1 {
+            // composite object at random position with random gain
+            let oy = rng.below((h - obj_size) as u32) as usize;
+            let ox = rng.below((w - obj_size) as u32) as usize;
+            let g = rng.uniform_in(0.8, 1.3);
+            for i in 0..obj_size {
+                for j in 0..obj_size {
+                    for ch in 0..c {
+                        let dst = ((oy + i) * w + (ox + j)) * c + ch;
+                        let src = ch * obj_size * obj_size + i * obj_size + j;
+                        img[dst] += g * obj[src];
+                    }
+                }
+            }
+        }
+        for v in img {
+            x.push(v.max(0.0));
+        }
+        y.push(cls as i32);
+    }
+    Dataset { name: "vww".into(), feat: vec![h, w, c], n, x, y, n_classes: 2 }
+}
+
+// ---------------------------------------------------------------------------
+// AD — ToyCar-shaped: 256-dim frames, low-rank normal manifold.
+// ---------------------------------------------------------------------------
+
+fn gen_ad(split: Split, n: usize, seed: u64) -> Dataset {
+    let (d, latent) = (256usize, 8usize);
+    let mut trng = Pcg32::new(seed, 7);
+    // fixed decoder map latent -> observation (the "machine sound" manifold)
+    let mut map = Vec::with_capacity(d * latent);
+    for _ in 0..d * latent {
+        map.push(trng.normal_ms(0.0, 1.0 / (latent as f32).sqrt()));
+    }
+    let mut bias = Vec::with_capacity(d);
+    for _ in 0..d {
+        bias.push(trng.uniform_in(0.8, 1.6));
+    }
+    let mut rng = Pcg32::new(seed, split.stream());
+    let mut x = Vec::with_capacity(n * d);
+    let mut y = Vec::with_capacity(n);
+    // test mixes anomalies in; train/val are normal-only (DCASE protocol)
+    let anomaly_rate = if split == Split::Test { 0.5 } else { 0.0 };
+    for _ in 0..n {
+        let is_anom = rng.uniform() < anomaly_rate;
+        let mut z = [0.0f32; 16];
+        for zi in z.iter_mut().take(latent) {
+            *zi = rng.normal();
+        }
+        for i in 0..d {
+            let mut v = bias[i];
+            for (j, zj) in z.iter().enumerate().take(latent) {
+                v += map[i * latent + j] * zj;
+            }
+            v += rng.normal_ms(0.0, 0.08);
+            if is_anom {
+                // off-manifold excursions: sparse spectral spikes
+                if rng.uniform() < 0.12 {
+                    v += rng.normal_ms(0.0, 0.9).abs();
+                }
+            }
+            x.push(v.max(0.0));
+        }
+        y.push(is_anom as i32);
+    }
+    Dataset { name: "ad".into(), feat: vec![d], n, x, y, n_classes: 0 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = make_dataset("ic", Split::Train, 16, 5);
+        let b = make_dataset("ic", Split::Train, 16, 5);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+    }
+
+    #[test]
+    fn splits_differ_but_templates_shared() {
+        let tr = make_dataset("kws", Split::Train, 32, 5);
+        let te = make_dataset("kws", Split::Test, 32, 5);
+        assert_ne!(tr.x, te.x);
+    }
+
+    #[test]
+    fn geometry_matches_models() {
+        assert_eq!(make_dataset("ic", Split::Train, 4, 0).feat, vec![32, 32, 3]);
+        assert_eq!(make_dataset("kws", Split::Train, 4, 0).feat, vec![49, 10, 1]);
+        assert_eq!(make_dataset("vww", Split::Train, 4, 0).feat, vec![48, 48, 3]);
+        assert_eq!(make_dataset("ad", Split::Train, 4, 0).feat, vec![256]);
+    }
+
+    #[test]
+    fn inputs_nonnegative() {
+        for bench in ["ic", "kws", "vww", "ad"] {
+            let ds = make_dataset(bench, Split::Train, 8, 1);
+            assert!(ds.x.iter().all(|&v| v >= 0.0), "{bench} has negatives");
+        }
+    }
+
+    #[test]
+    fn labels_in_range() {
+        let ds = make_dataset("ic", Split::Train, 128, 2);
+        assert!(ds.y.iter().all(|&y| (0..10).contains(&y)));
+        let all_classes: std::collections::HashSet<i32> =
+            ds.y.iter().cloned().collect();
+        assert!(all_classes.len() >= 8, "class coverage too thin");
+    }
+
+    #[test]
+    fn ad_train_has_no_anomalies_test_does() {
+        let tr = make_dataset("ad", Split::Train, 64, 3);
+        assert!(tr.y.iter().all(|&y| y == 0));
+        let te = make_dataset("ad", Split::Test, 200, 3);
+        let n_anom: i32 = te.y.iter().sum();
+        assert!(n_anom > 50 && n_anom < 150, "anomaly rate off: {n_anom}/200");
+    }
+
+    #[test]
+    fn class_signal_present() {
+        // nearest-template classification on clean means should beat chance
+        let ds = make_dataset("ic", Split::Train, 400, 9);
+        let feat = ds.feat_len();
+        // compute per-class means
+        let mut means = vec![vec![0.0f32; feat]; 10];
+        let mut counts = [0usize; 10];
+        for i in 0..ds.n {
+            let c = ds.y[i] as usize;
+            counts[c] += 1;
+            for j in 0..feat {
+                means[c][j] += ds.x[i * feat + j];
+            }
+        }
+        for c in 0..10 {
+            for v in &mut means[c] {
+                *v /= counts[c].max(1) as f32;
+            }
+        }
+        let test = make_dataset("ic", Split::Test, 200, 9);
+        let mut correct = 0;
+        for i in 0..test.n {
+            let xi = &test.x[i * feat..(i + 1) * feat];
+            let mut best = (f32::INFINITY, 0);
+            for (c, m) in means.iter().enumerate() {
+                let d: f32 = xi.iter().zip(m).map(|(a, b)| (a - b) * (a - b)).sum();
+                if d < best.0 {
+                    best = (d, c);
+                }
+            }
+            if best.1 as i32 == test.y[i] {
+                correct += 1;
+            }
+        }
+        let acc = correct as f32 / test.n as f32;
+        assert!(acc > 0.5, "nearest-mean acc {acc} too low — task unlearnable");
+    }
+}

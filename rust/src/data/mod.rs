@@ -1,0 +1,124 @@
+//! Synthetic MLPerf-Tiny-shaped datasets (DESIGN.md §2 substitution).
+//!
+//! The paper evaluates on CIFAR-10, Speech Commands v2, MSCOCO-VWW and
+//! DCASE2020 ToyCar — none of which are available offline.  The DNAS only
+//! consumes a dataset through (batches, task loss, accuracy/AUC), so each
+//! generator below produces a seeded, class-conditional synthetic task
+//! with the same tensor geometry and a calibrated difficulty: accuracy
+//! saturates below 100% and degrades monotonically as precision drops,
+//! which is exactly the property the Fig. 3 Pareto fronts measure.
+//!
+//! All inputs are generated non-negative (roughly `[0, 2.5]`) because the
+//! first layer's PACT quantizer is unsigned — mirroring the standard
+//! uint8-image / normalized-MFCC deployments the paper targets.
+
+pub mod gen;
+
+pub use gen::{make_dataset, Dataset, Split};
+
+use crate::util::Pcg32;
+
+/// A batch ready for the runtime: flattened inputs + labels.
+pub struct Batch {
+    /// `batch * prod(feat_shape)` f32 row-major.
+    pub x: Vec<f32>,
+    /// Classification labels (empty for AD, where y == x).
+    pub y: Vec<i32>,
+}
+
+/// Iterates a split in shuffled fixed-size batches (drops the remainder,
+/// like the reference MLPerf Tiny training loops).
+pub struct BatchIter<'a> {
+    ds: &'a Dataset,
+    idx: Vec<usize>,
+    pos: usize,
+    batch: usize,
+}
+
+impl<'a> BatchIter<'a> {
+    pub fn new(ds: &'a Dataset, batch: usize, rng: &mut Pcg32) -> Self {
+        let mut idx: Vec<usize> = (0..ds.n).collect();
+        rng.shuffle(&mut idx);
+        BatchIter { ds, idx, pos: 0, batch }
+    }
+
+    /// Sequential (unshuffled) iteration — evaluation order.
+    pub fn sequential(ds: &'a Dataset, batch: usize) -> Self {
+        let idx: Vec<usize> = (0..ds.n).collect();
+        BatchIter { ds, idx, pos: 0, batch }
+    }
+
+    pub fn n_batches(&self) -> usize {
+        self.ds.n / self.batch
+    }
+
+    /// Restrict to the first `frac` of the (already shuffled) epoch — the
+    /// Alg. 1 20%/80% theta/W sample split.
+    pub fn take_front(mut self, frac: f32) -> Self {
+        let keep = ((self.idx.len() as f32 * frac) as usize).max(self.batch);
+        self.idx.truncate(keep.min(self.idx.len()));
+        self
+    }
+
+    /// Drop the first `frac` of the epoch (complement of `take_front`).
+    pub fn drop_front(mut self, frac: f32) -> Self {
+        let skip = (self.idx.len() as f32 * frac) as usize;
+        self.idx.drain(..skip.min(self.idx.len()));
+        self
+    }
+}
+
+impl<'a> Iterator for BatchIter<'a> {
+    type Item = Batch;
+
+    fn next(&mut self) -> Option<Batch> {
+        if self.pos + self.batch > self.idx.len() {
+            return None;
+        }
+        let feat = self.ds.feat_len();
+        let mut x = Vec::with_capacity(self.batch * feat);
+        let mut y = Vec::with_capacity(self.batch);
+        for &i in &self.idx[self.pos..self.pos + self.batch] {
+            x.extend_from_slice(&self.ds.x[i * feat..(i + 1) * feat]);
+            y.push(self.ds.y[i]);
+        }
+        self.pos += self.batch;
+        Some(Batch { x, y })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batches_cover_epoch() {
+        let ds = make_dataset("ic", Split::Train, 256, 0);
+        let mut rng = Pcg32::seeded(1);
+        let it = BatchIter::new(&ds, 32, &mut rng);
+        assert_eq!(it.n_batches(), 8);
+        let n: usize = it.map(|b| b.y.len()).sum();
+        assert_eq!(n, 256);
+    }
+
+    #[test]
+    fn split_20_80_partitions() {
+        let ds = make_dataset("kws", Split::Train, 320, 0);
+        let mut rng = Pcg32::seeded(2);
+        let front = BatchIter::new(&ds, 32, &mut rng).take_front(0.2);
+        let n_front: usize = front.map(|b| b.y.len()).sum();
+        let mut rng = Pcg32::seeded(2);
+        let back = BatchIter::new(&ds, 32, &mut rng).drop_front(0.2);
+        let n_back: usize = back.map(|b| b.y.len()).sum();
+        assert_eq!(n_front, 64);
+        assert_eq!(n_back, 256);
+    }
+
+    #[test]
+    fn batch_shapes() {
+        let ds = make_dataset("ad", Split::Train, 64, 0);
+        let mut rng = Pcg32::seeded(3);
+        let b = BatchIter::new(&ds, 32, &mut rng).next().unwrap();
+        assert_eq!(b.x.len(), 32 * 256);
+    }
+}

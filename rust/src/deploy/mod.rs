@@ -1,0 +1,544 @@
+//! §III-C deployment transform: filter reordering + sub-convolution split.
+//!
+//! The DNAS emits arbitrary per-channel bit-widths (Fig. 2 top-left).  To
+//! run on single-precision mixed kernels (MPIC / CMix-NN style), each
+//! layer's filters are **reordered** so equal-precision filters are
+//! contiguous, the layer is **split** into ≤ |P_W| single-precision
+//! sub-convolutions, and every *consumer* of the layer's output gets its
+//! weights **permuted along C_in** so each weight still multiplies the
+//! right activation (Fig. 2 bottom).  All offline, zero runtime cost
+//! beyond scheduling the sub-layers.
+//!
+//! Two constraints the paper leaves implicit, handled here explicitly:
+//!
+//! * **Residual adds** tie channel identities of several producers
+//!   together — all tensors joined by elementwise adds form one *channel
+//!   space* (union-find below) and must share a single permutation.  The
+//!   permutation sorts channels by the tuple of the space's producers'
+//!   bit-widths, so *every* producer still sees its own channels grouped
+//!   into contiguous runs (at most |P_W|^k runs for k producers — 9 for a
+//!   2-producer residual join, each still a valid single-precision
+//!   sub-convolution).
+//! * **Depthwise convolutions** preserve channel identity, so a dwconv's
+//!   output lives in the *same* space as its input and its own per-channel
+//!   bits simply join that space's sort key.
+//!
+//! The network *output* space is reordered like every other space (not
+//! doing so fragments the last layer into up to C_out sub-convolutions);
+//! the resulting output permutation is recorded in
+//! [`DeployedModel::output_perm`] and undone when results are read — a
+//! free relabeling of logits / reconstruction indices on device.
+//!
+//! BN folding: `y = (acc * s_w[c] * eps_x - mean) * g / sqrt(var+eps) + b`
+//! collapses into `y = acc * A[c] + B[c]`, precomputed here so the MPIC
+//! simulator's per-channel epilogue is two flops.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::models::{LayerSpec, Manifest};
+use crate::quant::{quantize_weights_perchannel, Assignment};
+use crate::tensor::Tensor;
+
+pub mod verify;
+
+const BN_EPS: f32 = 1e-3;
+
+/// A contiguous single-precision run of output channels (one sub-conv).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SubConv {
+    pub bits: u32,
+    pub start: usize,
+    pub len: usize,
+}
+
+/// A deployable quantized layer, fully folded and permuted.
+#[derive(Clone, Debug)]
+pub struct DeployedLayer {
+    pub spec: LayerSpec,
+    /// input activation quantization (this layer's PACT)
+    pub act_bits: u32,
+    pub alpha: f32,
+    /// integer weights, (cout x K) row-major, permuted rows *and* columns
+    pub qweights: Vec<i32>,
+    /// per permuted output channel
+    pub w_scale: Vec<f32>,
+    pub weight_bits: Vec<u32>,
+    /// folded epilogue: y[c] = acc[c] * a_fold[c] + b_fold[c]
+    pub a_fold: Vec<f32>,
+    pub b_fold: Vec<f32>,
+    /// contiguous single-precision runs covering all channels
+    pub groups: Vec<SubConv>,
+}
+
+impl DeployedLayer {
+    /// K = weights per output channel.
+    pub fn k(&self) -> usize {
+        self.spec.weights_per_channel
+    }
+
+    /// Packed flash footprint of this layer's weights, in bytes.
+    pub fn packed_bytes(&self) -> usize {
+        crate::quant::packed_weight_bytes(
+            self.spec.cout, self.k(), &self.weight_bits)
+    }
+}
+
+/// A node of the deployed graph (quantized layer or structural op).
+#[derive(Clone, Debug)]
+pub struct DeployedNode {
+    pub spec: LayerSpec,
+    pub layer: Option<DeployedLayer>,
+}
+
+/// The §III-C output: a reordered, split, BN-folded network.
+#[derive(Clone, Debug)]
+pub struct DeployedModel {
+    pub bench: String,
+    pub loss: String,
+    pub n_classes: usize,
+    pub input_shape: Vec<usize>,
+    pub nodes: Vec<DeployedNode>,
+    /// permutation applied to each named space (diagnostics/tests)
+    pub space_perms: HashMap<String, Vec<usize>>,
+    /// output-channel permutation: executed output index `i` holds the
+    /// natural channel `output_perm[i]` (the executor un-permutes final
+    /// results; on-device this is a free label remap of the logits)
+    pub output_perm: Vec<usize>,
+}
+
+impl DeployedModel {
+    pub fn qlayers(&self) -> impl Iterator<Item = &DeployedLayer> {
+        self.nodes.iter().filter_map(|n| n.layer.as_ref())
+    }
+
+    /// Total packed weight bytes (the Fig. 3 memory axis).
+    pub fn packed_bytes(&self) -> usize {
+        self.qlayers().map(|l| l.packed_bytes()).sum()
+    }
+
+    /// Total sub-convolution count (scheduling overhead indicator).
+    pub fn n_subconvs(&self) -> usize {
+        self.qlayers().map(|l| l.groups.len()).sum()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Union-find over channel spaces.
+// ---------------------------------------------------------------------------
+
+struct UnionFind {
+    parent: Vec<usize>,
+}
+
+impl UnionFind {
+    fn new(n: usize) -> Self {
+        UnionFind { parent: (0..n).collect() }
+    }
+
+    fn find(&mut self, x: usize) -> usize {
+        if self.parent[x] != x {
+            let r = self.find(self.parent[x]);
+            self.parent[x] = r;
+            r
+        } else {
+            x
+        }
+    }
+
+    fn union(&mut self, a: usize, b: usize) {
+        let (ra, rb) = (self.find(a), self.find(b));
+        if ra != rb {
+            self.parent[rb] = ra;
+        }
+    }
+}
+
+/// Channel-space analysis result.
+struct Spaces {
+    /// space root id for each layer index's *output* tensor
+    out_space: Vec<usize>,
+    /// space root id for each layer index's *input* tensor
+    in_space: Vec<usize>,
+    /// channels per space root
+    width: HashMap<usize, usize>,
+}
+
+/// Walk the graph, assigning tensor spaces and uniting over adds/dwconvs.
+fn analyze_spaces(layers: &[LayerSpec]) -> Result<Spaces> {
+    let n = layers.len();
+    let mut uf = UnionFind::new(n + 1); // node i's output = space i; n = input image
+    let input_space = n;
+    let mut cur = input_space;
+    let mut cur_width = 0usize; // input channels resolved per layer below
+    let mut tags: HashMap<String, (usize, usize)> = HashMap::new();
+    let mut out_space = vec![0usize; n];
+    let mut in_space = vec![0usize; n];
+    let width: HashMap<usize, usize> = HashMap::new();
+
+    for (i, l) in layers.iter().enumerate() {
+        if let Some(tag) = &l.input_from {
+            let &(s, w) = tags
+                .get(tag)
+                .ok_or_else(|| anyhow!("unknown tag {tag}"))?;
+            cur = s;
+            cur_width = w;
+        }
+        if i == 0 || (cur == input_space && cur_width == 0) {
+            cur_width = l.cin.max(cur_width);
+        }
+        in_space[i] = cur;
+        match l.kind.as_str() {
+            "conv" | "fc" => {
+                cur = i;
+                cur_width = l.cout;
+            }
+            "dwconv" => {
+                // channel identity preserved: output shares the input space
+                uf.union(cur, i);
+                cur = i;
+                cur_width = l.cout;
+            }
+            "avgpool" | "flatten" | "tap" => {
+                // channel space passes through (flatten keeps C innermost)
+            }
+            "add" => {
+                let tag = l.add_from.as_ref().ok_or_else(|| anyhow!("add without tag"))?;
+                let &(s, w) = tags.get(tag).ok_or_else(|| anyhow!("unknown tag {tag}"))?;
+                if w != cur_width {
+                    bail!("add width mismatch {w} vs {cur_width}");
+                }
+                uf.union(cur, s);
+            }
+            other => bail!("unknown kind {other}"),
+        }
+        // residual epilogue carried *on* a quant layer (conv+add fusion):
+        // its output joins the saved tensor's channel space.
+        if l.is_quant() {
+            if let Some(tag) = &l.add_from {
+                let &(s, w) = tags.get(tag).ok_or_else(|| anyhow!("unknown tag {tag}"))?;
+                if w != cur_width {
+                    bail!("residual width mismatch {w} vs {cur_width} at {}", l.name);
+                }
+                uf.union(cur, s);
+            }
+        }
+        out_space[i] = cur;
+        if let Some(tag) = &l.save_as {
+            tags.insert(tag.clone(), (cur, cur_width));
+        }
+    }
+
+    // resolve roots
+    let mut spaces = Spaces {
+        out_space: vec![0; n],
+        in_space: vec![0; n],
+        width,
+    };
+    for i in 0..n {
+        spaces.out_space[i] = uf.find(out_space[i]);
+        spaces.in_space[i] = uf.find(in_space[i]);
+    }
+    // widths: quant layer outputs define their space width
+    for (i, l) in layers.iter().enumerate() {
+        if l.is_quant() {
+            spaces.width.insert(spaces.out_space[i], l.cout);
+        }
+    }
+    let input_root = uf.find(input_space);
+    spaces.width.entry(input_root).or_insert_with(|| {
+        layers
+            .iter()
+            .find(|l| l.is_quant())
+            .map(|l| l.cin)
+            .unwrap_or(0)
+    });
+    Ok(spaces)
+}
+
+// ---------------------------------------------------------------------------
+// Build.
+// ---------------------------------------------------------------------------
+
+/// Build the deployed model from trained parameters and an assignment.
+///
+/// `params` / `bn_state` map manifest tensor names (`<layer>.w`, ...) to
+/// trained values; `assign.layers` follows qidx order.
+pub fn build(
+    manifest: &Manifest,
+    params: &HashMap<String, Tensor>,
+    bn_state: &HashMap<String, Tensor>,
+    assign: &Assignment,
+) -> Result<DeployedModel> {
+    let layers = &manifest.layers;
+    let spaces = analyze_spaces(layers)?;
+    let qlayers = manifest.qlayers();
+    if qlayers.len() != assign.layers.len() {
+        bail!("assignment has {} layers, model has {}",
+              assign.layers.len(), qlayers.len());
+    }
+    let by_name: HashMap<&str, usize> = qlayers
+        .iter()
+        .enumerate()
+        .map(|(qi, l)| (l.name.as_str(), qi))
+        .collect();
+
+    // ---- 1. permutation per space -----------------------------------------
+    // producers of a space = quant layers whose output lands in it
+    let mut producers: HashMap<usize, Vec<usize>> = HashMap::new(); // space -> layer idx
+    for (i, l) in layers.iter().enumerate() {
+        if l.is_quant() {
+            producers.entry(spaces.out_space[i]).or_default().push(i);
+        }
+    }
+    // The output space IS reordered too (§Perf: pinning it to identity
+    // fragments the final layer into up to C_out sub-convs); the executor
+    // un-permutes the final buffer, which on-device is a free relabeling.
+    let last_q = layers
+        .iter()
+        .enumerate()
+        .rev()
+        .find(|(_, l)| l.is_quant())
+        .map(|(i, _)| spaces.out_space[i])
+        .ok_or_else(|| anyhow!("no quant layers"))?;
+
+    let mut space_perm: HashMap<usize, Vec<usize>> = HashMap::new();
+    for (&space, prods) in &producers {
+        let width = *spaces
+            .width
+            .get(&space)
+            .ok_or_else(|| anyhow!("unknown space width"))?;
+        // sort key: bits per producer (name-sorted for determinism), then idx
+        let mut prods_sorted = prods.clone();
+        prods_sorted.sort_by_key(|&i| layers[i].name.clone());
+        let mut perm: Vec<usize> = (0..width).collect();
+        perm.sort_by_key(|&c| {
+            let mut key: Vec<u32> = Vec::with_capacity(prods_sorted.len());
+            for &li in &prods_sorted {
+                let qi = by_name[layers[li].name.as_str()];
+                key.push(assign.layers[qi].weight_bits[c]);
+            }
+            (key, c)
+        });
+        space_perm.insert(space, perm);
+    }
+    // spaces without producers (input image) are identity
+    let identity_for = |space: usize, width: usize| -> Vec<usize> {
+        let _ = space;
+        (0..width).collect()
+    };
+
+    // ---- 2. per-layer fold + permute ---------------------------------------
+    let mut nodes = Vec::with_capacity(layers.len());
+    for (i, l) in layers.iter().enumerate() {
+        if !l.is_quant() {
+            nodes.push(DeployedNode { spec: l.clone(), layer: None });
+            continue;
+        }
+        let qi = by_name[l.name.as_str()];
+        let la = &assign.layers[qi];
+        let w = params
+            .get(&format!("{}.w", l.name))
+            .ok_or_else(|| anyhow!("missing weights for {}", l.name))?;
+        let cout = l.cout;
+        let k = l.weights_per_channel;
+        if w.len() != cout * k {
+            bail!("weight size mismatch for {}", l.name);
+        }
+
+        let out_perm = space_perm
+            .get(&spaces.out_space[i])
+            .cloned()
+            .unwrap_or_else(|| identity_for(spaces.out_space[i], cout));
+        let in_width = if l.kind == "fc" { l.cin } else { l.cin };
+        let in_perm = space_perm
+            .get(&spaces.in_space[i])
+            .cloned()
+            .unwrap_or_else(|| identity_for(spaces.in_space[i], in_width));
+
+        // --- permute weights: rows by out_perm, input-channel cols by in_perm
+        // conv layout (cout, kx, ky, cin_g); fc layout (cout, cin)
+        let cin_g = if l.kind == "dwconv" { 1 } else { l.cin };
+        let spatial = l.kx * l.ky;
+        let mut wperm = vec![0.0f32; cout * k];
+        for (new_c, &old_c) in out_perm.iter().enumerate() {
+            for s in 0..spatial {
+                for ci in 0..cin_g {
+                    let src_ci = if l.kind == "conv" && in_perm.len() == cin_g {
+                        in_perm[ci]
+                    } else if l.kind == "fc" && in_perm.len() == cin_g {
+                        in_perm[ci]
+                    } else {
+                        ci
+                    };
+                    let src = old_c * k + s * cin_g + src_ci;
+                    let dst = new_c * k + s * cin_g + ci;
+                    wperm[dst] = w.data()[src];
+                }
+            }
+        }
+        // dwconv: the single input channel of filter c IS channel c — row
+        // permutation already aligns it with the (shared) space perm.
+
+        // --- per-channel bits in permuted order + integer quantization
+        let bits_perm: Vec<u32> =
+            out_perm.iter().map(|&c| la.weight_bits[c]).collect();
+        let (qw, w_scale) = quantize_weights_perchannel(&wperm, cout, &bits_perm);
+
+        // --- epilogue fold (BN with running stats, optional bias)
+        let mut a_fold = vec![0.0f32; cout];
+        let mut b_fold = vec![0.0f32; cout];
+        let bias = params.get(&format!("{}.b", l.name));
+        let (bn_s, bn_b, bn_m, bn_v) = if l.bn {
+            (
+                params.get(&format!("{}.bn_scale", l.name)),
+                params.get(&format!("{}.bn_bias", l.name)),
+                bn_state.get(&format!("{}.bn_mean", l.name)),
+                bn_state.get(&format!("{}.bn_var", l.name)),
+            )
+        } else {
+            (None, None, None, None)
+        };
+        for (new_c, &old_c) in out_perm.iter().enumerate() {
+            let m = w_scale[new_c]; // acc -> weight-scaled float (x step applied in exec)
+            let (mut a, mut b) = (m, 0.0f32);
+            if l.bn {
+                let g = bn_s.unwrap().data()[old_c];
+                let be = bn_b.unwrap().data()[old_c];
+                let mu = bn_m.unwrap().data()[old_c];
+                let va = bn_v.unwrap().data()[old_c];
+                let inv = g / (va + BN_EPS).sqrt();
+                a = m * inv;
+                b = be - mu * inv;
+            } else if let Some(bias) = bias {
+                b = bias.data()[old_c];
+            }
+            a_fold[new_c] = a;
+            b_fold[new_c] = b;
+        }
+
+        // --- contiguous single-precision runs
+        let mut groups: Vec<SubConv> = Vec::new();
+        for (c, &b) in bits_perm.iter().enumerate() {
+            match groups.last_mut() {
+                Some(g) if g.bits == b && g.start + g.len == c => g.len += 1,
+                _ => groups.push(SubConv { bits: b, start: c, len: 1 }),
+            }
+        }
+
+        let alpha = params
+            .get(&format!("{}.alpha", l.name))
+            .map(|t| t.item())
+            .ok_or_else(|| anyhow!("missing alpha for {}", l.name))?;
+
+        nodes.push(DeployedNode {
+            spec: l.clone(),
+            layer: Some(DeployedLayer {
+                spec: l.clone(),
+                act_bits: la.act_bits,
+                alpha,
+                qweights: qw,
+                w_scale,
+                weight_bits: bits_perm,
+                a_fold,
+                b_fold,
+                groups,
+            }),
+        });
+    }
+
+    let mut space_perms = HashMap::new();
+    for (space, perm) in &space_perm {
+        space_perms.insert(format!("space{space}"), perm.clone());
+    }
+    let out_width = *spaces.width.get(&last_q).unwrap_or(&0);
+    let output_perm = space_perm
+        .get(&last_q)
+        .cloned()
+        .unwrap_or_else(|| (0..out_width).collect());
+    Ok(DeployedModel {
+        bench: manifest.benchmark.clone(),
+        loss: manifest.loss.clone(),
+        n_classes: manifest.n_classes,
+        input_shape: manifest.input_shape.clone(),
+        nodes,
+        space_perms,
+        output_perm,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mklayer(name: &str, kind: &str, cin: usize, cout: usize) -> LayerSpec {
+        LayerSpec {
+            name: name.into(),
+            kind: kind.into(),
+            cin,
+            cout,
+            kx: 1,
+            ky: 1,
+            stride: 1,
+            relu: true,
+            bn: false,
+            bias: false,
+            in_h: 4,
+            in_w: 4,
+            out_h: 4,
+            out_w: 4,
+            qidx: -1,
+            ops: cin * cout * 16,
+            weights_per_channel: cin,
+            save_as: None,
+            add_from: None,
+            input_from: None,
+        }
+    }
+
+    #[test]
+    fn residual_unions_spaces() {
+        // c1 -> tap(save t) -> c2 -> add(t)  : c1 and c2 outputs same space
+        let mut l0 = mklayer("c1", "conv", 3, 8);
+        let mut tap = mklayer("t", "tap", 8, 8);
+        tap.save_as = Some("t0".into());
+        let l2 = mklayer("c2", "conv", 8, 8);
+        let mut add = mklayer("a", "add", 8, 8);
+        add.add_from = Some("t0".into());
+        l0.qidx = 0;
+        let mut l2 = l2;
+        l2.qidx = 1;
+        let layers = vec![l0, tap, l2, add];
+        let s = analyze_spaces(&layers).unwrap();
+        assert_eq!(s.out_space[0], s.out_space[2]);
+    }
+
+    #[test]
+    fn dwconv_shares_input_space() {
+        let mut c = mklayer("c1", "conv", 3, 8);
+        c.qidx = 0;
+        let mut dw = mklayer("dw", "dwconv", 8, 8);
+        dw.qidx = 1;
+        dw.weights_per_channel = 9;
+        let layers = vec![c, dw];
+        let s = analyze_spaces(&layers).unwrap();
+        assert_eq!(s.out_space[0], s.out_space[1]);
+    }
+
+    #[test]
+    fn groups_cover_all_channels_contiguously() {
+        let bits = [8u32, 2, 2, 4, 4, 4, 8, 8];
+        // emulate run construction
+        let mut groups: Vec<SubConv> = Vec::new();
+        for (c, &b) in bits.iter().enumerate() {
+            match groups.last_mut() {
+                Some(g) if g.bits == b && g.start + g.len == c => g.len += 1,
+                _ => groups.push(SubConv { bits: b, start: c, len: 1 }),
+            }
+        }
+        let total: usize = groups.iter().map(|g| g.len).sum();
+        assert_eq!(total, bits.len());
+        assert_eq!(groups.len(), 4);
+    }
+}

@@ -1,0 +1,67 @@
+//! Numerical verification of the §III-C transform: the deployed integer
+//! pipeline must compute the same function as the `infer` HLO graph.
+//!
+//! Checked end-to-end on trained weights by `examples/deploy_mpic.rs`
+//! and `tests/deploy_matches_hlo.rs`: reorder + split + BN-fold + integer
+//! conv == float fake-quantized conv, up to f32 rounding in the epilogue.
+
+use anyhow::Result;
+
+use crate::data::{BatchIter, Dataset};
+use crate::mpic;
+use crate::nas::Trainer;
+use crate::quant::Assignment;
+
+/// Agreement metrics between deployed execution and the HLO `infer` graph.
+#[derive(Clone, Debug)]
+pub struct VerifyReport {
+    pub n_samples: usize,
+    pub max_abs_diff: f32,
+    pub mean_abs_diff: f32,
+    /// fraction of samples whose argmax matches (classification) or 1.0
+    /// for reconstruction models
+    pub argmax_agreement: f32,
+}
+
+/// Compare the deployed model against the `infer` graph on `n_batches`
+/// of a dataset.
+pub fn verify_against_hlo(
+    tr: &Trainer,
+    a: &Assignment,
+    ds: &Dataset,
+    n_batches: usize,
+) -> Result<VerifyReport> {
+    let deployed = super::build(&tr.manifest, &tr.params_map(), &tr.bn_map(), a)?;
+    let feat = tr.manifest.feat_len();
+    let batch = tr.manifest.batch;
+    let mut max_d = 0.0f32;
+    let mut sum_d = 0.0f64;
+    let mut n_el = 0usize;
+    let mut agree = 0usize;
+    let mut n = 0usize;
+    for b in BatchIter::sequential(ds, batch).take(n_batches) {
+        let hlo = tr.infer(a, &b.x, batch)?;
+        let (sim, _cost) = mpic::run_batch(&deployed, &b.x, feat, &tr.manifest.lut)?;
+        for i in 0..batch {
+            assert_eq!(hlo[i].len(), sim[i].len(), "output width mismatch");
+            for (h, s) in hlo[i].iter().zip(&sim[i]) {
+                let d = (h - s).abs();
+                max_d = max_d.max(d);
+                sum_d += d as f64;
+                n_el += 1;
+            }
+            let am_h = crate::util::stats::argmax(&hlo[i]);
+            let am_s = crate::util::stats::argmax(&sim[i]);
+            if am_h == am_s || tr.manifest.loss != "ce" {
+                agree += 1;
+            }
+            n += 1;
+        }
+    }
+    Ok(VerifyReport {
+        n_samples: n,
+        max_abs_diff: max_d,
+        mean_abs_diff: (sum_d / n_el.max(1) as f64) as f32,
+        argmax_agreement: agree as f32 / n.max(1) as f32,
+    })
+}

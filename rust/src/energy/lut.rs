@@ -1,0 +1,108 @@
+//! The MPIC energy/latency LUT — Rust mirror of
+//! `python/compile/energy_lut.py` (single conceptual source; the
+//! integration test `tests/manifest_consistency.rs` asserts the two match
+//! via the copy embedded in every manifest).
+//!
+//! Derivation (DESIGN.md §7): the MPIC core's SIMD dot-product unit packs
+//! `16 / max(p_x, p_w)` MAC lanes per cycle; energy/OP = P_core * T_cycle
+//! / throughput * kappa, where kappa < 1 models the datapath gating of
+//! narrower multipliers.  P_core = 1.75 mW @ 250 MHz => 7.0 pJ/cycle.
+
+use crate::precision_index;
+
+/// pJ per MAC, rows = p_x in {2,4,8}, cols = p_w in {2,4,8}.
+pub const ENERGY_PJ_PER_MAC: [[f32; 3]; 3] = [
+    // p_w:   2         4         8
+    [7.0 / 16.0 * 0.85, 7.0 / 8.0 * 0.88, 7.0 / 4.0 * 0.92], // p_x = 2
+    [7.0 / 8.0 * 0.88, 7.0 / 8.0 * 0.90, 7.0 / 4.0 * 0.95],  // p_x = 4
+    [7.0 / 4.0 * 0.92, 7.0 / 4.0 * 0.95, 7.0 / 4.0 * 1.00],  // p_x = 8
+];
+
+/// Cycles per MAC (1 / SIMD throughput), same indexing.
+pub const CYCLES_PER_MAC: [[f32; 3]; 3] = [
+    [1.0 / 16.0, 1.0 / 8.0, 1.0 / 4.0],
+    [1.0 / 8.0, 1.0 / 8.0, 1.0 / 4.0],
+    [1.0 / 4.0, 1.0 / 4.0, 1.0 / 4.0],
+];
+
+/// MPIC core clock (the paper profiles its LUT at 250 MHz).
+pub const F_CLK_HZ: f64 = 250e6;
+
+/// Cost lookup with optional override (e.g. LUT loaded from a manifest).
+#[derive(Clone, Debug)]
+pub struct CostLut {
+    pub energy_pj: [[f32; 3]; 3],
+    pub cycles: [[f32; 3]; 3],
+}
+
+impl Default for CostLut {
+    fn default() -> Self {
+        CostLut { energy_pj: ENERGY_PJ_PER_MAC, cycles: CYCLES_PER_MAC }
+    }
+}
+
+impl CostLut {
+    /// Energy of one `p_x x p_w` MAC in pJ.
+    pub fn energy_pj(&self, px: u32, pw: u32) -> f32 {
+        self.energy_pj[precision_index(px)][precision_index(pw)]
+    }
+
+    /// Cycles of one `p_x x p_w` MAC (SIMD-amortised).
+    pub fn cycles(&self, px: u32, pw: u32) -> f32 {
+        self.cycles[precision_index(px)][precision_index(pw)]
+    }
+
+    /// Build from the 3x3 row-major table in a manifest.
+    pub fn from_rows(energy: &[Vec<f32>], cycles: &[Vec<f32>]) -> Self {
+        let mut e = [[0.0f32; 3]; 3];
+        let mut c = [[0.0f32; 3]; 3];
+        for i in 0..3 {
+            for j in 0..3 {
+                e[i][j] = energy[i][j];
+                c[i][j] = cycles[i][j];
+            }
+        }
+        CostLut { energy_pj: e, cycles: c }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn monotone_in_both_operands() {
+        let lut = CostLut::default();
+        for &px in &[2u32, 4, 8] {
+            assert!(lut.energy_pj(px, 2) <= lut.energy_pj(px, 4));
+            assert!(lut.energy_pj(px, 4) <= lut.energy_pj(px, 8));
+            assert!(lut.cycles(px, 2) <= lut.cycles(px, 4));
+        }
+        for &pw in &[2u32, 4, 8] {
+            assert!(lut.energy_pj(2, pw) <= lut.energy_pj(4, pw));
+            assert!(lut.energy_pj(4, pw) <= lut.energy_pj(8, pw));
+        }
+    }
+
+    #[test]
+    fn sub_byte_not_linear() {
+        // The paper's reason for a LUT: 2x2 is NOT (8*8)/(2*2) = 16x cheaper.
+        let lut = CostLut::default();
+        let ratio = lut.energy_pj(8, 8) / lut.energy_pj(2, 2);
+        assert!(ratio > 2.0 && ratio < 8.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn symmetric_mixed_combos() {
+        let lut = CostLut::default();
+        assert_eq!(lut.energy_pj(2, 8), lut.energy_pj(8, 2));
+        assert_eq!(lut.cycles(4, 8), lut.cycles(8, 4));
+    }
+
+    #[test]
+    fn throughput_set_by_wider_operand() {
+        let lut = CostLut::default();
+        assert_eq!(lut.cycles(2, 8), lut.cycles(8, 8));
+        assert_eq!(lut.cycles(4, 4), lut.cycles(2, 4));
+    }
+}

@@ -1,0 +1,140 @@
+//! The MPIC cost model: `C(p_x, p_w)` LUT (Eq. (8)) and the Eq. (7)/(8)
+//! evaluation of a *concrete* assignment — the numbers on the Fig. 3 axes.
+//!
+//! The differentiable versions of these live inside the AOT'd search
+//! graphs (L2); this module is the reporting-side ground truth.  An
+//! integration test cross-checks this LUT against the copy embedded in
+//! every `manifest.json`, so the search and the reports can never drift.
+
+pub mod lut;
+
+pub use lut::{CostLut, CYCLES_PER_MAC, ENERGY_PJ_PER_MAC};
+
+use crate::models::ModelGeom;
+use crate::quant::Assignment;
+
+/// Model size in **bits** under an assignment (Eq. (7) with one-hot
+/// gammas): `sum_layers sum_channels K * bits(channel)`.
+pub fn model_size_bits(geom: &ModelGeom, a: &Assignment) -> f64 {
+    assert_eq!(geom.qlayers.len(), a.layers.len());
+    let mut total = 0f64;
+    for (l, la) in geom.qlayers.iter().zip(&a.layers) {
+        assert_eq!(l.cout, la.weight_bits.len(), "layer {}", l.name);
+        let k = l.weights_per_channel as f64;
+        for &b in &la.weight_bits {
+            total += k * b as f64;
+        }
+    }
+    total
+}
+
+/// Model size in bits for the *packed* deployment layout (per-channel
+/// rows padded to byte boundaries) — what actually lands in flash.
+pub fn model_size_bits_packed(geom: &ModelGeom, a: &Assignment) -> f64 {
+    let mut total = 0usize;
+    for (l, la) in geom.qlayers.iter().zip(&a.layers) {
+        total += crate::quant::packed_weight_bytes(
+            l.cout, l.weights_per_channel, &la.weight_bits) * 8;
+    }
+    total as f64
+}
+
+/// Inference energy in **pJ** under an assignment (Eq. (8) with one-hot
+/// NAS parameters): `sum_layers (ops/cout) * sum_i C(p_x, p_w_i)`.
+pub fn model_energy_pj(geom: &ModelGeom, a: &Assignment, lut: &CostLut) -> f64 {
+    let mut total = 0f64;
+    for (l, la) in geom.qlayers.iter().zip(&a.layers) {
+        let ops_per_ch = l.ops as f64 / l.cout as f64;
+        for &wb in &la.weight_bits {
+            total += ops_per_ch * lut.energy_pj(la.act_bits, wb) as f64;
+        }
+    }
+    total
+}
+
+/// Inference latency in **cycles** under an assignment (same structure
+/// with the cycles/MAC table; the MPIC simulator refines this with
+/// per-layer overheads).
+pub fn model_latency_cycles(geom: &ModelGeom, a: &Assignment, lut: &CostLut) -> f64 {
+    let mut total = 0f64;
+    for (l, la) in geom.qlayers.iter().zip(&a.layers) {
+        let ops_per_ch = l.ops as f64 / l.cout as f64;
+        for &wb in &la.weight_bits {
+            total += ops_per_ch * lut.cycles(la.act_bits, wb) as f64;
+        }
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::QLayerGeom;
+
+    fn tiny_geom() -> ModelGeom {
+        ModelGeom {
+            name: "t".into(),
+            qlayers: vec![
+                QLayerGeom {
+                    name: "conv".into(),
+                    kind: "conv".into(),
+                    cin: 3,
+                    cout: 4,
+                    kx: 3,
+                    ky: 3,
+                    ops: 1000,
+                    weights_per_channel: 27,
+                },
+                QLayerGeom {
+                    name: "fc".into(),
+                    kind: "fc".into(),
+                    cin: 8,
+                    cout: 2,
+                    kx: 1,
+                    ky: 1,
+                    ops: 16,
+                    weights_per_channel: 8,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn size_matches_hand_count() {
+        let g = tiny_geom();
+        let names = vec!["conv".to_string(), "fc".to_string()];
+        let a = Assignment::fixed(&names, &[4, 2], 8, 8);
+        // conv: 4 ch * 27 * 8 + fc: 2 ch * 8 * 8
+        assert_eq!(model_size_bits(&g, &a), (4 * 27 * 8 + 2 * 8 * 8) as f64);
+    }
+
+    #[test]
+    fn mixed_size_smaller_than_w8() {
+        let g = tiny_geom();
+        let names = vec!["conv".to_string(), "fc".to_string()];
+        let w8 = Assignment::fixed(&names, &[4, 2], 8, 8);
+        let mut mixed = w8.clone();
+        mixed.layers[0].weight_bits = vec![2, 2, 4, 8];
+        assert!(model_size_bits(&g, &mixed) < model_size_bits(&g, &w8));
+    }
+
+    #[test]
+    fn energy_uses_lut_nonlinearly() {
+        let g = tiny_geom();
+        let lut = CostLut::default();
+        let names = vec!["conv".to_string(), "fc".to_string()];
+        let e88 = model_energy_pj(&g, &Assignment::fixed(&names, &[4, 2], 8, 8), &lut);
+        let e22 = model_energy_pj(&g, &Assignment::fixed(&names, &[4, 2], 2, 2), &lut);
+        // cheaper, but NOT 16x cheaper (the paper's LUT motivation)
+        assert!(e22 < e88);
+        assert!(e22 > e88 / 16.0);
+    }
+
+    #[test]
+    fn packed_size_at_least_logical() {
+        let g = tiny_geom();
+        let names = vec!["conv".to_string(), "fc".to_string()];
+        let a = Assignment::fixed(&names, &[4, 2], 4, 8);
+        assert!(model_size_bits_packed(&g, &a) >= model_size_bits(&g, &a));
+    }
+}

@@ -1,0 +1,56 @@
+//! # cwmix — Channel-wise Mixed-precision Assignment for edge DNN inference
+//!
+//! Rust + JAX + Pallas reproduction of Risso et al., *"Channel-wise
+//! Mixed-precision Assignment for DNN Inference on Constrained Edge
+//! Nodes"*, IGSC 2022.
+//!
+//! This crate is the **Layer-3 coordinator** of the three-layer stack
+//! (see `DESIGN.md`): it owns the NAS training loop (Alg. 1), the λ-sweep
+//! Pareto exploration (Fig. 3), the §III-C deployment transform, the MPIC
+//! RISC-V simulator substrate, and the PJRT runtime that executes the
+//! AOT-lowered JAX/Pallas graphs from `artifacts/`.  Python never runs on
+//! any path in this crate.
+//!
+//! Module map:
+//! * [`util`] — RNG, statistics (incl. AUC), timers, ASCII plots.
+//! * [`minijson`] — dependency-free JSON (manifests, configs, results).
+//! * [`tensor`] — small host tensors + `xla::Literal` conversion.
+//! * [`data`] — the four synthetic MLPerf-Tiny-shaped dataset generators.
+//! * [`models`] — benchmark model geometry parsed from the manifest.
+//! * [`quant`] — affine/PACT quantization, sub-byte packing, assignments.
+//! * [`energy`] — the MPIC `C(p_x, p_w)` LUT and Eq. (7)/(8) evaluation.
+//! * [`mpic`] — the MPIC mixed-precision RISC-V simulator substrate.
+//! * [`deploy`] — filter reordering / sub-convolution splitting (§III-C).
+//! * [`runtime`] — PJRT client wrapper executing `artifacts/*.hlo.txt`.
+//! * [`nas`] — the Alg. 1 three-phase DNAS driver.
+//! * [`baselines`] — EdMIPS (layer-wise) and fixed-precision baselines.
+//! * [`coordinator`] — λ sweeps, Pareto fronts, experiment registry.
+//! * [`report`] — Fig. 3 / Fig. 4 style reporting.
+
+pub mod baselines;
+pub mod coordinator;
+pub mod data;
+pub mod deploy;
+pub mod energy;
+pub mod minijson;
+pub mod models;
+pub mod mpic;
+pub mod nas;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+/// The searched bit-width set `P_W = P_X = {2, 4, 8}` (paper §III).
+pub const PRECISIONS: [u32; 3] = [2, 4, 8];
+
+/// Index of a precision inside [`PRECISIONS`].
+pub fn precision_index(bits: u32) -> usize {
+    match bits {
+        2 => 0,
+        4 => 1,
+        8 => 2,
+        _ => panic!("unsupported precision {bits}"),
+    }
+}

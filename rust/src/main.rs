@@ -1,0 +1,10 @@
+//! `cwmix` CLI — launcher for searches, sweeps, evaluation, deployment
+//! and reporting.  See `cwmix help` or README.md §Quickstart.
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = cwmix::coordinator::cli::dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,275 @@
+//! Benchmark model geometry, parsed from `artifacts/<bench>/manifest.json`.
+//!
+//! The manifest is emitted by `python/compile/aot.py` from the very
+//! `ModelDef` the graphs were traced with, so the Rust side — energy
+//! model, MPIC simulator, deployment transform, runtime tensor plumbing —
+//! always sees exactly the trained geometry.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::energy::CostLut;
+use crate::minijson::{parse_file, Json};
+
+/// Quantized-layer geometry (the inputs to Eq. (7)/(8)).
+#[derive(Clone, Debug)]
+pub struct QLayerGeom {
+    pub name: String,
+    pub kind: String, // conv | dwconv | fc
+    pub cin: usize,
+    pub cout: usize,
+    pub kx: usize,
+    pub ky: usize,
+    pub ops: usize,
+    pub weights_per_channel: usize,
+}
+
+/// Just the quantized layers (what the cost model needs).
+#[derive(Clone, Debug)]
+pub struct ModelGeom {
+    pub name: String,
+    pub qlayers: Vec<QLayerGeom>,
+}
+
+/// Full layer record (structural layers included) for the simulator and
+/// the deployment transform.
+#[derive(Clone, Debug)]
+pub struct LayerSpec {
+    pub name: String,
+    pub kind: String,
+    pub cin: usize,
+    pub cout: usize,
+    pub kx: usize,
+    pub ky: usize,
+    pub stride: usize,
+    pub relu: bool,
+    pub bn: bool,
+    pub bias: bool,
+    pub in_h: usize,
+    pub in_w: usize,
+    pub out_h: usize,
+    pub out_w: usize,
+    pub qidx: i64,
+    pub ops: usize,
+    pub weights_per_channel: usize,
+    pub save_as: Option<String>,
+    pub add_from: Option<String>,
+    pub input_from: Option<String>,
+}
+
+impl LayerSpec {
+    pub fn is_quant(&self) -> bool {
+        matches!(self.kind.as_str(), "conv" | "dwconv" | "fc")
+    }
+
+    pub fn groups(&self) -> usize {
+        if self.kind == "dwconv" {
+            self.cin
+        } else {
+            1
+        }
+    }
+}
+
+/// Named tensor slot (parameter / state / NAS / hard-assignment input).
+#[derive(Clone, Debug)]
+pub struct TensorSlot {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSlot {
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Parsed `manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub benchmark: String,
+    pub dir: PathBuf,
+    pub batch: usize,
+    pub seed: u64,
+    pub precisions: Vec<u32>,
+    pub loss: String,
+    pub n_classes: usize,
+    pub input_shape: Vec<usize>,
+    pub layers: Vec<LayerSpec>,
+    pub params: Vec<TensorSlot>,
+    pub bn_state: Vec<TensorSlot>,
+    pub nas_cw: Vec<TensorSlot>,
+    pub nas_lw: Vec<TensorSlot>,
+    pub hard_assign: Vec<TensorSlot>,
+    pub lut: CostLut,
+}
+
+fn slot_list(v: &Json) -> Result<Vec<TensorSlot>> {
+    v.as_arr()?
+        .iter()
+        .map(|e| {
+            Ok(TensorSlot {
+                name: e.get("name")?.as_str()?.to_string(),
+                shape: e.get("shape")?.as_shape()?,
+            })
+        })
+        .collect()
+}
+
+fn f32_rows(v: &Json) -> Result<Vec<Vec<f32>>> {
+    v.as_arr()?
+        .iter()
+        .map(|row| {
+            Ok(row
+                .as_arr()?
+                .iter()
+                .map(|x| x.as_f64().map(|f| f as f32))
+                .collect::<Result<Vec<f32>>>()?)
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load `artifacts/<bench>/manifest.json`.
+    pub fn load(artifacts: &Path, bench: &str) -> Result<Manifest> {
+        let dir = artifacts.join(bench);
+        let path = dir.join("manifest.json");
+        let j = parse_file(&path).context("loading manifest")?;
+        let layers = j
+            .get("layers")?
+            .as_arr()?
+            .iter()
+            .map(|l| {
+                Ok(LayerSpec {
+                    name: l.get("name")?.as_str()?.to_string(),
+                    kind: l.get("kind")?.as_str()?.to_string(),
+                    cin: l.get("cin")?.as_usize()?,
+                    cout: l.get("cout")?.as_usize()?,
+                    kx: l.get("kx")?.as_usize()?,
+                    ky: l.get("ky")?.as_usize()?,
+                    stride: l.get("stride")?.as_usize()?,
+                    relu: l.get("relu")?.as_bool()?,
+                    bn: l.get("bn")?.as_bool()?,
+                    bias: l.get("bias")?.as_bool()?,
+                    in_h: l.get("in_h")?.as_usize()?,
+                    in_w: l.get("in_w")?.as_usize()?,
+                    out_h: l.get("out_h")?.as_usize()?,
+                    out_w: l.get("out_w")?.as_usize()?,
+                    qidx: l.get("qidx")?.as_i64()?,
+                    ops: l.get("ops")?.as_usize()?,
+                    weights_per_channel: l.get("weights_per_channel")?.as_usize()?,
+                    save_as: l.opt("save_as").map(|v| v.as_str().unwrap().to_string()),
+                    add_from: l.opt("add_from").map(|v| v.as_str().unwrap().to_string()),
+                    input_from: l.opt("input_from").map(|v| v.as_str().unwrap().to_string()),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let lut = CostLut::from_rows(
+            &f32_rows(j.get("energy_lut_pj_per_mac")?)?,
+            &f32_rows(j.get("cycles_per_mac")?)?,
+        );
+        Ok(Manifest {
+            benchmark: j.get("benchmark")?.as_str()?.to_string(),
+            dir,
+            batch: j.get("batch")?.as_usize()?,
+            seed: j.get("seed")?.as_usize()? as u64,
+            precisions: j
+                .get("precisions")?
+                .as_arr()?
+                .iter()
+                .map(|v| v.as_usize().map(|u| u as u32))
+                .collect::<Result<Vec<_>>>()?,
+            loss: j.get("loss")?.as_str()?.to_string(),
+            n_classes: j.get("n_classes")?.as_usize()?,
+            input_shape: j.get("input_shape")?.as_shape()?,
+            layers,
+            params: slot_list(j.get("params")?)?,
+            bn_state: slot_list(j.get("bn_state")?)?,
+            nas_cw: slot_list(j.get("nas_cw")?)?,
+            nas_lw: slot_list(j.get("nas_lw")?)?,
+            hard_assign: slot_list(j.get("hard_assign")?)?,
+            lut,
+        })
+    }
+
+    /// Quantized layers in qidx order.
+    pub fn qlayers(&self) -> Vec<&LayerSpec> {
+        let mut q: Vec<&LayerSpec> = self.layers.iter().filter(|l| l.is_quant()).collect();
+        q.sort_by_key(|l| l.qidx);
+        q
+    }
+
+    /// Cost-model view.
+    pub fn geom(&self) -> ModelGeom {
+        ModelGeom {
+            name: self.benchmark.clone(),
+            qlayers: self
+                .qlayers()
+                .iter()
+                .map(|l| QLayerGeom {
+                    name: l.name.clone(),
+                    kind: l.kind.clone(),
+                    cin: l.cin,
+                    cout: l.cout,
+                    kx: l.kx,
+                    ky: l.ky,
+                    ops: l.ops,
+                    weights_per_channel: l.weights_per_channel,
+                })
+                .collect(),
+        }
+    }
+
+    /// Names/couts of quantized layers (assignment plumbing).
+    pub fn qnames(&self) -> Vec<String> {
+        self.qlayers().iter().map(|l| l.name.clone()).collect()
+    }
+
+    pub fn qcouts(&self) -> Vec<usize> {
+        self.qlayers().iter().map(|l| l.cout).collect()
+    }
+
+    /// Path of a graph artifact.
+    pub fn graph_path(&self, graph: &str) -> PathBuf {
+        self.dir.join(format!("{graph}.hlo.txt"))
+    }
+
+    /// Per-sample input feature count.
+    pub fn feat_len(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    /// Sanity-check internal consistency (used by integration tests and
+    /// at coordinator startup).
+    pub fn validate(&self) -> Result<()> {
+        let q = self.qlayers();
+        if q.is_empty() {
+            bail!("no quantized layers");
+        }
+        for (i, l) in q.iter().enumerate() {
+            if l.qidx != i as i64 {
+                bail!("qidx gap at {}", l.name);
+            }
+        }
+        // hard_assign slots must alternate delta (3,) / gamma (cout, 3)
+        if self.hard_assign.len() != 2 * q.len() {
+            bail!("hard_assign count mismatch");
+        }
+        for (i, l) in q.iter().enumerate() {
+            let d = &self.hard_assign[2 * i];
+            let g = &self.hard_assign[2 * i + 1];
+            if d.shape != vec![self.precisions.len()] {
+                bail!("delta slot shape for {}", l.name);
+            }
+            if g.shape != vec![l.cout, self.precisions.len()] {
+                bail!("gamma slot shape for {}: {:?}", l.name, g.shape);
+            }
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,350 @@
+//! Integer inference engine over a [`DeployedModel`].
+//!
+//! Executes exactly the deployed arithmetic: PACT-quantized unsigned
+//! activations (per-layer bits), two's-complement per-channel weights,
+//! int32 accumulation per sub-convolution group, folded BN epilogue in
+//! f32 (two flops/channel — what the MPIC C kernels do with fixed-point
+//! requant multipliers), residual adds and pooling in f32.
+//!
+//! Numerically this equals the `infer` HLO graph: an integer conv of the
+//! quantization *codes* scaled by `eps_x * s_w[c]` is the same number as
+//! the float conv of the fake-quantized tensors (both products are exact
+//! in f32 for <= 8-bit operands).
+//!
+//! Cost accounting runs alongside execution so every reported cycle /
+//! picojoule corresponds to arithmetic that actually happened.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::deploy::{DeployedLayer, DeployedModel};
+use crate::energy::CostLut;
+use crate::models::LayerSpec;
+use crate::mpic::cost::{account_group, account_memory, InferenceCost, LayerCost};
+use crate::mpic::memory;
+
+/// HWC activation buffer.
+#[derive(Clone, Debug)]
+pub struct Act {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub data: Vec<f32>,
+}
+
+impl Act {
+    fn new(h: usize, w: usize, c: usize) -> Act {
+        Act { h, w, c, data: vec![0.0; h * w * c] }
+    }
+
+    fn from_vec(c: usize, data: Vec<f32>) -> Act {
+        Act { h: 1, w: 1, c, data }
+    }
+
+    #[inline]
+    fn at(&self, y: usize, x: usize, ch: usize) -> f32 {
+        self.data[(y * self.w + x) * self.c + ch]
+    }
+}
+
+/// PACT quantization of a whole buffer: codes in `[0, 2^bits)` + step.
+fn quantize_act(a: &Act, alpha: f32, bits: u32) -> (Vec<u32>, f32) {
+    crate::quant::quantize_acts_pact(&a.data, alpha, bits)
+}
+
+/// SAME-padding offsets (matches XLA's `padding="SAME"`).
+fn same_pad(in_len: usize, out_len: usize, k: usize, stride: usize) -> i64 {
+    let total = ((out_len - 1) * stride + k).saturating_sub(in_len) as i64;
+    total / 2
+}
+
+fn conv_layer(
+    dl: &DeployedLayer,
+    input: &Act,
+    lut: &CostLut,
+    cost: &mut LayerCost,
+) -> Act {
+    let s = &dl.spec;
+    let (qx, eps) = quantize_act(input, dl.alpha, dl.act_bits);
+    let mut out = Act::new(s.out_h, s.out_w, s.cout);
+    let k = dl.k();
+    let cin_g = if s.kind == "dwconv" { 1 } else { s.cin };
+    let pad_y = same_pad(s.in_h, s.out_h, s.kx, s.stride);
+    let pad_x = same_pad(s.in_w, s.out_w, s.ky, s.stride);
+
+    if s.kind == "dwconv" {
+        // depthwise: channel c reads only input channel c; the im2col
+        // gather does not amortise, keep the direct form.
+        for g in &dl.groups {
+            for c in g.start..g.start + g.len {
+                let wrow = &dl.qweights[c * k..(c + 1) * k];
+                let a = dl.a_fold[c] * eps;
+                let b = dl.b_fold[c];
+                for oy in 0..s.out_h {
+                    for ox in 0..s.out_w {
+                        let mut acc: i32 = 0;
+                        for ki in 0..s.kx {
+                            let iy =
+                                oy as i64 * s.stride as i64 + ki as i64 - pad_y;
+                            if iy < 0 || iy >= s.in_h as i64 {
+                                continue;
+                            }
+                            for kj in 0..s.ky {
+                                let ix = ox as i64 * s.stride as i64 + kj as i64
+                                    - pad_x;
+                                if ix < 0 || ix >= s.in_w as i64 {
+                                    continue;
+                                }
+                                let base = (iy as usize * s.in_w + ix as usize)
+                                    * s.cin;
+                                acc += qx[base + c] as i32
+                                    * wrow[ki * s.ky + kj];
+                            }
+                        }
+                        let mut y = acc as f32 * a + b;
+                        if s.relu && s.add_from.is_none() {
+                            y = y.max(0.0);
+                        }
+                        out.data[(oy * s.out_w + ox) * s.cout + c] = y;
+                    }
+                }
+            }
+            let macs = (s.out_h * s.out_w * g.len * k) as u64;
+            account_group(cost, lut, dl.act_bits, g.bits, macs);
+        }
+    } else {
+        // §Perf L3 optimisation: im2col per output pixel, gathered ONCE
+        // and reused by all C_out channels (previously the window/padding
+        // arithmetic re-ran per channel — the profile's top hot spot).
+        // Zero-padding adds exact zeros to the integer accumulation.
+        let mut col = vec![0i32; k];
+        for oy in 0..s.out_h {
+            for ox in 0..s.out_w {
+                // gather the receptive field (zeros outside the image)
+                for ki in 0..s.kx {
+                    let iy = oy as i64 * s.stride as i64 + ki as i64 - pad_y;
+                    for kj in 0..s.ky {
+                        let ix = ox as i64 * s.stride as i64 + kj as i64 - pad_x;
+                        let dst = (ki * s.ky + kj) * cin_g;
+                        if iy < 0 || iy >= s.in_h as i64 || ix < 0
+                            || ix >= s.in_w as i64
+                        {
+                            col[dst..dst + cin_g].fill(0);
+                        } else {
+                            let base =
+                                (iy as usize * s.in_w + ix as usize) * s.cin;
+                            for ci in 0..cin_g {
+                                col[dst + ci] = qx[base + ci] as i32;
+                            }
+                        }
+                    }
+                }
+                let orow = (oy * s.out_w + ox) * s.cout;
+                for c in 0..s.cout {
+                    let wrow = &dl.qweights[c * k..(c + 1) * k];
+                    let mut acc: i32 = 0;
+                    for (x, w) in col.iter().zip(wrow) {
+                        acc += x * w;
+                    }
+                    let mut y = acc as f32 * (dl.a_fold[c] * eps) + dl.b_fold[c];
+                    if s.relu && s.add_from.is_none() {
+                        y = y.max(0.0);
+                    }
+                    out.data[orow + c] = y;
+                }
+            }
+        }
+        for g in &dl.groups {
+            let macs = (s.out_h * s.out_w * g.len * k) as u64;
+            account_group(cost, lut, dl.act_bits, g.bits, macs);
+        }
+    }
+    account_memory(
+        cost,
+        memory::layer_traffic_bytes(s, dl.act_bits, dl.packed_bytes()),
+    );
+    out
+}
+
+fn fc_layer(
+    dl: &DeployedLayer,
+    input: &Act,
+    lut: &CostLut,
+    cost: &mut LayerCost,
+) -> Act {
+    let s = &dl.spec;
+    let (qx, eps) = quantize_act(input, dl.alpha, dl.act_bits);
+    let k = dl.k();
+    debug_assert_eq!(qx.len(), k, "fc input width mismatch");
+    let mut out = vec![0.0f32; s.cout];
+    for g in &dl.groups {
+        for c in g.start..g.start + g.len {
+            let wrow = &dl.qweights[c * k..(c + 1) * k];
+            let mut acc: i64 = 0;
+            for (j, &x) in qx.iter().enumerate() {
+                acc += x as i64 * wrow[j] as i64;
+            }
+            let mut y = acc as f32 * (dl.a_fold[c] * eps) + dl.b_fold[c];
+            if s.relu && s.add_from.is_none() {
+                y = y.max(0.0);
+            }
+            out[c] = y;
+        }
+        account_group(cost, lut, dl.act_bits, g.bits, (g.len * k) as u64);
+    }
+    account_memory(
+        cost,
+        memory::layer_traffic_bytes(s, dl.act_bits, dl.packed_bytes()),
+    );
+    Act::from_vec(s.cout, out)
+}
+
+fn structural(spec: &LayerSpec, cur: Act, saved: &mut std::collections::HashMap<String, Act>,
+              cost: &mut LayerCost) -> Result<Act> {
+    let out = match spec.kind.as_str() {
+        "tap" => cur,
+        "avgpool" => {
+            let mut v = vec![0.0f32; cur.c];
+            for y in 0..cur.h {
+                for x in 0..cur.w {
+                    for ch in 0..cur.c {
+                        v[ch] += cur.at(y, x, ch);
+                    }
+                }
+            }
+            let n = (cur.h * cur.w) as f32;
+            for ch in v.iter_mut() {
+                *ch /= n;
+            }
+            cost.overhead_cycles += (cur.h * cur.w * cur.c) as f64 * 0.25;
+            Act::from_vec(spec.cout, v)
+        }
+        "flatten" => Act::from_vec(cur.h * cur.w * cur.c, cur.data),
+        "add" => {
+            let tag = spec.add_from.as_ref().ok_or_else(|| anyhow!("add w/o tag"))?;
+            let other = saved
+                .get(tag)
+                .ok_or_else(|| anyhow!("missing saved tag {tag}"))?;
+            if other.data.len() != cur.data.len() {
+                bail!("add size mismatch");
+            }
+            let mut data = cur.data;
+            for (d, &o) in data.iter_mut().zip(&other.data) {
+                *d += o;
+                if spec.relu {
+                    *d = d.max(0.0);
+                }
+            }
+            cost.overhead_cycles += data.len() as f64 * 0.25;
+            Act { h: cur.h, w: cur.w, c: cur.c, data }
+        }
+        other => bail!("unexpected structural kind {other}"),
+    };
+    Ok(out)
+}
+
+/// Run one sample through the deployed network.
+///
+/// `input` is the flattened HWC (or flat vector) sample; returns the
+/// output activations (logits / reconstruction) and the cost breakdown.
+pub fn run_sample(
+    model: &DeployedModel,
+    input: &[f32],
+    lut: &CostLut,
+) -> Result<(Vec<f32>, InferenceCost)> {
+    let mut cur = match model.input_shape.len() {
+        3 => {
+            let (h, w, c) = (
+                model.input_shape[0],
+                model.input_shape[1],
+                model.input_shape[2],
+            );
+            if input.len() != h * w * c {
+                bail!("input length {} != {h}x{w}x{c}", input.len());
+            }
+            Act { h, w, c, data: input.to_vec() }
+        }
+        1 => Act::from_vec(model.input_shape[0], input.to_vec()),
+        _ => bail!("unsupported input rank"),
+    };
+    let mut saved: std::collections::HashMap<String, Act> =
+        std::collections::HashMap::new();
+    let mut cost = InferenceCost::default();
+
+    for node in &model.nodes {
+        let spec = &node.spec;
+        let mut lc = LayerCost { name: spec.name.clone(), ..Default::default() };
+        // input_from: switch to a saved tensor before applying
+        if let Some(tag) = &spec.input_from {
+            cur = saved
+                .get(tag)
+                .ok_or_else(|| anyhow!("missing input tag {tag}"))?
+                .clone();
+        }
+        cur = match &node.layer {
+            Some(dl) => {
+                let mut out = if spec.kind == "fc" {
+                    fc_layer(dl, &cur, lut, &mut lc)
+                } else {
+                    conv_layer(dl, &cur, lut, &mut lc)
+                };
+                // residual epilogue for quant layers carrying add_from
+                if let Some(tag) = &spec.add_from {
+                    let other = saved
+                        .get(tag)
+                        .ok_or_else(|| anyhow!("missing saved tag {tag}"))?;
+                    if other.data.len() != out.data.len() {
+                        bail!("residual size mismatch at {}", spec.name);
+                    }
+                    for (d, &o) in out.data.iter_mut().zip(&other.data) {
+                        *d += o;
+                        if spec.relu {
+                            *d = d.max(0.0);
+                        }
+                    }
+                    lc.overhead_cycles += out.data.len() as f64 * 0.25;
+                }
+                out
+            }
+            None => structural(spec, cur, &mut saved, &mut lc)?,
+        };
+        if let Some(tag) = &spec.save_as {
+            saved.insert(tag.clone(), cur.clone());
+        }
+        if lc.total_cycles() > 0.0 || lc.mem_bytes > 0 {
+            cost.layers.push(lc);
+        }
+    }
+    // un-permute the output space (free relabeling on device, §III-C)
+    if !model.output_perm.is_empty()
+        && model.output_perm.iter().enumerate().any(|(i, &p)| i != p)
+    {
+        let mut natural = vec![0.0f32; cur.data.len()];
+        for (new_c, &orig_c) in model.output_perm.iter().enumerate() {
+            natural[orig_c] = cur.data[new_c];
+        }
+        return Ok((natural, cost));
+    }
+    Ok((cur.data, cost))
+}
+
+/// Run a batch of flattened samples; returns per-sample outputs and the
+/// cost of ONE inference (costs are input-independent).
+pub fn run_batch(
+    model: &DeployedModel,
+    xs: &[f32],
+    feat: usize,
+    lut: &CostLut,
+) -> Result<(Vec<Vec<f32>>, InferenceCost)> {
+    assert_eq!(xs.len() % feat, 0);
+    let n = xs.len() / feat;
+    let mut outs = Vec::with_capacity(n);
+    let mut cost = InferenceCost::default();
+    for i in 0..n {
+        let (o, c) = run_sample(model, &xs[i * feat..(i + 1) * feat], lut)?;
+        outs.push(o);
+        if i == 0 {
+            cost = c;
+        }
+    }
+    Ok((outs, cost))
+}

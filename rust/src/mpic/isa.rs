@@ -1,0 +1,100 @@
+//! Mixed-precision SIMD MAC semantics of the MPIC dot-product unit.
+//!
+//! MPIC extends RI5CY's `pv.sdotsp` family: one instruction multiplies a
+//! register of packed unsigned activations (2/4/8 bit) with a register of
+//! packed signed weights (2/4/8 bit) and accumulates into a 32-bit
+//! accumulator.  The number of lanes is fixed by the *wider* operand
+//! (both operands occupy the same lane grid after the precision decoder):
+//! 8-bit → 4 lanes, 4-bit → 8 lanes, 2-bit → 16 lanes per 32-bit word.
+//!
+//! [`simd_dotp`] models one such instruction; [`dotp_oracle`] is the
+//! plain scalar reference the property tests compare against.
+
+/// Lanes per instruction, MPIC-style: 32-bit registers, lane width set by
+/// the wider operand: max(p) bits per lane element.
+pub fn lanes_mpic(px: u32, pw: u32) -> usize {
+    (32 / px.max(pw)) as usize
+}
+
+/// One SIMD dot-product step over `lanes_mpic` elements.
+///
+/// `xs` are unsigned activation codes in `[0, 2^px)`, `ws` are signed
+/// weight codes in `[-(2^(pw-1)), 2^(pw-1))`; shorter slices emulate the
+/// tail of a channel.  Returns the updated 32-bit accumulator (wrapping,
+/// like the hardware).
+pub fn simd_dotp(acc: i32, xs: &[u32], ws: &[i32], px: u32, pw: u32) -> i32 {
+    debug_assert!(xs.len() == ws.len());
+    debug_assert!(xs.len() <= lanes_mpic(px, pw));
+    let mut a = acc;
+    for (&x, &w) in xs.iter().zip(ws) {
+        debug_assert!(x < (1 << px), "activation code {x} out of {px}-bit range");
+        debug_assert!(
+            (-(1 << (pw - 1))..(1 << (pw - 1))).contains(&w),
+            "weight code {w} out of {pw}-bit range"
+        );
+        a = a.wrapping_add((x as i32).wrapping_mul(w));
+    }
+    a
+}
+
+/// Scalar oracle: plain i64 dot product (no packing, no wrapping).
+pub fn dotp_oracle(xs: &[u32], ws: &[i32]) -> i64 {
+    xs.iter().zip(ws).map(|(&x, &w)| x as i64 * w as i64).sum()
+}
+
+/// Number of SIMD MAC instructions to reduce a `k`-element channel.
+pub fn instructions_for(k: usize, px: u32, pw: u32) -> usize {
+    k.div_ceil(lanes_mpic(px, pw))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn lane_counts_match_mpic() {
+        assert_eq!(lanes_mpic(8, 8), 4);
+        assert_eq!(lanes_mpic(4, 4), 8);
+        assert_eq!(lanes_mpic(2, 2), 16);
+        assert_eq!(lanes_mpic(2, 8), 4);
+        assert_eq!(lanes_mpic(4, 2), 8);
+    }
+
+    #[test]
+    fn simd_matches_oracle_randomized() {
+        // property test: accumulating a long vector through SIMD chunks
+        // equals the scalar oracle, for every precision combo.
+        let mut rng = Pcg32::seeded(99);
+        for &px in &[2u32, 4, 8] {
+            for &pw in &[2u32, 4, 8] {
+                for _trial in 0..20 {
+                    let k = 1 + rng.below(200) as usize;
+                    let xs: Vec<u32> =
+                        (0..k).map(|_| rng.below(1 << px)).collect();
+                    let ws: Vec<i32> = (0..k)
+                        .map(|_| {
+                            rng.below(1 << pw) as i32 - (1 << (pw - 1))
+                        })
+                        .collect();
+                    let l = lanes_mpic(px, pw);
+                    let mut acc = 0i32;
+                    for c in 0..k.div_ceil(l) {
+                        let lo = c * l;
+                        let hi = (lo + l).min(k);
+                        acc = simd_dotp(acc, &xs[lo..hi], &ws[lo..hi], px, pw);
+                    }
+                    assert_eq!(acc as i64, dotp_oracle(&xs, &ws),
+                               "px={px} pw={pw} k={k}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn instruction_count() {
+        assert_eq!(instructions_for(27, 8, 8), 7); // 27 / 4 lanes
+        assert_eq!(instructions_for(27, 2, 2), 2); // 27 / 16 lanes
+        assert_eq!(instructions_for(16, 2, 2), 1);
+    }
+}

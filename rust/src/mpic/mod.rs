@@ -1,0 +1,36 @@
+//! MPIC mixed-precision RISC-V simulator (substrate — DESIGN.md §2).
+//!
+//! The paper deploys on MPIC (Ottavi et al., ISVLSI 2020): a RI5CY-based
+//! core with SIMD MAC units whose operands are *independently* quantized
+//! to 2/4/8 bit.  The silicon is not available here, so this module
+//! provides the closest synthetic equivalent that exercises the same code
+//! paths the paper's evaluation needs:
+//!
+//! * [`isa`] — the mixed-precision SIMD dot-product semantics (lane
+//!   packing by the wider operand, int32 accumulation) plus a scalar
+//!   oracle used by property tests;
+//! * [`exec`] — an integer inference engine that runs a
+//!   [`crate::deploy::DeployedModel`] sample-by-sample: PACT activation
+//!   quantization, per-sub-convolution integer conv/FC (uint activations
+//!   x two's-complement weights), folded BN epilogue, residual adds,
+//!   pooling;
+//! * [`cost`] — cycle and energy accounting per layer/sub-conv using the
+//!   [`crate::energy::CostLut`] MAC table plus load/store and
+//!   sub-convolution scheduling overheads — the refinement of Eq. (8)
+//!   that the paper measures on hardware;
+//! * [`memory`] — the L2→L1 traffic model behind the memory-energy bucket.
+//!
+//! Numerical contract: for any assignment, [`exec::run_sample`] computes
+//! the same function as the AOT'd `infer` graph (integer conv == float
+//! conv of fake-quantized values, BN folded exactly); the integration
+//! test `tests/deploy_matches_hlo.rs` asserts argmax agreement and
+//! elementwise closeness on real trained weights.
+
+pub mod cost;
+pub mod exec;
+pub mod isa;
+pub mod regfile;
+pub mod memory;
+
+pub use cost::{InferenceCost, LayerCost};
+pub use exec::{run_batch, run_sample};

@@ -1,0 +1,141 @@
+//! Packed-register encode/decode for the MPIC SIMD datapath.
+//!
+//! The MPIC dot-product unit consumes 32-bit registers holding
+//! `32 / max(p_x, p_w)` lanes; the *precision decoder* sign/zero-extends
+//! each lane to the common grid before the multiply.  This module models
+//! that encode/decode exactly (the simulator's [`super::exec`] operates on
+//! unpacked codes for speed — property tests assert both views agree, so
+//! the fast path provably computes what the packed hardware would).
+//!
+//! Encoding: little-endian lanes, two's-complement for weights, plain
+//! binary for unsigned activations — the same layout
+//! [`crate::quant::pack_subbyte`] uses for flash storage, so a weight
+//! word can be DMA'd straight from the packed model image.
+
+use super::isa::lanes_mpic;
+
+/// Pack up to `lanes` unsigned activation codes into one 32-bit register.
+pub fn pack_acts(codes: &[u32], px: u32, pw: u32) -> u32 {
+    let lane_bits = px.max(pw);
+    debug_assert!(codes.len() <= lanes_mpic(px, pw));
+    let mask = (1u64 << px) - 1;
+    let mut reg = 0u32;
+    for (i, &c) in codes.iter().enumerate() {
+        debug_assert!((c as u64) <= mask);
+        reg |= (c as u32) << (i as u32 * lane_bits);
+    }
+    reg
+}
+
+/// Pack signed weight codes (two's complement in `pw` bits, placed in
+/// `max(px,pw)`-bit lanes after sign extension to the lane width).
+pub fn pack_weights(codes: &[i32], px: u32, pw: u32) -> u32 {
+    let lane_bits = px.max(pw);
+    debug_assert!(codes.len() <= lanes_mpic(px, pw));
+    let lane_mask = if lane_bits == 32 { u32::MAX } else { (1u32 << lane_bits) - 1 };
+    let mut reg = 0u32;
+    for (i, &c) in codes.iter().enumerate() {
+        let enc = (c as u32) & lane_mask; // sign-extended to lane width
+        reg |= enc << (i as u32 * lane_bits);
+    }
+    reg
+}
+
+/// Decode one activation lane.
+pub fn decode_act(reg: u32, lane: usize, px: u32, pw: u32) -> u32 {
+    let lane_bits = px.max(pw);
+    let raw = reg >> (lane as u32 * lane_bits);
+    raw & ((1u32 << px) - 1)
+}
+
+/// Decode one weight lane (sign-extend from the lane width).
+pub fn decode_weight(reg: u32, lane: usize, px: u32, pw: u32) -> i32 {
+    let lane_bits = px.max(pw);
+    let raw = (reg >> (lane as u32 * lane_bits)) & ((1u32 << lane_bits) - 1);
+    let sign = 1u32 << (lane_bits - 1);
+    if raw & sign != 0 {
+        raw as i32 - (1i32 << lane_bits)
+    } else {
+        raw as i32
+    }
+}
+
+/// One packed-register SDOTP: decode every lane and accumulate — the
+/// bit-exact model of the hardware instruction.
+pub fn sdotp_packed(acc: i32, xreg: u32, wreg: u32, n: usize, px: u32, pw: u32) -> i32 {
+    let mut a = acc;
+    for lane in 0..n {
+        let x = decode_act(xreg, lane, px, pw) as i32;
+        let w = decode_weight(wreg, lane, px, pw);
+        a = a.wrapping_add(x.wrapping_mul(w));
+    }
+    a
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpic::isa::{dotp_oracle, lanes_mpic};
+    use crate::util::Pcg32;
+
+    #[test]
+    fn pack_decode_roundtrip_all_combos() {
+        let mut rng = Pcg32::seeded(21);
+        for &px in &[2u32, 4, 8] {
+            for &pw in &[2u32, 4, 8] {
+                let n = lanes_mpic(px, pw);
+                for _ in 0..50 {
+                    let xs: Vec<u32> = (0..n).map(|_| rng.below(1 << px)).collect();
+                    let ws: Vec<i32> = (0..n)
+                        .map(|_| rng.below(1 << pw) as i32 - (1 << (pw - 1)))
+                        .collect();
+                    let xr = pack_acts(&xs, px, pw);
+                    let wr = pack_weights(&ws, px, pw);
+                    for lane in 0..n {
+                        assert_eq!(decode_act(xr, lane, px, pw), xs[lane]);
+                        assert_eq!(decode_weight(wr, lane, px, pw), ws[lane],
+                                   "px={px} pw={pw} lane={lane}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_sdotp_matches_oracle() {
+        // the packed hardware path == the simulator's unpacked arithmetic
+        let mut rng = Pcg32::seeded(22);
+        for &px in &[2u32, 4, 8] {
+            for &pw in &[2u32, 4, 8] {
+                let l = lanes_mpic(px, pw);
+                for _ in 0..20 {
+                    let k = 1 + rng.below(100) as usize;
+                    let xs: Vec<u32> = (0..k).map(|_| rng.below(1 << px)).collect();
+                    let ws: Vec<i32> = (0..k)
+                        .map(|_| rng.below(1 << pw) as i32 - (1 << (pw - 1)))
+                        .collect();
+                    let mut acc = 0i32;
+                    for c in 0..k.div_ceil(l) {
+                        let lo = c * l;
+                        let hi = (lo + l).min(k);
+                        let xr = pack_acts(&xs[lo..hi], px, pw);
+                        let wr = pack_weights(&ws[lo..hi], px, pw);
+                        acc = sdotp_packed(acc, xr, wr, hi - lo, px, pw);
+                    }
+                    assert_eq!(acc as i64, dotp_oracle(&xs, &ws));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn flash_layout_compatible() {
+        // equal-precision lanes (px == pw): the register image must equal
+        // the packed flash bytes (weights can be DMA'd without re-packing)
+        let ws = [-2i32, 1, 0, -1];
+        let reg = pack_weights(&ws, 2, 2);
+        let flash = crate::quant::pack_subbyte(&ws, 2);
+        let flash_word = u32::from_le_bytes([flash[0], 0, 0, 0]);
+        assert_eq!(reg & 0xFF, flash_word & 0xFF);
+    }
+}

@@ -1,0 +1,159 @@
+//! The Alg. 1 three-phase DNAS driver (the paper's training procedure).
+//!
+//! ```text
+//! 1  warmup:   QAT at p_max = 8 bit, W only            (reused per bench)
+//! 2  search:   per epoch — theta on a random 20% of samples,
+//!              W on the remaining 80%; anneal tau; early-stop on val
+//! 3  finetune: freeze argmax(theta), train W only
+//! ```
+//!
+//! All numerics run in the AOT'd XLA graphs through [`crate::runtime`];
+//! this module owns state threading, the 20/80 alternation, the
+//! temperature schedule, early stopping, and assignment extraction.
+
+pub mod trainer;
+
+pub use trainer::Trainer;
+
+use crate::quant::Assignment;
+
+/// Channel-wise (ours) or layer-wise (EdMIPS baseline) search space.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    ChannelWise,
+    LayerWise,
+}
+
+impl Mode {
+    pub fn suffix(&self) -> &'static str {
+        match self {
+            Mode::ChannelWise => "cw",
+            Mode::LayerWise => "lw",
+        }
+    }
+}
+
+/// Which regularizer drives the search (Eq. 7 vs Eq. 8).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Target {
+    /// Eq. (7): model size; activations pinned to 8 bit (paper §III-A).
+    Size,
+    /// Eq. (8): energy; activations searched too.
+    Energy,
+}
+
+impl Target {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Target::Size => "size",
+            Target::Energy => "energy",
+        }
+    }
+}
+
+/// Hyper-parameters of one search run.
+#[derive(Clone, Debug)]
+pub struct SearchConfig {
+    pub bench: String,
+    pub mode: Mode,
+    pub target: Target,
+    /// regularization strength lambda of Eq. (2)
+    pub lambda: f32,
+    pub warmup_epochs: usize,
+    pub search_epochs: usize,
+    pub finetune_epochs: usize,
+    pub lr_w: f32,
+    pub lr_nas: f32,
+    /// initial softmax temperature (paper: 5.0)
+    pub tau0: f32,
+    /// per-epoch multiplicative decay (paper: e^-0.0045; our short
+    /// schedules compress it so tau reaches the same endpoint)
+    pub tau_decay: f32,
+    pub train_n: usize,
+    pub val_n: usize,
+    pub test_n: usize,
+    pub batch: usize,
+    pub seed: u64,
+    /// search early-stop patience in epochs (0 = disabled)
+    pub patience: usize,
+    /// fraction of each search epoch's samples used for theta updates
+    /// (paper: 0.2 — the 20/80 split; exposed for the ablation driver)
+    pub theta_frac: f32,
+}
+
+impl SearchConfig {
+    /// Paper-faithful defaults scaled to the synthetic CPU budget.
+    pub fn new(bench: &str, mode: Mode, target: Target, lambda: f32) -> Self {
+        SearchConfig {
+            bench: bench.to_string(),
+            mode,
+            target,
+            lambda,
+            warmup_epochs: 10,
+            search_epochs: 12,
+            finetune_epochs: 8,
+            lr_w: 2e-3,
+            lr_nas: 5e-3,
+            tau0: 5.0,
+            tau_decay: 0.82, // tau: 5 -> ~0.5 over 12 epochs
+            train_n: 1024,
+            val_n: 256,
+            test_n: 512,
+            batch: 32,
+            seed: 0,
+            patience: 5,
+            theta_frac: 0.2,
+        }
+    }
+
+    /// A smaller budget for smoke tests / quick benches.
+    pub fn quick(bench: &str, mode: Mode, target: Target, lambda: f32) -> Self {
+        let mut c = Self::new(bench, mode, target, lambda);
+        c.warmup_epochs = 5;
+        c.search_epochs = 5;
+        c.finetune_epochs = 3;
+        c.train_n = 512;
+        c.val_n = 128;
+        c.test_n = 256;
+        c.tau_decay = 0.55;
+        c
+    }
+}
+
+/// Epoch-level training log entry (the EXPERIMENTS.md loss curves).
+#[derive(Clone, Debug)]
+pub struct EpochLog {
+    pub phase: &'static str,
+    pub epoch: usize,
+    pub train_loss: f32,
+    pub val_loss: f32,
+    pub val_score: f32,
+    pub tau: f32,
+    pub reg_size: f32,
+    pub reg_energy: f32,
+}
+
+/// Result of a full Alg. 1 run.
+#[derive(Clone, Debug)]
+pub struct SearchResult {
+    pub config_label: String,
+    pub assignment: Assignment,
+    /// accuracy (classification) or AUC (AD) on the test split
+    pub test_score: f32,
+    pub test_loss: f32,
+    /// Eq. (7) under the hard assignment, in bits
+    pub size_bits: f64,
+    /// Eq. (8) under the hard assignment, in pJ per inference
+    pub energy_pj: f64,
+    pub history: Vec<EpochLog>,
+}
+
+impl SearchResult {
+    pub fn size_mb(&self) -> f64 {
+        self.size_bits / 1e6 // the paper's Fig. 3 axis is Mbit
+    }
+
+    pub fn energy_uj(&self) -> f64 {
+        self.energy_pj * 1e-6
+    }
+}

@@ -1,0 +1,578 @@
+//! State threading + the Alg. 1 phases over the AOT'd graphs.
+//!
+//! The trainer owns every tensor of training state (weights, BN running
+//! stats, NAS parameters, Adam moments) host-side and threads them
+//! through the compiled XLA step functions.  Graph input/output orders
+//! follow the manifest conventions (see `python/compile/train_graphs.py`
+//! docstring); the orders are asserted once at construction.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::{make_dataset, Batch, BatchIter, Dataset, Split};
+use crate::energy;
+use crate::models::Manifest;
+use crate::nas::{EpochLog, Mode, SearchConfig, SearchResult, Target};
+use crate::quant::Assignment;
+use crate::runtime::{Arg, Runtime};
+use crate::tensor::{Tensor, TensorI32};
+use crate::util::{auc_from_scores, mean, Pcg32};
+
+/// Pinned 8-bit activation logits used when the size regularizer disables
+/// the activation search (softmax(tau=5) of 40 is one-hot to 3 decimals).
+const ACT_PIN_LOGIT: f32 = 40.0;
+
+/// Snapshot of trainable state (for warmup reuse across a lambda sweep).
+#[derive(Clone)]
+pub struct StateSnapshot {
+    params: Vec<Tensor>,
+    bn: Vec<Tensor>,
+}
+
+pub struct Trainer<'rt> {
+    rt: &'rt Runtime,
+    pub manifest: Manifest,
+    pub cfg: SearchConfig,
+    train: Dataset,
+    val: Dataset,
+    test: Dataset,
+    // trainable state
+    params: Vec<Tensor>,
+    bn: Vec<Tensor>,
+    nas: Vec<Tensor>,
+    mw: Vec<Tensor>,
+    vw: Vec<Tensor>,
+    tw: f32,
+    mn: Vec<Tensor>,
+    vn: Vec<Tensor>,
+    tn: f32,
+    tau: f32,
+    pub history: Vec<EpochLog>,
+}
+
+/// He/constant initialisation by tensor-name suffix (mirrors
+/// `models.common.init_params`; exact values need not match Python — the
+/// graphs are pure functions of the state we feed them).
+fn init_tensor(name: &str, shape: &[usize], rng: &mut Pcg32) -> Tensor {
+    let n: usize = shape.iter().product();
+    if name.ends_with(".w") {
+        let fan_in: usize = shape.iter().skip(1).product::<usize>().max(1);
+        let std = (2.0f32 / fan_in as f32).sqrt();
+        let data = (0..n).map(|_| rng.normal_ms(0.0, std)).collect();
+        Tensor::new(shape.to_vec(), data)
+    } else if name.ends_with(".bn_scale") || name.ends_with(".bn_var") {
+        Tensor::full(shape.to_vec(), 1.0)
+    } else if name.ends_with(".alpha") {
+        Tensor::full(shape.to_vec(), 6.0)
+    } else {
+        Tensor::zeros(shape.to_vec())
+    }
+}
+
+impl<'rt> Trainer<'rt> {
+    pub fn new(rt: &'rt Runtime, cfg: SearchConfig) -> Result<Trainer<'rt>> {
+        let manifest = Manifest::load(rt.artifacts_dir(), &cfg.bench)
+            .context("loading manifest")?;
+        manifest.validate()?;
+        if cfg.batch != manifest.batch {
+            bail!("config batch {} != manifest batch {}", cfg.batch, manifest.batch);
+        }
+        let train = make_dataset(&cfg.bench, Split::Train, cfg.train_n, cfg.seed);
+        let val = make_dataset(&cfg.bench, Split::Val, cfg.val_n, cfg.seed);
+        let test = make_dataset(&cfg.bench, Split::Test, cfg.test_n, cfg.seed);
+        let mut rng = Pcg32::new(cfg.seed, 11);
+        let params = manifest
+            .params
+            .iter()
+            .map(|s| init_tensor(&s.name, &s.shape, &mut rng))
+            .collect::<Vec<_>>();
+        let bn = manifest
+            .bn_state
+            .iter()
+            .map(|s| init_tensor(&s.name, &s.shape, &mut rng))
+            .collect::<Vec<_>>();
+        let nas_slots = match cfg.mode {
+            Mode::ChannelWise => &manifest.nas_cw,
+            Mode::LayerWise => &manifest.nas_lw,
+        };
+        let mut nas: Vec<Tensor> =
+            nas_slots.iter().map(|s| Tensor::zeros(s.shape.clone())).collect();
+        // size-target runs pin all activations to 8 bit (paper §III-A)
+        if cfg.target == Target::Size {
+            for (slot, t) in nas_slots.iter().zip(nas.iter_mut()) {
+                if slot.name.ends_with(".delta") {
+                    let d = t.data_mut();
+                    d[d.len() - 1] = ACT_PIN_LOGIT;
+                }
+            }
+        }
+        let zeros_like =
+            |v: &Vec<Tensor>| v.iter().map(|t| Tensor::zeros(t.shape().to_vec())).collect();
+        let mw = zeros_like(&params);
+        let vw = zeros_like(&params);
+        let mn = zeros_like(&nas);
+        let vn = zeros_like(&nas);
+        let tau = cfg.tau0;
+        Ok(Trainer {
+            rt,
+            manifest,
+            cfg,
+            train,
+            val,
+            test,
+            params,
+            bn,
+            nas,
+            mw,
+            vw,
+            tw: 0.0,
+            mn,
+            vn,
+            tn: 0.0,
+            tau,
+            history: Vec::new(),
+        })
+    }
+
+    // ---- state access -------------------------------------------------------
+
+    pub fn snapshot(&self) -> StateSnapshot {
+        StateSnapshot { params: self.params.clone(), bn: self.bn.clone() }
+    }
+
+    pub fn restore(&mut self, s: &StateSnapshot) {
+        self.params = s.params.clone();
+        self.bn = s.bn.clone();
+        // fresh optimiser state after a restore
+        self.mw = self.params.iter().map(|t| Tensor::zeros(t.shape().to_vec())).collect();
+        self.vw = self.mw.clone();
+        self.tw = 0.0;
+    }
+
+    pub fn params_map(&self) -> HashMap<String, Tensor> {
+        self.manifest
+            .params
+            .iter()
+            .zip(&self.params)
+            .map(|(s, t)| (s.name.clone(), t.clone()))
+            .collect()
+    }
+
+    pub fn bn_map(&self) -> HashMap<String, Tensor> {
+        self.manifest
+            .bn_state
+            .iter()
+            .zip(&self.bn)
+            .map(|(s, t)| (s.name.clone(), t.clone()))
+            .collect()
+    }
+
+    /// Current argmax assignment from the NAS parameters.
+    pub fn assignment(&self) -> Assignment {
+        let nas_slots = match self.cfg.mode {
+            Mode::ChannelWise => &self.manifest.nas_cw,
+            Mode::LayerWise => &self.manifest.nas_lw,
+        };
+        let mut names = Vec::new();
+        let mut deltas = Vec::new();
+        let mut gammas = Vec::new();
+        for (slot, t) in nas_slots.iter().zip(&self.nas) {
+            if slot.name.ends_with(".delta") {
+                names.push(slot.name.trim_end_matches(".delta").to_string());
+                deltas.push(t.data().to_vec());
+            } else {
+                gammas.push((t.shape()[0], t.data().to_vec()));
+            }
+        }
+        let couts = self.manifest.qcouts();
+        Assignment::from_nas_params(&names, &deltas, &gammas, &couts)
+    }
+
+    // ---- graph plumbing -----------------------------------------------------
+
+    fn batch_tensors(&self, b: &Batch) -> (Tensor, Option<TensorI32>, Option<Tensor>) {
+        let mut shape = vec![self.cfg.batch];
+        shape.extend(&self.manifest.input_shape);
+        let x = Tensor::new(shape.clone(), b.x.clone());
+        if self.manifest.loss == "ce" {
+            (x, Some(TensorI32::new(vec![self.cfg.batch], b.y.clone())), None)
+        } else {
+            let y = Tensor::new(shape, b.x.clone());
+            (x, None, Some(y))
+        }
+    }
+
+    fn hard_tensors(&self, a: &Assignment) -> Vec<Tensor> {
+        let mut out = Vec::with_capacity(2 * a.layers.len());
+        for (d, g) in a.to_one_hot() {
+            let cout = g.len() / 3;
+            out.push(Tensor::new(vec![3], d));
+            out.push(Tensor::new(vec![cout, 3], g));
+        }
+        out
+    }
+
+    /// One hard-assignment QAT step (warmup / finetune / baselines).
+    fn step_w_hard(&mut self, b: &Batch, hard: &[Tensor], lr: f32) -> Result<(f32, f32)> {
+        let g = self.rt.graph(&self.cfg.bench, "train_w_hard")?;
+        let t = Tensor::scalar(self.tw);
+        let lr_t = Tensor::scalar(lr);
+        let (x, yi, yf) = self.batch_tensors(b);
+        let mut args: Vec<Arg> = Vec::new();
+        for t in &self.params { args.push(Arg::F32(t)); }
+        for t in &self.bn { args.push(Arg::F32(t)); }
+        for t in &self.mw { args.push(Arg::F32(t)); }
+        for t in &self.vw { args.push(Arg::F32(t)); }
+        args.push(Arg::F32(&t));
+        for t in hard { args.push(Arg::F32(t)); }
+        args.push(Arg::F32(&x));
+        match (&yi, &yf) {
+            (Some(y), _) => args.push(Arg::I32(y)),
+            (_, Some(y)) => args.push(Arg::F32(y)),
+            _ => unreachable!(),
+        }
+        args.push(Arg::F32(&lr_t));
+        let out = g.run(&args)?;
+        let np = self.params.len();
+        let nb = self.bn.len();
+        let expect = 3 * np + nb + 2;
+        if out.len() != expect {
+            bail!("train_w_hard returned {} outputs, expected {expect}", out.len());
+        }
+        let mut it = out.into_iter();
+        self.params = (&mut it).take(np).collect();
+        self.bn = (&mut it).take(nb).collect();
+        self.mw = (&mut it).take(np).collect();
+        self.vw = (&mut it).take(np).collect();
+        let loss = it.next().unwrap().item();
+        let metric = it.next().unwrap().item();
+        self.tw += 1.0;
+        Ok((loss, metric))
+    }
+
+    /// One theta step (Alg. 1 line 5).
+    fn step_theta(&mut self, b: &Batch) -> Result<(f32, f32, f32)> {
+        let graph = format!("search_theta_{}", self.cfg.mode.suffix());
+        let g = self.rt.graph(&self.cfg.bench, &graph)?;
+        let (lam_s, lam_e) = match self.cfg.target {
+            Target::Size => (self.cfg.lambda, 0.0),
+            Target::Energy => (0.0, self.cfg.lambda),
+        };
+        let act_freeze = if self.cfg.target == Target::Size { 1.0 } else { 0.0 };
+        let scalars = [
+            Tensor::scalar(self.tn),
+            Tensor::scalar(self.tau),
+            Tensor::scalar(lam_s),
+            Tensor::scalar(lam_e),
+            Tensor::scalar(self.cfg.lr_nas),
+            Tensor::scalar(act_freeze),
+        ];
+        let (x, yi, yf) = self.batch_tensors(b);
+        let mut args: Vec<Arg> = Vec::new();
+        for t in &self.params { args.push(Arg::F32(t)); }
+        for t in &self.bn { args.push(Arg::F32(t)); }
+        for t in &self.nas { args.push(Arg::F32(t)); }
+        for t in &self.mn { args.push(Arg::F32(t)); }
+        for t in &self.vn { args.push(Arg::F32(t)); }
+        args.push(Arg::F32(&scalars[0])); // t
+        args.push(Arg::F32(&x));
+        match (&yi, &yf) {
+            (Some(y), _) => args.push(Arg::I32(y)),
+            (_, Some(y)) => args.push(Arg::F32(y)),
+            _ => unreachable!(),
+        }
+        args.push(Arg::F32(&scalars[1])); // tau
+        args.push(Arg::F32(&scalars[2])); // lam_size
+        args.push(Arg::F32(&scalars[3])); // lam_energy
+        args.push(Arg::F32(&scalars[4])); // lr
+        args.push(Arg::F32(&scalars[5])); // act_freeze
+        let out = g.run(&args)?;
+        let nn = self.nas.len();
+        if out.len() != 3 * nn + 3 {
+            bail!("search_theta returned {} outputs", out.len());
+        }
+        let mut it = out.into_iter();
+        self.nas = (&mut it).take(nn).collect();
+        self.mn = (&mut it).take(nn).collect();
+        self.vn = (&mut it).take(nn).collect();
+        let loss = it.next().unwrap().item();
+        let reg_s = it.next().unwrap().item();
+        let reg_e = it.next().unwrap().item();
+        self.tn += 1.0;
+        Ok((loss, reg_s, reg_e))
+    }
+
+    /// One W step under the soft assignment (Alg. 1 line 7).
+    fn step_w_soft(&mut self, b: &Batch) -> Result<(f32, f32)> {
+        let graph = format!("search_w_{}", self.cfg.mode.suffix());
+        let g = self.rt.graph(&self.cfg.bench, &graph)?;
+        let t = Tensor::scalar(self.tw);
+        let tau = Tensor::scalar(self.tau);
+        let lr = Tensor::scalar(self.cfg.lr_w);
+        let (x, yi, yf) = self.batch_tensors(b);
+        let mut args: Vec<Arg> = Vec::new();
+        for t in &self.params { args.push(Arg::F32(t)); }
+        for t in &self.bn { args.push(Arg::F32(t)); }
+        for t in &self.nas { args.push(Arg::F32(t)); }
+        for t in &self.mw { args.push(Arg::F32(t)); }
+        for t in &self.vw { args.push(Arg::F32(t)); }
+        args.push(Arg::F32(&t));
+        args.push(Arg::F32(&x));
+        match (&yi, &yf) {
+            (Some(y), _) => args.push(Arg::I32(y)),
+            (_, Some(y)) => args.push(Arg::F32(y)),
+            _ => unreachable!(),
+        }
+        args.push(Arg::F32(&tau));
+        args.push(Arg::F32(&lr));
+        let out = g.run(&args)?;
+        let np = self.params.len();
+        let nb = self.bn.len();
+        if out.len() != 3 * np + nb + 2 {
+            bail!("search_w returned {} outputs", out.len());
+        }
+        let mut it = out.into_iter();
+        self.params = (&mut it).take(np).collect();
+        self.bn = (&mut it).take(nb).collect();
+        self.mw = (&mut it).take(np).collect();
+        self.vw = (&mut it).take(np).collect();
+        let loss = it.next().unwrap().item();
+        let metric = it.next().unwrap().item();
+        self.tw += 1.0;
+        Ok((loss, metric))
+    }
+
+    /// Evaluate a hard assignment on a split.  Returns `(loss, score)`:
+    /// accuracy for classifiers; AUC when the split carries anomaly
+    /// labels (AD test), else `-loss` (AD val early-stop criterion).
+    pub fn evaluate(&self, split: Split, a: &Assignment) -> Result<(f32, f32)> {
+        let ds = match split {
+            Split::Train => &self.train,
+            Split::Val => &self.val,
+            Split::Test => &self.test,
+        };
+        let g = self.rt.graph(&self.cfg.bench, "eval")?;
+        let hard = self.hard_tensors(a);
+        let mut losses = Vec::new();
+        let mut correct = 0.0f32;
+        let mut seen = 0usize;
+        let mut scores = Vec::new();
+        let mut labels = Vec::new();
+        for b in BatchIter::sequential(ds, self.cfg.batch) {
+            let (x, yi, yf) = self.batch_tensors(&b);
+            let mut args: Vec<Arg> = Vec::new();
+            for t in &self.params { args.push(Arg::F32(t)); }
+            for t in &self.bn { args.push(Arg::F32(t)); }
+            for t in &hard { args.push(Arg::F32(t)); }
+            args.push(Arg::F32(&x));
+            match (&yi, &yf) {
+                (Some(y), _) => args.push(Arg::I32(y)),
+                (_, Some(y)) => args.push(Arg::F32(y)),
+                _ => unreachable!(),
+            }
+            let out = g.run(&args)?;
+            if out.len() != 5 {
+                bail!("eval returned {} outputs", out.len());
+            }
+            losses.push(out[0].item());
+            correct += out[1].item();
+            seen += self.cfg.batch;
+            scores.extend_from_slice(out[2].data());
+            labels.extend(b.y.iter().map(|&v| v as u8));
+        }
+        let loss = mean(&losses);
+        let score = if self.manifest.loss == "ce" {
+            correct / seen.max(1) as f32
+        } else if labels.iter().any(|&l| l == 1) {
+            auc_from_scores(&scores, &labels)
+        } else {
+            -loss
+        };
+        Ok((loss, score))
+    }
+
+    /// Forward the `infer` graph on raw inputs (deployment cross-check).
+    pub fn infer(&self, a: &Assignment, xs: &[f32], n: usize) -> Result<Vec<Vec<f32>>> {
+        if n != self.cfg.batch {
+            bail!("infer expects a full batch of {}", self.cfg.batch);
+        }
+        let g = self.rt.graph(&self.cfg.bench, "infer")?;
+        let hard = self.hard_tensors(a);
+        let mut shape = vec![self.cfg.batch];
+        shape.extend(&self.manifest.input_shape);
+        let x = Tensor::new(shape, xs.to_vec());
+        let mut args: Vec<Arg> = Vec::new();
+        for t in &self.params { args.push(Arg::F32(t)); }
+        for t in &self.bn { args.push(Arg::F32(t)); }
+        for t in &hard { args.push(Arg::F32(t)); }
+        args.push(Arg::F32(&x));
+        let out = g.run(&args)?;
+        let o = &out[0];
+        let cols = o.len() / n;
+        Ok((0..n).map(|i| o.data()[i * cols..(i + 1) * cols].to_vec()).collect())
+    }
+
+    // ---- Alg. 1 phases ------------------------------------------------------
+
+    /// Warmup: QAT at p_max = 8 (line 1-2).
+    pub fn warmup(&mut self) -> Result<()> {
+        let a8 = Assignment::fixed(
+            &self.manifest.qnames(), &self.manifest.qcouts(), 8, 8);
+        self.train_hard_phase("warmup", self.cfg.warmup_epochs, &a8, false)
+    }
+
+    /// QAT under any fixed hard assignment; used by warmup, finetune and
+    /// the fixed-precision baselines.  With `track_best`, keeps the
+    /// params/bn with the best val score seen.
+    pub fn train_hard_phase(
+        &mut self,
+        phase: &'static str,
+        epochs: usize,
+        a: &Assignment,
+        track_best: bool,
+    ) -> Result<()> {
+        let hard = self.hard_tensors(a);
+        let mut best: Option<(f32, StateSnapshot)> = None;
+        for e in 0..epochs {
+            let mut rng = Pcg32::new(self.cfg.seed ^ 0xbeef, (e + 1) as u64);
+            let mut losses = Vec::new();
+            let batches: Vec<Batch> =
+                BatchIter::new(&self.train, self.cfg.batch, &mut rng).collect();
+            for b in &batches {
+                let (l, _) = self.step_w_hard(b, &hard, self.cfg.lr_w)?;
+                losses.push(l);
+            }
+            let (vl, vs) = self.evaluate(Split::Val, a)?;
+            self.history.push(EpochLog {
+                phase,
+                epoch: e,
+                train_loss: mean(&losses),
+                val_loss: vl,
+                val_score: vs,
+                tau: self.tau,
+                reg_size: 0.0,
+                reg_energy: 0.0,
+            });
+            if track_best && best.as_ref().map(|(s, _)| vs > *s).unwrap_or(true) {
+                best = Some((vs, self.snapshot()));
+            }
+        }
+        if let Some((_, snap)) = best {
+            self.params = snap.params;
+            self.bn = snap.bn;
+        }
+        Ok(())
+    }
+
+    /// Search: alternated theta/W with temperature annealing (lines 3-8).
+    pub fn search(&mut self) -> Result<()> {
+        let mut best_score = f32::NEG_INFINITY;
+        let mut stale = 0usize;
+        for e in 0..self.cfg.search_epochs {
+            let mut rng = Pcg32::new(self.cfg.seed ^ 0xcafe, (e + 1) as u64);
+            // 20% of the epoch's samples train theta, the rest train W
+            let frac = self.cfg.theta_frac;
+            let theta_batches: Vec<Batch> =
+                BatchIter::new(&self.train, self.cfg.batch, &mut rng)
+                    .take_front(frac)
+                    .collect();
+            let mut rng2 = Pcg32::new(self.cfg.seed ^ 0xcafe, (e + 1) as u64);
+            let w_batches: Vec<Batch> =
+                BatchIter::new(&self.train, self.cfg.batch, &mut rng2)
+                    .drop_front(frac)
+                    .collect();
+            let mut losses = Vec::new();
+            let (mut reg_s, mut reg_e) = (0.0, 0.0);
+            for b in &theta_batches {
+                let (l, rs, re) = self.step_theta(b)?;
+                losses.push(l);
+                reg_s = rs;
+                reg_e = re;
+            }
+            for b in &w_batches {
+                let (l, _) = self.step_w_soft(b)?;
+                losses.push(l);
+            }
+            self.tau *= self.cfg.tau_decay; // anneal (line 8)
+            let a = self.assignment();
+            let (vl, vs) = self.evaluate(Split::Val, &a)?;
+            self.history.push(EpochLog {
+                phase: "search",
+                epoch: e,
+                train_loss: mean(&losses),
+                val_loss: vl,
+                val_score: vs,
+                tau: self.tau,
+                reg_size: reg_s,
+                reg_energy: reg_e,
+            });
+            if vs > best_score {
+                best_score = vs;
+                stale = 0;
+            } else {
+                stale += 1;
+                if self.cfg.patience > 0 && stale >= self.cfg.patience {
+                    break; // early stop (paper: "controlled with early-stop")
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Fine-tune: freeze argmax(theta), train W (lines 9-11).
+    pub fn finetune(&mut self) -> Result<Assignment> {
+        let a = self.assignment();
+        // fresh optimiser state for the frozen-architecture phase
+        self.mw = self.params.iter().map(|t| Tensor::zeros(t.shape().to_vec())).collect();
+        self.vw = self.mw.clone();
+        self.tw = 0.0;
+        self.train_hard_phase("finetune", self.cfg.finetune_epochs, &a, true)?;
+        Ok(a)
+    }
+
+    /// Full Alg. 1, producing the Fig. 3 data point.
+    pub fn run(&mut self) -> Result<SearchResult> {
+        self.warmup()?;
+        self.run_after_warmup()
+    }
+
+    /// Search + finetune only (warmup state already restored).
+    pub fn run_after_warmup(&mut self) -> Result<SearchResult> {
+        self.search()?;
+        let a = self.finetune()?;
+        self.result_for(&a)
+    }
+
+    /// Score + cost a hard assignment with the current weights.
+    pub fn result_for(&self, a: &Assignment) -> Result<SearchResult> {
+        let (tl, ts) = self.evaluate(Split::Test, a)?;
+        let geom = self.manifest.geom();
+        Ok(SearchResult {
+            config_label: format!(
+                "{}-{}-{}-lam{:.2e}",
+                self.cfg.bench,
+                self.cfg.mode.suffix(),
+                self.cfg.target.name(),
+                self.cfg.lambda
+            ),
+            assignment: a.clone(),
+            test_score: ts,
+            test_loss: tl,
+            size_bits: energy::model_size_bits(&geom, a),
+            energy_pj: energy::model_energy_pj(&geom, a, &self.manifest.lut),
+            history: self.history.clone(),
+        })
+    }
+
+    /// Initial regularizer magnitudes (for relative lambda grids).
+    pub fn initial_regs(&self) -> Result<(f32, f32)> {
+        let a8 = Assignment::fixed(
+            &self.manifest.qnames(), &self.manifest.qcouts(), 8, 8);
+        let geom = self.manifest.geom();
+        Ok((
+            energy::model_size_bits(&geom, &a8) as f32,
+            energy::model_energy_pj(&geom, &a8, &self.manifest.lut) as f32,
+        ))
+    }
+}

@@ -1,0 +1,145 @@
+//! General affine quantization (the paper's Eq. (1)) and calibration.
+//!
+//! The deployed pipeline uses the two *specialisations* that the MPIC
+//! kernels and the training graphs share (PACT for unsigned activations,
+//! symmetric per-channel for weights — `super`), but the paper's Eq. (1)
+//! is the general asymmetric map
+//!
+//! ```text
+//! t_n = clamp_{0..2^n-1}( round( (t - alpha_t) / eps_t ) ),
+//! eps_t = (beta_t - alpha_t) / (2^n - 1)
+//! ```
+//!
+//! which this module implements for completeness plus min/max and
+//! percentile calibration of `[alpha_t, beta_t]` — used by the data
+//! pipeline tests and available to downstream users quantizing tensors
+//! the NAS does not touch (e.g. network inputs from uint8 sensors).
+
+/// An affine quantizer: `q = clamp(round((x - alpha) / eps))`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AffineQuant {
+    pub alpha: f32,
+    pub eps: f32,
+    pub bits: u32,
+}
+
+impl AffineQuant {
+    /// From an explicit `[alpha, beta]` range (Eq. (1)).
+    pub fn from_range(alpha: f32, beta: f32, bits: u32) -> AffineQuant {
+        let levels = ((1u64 << bits) - 1) as f32;
+        let eps = ((beta - alpha) / levels).max(1e-12);
+        AffineQuant { alpha, eps, bits }
+    }
+
+    /// Min/max calibration over a tensor.
+    pub fn calibrate_minmax(xs: &[f32], bits: u32) -> AffineQuant {
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for &v in xs {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        if !lo.is_finite() || !hi.is_finite() || lo == hi {
+            return AffineQuant::from_range(0.0, 1.0, bits);
+        }
+        AffineQuant::from_range(lo, hi, bits)
+    }
+
+    /// Percentile calibration (clips outliers; `p` in (0, 0.5], e.g. 0.01
+    /// keeps the [1%, 99%] range) — the standard PTQ trick.
+    pub fn calibrate_percentile(xs: &[f32], bits: u32, p: f32) -> AffineQuant {
+        if xs.is_empty() {
+            return AffineQuant::from_range(0.0, 1.0, bits);
+        }
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = sorted.len();
+        let lo_i = ((n as f32 * p) as usize).min(n - 1);
+        let hi_i = ((n as f32 * (1.0 - p)) as usize).min(n - 1);
+        AffineQuant::from_range(sorted[lo_i], sorted[hi_i.max(lo_i)], bits)
+    }
+
+    /// Quantize one value to its integer code.
+    pub fn quantize(&self, x: f32) -> u32 {
+        let levels = ((1u64 << self.bits) - 1) as f32;
+        (((x - self.alpha) / self.eps).round_ties_even()).clamp(0.0, levels) as u32
+    }
+
+    /// Dequantize a code back to float.
+    pub fn dequantize(&self, q: u32) -> f32 {
+        self.alpha + q as f32 * self.eps
+    }
+
+    /// Fake-quantize (quantize then dequantize).
+    pub fn fake(&self, x: f32) -> f32 {
+        self.dequantize(self.quantize(x))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn codes_cover_full_range() {
+        let q = AffineQuant::from_range(-1.0, 1.0, 4);
+        assert_eq!(q.quantize(-1.0), 0);
+        assert_eq!(q.quantize(1.0), 15);
+        assert_eq!(q.quantize(-5.0), 0); // clamped
+        assert_eq!(q.quantize(5.0), 15);
+    }
+
+    #[test]
+    fn roundtrip_error_bounded_by_half_step() {
+        let mut rng = Pcg32::seeded(5);
+        for bits in [2u32, 4, 8] {
+            let xs: Vec<f32> = (0..500).map(|_| rng.normal_ms(0.3, 1.0)).collect();
+            let q = AffineQuant::calibrate_minmax(&xs, bits);
+            for &x in &xs {
+                let err = (x - q.fake(x)).abs();
+                assert!(err <= q.eps * 0.5 + 1e-6,
+                        "bits={bits} x={x} err={err} eps={}", q.eps);
+            }
+        }
+    }
+
+    #[test]
+    fn asymmetric_handles_shifted_ranges() {
+        // all-positive data must not waste codes on negatives
+        let xs: Vec<f32> = (0..100).map(|i| 10.0 + i as f32 * 0.01).collect();
+        let q = AffineQuant::calibrate_minmax(&xs, 8);
+        assert!(q.alpha >= 10.0 - 1e-6);
+        assert_eq!(q.quantize(10.0), 0);
+    }
+
+    #[test]
+    fn percentile_clips_outliers() {
+        let mut xs = vec![0.5f32; 1000];
+        xs[0] = -100.0;
+        xs[999] = 100.0;
+        let mm = AffineQuant::calibrate_minmax(&xs, 8);
+        let pc = AffineQuant::calibrate_percentile(&xs, 8, 0.01);
+        assert!(pc.eps < mm.eps / 10.0);
+    }
+
+    #[test]
+    fn degenerate_input_safe() {
+        let q = AffineQuant::calibrate_minmax(&[3.0, 3.0, 3.0], 4);
+        let _ = q.quantize(3.0);
+        let q2 = AffineQuant::calibrate_minmax(&[], 4);
+        let mid = q2.quantize(0.5);
+        assert!((7..=8).contains(&mid)); // mid-range of default [0,1] (ties-even)
+    }
+
+    #[test]
+    fn symmetric_is_special_case() {
+        // Eq. (1) with alpha = -beta reproduces the symmetric weight grid
+        // (up to the even-levels offset)
+        let xs: Vec<f32> = vec![-0.9, -0.3, 0.0, 0.4, 0.9];
+        let q = AffineQuant::from_range(-0.9, 0.9, 8);
+        for &x in &xs {
+            assert!((q.fake(x) - x).abs() <= q.eps * 0.5 + 1e-7);
+        }
+    }
+}

@@ -1,0 +1,313 @@
+//! Quantization utilities on the Rust side.
+//!
+//! The *training-time* fake quantization lives in the JAX/Pallas graphs;
+//! this module implements the *deployment-time* integer pipeline:
+//!
+//! * [`quantize_weights_perchannel`] — real integer weights + per-channel
+//!   scales (the symmetric scheme the HLO graphs fake-quantize with);
+//! * [`quantize_acts_pact`] — unsigned activation quantization against a
+//!   learned PACT `alpha`;
+//! * [`pack_subbyte`] / [`unpack_subbyte`] — 2/4-bit weight packing into
+//!   bytes, i.e. the non-volatile-memory layout whose footprint Eq. (7)
+//!   optimizes (and the MPIC simulator's load granularity);
+//! * [`Assignment`] — a concrete per-channel bit-width assignment
+//!   extracted from NAS parameters by row-wise argmax, plus the one-hot
+//!   encoding fed back into the hard-assignment HLO graphs.
+
+pub mod affine;
+
+pub use affine::AffineQuant;
+
+use crate::{precision_index, PRECISIONS};
+
+/// Per-layer precision decision: activation bits + per-channel weight bits.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerAssignment {
+    pub name: String,
+    pub act_bits: u32,
+    /// one entry per output channel
+    pub weight_bits: Vec<u32>,
+}
+
+impl LayerAssignment {
+    /// Uniform (fixed-precision) assignment for a layer.
+    pub fn fixed(name: &str, act_bits: u32, weight_bits: u32, cout: usize) -> Self {
+        LayerAssignment {
+            name: name.to_string(),
+            act_bits,
+            weight_bits: vec![weight_bits; cout],
+        }
+    }
+
+    /// Fraction of channels at each precision (the Fig. 4 bars).
+    pub fn fractions(&self) -> [f32; 3] {
+        let mut counts = [0usize; 3];
+        for &b in &self.weight_bits {
+            counts[precision_index(b)] += 1;
+        }
+        let n = self.weight_bits.len().max(1) as f32;
+        [counts[0] as f32 / n, counts[1] as f32 / n, counts[2] as f32 / n]
+    }
+}
+
+/// A whole-network assignment (one entry per quantized layer, in order).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Assignment {
+    pub layers: Vec<LayerAssignment>,
+}
+
+impl Assignment {
+    /// Row-wise argmax extraction from raw NAS parameters.
+    ///
+    /// `delta`: `|P_X|` logits; `gamma`: `rows * |P_W|` logits row-major
+    /// (rows = 1 for layer-wise searches gets broadcast to `cout`).
+    pub fn from_nas_params(
+        names: &[String],
+        deltas: &[Vec<f32>],
+        gammas: &[(usize, Vec<f32>)], // (rows, row-major logits)
+        couts: &[usize],
+    ) -> Assignment {
+        assert_eq!(names.len(), deltas.len());
+        assert_eq!(names.len(), gammas.len());
+        let mut layers = Vec::with_capacity(names.len());
+        for i in 0..names.len() {
+            let act_bits = PRECISIONS[crate::util::stats::argmax(&deltas[i])];
+            let (rows, g) = &gammas[i];
+            let np = PRECISIONS.len();
+            let mut weight_bits = Vec::with_capacity(couts[i]);
+            if *rows == 1 {
+                let b = PRECISIONS[crate::util::stats::argmax(&g[0..np])];
+                weight_bits = vec![b; couts[i]];
+            } else {
+                assert_eq!(*rows, couts[i]);
+                for r in 0..*rows {
+                    let row = &g[r * np..(r + 1) * np];
+                    weight_bits.push(PRECISIONS[crate::util::stats::argmax(row)]);
+                }
+            }
+            layers.push(LayerAssignment {
+                name: names[i].clone(),
+                act_bits,
+                weight_bits,
+            });
+        }
+        Assignment { layers }
+    }
+
+    /// One-hot encoding for the hard-assignment HLO graphs:
+    /// per layer, (`delta_oh` len 3, `gamma_oh` cout x 3 row-major).
+    pub fn to_one_hot(&self) -> Vec<(Vec<f32>, Vec<f32>)> {
+        self.layers
+            .iter()
+            .map(|l| {
+                let mut d = vec![0.0f32; 3];
+                d[precision_index(l.act_bits)] = 1.0;
+                let mut g = vec![0.0f32; l.weight_bits.len() * 3];
+                for (c, &b) in l.weight_bits.iter().enumerate() {
+                    g[c * 3 + precision_index(b)] = 1.0;
+                }
+                (d, g)
+            })
+            .collect()
+    }
+
+    /// Uniform fixed-precision assignment over a model's quantized layers.
+    pub fn fixed(names: &[String], couts: &[usize], wbits: u32, xbits: u32) -> Self {
+        Assignment {
+            layers: names
+                .iter()
+                .zip(couts)
+                .map(|(n, &c)| LayerAssignment::fixed(n, xbits, wbits, c))
+                .collect(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Integer quantization (deployment).
+// ---------------------------------------------------------------------------
+
+/// Symmetric per-channel weight quantization.
+///
+/// Returns `(q, scales)` with `q[i] in [-(2^(b-1)-1), 2^(b-1)-1]` and
+/// `w ~= q * scale[channel]` — exactly the grid the Pallas fake-quant
+/// kernel trains against, so deployment is lossless w.r.t. training.
+pub fn quantize_weights_perchannel(
+    w: &[f32],
+    cout: usize,
+    bits_per_channel: &[u32],
+) -> (Vec<i32>, Vec<f32>) {
+    assert_eq!(bits_per_channel.len(), cout);
+    assert_eq!(w.len() % cout, 0);
+    let k = w.len() / cout;
+    let mut q = vec![0i32; w.len()];
+    let mut scales = vec![0.0f32; cout];
+    for c in 0..cout {
+        let row = &w[c * k..(c + 1) * k];
+        let levels = ((1i32 << (bits_per_channel[c] - 1)) - 1) as f32;
+        let amax = row.iter().fold(0.0f32, |m, &v| m.max(v.abs())).max(1e-8);
+        let s = amax / levels;
+        scales[c] = s;
+        for (j, &v) in row.iter().enumerate() {
+            // round-half-to-even matches XLA's jnp.round exactly
+            q[c * k + j] = (v / s).round_ties_even().clamp(-levels, levels) as i32;
+        }
+    }
+    (q, scales)
+}
+
+/// PACT unsigned activation quantization: returns `(q, step)` with
+/// `q in [0, 2^bits - 1]`, `x ~= q * step`.
+pub fn quantize_acts_pact(x: &[f32], alpha: f32, bits: u32) -> (Vec<u32>, f32) {
+    let levels = ((1u32 << bits) - 1) as f32;
+    let a = alpha.max(1e-6);
+    let eps = a / levels;
+    let q = x
+        .iter()
+        .map(|&v| ((v.clamp(0.0, a)) / eps).round_ties_even() as u32)
+        .collect();
+    (q, eps)
+}
+
+// ---------------------------------------------------------------------------
+// Sub-byte packing (the model-size layout of Eq. (7)).
+// ---------------------------------------------------------------------------
+
+/// Pack signed integers of width `bits` (2/4/8) into bytes, little-endian
+/// within a byte.  Values must fit the signed range of `bits`.
+pub fn pack_subbyte(values: &[i32], bits: u32) -> Vec<u8> {
+    assert!(matches!(bits, 2 | 4 | 8));
+    let per_byte = (8 / bits) as usize;
+    let mask = ((1u32 << bits) - 1) as u8;
+    let mut out = vec![0u8; values.len().div_ceil(per_byte)];
+    for (i, &v) in values.iter().enumerate() {
+        let enc = (v as i8 as u8) & mask; // two's complement truncation
+        out[i / per_byte] |= enc << ((i % per_byte) as u32 * bits);
+    }
+    out
+}
+
+/// Inverse of [`pack_subbyte`] (sign-extending), producing `n` values.
+pub fn unpack_subbyte(bytes: &[u8], bits: u32, n: usize) -> Vec<i32> {
+    assert!(matches!(bits, 2 | 4 | 8));
+    let per_byte = (8 / bits) as usize;
+    let mask = ((1u32 << bits) - 1) as u8;
+    let sign_bit = 1u8 << (bits - 1);
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let b = bytes[i / per_byte];
+        let raw = (b >> ((i % per_byte) as u32 * bits)) & mask;
+        let v = if raw & sign_bit != 0 {
+            (raw as i32) - (1i32 << bits)
+        } else {
+            raw as i32
+        };
+        out.push(v);
+    }
+    out
+}
+
+/// Packed byte size of a per-channel-quantized weight tensor — the model
+/// size the Fig. 3 memory axis reports (each channel row padded to a byte
+/// boundary, which is how CMix-NN-style layouts store reordered groups).
+pub fn packed_weight_bytes(cout: usize, k: usize, bits_per_channel: &[u32]) -> usize {
+    assert_eq!(bits_per_channel.len(), cout);
+    bits_per_channel
+        .iter()
+        .map(|&b| (k * b as usize).div_ceil(8))
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn weight_quant_roundtrip_error_bounded() {
+        let mut rng = Pcg32::seeded(1);
+        let cout = 4;
+        let k = 32;
+        let w: Vec<f32> = (0..cout * k).map(|_| rng.normal_ms(0.0, 0.3)).collect();
+        for bits in [2u32, 4, 8] {
+            let (q, s) = quantize_weights_perchannel(&w, cout, &vec![bits; cout]);
+            let max_err = w
+                .iter()
+                .enumerate()
+                .map(|(i, &v)| (v - q[i] as f32 * s[i / k]).abs())
+                .fold(0.0f32, f32::max);
+            let worst_step = s.iter().cloned().fold(0.0f32, f32::max);
+            assert!(max_err <= worst_step * 0.5 + 1e-6,
+                    "bits={bits} err {max_err} step {worst_step}");
+        }
+    }
+
+    #[test]
+    fn act_quant_range() {
+        let x = [-1.0f32, 0.0, 0.5, 3.0, 10.0];
+        let (q, eps) = quantize_acts_pact(&x, 4.0, 4);
+        assert_eq!(q[0], 0);
+        assert_eq!(q[4], 15); // clamped to alpha
+        assert!((eps - 4.0 / 15.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip_all_widths() {
+        let mut rng = Pcg32::seeded(3);
+        for bits in [2u32, 4, 8] {
+            let lo = -(1i32 << (bits - 1)) + 1;
+            let hi = (1i32 << (bits - 1)) - 1;
+            let vals: Vec<i32> = (0..97)
+                .map(|_| lo + rng.below((hi - lo + 1) as u32) as i32)
+                .collect();
+            let packed = pack_subbyte(&vals, bits);
+            assert_eq!(packed.len(), (97 * bits as usize).div_ceil(8));
+            let back = unpack_subbyte(&packed, bits, vals.len());
+            assert_eq!(back, vals, "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn packed_bytes_mixed() {
+        // 3 channels of k=10 weights at 2/4/8 bits:
+        // ceil(20/8)+ceil(40/8)+ceil(80/8) = 3+5+10
+        assert_eq!(packed_weight_bytes(3, 10, &[2, 4, 8]), 18);
+    }
+
+    #[test]
+    fn assignment_argmax_extraction() {
+        let names = vec!["a".to_string(), "b".to_string()];
+        let deltas = vec![vec![0.1, 0.9, 0.2], vec![0.0, 0.0, 1.0]];
+        // layer a: per-channel (2 rows), layer b: layer-wise (1 row)
+        let gammas = vec![
+            (2usize, vec![1.0, 0.0, 0.0, 0.0, 0.0, 2.0]),
+            (1usize, vec![0.0, 5.0, 1.0]),
+        ];
+        let a = Assignment::from_nas_params(&names, &deltas, &gammas, &[2, 3]);
+        assert_eq!(a.layers[0].act_bits, 4);
+        assert_eq!(a.layers[0].weight_bits, vec![2, 8]);
+        assert_eq!(a.layers[1].act_bits, 8);
+        assert_eq!(a.layers[1].weight_bits, vec![4, 4, 4]);
+    }
+
+    #[test]
+    fn one_hot_encodes_assignment() {
+        let a = Assignment::fixed(
+            &["l".to_string()], &[2], 4, 8);
+        let oh = a.to_one_hot();
+        assert_eq!(oh[0].0, vec![0.0, 0.0, 1.0]); // act 8-bit
+        assert_eq!(oh[0].1, vec![0.0, 1.0, 0.0, 0.0, 1.0, 0.0]); // w 4-bit x2
+    }
+
+    #[test]
+    fn fractions_sum_to_one() {
+        let l = LayerAssignment {
+            name: "x".into(),
+            act_bits: 8,
+            weight_bits: vec![2, 2, 4, 8],
+        };
+        let f = l.fractions();
+        assert!((f[0] - 0.5).abs() < 1e-6);
+        assert!((f.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,194 @@
+//! Fig. 3 / Fig. 4 style reporting: ASCII Pareto plots, CSV series, and
+//! the per-layer assignment dump with precision fractions.
+
+use std::fmt::Write as _;
+
+use crate::coordinator::pareto::{iso_score_saving, pareto_front};
+use crate::coordinator::results::StoredResult;
+use crate::nas::Target;
+use crate::quant::Assignment;
+use crate::util::plot::{scatter, Series};
+
+/// (cost, score) extraction for stored results.
+pub fn points_of(rs: &[StoredResult], target: Target) -> Vec<(f64, f32)> {
+    rs.iter()
+        .map(|r| {
+            let cost = match target {
+                Target::Size => r.size_bits / 1e6,
+                Target::Energy => r.energy_pj * 1e-6,
+            };
+            (cost, r.test_score)
+        })
+        .collect()
+}
+
+/// Render one Fig. 3 panel: scatter + per-series table + headline
+/// iso-accuracy savings (ours vs EdMIPS), exactly the quantities §IV-B
+/// quotes.
+pub fn fig3_panel(
+    bench: &str,
+    target: Target,
+    ours: &[StoredResult],
+    edmips: &[StoredResult],
+    fixed: &[StoredResult],
+) -> String {
+    let xlabel = match target {
+        Target::Size => "model size [Mbit]",
+        Target::Energy => "energy [uJ]",
+    };
+    let po = points_of(ours, target);
+    let pe = points_of(edmips, target);
+    let pf = points_of(fixed, target);
+    let mut out = String::new();
+    let title = format!("Fig.3 {bench} / {}", target.name());
+    out.push_str(&scatter(
+        &title,
+        xlabel,
+        "score",
+        &[
+            Series::new("ours (channel-wise)", 'o', f32pts(&po)),
+            Series::new("EdMIPS (layer-wise)", 'x', f32pts(&pe)),
+            Series::new("fixed wNxM", '+', f32pts(&pf)),
+        ],
+        64,
+        16,
+    ));
+    out.push('\n');
+    let table = |name: &str, rs: &[StoredResult], pts: &[(f64, f32)]| {
+        let mut s = format!("  {name}:\n");
+        let front = pareto_front(pts);
+        for (i, r) in rs.iter().enumerate() {
+            let mark = if front.contains(&i) { "*" } else { " " };
+            let _ = writeln!(
+                s,
+                "   {mark} {:<28} cost={:>10.4} score={:.4}",
+                r.label, pts[i].0, pts[i].1
+            );
+        }
+        s
+    };
+    out.push_str(&table("ours", ours, &po));
+    out.push_str(&table("edmips", edmips, &pe));
+    out.push_str(&table("fixed", fixed, &pf));
+
+    let front_of = |pts: &[(f64, f32)]| -> Vec<(f64, f32)> {
+        pareto_front(pts).into_iter().map(|i| pts[i]).collect()
+    };
+    if let Some(s) = iso_score_saving(&front_of(&po), &front_of(&pe), 0.002) {
+        let _ = writeln!(
+            out,
+            "  iso-accuracy {} saving vs EdMIPS: {:.1}%  (paper: up to {}%)",
+            target.name(),
+            s * 100.0,
+            paper_headline(bench, target)
+        );
+    } else {
+        let _ = writeln!(out, "  no iso-accuracy saving vs EdMIPS on this run");
+    }
+    out
+}
+
+fn f32pts(p: &[(f64, f32)]) -> Vec<(f32, f32)> {
+    p.iter().map(|&(c, s)| (c as f32, s)).collect()
+}
+
+/// The paper's §IV-B headline number for a panel (for side-by-side).
+pub fn paper_headline(bench: &str, target: Target) -> &'static str {
+    match (bench, target) {
+        ("ic", Target::Energy) => "26.4",
+        ("ic", Target::Size) => "35",
+        ("kws", Target::Energy) => "27.2",
+        ("kws", Target::Size) => "15.6",
+        ("vww", Target::Energy) => "~0 (limited)",
+        ("vww", Target::Size) => "63.4",
+        ("ad", Target::Energy) => "11.6 (low-AUC regime)",
+        ("ad", Target::Size) => "46.1",
+        _ => "?",
+    }
+}
+
+/// Fig. 4 style dump: per-layer activation bits + weight-precision
+/// fractions (percent of channels at 2/4/8 bit).
+pub fn fig4_dump(label: &str, a: &Assignment) -> String {
+    let mut out = format!("Fig.4-style assignment dump: {label}\n");
+    out.push_str("  layer        act  | %w2   %w4   %w8\n");
+    for l in &a.layers {
+        let f = l.fractions();
+        let _ = writeln!(
+            out,
+            "  {:<12} x{}  | {:>4.0}% {:>4.0}% {:>4.0}%",
+            l.name,
+            l.act_bits,
+            f[0] * 100.0,
+            f[1] * 100.0,
+            f[2] * 100.0
+        );
+    }
+    out
+}
+
+/// CSV export of a series (one row per model) for external plotting.
+pub fn csv_series(name: &str, rs: &[StoredResult], target: Target) -> String {
+    let mut out = String::from("series,label,cost,score,size_bits,energy_pj\n");
+    for (r, (c, s)) in rs.iter().zip(points_of(rs, target)) {
+        let _ = writeln!(
+            out,
+            "{name},{},{c},{s},{},{}",
+            r.label, r.size_bits, r.energy_pj
+        );
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::LayerAssignment;
+
+    fn sr(label: &str, score: f32, size: f64, energy: f64) -> StoredResult {
+        StoredResult {
+            label: label.into(),
+            test_score: score,
+            size_bits: size,
+            energy_pj: energy,
+            assignment: Assignment {
+                layers: vec![LayerAssignment {
+                    name: "c1".into(),
+                    act_bits: 8,
+                    weight_bits: vec![2, 4, 8, 8],
+                }],
+            },
+        }
+    }
+
+    #[test]
+    fn fig3_panel_renders() {
+        let ours = vec![sr("o-lo", 0.8, 1e6, 2e6), sr("o-hi", 0.9, 3e6, 6e6)];
+        let ed = vec![sr("e", 0.8, 2e6, 4e6)];
+        let fx = vec![sr("w8x8", 0.88, 4e6, 8e6)];
+        let s = fig3_panel("ic", Target::Size, &ours, &ed, &fx);
+        assert!(s.contains("ours"));
+        assert!(s.contains("iso-accuracy"));
+    }
+
+    #[test]
+    fn fig4_fractions() {
+        let a = Assignment {
+            layers: vec![LayerAssignment {
+                name: "c1".into(),
+                act_bits: 4,
+                weight_bits: vec![2, 2, 4, 8],
+            }],
+        };
+        let s = fig4_dump("test", &a);
+        assert!(s.contains("x4"));
+        assert!(s.contains("50%"));
+    }
+
+    #[test]
+    fn csv_has_rows() {
+        let rs = vec![sr("a", 0.5, 1.0, 2.0)];
+        let csv = csv_series("ours", &rs, Target::Energy);
+        assert_eq!(csv.lines().count(), 2);
+    }
+}

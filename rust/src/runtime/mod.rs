@@ -1,0 +1,117 @@
+//! PJRT runtime: loads the AOT'd HLO-text artifacts and executes them.
+//!
+//! This is the only place the `xla` crate is touched.  Pattern (from
+//! /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//!
+//! Graphs are compiled **once** per process and cached; every training
+//! step is then a single `execute` call with the step's literals.  All
+//! graphs were lowered with `return_tuple=True`, so results come back as
+//! one tuple literal that we decompose here.
+//!
+//! Python is never involved: the artifacts are plain files produced by
+//! `make artifacts` at build time.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::tensor::{Tensor, TensorI32};
+
+/// A compiled, executable graph.
+pub struct CompiledGraph {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Input literal for [`CompiledGraph::run`].
+pub enum Arg<'a> {
+    F32(&'a Tensor),
+    I32(&'a TensorI32),
+}
+
+impl CompiledGraph {
+    /// Execute with the given inputs; returns the decomposed output tuple
+    /// as host tensors (all graphs return flat tuples of f32 arrays).
+    pub fn run(&self, args: &[Arg]) -> Result<Vec<Tensor>> {
+        let mut lits = Vec::with_capacity(args.len());
+        for a in args {
+            match a {
+                Arg::F32(t) => lits.push(t.to_literal()?),
+                Arg::I32(t) => lits.push(t.to_literal()?),
+            }
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&lits)
+            .with_context(|| format!("executing {}", self.name))?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        parts
+            .iter()
+            .map(Tensor::from_literal)
+            .collect::<Result<Vec<_>>>()
+    }
+}
+
+/// Compiles and caches graphs from an artifact directory.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifacts: PathBuf,
+    cache: Mutex<HashMap<String, Arc<CompiledGraph>>>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT runtime rooted at `artifacts/`.
+    pub fn cpu(artifacts: &Path) -> Result<Runtime> {
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        Ok(Runtime {
+            client,
+            artifacts: artifacts.to_path_buf(),
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.artifacts
+    }
+
+    /// Load + compile `artifacts/<bench>/<graph>.hlo.txt` (cached).
+    pub fn graph(&self, bench: &str, graph: &str) -> Result<Arc<CompiledGraph>> {
+        let key = format!("{bench}/{graph}");
+        if let Some(g) = self.cache.lock().unwrap().get(&key) {
+            return Ok(g.clone());
+        }
+        let path = self.artifacts.join(bench).join(format!("{graph}.hlo.txt"));
+        let compiled = self.compile_file(&path, &key)?;
+        let arc = Arc::new(compiled);
+        self.cache.lock().unwrap().insert(key, arc.clone());
+        Ok(arc)
+    }
+
+    /// Compile an HLO-text file outside the bench/graph naming scheme.
+    pub fn compile_file(&self, path: &Path, name: &str) -> Result<CompiledGraph> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e}", path.display()))?;
+        Ok(CompiledGraph { name: name.to_string(), exe })
+    }
+
+    /// Number of graphs compiled so far (diagnostics).
+    pub fn compiled_count(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}

@@ -1,0 +1,187 @@
+//! Small host tensors used throughout the coordinator.
+//!
+//! These are deliberately simple row-major owned buffers: the heavy math
+//! runs either in the XLA executables (training) or in the MPIC simulator
+//! (deployment), so the coordinator mostly moves data and bookkeeps
+//! shapes.  Conversion to/from `xla::Literal` lives here so `runtime/`
+//! stays thin.
+
+use anyhow::{bail, Result};
+
+/// Row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(),
+                   "shape {shape:?} vs data len {}", data.len());
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn full(shape: Vec<usize>, v: f32) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![v; n] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Scalar extraction (0-d or single-element).
+    pub fn item(&self) -> f32 {
+        assert_eq!(self.data.len(), 1, "item() on len {}", self.data.len());
+        self.data[0]
+    }
+
+    /// 2D accessor.
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.shape.len(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    pub fn set2(&mut self, i: usize, j: usize, v: f32) {
+        debug_assert_eq!(self.shape.len(), 2);
+        self.data[i * self.shape[1] + j] = v;
+    }
+
+    /// Reshape (must preserve element count).
+    pub fn reshape(mut self, shape: Vec<usize>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape;
+        self
+    }
+
+    /// Row slice of a 2D tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        let c = self.shape[1];
+        &self.data[i * c..(i + 1) * c]
+    }
+
+    // ---- Literal conversion ------------------------------------------------
+
+    /// To an `xla::Literal` with this tensor's shape.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = xla::Literal::vec1(&self.data);
+        if self.shape.is_empty() {
+            // 0-d scalar: reshape to rank-0
+            Ok(lit.reshape(&[])?)
+        } else {
+            let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+            Ok(lit.reshape(&dims)?)
+        }
+    }
+
+    /// From an `xla::Literal` (f32 or convertible).
+    pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data: Vec<f32> = match shape.ty() {
+            xla::ElementType::F32 => lit.to_vec::<f32>()?,
+            xla::ElementType::S32 => lit
+                .to_vec::<i32>()?
+                .into_iter()
+                .map(|v| v as f32)
+                .collect(),
+            other => bail!("unsupported literal element type {other:?}"),
+        };
+        Ok(Tensor::new(dims, data))
+    }
+}
+
+/// Row-major i32 tensor (labels).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorI32 {
+    shape: Vec<usize>,
+    data: Vec<i32>,
+}
+
+impl TensorI32 {
+    pub fn new(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        TensorI32 { shape, data }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn data(&self) -> &[i32] {
+        &self.data
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = xla::Literal::vec1(&self.data);
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        Ok(lit.reshape(&dims)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_data_invariant() {
+        let t = Tensor::zeros(vec![2, 3]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.shape(), &[2, 3]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_shape_panics() {
+        Tensor::new(vec![2, 2], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn at2_row_major() {
+        let t = Tensor::new(vec![2, 3], (0..6).map(|v| v as f32).collect());
+        assert_eq!(t.at2(1, 2), 5.0);
+        assert_eq!(t.row(1), &[3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::new(vec![6], (0..6).map(|v| v as f32).collect());
+        let t = t.reshape(vec![3, 2]);
+        assert_eq!(t.at2(2, 1), 5.0);
+    }
+
+    #[test]
+    fn scalar_item() {
+        assert_eq!(Tensor::scalar(4.5).item(), 4.5);
+    }
+}

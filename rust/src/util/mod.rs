@@ -1,0 +1,10 @@
+//! Shared utilities: deterministic RNG, statistics, timing, ASCII plots.
+
+pub mod plot;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+pub use rng::Pcg32;
+pub use stats::{auc_from_scores, mean, std_dev};
+pub use timer::Stopwatch;

@@ -1,0 +1,103 @@
+//! Terminal ASCII scatter plots for the Fig. 3 Pareto fronts.
+//!
+//! The bench harnesses print the same series the paper plots (score vs
+//! energy / score vs size, one marker per searched model) so the Pareto
+//! shape is inspectable straight from `cargo bench` output; the exact
+//! numbers also go to CSV via [`crate::report`].
+
+/// One plotted series: a name, a marker character and (x, y) points.
+pub struct Series {
+    pub name: String,
+    pub marker: char,
+    pub points: Vec<(f32, f32)>,
+}
+
+impl Series {
+    pub fn new(name: &str, marker: char, points: Vec<(f32, f32)>) -> Self {
+        Series { name: name.to_string(), marker, points }
+    }
+}
+
+/// Render series into a `width` x `height` character grid with axes.
+pub fn scatter(title: &str, xlabel: &str, ylabel: &str,
+               series: &[Series], width: usize, height: usize) -> String {
+    let pts: Vec<(f32, f32)> =
+        series.iter().flat_map(|s| s.points.iter().cloned()).collect();
+    if pts.is_empty() {
+        return format!("{title}: (no points)\n");
+    }
+    let (mut xmin, mut xmax) = (f32::INFINITY, f32::NEG_INFINITY);
+    let (mut ymin, mut ymax) = (f32::INFINITY, f32::NEG_INFINITY);
+    for &(x, y) in &pts {
+        xmin = xmin.min(x);
+        xmax = xmax.max(x);
+        ymin = ymin.min(y);
+        ymax = ymax.max(y);
+    }
+    if (xmax - xmin).abs() < 1e-12 {
+        xmax = xmin + 1.0;
+    }
+    if (ymax - ymin).abs() < 1e-12 {
+        ymax = ymin + 1.0;
+    }
+    let mut grid = vec![vec![' '; width]; height];
+    for s in series {
+        for &(x, y) in &s.points {
+            let cx = (((x - xmin) / (xmax - xmin)) * (width as f32 - 1.0))
+                .round() as usize;
+            let cy = (((y - ymin) / (ymax - ymin)) * (height as f32 - 1.0))
+                .round() as usize;
+            let row = height - 1 - cy.min(height - 1);
+            grid[row][cx.min(width - 1)] = s.marker;
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!("  {title}\n"));
+    out.push_str(&format!("  {ylabel}\n"));
+    for (i, row) in grid.iter().enumerate() {
+        let yv = ymax - (ymax - ymin) * i as f32 / (height as f32 - 1.0);
+        out.push_str(&format!("  {yv:8.3} |"));
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&format!("  {:>8} +{}\n", "", "-".repeat(width)));
+    out.push_str(&format!("  {:>10}{:<w$.3}{:>.3}\n", "", xmin, xmax,
+                          w = width - 5));
+    out.push_str(&format!("  x: {xlabel}   "));
+    for s in series {
+        out.push_str(&format!("[{}] {}  ", s.marker, s.name));
+    }
+    out.push('\n');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_points_and_legend() {
+        let s = vec![
+            Series::new("ours", 'o', vec![(0.0, 0.0), (1.0, 1.0)]),
+            Series::new("edmips", 'x', vec![(0.5, 0.2)]),
+        ];
+        let out = scatter("t", "energy", "acc", &s, 40, 10);
+        assert!(out.contains('o'));
+        assert!(out.contains('x'));
+        assert!(out.contains("ours"));
+        assert!(out.contains("edmips"));
+    }
+
+    #[test]
+    fn empty_series_ok() {
+        let out = scatter("t", "x", "y", &[], 10, 5);
+        assert!(out.contains("no points"));
+    }
+
+    #[test]
+    fn degenerate_range_ok() {
+        let s = vec![Series::new("a", '*', vec![(1.0, 2.0), (1.0, 2.0)])];
+        let out = scatter("t", "x", "y", &s, 20, 5);
+        assert!(out.contains('*'));
+    }
+}

@@ -1,0 +1,112 @@
+//! Small statistics helpers: mean/std, argmax, and the ROC-AUC used to
+//! score the Anomaly Detection benchmark (the paper reports AUC for AD).
+
+/// Arithmetic mean (0 for empty input).
+pub fn mean(xs: &[f32]) -> f32 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f32>() / xs.len() as f32
+}
+
+/// Sample standard deviation (0 for n < 2).
+pub fn std_dev(xs: &[f32]) -> f32 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    let var = xs.iter().map(|x| (x - m) * (x - m)).sum::<f32>()
+        / (xs.len() - 1) as f32;
+    var.sqrt()
+}
+
+/// Index of the maximum element (first on ties).
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Area under the ROC curve via the Mann–Whitney U statistic.
+///
+/// `scores` are anomaly scores (higher = more anomalous), `labels` are
+/// 1 = anomaly, 0 = normal.  Ties contribute 1/2, matching scikit-learn's
+/// `roc_auc_score`.
+pub fn auc_from_scores(scores: &[f32], labels: &[u8]) -> f32 {
+    assert_eq!(scores.len(), labels.len());
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap());
+    // rank positives (average ranks over ties)
+    let n = scores.len();
+    let mut rank = vec![0.0f64; n];
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && scores[idx[j + 1]] == scores[idx[i]] {
+            j += 1;
+        }
+        let avg = (i + j) as f64 / 2.0 + 1.0;
+        for k in i..=j {
+            rank[idx[k]] = avg;
+        }
+        i = j + 1;
+    }
+    let n_pos = labels.iter().filter(|&&l| l == 1).count();
+    let n_neg = n - n_pos;
+    if n_pos == 0 || n_neg == 0 {
+        return 0.5;
+    }
+    let rank_sum: f64 = (0..n).filter(|&i| labels[i] == 1).map(|i| rank[i]).sum();
+    let u = rank_sum - (n_pos as f64 * (n_pos as f64 + 1.0)) / 2.0;
+    (u / (n_pos as f64 * n_neg as f64)) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std_basic() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-6);
+        assert!((std_dev(&xs) - 1.2909944).abs() < 1e-5);
+    }
+
+    #[test]
+    fn argmax_ties_first() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0, 2.0]), 1);
+    }
+
+    #[test]
+    fn auc_perfect_separation() {
+        let scores = [0.1, 0.2, 0.8, 0.9];
+        let labels = [0, 0, 1, 1];
+        assert!((auc_from_scores(&scores, &labels) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn auc_random_is_half() {
+        let scores = [0.1, 0.2, 0.3, 0.4];
+        let labels = [0, 1, 1, 0];
+        assert!((auc_from_scores(&scores, &labels) - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn auc_with_ties() {
+        // one tie pair across classes -> contributes 1/2
+        let scores = [0.5, 0.5];
+        let labels = [0, 1];
+        assert!((auc_from_scores(&scores, &labels) - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn auc_inverted_is_zero() {
+        let scores = [0.9, 0.8, 0.2, 0.1];
+        let labels = [0, 0, 1, 1];
+        assert!(auc_from_scores(&scores, &labels) < 1e-6);
+    }
+}

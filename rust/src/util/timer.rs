@@ -1,0 +1,72 @@
+//! Wall-clock stopwatch used by the bench harnesses and EXPERIMENTS.md
+//! §Perf measurements (no criterion in the offline crate set — the bench
+//! binaries implement warmup + repeated timing themselves on top of this).
+
+use std::time::Instant;
+
+/// Simple stopwatch with lap support.
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    /// Seconds since start.
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Milliseconds since start.
+    pub fn elapsed_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+
+    /// Restart and return the elapsed seconds of the previous lap.
+    pub fn lap_s(&mut self) -> f64 {
+        let e = self.elapsed_s();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Measure `f` with `warmup` unrecorded runs then `iters` timed runs.
+/// Returns (mean_ms, min_ms, max_ms) — the shape criterion would report.
+pub fn measure<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> (f64, f64, f64) {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        times.push(t.elapsed().as_secs_f64() * 1e3);
+    }
+    let mean = times.iter().sum::<f64>() / times.len().max(1) as f64;
+    let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = times.iter().cloned().fold(0.0, f64::max);
+    (mean, min, max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_monotonic() {
+        let sw = Stopwatch::start();
+        let a = sw.elapsed_s();
+        let b = sw.elapsed_s();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn measure_counts_iters() {
+        let mut n = 0usize;
+        let (mean, min, max) = measure(2, 5, || n += 1);
+        assert_eq!(n, 7);
+        assert!(min <= mean && mean <= max);
+    }
+}

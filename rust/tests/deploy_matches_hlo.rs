@@ -1,0 +1,136 @@
+//! The §III-C contract: deployed integer execution == HLO `infer`, for
+//! every benchmark topology (residual joins, depthwise chains, FC-only)
+//! and for adversarially mixed per-channel assignments.
+
+use std::path::Path;
+
+use cwmix::data::{make_dataset, Split};
+use cwmix::deploy;
+use cwmix::nas::{Mode, SearchConfig, Target, Trainer};
+use cwmix::quant::{Assignment, LayerAssignment};
+use cwmix::runtime::Runtime;
+
+fn rt() -> Runtime {
+    Runtime::cpu(Path::new("artifacts")).unwrap()
+}
+
+/// Deterministic "stripy" mixed assignment: cycles 2/4/8 across channels
+/// with a per-layer phase — exercises reordering, residual space joins
+/// and fragmented groups.
+fn stripy(tr: &Trainer) -> Assignment {
+    let names = tr.manifest.qnames();
+    let couts = tr.manifest.qcouts();
+    let bits = [2u32, 4, 8];
+    Assignment {
+        layers: names
+            .iter()
+            .zip(&couts)
+            .enumerate()
+            .map(|(li, (n, &c))| LayerAssignment {
+                name: n.clone(),
+                act_bits: bits[li % 3],
+                weight_bits: (0..c).map(|i| bits[(i + li) % 3]).collect(),
+            })
+            .collect(),
+    }
+}
+
+fn check_bench(bench: &str, warmup_epochs: usize, min_agree: f32) {
+    let rt = rt();
+    let mut cfg = SearchConfig::quick(bench, Mode::ChannelWise, Target::Size, 0.0);
+    cfg.warmup_epochs = warmup_epochs;
+    let mut tr = Trainer::new(&rt, cfg).unwrap();
+    tr.warmup().unwrap(); // realistic weights + BN stats
+    let a = stripy(&tr);
+    let ds = make_dataset(bench, Split::Test, 32, 0);
+    let rep = deploy::verify::verify_against_hlo(&tr, &a, &ds, 1).unwrap();
+    assert!(
+        rep.argmax_agreement >= min_agree,
+        "{bench}: agreement {} < {min_agree}",
+        rep.argmax_agreement
+    );
+    assert!(
+        rep.max_abs_diff < 1e-2,
+        "{bench}: max diff {}",
+        rep.max_abs_diff
+    );
+}
+
+#[test]
+fn ad_fc_only_matches() {
+    check_bench("ad", 1, 1.0);
+}
+
+#[test]
+fn kws_depthwise_matches() {
+    check_bench("kws", 1, 0.99);
+}
+
+#[test]
+fn ic_residual_matches() {
+    check_bench("ic", 1, 0.99);
+}
+
+#[test]
+fn deployed_costs_match_energy_model() {
+    // MAC-only energy of the simulator == Eq. (8) with one-hot NAS params
+    let rt = rt();
+    let cfg = SearchConfig::quick("kws", Mode::ChannelWise, Target::Size, 0.0);
+    let tr = Trainer::new(&rt, cfg).unwrap();
+    let a = stripy(&tr);
+    let d = deploy::build(&tr.manifest, &tr.params_map(), &tr.bn_map(), &a).unwrap();
+    let ds = make_dataset("kws", Split::Test, 1, 0);
+    let feat = tr.manifest.feat_len();
+    let (_, cost) =
+        cwmix::mpic::run_batch(&d, &ds.x[0..feat], feat, &tr.manifest.lut).unwrap();
+    let want = cwmix::energy::model_energy_pj(&tr.manifest.geom(), &a, &tr.manifest.lut);
+    let got = cost.mac_energy_pj();
+    assert!(
+        (got - want).abs() / want < 1e-6,
+        "sim {got} vs Eq.8 {want}"
+    );
+    // total MACs must equal sum of ops
+    let ops: u64 = tr.manifest.geom().qlayers.iter().map(|l| l.ops as u64).sum();
+    assert_eq!(cost.total_macs(), ops);
+}
+
+#[test]
+fn groups_partition_channels() {
+    let rt = rt();
+    let cfg = SearchConfig::quick("ic", Mode::ChannelWise, Target::Size, 0.0);
+    let tr = Trainer::new(&rt, cfg).unwrap();
+    let a = stripy(&tr);
+    let d = deploy::build(&tr.manifest, &tr.params_map(), &tr.bn_map(), &a).unwrap();
+    for l in d.qlayers() {
+        let covered: usize = l.groups.iter().map(|g| g.len).sum();
+        assert_eq!(covered, l.spec.cout, "{}", l.spec.name);
+        // runs are contiguous and ordered
+        let mut pos = 0;
+        for g in &l.groups {
+            assert_eq!(g.start, pos, "{}", l.spec.name);
+            pos += g.len;
+            // every channel in the run has the run's bits
+            for c in g.start..g.start + g.len {
+                assert_eq!(l.weight_bits[c], g.bits);
+            }
+        }
+    }
+}
+
+#[test]
+fn packed_bytes_match_quant_module() {
+    let rt = rt();
+    let cfg = SearchConfig::quick("ad", Mode::ChannelWise, Target::Size, 0.0);
+    let tr = Trainer::new(&rt, cfg).unwrap();
+    let a = stripy(&tr);
+    let d = deploy::build(&tr.manifest, &tr.params_map(), &tr.bn_map(), &a).unwrap();
+    for (l, la) in d.qlayers().zip(&a.layers) {
+        // per-layer packed bytes must not depend on channel *order*
+        let direct = cwmix::quant::packed_weight_bytes(
+            l.spec.cout,
+            l.spec.weights_per_channel,
+            &la.weight_bits,
+        );
+        assert_eq!(l.packed_bytes(), direct, "{}", l.spec.name);
+    }
+}

@@ -1,0 +1,118 @@
+//! Manifests (emitted by aot.py) must agree with the Rust-side models:
+//! geometry invariants, LUT equality, slot shapes.  Requires
+//! `make artifacts` to have run.
+
+use std::path::Path;
+
+use cwmix::energy::{CostLut, CYCLES_PER_MAC, ENERGY_PJ_PER_MAC};
+use cwmix::models::Manifest;
+
+const BENCHES: [&str; 4] = ["ic", "kws", "vww", "ad"];
+
+fn artifacts() -> &'static Path {
+    Path::new("artifacts")
+}
+
+#[test]
+fn all_manifests_load_and_validate() {
+    for b in BENCHES {
+        let m = Manifest::load(artifacts(), b).unwrap();
+        m.validate().unwrap_or_else(|e| panic!("{b}: {e}"));
+        assert_eq!(m.benchmark, b);
+        assert_eq!(m.precisions, vec![2, 4, 8]);
+    }
+}
+
+#[test]
+fn lut_matches_rust_constants() {
+    // single-source-of-truth check: python energy_lut == rust lut.rs
+    for b in BENCHES {
+        let m = Manifest::load(artifacts(), b).unwrap();
+        let r = CostLut::default();
+        for i in 0..3 {
+            for j in 0..3 {
+                assert!(
+                    (m.lut.energy_pj[i][j] - ENERGY_PJ_PER_MAC[i][j]).abs() < 1e-5,
+                    "{b} energy LUT drift at {i},{j}"
+                );
+                assert!(
+                    (m.lut.cycles[i][j] - CYCLES_PER_MAC[i][j]).abs() < 1e-7,
+                    "{b} cycle LUT drift at {i},{j}"
+                );
+                // python computes in f64 then casts; allow 1 ULP
+                assert!((m.lut.energy_pj[i][j] - r.energy_pj[i][j]).abs() < 1e-6);
+            }
+        }
+    }
+}
+
+#[test]
+fn geometry_ops_formula_holds() {
+    for b in BENCHES {
+        let m = Manifest::load(artifacts(), b).unwrap();
+        for l in m.qlayers() {
+            let cin_g = if l.kind == "dwconv" { 1 } else { l.cin };
+            if l.kind == "fc" {
+                assert_eq!(l.ops, l.cout * l.cin, "{b}/{}", l.name);
+                assert_eq!(l.weights_per_channel, l.cin);
+            } else {
+                assert_eq!(
+                    l.ops,
+                    l.out_h * l.out_w * l.cout * cin_g * l.kx * l.ky,
+                    "{b}/{}",
+                    l.name
+                );
+                assert_eq!(l.weights_per_channel, cin_g * l.kx * l.ky);
+            }
+        }
+    }
+}
+
+#[test]
+fn dataset_geometry_matches_manifest() {
+    for b in BENCHES {
+        let m = Manifest::load(artifacts(), b).unwrap();
+        let ds = cwmix::data::make_dataset(b, cwmix::data::Split::Train, 8, 0);
+        assert_eq!(ds.feat, m.input_shape, "{b}");
+        if m.loss == "ce" {
+            assert_eq!(ds.n_classes, m.n_classes, "{b}");
+        }
+    }
+}
+
+#[test]
+fn param_slots_cover_all_quant_layers() {
+    for b in BENCHES {
+        let m = Manifest::load(artifacts(), b).unwrap();
+        let names: Vec<&str> = m.params.iter().map(|s| s.name.as_str()).collect();
+        for l in m.qlayers() {
+            assert!(names.contains(&format!("{}.w", l.name).as_str()), "{b}/{}", l.name);
+            assert!(names.contains(&format!("{}.alpha", l.name).as_str()));
+            // weight slot shape product = cout * weights_per_channel
+            let slot = m
+                .params
+                .iter()
+                .find(|s| s.name == format!("{}.w", l.name))
+                .unwrap();
+            assert_eq!(slot.len(), l.cout * l.weights_per_channel, "{b}/{}", l.name);
+        }
+    }
+}
+
+#[test]
+fn graph_files_exist() {
+    for b in BENCHES {
+        let m = Manifest::load(artifacts(), b).unwrap();
+        for g in [
+            "train_w_hard",
+            "search_theta_cw",
+            "search_theta_lw",
+            "search_w_cw",
+            "search_w_lw",
+            "eval",
+            "infer",
+        ] {
+            assert!(m.graph_path(g).exists(), "{b}/{g} missing");
+        }
+    }
+}

@@ -1,0 +1,93 @@
+//! Runtime integration: compile + execute real artifacts, check training
+//! semantics end to end (loss decreases, eval consistent, state threads).
+
+use std::path::Path;
+
+use cwmix::nas::{Mode, SearchConfig, Target, Trainer};
+use cwmix::quant::Assignment;
+use cwmix::runtime::Runtime;
+
+fn rt() -> Runtime {
+    Runtime::cpu(Path::new("artifacts")).unwrap()
+}
+
+#[test]
+fn warmup_reduces_loss_ad() {
+    let rt = rt();
+    let mut cfg = SearchConfig::quick("ad", Mode::ChannelWise, Target::Size, 0.0);
+    cfg.warmup_epochs = 3;
+    let mut tr = Trainer::new(&rt, cfg).unwrap();
+    tr.warmup().unwrap();
+    let h = &tr.history;
+    assert!(h.len() >= 3);
+    assert!(
+        h.last().unwrap().train_loss < h[0].train_loss * 0.8,
+        "warmup did not learn: {} -> {}",
+        h[0].train_loss,
+        h.last().unwrap().train_loss
+    );
+}
+
+#[test]
+fn eval_scores_improve_over_random_kws() {
+    let rt = rt();
+    let mut cfg = SearchConfig::quick("kws", Mode::ChannelWise, Target::Size, 0.0);
+    cfg.warmup_epochs = 6;
+    cfg.train_n = 512;
+    let mut tr = Trainer::new(&rt, cfg).unwrap();
+    let a8 = Assignment::fixed(&tr.manifest.qnames(), &tr.manifest.qcouts(), 8, 8);
+    let (_, acc_before) = tr.evaluate(cwmix::data::Split::Test, &a8).unwrap();
+    tr.warmup().unwrap();
+    let (_, acc_after) = tr.evaluate(cwmix::data::Split::Test, &a8).unwrap();
+    // 12-way classification: random ~= 0.083
+    assert!(acc_before < 0.35, "untrained acc suspicious: {acc_before}");
+    assert!(acc_after > acc_before + 0.15, "{acc_before} -> {acc_after}");
+}
+
+#[test]
+fn quantization_hurts_at_2bit_weights() {
+    // after a short warmup, w2 must lose accuracy vs w8 (the premise of
+    // the whole trade-off space)
+    let rt = rt();
+    let mut cfg = SearchConfig::quick("kws", Mode::ChannelWise, Target::Size, 0.0);
+    cfg.warmup_epochs = 6;
+    cfg.train_n = 512;
+    let mut tr = Trainer::new(&rt, cfg).unwrap();
+    tr.warmup().unwrap();
+    let names = tr.manifest.qnames();
+    let couts = tr.manifest.qcouts();
+    let (l8, _) = tr
+        .evaluate(cwmix::data::Split::Test, &Assignment::fixed(&names, &couts, 8, 8))
+        .unwrap();
+    let (l2, _) = tr
+        .evaluate(cwmix::data::Split::Test, &Assignment::fixed(&names, &couts, 2, 8))
+        .unwrap();
+    assert!(l2 > l8, "2-bit weights should hurt: loss {l2} vs {l8}");
+}
+
+#[test]
+fn snapshot_restore_roundtrip() {
+    let rt = rt();
+    let mut cfg = SearchConfig::quick("ad", Mode::ChannelWise, Target::Size, 0.0);
+    cfg.warmup_epochs = 1;
+    let mut tr = Trainer::new(&rt, cfg).unwrap();
+    tr.warmup().unwrap();
+    let snap = tr.snapshot();
+    let a8 = Assignment::fixed(&tr.manifest.qnames(), &tr.manifest.qcouts(), 8, 8);
+    let (l1, _) = tr.evaluate(cwmix::data::Split::Val, &a8).unwrap();
+    // more training changes the params...
+    tr.train_hard_phase("extra", 1, &a8, false).unwrap();
+    // ...restore brings the old loss back exactly
+    tr.restore(&snap);
+    let (l2, _) = tr.evaluate(cwmix::data::Split::Val, &a8).unwrap();
+    assert!((l1 - l2).abs() < 1e-6, "{l1} vs {l2}");
+}
+
+#[test]
+fn graph_cache_reuses_compilations() {
+    let rt = rt();
+    let g1 = rt.graph("ad", "eval").unwrap();
+    let g2 = rt.graph("ad", "eval").unwrap();
+    assert!(std::sync::Arc::ptr_eq(&g1, &g2));
+    assert_eq!(rt.compiled_count(), 1);
+}

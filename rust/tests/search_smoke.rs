@@ -1,0 +1,102 @@
+//! End-to-end Alg. 1 smoke: a tiny channel-wise search must produce a
+//! valid, *mixed* assignment whose regularizer pressure shows up in the
+//! extracted bits; results must round-trip the store.
+
+use std::path::Path;
+
+use cwmix::coordinator::results;
+use cwmix::nas::{Mode, SearchConfig, Target, Trainer};
+use cwmix::runtime::Runtime;
+
+fn rt() -> Runtime {
+    Runtime::cpu(Path::new("artifacts")).unwrap()
+}
+
+fn tiny(bench: &str, target: Target, lambda_rel: f32) -> SearchConfig {
+    let mut cfg = SearchConfig::quick(bench, Mode::ChannelWise, target, 0.0);
+    cfg.warmup_epochs = 1;
+    cfg.search_epochs = 3;
+    cfg.finetune_epochs = 1;
+    cfg.lambda = lambda_rel;
+    cfg
+}
+
+#[test]
+fn size_pressure_reduces_bits_ad() {
+    let rt = rt();
+    let mut cfg = tiny("ad", Target::Size, 0.0);
+    let tr0 = Trainer::new(&rt, cfg.clone()).unwrap();
+    let (reg_s0, _) = tr0.initial_regs().unwrap();
+    drop(tr0);
+    cfg.lambda = 3.0 / reg_s0; // strong size pressure
+    let mut tr = Trainer::new(&rt, cfg).unwrap();
+    let r = tr.run().unwrap();
+    // mean weight bits must drop clearly below 8
+    let mut total = 0usize;
+    let mut bits_sum = 0u64;
+    for l in &r.assignment.layers {
+        total += l.weight_bits.len();
+        bits_sum += l.weight_bits.iter().map(|&b| b as u64).sum::<u64>();
+        // size target: activations pinned at 8
+        assert_eq!(l.act_bits, 8, "{}", l.name);
+    }
+    let mean_bits = bits_sum as f64 / total as f64;
+    assert!(mean_bits < 6.0, "no size pressure visible: mean {mean_bits}");
+    assert!(r.size_bits < 0.75 * 8.0 * reg_s0 as f64 / 8.0);
+}
+
+#[test]
+fn zero_lambda_keeps_high_bits_ad() {
+    let rt = rt();
+    let cfg = tiny("ad", Target::Size, 0.0); // lambda = 0: only accuracy
+    let mut tr = Trainer::new(&rt, cfg).unwrap();
+    let r = tr.run().unwrap();
+    // without pressure, search has no reason to go all-2-bit
+    let mut n2 = 0usize;
+    let mut total = 0usize;
+    for l in &r.assignment.layers {
+        n2 += l.weight_bits.iter().filter(|&&b| b == 2).count();
+        total += l.weight_bits.len();
+    }
+    assert!(
+        (n2 as f64) < 0.8 * total as f64,
+        "lambda=0 collapsed to 2-bit ({n2}/{total})"
+    );
+}
+
+#[test]
+fn layerwise_mode_gives_uniform_layers() {
+    let rt = rt();
+    let mut cfg = tiny("ad", Target::Size, 0.0);
+    cfg.mode = Mode::LayerWise;
+    cfg.lambda = 1e-6;
+    let mut tr = Trainer::new(&rt, cfg).unwrap();
+    let r = tr.run().unwrap();
+    for l in &r.assignment.layers {
+        let first = l.weight_bits[0];
+        assert!(
+            l.weight_bits.iter().all(|&b| b == first),
+            "layer-wise search produced per-channel bits in {}",
+            l.name
+        );
+    }
+}
+
+#[test]
+fn results_store_roundtrip_with_real_result() {
+    let rt = rt();
+    let cfg = tiny("ad", Target::Size, 1e-6);
+    let mut tr = Trainer::new(&rt, cfg).unwrap();
+    let r = tr.run().unwrap();
+    let dir = std::env::temp_dir().join("cwmix_search_smoke");
+    let _ = std::fs::remove_dir_all(&dir);
+    let path = results::save_sweep(
+        &dir, "ad", "size", std::slice::from_ref(&r), &[], &[]).unwrap();
+    let (b, t, o, e, f) = results::load_sweep(&path).unwrap();
+    assert_eq!((b.as_str(), t.as_str()), ("ad", "size"));
+    assert_eq!(o.len(), 1);
+    assert!(e.is_empty() && f.is_empty());
+    assert_eq!(o[0].assignment, r.assignment);
+    assert!((o[0].test_score - r.test_score).abs() < 1e-6);
+    let _ = std::fs::remove_dir_all(&dir);
+}
