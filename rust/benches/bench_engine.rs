@@ -1,0 +1,151 @@
+//! Engine benchmarks: seed scalar path vs the plan/execute engine with
+//! the `reference` and `packed` backends, per benchmark model.
+//!
+//! Pure Rust — builtin model zoo + synthetic weights, no artifacts and
+//! no `xla` feature.  Each model runs a striped mixed-precision
+//! assignment (the deployment-relevant case: fragmented sub-conv groups
+//! across all three precisions).  Emits a machine-readable
+//! `BENCH_engine.json` at the repo root so future PRs have a perf
+//! trajectory, and asserts bit-exactness of every path while measuring.
+//!
+//! ```bash
+//! cargo bench --bench bench_engine            # quick (default)
+//! CWMIX_BENCH_ENGINE_JSON=out.json cargo bench --bench bench_engine
+//! ```
+
+use std::path::Path;
+
+use cwmix::data::{make_dataset, Split};
+use cwmix::deploy;
+use cwmix::engine::{engine_threads, ExecPlan, PackedBackend, ReferenceBackend};
+use cwmix::minijson::Json;
+use cwmix::models::zoo::{
+    builtin_manifest, stripy_assignment as stripy, synthetic_state, BENCHES,
+};
+use cwmix::util::timer::measure;
+
+fn out_path() -> String {
+    if let Ok(p) = std::env::var("CWMIX_BENCH_ENGINE_JSON") {
+        return p;
+    }
+    // benches run from the package dir (rust/); put the trajectory file
+    // at the repo root when recognisable
+    if Path::new("../ROADMAP.md").exists() {
+        "../BENCH_engine.json".to_string()
+    } else {
+        "BENCH_engine.json".to_string()
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("=== engine benchmarks (builtin zoo, striped mixed assignment) ===");
+    let batch = 32usize;
+    let threads = engine_threads(batch);
+    let mut bench_objs: Vec<(&str, Json)> = Vec::new();
+
+    for bench in BENCHES {
+        let manifest = builtin_manifest(bench)?;
+        let (params, bn) = synthetic_state(&manifest, 0);
+        let a = stripy(&manifest);
+        let model = deploy::build(&manifest, &params, &bn, &a)?;
+        let feat = manifest.feat_len();
+        let ds = make_dataset(bench, Split::Test, batch, 0);
+
+        let ref_plan = ExecPlan::compile(&model, &manifest.lut, &ReferenceBackend)?;
+        let packed_plan = ExecPlan::compile(&model, &manifest.lut, &PackedBackend)?;
+
+        // correctness first: all three paths bit-identical on a sample
+        let (seed_out, cost) =
+            cwmix::mpic::run_sample(&model, &ds.x[0..feat], &manifest.lut)?;
+        let mut arena = ref_plan.arena();
+        let ref_out = ref_plan.run_sample(&mut arena, &ds.x[0..feat])?;
+        let mut arena = packed_plan.arena();
+        let packed_out = packed_plan.run_sample(&mut arena, &ds.x[0..feat])?;
+        let bit_exact = seed_out == ref_out && seed_out == packed_out;
+        assert!(bit_exact, "{bench}: engine output diverged from the oracle");
+
+        // 1. seed scalar path: per-sample interpreter, re-derived
+        //    geometry, per-sample cost accounting + allocations
+        let (seed_ms, _, _) = measure(1, 5, || {
+            let _ =
+                cwmix::mpic::run_sample(&model, &ds.x[0..feat], &manifest.lut)
+                    .unwrap();
+        });
+
+        // 2/3. engine single-thread, reference vs packed
+        let mut arena = ref_plan.arena();
+        let (ref_ms, _, _) = measure(1, 5, || {
+            let _ = ref_plan.run_sample(&mut arena, &ds.x[0..feat]).unwrap();
+        });
+        let mut arena = packed_plan.arena();
+        let (packed_ms, _, _) = measure(1, 5, || {
+            let _ =
+                packed_plan.run_sample(&mut arena, &ds.x[0..feat]).unwrap();
+        });
+
+        // 4. engine packed, threaded batch (per-inference wall clock)
+        let (batch_ms, _, _) = measure(1, 3, || {
+            let _ = packed_plan
+                .run_batch_threads(&ds.x, feat, threads)
+                .unwrap();
+        });
+        let packed_mt_ms = batch_ms / batch as f64;
+
+        let macs = cost.total_macs();
+        println!(
+            "\n[{bench}] {:.2} MMAC, {} sub-convs, packed weights {} B \
+             (reference {} B)",
+            macs as f64 / 1e6,
+            model.n_subconvs(),
+            packed_plan.weight_bytes(),
+            ref_plan.weight_bytes(),
+        );
+        println!(
+            "    seed scalar      {seed_ms:>8.3} ms/inf \
+             ({:>6.1} MMAC/s)",
+            macs as f64 / seed_ms / 1e3
+        );
+        println!(
+            "    engine/reference {ref_ms:>8.3} ms/inf  ({:.2}x vs seed)",
+            seed_ms / ref_ms
+        );
+        println!(
+            "    engine/packed    {packed_ms:>8.3} ms/inf  ({:.2}x vs seed)",
+            seed_ms / packed_ms
+        );
+        println!(
+            "    packed x{threads} threads {packed_mt_ms:>6.3} ms/inf  \
+             ({:.2}x vs seed)",
+            seed_ms / packed_mt_ms
+        );
+
+        bench_objs.push((
+            bench,
+            Json::obj(vec![
+                ("macs", Json::num(macs as f64)),
+                ("n_subconvs", Json::num(model.n_subconvs() as f64)),
+                ("weight_bytes_packed", Json::num(packed_plan.weight_bytes() as f64)),
+                ("weight_bytes_reference", Json::num(ref_plan.weight_bytes() as f64)),
+                ("seed_scalar_ms_per_inf", Json::num(seed_ms)),
+                ("engine_reference_ms_per_inf", Json::num(ref_ms)),
+                ("engine_packed_ms_per_inf", Json::num(packed_ms)),
+                ("engine_packed_mt_ms_per_inf", Json::num(packed_mt_ms)),
+                ("speedup_packed_vs_seed", Json::num(seed_ms / packed_ms)),
+                ("speedup_packed_mt_vs_seed", Json::num(seed_ms / packed_mt_ms)),
+                ("bit_exact_vs_oracle", Json::Bool(bit_exact)),
+            ]),
+        ));
+    }
+
+    let report = Json::obj(vec![
+        ("version", Json::num(1.0)),
+        ("threads", Json::num(threads as f64)),
+        ("batch", Json::num(batch as f64)),
+        ("assignment", Json::str("stripy-2/4/8")),
+        ("benches", Json::obj(bench_objs)),
+    ]);
+    let path = out_path();
+    std::fs::write(&path, report.pretty())?;
+    println!("\nwrote {path}");
+    Ok(())
+}

@@ -12,11 +12,17 @@
 //!   hard-assignment QAT phase (the same `train_w_hard` graph that
 //!   serves warmup and fine-tuning).
 
+#[cfg(feature = "xla")]
 use anyhow::Result;
 
+#[cfg(feature = "xla")]
 use crate::nas::trainer::{StateSnapshot, Trainer};
-use crate::nas::{Mode, SearchConfig, SearchResult, Target};
+#[cfg(feature = "xla")]
+use crate::nas::{Mode, SearchConfig, SearchResult};
+use crate::nas::Target;
+#[cfg(feature = "xla")]
 use crate::quant::Assignment;
+#[cfg(feature = "xla")]
 use crate::runtime::Runtime;
 
 /// The `wNxM` grid of Fig. 3.  For the size plots the paper only shows
@@ -34,6 +40,7 @@ pub fn fixed_grid(weights: &[u32], acts: &[u32]) -> Vec<(u32, u32)> {
 }
 
 /// Train one fixed-precision baseline from a shared warmup snapshot.
+#[cfg(feature = "xla")]
 pub fn run_fixed(
     rt: &Runtime,
     cfg: &SearchConfig,
@@ -55,6 +62,7 @@ pub fn run_fixed(
 }
 
 /// Run the EdMIPS comparison search (layer-wise mode) for one lambda.
+#[cfg(feature = "xla")]
 pub fn run_edmips(
     rt: &Runtime,
     cfg: &SearchConfig,
@@ -68,6 +76,7 @@ pub fn run_edmips(
 }
 
 /// Run our channel-wise search for one lambda.
+#[cfg(feature = "xla")]
 pub fn run_ours(
     rt: &Runtime,
     cfg: &SearchConfig,
@@ -82,6 +91,7 @@ pub fn run_ours(
 
 /// Shared warmup for a whole sweep (Alg. 1: "Warmup needs to be performed
 /// only once, reusing the result for multiple searches").
+#[cfg(feature = "xla")]
 pub fn shared_warmup(rt: &Runtime, cfg: &SearchConfig) -> Result<StateSnapshot> {
     let mut tr = Trainer::new(rt, cfg.clone())?;
     tr.warmup()?;

@@ -15,15 +15,22 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Result};
 
+#[cfg(feature = "xla")]
 use crate::baselines;
 use crate::coordinator::results;
+#[cfg(feature = "xla")]
 use crate::coordinator::sweep::{run_sweep, DEFAULT_STRENGTHS};
 use crate::data::{make_dataset, Split};
 use crate::deploy;
 use crate::energy::CostLut;
-use crate::nas::{Mode, SearchConfig, Target, Trainer};
+use crate::engine;
+use crate::models::{zoo, Manifest};
+use crate::nas::{Mode, Target};
+#[cfg(feature = "xla")]
+use crate::nas::{SearchConfig, Trainer};
 use crate::quant::Assignment;
 use crate::report;
+#[cfg(feature = "xla")]
 use crate::runtime::Runtime;
 
 /// Parse `--key value` and bare flags into a map.
@@ -55,6 +62,9 @@ fn target_of(s: &str) -> Result<Target> {
     }
 }
 
+// only the xla-gated `search` command consumes modes at runtime, but the
+// parser stays available (and unit-tested) on every feature set
+#[cfg_attr(not(feature = "xla"), allow(dead_code))]
 fn mode_of(s: &str) -> Result<Mode> {
     match s {
         "cw" | "ours" => Ok(Mode::ChannelWise),
@@ -88,11 +98,16 @@ COMMANDS
   deploy   --bench B [--quick]
            Short search, §III-C transform, HLO-vs-simulator verification,
            MPIC cost breakdown.
-  simulate --bench B [--wbits N] [--xbits M]
-           MPIC cost model on an untrained fixed assignment (no training).
+  simulate --bench B [--wbits N] [--xbits M] [--backend packed|reference]
+           §III-C transform + engine cost model on a fixed assignment.
+           Pure Rust: uses the builtin model zoo when artifacts/ is
+           absent; no training, no xla feature needed.
   report   [--dir results]
            Render every stored sweep as a Fig.3 panel + headline savings.
   lut      Print the MPIC C(p_x, p_w) energy/latency tables.
+
+sweep/search/baseline/deploy drive the PJRT training path and need a
+build with `--features xla` plus `make artifacts`.
 ";
 
 /// Top-level dispatch.
@@ -125,6 +140,35 @@ fn req<'a>(flags: &'a HashMap<String, String>, key: &str) -> Result<&'a str> {
         .ok_or_else(|| anyhow!("missing --{key}"))
 }
 
+/// Stub for runtime-dependent commands in a default (no-`xla`) build.
+#[cfg(not(feature = "xla"))]
+fn cmd_needs_xla(cmd: &str) -> Result<()> {
+    bail!(
+        "`cwmix {cmd}` drives the PJRT training path; rebuild with \
+         `cargo build --release --features xla` (and run `make artifacts`)"
+    )
+}
+
+#[cfg(not(feature = "xla"))]
+fn cmd_sweep(_flags: &HashMap<String, String>) -> Result<()> {
+    cmd_needs_xla("sweep")
+}
+
+#[cfg(not(feature = "xla"))]
+fn cmd_search(_flags: &HashMap<String, String>) -> Result<()> {
+    cmd_needs_xla("search")
+}
+
+#[cfg(not(feature = "xla"))]
+fn cmd_baseline(_flags: &HashMap<String, String>) -> Result<()> {
+    cmd_needs_xla("baseline")
+}
+
+#[cfg(not(feature = "xla"))]
+fn cmd_deploy(_flags: &HashMap<String, String>) -> Result<()> {
+    cmd_needs_xla("deploy")
+}
+
 fn cmd_lut() -> Result<()> {
     let lut = CostLut::default();
     println!("MPIC C(p_x, p_w) — energy pJ/MAC (rows p_x, cols p_w in 2/4/8):");
@@ -146,6 +190,7 @@ fn cmd_lut() -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "xla")]
 fn cmd_sweep(flags: &HashMap<String, String>) -> Result<()> {
     let bench = req(flags, "bench")?;
     let target = target_of(req(flags, "target")?)?;
@@ -171,6 +216,7 @@ fn cmd_sweep(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "xla")]
 fn cmd_search(flags: &HashMap<String, String>) -> Result<()> {
     let bench = req(flags, "bench")?;
     let mode = mode_of(flags.get("mode").map(|s| s.as_str()).unwrap_or("cw"))?;
@@ -207,6 +253,7 @@ fn cmd_search(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "xla")]
 fn cmd_baseline(flags: &HashMap<String, String>) -> Result<()> {
     let bench = req(flags, "bench")?;
     let wbits: u32 = req(flags, "wbits")?.parse()?;
@@ -227,6 +274,7 @@ fn cmd_baseline(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "xla")]
 fn cmd_deploy(flags: &HashMap<String, String>) -> Result<()> {
     let bench = req(flags, "bench")?;
     let rt = Runtime::cpu(&artifacts_dir(flags))?;
@@ -283,26 +331,38 @@ fn cmd_deploy(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+/// Pure-Rust simulation: builtin zoo (or the artifacts manifest when
+/// present), synthetic He-initialised weights, §III-C transform, engine
+/// plan + cost model.  Runs on the default feature set.
 fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
     let bench = req(flags, "bench")?;
     let wbits: u32 = flags.get("wbits").map(|s| s.parse()).transpose()?.unwrap_or(8);
     let xbits: u32 = flags.get("xbits").map(|s| s.parse()).transpose()?.unwrap_or(8);
-    let rt = Runtime::cpu(&artifacts_dir(flags))?;
-    let cfg = SearchConfig::quick(bench, Mode::ChannelWise, Target::Energy, 0.0);
-    let tr = Trainer::new(&rt, cfg)?;
-    let a = Assignment::fixed(
-        &tr.manifest.qnames(), &tr.manifest.qcouts(), wbits, xbits);
-    let deployed = deploy::build(&tr.manifest, &tr.params_map(), &tr.bn_map(), &a)?;
+    let backend = engine::backend_by_name(
+        flags.get("backend").map(|s| s.as_str()).unwrap_or("packed"),
+    )?;
+    let art = artifacts_dir(flags);
+    let manifest = if art.join(bench).join("manifest.json").exists() {
+        Manifest::load(&art, bench)?
+    } else {
+        zoo::builtin_manifest(bench)?
+    };
+    let (params, bn) = zoo::synthetic_state(&manifest, 0);
+    let a = Assignment::fixed(&manifest.qnames(), &manifest.qcouts(), wbits, xbits);
+    let deployed = deploy::build(&manifest, &params, &bn, &a)?;
+    let plan = engine::ExecPlan::compile(&deployed, &manifest.lut, backend)?;
     let ds = make_dataset(bench, Split::Test, 4, 0);
-    let feat = tr.manifest.feat_len();
-    let (_, cost) =
-        crate::mpic::run_batch(&deployed, &ds.x[0..feat], feat, &tr.manifest.lut)?;
+    let feat = manifest.feat_len();
+    let (_, cost) = plan.run_batch(&ds.x[0..feat], feat)?;
     println!(
-        "{bench} w{wbits}x{xbits}: {:.0} MACs, {:.1} us, {:.2} uJ, {} bytes packed",
+        "{bench} w{wbits}x{xbits} [{}]: {:.0} MACs, {:.1} us, {:.2} uJ, \
+         {} bytes packed, {} sub-convs",
+        plan.backend_name(),
         cost.total_macs() as f64,
         cost.latency_us(),
         cost.total_energy_uj(),
-        deployed.packed_bytes()
+        deployed.packed_bytes(),
+        deployed.n_subconvs(),
     );
     Ok(())
 }

@@ -5,9 +5,9 @@
 //! grid → Pareto extraction → JSON result store + report.
 //!
 //! Note on parallelism: the `xla` crate's `PjRtClient` is `Rc`-backed
-//! (not `Send`), so one process = one runtime = sequential searches; the
-//! Makefile-level `bench` targets run benchmarks as separate processes
-//! for coarse parallelism.
+//! (not `Send`), so sweep parallelism is organised as one runtime per
+//! worker thread (see `sweep::run_sweep`); the Makefile-level `bench`
+//! targets additionally run benchmarks as separate processes.
 
 pub mod cli;
 pub mod pareto;
@@ -15,4 +15,6 @@ pub mod results;
 pub mod sweep;
 
 pub use pareto::pareto_front;
-pub use sweep::{run_sweep, SweepOutput};
+#[cfg(feature = "xla")]
+pub use sweep::run_sweep;
+pub use sweep::SweepOutput;

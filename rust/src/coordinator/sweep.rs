@@ -1,11 +1,15 @@
 //! λ-sweep driver: regenerates one Fig. 3 panel (one benchmark x one
 //! regularizer target) end to end.
+//!
+//! Independent λ points are embarrassingly parallel *after* the shared
+//! warmup (Alg. 1 reuses one warmup for every search).  The PJRT client
+//! is `Rc`-backed and not `Send`, so parallelism is organised as one
+//! **runtime per worker thread**: each worker compiles its own graph set
+//! and drains a round-robin share of the λ grid.  Set
+//! `CWMIX_SWEEP_THREADS=1` to force the old sequential behaviour (or to
+//! bound memory: each worker holds a full compiled graph set).
 
-use anyhow::Result;
-
-use crate::baselines;
-use crate::nas::{Mode, SearchConfig, SearchResult, Target};
-use crate::runtime::Runtime;
+use crate::nas::{SearchResult, Target};
 
 /// Relative λ grid: λ = strength / reg0 where reg0 is the 8-bit model's
 /// regularizer value, so one grid works across benchmarks and targets
@@ -37,63 +41,199 @@ impl SweepOutput {
     }
 }
 
-/// Run the full three-series sweep for one (bench, target) panel.
-///
-/// `strengths` are relative λ values (see [`DEFAULT_STRENGTHS`]);
-/// `quick` shrinks every budget for smoke runs.
-pub fn run_sweep(
-    rt: &Runtime,
-    bench: &str,
-    target: Target,
-    strengths: &[f32],
-    quick: bool,
-    log: &mut dyn FnMut(&str),
-) -> Result<SweepOutput> {
-    let mk = |mode: Mode, lambda: f32| {
-        if quick {
-            SearchConfig::quick(bench, mode, target, lambda)
-        } else {
-            SearchConfig::new(bench, mode, target, lambda)
-        }
-    };
-
-    // shared warmup (Alg. 1: warmup once, reuse for every search)
-    let base_cfg = mk(Mode::ChannelWise, 0.0);
-    log(&format!("[{bench}/{}] warmup ({} epochs)", target.name(),
-                 base_cfg.warmup_epochs));
-    let warm = baselines::shared_warmup(rt, &base_cfg)?;
-
-    // λ normalisation from the 8-bit regularizer magnitudes
-    let tr = crate::nas::Trainer::new(rt, base_cfg.clone())?;
-    let (reg_s0, reg_e0) = tr.initial_regs()?;
-    let reg0 = match target {
-        Target::Size => reg_s0,
-        Target::Energy => reg_e0,
-    };
-    drop(tr);
-
-    let mut ours = Vec::new();
-    let mut edmips = Vec::new();
-    for &s in strengths {
-        let lambda = s / reg0;
-        log(&format!("[{bench}/{}] ours: lambda = {s} / reg0 = {lambda:.3e}",
-                     target.name()));
-        ours.push(baselines::run_ours(rt, &mk(Mode::ChannelWise, lambda), &warm)?);
-        log(&format!("[{bench}/{}] edmips: lambda = {lambda:.3e}", target.name()));
-        edmips.push(baselines::run_edmips(rt, &mk(Mode::LayerWise, lambda), &warm)?);
-    }
-
-    let mut fixed = Vec::new();
-    for (wb, xb) in baselines::fig3_fixed_combos(bench, target, quick) {
-        log(&format!("[{bench}/{}] fixed w{wb}x{xb}", target.name()));
-        fixed.push(baselines::run_fixed(rt, &base_cfg, &warm, wb, xb)?);
-    }
-
-    Ok(SweepOutput {
-        bench: bench.to_string(),
-        target,
-        ours,
-        edmips,
-        fixed,
-    })
+/// Worker count for a sweep over `n` independent jobs:
+/// `CWMIX_SWEEP_THREADS` env override, else `min(n, cores)`.
+pub fn sweep_threads(n: usize) -> usize {
+    let cores = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1);
+    std::env::var("CWMIX_SWEEP_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or(cores)
+        .clamp(1, n.max(1))
 }
+
+#[cfg(feature = "xla")]
+mod driver {
+    use std::sync::Mutex;
+
+    use anyhow::Result;
+
+    use super::{sweep_threads, SweepOutput};
+    use crate::baselines;
+    use crate::nas::{Mode, SearchConfig, Target};
+    use crate::runtime::Runtime;
+
+    /// Progress sink shareable with worker threads.
+    type Log<'l> = Mutex<&'l mut (dyn FnMut(&str) + Send)>;
+
+    fn emit(log: &Log, msg: String) {
+        (log.lock().unwrap())(&msg);
+    }
+
+    /// Run `jobs` across up to `threads` workers.  The PJRT client is
+    /// not `Send`, so each *extra* worker owns its own runtime (and
+    /// compiled-graph set); the sequential path reuses the caller's
+    /// already-warm `rt`.  Results come back in the original job
+    /// order; the first worker error aborts the sweep.
+    fn par_runtime_map<J, R, F>(
+        rt: &Runtime,
+        jobs: Vec<J>,
+        threads: usize,
+        f: F,
+    ) -> Result<Vec<R>>
+    where
+        J: Send,
+        R: Send,
+        F: Fn(&Runtime, J) -> Result<R> + Sync,
+    {
+        let n = jobs.len();
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        if threads <= 1 || n == 1 {
+            return jobs.into_iter().map(|j| f(rt, j)).collect();
+        }
+        let artifacts = rt.artifacts_dir();
+        let threads = threads.min(n);
+        let mut buckets: Vec<Vec<(usize, J)>> =
+            (0..threads).map(|_| Vec::new()).collect();
+        for (i, j) in jobs.into_iter().enumerate() {
+            buckets[i % threads].push((i, j));
+        }
+        let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        let collected: Vec<Result<Vec<(usize, R)>>> =
+            std::thread::scope(|scope| {
+                let f = &f;
+                let handles: Vec<_> = buckets
+                    .into_iter()
+                    .map(|bucket| {
+                        scope.spawn(move || -> Result<Vec<(usize, R)>> {
+                            let rt = Runtime::cpu(artifacts)?;
+                            bucket
+                                .into_iter()
+                                .map(|(i, j)| Ok((i, f(&rt, j)?)))
+                                .collect()
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("sweep worker panicked"))
+                    .collect()
+            });
+        for chunk in collected {
+            for (i, r) in chunk? {
+                out[i] = Some(r);
+            }
+        }
+        Ok(out.into_iter().map(|o| o.expect("job lost")).collect())
+    }
+
+    /// Run the full three-series sweep for one (bench, target) panel.
+    ///
+    /// `strengths` are relative λ values (see
+    /// [`super::DEFAULT_STRENGTHS`]); `quick` shrinks every budget for
+    /// smoke runs.  Progress lines are emitted as each λ point /
+    /// baseline starts and finishes, including from worker threads.
+    pub fn run_sweep(
+        rt: &Runtime,
+        bench: &str,
+        target: Target,
+        strengths: &[f32],
+        quick: bool,
+        log: &mut (dyn FnMut(&str) + Send),
+    ) -> Result<SweepOutput> {
+        let mk = |mode: Mode, lambda: f32| {
+            if quick {
+                SearchConfig::quick(bench, mode, target, lambda)
+            } else {
+                SearchConfig::new(bench, mode, target, lambda)
+            }
+        };
+
+        // shared warmup (Alg. 1: warmup once, reuse for every search)
+        let base_cfg = mk(Mode::ChannelWise, 0.0);
+        log(&format!(
+            "[{bench}/{}] warmup ({} epochs)",
+            target.name(),
+            base_cfg.warmup_epochs
+        ));
+        let warm = baselines::shared_warmup(rt, &base_cfg)?;
+
+        // λ normalisation from the 8-bit regularizer magnitudes
+        let tr = crate::nas::Trainer::new(rt, base_cfg.clone())?;
+        let (reg_s0, reg_e0) = tr.initial_regs()?;
+        let reg0 = match target {
+            Target::Size => reg_s0,
+            Target::Energy => reg_e0,
+        };
+        drop(tr);
+
+        let warm = &warm;
+        let tname = target.name();
+
+        // λ points: (ours, edmips) per strength, workers own runtimes
+        let lam_jobs: Vec<(f32, f32)> =
+            strengths.iter().map(|&s| (s, s / reg0)).collect();
+        let threads = sweep_threads(lam_jobs.len());
+        log(&format!(
+            "[{bench}/{tname}] {} lambda points across {threads} worker(s)",
+            lam_jobs.len(),
+        ));
+        let log_mx: Log = Mutex::new(log);
+        let pairs = par_runtime_map(rt, lam_jobs, threads, |rt, (s, lambda)| {
+            emit(
+                &log_mx,
+                format!("[{bench}/{tname}] lambda = {s} / reg0 = {lambda:.3e}"),
+            );
+            let ours =
+                baselines::run_ours(rt, &mk(Mode::ChannelWise, lambda), warm)?;
+            let ed =
+                baselines::run_edmips(rt, &mk(Mode::LayerWise, lambda), warm)?;
+            emit(
+                &log_mx,
+                format!(
+                    "[{bench}/{tname}] lambda = {s} done: ours {:.4}, edmips {:.4}",
+                    ours.test_score, ed.test_score
+                ),
+            );
+            Ok((ours, ed))
+        })?;
+        let mut ours = Vec::with_capacity(pairs.len());
+        let mut edmips = Vec::with_capacity(pairs.len());
+        for (o, e) in pairs {
+            ours.push(o);
+            edmips.push(e);
+        }
+
+        // fixed-precision grid, same worker scheme
+        let combos = baselines::fig3_fixed_combos(bench, target, quick);
+        let threads = sweep_threads(combos.len());
+        let base_cfg = &base_cfg;
+        let fixed = par_runtime_map(rt, combos, threads, |rt, (wb, xb)| {
+            emit(&log_mx, format!("[{bench}/{tname}] fixed w{wb}x{xb}"));
+            let r = baselines::run_fixed(rt, base_cfg, warm, wb, xb)?;
+            emit(
+                &log_mx,
+                format!(
+                    "[{bench}/{tname}] fixed w{wb}x{xb} done: {:.4}",
+                    r.test_score
+                ),
+            );
+            Ok(r)
+        })?;
+
+        Ok(SweepOutput {
+            bench: bench.to_string(),
+            target,
+            ours,
+            edmips,
+            fixed,
+        })
+    }
+}
+
+#[cfg(feature = "xla")]
+pub use driver::run_sweep;

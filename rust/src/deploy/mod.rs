@@ -41,6 +41,7 @@ use crate::models::{LayerSpec, Manifest};
 use crate::quant::{quantize_weights_perchannel, Assignment};
 use crate::tensor::Tensor;
 
+#[cfg(feature = "xla")]
 pub mod verify;
 
 const BN_EPS: f32 = 1e-3;

@@ -1,0 +1,34 @@
+//! Per-worker scratch memory for plan execution.
+//!
+//! An [`Arena`] owns every buffer one worker thread needs to run any
+//! number of samples through an `ExecPlan`: the activation slots (two
+//! ping-pong scratch slots + one exactly-sized slot per saved residual
+//! tag) and the quantization/gather scratch.  Nothing is allocated per
+//! sample or per layer — the seed executor's per-layer `Vec` allocations
+//! and `HashMap<String, Act>` clones are what this replaces.
+
+/// Scratch buffers for one execution worker.
+pub struct Arena {
+    /// activation slots, indexed by the plan's slot ids
+    pub(super) slots: Vec<Vec<f32>>,
+    /// PACT activation codes of the layer currently executing
+    pub(super) q: Vec<u32>,
+    /// gathered im2col column / FC input codes as `i32`
+    pub(super) col: Vec<i32>,
+}
+
+impl Arena {
+    pub(super) fn new(slot_len: &[usize], q_len: usize, col_len: usize) -> Arena {
+        Arena {
+            slots: slot_len.iter().map(|&l| vec![0.0; l]).collect(),
+            q: vec![0; q_len],
+            col: vec![0; col_len],
+        }
+    }
+
+    /// Total bytes held (diagnostics).
+    pub fn bytes(&self) -> usize {
+        let f: usize = self.slots.iter().map(|s| s.len() * 4).sum();
+        f + self.q.len() * 4 + self.col.len() * 4
+    }
+}

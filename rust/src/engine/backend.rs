@@ -1,0 +1,365 @@
+//! Pluggable integer dot-product kernels.
+//!
+//! A [`KernelBackend`] turns a deployed layer's quantized weights into a
+//! [`LayerKernel`] — the object the executor calls once per (output
+//! pixel, output channel) with the gathered activation column.  Two
+//! implementations ship:
+//!
+//! * [`ReferenceBackend`] — the seed scalar loops over `i32` weight rows,
+//!   kept bit-for-bit identical to `mpic::exec::run_sample` and used as
+//!   the exactness oracle for every other backend;
+//! * [`PackedBackend`] — weights stored in the sub-byte flash layout of
+//!   Eq. (7) (`quant::pack_subbyte`, one byte-aligned row per output
+//!   channel) and multiplied by unrolled decode kernels selected per
+//!   `(p_x, p_w)` — the software model of MPIC's per-precision SIMD
+//!   modes.  Integer decode is exact, so results are bit-identical to
+//!   the reference backend while touching `8/p_w` times less weight
+//!   memory.
+//!
+//! Accumulation contract: [`LayerKernel::dot`] accumulates in `i32`
+//! (convolutions: `K * 255 * 127` fits comfortably), while
+//! [`LayerKernel::dot_wide`] accumulates in `i64` for FC layers whose
+//! `K` is unbounded.  Both match the scalar oracle exactly because
+//! integer addition is associative.
+
+use crate::deploy::DeployedLayer;
+use crate::precision_index;
+use crate::quant::pack_subbyte;
+
+/// A backend prepares per-layer weight storage + dot kernels.
+pub trait KernelBackend: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Build the execution kernel for one deployed layer.
+    fn prepare(&self, dl: &DeployedLayer) -> Box<dyn LayerKernel>;
+}
+
+/// Per-layer kernel: weight rows dotted against gathered activations.
+pub trait LayerKernel: Send + Sync {
+    /// `i32` dot of output channel `c`'s weight row against `col`
+    /// (`col.len()` == K of the layer; conv/dwconv path).
+    fn dot(&self, c: usize, col: &[i32]) -> i32;
+
+    /// `i64`-accumulating dot (FC path, unbounded K).
+    fn dot_wide(&self, c: usize, col: &[i32]) -> i64;
+
+    /// Bytes of weight storage held by this kernel (diagnostics).
+    fn weight_bytes(&self) -> usize;
+}
+
+// ---------------------------------------------------------------------------
+// Reference backend: the seed scalar loops.
+// ---------------------------------------------------------------------------
+
+/// Scalar `i32` weight rows — the bit-exactness oracle.
+pub struct ReferenceBackend;
+
+struct ReferenceKernel {
+    k: usize,
+    qw: Vec<i32>,
+}
+
+impl KernelBackend for ReferenceBackend {
+    fn name(&self) -> &'static str {
+        "reference"
+    }
+
+    fn prepare(&self, dl: &DeployedLayer) -> Box<dyn LayerKernel> {
+        Box::new(ReferenceKernel { k: dl.k(), qw: dl.qweights.clone() })
+    }
+}
+
+impl LayerKernel for ReferenceKernel {
+    #[inline]
+    fn dot(&self, c: usize, col: &[i32]) -> i32 {
+        let row = &self.qw[c * self.k..(c + 1) * self.k];
+        let mut acc = 0i32;
+        for (x, w) in col.iter().zip(row) {
+            acc += x * w;
+        }
+        acc
+    }
+
+    #[inline]
+    fn dot_wide(&self, c: usize, col: &[i32]) -> i64 {
+        let row = &self.qw[c * self.k..(c + 1) * self.k];
+        let mut acc = 0i64;
+        for (x, w) in col.iter().zip(row) {
+            acc += *x as i64 * *w as i64;
+        }
+        acc
+    }
+
+    fn weight_bytes(&self) -> usize {
+        self.qw.len() * std::mem::size_of::<i32>()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Packed backend: sub-byte rows + unrolled decode kernels.
+// ---------------------------------------------------------------------------
+
+/// Sub-byte bit-packed weight rows (the Eq. (7) flash layout).
+pub struct PackedBackend;
+
+type RowDot = fn(&[u8], &[i32]) -> i32;
+type RowDotWide = fn(&[u8], &[i32]) -> i64;
+
+/// Kernel table indexed `[precision_index(p_x)][precision_index(p_w)]`,
+/// mirroring MPIC's per-(p_x, p_w) SIMD mode CSR.  Activation codes
+/// reach the kernels as pre-gathered `i32` lanes, so today the three
+/// activation rows share the weight-decode bodies; the table is the seam
+/// where activation-packed SWAR kernels plug in (ROADMAP "Open items").
+const DOT_KERNELS: [[RowDot; 3]; 3] = [
+    [dot_w2, dot_w4, dot_w8],
+    [dot_w2, dot_w4, dot_w8],
+    [dot_w2, dot_w4, dot_w8],
+];
+
+const DOT_KERNELS_WIDE: [[RowDotWide; 3]; 3] = [
+    [dot_w2_wide, dot_w4_wide, dot_w8_wide],
+    [dot_w2_wide, dot_w4_wide, dot_w8_wide],
+    [dot_w2_wide, dot_w4_wide, dot_w8_wide],
+];
+
+#[inline(always)]
+fn sext(v: i32, bits: u32) -> i32 {
+    // two's-complement sign extension of a `bits`-wide field in v's LSBs
+    if v & (1 << (bits - 1)) != 0 {
+        v - (1 << bits)
+    } else {
+        v
+    }
+}
+
+/// 2-bit rows: 4 MACs per weight byte, unrolled.
+fn dot_w2(row: &[u8], col: &[i32]) -> i32 {
+    let mut acc = 0i32;
+    let mut chunks = col.chunks_exact(4);
+    for (chunk, &b) in (&mut chunks).zip(row) {
+        let b = b as i32;
+        acc += chunk[0] * sext(b & 3, 2);
+        acc += chunk[1] * sext((b >> 2) & 3, 2);
+        acc += chunk[2] * sext((b >> 4) & 3, 2);
+        acc += chunk[3] * sext((b >> 6) & 3, 2);
+    }
+    let rem = chunks.remainder();
+    if !rem.is_empty() {
+        let b = row[col.len() / 4] as i32;
+        for (j, x) in rem.iter().enumerate() {
+            acc += x * sext((b >> (2 * j)) & 3, 2);
+        }
+    }
+    acc
+}
+
+/// 4-bit rows: 2 MACs per weight byte, unrolled.
+fn dot_w4(row: &[u8], col: &[i32]) -> i32 {
+    let mut acc = 0i32;
+    let mut chunks = col.chunks_exact(2);
+    for (chunk, &b) in (&mut chunks).zip(row) {
+        let b = b as i32;
+        acc += chunk[0] * sext(b & 0xf, 4);
+        acc += chunk[1] * sext((b >> 4) & 0xf, 4);
+    }
+    let rem = chunks.remainder();
+    if !rem.is_empty() {
+        let b = row[col.len() / 2] as i32;
+        acc += rem[0] * sext(b & 0xf, 4);
+    }
+    acc
+}
+
+/// 8-bit rows: one byte per weight.
+fn dot_w8(row: &[u8], col: &[i32]) -> i32 {
+    let mut acc = 0i32;
+    for (x, &b) in col.iter().zip(row) {
+        acc += x * (b as i8 as i32);
+    }
+    acc
+}
+
+fn dot_w2_wide(row: &[u8], col: &[i32]) -> i64 {
+    let mut acc = 0i64;
+    let mut chunks = col.chunks_exact(4);
+    for (chunk, &b) in (&mut chunks).zip(row) {
+        let b = b as i32;
+        acc += chunk[0] as i64 * sext(b & 3, 2) as i64;
+        acc += chunk[1] as i64 * sext((b >> 2) & 3, 2) as i64;
+        acc += chunk[2] as i64 * sext((b >> 4) & 3, 2) as i64;
+        acc += chunk[3] as i64 * sext((b >> 6) & 3, 2) as i64;
+    }
+    let rem = chunks.remainder();
+    if !rem.is_empty() {
+        let b = row[col.len() / 4] as i32;
+        for (j, &x) in rem.iter().enumerate() {
+            acc += x as i64 * sext((b >> (2 * j)) & 3, 2) as i64;
+        }
+    }
+    acc
+}
+
+fn dot_w4_wide(row: &[u8], col: &[i32]) -> i64 {
+    let mut acc = 0i64;
+    let mut chunks = col.chunks_exact(2);
+    for (chunk, &b) in (&mut chunks).zip(row) {
+        let b = b as i32;
+        acc += chunk[0] as i64 * sext(b & 0xf, 4) as i64;
+        acc += chunk[1] as i64 * sext((b >> 4) & 0xf, 4) as i64;
+    }
+    let rem = chunks.remainder();
+    if !rem.is_empty() {
+        let b = row[col.len() / 2] as i32;
+        acc += rem[0] as i64 * sext(b & 0xf, 4) as i64;
+    }
+    acc
+}
+
+fn dot_w8_wide(row: &[u8], col: &[i32]) -> i64 {
+    let mut acc = 0i64;
+    for (x, &b) in col.iter().zip(row) {
+        acc += *x as i64 * (b as i8 as i64);
+    }
+    acc
+}
+
+struct PackedRow {
+    /// byte offset into `bytes`
+    offset: u32,
+    /// row length in bytes
+    len: u32,
+    /// `precision_index(weight_bits)`
+    widx: u8,
+}
+
+struct PackedKernel {
+    /// all channel rows, each padded to a byte boundary (the CMix-NN
+    /// reordered-group layout `quant::packed_weight_bytes` sizes)
+    bytes: Vec<u8>,
+    rows: Vec<PackedRow>,
+    /// `precision_index(act_bits)` — selects the kernel-table row
+    aidx: usize,
+}
+
+impl KernelBackend for PackedBackend {
+    fn name(&self) -> &'static str {
+        "packed"
+    }
+
+    fn prepare(&self, dl: &DeployedLayer) -> Box<dyn LayerKernel> {
+        let k = dl.k();
+        let cout = dl.spec.cout;
+        let mut bytes = Vec::with_capacity(dl.packed_bytes());
+        let mut rows = Vec::with_capacity(cout);
+        for c in 0..cout {
+            let bits = dl.weight_bits[c];
+            let packed = pack_subbyte(&dl.qweights[c * k..(c + 1) * k], bits);
+            rows.push(PackedRow {
+                offset: bytes.len() as u32,
+                len: packed.len() as u32,
+                widx: precision_index(bits) as u8,
+            });
+            bytes.extend_from_slice(&packed);
+        }
+        Box::new(PackedKernel {
+            bytes,
+            rows,
+            aidx: precision_index(dl.act_bits),
+        })
+    }
+}
+
+impl PackedKernel {
+    #[inline(always)]
+    fn row(&self, c: usize) -> (&[u8], usize) {
+        let r = &self.rows[c];
+        (
+            &self.bytes[r.offset as usize..(r.offset + r.len) as usize],
+            r.widx as usize,
+        )
+    }
+}
+
+impl LayerKernel for PackedKernel {
+    #[inline]
+    fn dot(&self, c: usize, col: &[i32]) -> i32 {
+        let (row, widx) = self.row(c);
+        DOT_KERNELS[self.aidx][widx](row, col)
+    }
+
+    #[inline]
+    fn dot_wide(&self, c: usize, col: &[i32]) -> i64 {
+        let (row, widx) = self.row(c);
+        DOT_KERNELS_WIDE[self.aidx][widx](row, col)
+    }
+
+    fn weight_bytes(&self) -> usize {
+        self.bytes.len()
+    }
+}
+
+/// Resolve a backend by CLI/bench name.
+pub fn backend_by_name(name: &str) -> anyhow::Result<&'static dyn KernelBackend> {
+    match name {
+        "reference" | "ref" => Ok(&ReferenceBackend),
+        "packed" => Ok(&PackedBackend),
+        other => anyhow::bail!("unknown backend {other:?} (reference|packed)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    fn random_row(rng: &mut Pcg32, k: usize, bits: u32) -> Vec<i32> {
+        let hi = (1i32 << (bits - 1)) - 1;
+        (0..k).map(|_| rng.below((2 * hi + 1) as u32) as i32 - hi).collect()
+    }
+
+    #[test]
+    fn packed_dot_matches_scalar_all_widths() {
+        let mut rng = Pcg32::seeded(11);
+        for bits in [2u32, 4, 8] {
+            // ragged K values exercise the tail paths
+            for k in [1usize, 3, 4, 5, 7, 8, 64, 65, 127] {
+                let w = random_row(&mut rng, k, bits);
+                let col: Vec<i32> =
+                    (0..k).map(|_| rng.below(256) as i32).collect();
+                let packed = pack_subbyte(&w, bits);
+                let want: i32 =
+                    col.iter().zip(&w).map(|(x, v)| x * v).sum();
+                let got = match bits {
+                    2 => dot_w2(&packed, &col),
+                    4 => dot_w4(&packed, &col),
+                    _ => dot_w8(&packed, &col),
+                };
+                assert_eq!(got, want, "bits={bits} k={k}");
+                let got_wide = match bits {
+                    2 => dot_w2_wide(&packed, &col),
+                    4 => dot_w4_wide(&packed, &col),
+                    _ => dot_w8_wide(&packed, &col),
+                };
+                assert_eq!(got_wide, want as i64, "wide bits={bits} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn sext_covers_full_range() {
+        assert_eq!(sext(0, 2), 0);
+        assert_eq!(sext(1, 2), 1);
+        assert_eq!(sext(2, 2), -2);
+        assert_eq!(sext(3, 2), -1);
+        assert_eq!(sext(0x7, 4), 7);
+        assert_eq!(sext(0x8, 4), -8);
+        assert_eq!(sext(0xf, 4), -1);
+    }
+
+    #[test]
+    fn backend_names_resolve() {
+        assert_eq!(backend_by_name("packed").unwrap().name(), "packed");
+        assert_eq!(backend_by_name("ref").unwrap().name(), "reference");
+        assert!(backend_by_name("simd").is_err());
+    }
+}

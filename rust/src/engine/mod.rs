@@ -1,0 +1,57 @@
+//! Compile-once / run-many integer inference engine.
+//!
+//! The seed deployed-inference path (`mpic::exec`) interprets a
+//! [`DeployedModel`](crate::deploy::DeployedModel) sample by sample,
+//! re-deriving padding/im2col geometry, re-allocating every activation
+//! buffer and re-cloning the saved-tensor map on each call.  This module
+//! is the plan/execute split that replaces it on the hot path:
+//!
+//! * [`ExecPlan::compile`] lowers a deployed model **once** into a
+//!   self-contained plan: arena slot assignments, precomputed SAME
+//!   padding/im2col gather tables, folded per-channel epilogues, the
+//!   per-layer [`InferenceCost`](crate::mpic::cost::InferenceCost)
+//!   (input-independent, accounted at compile time), and per-layer
+//!   kernels prepared by a [`KernelBackend`];
+//! * [`ExecPlan::run_sample`] / [`ExecPlan::run_batch`] execute it with
+//!   zero per-sample allocation besides the returned outputs, fanning
+//!   batches across `std::thread::scope` workers with per-thread
+//!   [`Arena`]s;
+//! * [`KernelBackend`] is the pluggable seam for the integer dot
+//!   kernels: [`ReferenceBackend`] (the seed scalar loops, the
+//!   bit-exactness oracle) and [`PackedBackend`] (sub-byte bit-packed
+//!   weight rows with unrolled decode kernels per `(p_x, p_w)`,
+//!   mirroring MPIC's mixed-precision SIMD modes).  All backends are
+//!   bit-identical by contract — `tests/engine_equivalence.rs` enforces
+//!   it across all nine `(p_x, p_w) ∈ {2,4,8}²` combos and the four
+//!   benchmark topologies.
+
+pub mod arena;
+pub mod backend;
+pub mod plan;
+
+pub use arena::Arena;
+pub use backend::{
+    backend_by_name, KernelBackend, LayerKernel, PackedBackend,
+    ReferenceBackend,
+};
+pub use plan::{engine_threads, ExecPlan};
+
+use anyhow::Result;
+
+use crate::deploy::DeployedModel;
+use crate::energy::CostLut;
+use crate::mpic::cost::InferenceCost;
+
+/// One-shot convenience: compile a plan against `backend` and run the
+/// whole batch.  Callers executing more than one batch should keep the
+/// [`ExecPlan`] (that is the point of the plan/execute split).
+pub fn run_batch(
+    model: &DeployedModel,
+    xs: &[f32],
+    feat: usize,
+    lut: &CostLut,
+    backend: &dyn KernelBackend,
+) -> Result<(Vec<Vec<f32>>, InferenceCost)> {
+    let plan = ExecPlan::compile(model, lut, backend)?;
+    plan.run_batch(xs, feat)
+}

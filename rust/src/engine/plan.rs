@@ -1,0 +1,708 @@
+//! Plan compilation and execution.
+//!
+//! [`ExecPlan::compile`] walks a [`DeployedModel`] **once** and bakes
+//! everything input-independent into a self-contained, `Sync` plan:
+//!
+//! * **slot assignment** — every node reads/writes fixed arena slot ids
+//!   (two ping-pong scratch slots + one per saved residual tag), so
+//!   execution never touches a `HashMap` or clones an activation;
+//! * **gather tables** — SAME-padding im2col source offsets per output
+//!   pixel, computed once instead of re-deriving window/padding
+//!   arithmetic per sample;
+//! * **folded epilogues** — `a_fold[c] * eps_x` pre-multiplied per
+//!   channel (bit-identical: the same two f32 factors are multiplied,
+//!   just once instead of per output element);
+//! * **backend kernels** — weights handed to the chosen
+//!   [`KernelBackend`](super::KernelBackend) (scalar rows or sub-byte
+//!   packed rows);
+//! * **cost** — the full [`InferenceCost`] is accounted at compile time
+//!   (costs are input-independent), so running a sample does zero cost
+//!   bookkeeping.
+//!
+//! [`ExecPlan::run_batch`] fans samples out across `std::thread::scope`
+//! workers, each with its own [`Arena`].
+//!
+//! Numerical contract: for any backend, outputs are **bit-identical** to
+//! the scalar oracle `mpic::exec::run_sample` — asserted layer-type by
+//! layer-type in `tests/engine_equivalence.rs`.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::deploy::{DeployedLayer, DeployedModel, SubConv};
+use crate::energy::CostLut;
+use crate::mpic::cost::{
+    account_group, account_memory, account_structural, InferenceCost, LayerCost,
+};
+use crate::mpic::memory;
+
+use super::arena::Arena;
+use super::backend::KernelBackend;
+use super::LayerKernel;
+
+// single source of SAME-padding truth, shared with the scalar oracle
+use crate::mpic::exec::same_pad;
+
+/// Residual epilogue fused onto a quantized layer (`spec.add_from`).
+struct PostAdd {
+    other: usize,
+    len: usize,
+    relu: bool,
+}
+
+/// One quantized layer, fully precompiled.
+struct QuantOp {
+    fc: bool,
+    depthwise: bool,
+    /// weights per output channel
+    k: usize,
+    /// input channels per group (1 for depthwise)
+    cin_g: usize,
+    /// kernel spatial positions (`kx * ky`)
+    kk: usize,
+    in_len: usize,
+    out_h: usize,
+    out_w: usize,
+    cout: usize,
+    /// PACT clip (already floored at 1e-6) and step
+    act_alpha: f32,
+    act_eps: f32,
+    /// per output pixel x kernel position: base offset into the input
+    /// HWC code buffer, or -1 outside the image (zero padding)
+    gather: Vec<i32>,
+    groups: Vec<SubConv>,
+    /// `a_fold[c] * act_eps` (same f32 product the oracle forms per
+    /// element) and the additive epilogue term
+    a_eps: Vec<f32>,
+    b_fold: Vec<f32>,
+    relu_inline: bool,
+    post_add: Option<PostAdd>,
+    kernel: Box<dyn LayerKernel>,
+}
+
+enum NodeKind {
+    Quant(Box<QuantOp>),
+    AvgPool { in_h: usize, in_w: usize, c: usize },
+    Add { other: usize, len: usize, relu: bool },
+    /// tap / flatten: HWC row-major data is unchanged, dims only
+    NoOp,
+}
+
+struct PlanNode {
+    src: usize,
+    dst: usize,
+    /// copy the node's output into this tag slot afterwards (`save_as`)
+    save: Option<usize>,
+    out_len: usize,
+    kind: NodeKind,
+}
+
+/// A compiled, reusable execution plan for one deployed model.
+pub struct ExecPlan {
+    bench: String,
+    backend_name: &'static str,
+    feat: usize,
+    slot_len: Vec<usize>,
+    q_len: usize,
+    col_len: usize,
+    nodes: Vec<PlanNode>,
+    out_slot: usize,
+    out_len: usize,
+    output_perm: Vec<usize>,
+    permute: bool,
+    cost: InferenceCost,
+    weight_bytes: usize,
+}
+
+const SCRATCH_A: usize = 0;
+const SCRATCH_B: usize = 1;
+
+/// Pick the write slot for an out-of-place op: the scratch slot that is
+/// not the source (tag slots are never written by compute nodes).
+fn other_scratch(src: usize) -> usize {
+    if src == SCRATCH_A {
+        SCRATCH_B
+    } else {
+        SCRATCH_A
+    }
+}
+
+impl ExecPlan {
+    /// Compile `model` once against `backend`.
+    pub fn compile(
+        model: &DeployedModel,
+        lut: &CostLut,
+        backend: &dyn KernelBackend,
+    ) -> Result<ExecPlan> {
+        let (mut h, mut w, mut c) = match model.input_shape.len() {
+            3 => (
+                model.input_shape[0],
+                model.input_shape[1],
+                model.input_shape[2],
+            ),
+            1 => (1, 1, model.input_shape[0]),
+            _ => bail!("unsupported input rank {}", model.input_shape.len()),
+        };
+        let feat = h * w * c;
+        let mut slot_len = vec![0usize, 0usize]; // scratch, sized below
+        let mut max_len = feat;
+        let mut q_len = 0usize;
+        let mut col_len = 0usize;
+        let mut weight_bytes = 0usize;
+        let mut tags: std::collections::HashMap<String, (usize, (usize, usize, usize))> =
+            std::collections::HashMap::new();
+        let mut cur = SCRATCH_A;
+        let mut nodes = Vec::with_capacity(model.nodes.len());
+        let mut cost = InferenceCost::default();
+
+        for node in &model.nodes {
+            let spec = &node.spec;
+            if let Some(tag) = &spec.input_from {
+                let &(slot, dims) = tags
+                    .get(tag)
+                    .ok_or_else(|| anyhow!("missing input tag {tag}"))?;
+                cur = slot;
+                (h, w, c) = dims;
+            }
+            let in_len = h * w * c;
+            let mut lc =
+                LayerCost { name: spec.name.clone(), ..Default::default() };
+
+            let (kind, dst) = match &node.layer {
+                Some(dl) => {
+                    let op = Self::compile_quant(
+                        dl, (h, w, c), lut, backend, &tags, &mut lc,
+                    )?;
+                    weight_bytes += op.kernel.weight_bytes();
+                    q_len = q_len.max(op.in_len);
+                    col_len = col_len.max(op.k);
+                    (h, w, c) = if op.fc {
+                        (1, 1, op.cout)
+                    } else {
+                        (op.out_h, op.out_w, op.cout)
+                    };
+                    (NodeKind::Quant(op), other_scratch(cur))
+                }
+                None => match spec.kind.as_str() {
+                    "tap" => (NodeKind::NoOp, cur),
+                    "flatten" => {
+                        (h, w, c) = (1, 1, in_len);
+                        (NodeKind::NoOp, cur)
+                    }
+                    "avgpool" => {
+                        let kind = NodeKind::AvgPool { in_h: h, in_w: w, c };
+                        account_structural(&mut lc, in_len);
+                        (h, w) = (1, 1);
+                        (kind, other_scratch(cur))
+                    }
+                    "add" => {
+                        let tag = spec
+                            .add_from
+                            .as_ref()
+                            .ok_or_else(|| anyhow!("add w/o tag"))?;
+                        let &(other, dims) = tags
+                            .get(tag)
+                            .ok_or_else(|| anyhow!("missing saved tag {tag}"))?;
+                        let olen = dims.0 * dims.1 * dims.2;
+                        if olen != in_len {
+                            bail!("add size mismatch at {}", spec.name);
+                        }
+                        account_structural(&mut lc, in_len);
+                        let kind = NodeKind::Add {
+                            other,
+                            len: in_len,
+                            relu: spec.relu,
+                        };
+                        // in-place on scratch; copy-out-of a tag slot
+                        let dst = if cur <= SCRATCH_B { cur } else { SCRATCH_A };
+                        (kind, dst)
+                    }
+                    other => bail!("unexpected structural kind {other}"),
+                },
+            };
+
+            let out_len = h * w * c;
+            max_len = max_len.max(out_len);
+            let save = match &spec.save_as {
+                Some(tag) => {
+                    let slot = slot_len.len();
+                    slot_len.push(out_len);
+                    tags.insert(tag.clone(), (slot, (h, w, c)));
+                    Some(slot)
+                }
+                None => None,
+            };
+            if lc.total_cycles() > 0.0 || lc.mem_bytes > 0 {
+                cost.layers.push(lc);
+            }
+            nodes.push(PlanNode { src: cur, dst, save, out_len, kind });
+            cur = dst;
+        }
+
+        slot_len[SCRATCH_A] = max_len;
+        slot_len[SCRATCH_B] = max_len;
+        let out_len = h * w * c;
+        let permute = !model.output_perm.is_empty()
+            && model.output_perm.iter().enumerate().any(|(i, &p)| i != p);
+        if permute && model.output_perm.len() != out_len {
+            bail!(
+                "output permutation length {} != output length {out_len}",
+                model.output_perm.len()
+            );
+        }
+        Ok(ExecPlan {
+            bench: model.bench.clone(),
+            backend_name: backend.name(),
+            feat,
+            slot_len,
+            q_len,
+            col_len,
+            nodes,
+            out_slot: cur,
+            out_len,
+            output_perm: model.output_perm.clone(),
+            permute,
+            cost,
+            weight_bytes,
+        })
+    }
+
+    fn compile_quant(
+        dl: &DeployedLayer,
+        (h, w, c): (usize, usize, usize),
+        lut: &CostLut,
+        backend: &dyn KernelBackend,
+        tags: &std::collections::HashMap<String, (usize, (usize, usize, usize))>,
+        lc: &mut LayerCost,
+    ) -> Result<Box<QuantOp>> {
+        let s = &dl.spec;
+        let fc = s.kind == "fc";
+        let depthwise = s.kind == "dwconv";
+        let k = dl.k();
+        let in_len = h * w * c;
+        let (out_h, out_w, cout) = if fc {
+            if in_len != k {
+                bail!(
+                    "fc {} input length {in_len} != K {k}",
+                    s.name
+                );
+            }
+            (1, 1, s.cout)
+        } else {
+            if h != s.in_h || w != s.in_w || c != s.cin {
+                bail!(
+                    "conv {} geometry mismatch: input {h}x{w}x{c} vs spec {}x{}x{}",
+                    s.name, s.in_h, s.in_w, s.cin
+                );
+            }
+            (s.out_h, s.out_w, s.cout)
+        };
+        let cin_g = if depthwise { 1 } else { s.cin };
+        let kk = s.kx * s.ky;
+
+        // gather table (conv/dwconv): base offsets into the HWC codes
+        let gather = if fc {
+            Vec::new()
+        } else {
+            let pad_y = same_pad(s.in_h, s.out_h, s.kx, s.stride);
+            let pad_x = same_pad(s.in_w, s.out_w, s.ky, s.stride);
+            let mut g = Vec::with_capacity(out_h * out_w * kk);
+            for oy in 0..out_h {
+                for ox in 0..out_w {
+                    for ki in 0..s.kx {
+                        let iy =
+                            oy as i64 * s.stride as i64 + ki as i64 - pad_y;
+                        for kj in 0..s.ky {
+                            let ix = ox as i64 * s.stride as i64 + kj as i64
+                                - pad_x;
+                            let inside = iy >= 0
+                                && iy < s.in_h as i64
+                                && ix >= 0
+                                && ix < s.in_w as i64;
+                            g.push(if inside {
+                                ((iy as usize * s.in_w + ix as usize) * s.cin)
+                                    as i32
+                            } else {
+                                -1
+                            });
+                        }
+                    }
+                }
+            }
+            g
+        };
+
+        // PACT step, identical to quant::quantize_acts_pact
+        let levels = ((1u32 << dl.act_bits) - 1) as f32;
+        let act_alpha = dl.alpha.max(1e-6);
+        let act_eps = act_alpha / levels;
+        let a_eps: Vec<f32> =
+            dl.a_fold.iter().map(|&a| a * act_eps).collect();
+
+        // fused residual epilogue
+        let post_add = match &s.add_from {
+            Some(tag) => {
+                let &(other, dims) = tags
+                    .get(tag)
+                    .ok_or_else(|| anyhow!("missing saved tag {tag}"))?;
+                let len = dims.0 * dims.1 * dims.2;
+                if len != out_h * out_w * cout {
+                    bail!("residual size mismatch at {}", s.name);
+                }
+                Some(PostAdd { other, len, relu: s.relu })
+            }
+            None => None,
+        };
+
+        // input-independent cost, in the oracle's accounting order
+        for g in &dl.groups {
+            let macs = if fc {
+                (g.len * k) as u64
+            } else {
+                (out_h * out_w * g.len * k) as u64
+            };
+            account_group(lc, lut, dl.act_bits, g.bits, macs);
+        }
+        account_memory(
+            lc,
+            memory::layer_traffic_bytes(s, dl.act_bits, dl.packed_bytes()),
+        );
+        if let Some(pa) = &post_add {
+            account_structural(lc, pa.len);
+        }
+
+        Ok(Box::new(QuantOp {
+            fc,
+            depthwise,
+            k,
+            cin_g,
+            kk,
+            in_len,
+            out_h,
+            out_w,
+            cout,
+            act_alpha,
+            act_eps,
+            gather,
+            groups: dl.groups.clone(),
+            a_eps,
+            b_fold: dl.b_fold.clone(),
+            relu_inline: s.relu && s.add_from.is_none(),
+            post_add,
+            kernel: backend.prepare(dl),
+        }))
+    }
+
+    // ---- accessors ---------------------------------------------------------
+
+    pub fn bench(&self) -> &str {
+        &self.bench
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend_name
+    }
+
+    /// Per-sample input length.
+    pub fn feat(&self) -> usize {
+        self.feat
+    }
+
+    /// The precomputed cost of ONE inference (input-independent).
+    pub fn cost(&self) -> &InferenceCost {
+        &self.cost
+    }
+
+    /// Bytes of weight storage across all layer kernels.
+    pub fn weight_bytes(&self) -> usize {
+        self.weight_bytes
+    }
+
+    /// Allocate a worker arena sized for this plan.
+    pub fn arena(&self) -> Arena {
+        Arena::new(&self.slot_len, self.q_len, self.col_len)
+    }
+
+    // ---- execution ---------------------------------------------------------
+
+    /// Run one sample using `arena` scratch; returns the output
+    /// activations in natural (un-permuted) channel order.
+    pub fn run_sample(
+        &self,
+        arena: &mut Arena,
+        input: &[f32],
+    ) -> Result<Vec<f32>> {
+        if input.len() != self.feat {
+            bail!("input length {} != {}", input.len(), self.feat);
+        }
+        let Arena { slots, q, col } = arena;
+        slots[SCRATCH_A][..self.feat].copy_from_slice(input);
+
+        for node in &self.nodes {
+            match &node.kind {
+                NodeKind::NoOp => {}
+                NodeKind::AvgPool { in_h, in_w, c } => {
+                    let (dst, src) = pair(slots, node.dst, node.src);
+                    dst[..*c].fill(0.0);
+                    for y in 0..*in_h {
+                        for x in 0..*in_w {
+                            let base = (y * in_w + x) * c;
+                            for ch in 0..*c {
+                                dst[ch] += src[base + ch];
+                            }
+                        }
+                    }
+                    let n = (in_h * in_w) as f32;
+                    for v in dst[..*c].iter_mut() {
+                        *v /= n;
+                    }
+                }
+                NodeKind::Add { other, len, relu } => {
+                    if node.dst != node.src {
+                        let (dst, src) = pair(slots, node.dst, node.src);
+                        dst[..*len].copy_from_slice(&src[..*len]);
+                    }
+                    let (dst, oth) = pair(slots, node.dst, *other);
+                    for (d, &o) in dst[..*len].iter_mut().zip(&oth[..*len]) {
+                        *d += o;
+                        if *relu {
+                            *d = d.max(0.0);
+                        }
+                    }
+                }
+                NodeKind::Quant(op) => {
+                    {
+                        let (dst, src) = pair(slots, node.dst, node.src);
+                        exec_quant(op, src, dst, q, col);
+                    }
+                    if let Some(pa) = &op.post_add {
+                        let (dst, oth) = pair(slots, node.dst, pa.other);
+                        for (d, &o) in
+                            dst[..pa.len].iter_mut().zip(&oth[..pa.len])
+                        {
+                            *d += o;
+                            if pa.relu {
+                                *d = d.max(0.0);
+                            }
+                        }
+                    }
+                }
+            }
+            if let Some(slot) = node.save {
+                if slot != node.dst {
+                    let (save, out) = pair(slots, slot, node.dst);
+                    save[..node.out_len]
+                        .copy_from_slice(&out[..node.out_len]);
+                }
+            }
+        }
+
+        let out = &slots[self.out_slot][..self.out_len];
+        if self.permute {
+            // un-permute the output space (free relabeling on device)
+            let mut natural = vec![0.0f32; self.out_len];
+            for (new_c, &orig_c) in self.output_perm.iter().enumerate() {
+                natural[orig_c] = out[new_c];
+            }
+            Ok(natural)
+        } else {
+            Ok(out.to_vec())
+        }
+    }
+
+    /// Run a batch of flattened samples across worker threads.
+    ///
+    /// Returns per-sample outputs and the cost of **one** inference:
+    /// costs are input-independent, so the returned [`InferenceCost`]
+    /// describes every individual sample, not the batch total.
+    pub fn run_batch(
+        &self,
+        xs: &[f32],
+        feat: usize,
+    ) -> Result<(Vec<Vec<f32>>, InferenceCost)> {
+        let n = if feat == 0 { 0 } else { xs.len() / feat };
+        self.run_batch_threads(xs, feat, engine_threads(n))
+    }
+
+    /// [`Self::run_batch`] with an explicit worker count.
+    pub fn run_batch_threads(
+        &self,
+        xs: &[f32],
+        feat: usize,
+        threads: usize,
+    ) -> Result<(Vec<Vec<f32>>, InferenceCost)> {
+        if feat == 0 || feat != self.feat {
+            bail!("batch feature length {feat} != model input {}", self.feat);
+        }
+        if xs.len() % feat != 0 {
+            bail!(
+                "batch of {} values is not a whole number of {feat}-element \
+                 samples",
+                xs.len()
+            );
+        }
+        let n = xs.len() / feat;
+        let mut outs = Vec::with_capacity(n);
+        if threads <= 1 || n <= 1 {
+            let mut arena = self.arena();
+            for i in 0..n {
+                outs.push(
+                    self.run_sample(&mut arena, &xs[i * feat..(i + 1) * feat])?,
+                );
+            }
+        } else {
+            let threads = threads.min(n);
+            let chunk = n.div_ceil(threads);
+            let ranges: Vec<(usize, usize)> = (0..threads)
+                .map(|t| (t * chunk, ((t + 1) * chunk).min(n)))
+                .filter(|&(a, b)| a < b)
+                .collect();
+            let results: Vec<Result<Vec<Vec<f32>>>> =
+                std::thread::scope(|scope| {
+                    let handles: Vec<_> = ranges
+                        .iter()
+                        .map(|&(a, b)| {
+                            scope.spawn(move || {
+                                let mut arena = self.arena();
+                                (a..b)
+                                    .map(|i| {
+                                        self.run_sample(
+                                            &mut arena,
+                                            &xs[i * feat..(i + 1) * feat],
+                                        )
+                                    })
+                                    .collect()
+                            })
+                        })
+                        .collect();
+                    handles
+                        .into_iter()
+                        .map(|h| h.join().expect("engine worker panicked"))
+                        .collect()
+                });
+            for r in results {
+                outs.extend(r?);
+            }
+        }
+        Ok((outs, self.cost.clone()))
+    }
+}
+
+/// Worker count for an `n`-sample batch: `CWMIX_ENGINE_THREADS` env
+/// override, else `min(n, cores)`.
+pub fn engine_threads(n: usize) -> usize {
+    let cores = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1);
+    std::env::var("CWMIX_ENGINE_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or(cores)
+        .clamp(1, n.max(1))
+}
+
+/// Disjoint mutable access to two arena slots.
+fn pair<'a>(
+    slots: &'a mut [Vec<f32>],
+    a: usize,
+    b: usize,
+) -> (&'a mut [f32], &'a mut [f32]) {
+    debug_assert_ne!(a, b);
+    if a < b {
+        let (lo, hi) = slots.split_at_mut(b);
+        (&mut lo[a][..], &mut hi[0][..])
+    } else {
+        let (lo, hi) = slots.split_at_mut(a);
+        (&mut hi[0][..], &mut lo[b][..])
+    }
+}
+
+/// One quantized layer on one sample: quantize → gather → dot → epilogue.
+fn exec_quant(op: &QuantOp, src: &mut [f32], dst: &mut [f32], q: &mut [u32], col: &mut [i32]) {
+    // PACT quantization of the whole input buffer (identical expression
+    // to quant::quantize_acts_pact)
+    let a = op.act_alpha;
+    let eps = op.act_eps;
+    for (qd, &v) in q[..op.in_len].iter_mut().zip(src[..op.in_len].iter()) {
+        *qd = ((v.clamp(0.0, a)) / eps).round_ties_even() as u32;
+    }
+    let q = &q[..op.in_len];
+
+    if op.fc {
+        let col = &mut col[..op.k];
+        for (cd, &qv) in col.iter_mut().zip(q) {
+            *cd = qv as i32;
+        }
+        for g in &op.groups {
+            for c in g.start..g.start + g.len {
+                let acc = op.kernel.dot_wide(c, col);
+                let mut y = acc as f32 * op.a_eps[c] + op.b_fold[c];
+                if op.relu_inline {
+                    y = y.max(0.0);
+                }
+                dst[c] = y;
+            }
+        }
+        return;
+    }
+
+    let kk = op.kk;
+    if op.depthwise {
+        // depthwise: filter c reads only input channel c — gather the
+        // kk-point window per (pixel, channel)
+        let col = &mut col[..kk];
+        for pix in 0..op.out_h * op.out_w {
+            let tbl = &op.gather[pix * kk..(pix + 1) * kk];
+            let orow = pix * op.cout;
+            for g in &op.groups {
+                for c in g.start..g.start + g.len {
+                    for (cd, &base) in col.iter_mut().zip(tbl) {
+                        *cd = if base < 0 {
+                            0
+                        } else {
+                            q[base as usize + c] as i32
+                        };
+                    }
+                    let acc = op.kernel.dot(c, col);
+                    let mut y = acc as f32 * op.a_eps[c] + op.b_fold[c];
+                    if op.relu_inline {
+                        y = y.max(0.0);
+                    }
+                    dst[orow + c] = y;
+                }
+            }
+        }
+        return;
+    }
+
+    // standard conv: gather the receptive field once per output pixel,
+    // reuse it for all C_out channels
+    let cin_g = op.cin_g;
+    let col = &mut col[..op.k];
+    for pix in 0..op.out_h * op.out_w {
+        let tbl = &op.gather[pix * kk..(pix + 1) * kk];
+        for (t, &base) in tbl.iter().enumerate() {
+            let d = t * cin_g;
+            if base < 0 {
+                col[d..d + cin_g].fill(0);
+            } else {
+                let b = base as usize;
+                for (cd, &qv) in
+                    col[d..d + cin_g].iter_mut().zip(&q[b..b + cin_g])
+                {
+                    *cd = qv as i32;
+                }
+            }
+        }
+        let orow = pix * op.cout;
+        for g in &op.groups {
+            for c in g.start..g.start + g.len {
+                let acc = op.kernel.dot(c, col);
+                let mut y = acc as f32 * op.a_eps[c] + op.b_fold[c];
+                if op.relu_inline {
+                    y = y.max(0.0);
+                }
+                dst[orow + c] = y;
+            }
+        }
+    }
+}

@@ -6,23 +6,41 @@
 //!
 //! This crate is the **Layer-3 coordinator** of the three-layer stack
 //! (see `DESIGN.md`): it owns the NAS training loop (Alg. 1), the λ-sweep
-//! Pareto exploration (Fig. 3), the §III-C deployment transform, the MPIC
-//! RISC-V simulator substrate, and the PJRT runtime that executes the
-//! AOT-lowered JAX/Pallas graphs from `artifacts/`.  Python never runs on
-//! any path in this crate.
+//! Pareto exploration (Fig. 3), the §III-C deployment transform, the
+//! plan/execute integer inference engine, the MPIC RISC-V simulator
+//! substrate, and the PJRT runtime that executes the AOT-lowered
+//! JAX/Pallas graphs from `artifacts/`.  Python never runs on any path
+//! in this crate.
+//!
+//! ## Feature flags
+//!
+//! * **default** — pure Rust: the deployment transform, the inference
+//!   engine, the MPIC cost model, the builtin model zoo, reporting.
+//!   Builds and tests green with no artifacts and no PJRT plugin.
+//! * **`xla`** — enables [`runtime`] (PJRT), [`nas::trainer`],
+//!   the search [`baselines`], [`deploy::verify`] and the λ-sweep
+//!   driver.  Needs the real xla-rs bindings (see `rust/xla-stub`) and
+//!   `make artifacts`.
 //!
 //! Module map:
 //! * [`util`] — RNG, statistics (incl. AUC), timers, ASCII plots.
 //! * [`minijson`] — dependency-free JSON (manifests, configs, results).
-//! * [`tensor`] — small host tensors + `xla::Literal` conversion.
+//! * [`tensor`] — small host tensors (+ `xla::Literal` conversion, xla).
 //! * [`data`] — the four synthetic MLPerf-Tiny-shaped dataset generators.
-//! * [`models`] — benchmark model geometry parsed from the manifest.
+//! * [`models`] — benchmark model geometry: manifest parsing + the
+//!   builtin Rust [`models::zoo`] mirror of the four topologies.
 //! * [`quant`] — affine/PACT quantization, sub-byte packing, assignments.
 //! * [`energy`] — the MPIC `C(p_x, p_w)` LUT and Eq. (7)/(8) evaluation.
-//! * [`mpic`] — the MPIC mixed-precision RISC-V simulator substrate.
+//! * [`mpic`] — the MPIC mixed-precision RISC-V simulator substrate
+//!   (scalar oracle executor + cost accounting).
 //! * [`deploy`] — filter reordering / sub-convolution splitting (§III-C).
-//! * [`runtime`] — PJRT client wrapper executing `artifacts/*.hlo.txt`.
-//! * [`nas`] — the Alg. 1 three-phase DNAS driver.
+//! * [`engine`] — compile-once/run-many inference engine: `ExecPlan`
+//!   plan/execute split, pluggable [`engine::KernelBackend`]s
+//!   (`reference` scalar oracle, `packed` sub-byte kernels), threaded
+//!   batch execution.
+//! * [`runtime`] — PJRT client wrapper executing `artifacts/*.hlo.txt`
+//!   (`xla` feature).
+//! * [`nas`] — the Alg. 1 three-phase DNAS driver (trainer: `xla`).
 //! * [`baselines`] — EdMIPS (layer-wise) and fixed-precision baselines.
 //! * [`coordinator`] — λ sweeps, Pareto fronts, experiment registry.
 //! * [`report`] — Fig. 3 / Fig. 4 style reporting.
@@ -32,12 +50,14 @@ pub mod coordinator;
 pub mod data;
 pub mod deploy;
 pub mod energy;
+pub mod engine;
 pub mod minijson;
 pub mod models;
 pub mod mpic;
 pub mod nas;
 pub mod quant;
 pub mod report;
+#[cfg(feature = "xla")]
 pub mod runtime;
 pub mod tensor;
 pub mod util;

@@ -3,7 +3,11 @@
 //! The manifest is emitted by `python/compile/aot.py` from the very
 //! `ModelDef` the graphs were traced with, so the Rust side — energy
 //! model, MPIC simulator, deployment transform, runtime tensor plumbing —
-//! always sees exactly the trained geometry.
+//! always sees exactly the trained geometry.  When no artifacts are
+//! available, [`zoo::builtin_manifest`] re-derives the same four
+//! topologies natively.
+
+pub mod zoo;
 
 use std::path::{Path, PathBuf};
 

@@ -1,0 +1,523 @@
+//! Builtin Rust mirror of the four MLPerf-Tiny benchmark topologies.
+//!
+//! `python/compile/models/zoo.py` is the source of truth for the trained
+//! artifacts; this module re-derives exactly the same geometry (SAME
+//! ceil-division, dwconv channel inheritance, tags) natively, so the
+//! deployment transform, the inference engine, the cost model, benches
+//! and tests all run **without** `artifacts/` or the `xla` feature:
+//!
+//! * **IC**  — ResNet-8 (16/32/64, 3 stages), 32x32x3, 10 classes.
+//! * **KWS** — DS-CNN small (64ch, 4 depthwise-separable blocks),
+//!   49x10x1, 12 classes.
+//! * **VWW** — MobileNetV1 width 0.25 at 48x48x3, 2 classes.
+//! * **AD**  — dense autoencoder 256 → 128x2 → 8 → 128x2 → 256.
+//!
+//! [`builtin_manifest`] produces a [`Manifest`] indistinguishable from a
+//! parsed `manifest.json` (it passes `Manifest::validate`);
+//! [`synthetic_state`] produces He-initialised parameters with the same
+//! per-suffix rules the trainer uses, for runs where trained weights are
+//! unavailable (cost simulation, backend-equivalence tests, benches).
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use crate::energy::CostLut;
+use crate::models::{LayerSpec, Manifest, TensorSlot};
+use crate::tensor::Tensor;
+use crate::util::Pcg32;
+use crate::PRECISIONS;
+
+/// The builtin benchmark names, in canonical order.
+pub const BENCHES: [&str; 4] = ["ic", "kws", "vww", "ad"];
+
+/// Layer definition before geometry resolution (mirrors python `LayerDef`).
+struct L {
+    name: String,
+    kind: &'static str,
+    cout: usize,
+    kx: usize,
+    ky: usize,
+    stride: usize,
+    relu: bool,
+    bn: bool,
+    bias: bool,
+    save_as: Option<&'static str>,
+    add_from: Option<&'static str>,
+    input_from: Option<&'static str>,
+}
+
+impl L {
+    fn new(name: &str, kind: &'static str) -> L {
+        L {
+            name: name.to_string(),
+            kind,
+            cout: 0,
+            kx: 1,
+            ky: 1,
+            stride: 1,
+            relu: true,
+            bn: true,
+            bias: false,
+            save_as: None,
+            add_from: None,
+            input_from: None,
+        }
+    }
+
+    fn conv(name: &str, cout: usize, kx: usize, ky: usize, stride: usize) -> L {
+        L { cout, kx, ky, stride, ..L::new(name, "conv") }
+    }
+
+    fn dwconv(name: &str, k: usize, stride: usize) -> L {
+        L { kx: k, ky: k, stride, ..L::new(name, "dwconv") }
+    }
+
+    fn fc(name: &str, cout: usize) -> L {
+        L { cout, ..L::new(name, "fc") }
+    }
+
+    /// Head FC: logits/reconstruction — no relu/bn, biased.
+    fn head(name: &str, cout: usize) -> L {
+        L { relu: false, bn: false, bias: true, ..L::fc(name, cout) }
+    }
+}
+
+fn ic_layers() -> Vec<L> {
+    let mut v = vec![L::conv("c1", 16, 3, 3, 1)];
+    // stage 1: identity skip
+    v.push(L { save_as: Some("b1_in"), ..L::new("b1_tap", "tap") });
+    v.push(L::conv("b1c1", 16, 3, 3, 1));
+    v.push(L { add_from: Some("b1_in"), ..L::conv("b1c2", 16, 3, 3, 1) });
+    // stage 2: downsample, 1x1 conv skip
+    v.push(L { save_as: Some("b2_in"), ..L::new("b2_tap", "tap") });
+    v.push(L::conv("b2c1", 32, 3, 3, 2));
+    v.push(L {
+        relu: false,
+        save_as: Some("b2_main"),
+        ..L::conv("b2c2", 32, 3, 3, 1)
+    });
+    v.push(L {
+        input_from: Some("b2_in"),
+        add_from: Some("b2_main"),
+        ..L::conv("b2sc", 32, 1, 1, 2)
+    });
+    // stage 3: downsample, 1x1 conv skip
+    v.push(L { save_as: Some("b3_in"), ..L::new("b3_tap", "tap") });
+    v.push(L::conv("b3c1", 64, 3, 3, 2));
+    v.push(L {
+        relu: false,
+        save_as: Some("b3_main"),
+        ..L::conv("b3c2", 64, 3, 3, 1)
+    });
+    v.push(L {
+        input_from: Some("b3_in"),
+        add_from: Some("b3_main"),
+        ..L::conv("b3sc", 64, 1, 1, 2)
+    });
+    v.push(L::new("pool", "avgpool"));
+    v.push(L::head("fc", 10));
+    v
+}
+
+fn kws_layers() -> Vec<L> {
+    let mut v = vec![L::conv("c1", 64, 10, 4, 2)];
+    for i in 1..5 {
+        v.push(L::dwconv(&format!("dw{i}"), 3, 1));
+        v.push(L::conv(&format!("pw{i}"), 64, 1, 1, 1));
+    }
+    v.push(L::new("pool", "avgpool"));
+    v.push(L::head("fc", 12));
+    v
+}
+
+fn vww_layers() -> Vec<L> {
+    // MobileNetV1 x0.25 channel plan (full-size plan scaled by 1/4)
+    let plan: [(usize, usize); 13] = [
+        (16, 1),
+        (32, 2),
+        (32, 1),
+        (64, 2),
+        (64, 1),
+        (128, 2),
+        (128, 1),
+        (128, 1),
+        (128, 1),
+        (128, 1),
+        (128, 1),
+        (256, 2),
+        (256, 1),
+    ];
+    let mut v = vec![L::conv("c1", 8, 3, 3, 2)];
+    for (i, &(cout, s)) in plan.iter().enumerate() {
+        let i = i + 1;
+        v.push(L::dwconv(&format!("dw{i}"), 3, s));
+        v.push(L::conv(&format!("pw{i}"), cout, 1, 1, 1));
+    }
+    v.push(L::new("pool", "avgpool"));
+    v.push(L::head("fc", 2));
+    v
+}
+
+fn ad_layers() -> Vec<L> {
+    let dims = [128usize, 128, 8, 128, 128];
+    let mut v: Vec<L> = dims
+        .iter()
+        .enumerate()
+        .map(|(i, &d)| L::fc(&format!("fc{}", i + 1), d))
+        .collect();
+    v.push(L::head("out", 256));
+    v
+}
+
+/// Resolve geometry through the graph (mirrors python `build_model`:
+/// SAME padding via ceil division, dwconv inherits channels, tags carry
+/// shapes across skips).
+fn resolve(
+    bench: &str,
+    layers: Vec<L>,
+    input_shape: &[usize],
+    n_classes: usize,
+    loss: &str,
+) -> Result<Manifest> {
+    let (mut h, mut w, mut c) = match input_shape.len() {
+        3 => (input_shape[0], input_shape[1], input_shape[2]),
+        1 => (1, 1, input_shape[0]),
+        _ => bail!("unsupported input rank"),
+    };
+    let mut tags: HashMap<&'static str, (usize, usize, usize)> = HashMap::new();
+    let mut qidx = 0i64;
+    let mut specs = Vec::with_capacity(layers.len());
+    for mut l in layers {
+        if let Some(tag) = l.input_from {
+            let &(th, tw, tc) = tags
+                .get(tag)
+                .ok_or_else(|| anyhow::anyhow!("unknown tag {tag}"))?;
+            (h, w, c) = (th, tw, tc);
+        }
+        let (in_h, in_w, cin) = (h, w, c);
+        match l.kind {
+            "conv" | "dwconv" => {
+                if l.kind == "dwconv" {
+                    l.cout = c;
+                }
+                h = h.div_ceil(l.stride); // SAME padding
+                w = w.div_ceil(l.stride);
+                c = l.cout;
+            }
+            "fc" => {
+                c = l.cout;
+                h = 1;
+                w = 1;
+            }
+            "avgpool" => {
+                h = 1;
+                w = 1;
+                l.cout = c;
+            }
+            "flatten" => {
+                c = h * w * c;
+                h = 1;
+                w = 1;
+                l.cout = c;
+            }
+            "add" | "tap" => {
+                l.cout = c;
+            }
+            other => bail!("unknown layer kind {other}"),
+        }
+        let quant = matches!(l.kind, "conv" | "dwconv" | "fc");
+        let cin_g = if l.kind == "dwconv" { 1 } else { cin };
+        let wpc = if !quant {
+            0
+        } else if l.kind == "fc" {
+            cin
+        } else {
+            cin_g * l.kx * l.ky
+        };
+        let ops = if !quant {
+            0
+        } else if l.kind == "fc" {
+            l.cout * cin
+        } else {
+            h * w * l.cout * wpc
+        };
+        let this_qidx = if quant {
+            qidx += 1;
+            qidx - 1
+        } else {
+            -1
+        };
+        if let Some(tag) = l.save_as {
+            tags.insert(tag, (h, w, c));
+        }
+        specs.push(LayerSpec {
+            name: l.name.clone(),
+            kind: l.kind.to_string(),
+            cin,
+            cout: l.cout,
+            kx: l.kx,
+            ky: l.ky,
+            stride: l.stride,
+            relu: l.relu,
+            bn: l.bn,
+            bias: l.bias,
+            in_h,
+            in_w,
+            out_h: h,
+            out_w: w,
+            qidx: this_qidx,
+            ops,
+            weights_per_channel: wpc,
+            save_as: l.save_as.map(|s| s.to_string()),
+            add_from: l.add_from.map(|s| s.to_string()),
+            input_from: l.input_from.map(|s| s.to_string()),
+        });
+    }
+
+    // tensor slots, in the python naming/ordering convention
+    let mut params = Vec::new();
+    let mut bn_state = Vec::new();
+    let mut nas_cw = Vec::new();
+    let mut nas_lw = Vec::new();
+    let mut hard_assign = Vec::new();
+    let np = PRECISIONS.len();
+    for s in specs.iter().filter(|s| s.is_quant()) {
+        let wshape = if s.kind == "fc" {
+            vec![s.cout, s.cin]
+        } else {
+            let cin_g = if s.kind == "dwconv" { 1 } else { s.cin };
+            vec![s.cout, s.kx, s.ky, cin_g]
+        };
+        params.push(TensorSlot { name: format!("{}.w", s.name), shape: wshape });
+        if s.bias {
+            params.push(TensorSlot {
+                name: format!("{}.b", s.name),
+                shape: vec![s.cout],
+            });
+        }
+        if s.bn {
+            params.push(TensorSlot {
+                name: format!("{}.bn_scale", s.name),
+                shape: vec![s.cout],
+            });
+            params.push(TensorSlot {
+                name: format!("{}.bn_bias", s.name),
+                shape: vec![s.cout],
+            });
+            bn_state.push(TensorSlot {
+                name: format!("{}.bn_mean", s.name),
+                shape: vec![s.cout],
+            });
+            bn_state.push(TensorSlot {
+                name: format!("{}.bn_var", s.name),
+                shape: vec![s.cout],
+            });
+        }
+        params.push(TensorSlot {
+            name: format!("{}.alpha", s.name),
+            shape: vec![],
+        });
+        nas_cw.push(TensorSlot {
+            name: format!("{}.delta", s.name),
+            shape: vec![np],
+        });
+        nas_cw.push(TensorSlot {
+            name: format!("{}.gamma", s.name),
+            shape: vec![s.cout, np],
+        });
+        nas_lw.push(TensorSlot {
+            name: format!("{}.delta", s.name),
+            shape: vec![np],
+        });
+        nas_lw.push(TensorSlot {
+            name: format!("{}.gamma", s.name),
+            shape: vec![1, np],
+        });
+        hard_assign.push(TensorSlot {
+            name: format!("{}.delta_oh", s.name),
+            shape: vec![np],
+        });
+        hard_assign.push(TensorSlot {
+            name: format!("{}.gamma_oh", s.name),
+            shape: vec![s.cout, np],
+        });
+    }
+
+    Ok(Manifest {
+        benchmark: bench.to_string(),
+        dir: PathBuf::from(format!("builtin:{bench}")),
+        batch: 32,
+        seed: 0,
+        precisions: PRECISIONS.to_vec(),
+        loss: loss.to_string(),
+        n_classes,
+        input_shape: input_shape.to_vec(),
+        layers: specs,
+        params,
+        bn_state,
+        nas_cw,
+        nas_lw,
+        hard_assign,
+        lut: CostLut::default(),
+    })
+}
+
+/// Build the builtin manifest for one benchmark (`ic|kws|vww|ad`).
+pub fn builtin_manifest(bench: &str) -> Result<Manifest> {
+    let m = match bench {
+        "ic" => resolve("ic", ic_layers(), &[32, 32, 3], 10, "ce")?,
+        "kws" => resolve("kws", kws_layers(), &[49, 10, 1], 12, "ce")?,
+        "vww" => resolve("vww", vww_layers(), &[48, 48, 3], 2, "ce")?,
+        "ad" => resolve("ad", ad_layers(), &[256], 0, "mse")?,
+        other => bail!("unknown benchmark {other} (ic|kws|vww|ad)"),
+    };
+    m.validate()?;
+    Ok(m)
+}
+
+/// He/constant initialisation by tensor-name suffix — the single source
+/// of truth shared with the trainer (`nas::trainer`), so synthetic and
+/// trained state use identical initial distributions.
+pub fn init_slot_tensor(name: &str, shape: &[usize], rng: &mut Pcg32) -> Tensor {
+    let n: usize = shape.iter().product();
+    if name.ends_with(".w") {
+        let fan_in: usize = shape.iter().skip(1).product::<usize>().max(1);
+        let std = (2.0f32 / fan_in as f32).sqrt();
+        let data = (0..n).map(|_| rng.normal_ms(0.0, std)).collect();
+        Tensor::new(shape.to_vec(), data)
+    } else if name.ends_with(".bn_scale") || name.ends_with(".bn_var") {
+        Tensor::full(shape.to_vec(), 1.0)
+    } else if name.ends_with(".alpha") {
+        Tensor::full(shape.to_vec(), 6.0)
+    } else {
+        Tensor::zeros(shape.to_vec())
+    }
+}
+
+/// Deterministic "stripy" mixed assignment: cycles 2/4/8 across
+/// channels with a per-layer phase — the adversarial case for the
+/// deployment transform (reordering, residual space joins, fragmented
+/// sub-conv groups).  Shared by the equivalence tests, the engine
+/// bench and the HLO-verification tests.
+pub fn stripy_assignment(manifest: &Manifest) -> crate::quant::Assignment {
+    let bits = [2u32, 4, 8];
+    let names = manifest.qnames();
+    let couts = manifest.qcouts();
+    crate::quant::Assignment {
+        layers: names
+            .iter()
+            .zip(&couts)
+            .enumerate()
+            .map(|(li, (n, &c))| crate::quant::LayerAssignment {
+                name: n.clone(),
+                act_bits: bits[li % 3],
+                weight_bits: (0..c).map(|i| bits[(i + li) % 3]).collect(),
+            })
+            .collect(),
+    }
+}
+
+/// Synthetic parameter / BN-state maps for a manifest: what
+/// `deploy::build` needs when no trained artifacts are available.
+pub fn synthetic_state(
+    manifest: &Manifest,
+    seed: u64,
+) -> (HashMap<String, Tensor>, HashMap<String, Tensor>) {
+    let mut rng = Pcg32::new(seed, 11);
+    let params = manifest
+        .params
+        .iter()
+        .map(|s| (s.name.clone(), init_slot_tensor(&s.name, &s.shape, &mut rng)))
+        .collect();
+    let bn = manifest
+        .bn_state
+        .iter()
+        .map(|s| (s.name.clone(), init_slot_tensor(&s.name, &s.shape, &mut rng)))
+        .collect();
+    (params, bn)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_builtin_manifests_validate() {
+        for b in BENCHES {
+            let m = builtin_manifest(b).unwrap();
+            assert_eq!(m.benchmark, b);
+            assert!(m.qlayers().len() >= 6, "{b}");
+        }
+    }
+
+    #[test]
+    fn ic_geometry_matches_resnet8() {
+        let m = builtin_manifest("ic").unwrap();
+        assert_eq!(m.feat_len(), 32 * 32 * 3);
+        let q = m.qlayers();
+        assert_eq!(q.len(), 10); // 9 convs + fc
+        let b2sc = q.iter().find(|l| l.name == "b2sc").unwrap();
+        assert_eq!((b2sc.in_h, b2sc.in_w, b2sc.cin), (32, 32, 16));
+        assert_eq!((b2sc.out_h, b2sc.out_w, b2sc.cout), (16, 16, 32));
+        let fc = q.iter().find(|l| l.name == "fc").unwrap();
+        assert_eq!(fc.cin, 64);
+        assert_eq!(fc.weights_per_channel, 64);
+    }
+
+    #[test]
+    fn kws_geometry_matches_dscnn() {
+        let m = builtin_manifest("kws").unwrap();
+        let q = m.qlayers();
+        assert_eq!(q.len(), 10); // c1 + 4x(dw+pw) + fc
+        let c1 = &q[0];
+        assert_eq!((c1.out_h, c1.out_w, c1.cout), (25, 5, 64));
+        let dw1 = q.iter().find(|l| l.name == "dw1").unwrap();
+        assert_eq!(dw1.cout, 64);
+        assert_eq!(dw1.weights_per_channel, 9);
+    }
+
+    #[test]
+    fn vww_has_28_quant_layers() {
+        let m = builtin_manifest("vww").unwrap();
+        assert_eq!(m.qlayers().len(), 28); // c1 + 13x(dw+pw) + fc
+        // spatial chain: 48 →2 24 →2 12 →2 6 →2 3 →2 2 (SAME ceil-div)
+        let last_pw = m.layers.iter().find(|l| l.name == "pw13").unwrap();
+        assert_eq!((last_pw.out_h, last_pw.out_w, last_pw.cout), (2, 2, 256));
+    }
+
+    #[test]
+    fn ad_is_fc_chain() {
+        let m = builtin_manifest("ad").unwrap();
+        let q = m.qlayers();
+        assert_eq!(q.len(), 6);
+        assert_eq!(q[2].cout, 8); // bottleneck
+        assert_eq!(q[5].cout, 256);
+        assert_eq!(m.feat_len(), 256);
+    }
+
+    #[test]
+    fn synthetic_state_covers_all_slots() {
+        let m = builtin_manifest("ic").unwrap();
+        let (params, bn) = synthetic_state(&m, 0);
+        for s in &m.params {
+            let t = params.get(&s.name).unwrap();
+            assert_eq!(t.shape(), &s.shape[..], "{}", s.name);
+        }
+        for s in &m.bn_state {
+            assert!(bn.contains_key(&s.name), "{}", s.name);
+        }
+        // alpha is a scalar, var is ones
+        assert_eq!(params["c1.alpha"].item(), 6.0);
+        assert_eq!(bn["c1.bn_var"].data()[0], 1.0);
+    }
+
+    #[test]
+    fn deterministic_state() {
+        let m = builtin_manifest("kws").unwrap();
+        let (p1, _) = synthetic_state(&m, 7);
+        let (p2, _) = synthetic_state(&m, 7);
+        assert_eq!(p1["c1.w"], p2["c1.w"]);
+    }
+}

@@ -17,6 +17,10 @@ use crate::energy::CostLut;
 /// arithmetic, precision-mode CSR write on MPIC) — cycles.
 pub const SUBCONV_OVERHEAD_CYCLES: f64 = 60.0;
 
+/// Cycles per element for structural elementwise work (residual adds,
+/// pooling accumulation): 4-lane SIMD ALU ops on MPIC.
+pub const ELEMWISE_CYCLES_PER_ELEM: f64 = 0.25;
+
 /// Energy per byte moved L2→L1 (pJ) — MPIC-class single-cluster SRAM.
 pub const PJ_PER_L2_BYTE: f64 = 3.5;
 
@@ -104,6 +108,12 @@ pub fn account_group(
 pub fn account_memory(cost: &mut LayerCost, bytes: u64) {
     cost.mem_bytes += bytes;
     cost.mem_energy_pj += bytes as f64 * PJ_PER_L2_BYTE;
+}
+
+/// Account structural elementwise work (residual add, pooling) over
+/// `elems` tensor elements.
+pub fn account_structural(cost: &mut LayerCost, elems: usize) {
+    cost.overhead_cycles += elems as f64 * ELEMWISE_CYCLES_PER_ELEM;
 }
 
 #[cfg(test)]

@@ -1,4 +1,4 @@
-//! Integer inference engine over a [`DeployedModel`].
+//! Scalar-oracle integer executor over a [`DeployedModel`].
 //!
 //! Executes exactly the deployed arithmetic: PACT-quantized unsigned
 //! activations (per-layer bits), two's-complement per-channel weights,
@@ -11,15 +11,21 @@
 //! the float conv of the fake-quantized tensors (both products are exact
 //! in f32 for <= 8-bit operands).
 //!
-//! Cost accounting runs alongside execution so every reported cycle /
-//! picojoule corresponds to arithmetic that actually happened.
+//! [`run_sample`] is the **bit-exactness oracle**: simple per-sample
+//! scalar loops with cost accounting interleaved, kept as the ground
+//! truth every [`crate::engine`] backend must match bit for bit.  The
+//! hot path is [`run_batch`], which delegates to the compile-once
+//! engine ([`crate::engine::ExecPlan`], packed backend, threaded).
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::deploy::{DeployedLayer, DeployedModel};
 use crate::energy::CostLut;
 use crate::models::LayerSpec;
-use crate::mpic::cost::{account_group, account_memory, InferenceCost, LayerCost};
+use crate::mpic::cost::{
+    account_group, account_memory, account_structural, InferenceCost,
+    LayerCost,
+};
 use crate::mpic::memory;
 
 /// HWC activation buffer.
@@ -51,8 +57,10 @@ fn quantize_act(a: &Act, alpha: f32, bits: u32) -> (Vec<u32>, f32) {
     crate::quant::quantize_acts_pact(&a.data, alpha, bits)
 }
 
-/// SAME-padding offsets (matches XLA's `padding="SAME"`).
-fn same_pad(in_len: usize, out_len: usize, k: usize, stride: usize) -> i64 {
+/// SAME-padding offsets (matches XLA's `padding="SAME"`).  Shared with
+/// the engine's plan compiler — the bit-exactness contract requires a
+/// single definition.
+pub(crate) fn same_pad(in_len: usize, out_len: usize, k: usize, stride: usize) -> i64 {
     let total = ((out_len - 1) * stride + k).saturating_sub(in_len) as i64;
     total / 2
 }
@@ -215,7 +223,7 @@ fn structural(spec: &LayerSpec, cur: Act, saved: &mut std::collections::HashMap<
             for ch in v.iter_mut() {
                 *ch /= n;
             }
-            cost.overhead_cycles += (cur.h * cur.w * cur.c) as f64 * 0.25;
+            account_structural(cost, cur.h * cur.w * cur.c);
             Act::from_vec(spec.cout, v)
         }
         "flatten" => Act::from_vec(cur.h * cur.w * cur.c, cur.data),
@@ -234,7 +242,7 @@ fn structural(spec: &LayerSpec, cur: Act, saved: &mut std::collections::HashMap<
                     *d = d.max(0.0);
                 }
             }
-            cost.overhead_cycles += data.len() as f64 * 0.25;
+            account_structural(cost, data.len());
             Act { h: cur.h, w: cur.w, c: cur.c, data }
         }
         other => bail!("unexpected structural kind {other}"),
@@ -301,7 +309,7 @@ pub fn run_sample(
                             *d = d.max(0.0);
                         }
                     }
-                    lc.overhead_cycles += out.data.len() as f64 * 0.25;
+                    account_structural(&mut lc, out.data.len());
                 }
                 out
             }
@@ -327,24 +335,23 @@ pub fn run_sample(
     Ok((cur.data, cost))
 }
 
-/// Run a batch of flattened samples; returns per-sample outputs and the
-/// cost of ONE inference (costs are input-independent).
+/// Run a batch of flattened samples through the compile-once engine
+/// (packed backend, threaded).
+///
+/// `xs.len()` must be a whole number of `feat`-element samples —
+/// anything else is an error, not a panic.  The returned
+/// [`InferenceCost`] is the cost of **one** inference: costs are
+/// input-independent, so it describes each sample individually, never
+/// the batch total.
+///
+/// Callers running many batches over the same model should compile a
+/// [`crate::engine::ExecPlan`] once and reuse it; this wrapper re-plans
+/// per call for drop-in compatibility with the seed API.
 pub fn run_batch(
     model: &DeployedModel,
     xs: &[f32],
     feat: usize,
     lut: &CostLut,
 ) -> Result<(Vec<Vec<f32>>, InferenceCost)> {
-    assert_eq!(xs.len() % feat, 0);
-    let n = xs.len() / feat;
-    let mut outs = Vec::with_capacity(n);
-    let mut cost = InferenceCost::default();
-    for i in 0..n {
-        let (o, c) = run_sample(model, &xs[i * feat..(i + 1) * feat], lut)?;
-        outs.push(o);
-        if i == 0 {
-            cost = c;
-        }
-    }
-    Ok((outs, cost))
+    crate::engine::run_batch(model, xs, feat, lut, &crate::engine::PackedBackend)
 }

@@ -9,11 +9,13 @@
 //! * [`isa`] — the mixed-precision SIMD dot-product semantics (lane
 //!   packing by the wider operand, int32 accumulation) plus a scalar
 //!   oracle used by property tests;
-//! * [`exec`] — an integer inference engine that runs a
+//! * [`exec`] — the scalar-oracle executor that runs a
 //!   [`crate::deploy::DeployedModel`] sample-by-sample: PACT activation
 //!   quantization, per-sub-convolution integer conv/FC (uint activations
 //!   x two's-complement weights), folded BN epilogue, residual adds,
-//!   pooling;
+//!   pooling.  `exec::run_batch` delegates to the compile-once
+//!   [`crate::engine`]; `exec::run_sample` stays the bit-exactness
+//!   ground truth for every engine backend;
 //! * [`cost`] — cycle and energy accounting per layer/sub-conv using the
 //!   [`crate::energy::CostLut`] MAC table plus load/store and
 //!   sub-convolution scheduling overheads — the refinement of Eq. (8)

@@ -11,8 +11,10 @@
 //! this module owns state threading, the 20/80 alternation, the
 //! temperature schedule, early stopping, and assignment extraction.
 
+#[cfg(feature = "xla")]
 pub mod trainer;
 
+#[cfg(feature = "xla")]
 pub use trainer::Trainer;
 
 use crate::quant::Assignment;

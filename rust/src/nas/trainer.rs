@@ -51,24 +51,11 @@ pub struct Trainer<'rt> {
     pub history: Vec<EpochLog>,
 }
 
-/// He/constant initialisation by tensor-name suffix (mirrors
-/// `models.common.init_params`; exact values need not match Python — the
-/// graphs are pure functions of the state we feed them).
-fn init_tensor(name: &str, shape: &[usize], rng: &mut Pcg32) -> Tensor {
-    let n: usize = shape.iter().product();
-    if name.ends_with(".w") {
-        let fan_in: usize = shape.iter().skip(1).product::<usize>().max(1);
-        let std = (2.0f32 / fan_in as f32).sqrt();
-        let data = (0..n).map(|_| rng.normal_ms(0.0, std)).collect();
-        Tensor::new(shape.to_vec(), data)
-    } else if name.ends_with(".bn_scale") || name.ends_with(".bn_var") {
-        Tensor::full(shape.to_vec(), 1.0)
-    } else if name.ends_with(".alpha") {
-        Tensor::full(shape.to_vec(), 6.0)
-    } else {
-        Tensor::zeros(shape.to_vec())
-    }
-}
+// He/constant initialisation by tensor-name suffix (mirrors
+// `models.common.init_params`; exact values need not match Python — the
+// graphs are pure functions of the state we feed them).  Shared with the
+// synthetic-state path so builtin-zoo runs see the same distributions.
+use crate::models::zoo::init_slot_tensor as init_tensor;
 
 impl<'rt> Trainer<'rt> {
     pub fn new(rt: &'rt Runtime, cfg: SearchConfig) -> Result<Trainer<'rt>> {

@@ -1,12 +1,10 @@
 //! Small host tensors used throughout the coordinator.
 //!
 //! These are deliberately simple row-major owned buffers: the heavy math
-//! runs either in the XLA executables (training) or in the MPIC simulator
-//! (deployment), so the coordinator mostly moves data and bookkeeps
-//! shapes.  Conversion to/from `xla::Literal` lives here so `runtime/`
-//! stays thin.
-
-use anyhow::{bail, Result};
+//! runs either in the XLA executables (training) or in the inference
+//! engine (deployment), so the coordinator mostly moves data and
+//! bookkeeps shapes.  Conversion to/from `xla::Literal` lives here so
+//! `runtime/` stays thin; it is compiled only with the `xla` feature.
 
 /// Row-major f32 tensor.
 #[derive(Clone, Debug, PartialEq)]
@@ -89,35 +87,53 @@ impl Tensor {
         let c = self.shape[1];
         &self.data[i * c..(i + 1) * c]
     }
+}
 
-    // ---- Literal conversion ------------------------------------------------
+// ---- Literal conversion (xla feature) --------------------------------------
 
-    /// To an `xla::Literal` with this tensor's shape.
-    pub fn to_literal(&self) -> Result<xla::Literal> {
-        let lit = xla::Literal::vec1(&self.data);
-        if self.shape.is_empty() {
-            // 0-d scalar: reshape to rank-0
-            Ok(lit.reshape(&[])?)
-        } else {
-            let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
-            Ok(lit.reshape(&dims)?)
+#[cfg(feature = "xla")]
+mod literal {
+    use super::{Tensor, TensorI32};
+    use anyhow::{bail, Result};
+
+    impl Tensor {
+        /// To an `xla::Literal` with this tensor's shape.
+        pub fn to_literal(&self) -> Result<xla::Literal> {
+            let lit = xla::Literal::vec1(self.data());
+            if self.shape().is_empty() {
+                // 0-d scalar: reshape to rank-0
+                Ok(lit.reshape(&[])?)
+            } else {
+                let dims: Vec<i64> =
+                    self.shape().iter().map(|&d| d as i64).collect();
+                Ok(lit.reshape(&dims)?)
+            }
+        }
+
+        /// From an `xla::Literal` (f32 or convertible).
+        pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+            let shape = lit.array_shape()?;
+            let dims: Vec<usize> =
+                shape.dims().iter().map(|&d| d as usize).collect();
+            let data: Vec<f32> = match shape.ty() {
+                xla::ElementType::F32 => lit.to_vec::<f32>()?,
+                xla::ElementType::S32 => lit
+                    .to_vec::<i32>()?
+                    .into_iter()
+                    .map(|v| v as f32)
+                    .collect(),
+                other => bail!("unsupported literal element type {other:?}"),
+            };
+            Ok(Tensor::new(dims, data))
         }
     }
 
-    /// From an `xla::Literal` (f32 or convertible).
-    pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
-        let shape = lit.array_shape()?;
-        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-        let data: Vec<f32> = match shape.ty() {
-            xla::ElementType::F32 => lit.to_vec::<f32>()?,
-            xla::ElementType::S32 => lit
-                .to_vec::<i32>()?
-                .into_iter()
-                .map(|v| v as f32)
-                .collect(),
-            other => bail!("unsupported literal element type {other:?}"),
-        };
-        Ok(Tensor::new(dims, data))
+    impl TensorI32 {
+        pub fn to_literal(&self) -> Result<xla::Literal> {
+            let lit = xla::Literal::vec1(self.data());
+            let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+            Ok(lit.reshape(&dims)?)
+        }
     }
 }
 
@@ -140,12 +156,6 @@ impl TensorI32 {
 
     pub fn data(&self) -> &[i32] {
         &self.data
-    }
-
-    pub fn to_literal(&self) -> Result<xla::Literal> {
-        let lit = xla::Literal::vec1(&self.data);
-        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
-        Ok(lit.reshape(&dims)?)
     }
 }
 

@@ -1,0 +1,12 @@
+//! Shared helpers for the artifact-dependent integration tests.
+
+use std::path::Path;
+
+/// True when `make artifacts` has run; tests skip themselves otherwise.
+pub fn has_artifacts() -> bool {
+    let ok = Path::new("artifacts/ad/manifest.json").exists();
+    if !ok {
+        eprintln!("skipping: artifacts/ not present (run `make artifacts`)");
+    }
+    ok
+}

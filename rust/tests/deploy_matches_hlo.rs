@@ -1,38 +1,31 @@
 //! The §III-C contract: deployed integer execution == HLO `infer`, for
 //! every benchmark topology (residual joins, depthwise chains, FC-only)
 //! and for adversarially mixed per-channel assignments.
+//!
+//! Needs `--features xla` and `make artifacts`; skips cleanly otherwise.
+
+#![cfg(feature = "xla")]
 
 use std::path::Path;
 
 use cwmix::data::{make_dataset, Split};
 use cwmix::deploy;
 use cwmix::nas::{Mode, SearchConfig, Target, Trainer};
-use cwmix::quant::{Assignment, LayerAssignment};
+use cwmix::quant::Assignment;
 use cwmix::runtime::Runtime;
 
 fn rt() -> Runtime {
     Runtime::cpu(Path::new("artifacts")).unwrap()
 }
 
-/// Deterministic "stripy" mixed assignment: cycles 2/4/8 across channels
-/// with a per-layer phase — exercises reordering, residual space joins
-/// and fragmented groups.
+mod common;
+use common::has_artifacts;
+
+/// Deterministic "stripy" mixed assignment (see
+/// `models::zoo::stripy_assignment`): exercises reordering, residual
+/// space joins and fragmented groups.
 fn stripy(tr: &Trainer) -> Assignment {
-    let names = tr.manifest.qnames();
-    let couts = tr.manifest.qcouts();
-    let bits = [2u32, 4, 8];
-    Assignment {
-        layers: names
-            .iter()
-            .zip(&couts)
-            .enumerate()
-            .map(|(li, (n, &c))| LayerAssignment {
-                name: n.clone(),
-                act_bits: bits[li % 3],
-                weight_bits: (0..c).map(|i| bits[(i + li) % 3]).collect(),
-            })
-            .collect(),
-    }
+    cwmix::models::zoo::stripy_assignment(&tr.manifest)
 }
 
 fn check_bench(bench: &str, warmup_epochs: usize, min_agree: f32) {
@@ -58,21 +51,33 @@ fn check_bench(bench: &str, warmup_epochs: usize, min_agree: f32) {
 
 #[test]
 fn ad_fc_only_matches() {
+    if !has_artifacts() {
+        return;
+    }
     check_bench("ad", 1, 1.0);
 }
 
 #[test]
 fn kws_depthwise_matches() {
+    if !has_artifacts() {
+        return;
+    }
     check_bench("kws", 1, 0.99);
 }
 
 #[test]
 fn ic_residual_matches() {
+    if !has_artifacts() {
+        return;
+    }
     check_bench("ic", 1, 0.99);
 }
 
 #[test]
 fn deployed_costs_match_energy_model() {
+    if !has_artifacts() {
+        return;
+    }
     // MAC-only energy of the simulator == Eq. (8) with one-hot NAS params
     let rt = rt();
     let cfg = SearchConfig::quick("kws", Mode::ChannelWise, Target::Size, 0.0);
@@ -96,6 +101,9 @@ fn deployed_costs_match_energy_model() {
 
 #[test]
 fn groups_partition_channels() {
+    if !has_artifacts() {
+        return;
+    }
     let rt = rt();
     let cfg = SearchConfig::quick("ic", Mode::ChannelWise, Target::Size, 0.0);
     let tr = Trainer::new(&rt, cfg).unwrap();
@@ -119,6 +127,9 @@ fn groups_partition_channels() {
 
 #[test]
 fn packed_bytes_match_quant_module() {
+    if !has_artifacts() {
+        return;
+    }
     let rt = rt();
     let cfg = SearchConfig::quick("ad", Mode::ChannelWise, Target::Size, 0.0);
     let tr = Trainer::new(&rt, cfg).unwrap();

@@ -1,0 +1,220 @@
+//! Backend-equivalence contract of the inference engine.
+//!
+//! Pure Rust — runs on the default feature set with no artifacts: model
+//! geometry comes from the builtin zoo, weights from the deterministic
+//! synthetic initialiser.  Asserts:
+//!
+//! * `packed` is **bit-identical** to `reference` (and both to the
+//!   scalar oracle `mpic::exec::run_sample`) across all nine
+//!   `(p_x, p_w) ∈ {2,4,8}²` fixed combos;
+//! * the same bit-exactness on all four benchmark topologies under an
+//!   adversarially striped per-channel assignment (residual joins,
+//!   depthwise chains, FC-only);
+//! * the plan's compile-time cost equals the oracle's per-sample
+//!   accounting and the Eq. (8) energy model;
+//! * `run_batch` reports malformed batches as errors (no panic) and is
+//!   thread-count invariant;
+//! * `pack_subbyte`/`unpack_subbyte` round-trip the full signed range.
+
+use cwmix::data::{make_dataset, Split};
+use cwmix::deploy::{self, DeployedModel};
+use cwmix::engine::{ExecPlan, KernelBackend, PackedBackend, ReferenceBackend};
+use cwmix::models::zoo::{builtin_manifest, stripy_assignment as stripy, synthetic_state};
+use cwmix::models::Manifest;
+use cwmix::quant::{pack_subbyte, unpack_subbyte, Assignment};
+use cwmix::util::Pcg32;
+
+fn build(manifest: &Manifest, a: &Assignment) -> DeployedModel {
+    let (params, bn) = synthetic_state(manifest, 0);
+    deploy::build(manifest, &params, &bn, a).unwrap()
+}
+
+/// Oracle outputs + cost for `n` samples.
+fn oracle_run(
+    model: &DeployedModel,
+    manifest: &Manifest,
+    xs: &[f32],
+    n: usize,
+) -> (Vec<Vec<f32>>, cwmix::mpic::InferenceCost) {
+    let feat = manifest.feat_len();
+    let mut outs = Vec::new();
+    let mut cost = None;
+    for i in 0..n {
+        let (o, c) = cwmix::mpic::run_sample(
+            model,
+            &xs[i * feat..(i + 1) * feat],
+            &manifest.lut,
+        )
+        .unwrap();
+        outs.push(o);
+        cost.get_or_insert(c);
+    }
+    (outs, cost.unwrap())
+}
+
+fn engine_run(
+    model: &DeployedModel,
+    manifest: &Manifest,
+    backend: &dyn KernelBackend,
+    xs: &[f32],
+    n: usize,
+) -> (Vec<Vec<f32>>, cwmix::mpic::InferenceCost) {
+    let feat = manifest.feat_len();
+    let plan = ExecPlan::compile(model, &manifest.lut, backend).unwrap();
+    plan.run_batch_threads(&xs[..n * feat], feat, 1).unwrap()
+}
+
+fn assert_costs_equal(
+    bench: &str,
+    got: &cwmix::mpic::InferenceCost,
+    want: &cwmix::mpic::InferenceCost,
+) {
+    assert_eq!(got.layers.len(), want.layers.len(), "{bench}: layer count");
+    for (g, w) in got.layers.iter().zip(&want.layers) {
+        assert_eq!(g.name, w.name, "{bench}");
+        assert_eq!(g.mac_cycles, w.mac_cycles, "{bench}/{}", g.name);
+        assert_eq!(g.overhead_cycles, w.overhead_cycles, "{bench}/{}", g.name);
+        assert_eq!(g.mem_bytes, w.mem_bytes, "{bench}/{}", g.name);
+        assert_eq!(g.mac_energy_pj, w.mac_energy_pj, "{bench}/{}", g.name);
+        assert_eq!(g.macs_by_group, w.macs_by_group, "{bench}/{}", g.name);
+    }
+}
+
+#[test]
+fn all_nine_precision_combos_bit_exact_ad() {
+    let manifest = builtin_manifest("ad").unwrap();
+    let ds = make_dataset("ad", Split::Test, 4, 1);
+    let n = 2;
+    for xb in [2u32, 4, 8] {
+        for wb in [2u32, 4, 8] {
+            let a = Assignment::fixed(
+                &manifest.qnames(),
+                &manifest.qcouts(),
+                wb,
+                xb,
+            );
+            let model = build(&manifest, &a);
+            let (want, oc) = oracle_run(&model, &manifest, &ds.x, n);
+            let (ref_out, rc) =
+                engine_run(&model, &manifest, &ReferenceBackend, &ds.x, n);
+            let (packed_out, pc) =
+                engine_run(&model, &manifest, &PackedBackend, &ds.x, n);
+            assert_eq!(ref_out, want, "reference vs oracle w{wb}x{xb}");
+            assert_eq!(packed_out, want, "packed vs oracle w{wb}x{xb}");
+            assert_costs_equal("ad", &rc, &oc);
+            assert_costs_equal("ad", &pc, &oc);
+        }
+    }
+}
+
+#[test]
+fn all_four_geometries_bit_exact_striped() {
+    for bench in ["ic", "kws", "vww", "ad"] {
+        let manifest = builtin_manifest(bench).unwrap();
+        let a = stripy(&manifest);
+        let model = build(&manifest, &a);
+        let ds = make_dataset(bench, Split::Test, 2, 3);
+        let n = 1;
+        let (want, oc) = oracle_run(&model, &manifest, &ds.x, n);
+        let (ref_out, rc) =
+            engine_run(&model, &manifest, &ReferenceBackend, &ds.x, n);
+        let (packed_out, pc) =
+            engine_run(&model, &manifest, &PackedBackend, &ds.x, n);
+        assert_eq!(ref_out, want, "{bench}: reference vs oracle");
+        assert_eq!(packed_out, want, "{bench}: packed vs oracle");
+        assert_costs_equal(bench, &rc, &oc);
+        assert_costs_equal(bench, &pc, &oc);
+    }
+}
+
+#[test]
+fn plan_cost_matches_energy_model() {
+    // MAC-only energy of the plan == Eq. (8) with one-hot NAS params,
+    // and total MACs == sum of layer ops — same contract the xla-gated
+    // integration test asserts against trained artifacts.
+    let manifest = builtin_manifest("kws").unwrap();
+    let a = stripy(&manifest);
+    let model = build(&manifest, &a);
+    let plan =
+        ExecPlan::compile(&model, &manifest.lut, &PackedBackend).unwrap();
+    let cost = plan.cost();
+    let want =
+        cwmix::energy::model_energy_pj(&manifest.geom(), &a, &manifest.lut);
+    let got = cost.mac_energy_pj();
+    assert!((got - want).abs() / want < 1e-6, "sim {got} vs Eq.8 {want}");
+    let ops: u64 =
+        manifest.geom().qlayers.iter().map(|l| l.ops as u64).sum();
+    assert_eq!(cost.total_macs(), ops);
+}
+
+#[test]
+fn run_batch_rejects_ragged_input() {
+    let manifest = builtin_manifest("ad").unwrap();
+    let a = Assignment::fixed(&manifest.qnames(), &manifest.qcouts(), 8, 8);
+    let model = build(&manifest, &a);
+    let plan =
+        ExecPlan::compile(&model, &manifest.lut, &PackedBackend).unwrap();
+    let feat = manifest.feat_len();
+    // not a whole number of samples: error, not panic
+    let err = plan.run_batch(&vec![0.0; feat + 1], feat).unwrap_err();
+    assert!(err.to_string().contains("whole number"), "{err}");
+    // wrong feature length
+    assert!(plan.run_batch(&vec![0.0; feat], feat - 1).is_err());
+    // the seed-compatible wrapper reports the same error instead of the
+    // old assert_eq! panic
+    let err = cwmix::mpic::run_batch(
+        &model,
+        &vec![0.0; feat + 1],
+        feat,
+        &manifest.lut,
+    )
+    .unwrap_err();
+    assert!(err.to_string().contains("whole number"), "{err}");
+}
+
+#[test]
+fn run_batch_thread_count_invariant() {
+    let manifest = builtin_manifest("ad").unwrap();
+    let a = stripy(&manifest);
+    let model = build(&manifest, &a);
+    let plan =
+        ExecPlan::compile(&model, &manifest.lut, &PackedBackend).unwrap();
+    let feat = manifest.feat_len();
+    let ds = make_dataset("ad", Split::Test, 16, 5);
+    let (seq, c1) = plan.run_batch_threads(&ds.x, feat, 1).unwrap();
+    let (par, c4) = plan.run_batch_threads(&ds.x, feat, 4).unwrap();
+    assert_eq!(seq, par);
+    assert_eq!(c1.total_cycles(), c4.total_cycles());
+    assert_eq!(seq.len(), 16);
+}
+
+#[test]
+fn pack_roundtrip_full_signed_range() {
+    // property-style: every representable value round-trips, including
+    // the most negative code (-2^(b-1), producible by packing even if
+    // the quantizer never emits it)
+    let mut rng = Pcg32::seeded(42);
+    for bits in [2u32, 4, 8] {
+        let lo = -(1i32 << (bits - 1));
+        let hi = (1i32 << (bits - 1)) - 1;
+        let mut vals: Vec<i32> = (lo..=hi).collect();
+        for _ in 0..500 {
+            vals.push(lo + rng.below((hi - lo + 1) as u32) as i32);
+        }
+        let packed = pack_subbyte(&vals, bits);
+        let back = unpack_subbyte(&packed, bits, vals.len());
+        assert_eq!(back, vals, "bits={bits}");
+    }
+}
+
+#[test]
+fn packed_weights_match_flash_footprint() {
+    // the packed backend's storage is exactly the Eq. (7) byte count
+    // the Fig. 3 memory axis reports
+    let manifest = builtin_manifest("ic").unwrap();
+    let a = stripy(&manifest);
+    let model = build(&manifest, &a);
+    let plan =
+        ExecPlan::compile(&model, &manifest.lut, &PackedBackend).unwrap();
+    assert_eq!(plan.weight_bytes(), model.packed_bytes());
+}

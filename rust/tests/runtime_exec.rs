@@ -1,5 +1,10 @@
 //! Runtime integration: compile + execute real artifacts, check training
 //! semantics end to end (loss decreases, eval consistent, state threads).
+//!
+//! Needs `--features xla` (real bindings) and `make artifacts`; skips
+//! cleanly when the artifacts are absent.
+
+#![cfg(feature = "xla")]
 
 use std::path::Path;
 
@@ -11,8 +16,14 @@ fn rt() -> Runtime {
     Runtime::cpu(Path::new("artifacts")).unwrap()
 }
 
+mod common;
+use common::has_artifacts;
+
 #[test]
 fn warmup_reduces_loss_ad() {
+    if !has_artifacts() {
+        return;
+    }
     let rt = rt();
     let mut cfg = SearchConfig::quick("ad", Mode::ChannelWise, Target::Size, 0.0);
     cfg.warmup_epochs = 3;
@@ -30,6 +41,9 @@ fn warmup_reduces_loss_ad() {
 
 #[test]
 fn eval_scores_improve_over_random_kws() {
+    if !has_artifacts() {
+        return;
+    }
     let rt = rt();
     let mut cfg = SearchConfig::quick("kws", Mode::ChannelWise, Target::Size, 0.0);
     cfg.warmup_epochs = 6;
@@ -46,6 +60,9 @@ fn eval_scores_improve_over_random_kws() {
 
 #[test]
 fn quantization_hurts_at_2bit_weights() {
+    if !has_artifacts() {
+        return;
+    }
     // after a short warmup, w2 must lose accuracy vs w8 (the premise of
     // the whole trade-off space)
     let rt = rt();
@@ -67,6 +84,9 @@ fn quantization_hurts_at_2bit_weights() {
 
 #[test]
 fn snapshot_restore_roundtrip() {
+    if !has_artifacts() {
+        return;
+    }
     let rt = rt();
     let mut cfg = SearchConfig::quick("ad", Mode::ChannelWise, Target::Size, 0.0);
     cfg.warmup_epochs = 1;
@@ -85,6 +105,9 @@ fn snapshot_restore_roundtrip() {
 
 #[test]
 fn graph_cache_reuses_compilations() {
+    if !has_artifacts() {
+        return;
+    }
     let rt = rt();
     let g1 = rt.graph("ad", "eval").unwrap();
     let g2 = rt.graph("ad", "eval").unwrap();

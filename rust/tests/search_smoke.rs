@@ -1,6 +1,10 @@
 //! End-to-end Alg. 1 smoke: a tiny channel-wise search must produce a
 //! valid, *mixed* assignment whose regularizer pressure shows up in the
 //! extracted bits; results must round-trip the store.
+//!
+//! Needs `--features xla` and `make artifacts`; skips cleanly otherwise.
+
+#![cfg(feature = "xla")]
 
 use std::path::Path;
 
@@ -11,6 +15,9 @@ use cwmix::runtime::Runtime;
 fn rt() -> Runtime {
     Runtime::cpu(Path::new("artifacts")).unwrap()
 }
+
+mod common;
+use common::has_artifacts;
 
 fn tiny(bench: &str, target: Target, lambda_rel: f32) -> SearchConfig {
     let mut cfg = SearchConfig::quick(bench, Mode::ChannelWise, target, 0.0);
@@ -23,6 +30,9 @@ fn tiny(bench: &str, target: Target, lambda_rel: f32) -> SearchConfig {
 
 #[test]
 fn size_pressure_reduces_bits_ad() {
+    if !has_artifacts() {
+        return;
+    }
     let rt = rt();
     let mut cfg = tiny("ad", Target::Size, 0.0);
     let tr0 = Trainer::new(&rt, cfg.clone()).unwrap();
@@ -47,6 +57,9 @@ fn size_pressure_reduces_bits_ad() {
 
 #[test]
 fn zero_lambda_keeps_high_bits_ad() {
+    if !has_artifacts() {
+        return;
+    }
     let rt = rt();
     let cfg = tiny("ad", Target::Size, 0.0); // lambda = 0: only accuracy
     let mut tr = Trainer::new(&rt, cfg).unwrap();
@@ -66,6 +79,9 @@ fn zero_lambda_keeps_high_bits_ad() {
 
 #[test]
 fn layerwise_mode_gives_uniform_layers() {
+    if !has_artifacts() {
+        return;
+    }
     let rt = rt();
     let mut cfg = tiny("ad", Target::Size, 0.0);
     cfg.mode = Mode::LayerWise;
@@ -84,6 +100,9 @@ fn layerwise_mode_gives_uniform_layers() {
 
 #[test]
 fn results_store_roundtrip_with_real_result() {
+    if !has_artifacts() {
+        return;
+    }
     let rt = rt();
     let cfg = tiny("ad", Target::Size, 1e-6);
     let mut tr = Trainer::new(&rt, cfg).unwrap();

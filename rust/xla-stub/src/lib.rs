@@ -1,0 +1,241 @@
+//! Offline stub of the `xla` (xla-rs) PJRT bindings.
+//!
+//! The cwmix coordinator's training path links against the PJRT
+//! bindings behind the non-default `xla` cargo feature.  Build images
+//! without the real bindings still need the *dependency* to resolve, so
+//! this crate mirrors exactly the API surface `cwmix` touches:
+//!
+//! * host-side [`Literal`] construction/decomposition is fully
+//!   functional (it is plain host memory — `Tensor::to_literal`
+//!   round-trips work under the stub);
+//! * anything that would reach a PJRT plugin ([`PjRtClient::cpu`],
+//!   compilation, execution) returns [`Error`] explaining that the stub
+//!   is in use.
+//!
+//! To run the real thing, point the `xla` dependency in
+//! `rust/Cargo.toml` at the actual xla-rs checkout — the signatures
+//! here were taken from it, so no `cwmix` code changes are needed.
+
+use std::fmt;
+
+/// Stub error: carries a message, formats like the real crate's error.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what}: PJRT is unavailable — cwmix was built against the bundled \
+         `xla` stub crate; point the `xla` dependency at the real xla-rs \
+         bindings to execute HLO artifacts"
+    )))
+}
+
+/// Element types of array literals (subset used by cwmix).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[non_exhaustive]
+pub enum ElementType {
+    Pred,
+    S8,
+    S32,
+    S64,
+    U8,
+    U32,
+    F32,
+    F64,
+}
+
+/// Internal literal storage (public only because [`NativeType`]'s
+/// methods name it; not part of the real xla-rs surface).
+#[doc(hidden)]
+#[derive(Debug, Clone)]
+pub enum Store {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// Types a [`Literal`] can be built from / decomposed into.
+pub trait NativeType: Sized + Clone {
+    fn wrap(v: Vec<Self>) -> Store;
+    fn unwrap(s: &Store) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn wrap(v: Vec<Self>) -> Store {
+        Store::F32(v)
+    }
+    fn unwrap(s: &Store) -> Option<Vec<Self>> {
+        match s {
+            Store::F32(v) => Some(v.clone()),
+            Store::I32(_) => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(v: Vec<Self>) -> Store {
+        Store::I32(v)
+    }
+    fn unwrap(s: &Store) -> Option<Vec<Self>> {
+        match s {
+            Store::I32(v) => Some(v.clone()),
+            Store::F32(_) => None,
+        }
+    }
+}
+
+/// Host-side array literal (fully functional in the stub).
+#[derive(Debug, Clone)]
+pub struct Literal {
+    store: Store,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal {
+            store: T::wrap(data.to_vec()),
+            dims: vec![data.len() as i64],
+        }
+    }
+
+    fn len(&self) -> i64 {
+        match &self.store {
+            Store::F32(v) => v.len() as i64,
+            Store::I32(v) => v.len() as i64,
+        }
+    }
+
+    /// Reshape to `dims` (must preserve element count).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n != self.len() {
+            return Err(Error(format!(
+                "reshape {:?} on literal of {} elements",
+                dims,
+                self.len()
+            )));
+        }
+        Ok(Literal { store: self.store.clone(), dims: dims.to_vec() })
+    }
+
+    /// Host copy-out.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.store)
+            .ok_or_else(|| Error("literal element type mismatch".into()))
+    }
+
+    /// Decompose a tuple literal (stub literals are never tuples).
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple")
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Ok(ArrayShape {
+            dims: self.dims.clone(),
+            ty: match &self.store {
+                Store::F32(_) => ElementType::F32,
+                Store::I32(_) => ElementType::S32,
+            },
+        })
+    }
+}
+
+/// Shape of an array literal.
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// PJRT client handle (errors at construction under the stub).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// Device buffer handle.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Parsed HLO module proto.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// XLA computation wrapper.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let l = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(l.array_shape().unwrap().dims(), &[2, 2]);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn pjrt_surface_errors() {
+        assert!(PjRtClient::cpu().is_err());
+    }
+}
