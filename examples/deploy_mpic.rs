@@ -11,6 +11,7 @@ use anyhow::Result;
 use cwmix::data::{make_dataset, Split};
 use cwmix::deploy;
 use cwmix::energy::CostLut;
+use cwmix::engine::{ExecPlan, PackedBackend};
 use cwmix::nas::{Mode, SearchConfig, Target, Trainer};
 use cwmix::quant::Assignment;
 use cwmix::runtime::Runtime;
@@ -50,11 +51,14 @@ fn main() -> Result<()> {
         ("w4x4".to_string(), Assignment::fixed(&qnames, &qcouts, 4, 4)),
         ("w2x8".to_string(), Assignment::fixed(&qnames, &qcouts, 2, 8)),
     ];
-    println!("\n{:<16} {:>9} {:>10} {:>10} {:>9} {:>9}",
-             "assignment", "us/inf", "uJ total", "uJ MAC", "KB flash", "subconvs");
+    println!(
+        "\n{:<16} {:>9} {:>10} {:>10} {:>9} {:>9}",
+        "assignment", "us/inf", "uJ total", "uJ MAC", "KB flash", "subconvs"
+    );
     for (name, a) in candidates {
         let d = deploy::build(&tr.manifest, &tr.params_map(), &tr.bn_map(), &a)?;
-        let (_, cost) = cwmix::mpic::run_batch(&d, &ds.x[0..feat], feat, &lut)?;
+        let plan = ExecPlan::compile(&d, &lut, &PackedBackend)?;
+        let (_, cost) = plan.run_batch(&ds.x[0..feat], feat)?;
         println!(
             "{:<16} {:>9.1} {:>10.2} {:>10.2} {:>9.1} {:>9}",
             name,

@@ -13,6 +13,7 @@
 use anyhow::Result;
 use cwmix::data::{make_dataset, Split};
 use cwmix::deploy;
+use cwmix::engine::{ExecPlan, PackedBackend};
 use cwmix::nas::{Mode, SearchConfig, Target, Trainer};
 use cwmix::report;
 use cwmix::runtime::Runtime;
@@ -66,11 +67,11 @@ fn main() -> Result<()> {
 
     let deployed = deploy::build(
         &tr.manifest, &tr.params_map(), &tr.bn_map(), &r.assignment)?;
+    let plan = ExecPlan::compile(&deployed, &tr.manifest.lut, &PackedBackend)?;
     let feat = tr.manifest.feat_len();
-    let (_, cost) = cwmix::mpic::run_batch(
-        &deployed, &ds.x[0..feat], feat, &tr.manifest.lut)?;
+    let (_, cost) = plan.run_batch(&ds.x[0..feat], feat)?;
     println!(
-        "MPIC simulation: {:.1} us/inference @250MHz, {:.2} uJ total, {} sub-convs, {} weight bytes",
+        "MPIC simulation: {:.1} us/inf @250MHz, {:.2} uJ total, {} sub-convs, {} weight bytes",
         cost.latency_us(),
         cost.total_energy_uj(),
         deployed.n_subconvs(),

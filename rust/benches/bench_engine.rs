@@ -1,12 +1,16 @@
 //! Engine benchmarks: seed scalar path vs the plan/execute engine with
-//! the `reference` and `packed` backends, per benchmark model.
+//! the `reference` and `packed` backends, per benchmark model — plus a
+//! per-`(p_x, p_w)` sweep of the nine SWAR kernel-table cells.
 //!
 //! Pure Rust — builtin model zoo + synthetic weights, no artifacts and
 //! no `xla` feature.  Each model runs a striped mixed-precision
 //! assignment (the deployment-relevant case: fragmented sub-conv groups
-//! across all three precisions).  Emits a machine-readable
-//! `BENCH_engine.json` at the repo root so future PRs have a perf
-//! trajectory, and asserts bit-exactness of every path while measuring.
+//! across all three precisions); the combo sweep runs uniform
+//! `w{p_w}x{p_x}` assignments so each table cell is isolated.  Emits a
+//! machine-readable `BENCH_engine.json` at the repo root so future PRs
+//! have a perf trajectory (`tools: cargo run --bin bench_compare` diffs
+//! two of these and gates CI), and asserts bit-exactness of every path
+//! while measuring.
 //!
 //! ```bash
 //! cargo bench --bench bench_engine            # quick (default)
@@ -22,6 +26,7 @@ use cwmix::minijson::Json;
 use cwmix::models::zoo::{
     builtin_manifest, stripy_assignment as stripy, synthetic_state, BENCHES,
 };
+use cwmix::quant::Assignment;
 use cwmix::util::timer::measure;
 
 fn out_path() -> String {
@@ -35,6 +40,66 @@ fn out_path() -> String {
     } else {
         "BENCH_engine.json".to_string()
     }
+}
+
+/// The conv-heavy model used for the per-combo sweep.
+const COMBO_BENCH: &str = "ic";
+
+fn combo_rows() -> anyhow::Result<Vec<(String, Json)>> {
+    let manifest = builtin_manifest(COMBO_BENCH)?;
+    let (params, bn) = synthetic_state(&manifest, 0);
+    let feat = manifest.feat_len();
+    let ds = make_dataset(COMBO_BENCH, Split::Test, 1, 2);
+    let mut rows = Vec::new();
+    println!(
+        "\n[{COMBO_BENCH}] per-(p_x, p_w) kernel cells (uniform assignments, \
+         ms/inf single-thread):"
+    );
+    println!(
+        "    {:<6} {:>12} {:>12} {:>8}",
+        "combo", "reference", "packed", "speedup"
+    );
+    for px in [2u32, 4, 8] {
+        for pw in [2u32, 4, 8] {
+            let a = Assignment::fixed(&manifest.qnames(), &manifest.qcouts(), pw, px);
+            let model = deploy::build(&manifest, &params, &bn, &a)?;
+            let ref_plan = ExecPlan::compile(&model, &manifest.lut, &ReferenceBackend)?;
+            let packed_plan = ExecPlan::compile(&model, &manifest.lut, &PackedBackend)?;
+
+            // correctness while measuring: both backends == oracle
+            let (want, _) = cwmix::mpic::run_sample(&model, &ds.x[0..feat], &manifest.lut)?;
+            let mut arena = ref_plan.arena();
+            let ref_out = ref_plan.run_sample(&mut arena, &ds.x[0..feat])?;
+            let mut arena = packed_plan.arena();
+            let packed_out = packed_plan.run_sample(&mut arena, &ds.x[0..feat])?;
+            assert_eq!(ref_out, want, "x{px}w{pw}: reference diverged");
+            assert_eq!(packed_out, want, "x{px}w{pw}: packed diverged");
+
+            let mut arena = ref_plan.arena();
+            let (ref_ms, _, _) = measure(1, 5, || {
+                let _ = ref_plan.run_sample(&mut arena, &ds.x[0..feat]).unwrap();
+            });
+            let mut arena = packed_plan.arena();
+            let (packed_ms, _, _) = measure(1, 5, || {
+                let _ = packed_plan.run_sample(&mut arena, &ds.x[0..feat]).unwrap();
+            });
+            println!(
+                "    x{px}w{pw}  {ref_ms:>12.3} {packed_ms:>12.3} {:>7.2}x",
+                ref_ms / packed_ms
+            );
+            rows.push((
+                format!("x{px}w{pw}"),
+                Json::obj(vec![
+                    ("act_bits", Json::num(px as f64)),
+                    ("weight_bits", Json::num(pw as f64)),
+                    ("reference_ms_per_inf", Json::num(ref_ms)),
+                    ("packed_ms_per_inf", Json::num(packed_ms)),
+                    ("speedup_packed_vs_reference", Json::num(ref_ms / packed_ms)),
+                ]),
+            ));
+        }
+    }
+    Ok(rows)
 }
 
 fn main() -> anyhow::Result<()> {
@@ -55,8 +120,7 @@ fn main() -> anyhow::Result<()> {
         let packed_plan = ExecPlan::compile(&model, &manifest.lut, &PackedBackend)?;
 
         // correctness first: all three paths bit-identical on a sample
-        let (seed_out, cost) =
-            cwmix::mpic::run_sample(&model, &ds.x[0..feat], &manifest.lut)?;
+        let (seed_out, cost) = cwmix::mpic::run_sample(&model, &ds.x[0..feat], &manifest.lut)?;
         let mut arena = ref_plan.arena();
         let ref_out = ref_plan.run_sample(&mut arena, &ds.x[0..feat])?;
         let mut arena = packed_plan.arena();
@@ -79,8 +143,7 @@ fn main() -> anyhow::Result<()> {
         });
         let mut arena = packed_plan.arena();
         let (packed_ms, _, _) = measure(1, 5, || {
-            let _ =
-                packed_plan.run_sample(&mut arena, &ds.x[0..feat]).unwrap();
+            let _ = packed_plan.run_sample(&mut arena, &ds.x[0..feat]).unwrap();
         });
 
         // 4. engine packed, threaded batch (per-inference wall clock)
@@ -137,12 +200,17 @@ fn main() -> anyhow::Result<()> {
         ));
     }
 
+    let combos = combo_rows()?;
+    let combo_obj = Json::Obj(combos.into_iter().collect());
+
     let report = Json::obj(vec![
-        ("version", Json::num(1.0)),
+        ("version", Json::num(2.0)),
         ("threads", Json::num(threads as f64)),
         ("batch", Json::num(batch as f64)),
         ("assignment", Json::str("stripy-2/4/8")),
         ("benches", Json::obj(bench_objs)),
+        ("combo_bench", Json::str(COMBO_BENCH)),
+        ("combos", combo_obj),
     ]);
     let path = out_path();
     std::fs::write(&path, report.pretty())?;

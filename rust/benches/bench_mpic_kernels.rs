@@ -13,6 +13,7 @@ mod common;
 use cwmix::data::{make_dataset, Split};
 use cwmix::deploy;
 use cwmix::energy::CostLut;
+use cwmix::engine::{ExecPlan, PackedBackend};
 use cwmix::nas::{Mode, SearchConfig, Target, Trainer};
 use cwmix::quant::{pack_subbyte, unpack_subbyte, Assignment, LayerAssignment};
 use cwmix::runtime::Runtime;
@@ -36,7 +37,7 @@ fn main() -> anyhow::Result<()> {
     for &(px, pw) in &[(8u32, 8u32), (8, 4), (8, 2), (4, 4), (4, 2), (2, 2)] {
         let a = Assignment::fixed(&names, &couts, pw, px);
         let d = deploy::build(&tr.manifest, &tr.params_map(), &tr.bn_map(), &a)?;
-        let (_, cost) = cwmix::mpic::run_batch(&d, &ds.x[0..feat], feat, &lut)?;
+        let cost = ExecPlan::compile(&d, &lut, &PackedBackend)?.cost().clone();
         println!(
             "    w{pw}x{px}    {:>12.0} {:>10.1} {:>9.3}",
             cost.total_cycles(),
@@ -50,7 +51,7 @@ fn main() -> anyhow::Result<()> {
     let mut rng = Pcg32::seeded(7);
     let base_a = Assignment::fixed(&names, &couts, 8, 8);
     let d0 = deploy::build(&tr.manifest, &tr.params_map(), &tr.bn_map(), &base_a)?;
-    let (_, c0) = cwmix::mpic::run_batch(&d0, &ds.x[0..feat], feat, &lut)?;
+    let c0 = ExecPlan::compile(&d0, &lut, &PackedBackend)?.cost().clone();
     for frag in [2usize, 3, 8, 16] {
         // random interleaving with `frag` alternations per layer
         let a = Assignment {
@@ -70,7 +71,7 @@ fn main() -> anyhow::Result<()> {
                 .collect(),
         };
         let d = deploy::build(&tr.manifest, &tr.params_map(), &tr.bn_map(), &a)?;
-        let (_, c) = cwmix::mpic::run_batch(&d, &ds.x[0..feat], feat, &lut)?;
+        let c = ExecPlan::compile(&d, &lut, &PackedBackend)?.cost().clone();
         let overhead: f64 = c.layers.iter().map(|l| l.overhead_cycles).sum();
         println!(
             "    {:>3} groups total: overhead {:>7.0} cyc = {:.2}% of inference ({:.0} cyc)",
@@ -85,8 +86,9 @@ fn main() -> anyhow::Result<()> {
     println!("\n[3] host simulator throughput:");
     let a = Assignment::fixed(&names, &couts, 8, 8);
     let d = deploy::build(&tr.manifest, &tr.params_map(), &tr.bn_map(), &a)?;
+    let plan = ExecPlan::compile(&d, &lut, &PackedBackend)?;
     let (mean_ms, min_ms, max_ms) = measure(2, 10, || {
-        let _ = cwmix::mpic::run_batch(&d, &ds.x[0..feat], feat, &lut).unwrap();
+        let _ = plan.run_batch(&ds.x[0..feat], feat).unwrap();
     });
     let macs = 2.6e6; // DS-CNN ~2.6 MMAC
     println!(

@@ -24,9 +24,7 @@ pub fn full() -> bool {
 }
 
 pub fn out_dir() -> PathBuf {
-    PathBuf::from(
-        std::env::var("CWMIX_BENCH_OUT").unwrap_or_else(|_| "results/bench".into()),
-    )
+    PathBuf::from(std::env::var("CWMIX_BENCH_OUT").unwrap_or_else(|_| "results/bench".into()))
 }
 
 /// Bench-budget λ strengths.  The default single-λ point keeps a full

@@ -1,0 +1,219 @@
+//! Perf-trajectory regression gate over two `BENCH_engine.json` files.
+//!
+//! ```bash
+//! cargo run --release --bin bench_compare -- \
+//!     BENCH_engine.json BENCH_engine.fresh.json [tolerance]
+//! ```
+//!
+//! Compares the committed trajectory (`baseline`) against a fresh
+//! `cargo bench --bench bench_engine` run and **fails (exit 1) when any
+//! model x backend cell regressed by more than `tolerance`** (default
+//! 0.20 = 20%, the ROADMAP gate).
+//!
+//! Raw milliseconds are machine-dependent, so cells are normalised
+//! before comparison: each engine backend's single-thread ms/inf is
+//! divided by the *same run's* seed-scalar ms/inf (the within-run
+//! speedup is what the trajectory tracks), and each `(p_x, p_w)` combo
+//! cell compares the packed/reference ratio.  The multithreaded cell is
+//! reported but not gated — its ratio to the single-thread seed scales
+//! with the runner's core count.  A cell regresses when its normalised
+//! value grows by more than `tolerance` relative to the baseline.
+//!
+//! A missing baseline or a JSON `version` mismatch skips the gate with
+//! a note (exit 0) — the first committed trajectory establishes the
+//! baseline and a format bump resets it.  A missing or unreadable
+//! *fresh* file is an error (the bench step failed to produce it), and
+//! so is a baseline cell that vanished from the fresh run: losing
+//! trajectory coverage must not pass silently.
+
+use std::path::Path;
+use std::process::ExitCode;
+
+use anyhow::{bail, Result};
+use cwmix::minijson::{parse_file, Json};
+
+/// A normalised trajectory cell: `(label, value)` where smaller is
+/// better and the value is machine-independent.
+fn cells(doc: &Json) -> Result<Vec<(String, f64)>> {
+    let mut out = Vec::new();
+    for (bench, obj) in doc.get("benches")?.as_obj()? {
+        let seed = obj.get("seed_scalar_ms_per_inf")?.as_f64()?;
+        if seed <= 0.0 {
+            bail!("{bench}: non-positive seed baseline");
+        }
+        // single-thread cells only: the multithreaded cell's ratio to
+        // the (single-thread) seed scales with the runner's core count,
+        // which baseline and fresh machines need not share — it stays
+        // in the JSON for humans but is not gated
+        for key in ["engine_reference_ms_per_inf", "engine_packed_ms_per_inf"] {
+            let ms = obj.get(key)?.as_f64()?;
+            out.push((format!("{bench}/{key}"), ms / seed));
+        }
+    }
+    // per-(p_x, p_w) cells: packed relative to reference, same run
+    if let Some(combos) = doc.opt("combos") {
+        for (combo, obj) in combos.as_obj()? {
+            let reference = obj.get("reference_ms_per_inf")?.as_f64()?;
+            let packed = obj.get("packed_ms_per_inf")?.as_f64()?;
+            if reference <= 0.0 {
+                bail!("{combo}: non-positive reference baseline");
+            }
+            out.push((format!("combo/{combo}"), packed / reference));
+        }
+    }
+    Ok(out)
+}
+
+fn compare(baseline: &Json, fresh: &Json, tolerance: f64) -> Result<Vec<String>> {
+    let base: std::collections::BTreeMap<String, f64> = cells(baseline)?.into_iter().collect();
+    let mut regressions = Vec::new();
+    let mut seen = std::collections::BTreeSet::new();
+    for (label, new_v) in cells(fresh)? {
+        seen.insert(label.clone());
+        let Some(&old_v) = base.get(&label) else {
+            println!("  new cell {label} = {new_v:.4} (no baseline, skipped)");
+            continue;
+        };
+        let ratio = new_v / old_v;
+        let flag = if ratio > 1.0 + tolerance { "  << REGRESSION" } else { "" };
+        println!("  {label}: {old_v:.4} -> {new_v:.4} ({ratio:.3}x){flag}");
+        if ratio > 1.0 + tolerance {
+            regressions.push(format!(
+                "{label}: {old_v:.4} -> {new_v:.4} ({:.1}% worse)",
+                (ratio - 1.0) * 100.0
+            ));
+        }
+    }
+    // coverage must not shrink silently: a baseline cell that vanished
+    // from the fresh run is a failure, not a free pass
+    for label in base.keys() {
+        if !seen.contains(label) {
+            regressions.push(format!("{label}: present in baseline, missing from fresh run"));
+        }
+    }
+    Ok(regressions)
+}
+
+fn run() -> Result<ExitCode> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.len() < 2 || args.len() > 3 {
+        bail!("usage: bench_compare <baseline.json> <fresh.json> [tolerance]");
+    }
+    let tolerance: f64 = match args.get(2) {
+        Some(t) => t.parse()?,
+        None => 0.20,
+    };
+    let (base_path, fresh_path) = (Path::new(&args[0]), Path::new(&args[1]));
+    if !base_path.exists() {
+        println!(
+            "no committed baseline at {} — skipping the regression gate \
+             (commit a fresh BENCH_engine.json to establish the trajectory)",
+            base_path.display()
+        );
+        return Ok(ExitCode::SUCCESS);
+    }
+    let baseline = parse_file(base_path)?;
+    let fresh = parse_file(fresh_path)?;
+    let (bv, fv) = (baseline.get("version")?.as_f64()?, fresh.get("version")?.as_f64()?);
+    if bv != fv {
+        println!(
+            "trajectory format changed (baseline v{bv}, fresh v{fv}) — \
+             skipping the gate; commit the fresh file to reset the baseline"
+        );
+        return Ok(ExitCode::SUCCESS);
+    }
+    println!(
+        "bench_compare: normalised cells, tolerance {:.0}%",
+        tolerance * 100.0
+    );
+    let regressions = compare(&baseline, &fresh, tolerance)?;
+    if regressions.is_empty() {
+        println!("no cell regressed by more than {:.0}%", tolerance * 100.0);
+        return Ok(ExitCode::SUCCESS);
+    }
+    eprintln!("\n{} cell(s) regressed:", regressions.len());
+    for r in &regressions {
+        eprintln!("  {r}");
+    }
+    Ok(ExitCode::FAILURE)
+}
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(code) => code,
+        Err(e) => {
+            eprintln!("bench_compare: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use cwmix::minijson::parse;
+
+    fn doc(seed: f64, reference: f64, packed: f64) -> Json {
+        parse(&format!(
+            r#"{{"version": 2, "benches": {{"ic": {{
+                "seed_scalar_ms_per_inf": {seed},
+                "engine_reference_ms_per_inf": {reference},
+                "engine_packed_ms_per_inf": {packed},
+                "engine_packed_mt_ms_per_inf": {packed}
+            }}}},
+            "combos": {{"x2w2": {{
+                "reference_ms_per_inf": {reference},
+                "packed_ms_per_inf": {packed}
+            }}}}}}"#
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn same_run_is_clean() {
+        let a = doc(10.0, 5.0, 2.0);
+        assert!(compare(&a, &a, 0.2).unwrap().is_empty());
+    }
+
+    #[test]
+    fn machine_speed_cancels_out() {
+        // a uniformly 3x slower machine does not trip the gate
+        let base = doc(10.0, 5.0, 2.0);
+        let fresh = doc(30.0, 15.0, 6.0);
+        assert!(compare(&base, &fresh, 0.2).unwrap().is_empty());
+    }
+
+    #[test]
+    fn relative_regression_trips() {
+        // packed got 50% slower relative to the same run's seed
+        let base = doc(10.0, 5.0, 2.0);
+        let fresh = doc(10.0, 5.0, 3.0);
+        let regs = compare(&base, &fresh, 0.2).unwrap();
+        assert!(!regs.is_empty());
+        assert!(regs.iter().any(|r| r.contains("engine_packed_ms_per_inf")));
+        // ... but a 50% tolerance lets it through
+        assert!(compare(&base, &fresh, 0.55).unwrap().is_empty());
+    }
+
+    #[test]
+    fn vanished_cell_trips() {
+        // a baseline cell missing from the fresh run must fail, not pass
+        let base = doc(10.0, 5.0, 2.0);
+        let mut fresh = doc(10.0, 5.0, 2.0);
+        if let Json::Obj(o) = &mut fresh {
+            o.remove("combos");
+        }
+        let regs = compare(&base, &fresh, 0.2).unwrap();
+        assert!(regs.iter().any(|r| r.contains("missing from fresh run")));
+    }
+
+    #[test]
+    fn cell_normalisation_shape() {
+        let c = cells(&doc(10.0, 5.0, 2.0)).unwrap();
+        // 2 single-thread backend cells + 1 combo cell; the mt cell is
+        // present in the JSON but not gated
+        assert_eq!(c.len(), 3);
+        assert!(c.iter().any(|(l, v)| l == "combo/x2w2" && (*v - 0.4).abs() < 1e-9));
+        assert!(!c.iter().any(|(l, _)| l.contains("mt")));
+    }
+}

@@ -202,7 +202,7 @@ fn cmd_sweep(flags: &HashMap<String, String>) -> Result<()> {
             .collect::<Result<Vec<_>>>()?,
         None => DEFAULT_STRENGTHS.to_vec(),
     };
-    let out_dir = PathBuf::from(flags.get("out").cloned().unwrap_or("results".into()));
+    let out_dir = PathBuf::from(flags.get("out").cloned().unwrap_or_else(|| "results".into()));
     let rt = Runtime::cpu(&artifacts_dir(flags))?;
     println!("platform: {}", rt.platform());
     let mut log = |s: &str| println!("{s}");
@@ -302,11 +302,11 @@ fn cmd_deploy(flags: &HashMap<String, String>) -> Result<()> {
         rep.argmax_agreement * 100.0
     );
 
-    let deployed =
-        deploy::build(&tr.manifest, &tr.params_map(), &tr.bn_map(), &r.assignment)?;
+    let deployed = deploy::build(&tr.manifest, &tr.params_map(), &tr.bn_map(), &r.assignment)?;
+    // hold the compiled plan directly — no per-call re-planning
+    let plan = engine::ExecPlan::compile(&deployed, &tr.manifest.lut, &engine::PackedBackend)?;
     let feat = tr.manifest.feat_len();
-    let (_, cost) = crate::mpic::run_batch(
-        &deployed, &ds.x[0..feat], feat, &tr.manifest.lut)?;
+    let (_, cost) = plan.run_batch(&ds.x[0..feat], feat)?;
     println!(
         "MPIC: {} sub-convs, {} packed weight bytes",
         deployed.n_subconvs(),
@@ -368,7 +368,7 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
 }
 
 fn cmd_report(flags: &HashMap<String, String>) -> Result<()> {
-    let dir = PathBuf::from(flags.get("dir").cloned().unwrap_or("results".into()));
+    let dir = PathBuf::from(flags.get("dir").cloned().unwrap_or_else(|| "results".into()));
     let mut found = 0;
     let entries = std::fs::read_dir(&dir)
         .map_err(|e| anyhow!("reading {}: {e}", dir.display()))?;

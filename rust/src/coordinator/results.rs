@@ -129,8 +129,11 @@ pub fn save_sweep(
     Ok(path)
 }
 
+/// One sweep file's payload: `(bench, target, ours, edmips, fixed)`.
+pub type SweepData = (String, String, Vec<StoredResult>, Vec<StoredResult>, Vec<StoredResult>);
+
 /// Load a sweep file back.
-pub fn load_sweep(path: &Path) -> Result<(String, String, Vec<StoredResult>, Vec<StoredResult>, Vec<StoredResult>)> {
+pub fn load_sweep(path: &Path) -> Result<SweepData> {
     let j = parse_file(path)?;
     let series = |key: &str| -> Result<Vec<StoredResult>> {
         j.get(key)?.as_arr()?.iter().map(stored_from_json).collect()

@@ -97,8 +97,7 @@ mod driver {
         }
         let artifacts = rt.artifacts_dir();
         let threads = threads.min(n);
-        let mut buckets: Vec<Vec<(usize, J)>> =
-            (0..threads).map(|_| Vec::new()).collect();
+        let mut buckets: Vec<Vec<(usize, J)>> = (0..threads).map(|_| Vec::new()).collect();
         for (i, j) in jobs.into_iter().enumerate() {
             buckets[i % threads].push((i, j));
         }
@@ -175,8 +174,7 @@ mod driver {
         let tname = target.name();
 
         // λ points: (ours, edmips) per strength, workers own runtimes
-        let lam_jobs: Vec<(f32, f32)> =
-            strengths.iter().map(|&s| (s, s / reg0)).collect();
+        let lam_jobs: Vec<(f32, f32)> = strengths.iter().map(|&s| (s, s / reg0)).collect();
         let threads = sweep_threads(lam_jobs.len());
         log(&format!(
             "[{bench}/{tname}] {} lambda points across {threads} worker(s)",
@@ -188,10 +186,8 @@ mod driver {
                 &log_mx,
                 format!("[{bench}/{tname}] lambda = {s} / reg0 = {lambda:.3e}"),
             );
-            let ours =
-                baselines::run_ours(rt, &mk(Mode::ChannelWise, lambda), warm)?;
-            let ed =
-                baselines::run_edmips(rt, &mk(Mode::LayerWise, lambda), warm)?;
+            let ours = baselines::run_ours(rt, &mk(Mode::ChannelWise, lambda), warm)?;
+            let ed = baselines::run_edmips(rt, &mk(Mode::LayerWise, lambda), warm)?;
             emit(
                 &log_mx,
                 format!(

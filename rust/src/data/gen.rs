@@ -107,8 +107,7 @@ fn gen_ic(split: Split, n: usize, seed: u64) -> Dataset {
     // dynamic range; classes differ only by small smooth deltas.  Coarse
     // quantization preserves the common mode but erases the deltas, so
     // accuracy genuinely degrades with precision (the Fig. 3 axis).
-    let base: Vec<Vec<f32>> =
-        (0..c).map(|_| smooth_field(h, w, 4, 2.0, &mut trng)).collect();
+    let base: Vec<Vec<f32>> = (0..c).map(|_| smooth_field(h, w, 4, 2.0, &mut trng)).collect();
     let mut templates = Vec::with_capacity(ncls);
     for _ in 0..ncls {
         let mut hwc = vec![0.0f32; h * w * c];
@@ -338,8 +337,7 @@ mod tests {
     fn labels_in_range() {
         let ds = make_dataset("ic", Split::Train, 128, 2);
         assert!(ds.y.iter().all(|&y| (0..10).contains(&y)));
-        let all_classes: std::collections::HashSet<i32> =
-            ds.y.iter().cloned().collect();
+        let all_classes: std::collections::HashSet<i32> = ds.y.iter().cloned().collect();
         assert!(all_classes.len() >= 8, "class coverage too thin");
     }
 

@@ -276,8 +276,11 @@ pub fn build(
     let spaces = analyze_spaces(layers)?;
     let qlayers = manifest.qlayers();
     if qlayers.len() != assign.layers.len() {
-        bail!("assignment has {} layers, model has {}",
-              assign.layers.len(), qlayers.len());
+        bail!(
+            "assignment has {} layers, model has {}",
+            assign.layers.len(),
+            qlayers.len()
+        );
     }
     let by_name: HashMap<&str, usize> = qlayers
         .iter()
@@ -383,8 +386,7 @@ pub fn build(
         // permutation already aligns it with the (shared) space perm.
 
         // --- per-channel bits in permuted order + integer quantization
-        let bits_perm: Vec<u32> =
-            out_perm.iter().map(|&c| la.weight_bits[c]).collect();
+        let bits_perm: Vec<u32> = out_perm.iter().map(|&c| la.weight_bits[c]).collect();
         let (qw, w_scale) = quantize_weights_perchannel(&wperm, cout, &bits_perm);
 
         // --- epilogue fold (BN with running stats, optional bias)

@@ -8,7 +8,7 @@
 use anyhow::Result;
 
 use crate::data::{BatchIter, Dataset};
-use crate::mpic;
+use crate::engine::{ExecPlan, PackedBackend};
 use crate::nas::Trainer;
 use crate::quant::Assignment;
 
@@ -32,6 +32,8 @@ pub fn verify_against_hlo(
     n_batches: usize,
 ) -> Result<VerifyReport> {
     let deployed = super::build(&tr.manifest, &tr.params_map(), &tr.bn_map(), a)?;
+    // compile once, run every batch through the same plan
+    let plan = ExecPlan::compile(&deployed, &tr.manifest.lut, &PackedBackend)?;
     let feat = tr.manifest.feat_len();
     let batch = tr.manifest.batch;
     let mut max_d = 0.0f32;
@@ -41,7 +43,7 @@ pub fn verify_against_hlo(
     let mut n = 0usize;
     for b in BatchIter::sequential(ds, batch).take(n_batches) {
         let hlo = tr.infer(a, &b.x, batch)?;
-        let (sim, _cost) = mpic::run_batch(&deployed, &b.x, feat, &tr.manifest.lut)?;
+        let (sim, _cost) = plan.run_batch(&b.x, feat)?;
         for i in 0..batch {
             assert_eq!(hlo[i].len(), sim[i].len(), "output width mismatch");
             for (h, s) in hlo[i].iter().zip(&sim[i]) {

@@ -3,25 +3,34 @@
 //! An [`Arena`] owns every buffer one worker thread needs to run any
 //! number of samples through an `ExecPlan`: the activation slots (two
 //! ping-pong scratch slots + one exactly-sized slot per saved residual
-//! tag) and the quantization/gather scratch.  Nothing is allocated per
-//! sample or per layer — the seed executor's per-layer `Vec` allocations
-//! and `HashMap<String, Act>` clones are what this replaces.
+//! tag) and the packed quantization/gather scratch.  Nothing is
+//! allocated per sample or per layer — the seed executor's per-layer
+//! `Vec` allocations and `HashMap<String, Act>` clones are what this
+//! replaces.
+//!
+//! The quantization scratch is **sub-byte packed** (`u8`, not `u32`):
+//! `xplane` holds the executing layer's activation codes at its `p_x`
+//! width (one byte-aligned run per input pixel) and `col` holds the
+//! densely packed im2col column the dot kernels consume — `8 / p_x`
+//! times smaller than the unpacked lanes they replaced.
 
 /// Scratch buffers for one execution worker.
 pub struct Arena {
     /// activation slots, indexed by the plan's slot ids
     pub(super) slots: Vec<Vec<f32>>,
-    /// PACT activation codes of the layer currently executing
-    pub(super) q: Vec<u32>,
-    /// gathered im2col column / FC input codes as `i32`
-    pub(super) col: Vec<i32>,
+    /// packed PACT activation plane of the layer currently executing
+    /// (`p_x`-bit codes, one byte-aligned run per pixel)
+    pub(super) xplane: Vec<u8>,
+    /// densely packed im2col column / FC input codes (`p_x`-bit), with
+    /// slack bytes for the unaligned-assembly spill
+    pub(super) col: Vec<u8>,
 }
 
 impl Arena {
-    pub(super) fn new(slot_len: &[usize], q_len: usize, col_len: usize) -> Arena {
+    pub(super) fn new(slot_len: &[usize], plane_len: usize, col_len: usize) -> Arena {
         Arena {
             slots: slot_len.iter().map(|&l| vec![0.0; l]).collect(),
-            q: vec![0; q_len],
+            xplane: vec![0; plane_len],
             col: vec![0; col_len],
         }
     }
@@ -29,6 +38,6 @@ impl Arena {
     /// Total bytes held (diagnostics).
     pub fn bytes(&self) -> usize {
         let f: usize = self.slots.iter().map(|s| s.len() * 4).sum();
-        f + self.q.len() * 4 + self.col.len() * 4
+        f + self.xplane.len() + self.col.len()
     }
 }

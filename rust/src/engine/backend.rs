@@ -1,20 +1,27 @@
-//! Pluggable integer dot-product kernels.
+//! Pluggable integer dot-product kernels over packed sub-byte operands.
 //!
 //! A [`KernelBackend`] turns a deployed layer's quantized weights into a
 //! [`LayerKernel`] — the object the executor calls once per (output
-//! pixel, output channel) with the gathered activation column.  Two
-//! implementations ship:
+//! pixel, output channel) with the **packed** activation column: `K`
+//! unsigned codes of the layer's `p_x` width, packed densely LSB-first
+//! into bytes by the executor's quantize/gather stage (see
+//! `engine::plan`).  Two implementations ship:
 //!
-//! * [`ReferenceBackend`] — the seed scalar loops over `i32` weight rows,
-//!   kept bit-for-bit identical to `mpic::exec::run_sample` and used as
-//!   the exactness oracle for every other backend;
+//! * [`ReferenceBackend`] — scalar `i32` weight rows dotted against
+//!   codes decoded one at a time, kept bit-for-bit identical to
+//!   `mpic::exec::run_sample` and used as the in-engine exactness oracle
+//!   for every other backend;
 //! * [`PackedBackend`] — weights stored in the sub-byte flash layout of
 //!   Eq. (7) (`quant::pack_subbyte`, one byte-aligned row per output
-//!   channel) and multiplied by unrolled decode kernels selected per
-//!   `(p_x, p_w)` — the software model of MPIC's per-precision SIMD
-//!   modes.  Integer decode is exact, so results are bit-identical to
-//!   the reference backend while touching `8/p_w` times less weight
-//!   memory.
+//!   channel) and multiplied by **nine distinct SWAR kernels**, one per
+//!   `(p_x, p_w)` combination.  Each kernel iteration fetches one 32-bit
+//!   word of the *wider* operand and the matching 8/16 bits of the
+//!   narrower one, then decodes `32 / max(p_x, p_w)` lane pairs from the
+//!   fetched words — the software model of MPIC's mixed-precision
+//!   `sdotp` modes (`mpic::regfile` is the per-lane reference).  Integer
+//!   decode is exact, so results are bit-identical to the reference
+//!   backend while touching `8/p_w` times less weight memory *and*
+//!   `8/p_x` times less activation memory per dot.
 //!
 //! Accumulation contract: [`LayerKernel::dot`] accumulates in `i32`
 //! (convolutions: `K * 255 * 127` fits comfortably), while
@@ -34,93 +41,27 @@ pub trait KernelBackend: Send + Sync {
     fn prepare(&self, dl: &DeployedLayer) -> Box<dyn LayerKernel>;
 }
 
-/// Per-layer kernel: weight rows dotted against gathered activations.
+/// Per-layer kernel: weight rows dotted against a packed activation
+/// column.
+///
+/// `xcol` holds the layer's `K` activation codes (`p_x`-bit unsigned,
+/// packed densely LSB-first; slack bits zero).  The slice may be longer
+/// than `ceil(K * p_x / 8)` bytes — kernels only read the packed codes.
 pub trait LayerKernel: Send + Sync {
-    /// `i32` dot of output channel `c`'s weight row against `col`
-    /// (`col.len()` == K of the layer; conv/dwconv path).
-    fn dot(&self, c: usize, col: &[i32]) -> i32;
+    /// `i32` dot of output channel `c`'s weight row against `xcol`
+    /// (conv/dwconv path).
+    fn dot(&self, c: usize, xcol: &[u8]) -> i32;
 
     /// `i64`-accumulating dot (FC path, unbounded K).
-    fn dot_wide(&self, c: usize, col: &[i32]) -> i64;
+    fn dot_wide(&self, c: usize, xcol: &[u8]) -> i64;
 
     /// Bytes of weight storage held by this kernel (diagnostics).
     fn weight_bytes(&self) -> usize;
 }
 
 // ---------------------------------------------------------------------------
-// Reference backend: the seed scalar loops.
+// Shared sub-byte decode helpers.
 // ---------------------------------------------------------------------------
-
-/// Scalar `i32` weight rows — the bit-exactness oracle.
-pub struct ReferenceBackend;
-
-struct ReferenceKernel {
-    k: usize,
-    qw: Vec<i32>,
-}
-
-impl KernelBackend for ReferenceBackend {
-    fn name(&self) -> &'static str {
-        "reference"
-    }
-
-    fn prepare(&self, dl: &DeployedLayer) -> Box<dyn LayerKernel> {
-        Box::new(ReferenceKernel { k: dl.k(), qw: dl.qweights.clone() })
-    }
-}
-
-impl LayerKernel for ReferenceKernel {
-    #[inline]
-    fn dot(&self, c: usize, col: &[i32]) -> i32 {
-        let row = &self.qw[c * self.k..(c + 1) * self.k];
-        let mut acc = 0i32;
-        for (x, w) in col.iter().zip(row) {
-            acc += x * w;
-        }
-        acc
-    }
-
-    #[inline]
-    fn dot_wide(&self, c: usize, col: &[i32]) -> i64 {
-        let row = &self.qw[c * self.k..(c + 1) * self.k];
-        let mut acc = 0i64;
-        for (x, w) in col.iter().zip(row) {
-            acc += *x as i64 * *w as i64;
-        }
-        acc
-    }
-
-    fn weight_bytes(&self) -> usize {
-        self.qw.len() * std::mem::size_of::<i32>()
-    }
-}
-
-// ---------------------------------------------------------------------------
-// Packed backend: sub-byte rows + unrolled decode kernels.
-// ---------------------------------------------------------------------------
-
-/// Sub-byte bit-packed weight rows (the Eq. (7) flash layout).
-pub struct PackedBackend;
-
-type RowDot = fn(&[u8], &[i32]) -> i32;
-type RowDotWide = fn(&[u8], &[i32]) -> i64;
-
-/// Kernel table indexed `[precision_index(p_x)][precision_index(p_w)]`,
-/// mirroring MPIC's per-(p_x, p_w) SIMD mode CSR.  Activation codes
-/// reach the kernels as pre-gathered `i32` lanes, so today the three
-/// activation rows share the weight-decode bodies; the table is the seam
-/// where activation-packed SWAR kernels plug in (ROADMAP "Open items").
-const DOT_KERNELS: [[RowDot; 3]; 3] = [
-    [dot_w2, dot_w4, dot_w8],
-    [dot_w2, dot_w4, dot_w8],
-    [dot_w2, dot_w4, dot_w8],
-];
-
-const DOT_KERNELS_WIDE: [[RowDotWide; 3]; 3] = [
-    [dot_w2_wide, dot_w4_wide, dot_w8_wide],
-    [dot_w2_wide, dot_w4_wide, dot_w8_wide],
-    [dot_w2_wide, dot_w4_wide, dot_w8_wide],
-];
 
 #[inline(always)]
 fn sext(v: i32, bits: u32) -> i32 {
@@ -132,107 +73,194 @@ fn sext(v: i32, bits: u32) -> i32 {
     }
 }
 
-/// 2-bit rows: 4 MACs per weight byte, unrolled.
-fn dot_w2(row: &[u8], col: &[i32]) -> i32 {
-    let mut acc = 0i32;
-    let mut chunks = col.chunks_exact(4);
-    for (chunk, &b) in (&mut chunks).zip(row) {
-        let b = b as i32;
-        acc += chunk[0] * sext(b & 3, 2);
-        acc += chunk[1] * sext((b >> 2) & 3, 2);
-        acc += chunk[2] * sext((b >> 4) & 3, 2);
-        acc += chunk[3] * sext((b >> 6) & 3, 2);
+/// Little-endian load of `nbytes` (1/2/4) bytes into a `u32`.  With a
+/// constant `nbytes` this compiles to a single unaligned load.
+#[inline(always)]
+fn load_le(buf: &[u8], off: usize, nbytes: usize) -> u32 {
+    let mut w = 0u32;
+    for (i, &b) in buf[off..off + nbytes].iter().enumerate() {
+        w |= (b as u32) << (8 * i);
     }
-    let rem = chunks.remainder();
-    if !rem.is_empty() {
-        let b = row[col.len() / 4] as i32;
-        for (j, x) in rem.iter().enumerate() {
-            acc += x * sext((b >> (2 * j)) & 3, 2);
+    w
+}
+
+/// Decode unsigned code `idx` from a dense `bits`-wide packed buffer.
+/// `bits` divides 8, so a code never straddles a byte boundary.
+#[inline(always)]
+pub(super) fn extract_code(buf: &[u8], idx: usize, bits: u32) -> u32 {
+    let per = (8 / bits) as usize;
+    let b = buf[idx / per] as u32;
+    (b >> ((idx % per) as u32 * bits)) & ((1u32 << bits) - 1)
+}
+
+/// Decode signed weight code `idx` (sign-extending) from a packed row.
+#[inline(always)]
+fn extract_weight(buf: &[u8], idx: usize, bits: u32) -> i32 {
+    sext(extract_code(buf, idx, bits) as i32, bits)
+}
+
+// ---------------------------------------------------------------------------
+// Reference backend: scalar i32 weight rows, per-code activation decode.
+// ---------------------------------------------------------------------------
+
+/// Scalar `i32` weight rows — the in-engine bit-exactness oracle.
+pub struct ReferenceBackend;
+
+struct ReferenceKernel {
+    k: usize,
+    /// `p_x` of the layer input — how `xcol` codes are decoded
+    act_bits: u32,
+    qw: Vec<i32>,
+}
+
+impl KernelBackend for ReferenceBackend {
+    fn name(&self) -> &'static str {
+        "reference"
+    }
+
+    fn prepare(&self, dl: &DeployedLayer) -> Box<dyn LayerKernel> {
+        Box::new(ReferenceKernel {
+            k: dl.k(),
+            act_bits: dl.act_bits,
+            qw: dl.qweights.clone(),
+        })
+    }
+}
+
+impl LayerKernel for ReferenceKernel {
+    #[inline]
+    fn dot(&self, c: usize, xcol: &[u8]) -> i32 {
+        let row = &self.qw[c * self.k..(c + 1) * self.k];
+        let mut acc = 0i32;
+        for (j, &w) in row.iter().enumerate() {
+            acc += extract_code(xcol, j, self.act_bits) as i32 * w;
         }
+        acc
     }
-    acc
-}
 
-/// 4-bit rows: 2 MACs per weight byte, unrolled.
-fn dot_w4(row: &[u8], col: &[i32]) -> i32 {
-    let mut acc = 0i32;
-    let mut chunks = col.chunks_exact(2);
-    for (chunk, &b) in (&mut chunks).zip(row) {
-        let b = b as i32;
-        acc += chunk[0] * sext(b & 0xf, 4);
-        acc += chunk[1] * sext((b >> 4) & 0xf, 4);
-    }
-    let rem = chunks.remainder();
-    if !rem.is_empty() {
-        let b = row[col.len() / 2] as i32;
-        acc += rem[0] * sext(b & 0xf, 4);
-    }
-    acc
-}
-
-/// 8-bit rows: one byte per weight.
-fn dot_w8(row: &[u8], col: &[i32]) -> i32 {
-    let mut acc = 0i32;
-    for (x, &b) in col.iter().zip(row) {
-        acc += x * (b as i8 as i32);
-    }
-    acc
-}
-
-fn dot_w2_wide(row: &[u8], col: &[i32]) -> i64 {
-    let mut acc = 0i64;
-    let mut chunks = col.chunks_exact(4);
-    for (chunk, &b) in (&mut chunks).zip(row) {
-        let b = b as i32;
-        acc += chunk[0] as i64 * sext(b & 3, 2) as i64;
-        acc += chunk[1] as i64 * sext((b >> 2) & 3, 2) as i64;
-        acc += chunk[2] as i64 * sext((b >> 4) & 3, 2) as i64;
-        acc += chunk[3] as i64 * sext((b >> 6) & 3, 2) as i64;
-    }
-    let rem = chunks.remainder();
-    if !rem.is_empty() {
-        let b = row[col.len() / 4] as i32;
-        for (j, &x) in rem.iter().enumerate() {
-            acc += x as i64 * sext((b >> (2 * j)) & 3, 2) as i64;
+    #[inline]
+    fn dot_wide(&self, c: usize, xcol: &[u8]) -> i64 {
+        let row = &self.qw[c * self.k..(c + 1) * self.k];
+        let mut acc = 0i64;
+        for (j, &w) in row.iter().enumerate() {
+            acc += extract_code(xcol, j, self.act_bits) as i64 * w as i64;
         }
+        acc
     }
-    acc
+
+    fn weight_bytes(&self) -> usize {
+        self.qw.len() * std::mem::size_of::<i32>()
+    }
 }
 
-fn dot_w4_wide(row: &[u8], col: &[i32]) -> i64 {
-    let mut acc = 0i64;
-    let mut chunks = col.chunks_exact(2);
-    for (chunk, &b) in (&mut chunks).zip(row) {
-        let b = b as i32;
-        acc += chunk[0] as i64 * sext(b & 0xf, 4) as i64;
-        acc += chunk[1] as i64 * sext((b >> 4) & 0xf, 4) as i64;
-    }
-    let rem = chunks.remainder();
-    if !rem.is_empty() {
-        let b = row[col.len() / 2] as i32;
-        acc += rem[0] as i64 * sext(b & 0xf, 4) as i64;
-    }
-    acc
+// ---------------------------------------------------------------------------
+// Packed backend: sub-byte rows x packed columns, nine SWAR kernels.
+// ---------------------------------------------------------------------------
+
+/// Sub-byte bit-packed weight rows (the Eq. (7) flash layout) multiplied
+/// by per-`(p_x, p_w)` SWAR kernels against packed activation columns.
+pub struct PackedBackend;
+
+type RowDot = fn(&[u8], &[u8], usize) -> i32;
+type RowDotWide = fn(&[u8], &[u8], usize) -> i64;
+
+/// Generates one `(p_x, p_w)` SWAR kernel pair (`i32` + `i64`
+/// accumulation).  Per iteration the *wider* operand fills one 32-bit
+/// register (`LANES = 32 / max(p_x, p_w)` lane pairs, exactly one MPIC
+/// `sdotp`); the narrower operand contributes `LANES * min(p_x, p_w)`
+/// bits of the same fetch.  Tail codes past the last full register are
+/// decoded one at a time.
+macro_rules! swar_kernel {
+    ($dot:ident, $dot_wide:ident, $px:literal, $pw:literal) => {
+        fn $dot(xcol: &[u8], wrow: &[u8], k: usize) -> i32 {
+            const PX: u32 = $px;
+            const PW: u32 = $pw;
+            const LANES: usize = (32 / if PX > PW { PX } else { PW }) as usize;
+            const XSTEP: usize = LANES * PX as usize / 8;
+            const WSTEP: usize = LANES * PW as usize / 8;
+            const XMASK: u32 = (1u32 << PX) - 1;
+            const WMASK: u32 = (1u32 << PW) - 1;
+            let full = k / LANES;
+            let mut acc = 0i32;
+            for i in 0..full {
+                let xw = load_le(xcol, i * XSTEP, XSTEP);
+                let ww = load_le(wrow, i * WSTEP, WSTEP);
+                for lane in 0..LANES as u32 {
+                    let x = ((xw >> (lane * PX)) & XMASK) as i32;
+                    let w = sext(((ww >> (lane * PW)) & WMASK) as i32, PW);
+                    acc += x * w;
+                }
+            }
+            for j in full * LANES..k {
+                acc += extract_code(xcol, j, PX) as i32 * extract_weight(wrow, j, PW);
+            }
+            acc
+        }
+
+        fn $dot_wide(xcol: &[u8], wrow: &[u8], k: usize) -> i64 {
+            const PX: u32 = $px;
+            const PW: u32 = $pw;
+            const LANES: usize = (32 / if PX > PW { PX } else { PW }) as usize;
+            const XSTEP: usize = LANES * PX as usize / 8;
+            const WSTEP: usize = LANES * PW as usize / 8;
+            const XMASK: u32 = (1u32 << PX) - 1;
+            const WMASK: u32 = (1u32 << PW) - 1;
+            let full = k / LANES;
+            let mut acc = 0i64;
+            for i in 0..full {
+                let xw = load_le(xcol, i * XSTEP, XSTEP);
+                let ww = load_le(wrow, i * WSTEP, WSTEP);
+                for lane in 0..LANES as u32 {
+                    let x = ((xw >> (lane * PX)) & XMASK) as i64;
+                    let w = sext(((ww >> (lane * PW)) & WMASK) as i32, PW) as i64;
+                    acc += x * w;
+                }
+            }
+            for j in full * LANES..k {
+                acc += extract_code(xcol, j, PX) as i64
+                    * extract_weight(wrow, j, PW) as i64;
+            }
+            acc
+        }
+    };
 }
 
-fn dot_w8_wide(row: &[u8], col: &[i32]) -> i64 {
-    let mut acc = 0i64;
-    for (x, &b) in col.iter().zip(row) {
-        acc += *x as i64 * (b as i8 as i64);
-    }
-    acc
-}
+swar_kernel!(dot_x2_w2, dot_x2_w2_wide, 2, 2); // 16 lanes: u32 x, u32 w
+swar_kernel!(dot_x2_w4, dot_x2_w4_wide, 2, 4); //  8 lanes: u16 x, u32 w
+swar_kernel!(dot_x2_w8, dot_x2_w8_wide, 2, 8); //  4 lanes:  u8 x, u32 w
+swar_kernel!(dot_x4_w2, dot_x4_w2_wide, 4, 2); //  8 lanes: u32 x, u16 w
+swar_kernel!(dot_x4_w4, dot_x4_w4_wide, 4, 4); //  8 lanes: u32 x, u32 w
+swar_kernel!(dot_x4_w8, dot_x4_w8_wide, 4, 8); //  4 lanes: u16 x, u32 w
+swar_kernel!(dot_x8_w2, dot_x8_w2_wide, 8, 2); //  4 lanes: u32 x,  u8 w
+swar_kernel!(dot_x8_w4, dot_x8_w4_wide, 8, 4); //  4 lanes: u32 x, u16 w
+swar_kernel!(dot_x8_w8, dot_x8_w8_wide, 8, 8); //  4 lanes: u32 x, u32 w
+
+/// Kernel table indexed `[precision_index(p_x)][precision_index(p_w)]`,
+/// mirroring MPIC's per-(p_x, p_w) SIMD mode CSR.  Both operands arrive
+/// packed, so every cell is a genuinely distinct SWAR body: the lane
+/// grid, fetch widths and decode masks all depend on the combination.
+const DOT_KERNELS: [[RowDot; 3]; 3] = [
+    [dot_x2_w2, dot_x2_w4, dot_x2_w8],
+    [dot_x4_w2, dot_x4_w4, dot_x4_w8],
+    [dot_x8_w2, dot_x8_w4, dot_x8_w8],
+];
+
+const DOT_KERNELS_WIDE: [[RowDotWide; 3]; 3] = [
+    [dot_x2_w2_wide, dot_x2_w4_wide, dot_x2_w8_wide],
+    [dot_x4_w2_wide, dot_x4_w4_wide, dot_x4_w8_wide],
+    [dot_x8_w2_wide, dot_x8_w4_wide, dot_x8_w8_wide],
+];
 
 struct PackedRow {
     /// byte offset into `bytes`
     offset: u32,
-    /// row length in bytes
-    len: u32,
     /// `precision_index(weight_bits)`
     widx: u8,
 }
 
 struct PackedKernel {
+    /// K = codes per row (same for every channel of the layer)
+    k: usize,
     /// all channel rows, each padded to a byte boundary (the CMix-NN
     /// reordered-group layout `quant::packed_weight_bytes` sizes)
     bytes: Vec<u8>,
@@ -256,12 +284,12 @@ impl KernelBackend for PackedBackend {
             let packed = pack_subbyte(&dl.qweights[c * k..(c + 1) * k], bits);
             rows.push(PackedRow {
                 offset: bytes.len() as u32,
-                len: packed.len() as u32,
                 widx: precision_index(bits) as u8,
             });
             bytes.extend_from_slice(&packed);
         }
         Box::new(PackedKernel {
+            k,
             bytes,
             rows,
             aidx: precision_index(dl.act_bits),
@@ -273,24 +301,21 @@ impl PackedKernel {
     #[inline(always)]
     fn row(&self, c: usize) -> (&[u8], usize) {
         let r = &self.rows[c];
-        (
-            &self.bytes[r.offset as usize..(r.offset + r.len) as usize],
-            r.widx as usize,
-        )
+        (&self.bytes[r.offset as usize..], r.widx as usize)
     }
 }
 
 impl LayerKernel for PackedKernel {
     #[inline]
-    fn dot(&self, c: usize, col: &[i32]) -> i32 {
+    fn dot(&self, c: usize, xcol: &[u8]) -> i32 {
         let (row, widx) = self.row(c);
-        DOT_KERNELS[self.aidx][widx](row, col)
+        DOT_KERNELS[self.aidx][widx](xcol, row, self.k)
     }
 
     #[inline]
-    fn dot_wide(&self, c: usize, col: &[i32]) -> i64 {
+    fn dot_wide(&self, c: usize, xcol: &[u8]) -> i64 {
         let (row, widx) = self.row(c);
-        DOT_KERNELS_WIDE[self.aidx][widx](row, col)
+        DOT_KERNELS_WIDE[self.aidx][widx](xcol, row, self.k)
     }
 
     fn weight_bytes(&self) -> usize {
@@ -310,38 +335,65 @@ pub fn backend_by_name(name: &str) -> anyhow::Result<&'static dyn KernelBackend>
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::quant::pack_acts_subbyte;
     use crate::util::Pcg32;
+    use crate::PRECISIONS;
 
+    /// Random signed row over the FULL `bits` range, including the most
+    /// negative code `-(2^(bits-1))` (producible by packing even though
+    /// the symmetric quantizer never emits it).
     fn random_row(rng: &mut Pcg32, k: usize, bits: u32) -> Vec<i32> {
+        let lo = -(1i32 << (bits - 1));
         let hi = (1i32 << (bits - 1)) - 1;
-        (0..k).map(|_| rng.below((2 * hi + 1) as u32) as i32 - hi).collect()
+        (0..k).map(|_| lo + rng.below((hi - lo + 1) as u32) as i32).collect()
+    }
+
+    /// Ragged K values: tail lanes of every register width (16/8/4
+    /// lanes), single-code columns, and byte-straddling lengths.
+    const RAGGED_K: [usize; 14] = [1, 2, 3, 4, 5, 7, 8, 9, 15, 16, 17, 33, 64, 127];
+
+    #[test]
+    fn all_nine_combos_match_scalar_ragged_and_extreme() {
+        let mut rng = Pcg32::seeded(11);
+        for (ai, &px) in PRECISIONS.iter().enumerate() {
+            for (wi, &pw) in PRECISIONS.iter().enumerate() {
+                for k in RAGGED_K {
+                    let mut w = random_row(&mut rng, k, pw);
+                    let mut x: Vec<u32> = (0..k).map(|_| rng.below(1 << px)).collect();
+                    // extreme codes at both ends: the PACT clip boundary
+                    // and the most negative weight code
+                    x[0] = (1 << px) - 1;
+                    w[0] = -(1i32 << (pw - 1));
+                    if k > 1 {
+                        x[k - 1] = (1 << px) - 1;
+                        w[k - 1] = -(1i32 << (pw - 1));
+                    }
+                    let xcol = pack_acts_subbyte(&x, px);
+                    let wrow = pack_subbyte(&w, pw);
+                    let want: i64 = x.iter().zip(&w).map(|(&a, &b)| a as i64 * b as i64).sum();
+                    let got = DOT_KERNELS[ai][wi](&xcol, &wrow, k);
+                    assert_eq!(got as i64, want, "px={px} pw={pw} k={k}");
+                    let got_wide = DOT_KERNELS_WIDE[ai][wi](&xcol, &wrow, k);
+                    assert_eq!(got_wide, want, "wide px={px} pw={pw} k={k}");
+                }
+            }
+        }
     }
 
     #[test]
-    fn packed_dot_matches_scalar_all_widths() {
-        let mut rng = Pcg32::seeded(11);
-        for bits in [2u32, 4, 8] {
-            // ragged K values exercise the tail paths
-            for k in [1usize, 3, 4, 5, 7, 8, 64, 65, 127] {
-                let w = random_row(&mut rng, k, bits);
-                let col: Vec<i32> =
-                    (0..k).map(|_| rng.below(256) as i32).collect();
-                let packed = pack_subbyte(&w, bits);
-                let want: i32 =
-                    col.iter().zip(&w).map(|(x, v)| x * v).sum();
-                let got = match bits {
-                    2 => dot_w2(&packed, &col),
-                    4 => dot_w4(&packed, &col),
-                    _ => dot_w8(&packed, &col),
-                };
-                assert_eq!(got, want, "bits={bits} k={k}");
-                let got_wide = match bits {
-                    2 => dot_w2_wide(&packed, &col),
-                    4 => dot_w4_wide(&packed, &col),
-                    _ => dot_w8_wide(&packed, &col),
-                };
-                assert_eq!(got_wide, want as i64, "wide bits={bits} k={k}");
-            }
+    fn reference_kernel_decodes_packed_columns() {
+        // the reference backend reads the same packed columns; its
+        // scalar decode must agree with the SWAR kernels
+        let mut rng = Pcg32::seeded(17);
+        for &px in &PRECISIONS {
+            let k = 29;
+            let x: Vec<u32> = (0..k).map(|_| rng.below(1 << px)).collect();
+            let w = random_row(&mut rng, k, 8);
+            let xcol = pack_acts_subbyte(&x, px);
+            let want: i64 = x.iter().zip(&w).map(|(&a, &b)| a as i64 * b as i64).sum();
+            let kern = ReferenceKernel { k, act_bits: px, qw: w };
+            assert_eq!(kern.dot(0, &xcol) as i64, want, "px={px}");
+            assert_eq!(kern.dot_wide(0, &xcol), want, "wide px={px}");
         }
     }
 
@@ -354,6 +406,16 @@ mod tests {
         assert_eq!(sext(0x7, 4), 7);
         assert_eq!(sext(0x8, 4), -8);
         assert_eq!(sext(0xf, 4), -1);
+        assert_eq!(sext(0x80, 8), -128);
+        assert_eq!(sext(0xff, 8), -1);
+    }
+
+    #[test]
+    fn load_le_matches_from_le_bytes() {
+        let buf = [0x12u8, 0x34, 0x56, 0x78, 0x9a];
+        assert_eq!(load_le(&buf, 0, 4), u32::from_le_bytes([0x12, 0x34, 0x56, 0x78]));
+        assert_eq!(load_le(&buf, 1, 2), 0x5634);
+        assert_eq!(load_le(&buf, 4, 1), 0x9a);
     }
 
     #[test]

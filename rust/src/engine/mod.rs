@@ -8,22 +8,31 @@
 //!
 //! * [`ExecPlan::compile`] lowers a deployed model **once** into a
 //!   self-contained plan: arena slot assignments, precomputed SAME
-//!   padding/im2col gather tables, folded per-channel epilogues, the
-//!   per-layer [`InferenceCost`](crate::mpic::cost::InferenceCost)
+//!   padding/im2col gather tables (byte offsets into the packed
+//!   activation plane), folded per-channel epilogues, the per-layer
+//!   [`InferenceCost`](crate::mpic::cost::InferenceCost)
 //!   (input-independent, accounted at compile time), and per-layer
 //!   kernels prepared by a [`KernelBackend`];
 //! * [`ExecPlan::run_sample`] / [`ExecPlan::run_batch`] execute it with
-//!   zero per-sample allocation besides the returned outputs, fanning
-//!   batches across `std::thread::scope` workers with per-thread
-//!   [`Arena`]s;
+//!   zero per-sample allocation besides the returned outputs: each
+//!   quantized layer's input is PACT-quantized **once into a packed
+//!   sub-byte plane** (`p_x`-bit codes, one byte-aligned run per pixel)
+//!   and the dot kernels consume densely packed columns gathered from
+//!   it.  Batches fan out across `std::thread::scope` workers with
+//!   per-thread [`Arena`]s;
 //! * [`KernelBackend`] is the pluggable seam for the integer dot
-//!   kernels: [`ReferenceBackend`] (the seed scalar loops, the
-//!   bit-exactness oracle) and [`PackedBackend`] (sub-byte bit-packed
-//!   weight rows with unrolled decode kernels per `(p_x, p_w)`,
-//!   mirroring MPIC's mixed-precision SIMD modes).  All backends are
-//!   bit-identical by contract — `tests/engine_equivalence.rs` enforces
-//!   it across all nine `(p_x, p_w) ∈ {2,4,8}²` combos and the four
-//!   benchmark topologies.
+//!   kernels: [`ReferenceBackend`] (scalar `i32` weight rows, the
+//!   in-engine bit-exactness oracle) and [`PackedBackend`] (sub-byte
+//!   bit-packed weight rows × packed activation columns through nine
+//!   distinct per-`(p_x, p_w)` SWAR kernels, mirroring MPIC's
+//!   mixed-precision `sdotp` modes).  All backends are bit-identical by
+//!   contract — `tests/engine_equivalence.rs` enforces it against
+//!   `mpic::exec::run_sample` across all nine `(p_x, p_w) ∈ {2,4,8}²`
+//!   combos and the four benchmark topologies.
+//!
+//! There is deliberately **no** per-call convenience wrapper that
+//! compiles and runs in one shot: every caller holds an [`ExecPlan`]
+//! (that is the point of the plan/execute split).
 
 pub mod arena;
 pub mod backend;
@@ -35,23 +44,3 @@ pub use backend::{
     ReferenceBackend,
 };
 pub use plan::{engine_threads, ExecPlan};
-
-use anyhow::Result;
-
-use crate::deploy::DeployedModel;
-use crate::energy::CostLut;
-use crate::mpic::cost::InferenceCost;
-
-/// One-shot convenience: compile a plan against `backend` and run the
-/// whole batch.  Callers executing more than one batch should keep the
-/// [`ExecPlan`] (that is the point of the plan/execute split).
-pub fn run_batch(
-    model: &DeployedModel,
-    xs: &[f32],
-    feat: usize,
-    lut: &CostLut,
-    backend: &dyn KernelBackend,
-) -> Result<(Vec<Vec<f32>>, InferenceCost)> {
-    let plan = ExecPlan::compile(model, lut, backend)?;
-    plan.run_batch(xs, feat)
-}

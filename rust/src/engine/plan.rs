@@ -7,8 +7,10 @@
 //!   (two ping-pong scratch slots + one per saved residual tag), so
 //!   execution never touches a `HashMap` or clones an activation;
 //! * **gather tables** — SAME-padding im2col source offsets per output
-//!   pixel, computed once instead of re-deriving window/padding
-//!   arithmetic per sample;
+//!   pixel, expressed as **byte offsets into the packed activation
+//!   plane** (each input pixel's `C_in` codes start on a byte boundary),
+//!   computed once instead of re-deriving window/padding arithmetic per
+//!   sample;
 //! * **folded epilogues** — `a_fold[c] * eps_x` pre-multiplied per
 //!   channel (bit-identical: the same two f32 factors are multiplied,
 //!   just once instead of per output element);
@@ -18,6 +20,14 @@
 //! * **cost** — the full [`InferenceCost`] is accounted at compile time
 //!   (costs are input-independent), so running a sample does zero cost
 //!   bookkeeping.
+//!
+//! Per quantized layer, execution quantizes the input **once** into a
+//! packed sub-byte plane (`p_x`-bit codes, `quant::pack_acts_subbyte`
+//! layout, one byte-aligned run per pixel) held in the [`Arena`], then
+//! assembles a densely packed im2col column per output pixel that every
+//! output channel's dot kernel reuses — touching `8 / p_x` times less
+//! activation memory than unpacked `i32` lanes.  1x1 convolutions and FC
+//! layers skip the copy entirely: their column *is* a plane slice.
 //!
 //! [`ExecPlan::run_batch`] fans samples out across `std::thread::scope`
 //! workers, each with its own [`Arena`].
@@ -55,8 +65,6 @@ struct QuantOp {
     depthwise: bool,
     /// weights per output channel
     k: usize,
-    /// input channels per group (1 for depthwise)
-    cin_g: usize,
     /// kernel spatial positions (`kx * ky`)
     kk: usize,
     in_len: usize,
@@ -66,8 +74,21 @@ struct QuantOp {
     /// PACT clip (already floored at 1e-6) and step
     act_alpha: f32,
     act_eps: f32,
-    /// per output pixel x kernel position: base offset into the input
-    /// HWC code buffer, or -1 outside the image (zero padding)
+    /// input activation precision `p_x` — the packed plane's code width
+    act_bits: u32,
+    /// input channels per pixel (K for FC: the whole input is one run)
+    cin: usize,
+    /// bytes per packed input pixel (`ceil(cin * p_x / 8)`)
+    pixel_bytes: usize,
+    /// total packed plane bytes (`n_pixels * pixel_bytes`)
+    plane_bytes: usize,
+    /// bits each kernel position contributes to the column (`cin_g * p_x`)
+    seg_bits: usize,
+    /// dense packed column bytes (`ceil(K * p_x / 8)`)
+    col_bytes: usize,
+    /// per output pixel x kernel position: base **byte** offset of the
+    /// source pixel in the packed plane, or -1 outside the image (zero
+    /// padding)
     gather: Vec<i32>,
     groups: Vec<SubConv>,
     /// `a_fold[c] * act_eps` (same f32 product the oracle forms per
@@ -102,7 +123,7 @@ pub struct ExecPlan {
     backend_name: &'static str,
     feat: usize,
     slot_len: Vec<usize>,
-    q_len: usize,
+    plane_len: usize,
     col_len: usize,
     nodes: Vec<PlanNode>,
     out_slot: usize,
@@ -115,6 +136,10 @@ pub struct ExecPlan {
 
 const SCRATCH_A: usize = 0;
 const SCRATCH_B: usize = 1;
+
+/// Slack bytes past a packed column: the unaligned OR-assembly writes
+/// one spill byte past the last data byte (always zero bits there).
+const COL_SLACK: usize = 2;
 
 /// Pick the write slot for an out-of-place op: the scratch slot that is
 /// not the source (tag slots are never written by compute nodes).
@@ -134,18 +159,14 @@ impl ExecPlan {
         backend: &dyn KernelBackend,
     ) -> Result<ExecPlan> {
         let (mut h, mut w, mut c) = match model.input_shape.len() {
-            3 => (
-                model.input_shape[0],
-                model.input_shape[1],
-                model.input_shape[2],
-            ),
+            3 => (model.input_shape[0], model.input_shape[1], model.input_shape[2]),
             1 => (1, 1, model.input_shape[0]),
             _ => bail!("unsupported input rank {}", model.input_shape.len()),
         };
         let feat = h * w * c;
         let mut slot_len = vec![0usize, 0usize]; // scratch, sized below
         let mut max_len = feat;
-        let mut q_len = 0usize;
+        let mut plane_len = 0usize;
         let mut col_len = 0usize;
         let mut weight_bytes = 0usize;
         let mut tags: std::collections::HashMap<String, (usize, (usize, usize, usize))> =
@@ -169,12 +190,10 @@ impl ExecPlan {
 
             let (kind, dst) = match &node.layer {
                 Some(dl) => {
-                    let op = Self::compile_quant(
-                        dl, (h, w, c), lut, backend, &tags, &mut lc,
-                    )?;
+                    let op = Self::compile_quant(dl, (h, w, c), lut, backend, &tags, &mut lc)?;
                     weight_bytes += op.kernel.weight_bytes();
-                    q_len = q_len.max(op.in_len);
-                    col_len = col_len.max(op.k);
+                    plane_len = plane_len.max(op.plane_bytes);
+                    col_len = col_len.max(op.col_bytes + COL_SLACK);
                     (h, w, c) = if op.fc {
                         (1, 1, op.cout)
                     } else {
@@ -254,7 +273,7 @@ impl ExecPlan {
             backend_name: backend.name(),
             feat,
             slot_len,
-            q_len,
+            plane_len,
             col_len,
             nodes,
             out_slot: cur,
@@ -281,17 +300,17 @@ impl ExecPlan {
         let in_len = h * w * c;
         let (out_h, out_w, cout) = if fc {
             if in_len != k {
-                bail!(
-                    "fc {} input length {in_len} != K {k}",
-                    s.name
-                );
+                bail!("fc {} input length {in_len} != K {k}", s.name);
             }
             (1, 1, s.cout)
         } else {
             if h != s.in_h || w != s.in_w || c != s.cin {
                 bail!(
                     "conv {} geometry mismatch: input {h}x{w}x{c} vs spec {}x{}x{}",
-                    s.name, s.in_h, s.in_w, s.cin
+                    s.name,
+                    s.in_h,
+                    s.in_w,
+                    s.cin
                 );
             }
             (s.out_h, s.out_w, s.cout)
@@ -299,7 +318,17 @@ impl ExecPlan {
         let cin_g = if depthwise { 1 } else { s.cin };
         let kk = s.kx * s.ky;
 
-        // gather table (conv/dwconv): base offsets into the HWC codes
+        // packed activation plane geometry: every input pixel's C_in
+        // codes start on a byte boundary (the FC input is one such run)
+        let pxs = dl.act_bits as usize;
+        let cin = if fc { k } else { s.cin };
+        let pixel_bytes = (cin * pxs).div_ceil(8);
+        let plane_bytes = (in_len / cin) * pixel_bytes;
+        let seg_bits = cin_g * pxs;
+        let col_bytes = (k * pxs).div_ceil(8);
+
+        // gather table (conv/dwconv): per (output pixel, kernel
+        // position) the source pixel's byte offset in the packed plane
         let gather = if fc {
             Vec::new()
         } else {
@@ -309,8 +338,7 @@ impl ExecPlan {
             for oy in 0..out_h {
                 for ox in 0..out_w {
                     for ki in 0..s.kx {
-                        let iy =
-                            oy as i64 * s.stride as i64 + ki as i64 - pad_y;
+                        let iy = oy as i64 * s.stride as i64 + ki as i64 - pad_y;
                         for kj in 0..s.ky {
                             let ix = ox as i64 * s.stride as i64 + kj as i64
                                 - pad_x;
@@ -319,7 +347,8 @@ impl ExecPlan {
                                 && ix >= 0
                                 && ix < s.in_w as i64;
                             g.push(if inside {
-                                ((iy as usize * s.in_w + ix as usize) * s.cin)
+                                ((iy as usize * s.in_w + ix as usize)
+                                    * pixel_bytes)
                                     as i32
                             } else {
                                 -1
@@ -335,8 +364,7 @@ impl ExecPlan {
         let levels = ((1u32 << dl.act_bits) - 1) as f32;
         let act_alpha = dl.alpha.max(1e-6);
         let act_eps = act_alpha / levels;
-        let a_eps: Vec<f32> =
-            dl.a_fold.iter().map(|&a| a * act_eps).collect();
+        let a_eps: Vec<f32> = dl.a_fold.iter().map(|&a| a * act_eps).collect();
 
         // fused residual epilogue
         let post_add = match &s.add_from {
@@ -362,10 +390,7 @@ impl ExecPlan {
             };
             account_group(lc, lut, dl.act_bits, g.bits, macs);
         }
-        account_memory(
-            lc,
-            memory::layer_traffic_bytes(s, dl.act_bits, dl.packed_bytes()),
-        );
+        account_memory(lc, memory::layer_traffic_bytes(s, dl.act_bits, dl.packed_bytes()));
         if let Some(pa) = &post_add {
             account_structural(lc, pa.len);
         }
@@ -374,7 +399,6 @@ impl ExecPlan {
             fc,
             depthwise,
             k,
-            cin_g,
             kk,
             in_len,
             out_h,
@@ -382,6 +406,12 @@ impl ExecPlan {
             cout,
             act_alpha,
             act_eps,
+            act_bits: dl.act_bits,
+            cin,
+            pixel_bytes,
+            plane_bytes,
+            seg_bits,
+            col_bytes,
             gather,
             groups: dl.groups.clone(),
             a_eps,
@@ -419,7 +449,7 @@ impl ExecPlan {
 
     /// Allocate a worker arena sized for this plan.
     pub fn arena(&self) -> Arena {
-        Arena::new(&self.slot_len, self.q_len, self.col_len)
+        Arena::new(&self.slot_len, self.plane_len, self.col_len)
     }
 
     // ---- execution ---------------------------------------------------------
@@ -434,7 +464,7 @@ impl ExecPlan {
         if input.len() != self.feat {
             bail!("input length {} != {}", input.len(), self.feat);
         }
-        let Arena { slots, q, col } = arena;
+        let Arena { slots, xplane, col } = arena;
         slots[SCRATCH_A][..self.feat].copy_from_slice(input);
 
         for node in &self.nodes {
@@ -472,7 +502,7 @@ impl ExecPlan {
                 NodeKind::Quant(op) => {
                     {
                         let (dst, src) = pair(slots, node.dst, node.src);
-                        exec_quant(op, src, dst, q, col);
+                        exec_quant(op, src, dst, xplane, col);
                     }
                     if let Some(pa) = &op.post_add {
                         let (dst, oth) = pair(slots, node.dst, pa.other);
@@ -545,9 +575,7 @@ impl ExecPlan {
         if threads <= 1 || n <= 1 {
             let mut arena = self.arena();
             for i in 0..n {
-                outs.push(
-                    self.run_sample(&mut arena, &xs[i * feat..(i + 1) * feat])?,
-                );
+                outs.push(self.run_sample(&mut arena, &xs[i * feat..(i + 1) * feat])?);
             }
         } else {
             let threads = threads.min(n);
@@ -565,10 +593,7 @@ impl ExecPlan {
                                 let mut arena = self.arena();
                                 (a..b)
                                     .map(|i| {
-                                        self.run_sample(
-                                            &mut arena,
-                                            &xs[i * feat..(i + 1) * feat],
-                                        )
+                                        self.run_sample(&mut arena, &xs[i * feat..(i + 1) * feat])
                                     })
                                     .collect()
                             })
@@ -616,25 +641,60 @@ fn pair<'a>(
     }
 }
 
-/// One quantized layer on one sample: quantize → gather → dot → epilogue.
-fn exec_quant(op: &QuantOp, src: &mut [f32], dst: &mut [f32], q: &mut [u32], col: &mut [i32]) {
-    // PACT quantization of the whole input buffer (identical expression
-    // to quant::quantize_acts_pact)
+/// OR `nbits` bits from `src` (starting at its bit 0) into `dst`
+/// starting at bit `pos`.  Target bits must be zero beforehand; `src`
+/// slack bits past `nbits` must be zero (the packed plane guarantees
+/// both).  May touch one spill byte past the written range — callers
+/// keep [`COL_SLACK`] zeroed bytes after the column.
+fn or_bits(dst: &mut [u8], pos: usize, src: &[u8], nbits: usize) {
+    let shift = (pos % 8) as u32;
+    let nbytes = nbits.div_ceil(8);
+    let mut byte = pos / 8;
+    if shift == 0 {
+        dst[byte..byte + nbytes].copy_from_slice(&src[..nbytes]);
+        return;
+    }
+    for &b in &src[..nbytes] {
+        dst[byte] |= b << shift;
+        dst[byte + 1] |= b >> (8 - shift);
+        byte += 1;
+    }
+}
+
+/// One quantized layer on one sample:
+/// quantize-to-packed-plane → gather packed columns → dot → epilogue.
+fn exec_quant(
+    op: &QuantOp,
+    src: &mut [f32],
+    dst: &mut [f32],
+    xplane: &mut [u8],
+    col: &mut [u8],
+) {
+    // PACT quantization of the whole input buffer, fused with sub-byte
+    // packing (identical arithmetic to quant::quantize_acts_pact, same
+    // layout as quant::pack_acts_subbyte, pixels byte-aligned)
     let a = op.act_alpha;
     let eps = op.act_eps;
-    for (qd, &v) in q[..op.in_len].iter_mut().zip(src[..op.in_len].iter()) {
-        *qd = ((v.clamp(0.0, a)) / eps).round_ties_even() as u32;
+    let pxs = op.act_bits as usize;
+    {
+        let plane = &mut xplane[..op.plane_bytes];
+        plane.fill(0);
+        for (p, pix) in src[..op.in_len].chunks_exact(op.cin).enumerate() {
+            let base = p * op.pixel_bytes * 8;
+            for (ci, &v) in pix.iter().enumerate() {
+                let code = ((v.clamp(0.0, a)) / eps).round_ties_even() as u32 as u8;
+                let bit = base + ci * pxs;
+                plane[bit / 8] |= code << (bit % 8);
+            }
+        }
     }
-    let q = &q[..op.in_len];
+    let plane = &xplane[..op.plane_bytes];
 
     if op.fc {
-        let col = &mut col[..op.k];
-        for (cd, &qv) in col.iter_mut().zip(q) {
-            *cd = qv as i32;
-        }
+        // the packed plane IS the FC column — zero-copy
         for g in &op.groups {
             for c in g.start..g.start + g.len {
-                let acc = op.kernel.dot_wide(c, col);
+                let acc = op.kernel.dot_wide(c, plane);
                 let mut y = acc as f32 * op.a_eps[c] + op.b_fold[c];
                 if op.relu_inline {
                     y = y.max(0.0);
@@ -647,22 +707,28 @@ fn exec_quant(op: &QuantOp, src: &mut [f32], dst: &mut [f32], q: &mut [u32], col
 
     let kk = op.kk;
     if op.depthwise {
-        // depthwise: filter c reads only input channel c — gather the
-        // kk-point window per (pixel, channel)
-        let col = &mut col[..kk];
+        // depthwise: filter c reads only input channel c — extract the
+        // kk-point window per (pixel, channel) into a dense column.
+        // Pixels start byte-aligned and p_x divides 8, so a channel's
+        // code never straddles a byte.
+        let colb = &mut col[..op.col_bytes];
+        let mask = ((1u16 << op.act_bits) - 1) as u8;
         for pix in 0..op.out_h * op.out_w {
             let tbl = &op.gather[pix * kk..(pix + 1) * kk];
             let orow = pix * op.cout;
             for g in &op.groups {
                 for c in g.start..g.start + g.len {
-                    for (cd, &base) in col.iter_mut().zip(tbl) {
-                        *cd = if base < 0 {
-                            0
-                        } else {
-                            q[base as usize + c] as i32
-                        };
+                    colb.fill(0);
+                    let cbit = c * pxs;
+                    let (cbyte, cshift) = (cbit / 8, (cbit % 8) as u32);
+                    for (t, &base) in tbl.iter().enumerate() {
+                        if base >= 0 {
+                            let code = (plane[base as usize + cbyte] >> cshift) & mask;
+                            let dbit = t * pxs;
+                            colb[dbit / 8] |= code << (dbit % 8);
+                        }
                     }
-                    let acc = op.kernel.dot(c, col);
+                    let acc = op.kernel.dot(c, colb);
                     let mut y = acc as f32 * op.a_eps[c] + op.b_fold[c];
                     if op.relu_inline {
                         y = y.max(0.0);
@@ -674,34 +740,63 @@ fn exec_quant(op: &QuantOp, src: &mut [f32], dst: &mut [f32], q: &mut [u32], col
         return;
     }
 
-    // standard conv: gather the receptive field once per output pixel,
-    // reuse it for all C_out channels
-    let cin_g = op.cin_g;
-    let col = &mut col[..op.k];
-    for pix in 0..op.out_h * op.out_w {
-        let tbl = &op.gather[pix * kk..(pix + 1) * kk];
-        for (t, &base) in tbl.iter().enumerate() {
-            let d = t * cin_g;
-            if base < 0 {
-                col[d..d + cin_g].fill(0);
+    // standard conv: assemble the packed receptive-field column once per
+    // output pixel, reuse it for all C_out channels
+    if op.seg_bits % 8 == 0 {
+        // byte-aligned segments: straight byte copies per kernel
+        // position; a 1x1 conv's column is a plane slice (zero-copy)
+        let seg_bytes = op.seg_bits / 8;
+        for pix in 0..op.out_h * op.out_w {
+            let tbl = &op.gather[pix * kk..(pix + 1) * kk];
+            let xcol: &[u8] = if kk == 1 && tbl[0] >= 0 {
+                &plane[tbl[0] as usize..tbl[0] as usize + seg_bytes]
             } else {
-                let b = base as usize;
-                for (cd, &qv) in
-                    col[d..d + cin_g].iter_mut().zip(&q[b..b + cin_g])
-                {
-                    *cd = qv as i32;
+                for (t, &base) in tbl.iter().enumerate() {
+                    let d = t * seg_bytes;
+                    if base < 0 {
+                        col[d..d + seg_bytes].fill(0);
+                    } else {
+                        let b = base as usize;
+                        col[d..d + seg_bytes]
+                            .copy_from_slice(&plane[b..b + seg_bytes]);
+                    }
+                }
+                col
+            };
+            let orow = pix * op.cout;
+            for g in &op.groups {
+                for c in g.start..g.start + g.len {
+                    let acc = op.kernel.dot(c, xcol);
+                    let mut y = acc as f32 * op.a_eps[c] + op.b_fold[c];
+                    if op.relu_inline {
+                        y = y.max(0.0);
+                    }
+                    dst[orow + c] = y;
                 }
             }
         }
-        let orow = pix * op.cout;
-        for g in &op.groups {
-            for c in g.start..g.start + g.len {
-                let acc = op.kernel.dot(c, col);
-                let mut y = acc as f32 * op.a_eps[c] + op.b_fold[c];
-                if op.relu_inline {
-                    y = y.max(0.0);
+    } else {
+        // cin * p_x not a byte multiple: shifted OR assembly keeps the
+        // column dense so the SWAR kernels see a gap-free lane stream
+        for pix in 0..op.out_h * op.out_w {
+            let tbl = &op.gather[pix * kk..(pix + 1) * kk];
+            col[..op.col_bytes + COL_SLACK].fill(0);
+            for (t, &base) in tbl.iter().enumerate() {
+                if base >= 0 {
+                    let b = base as usize;
+                    or_bits(col, t * op.seg_bits, &plane[b..b + op.pixel_bytes], op.seg_bits);
                 }
-                dst[orow + c] = y;
+            }
+            let orow = pix * op.cout;
+            for g in &op.groups {
+                for c in g.start..g.start + g.len {
+                    let acc = op.kernel.dot(c, col);
+                    let mut y = acc as f32 * op.a_eps[c] + op.b_fold[c];
+                    if op.relu_inline {
+                        y = y.max(0.0);
+                    }
+                    dst[orow + c] = y;
+                }
             }
         }
     }

@@ -232,7 +232,7 @@ struct Parser<'a> {
     i: usize,
 }
 
-impl<'a> Parser<'a> {
+impl Parser<'_> {
     fn ws(&mut self) {
         while self.i < self.b.len()
             && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r')
@@ -250,8 +250,12 @@ impl<'a> Parser<'a> {
 
     fn expect(&mut self, c: u8) -> Result<()> {
         if self.peek()? != c {
-            bail!("expected {:?} at byte {}, got {:?}",
-                  c as char, self.i, self.peek()? as char);
+            bail!(
+                "expected {:?} at byte {}, got {:?}",
+                c as char,
+                self.i,
+                self.peek()? as char
+            );
         }
         self.i += 1;
         Ok(())
@@ -303,8 +307,9 @@ impl<'a> Parser<'a> {
                     self.i += 1;
                     return Ok(Json::Obj(map));
                 }
-                c => bail!("expected , or }} at byte {}, got {:?}",
-                           self.i, c as char),
+                c => {
+                    bail!("expected , or }} at byte {}, got {:?}", self.i, c as char)
+                }
             }
         }
     }
@@ -329,8 +334,9 @@ impl<'a> Parser<'a> {
                     self.i += 1;
                     return Ok(Json::Arr(arr));
                 }
-                c => bail!("expected , or ] at byte {}, got {:?}",
-                           self.i, c as char),
+                c => {
+                    bail!("expected , or ] at byte {}, got {:?}", self.i, c as char)
+                }
             }
         }
     }
@@ -359,8 +365,7 @@ impl<'a> Parser<'a> {
                             if self.i + 4 > self.b.len() {
                                 bail!("bad \\u escape");
                             }
-                            let hex =
-                                std::str::from_utf8(&self.b[self.i..self.i + 4])?;
+                            let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])?;
                             let cp = u32::from_str_radix(hex, 16)?;
                             self.i += 4;
                             // surrogate pairs

@@ -14,8 +14,9 @@
 //! [`run_sample`] is the **bit-exactness oracle**: simple per-sample
 //! scalar loops with cost accounting interleaved, kept as the ground
 //! truth every [`crate::engine`] backend must match bit for bit.  The
-//! hot path is [`run_batch`], which delegates to the compile-once
-//! engine ([`crate::engine::ExecPlan`], packed backend, threaded).
+//! hot path is the compile-once engine — callers hold a
+//! [`crate::engine::ExecPlan`] and call its `run_batch` (the seed-era
+//! per-call re-planning wrapper that used to live here is gone).
 
 use anyhow::{anyhow, bail, Result};
 
@@ -91,8 +92,7 @@ fn conv_layer(
                     for ox in 0..s.out_w {
                         let mut acc: i32 = 0;
                         for ki in 0..s.kx {
-                            let iy =
-                                oy as i64 * s.stride as i64 + ki as i64 - pad_y;
+                            let iy = oy as i64 * s.stride as i64 + ki as i64 - pad_y;
                             if iy < 0 || iy >= s.in_h as i64 {
                                 continue;
                             }
@@ -138,8 +138,7 @@ fn conv_layer(
                         {
                             col[dst..dst + cin_g].fill(0);
                         } else {
-                            let base =
-                                (iy as usize * s.in_w + ix as usize) * s.cin;
+                            let base = (iy as usize * s.in_w + ix as usize) * s.cin;
                             for ci in 0..cin_g {
                                 col[dst + ci] = qx[base + ci] as i32;
                             }
@@ -166,10 +165,7 @@ fn conv_layer(
             account_group(cost, lut, dl.act_bits, g.bits, macs);
         }
     }
-    account_memory(
-        cost,
-        memory::layer_traffic_bytes(s, dl.act_bits, dl.packed_bytes()),
-    );
+    account_memory(cost, memory::layer_traffic_bytes(s, dl.act_bits, dl.packed_bytes()));
     out
 }
 
@@ -199,15 +195,16 @@ fn fc_layer(
         }
         account_group(cost, lut, dl.act_bits, g.bits, (g.len * k) as u64);
     }
-    account_memory(
-        cost,
-        memory::layer_traffic_bytes(s, dl.act_bits, dl.packed_bytes()),
-    );
+    account_memory(cost, memory::layer_traffic_bytes(s, dl.act_bits, dl.packed_bytes()));
     Act::from_vec(s.cout, out)
 }
 
-fn structural(spec: &LayerSpec, cur: Act, saved: &mut std::collections::HashMap<String, Act>,
-              cost: &mut LayerCost) -> Result<Act> {
+fn structural(
+    spec: &LayerSpec,
+    cur: Act,
+    saved: &mut std::collections::HashMap<String, Act>,
+    cost: &mut LayerCost,
+) -> Result<Act> {
     let out = match spec.kind.as_str() {
         "tap" => cur,
         "avgpool" => {
@@ -261,11 +258,7 @@ pub fn run_sample(
 ) -> Result<(Vec<f32>, InferenceCost)> {
     let mut cur = match model.input_shape.len() {
         3 => {
-            let (h, w, c) = (
-                model.input_shape[0],
-                model.input_shape[1],
-                model.input_shape[2],
-            );
+            let (h, w, c) = (model.input_shape[0], model.input_shape[1], model.input_shape[2]);
             if input.len() != h * w * c {
                 bail!("input length {} != {h}x{w}x{c}", input.len());
             }
@@ -274,8 +267,7 @@ pub fn run_sample(
         1 => Act::from_vec(model.input_shape[0], input.to_vec()),
         _ => bail!("unsupported input rank"),
     };
-    let mut saved: std::collections::HashMap<String, Act> =
-        std::collections::HashMap::new();
+    let mut saved: std::collections::HashMap<String, Act> = std::collections::HashMap::new();
     let mut cost = InferenceCost::default();
 
     for node in &model.nodes {
@@ -335,23 +327,3 @@ pub fn run_sample(
     Ok((cur.data, cost))
 }
 
-/// Run a batch of flattened samples through the compile-once engine
-/// (packed backend, threaded).
-///
-/// `xs.len()` must be a whole number of `feat`-element samples —
-/// anything else is an error, not a panic.  The returned
-/// [`InferenceCost`] is the cost of **one** inference: costs are
-/// input-independent, so it describes each sample individually, never
-/// the batch total.
-///
-/// Callers running many batches over the same model should compile a
-/// [`crate::engine::ExecPlan`] once and reuse it; this wrapper re-plans
-/// per call for drop-in compatibility with the seed API.
-pub fn run_batch(
-    model: &DeployedModel,
-    xs: &[f32],
-    feat: usize,
-    lut: &CostLut,
-) -> Result<(Vec<Vec<f32>>, InferenceCost)> {
-    crate::engine::run_batch(model, xs, feat, lut, &crate::engine::PackedBackend)
-}

@@ -70,8 +70,7 @@ mod tests {
             for &pw in &[2u32, 4, 8] {
                 for _trial in 0..20 {
                     let k = 1 + rng.below(200) as usize;
-                    let xs: Vec<u32> =
-                        (0..k).map(|_| rng.below(1 << px)).collect();
+                    let xs: Vec<u32> = (0..k).map(|_| rng.below(1 << px)).collect();
                     let ws: Vec<i32> = (0..k)
                         .map(|_| {
                             rng.below(1 << pw) as i32 - (1 << (pw - 1))
@@ -84,8 +83,11 @@ mod tests {
                         let hi = (lo + l).min(k);
                         acc = simd_dotp(acc, &xs[lo..hi], &ws[lo..hi], px, pw);
                     }
-                    assert_eq!(acc as i64, dotp_oracle(&xs, &ws),
-                               "px={px} pw={pw} k={k}");
+                    assert_eq!(
+                        acc as i64,
+                        dotp_oracle(&xs, &ws),
+                        "px={px} pw={pw} k={k}"
+                    );
                 }
             }
         }

@@ -13,9 +13,9 @@
 //!   [`crate::deploy::DeployedModel`] sample-by-sample: PACT activation
 //!   quantization, per-sub-convolution integer conv/FC (uint activations
 //!   x two's-complement weights), folded BN epilogue, residual adds,
-//!   pooling.  `exec::run_batch` delegates to the compile-once
-//!   [`crate::engine`]; `exec::run_sample` stays the bit-exactness
-//!   ground truth for every engine backend;
+//!   pooling.  `exec::run_sample` is the bit-exactness ground truth for
+//!   every engine backend; batch execution lives in the compile-once
+//!   [`crate::engine`] (hold an `ExecPlan`, call its `run_batch`);
 //! * [`cost`] — cycle and energy accounting per layer/sub-conv using the
 //!   [`crate::energy::CostLut`] MAC table plus load/store and
 //!   sub-convolution scheduling overheads — the refinement of Eq. (8)
@@ -35,4 +35,4 @@ pub mod regfile;
 pub mod memory;
 
 pub use cost::{InferenceCost, LayerCost};
-pub use exec::{run_batch, run_sample};
+pub use exec::run_sample;

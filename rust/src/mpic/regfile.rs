@@ -93,8 +93,11 @@ mod tests {
                     let wr = pack_weights(&ws, px, pw);
                     for lane in 0..n {
                         assert_eq!(decode_act(xr, lane, px, pw), xs[lane]);
-                        assert_eq!(decode_weight(wr, lane, px, pw), ws[lane],
-                                   "px={px} pw={pw} lane={lane}");
+                        assert_eq!(
+                            decode_weight(wr, lane, px, pw),
+                            ws[lane],
+                            "px={px} pw={pw} lane={lane}"
+                        );
                     }
                 }
             }

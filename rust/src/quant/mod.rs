@@ -10,6 +10,10 @@
 //! * [`pack_subbyte`] / [`unpack_subbyte`] — 2/4-bit weight packing into
 //!   bytes, i.e. the non-volatile-memory layout whose footprint Eq. (7)
 //!   optimizes (and the MPIC simulator's load granularity);
+//! * [`pack_acts_subbyte`] / [`unpack_acts_subbyte`] /
+//!   [`quantize_acts_pact_packed`] — the unsigned activation mirror of
+//!   the weight packing, defining the engine's packed activation plane
+//!   (the in-RAM layout MPIC's `sdotp` activation registers load from);
 //! * [`Assignment`] — a concrete per-channel bit-width assignment
 //!   extracted from NAS parameters by row-wise argmax, plus the one-hot
 //!   encoding fed back into the hard-assignment HLO graphs.
@@ -187,6 +191,58 @@ pub fn pack_subbyte(values: &[i32], bits: u32) -> Vec<u8> {
     out
 }
 
+/// Pack **unsigned** activation codes of width `bits` (2/4/8) into
+/// bytes, little-endian within a byte — the activation mirror of
+/// [`pack_subbyte`].  The engine's packed activation plane uses this
+/// layout per pixel (its in-arena quantizer writes it directly without
+/// the `Vec` detour; the bit-exactness contract against
+/// `mpic::exec::run_sample` in `tests/engine_equivalence.rs` is what
+/// keeps the two in lockstep).  Codes must fit `bits` (`< 2^bits`).
+pub fn pack_acts_subbyte(codes: &[u32], bits: u32) -> Vec<u8> {
+    assert!(matches!(bits, 2 | 4 | 8));
+    let per_byte = (8 / bits) as usize;
+    let mask = (1u32 << bits) - 1;
+    let mut out = vec![0u8; codes.len().div_ceil(per_byte)];
+    for (i, &c) in codes.iter().enumerate() {
+        debug_assert!(c <= mask, "code {c} exceeds {bits}-bit range");
+        out[i / per_byte] |= ((c & mask) as u8) << ((i % per_byte) as u32 * bits);
+    }
+    out
+}
+
+/// Inverse of [`pack_acts_subbyte`], producing `n` unsigned codes.
+pub fn unpack_acts_subbyte(bytes: &[u8], bits: u32, n: usize) -> Vec<u32> {
+    assert!(matches!(bits, 2 | 4 | 8));
+    let per_byte = (8 / bits) as usize;
+    let mask = ((1u32 << bits) - 1) as u8;
+    (0..n)
+        .map(|i| {
+            let b = bytes[i / per_byte];
+            ((b >> ((i % per_byte) as u32 * bits)) & mask) as u32
+        })
+        .collect()
+}
+
+/// [`quantize_acts_pact`] fused with [`pack_acts_subbyte`]: quantize a
+/// buffer and emit the packed sub-byte codes directly.  This is the
+/// standalone reference of what the engine's per-layer in-arena plane
+/// quantizer computes for one byte-aligned run (a pixel, or a whole FC
+/// input); callers outside the engine use it to produce plane-layout
+/// codes without an `ExecPlan`.
+pub fn quantize_acts_pact_packed(x: &[f32], alpha: f32, bits: u32) -> (Vec<u8>, f32) {
+    assert!(matches!(bits, 2 | 4 | 8));
+    let levels = ((1u32 << bits) - 1) as f32;
+    let a = alpha.max(1e-6);
+    let eps = a / levels;
+    let per_byte = (8 / bits) as usize;
+    let mut out = vec![0u8; x.len().div_ceil(per_byte)];
+    for (i, &v) in x.iter().enumerate() {
+        let code = ((v.clamp(0.0, a)) / eps).round_ties_even() as u32;
+        out[i / per_byte] |= (code as u8) << ((i % per_byte) as u32 * bits);
+    }
+    (out, eps)
+}
+
 /// Inverse of [`pack_subbyte`] (sign-extending), producing `n` values.
 pub fn unpack_subbyte(bytes: &[u8], bits: u32, n: usize) -> Vec<i32> {
     assert!(matches!(bits, 2 | 4 | 8));
@@ -264,6 +320,36 @@ mod tests {
             assert_eq!(packed.len(), (97 * bits as usize).div_ceil(8));
             let back = unpack_subbyte(&packed, bits, vals.len());
             assert_eq!(back, vals, "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn act_pack_unpack_roundtrip_all_widths() {
+        let mut rng = Pcg32::seeded(7);
+        for bits in [2u32, 4, 8] {
+            let hi = (1u32 << bits) - 1;
+            // include both extremes: zero and the PACT clip boundary
+            let mut codes: Vec<u32> = (0..101).map(|_| rng.below(hi + 1)).collect();
+            codes[0] = hi;
+            codes[100] = 0;
+            let packed = pack_acts_subbyte(&codes, bits);
+            assert_eq!(packed.len(), (101 * bits as usize).div_ceil(8));
+            let back = unpack_acts_subbyte(&packed, bits, codes.len());
+            assert_eq!(back, codes, "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn packed_act_quant_matches_unpacked() {
+        // the fused quantize+pack path is the same function as
+        // quantize_acts_pact followed by pack_acts_subbyte
+        let mut rng = Pcg32::seeded(9);
+        for bits in [2u32, 4, 8] {
+            let x: Vec<f32> = (0..57).map(|_| rng.normal_ms(0.5, 1.0)).collect();
+            let (q, eps) = quantize_acts_pact(&x, 1.5, bits);
+            let (packed, eps2) = quantize_acts_pact_packed(&x, 1.5, bits);
+            assert_eq!(eps, eps2);
+            assert_eq!(packed, pack_acts_subbyte(&q, bits), "bits={bits}");
         }
     }
 

@@ -15,8 +15,12 @@ pub struct Tensor {
 
 impl Tensor {
     pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
-        assert_eq!(shape.iter().product::<usize>(), data.len(),
-                   "shape {shape:?} vs data len {}", data.len());
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} vs data len {}",
+            data.len()
+        );
         Tensor { shape, data }
     }
 
@@ -104,8 +108,7 @@ mod literal {
                 // 0-d scalar: reshape to rank-0
                 Ok(lit.reshape(&[])?)
             } else {
-                let dims: Vec<i64> =
-                    self.shape().iter().map(|&d| d as i64).collect();
+                let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
                 Ok(lit.reshape(&dims)?)
             }
         }
@@ -113,8 +116,7 @@ mod literal {
         /// From an `xla::Literal` (f32 or convertible).
         pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
             let shape = lit.array_shape()?;
-            let dims: Vec<usize> =
-                shape.dims().iter().map(|&d| d as usize).collect();
+            let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
             let data: Vec<f32> = match shape.ty() {
                 xla::ElementType::F32 => lit.to_vec::<f32>()?,
                 xla::ElementType::S32 => lit

@@ -19,10 +19,15 @@ impl Series {
 }
 
 /// Render series into a `width` x `height` character grid with axes.
-pub fn scatter(title: &str, xlabel: &str, ylabel: &str,
-               series: &[Series], width: usize, height: usize) -> String {
-    let pts: Vec<(f32, f32)> =
-        series.iter().flat_map(|s| s.points.iter().cloned()).collect();
+pub fn scatter(
+    title: &str,
+    xlabel: &str,
+    ylabel: &str,
+    series: &[Series],
+    width: usize,
+    height: usize,
+) -> String {
+    let pts: Vec<(f32, f32)> = series.iter().flat_map(|s| s.points.iter().cloned()).collect();
     if pts.is_empty() {
         return format!("{title}: (no points)\n");
     }
@@ -61,8 +66,13 @@ pub fn scatter(title: &str, xlabel: &str, ylabel: &str,
         out.push('\n');
     }
     out.push_str(&format!("  {:>8} +{}\n", "", "-".repeat(width)));
-    out.push_str(&format!("  {:>10}{:<w$.3}{:>.3}\n", "", xmin, xmax,
-                          w = width - 5));
+    out.push_str(&format!(
+        "  {:>10}{:<w$.3}{:>.3}\n",
+        "",
+        xmin,
+        xmax,
+        w = width - 5
+    ));
     out.push_str(&format!("  x: {xlabel}   "));
     for s in series {
         out.push_str(&format!("[{}] {}  ", s.marker, s.name));

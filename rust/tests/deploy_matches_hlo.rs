@@ -10,6 +10,7 @@ use std::path::Path;
 
 use cwmix::data::{make_dataset, Split};
 use cwmix::deploy;
+use cwmix::engine::{ExecPlan, PackedBackend};
 use cwmix::nas::{Mode, SearchConfig, Target, Trainer};
 use cwmix::quant::Assignment;
 use cwmix::runtime::Runtime;
@@ -84,10 +85,8 @@ fn deployed_costs_match_energy_model() {
     let tr = Trainer::new(&rt, cfg).unwrap();
     let a = stripy(&tr);
     let d = deploy::build(&tr.manifest, &tr.params_map(), &tr.bn_map(), &a).unwrap();
-    let ds = make_dataset("kws", Split::Test, 1, 0);
-    let feat = tr.manifest.feat_len();
-    let (_, cost) =
-        cwmix::mpic::run_batch(&d, &ds.x[0..feat], feat, &tr.manifest.lut).unwrap();
+    let plan = ExecPlan::compile(&d, &tr.manifest.lut, &PackedBackend).unwrap();
+    let cost = plan.cost();
     let want = cwmix::energy::model_energy_pj(&tr.manifest.geom(), &a, &tr.manifest.lut);
     let got = cost.mac_energy_pj();
     assert!(

@@ -6,10 +6,14 @@
 //!
 //! * `packed` is **bit-identical** to `reference` (and both to the
 //!   scalar oracle `mpic::exec::run_sample`) across all nine
-//!   `(p_x, p_w) ∈ {2,4,8}²` fixed combos;
+//!   `(p_x, p_w) ∈ {2,4,8}²` fixed combos — on the FC-only topology
+//!   *and* on a conv/depthwise topology, so every cell of the SWAR
+//!   kernel table runs against ragged K values (conv K = 27/9/...);
 //! * the same bit-exactness on all four benchmark topologies under an
 //!   adversarially striped per-channel assignment (residual joins,
 //!   depthwise chains, FC-only);
+//! * inputs saturating the PACT clip (all codes at the `2^p_x - 1`
+//!   boundary) stay bit-exact through the packed plane;
 //! * the plan's compile-time cost equals the oracle's per-sample
 //!   accounting and the Eq. (8) energy model;
 //! * `run_batch` reports malformed batches as errors (no panic) and is
@@ -80,30 +84,54 @@ fn assert_costs_equal(
     }
 }
 
-#[test]
-fn all_nine_precision_combos_bit_exact_ad() {
-    let manifest = builtin_manifest("ad").unwrap();
-    let ds = make_dataset("ad", Split::Test, 4, 1);
-    let n = 2;
+/// All nine `(p_x, p_w)` combos on `bench`, `n` samples per combo.
+fn check_all_nine_combos(bench: &str, n: usize) {
+    let manifest = builtin_manifest(bench).unwrap();
+    let ds = make_dataset(bench, Split::Test, n.max(2), 1);
     for xb in [2u32, 4, 8] {
         for wb in [2u32, 4, 8] {
-            let a = Assignment::fixed(
-                &manifest.qnames(),
-                &manifest.qcouts(),
-                wb,
-                xb,
-            );
+            let a = Assignment::fixed(&manifest.qnames(), &manifest.qcouts(), wb, xb);
             let model = build(&manifest, &a);
             let (want, oc) = oracle_run(&model, &manifest, &ds.x, n);
-            let (ref_out, rc) =
-                engine_run(&model, &manifest, &ReferenceBackend, &ds.x, n);
-            let (packed_out, pc) =
-                engine_run(&model, &manifest, &PackedBackend, &ds.x, n);
-            assert_eq!(ref_out, want, "reference vs oracle w{wb}x{xb}");
-            assert_eq!(packed_out, want, "packed vs oracle w{wb}x{xb}");
-            assert_costs_equal("ad", &rc, &oc);
-            assert_costs_equal("ad", &pc, &oc);
+            let (ref_out, rc) = engine_run(&model, &manifest, &ReferenceBackend, &ds.x, n);
+            let (packed_out, pc) = engine_run(&model, &manifest, &PackedBackend, &ds.x, n);
+            assert_eq!(ref_out, want, "{bench}: reference vs oracle w{wb}x{xb}");
+            assert_eq!(packed_out, want, "{bench}: packed vs oracle w{wb}x{xb}");
+            assert_costs_equal(bench, &rc, &oc);
+            assert_costs_equal(bench, &pc, &oc);
         }
+    }
+}
+
+#[test]
+fn all_nine_precision_combos_bit_exact_ad() {
+    // FC-only topology: the dot_wide kernel row of the table
+    check_all_nine_combos("ad", 2);
+}
+
+#[test]
+fn all_nine_precision_combos_bit_exact_kws() {
+    // conv + depthwise chains: every SWAR cell sees ragged conv K
+    // values (tail lanes of the packed registers) and the gather paths
+    check_all_nine_combos("kws", 1);
+}
+
+#[test]
+fn pact_clip_boundary_bit_exact() {
+    // inputs far above alpha drive every activation code to the clip
+    // boundary 2^p_x - 1 — the extreme-code path through the packed
+    // plane must match the oracle bit for bit
+    let manifest = builtin_manifest("ic").unwrap();
+    let a = stripy(&manifest);
+    let model = build(&manifest, &a);
+    let feat = manifest.feat_len();
+    let hot = vec![1.0e6f32; feat];
+    let (want, _) = cwmix::mpic::run_sample(&model, &hot, &manifest.lut).unwrap();
+    for backend in [&ReferenceBackend as &dyn KernelBackend, &PackedBackend] {
+        let plan = ExecPlan::compile(&model, &manifest.lut, backend).unwrap();
+        let mut arena = plan.arena();
+        let got = plan.run_sample(&mut arena, &hot).unwrap();
+        assert_eq!(got, want, "{} at clip boundary", backend.name());
     }
 }
 
@@ -116,10 +144,8 @@ fn all_four_geometries_bit_exact_striped() {
         let ds = make_dataset(bench, Split::Test, 2, 3);
         let n = 1;
         let (want, oc) = oracle_run(&model, &manifest, &ds.x, n);
-        let (ref_out, rc) =
-            engine_run(&model, &manifest, &ReferenceBackend, &ds.x, n);
-        let (packed_out, pc) =
-            engine_run(&model, &manifest, &PackedBackend, &ds.x, n);
+        let (ref_out, rc) = engine_run(&model, &manifest, &ReferenceBackend, &ds.x, n);
+        let (packed_out, pc) = engine_run(&model, &manifest, &PackedBackend, &ds.x, n);
         assert_eq!(ref_out, want, "{bench}: reference vs oracle");
         assert_eq!(packed_out, want, "{bench}: packed vs oracle");
         assert_costs_equal(bench, &rc, &oc);
@@ -135,15 +161,12 @@ fn plan_cost_matches_energy_model() {
     let manifest = builtin_manifest("kws").unwrap();
     let a = stripy(&manifest);
     let model = build(&manifest, &a);
-    let plan =
-        ExecPlan::compile(&model, &manifest.lut, &PackedBackend).unwrap();
+    let plan = ExecPlan::compile(&model, &manifest.lut, &PackedBackend).unwrap();
     let cost = plan.cost();
-    let want =
-        cwmix::energy::model_energy_pj(&manifest.geom(), &a, &manifest.lut);
+    let want = cwmix::energy::model_energy_pj(&manifest.geom(), &a, &manifest.lut);
     let got = cost.mac_energy_pj();
     assert!((got - want).abs() / want < 1e-6, "sim {got} vs Eq.8 {want}");
-    let ops: u64 =
-        manifest.geom().qlayers.iter().map(|l| l.ops as u64).sum();
+    let ops: u64 = manifest.geom().qlayers.iter().map(|l| l.ops as u64).sum();
     assert_eq!(cost.total_macs(), ops);
 }
 
@@ -152,24 +175,13 @@ fn run_batch_rejects_ragged_input() {
     let manifest = builtin_manifest("ad").unwrap();
     let a = Assignment::fixed(&manifest.qnames(), &manifest.qcouts(), 8, 8);
     let model = build(&manifest, &a);
-    let plan =
-        ExecPlan::compile(&model, &manifest.lut, &PackedBackend).unwrap();
+    let plan = ExecPlan::compile(&model, &manifest.lut, &PackedBackend).unwrap();
     let feat = manifest.feat_len();
     // not a whole number of samples: error, not panic
     let err = plan.run_batch(&vec![0.0; feat + 1], feat).unwrap_err();
     assert!(err.to_string().contains("whole number"), "{err}");
     // wrong feature length
     assert!(plan.run_batch(&vec![0.0; feat], feat - 1).is_err());
-    // the seed-compatible wrapper reports the same error instead of the
-    // old assert_eq! panic
-    let err = cwmix::mpic::run_batch(
-        &model,
-        &vec![0.0; feat + 1],
-        feat,
-        &manifest.lut,
-    )
-    .unwrap_err();
-    assert!(err.to_string().contains("whole number"), "{err}");
 }
 
 #[test]
@@ -177,8 +189,7 @@ fn run_batch_thread_count_invariant() {
     let manifest = builtin_manifest("ad").unwrap();
     let a = stripy(&manifest);
     let model = build(&manifest, &a);
-    let plan =
-        ExecPlan::compile(&model, &manifest.lut, &PackedBackend).unwrap();
+    let plan = ExecPlan::compile(&model, &manifest.lut, &PackedBackend).unwrap();
     let feat = manifest.feat_len();
     let ds = make_dataset("ad", Split::Test, 16, 5);
     let (seq, c1) = plan.run_batch_threads(&ds.x, feat, 1).unwrap();
@@ -214,7 +225,6 @@ fn packed_weights_match_flash_footprint() {
     let manifest = builtin_manifest("ic").unwrap();
     let a = stripy(&manifest);
     let model = build(&manifest, &a);
-    let plan =
-        ExecPlan::compile(&model, &manifest.lut, &PackedBackend).unwrap();
+    let plan = ExecPlan::compile(&model, &manifest.lut, &PackedBackend).unwrap();
     assert_eq!(plan.weight_bytes(), model.packed_bytes());
 }
