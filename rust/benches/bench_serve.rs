@@ -1,0 +1,245 @@
+//! Serving-layer load generator: closed-loop clients against an
+//! in-process `cwmix serve` instance, micro-batching ON vs OFF.
+//!
+//! Starts the server twice on an ephemeral port with the same model and
+//! drives it with N concurrent keep-alive HTTP clients, each sending
+//! its next request as soon as the previous reply lands (closed loop):
+//!
+//! * **batch1** — `max_batch = 1`: every request is its own engine
+//!   call through the single batcher worker (the no-coalescing
+//!   baseline);
+//! * **micro_batch** — `max_batch = 16, max_wait_us = 1000`: pending
+//!   requests from unrelated clients coalesce into one `run_samples`
+//!   call that fans out across engine threads.
+//!
+//! Per config it reports client-observed throughput, p50/p99 latency
+//! and the mean executed batch size (from the per-reply `batch` field),
+//! and writes a machine-readable `BENCH_serve.json` next to
+//! `BENCH_engine.json` so the serving trajectory is versioned alongside
+//! the engine's.  Under a concurrency of 16 the micro-batch config
+//! should sustain batches ≥ 4 and beat batch1 throughput on any
+//! multi-core machine.
+//!
+//! ```bash
+//! cargo bench --bench bench_serve
+//! CWMIX_BENCH_SERVE_CONC=32 CWMIX_BENCH_SERVE_REQS=200 \
+//!     cargo bench --bench bench_serve
+//! ```
+
+use std::net::SocketAddr;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+use cwmix::data::{make_dataset, Split};
+use cwmix::minijson::Json;
+use cwmix::serve::client::{infer_body, output_of, Conn};
+use cwmix::serve::{
+    serve, BatchPolicy, ModelRegistry, RegistryConfig, ServeConfig,
+};
+
+/// The model under load (conv-heavy enough for batching to matter,
+/// light enough for CI).
+const BENCH: &str = "kws";
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+struct LoadStats {
+    throughput_rps: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+    mean_batch: f64,
+    max_batch_seen: usize,
+}
+
+/// Drive `clients` closed-loop clients x `reqs` requests each.
+fn run_load(
+    addr: SocketAddr,
+    body: Arc<String>,
+    want: Arc<Vec<f32>>,
+    clients: usize,
+    reqs: usize,
+) -> anyhow::Result<LoadStats> {
+    let t0 = Instant::now();
+    let mut all: Vec<(f64, usize)> = Vec::with_capacity(clients * reqs);
+    let results: Vec<anyhow::Result<Vec<(f64, usize)>>> =
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..clients)
+                .map(|_| {
+                    let body = Arc::clone(&body);
+                    let want = Arc::clone(&want);
+                    scope.spawn(move || -> anyhow::Result<Vec<(f64, usize)>> {
+                        let mut conn = Conn::connect(addr)?;
+                        let mut lats = Vec::with_capacity(reqs);
+                        for _ in 0..reqs {
+                            let t = Instant::now();
+                            let resp =
+                                conn.post(&format!("/v1/infer/{BENCH}"), &body)?;
+                            let ms = t.elapsed().as_secs_f64() * 1e3;
+                            anyhow::ensure!(
+                                resp.status == 200,
+                                "infer -> {}: {}",
+                                resp.status,
+                                resp.body.dumps()
+                            );
+                            // correctness under load: bit-identical
+                            anyhow::ensure!(
+                                output_of(&resp.body)? == *want,
+                                "served output diverged under load"
+                            );
+                            let batch =
+                                resp.body.get("batch")?.as_f64()? as usize;
+                            lats.push((ms, batch));
+                        }
+                        Ok(lats)
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("client thread panicked"))
+                .collect()
+        });
+    for r in results {
+        all.extend(r?);
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let n = all.len();
+    anyhow::ensure!(n > 0, "no requests completed");
+    let mut lat: Vec<f64> = all.iter().map(|&(ms, _)| ms).collect();
+    lat.sort_unstable_by(f64::total_cmp);
+    let at = |p: f64| lat[((n - 1) as f64 * p).round() as usize];
+    let mean_batch =
+        all.iter().map(|&(_, b)| b as f64).sum::<f64>() / n as f64;
+    let max_batch_seen = all.iter().map(|&(_, b)| b).max().unwrap_or(0);
+    Ok(LoadStats {
+        throughput_rps: n as f64 / wall_s,
+        p50_ms: at(0.50),
+        p99_ms: at(0.99),
+        mean_batch,
+        max_batch_seen,
+    })
+}
+
+/// One server lifecycle under `policy`, loaded, then shut down cleanly.
+fn run_config(
+    policy: BatchPolicy,
+    body: &Arc<String>,
+    want: &Arc<Vec<f32>>,
+    clients: usize,
+    reqs: usize,
+) -> anyhow::Result<LoadStats> {
+    let reg_cfg = RegistryConfig {
+        benches: vec![BENCH.to_string()],
+        policy,
+        ..RegistryConfig::default()
+    };
+    let registry = Arc::new(ModelRegistry::build(&reg_cfg)?);
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        max_conns: clients + 8,
+        ..ServeConfig::default()
+    };
+    let server = serve(registry, cfg)?;
+    let stats = run_load(server.addr(), Arc::clone(body), Arc::clone(want), clients, reqs);
+    server.stop()?;
+    stats
+}
+
+fn stats_json(s: &LoadStats, policy: &BatchPolicy) -> Json {
+    Json::obj(vec![
+        ("max_batch", Json::num(policy.max_batch as f64)),
+        ("max_wait_us", Json::num(policy.max_wait_us as f64)),
+        ("throughput_rps", Json::num(s.throughput_rps)),
+        ("p50_ms", Json::num(s.p50_ms)),
+        ("p99_ms", Json::num(s.p99_ms)),
+        ("mean_batch", Json::num(s.mean_batch)),
+        ("max_batch_seen", Json::num(s.max_batch_seen as f64)),
+    ])
+}
+
+fn out_path() -> String {
+    if let Ok(p) = std::env::var("CWMIX_BENCH_SERVE_JSON") {
+        return p;
+    }
+    if Path::new("../ROADMAP.md").exists() {
+        "../BENCH_serve.json".to_string()
+    } else {
+        "BENCH_serve.json".to_string()
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let clients = env_usize("CWMIX_BENCH_SERVE_CONC", 16);
+    let reqs = env_usize("CWMIX_BENCH_SERVE_REQS", 100);
+    println!(
+        "=== serve load generator: {BENCH}, {clients} closed-loop clients x \
+         {reqs} reqs ==="
+    );
+
+    // one deterministic sample + its expected output, shared by every
+    // client (the server compiles the identical default registry)
+    let probe_cfg = RegistryConfig {
+        benches: vec![BENCH.to_string()],
+        ..RegistryConfig::default()
+    };
+    let probe = ModelRegistry::build(&probe_cfg)?;
+    let plan = probe.entries().next().unwrap().plan();
+    let feat = plan.feat();
+    let ds = make_dataset(BENCH, Split::Test, 1, 0);
+    let input = &ds.x[..feat];
+    let mut arena = plan.arena();
+    let want = Arc::new(plan.run_sample(&mut arena, input)?);
+    let body = Arc::new(infer_body(input));
+    drop(probe);
+
+    let batch1_policy = BatchPolicy { max_batch: 1, ..BatchPolicy::default() };
+    let micro_policy = BatchPolicy {
+        max_batch: 16,
+        max_wait_us: 1_000,
+        ..BatchPolicy::default()
+    };
+
+    let batch1 = run_config(batch1_policy.clone(), &body, &want, clients, reqs)?;
+    let micro = run_config(micro_policy.clone(), &body, &want, clients, reqs)?;
+
+    let speedup = micro.throughput_rps / batch1.throughput_rps;
+    println!(
+        "    batch1      {:>8.1} req/s  p50 {:>6.2} ms  p99 {:>6.2} ms  \
+         mean batch {:>5.2}",
+        batch1.throughput_rps, batch1.p50_ms, batch1.p99_ms, batch1.mean_batch
+    );
+    println!(
+        "    micro-batch {:>8.1} req/s  p50 {:>6.2} ms  p99 {:>6.2} ms  \
+         mean batch {:>5.2} (max {})",
+        micro.throughput_rps,
+        micro.p50_ms,
+        micro.p99_ms,
+        micro.mean_batch,
+        micro.max_batch_seen
+    );
+    println!("    micro-batching throughput x{speedup:.2} vs batch1");
+    if micro.mean_batch < 4.0 {
+        println!(
+            "    note: mean batch {:.2} < 4 — machine too fast or too few \
+             clients for sustained coalescing",
+            micro.mean_batch
+        );
+    }
+
+    let report = Json::obj(vec![
+        ("version", Json::num(1.0)),
+        ("bench", Json::str(BENCH)),
+        ("concurrency", Json::num(clients as f64)),
+        ("reqs_per_client", Json::num(reqs as f64)),
+        ("batch1", stats_json(&batch1, &batch1_policy)),
+        ("micro_batch", stats_json(&micro, &micro_policy)),
+        ("speedup_microbatch_vs_batch1", Json::num(speedup)),
+    ]);
+    let path = out_path();
+    std::fs::write(&path, report.pretty())?;
+    println!("wrote {path}");
+    Ok(())
+}

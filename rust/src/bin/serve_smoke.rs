@@ -1,0 +1,101 @@
+//! CI smoke client for `cwmix serve`.
+//!
+//! ```bash
+//! cwmix serve --addr 127.0.0.1:0 &          # prints "listening on ..."
+//! cargo run --release --bin serve_smoke -- 127.0.0.1:<port>
+//! ```
+//!
+//! Round-trips one `POST /v1/infer/<bench>` request per served model
+//! and asserts the reply is **bit-identical** to a locally compiled
+//! `ExecPlan::run_sample` on the same deterministic input — the same
+//! builtin-zoo + synthetic-state + stripy-assignment construction the
+//! server's default registry uses, so expected outputs need no fixture
+//! files.  Then checks `/metrics` accounting and posts
+//! `/admin/shutdown`; the harness asserts the server process itself
+//! exits 0 (clean shutdown).
+//!
+//! Exit code 0 = every check passed.
+
+use std::net::{SocketAddr, ToSocketAddrs};
+
+use anyhow::{bail, Context, Result};
+
+use cwmix::data::{make_dataset, Split};
+use cwmix::serve::client::{infer_body, output_of, Conn};
+use cwmix::serve::{ModelRegistry, RegistryConfig};
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let [addr] = args.as_slice() else {
+        bail!("usage: serve_smoke <host:port>");
+    };
+    let addr: SocketAddr = addr
+        .to_socket_addrs()
+        .with_context(|| format!("resolving {addr}"))?
+        .next()
+        .context("no address")?;
+
+    let mut conn = Conn::connect(addr)?;
+    let models = conn.get("/v1/models")?;
+    if models.status != 200 {
+        bail!("GET /v1/models -> {}", models.status);
+    }
+    let served: Vec<String> = models
+        .body
+        .get("models")?
+        .as_arr()?
+        .iter()
+        .map(|m| m.get("name").and_then(|n| n.as_str().map(str::to_string)))
+        .collect::<Result<_>>()?;
+    if served.is_empty() {
+        bail!("server lists no models");
+    }
+    println!("serve_smoke: {} model(s): {}", served.len(), served.join(", "));
+
+    // the server's default registry construction, replicated locally as
+    // the expected-output oracle (no batcher needed: run_sample only)
+    let reg_cfg = RegistryConfig { benches: served.clone(), ..RegistryConfig::default() };
+    let local = ModelRegistry::build(&reg_cfg)?;
+
+    for bench in &served {
+        let entry = local.get(bench).context("local registry missing bench")?;
+        let plan = entry.plan();
+        let feat = plan.feat();
+        let ds = make_dataset(bench, Split::Test, 1, 0);
+        let input = &ds.x[..feat];
+        let mut arena = plan.arena();
+        let want = plan.run_sample(&mut arena, input)?;
+
+        let resp = conn.post(&format!("/v1/infer/{bench}"), &infer_body(input))?;
+        if resp.status != 200 {
+            bail!("POST /v1/infer/{bench} -> {}: {}", resp.status, resp.body.dumps());
+        }
+        let got = output_of(&resp.body)?;
+        if got != want {
+            bail!("{bench}: served output diverged from ExecPlan::run_sample");
+        }
+        println!("  {bench}: {} outputs bit-identical", got.len());
+    }
+
+    // error path must answer, not hang
+    let not_found = conn.post("/v1/infer/nonesuch", &infer_body(&[0.0]))?;
+    if not_found.status != 404 {
+        bail!("unknown model -> {} (want 404)", not_found.status);
+    }
+
+    let metrics = conn.get("/metrics")?;
+    if metrics.status != 200 {
+        bail!("GET /metrics -> {}", metrics.status);
+    }
+    let total = metrics.body.get("requests")?.as_f64()?;
+    if total < served.len() as f64 {
+        bail!("metrics report {total} requests after {} infers", served.len());
+    }
+
+    let bye = conn.post("/admin/shutdown", "")?;
+    if bye.status != 200 {
+        bail!("POST /admin/shutdown -> {}", bye.status);
+    }
+    println!("serve_smoke: all checks passed, shutdown requested");
+    Ok(())
+}

@@ -6,6 +6,7 @@
 //! cwmix baseline --bench ic --wbits 4 --xbits 8 [--quick]
 //! cwmix deploy   --bench ic [--quick]           # train, deploy, verify, simulate
 //! cwmix simulate --bench ic --wbits 8 --xbits 8 # MPIC cost model, no training
+//! cwmix serve    --benches ic,kws [--addr 127.0.0.1:8080]  # resident server
 //! cwmix report   [--dir results]                # Fig.3 panels + Fig.4 dump
 //! cwmix lut                                     # print the C(px,pw) tables
 //! ```
@@ -102,6 +103,16 @@ COMMANDS
            §III-C transform + engine cost model on a fixed assignment.
            Pure Rust: uses the builtin model zoo when artifacts/ is
            absent; no training, no xla feature needed.
+  serve    [--benches ic,kws,vww,ad] [--addr 127.0.0.1:8080]
+           [--backend packed|reference] [--assignment stripy|wNxM]
+           [--max-batch 8] [--max-wait-us 2000] [--queue-cap 256]
+           [--threads N] [--artifacts artifacts]
+           Resident multi-model inference server: compiles one ExecPlan
+           per bench at startup, micro-batches concurrent POST
+           /v1/infer/<bench> requests, exposes GET /v1/models and
+           GET /metrics; POST /admin/shutdown exits cleanly.  Pure
+           Rust, builtin zoo.  --addr with port 0 picks a free port
+           (printed on stdout).
   report   [--dir results]
            Render every stored sweep as a Fig.3 panel + headline savings.
   lut      Print the MPIC C(p_x, p_w) energy/latency tables.
@@ -128,6 +139,7 @@ pub fn dispatch(args: &[String]) -> Result<()> {
         "baseline" => cmd_baseline(&flags),
         "deploy" => cmd_deploy(&flags),
         "simulate" => cmd_simulate(&flags),
+        "serve" => cmd_serve(&flags),
         "report" => cmd_report(&flags),
         other => bail!("unknown command {other}; try `cwmix help`"),
     }
@@ -365,6 +377,62 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
         deployed.n_subconvs(),
     );
     Ok(())
+}
+
+/// Resident multi-model inference server (pure Rust, builtin zoo).
+/// Blocks until `POST /admin/shutdown`, then drains and exits cleanly.
+fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
+    use crate::serve::{self, BatchPolicy, ModelRegistry, RegistryConfig, ServeConfig};
+    use std::sync::Arc;
+
+    let mut policy = BatchPolicy::default();
+    if let Some(v) = flags.get("max-batch") {
+        policy.max_batch = v.parse().map_err(|e| anyhow!("bad --max-batch: {e}"))?;
+    }
+    if let Some(v) = flags.get("max-wait-us") {
+        policy.max_wait_us = v.parse().map_err(|e| anyhow!("bad --max-wait-us: {e}"))?;
+    }
+    if let Some(v) = flags.get("queue-cap") {
+        policy.queue_cap = v.parse().map_err(|e| anyhow!("bad --queue-cap: {e}"))?;
+    }
+    if let Some(v) = flags.get("threads") {
+        policy.threads = v.parse().map_err(|e| anyhow!("bad --threads: {e}"))?;
+    }
+    let mut reg_cfg = RegistryConfig {
+        artifacts: artifacts_dir(flags),
+        policy,
+        ..RegistryConfig::default()
+    };
+    if let Some(b) = flags.get("benches") {
+        reg_cfg.benches = b.split(',').map(|s| s.trim().to_string()).collect();
+    }
+    if let Some(b) = flags.get("backend") {
+        reg_cfg.backend = b.clone();
+    }
+    if let Some(a) = flags.get("assignment") {
+        reg_cfg.assignment = a.clone();
+    }
+    let registry = Arc::new(ModelRegistry::build(&reg_cfg)?);
+    for e in registry.entries() {
+        let cost = e.plan().cost();
+        println!(
+            "model {:<4} backend {:<9} feat {:>5} out {:>4} est {:.1} us/inf",
+            e.name(),
+            e.plan().backend_name(),
+            e.plan().feat(),
+            e.plan().out_len(),
+            cost.latency_us(),
+        );
+    }
+
+    let mut cfg = ServeConfig::default();
+    if let Some(a) = flags.get("addr") {
+        cfg.addr = a.clone();
+    }
+    let server = serve::serve(registry, cfg)?;
+    // machine-parseable: the smoke harness greps this line for the port
+    println!("listening on {}", server.addr());
+    server.join()
 }
 
 fn cmd_report(flags: &HashMap<String, String>) -> Result<()> {

@@ -437,6 +437,11 @@ impl ExecPlan {
         self.feat
     }
 
+    /// Per-sample output length (natural channel order).
+    pub fn out_len(&self) -> usize {
+        self.out_len
+    }
+
     /// The precomputed cost of ONE inference (input-independent).
     pub fn cost(&self) -> &InferenceCost {
         &self.cost
@@ -570,45 +575,66 @@ impl ExecPlan {
                 xs.len()
             );
         }
-        let n = xs.len() / feat;
-        let mut outs = Vec::with_capacity(n);
+        let samples: Vec<&[f32]> = xs.chunks_exact(feat).collect();
+        let outs = self.run_samples(&samples, threads)?;
+        Ok((outs, self.cost.clone()))
+    }
+
+    /// Run an explicit list of samples (not necessarily contiguous in
+    /// memory) across worker threads — the execution seam the serving
+    /// micro-batcher uses: coalesced requests each own their input
+    /// buffer, and this runs them as one batch without first copying
+    /// them into a single contiguous slab.
+    ///
+    /// Outputs are returned in input order and are bit-identical to
+    /// calling [`Self::run_sample`] per sample (the same code path runs
+    /// under every worker).
+    pub fn run_samples(
+        &self,
+        samples: &[&[f32]],
+        threads: usize,
+    ) -> Result<Vec<Vec<f32>>> {
+        let n = samples.len();
+        if n == 0 {
+            return Ok(Vec::new());
+        }
         if threads <= 1 || n <= 1 {
             let mut arena = self.arena();
-            for i in 0..n {
-                outs.push(self.run_sample(&mut arena, &xs[i * feat..(i + 1) * feat])?);
+            let mut outs = Vec::with_capacity(n);
+            for s in samples {
+                outs.push(self.run_sample(&mut arena, s)?);
             }
-        } else {
-            let threads = threads.min(n);
-            let chunk = n.div_ceil(threads);
-            let ranges: Vec<(usize, usize)> = (0..threads)
-                .map(|t| (t * chunk, ((t + 1) * chunk).min(n)))
-                .filter(|&(a, b)| a < b)
-                .collect();
-            let results: Vec<Result<Vec<Vec<f32>>>> =
-                std::thread::scope(|scope| {
-                    let handles: Vec<_> = ranges
-                        .iter()
-                        .map(|&(a, b)| {
-                            scope.spawn(move || {
-                                let mut arena = self.arena();
-                                (a..b)
-                                    .map(|i| {
-                                        self.run_sample(&mut arena, &xs[i * feat..(i + 1) * feat])
-                                    })
-                                    .collect()
-                            })
-                        })
-                        .collect();
-                    handles
-                        .into_iter()
-                        .map(|h| h.join().expect("engine worker panicked"))
-                        .collect()
-                });
-            for r in results {
-                outs.extend(r?);
-            }
+            return Ok(outs);
         }
-        Ok((outs, self.cost.clone()))
+        let threads = threads.min(n);
+        let chunk = n.div_ceil(threads);
+        let ranges: Vec<(usize, usize)> = (0..threads)
+            .map(|t| (t * chunk, ((t + 1) * chunk).min(n)))
+            .filter(|&(a, b)| a < b)
+            .collect();
+        let results: Vec<Result<Vec<Vec<f32>>>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = ranges
+                .iter()
+                .map(|&(a, b)| {
+                    scope.spawn(move || {
+                        let mut arena = self.arena();
+                        samples[a..b]
+                            .iter()
+                            .map(|s| self.run_sample(&mut arena, s))
+                            .collect()
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("engine worker panicked"))
+                .collect()
+        });
+        let mut outs = Vec::with_capacity(n);
+        for r in results {
+            outs.extend(r?);
+        }
+        Ok(outs)
     }
 }
 

@@ -38,6 +38,9 @@
 //!   plan/execute split, pluggable [`engine::KernelBackend`]s
 //!   (`reference` scalar oracle, `packed` sub-byte kernels), threaded
 //!   batch execution.
+//! * [`serve`] — resident multi-model inference server: `ModelRegistry`
+//!   of precompiled `ExecPlan`s, dynamic micro-batching with bounded
+//!   admission, pure-`std` HTTP/1.1 front end, serving metrics.
 //! * [`runtime`] — PJRT client wrapper executing `artifacts/*.hlo.txt`
 //!   (`xla` feature).
 //! * [`nas`] — the Alg. 1 three-phase DNAS driver (trainer: `xla`).
@@ -59,6 +62,7 @@ pub mod quant;
 pub mod report;
 #[cfg(feature = "xla")]
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod util;
 

@@ -9,6 +9,14 @@
 //! Supported: the full JSON grammar (objects, arrays, strings with
 //! escapes incl. `\uXXXX`, numbers, booleans, null).  Numbers are stored
 //! as `f64` (ample for manifest shapes and metric logs).
+//!
+//! Since the serving layer (`serve::http`) parses request bodies off the
+//! network with this module, the parser is hardened against hostile
+//! input: truncated documents, bad escapes and non-UTF-8 bytes
+//! ([`parse_bytes`]) return `Err`, and nesting is capped at
+//! [`MAX_DEPTH`] so a `[[[[…` bomb cannot overflow the recursive
+//! descent's stack.  Malformed input must never panic — that contract
+//! is unit-tested below.
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -208,9 +216,14 @@ fn write_escaped(out: &mut String, s: &str) {
 // Parser.
 // ---------------------------------------------------------------------------
 
+/// Maximum container nesting depth: deeper documents return `Err`
+/// instead of exhausting the recursive-descent stack.  Generous for
+/// every legitimate document in the repo (manifests nest < 10 deep).
+pub const MAX_DEPTH: usize = 128;
+
 /// Parse a JSON document.
 pub fn parse(text: &str) -> Result<Json> {
-    let mut p = Parser { b: text.as_bytes(), i: 0 };
+    let mut p = Parser { b: text.as_bytes(), i: 0, depth: 0 };
     p.ws();
     let v = p.value()?;
     p.ws();
@@ -218,6 +231,14 @@ pub fn parse(text: &str) -> Result<Json> {
         bail!("trailing garbage at byte {}", p.i);
     }
     Ok(v)
+}
+
+/// Parse a JSON document from raw bytes (e.g. a network request body).
+/// Non-UTF-8 input is an error, never a panic.
+pub fn parse_bytes(bytes: &[u8]) -> Result<Json> {
+    let text = std::str::from_utf8(bytes)
+        .map_err(|e| anyhow!("body is not valid UTF-8: {e}"))?;
+    parse(text)
 }
 
 /// Parse a JSON file.
@@ -230,6 +251,8 @@ pub fn parse_file(path: &std::path::Path) -> Result<Json> {
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
+    /// current container nesting, bounded by [`MAX_DEPTH`]
+    depth: usize,
 }
 
 impl Parser<'_> {
@@ -282,12 +305,22 @@ impl Parser<'_> {
         }
     }
 
+    fn enter(&mut self) -> Result<()> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            bail!("nesting deeper than {MAX_DEPTH} at byte {}", self.i);
+        }
+        Ok(())
+    }
+
     fn object(&mut self) -> Result<Json> {
         self.expect(b'{')?;
+        self.enter()?;
         let mut map = BTreeMap::new();
         self.ws();
         if self.peek()? == b'}' {
             self.i += 1;
+            self.depth -= 1;
             return Ok(Json::Obj(map));
         }
         loop {
@@ -305,6 +338,7 @@ impl Parser<'_> {
                 }
                 b'}' => {
                     self.i += 1;
+                    self.depth -= 1;
                     return Ok(Json::Obj(map));
                 }
                 c => {
@@ -316,10 +350,12 @@ impl Parser<'_> {
 
     fn array(&mut self) -> Result<Json> {
         self.expect(b'[')?;
+        self.enter()?;
         let mut arr = Vec::new();
         self.ws();
         if self.peek()? == b']' {
             self.i += 1;
+            self.depth -= 1;
             return Ok(Json::Arr(arr));
         }
         loop {
@@ -332,6 +368,7 @@ impl Parser<'_> {
                 }
                 b']' => {
                     self.i += 1;
+                    self.depth -= 1;
                     return Ok(Json::Arr(arr));
                 }
                 c => {
@@ -368,21 +405,24 @@ impl Parser<'_> {
                             let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])?;
                             let cp = u32::from_str_radix(hex, 16)?;
                             self.i += 4;
-                            // surrogate pairs
+                            // surrogate pairs (truncated input → Err,
+                            // never an out-of-bounds panic)
                             let ch = if (0xD800..0xDC00).contains(&cp) {
-                                if self.b.get(self.i) == Some(&b'\\')
-                                    && self.b.get(self.i + 1) == Some(&b'u')
-                                {
-                                    let hex2 = std::str::from_utf8(
-                                        &self.b[self.i + 2..self.i + 6])?;
-                                    let lo = u32::from_str_radix(hex2, 16)?;
-                                    self.i += 6;
-                                    let c = 0x10000
-                                        + ((cp - 0xD800) << 10)
-                                        + (lo - 0xDC00);
-                                    char::from_u32(c)
-                                } else {
-                                    None
+                                let pair = self.b.get(self.i..self.i + 6);
+                                match pair {
+                                    Some([b'\\', b'u', hex2 @ ..]) => {
+                                        let hex2 = std::str::from_utf8(hex2)?;
+                                        let lo = u32::from_str_radix(hex2, 16)?;
+                                        if !(0xDC00..0xE000).contains(&lo) {
+                                            bail!("bad low surrogate");
+                                        }
+                                        self.i += 6;
+                                        let c = 0x10000
+                                            + ((cp - 0xD800) << 10)
+                                            + (lo - 0xDC00);
+                                        char::from_u32(c)
+                                    }
+                                    _ => None,
                                 }
                             } else {
                                 char::from_u32(cp)
@@ -399,9 +439,11 @@ impl Parser<'_> {
                     } else {
                         let start = self.i - 1;
                         let len = utf8_len(c);
-                        let chunk = std::str::from_utf8(
-                            &self.b[start..start + len])?;
-                        s.push_str(chunk);
+                        let bytes = self
+                            .b
+                            .get(start..start + len)
+                            .ok_or_else(|| anyhow!("truncated UTF-8 sequence"))?;
+                        s.push_str(std::str::from_utf8(bytes)?);
                         self.i = start + len;
                     }
                 }
@@ -473,6 +515,60 @@ mod tests {
         assert!(parse("[1,]").is_err());
         assert!(parse("12 34").is_err());
         assert!(parse("{\"a\" 1}").is_err());
+    }
+
+    #[test]
+    fn truncated_inputs_error_not_panic() {
+        // every prefix of a valid document must parse to Err, not panic
+        let full = r#"{"a": [1, -2.5e3, "x\u00e9\ud83d\ude00"], "b": null}"#;
+        for cut in 0..full.len() {
+            if let Some(prefix) = full.get(..cut) {
+                assert!(parse(prefix).is_err(), "prefix {prefix:?} parsed");
+            }
+        }
+    }
+
+    #[test]
+    fn malformed_escapes_error_not_panic() {
+        for bad in [
+            "\"\\",          // escape at EOF
+            "\"\\u",         // \u at EOF
+            "\"\\u12",       // truncated hex
+            "\"\\uZZZZ\"",   // non-hex
+            "\"\\ud834",     // high surrogate at EOF
+            "\"\\ud834\\u",  // truncated low surrogate
+            "\"\\ud834\\u0041\"", // low surrogate out of range
+            "\"\\udc00\"",   // lone low surrogate
+            "\"\\x41\"",     // unknown escape
+        ] {
+            assert!(parse(bad).is_err(), "{bad:?} parsed");
+        }
+    }
+
+    #[test]
+    fn deep_nesting_errors_not_stack_overflow() {
+        for doc in ["[".repeat(100_000), "{\"k\":".repeat(100_000)] {
+            assert!(parse(&doc).is_err());
+        }
+        // a closed-but-too-deep document errors too
+        let deep = format!("{}{}", "[".repeat(MAX_DEPTH + 1), "]".repeat(MAX_DEPTH + 1));
+        assert!(parse(&deep).is_err());
+        // ... while documents at the limit still parse
+        let ok = format!("{}{}", "[".repeat(MAX_DEPTH), "]".repeat(MAX_DEPTH));
+        assert!(parse(&ok).is_ok());
+        // width is free: sibling containers don't accumulate depth
+        let wide = format!("[{}]", vec!["[0]"; 300].join(","));
+        assert!(parse(&wide).is_ok());
+    }
+
+    #[test]
+    fn parse_bytes_rejects_non_utf8() {
+        assert!(parse_bytes(b"\xff\xfe{\"a\": 1}").is_err());
+        assert!(parse_bytes(b"{\"a\": \"\xc3\"}").is_err());
+        assert_eq!(
+            parse_bytes(br#"{"a": 1}"#).unwrap().get("a").unwrap().as_f64().unwrap(),
+            1.0
+        );
     }
 
     #[test]

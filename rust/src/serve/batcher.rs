@@ -1,0 +1,264 @@
+//! Dynamic micro-batching over one precompiled `ExecPlan`.
+//!
+//! Every model entry owns one [`Batcher`]: a bounded MPSC queue plus a
+//! dedicated worker thread that coalesces pending single-sample requests
+//! into one [`ExecPlan::run_samples`] call.  The policy is the classic
+//! two-knob one:
+//!
+//! * **`max_batch`** — execute as soon as this many requests are
+//!   pending;
+//! * **`max_wait_us`** — never hold the *oldest* pending request longer
+//!   than this before executing whatever has accumulated (a lone
+//!   request therefore flushes after at most `max_wait_us`).
+//!
+//! Under load the worker is always behind the queue, so batches fill to
+//! `max_batch` without ever sleeping — the wait bound only shapes the
+//! lightly-loaded tail.  Batching amortises the engine's per-call costs
+//! (thread fan-out, per-layer activation-plane quantization setup)
+//! across *unrelated* requests, the serving-side analogue of the packed
+//! plane amortising quantization across consumers within a layer.
+//!
+//! **Admission control:** the queue is bounded (`queue_cap`).  A submit
+//! against a full queue is *shed* — the caller gets
+//! [`SubmitError::Overloaded`] immediately and the HTTP layer answers
+//! `503` instead of letting latency grow without bound.
+//!
+//! Worker-side execution uses [`ExecPlan::run_samples`], so batched
+//! outputs are bit-identical to per-sample [`ExecPlan::run_sample`]
+//! calls (`tests/serve_batcher.rs` asserts it end-to-end).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::engine::ExecPlan;
+
+use super::metrics::Metrics;
+
+/// Micro-batching policy knobs.
+#[derive(Clone, Debug)]
+pub struct BatchPolicy {
+    /// Coalesce at most this many requests into one engine call.
+    pub max_batch: usize,
+    /// Flush the oldest pending request after at most this long.
+    pub max_wait_us: u64,
+    /// Bounded-queue admission limit; submits beyond it are shed.
+    pub queue_cap: usize,
+    /// Engine worker threads per executed batch.
+    pub threads: usize,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> BatchPolicy {
+        BatchPolicy {
+            max_batch: 8,
+            max_wait_us: 2_000,
+            queue_cap: 256,
+            threads: std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1),
+        }
+    }
+}
+
+/// A successfully executed request.
+pub struct InferReply {
+    /// Output activations, bit-identical to `ExecPlan::run_sample`.
+    pub output: Vec<f32>,
+    /// Size of the micro-batch this request rode in.
+    pub batch: usize,
+}
+
+/// Why a submit was refused at the door.
+#[derive(Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// Queue full — request shed (HTTP 503).
+    Overloaded,
+    /// Batcher is shutting down.
+    ShuttingDown,
+    /// Input failed validation (wrong length) — never enqueued, so one
+    /// bad request cannot poison a coalesced batch.
+    BadInput(String),
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Overloaded => write!(f, "queue full, request shed"),
+            SubmitError::ShuttingDown => write!(f, "server shutting down"),
+            SubmitError::BadInput(m) => write!(f, "bad input: {m}"),
+        }
+    }
+}
+
+/// What the worker sends back: the reply or an engine error string.
+pub type ReplyResult = Result<InferReply, String>;
+
+struct Pending {
+    input: Vec<f32>,
+    reply: mpsc::Sender<ReplyResult>,
+    enqueued: Instant,
+}
+
+struct Shared {
+    queue: Mutex<VecDeque<Pending>>,
+    notify: Condvar,
+    shutdown: AtomicBool,
+    policy: BatchPolicy,
+    plan: Arc<ExecPlan>,
+    metrics: Arc<Metrics>,
+}
+
+/// Bounded queue + coalescing worker for one model.
+pub struct Batcher {
+    shared: Arc<Shared>,
+    worker: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl Batcher {
+    /// Spawn the coalescing worker for `plan`.
+    pub fn start(plan: Arc<ExecPlan>, metrics: Arc<Metrics>, policy: BatchPolicy) -> Batcher {
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            notify: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            policy,
+            plan,
+            metrics,
+        });
+        let w = Arc::clone(&shared);
+        let worker = std::thread::Builder::new()
+            .name("cwmix-batcher".into())
+            .spawn(move || worker_loop(&w))
+            .expect("spawning batcher worker");
+        Batcher { shared, worker: Mutex::new(Some(worker)) }
+    }
+
+    /// Enqueue one sample.  Returns the reply channel, or refuses at
+    /// the door (shed / shutdown / bad input).  The worker always
+    /// answers every admitted request, so `recv()` on the returned
+    /// channel cannot deadlock while the batcher is alive.
+    pub fn submit(&self, input: Vec<f32>) -> Result<mpsc::Receiver<ReplyResult>, SubmitError> {
+        let feat = self.shared.plan.feat();
+        if input.len() != feat {
+            return Err(SubmitError::BadInput(format!(
+                "input length {} != model input {feat}",
+                input.len()
+            )));
+        }
+        let (tx, rx) = mpsc::channel();
+        {
+            // the shutdown check happens under the queue lock: shutdown()
+            // drains the queue under the same lock *after* setting the
+            // flag, so a request can never slip in unanswered behind the
+            // worker's exit
+            let mut q = self.shared.queue.lock().unwrap();
+            if self.shared.shutdown.load(Ordering::Acquire) {
+                return Err(SubmitError::ShuttingDown);
+            }
+            if q.len() >= self.shared.policy.queue_cap {
+                self.shared.metrics.record_shed();
+                return Err(SubmitError::Overloaded);
+            }
+            q.push_back(Pending { input, reply: tx, enqueued: Instant::now() });
+        }
+        self.shared.metrics.record_request();
+        self.shared.notify.notify_one();
+        Ok(rx)
+    }
+
+    /// Pending queue depth (diagnostics / tests).
+    pub fn queued(&self) -> usize {
+        self.shared.queue.lock().unwrap().len()
+    }
+
+    /// Stop accepting work, drain what is queued, join the worker.
+    /// Idempotent.
+    pub fn shutdown(&self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        self.shared.notify.notify_all();
+        if let Some(h) = self.worker.lock().unwrap().take() {
+            let _ = h.join();
+        }
+        // answer anything that raced past the worker's final drain
+        let stragglers: Vec<Pending> =
+            self.shared.queue.lock().unwrap().drain(..).collect();
+        for p in stragglers {
+            let _ = p.reply.send(Err("server shutting down".to_string()));
+        }
+    }
+}
+
+impl Drop for Batcher {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    let max_batch = shared.policy.max_batch.max(1);
+    let wait = Duration::from_micros(shared.policy.max_wait_us);
+    loop {
+        let batch: Vec<Pending> = {
+            let mut q = shared.queue.lock().unwrap();
+            // sleep until there is work (or shutdown with an empty queue)
+            loop {
+                if !q.is_empty() {
+                    break;
+                }
+                if shared.shutdown.load(Ordering::Acquire) {
+                    return;
+                }
+                q = shared.notify.wait(q).unwrap();
+            }
+            // coalesce: hold the oldest request at most `max_wait_us`
+            // (measured from ITS enqueue — time spent while we were
+            // executing the previous batch counts toward the bound)
+            let deadline = q.front().unwrap().enqueued + wait;
+            while q.len() < max_batch && !shared.shutdown.load(Ordering::Acquire) {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (guard, timeout) =
+                    shared.notify.wait_timeout(q, deadline - now).unwrap();
+                q = guard;
+                if timeout.timed_out() {
+                    break;
+                }
+            }
+            let take = q.len().min(max_batch);
+            q.drain(..take).collect()
+        };
+        execute(shared, batch);
+    }
+}
+
+fn execute(shared: &Shared, batch: Vec<Pending>) {
+    if batch.is_empty() {
+        return;
+    }
+    let n = batch.len();
+    shared.metrics.record_batch(n);
+    let samples: Vec<&[f32]> = batch.iter().map(|p| p.input.as_slice()).collect();
+    let threads = shared.policy.threads.clamp(1, n);
+    match shared.plan.run_samples(&samples, threads) {
+        Ok(outs) => {
+            for (p, output) in batch.iter().zip(outs) {
+                let us = p.enqueued.elapsed().as_micros() as u64;
+                shared.metrics.record_latency_us(us);
+                // a vanished receiver just means the client hung up
+                let _ = p.reply.send(Ok(InferReply { output, batch: n }));
+            }
+        }
+        Err(e) => {
+            // submit() validates lengths, so this is an engine-internal
+            // failure: every rider gets the error
+            let msg = format!("engine error: {e:#}");
+            for p in &batch {
+                shared.metrics.record_error();
+                let _ = p.reply.send(Err(msg.clone()));
+            }
+        }
+    }
+}

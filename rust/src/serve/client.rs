@@ -1,0 +1,95 @@
+//! Minimal blocking HTTP/1.1 client for loopback use.
+//!
+//! Just enough protocol for the serve subsystem's own consumers — the
+//! `bench_serve` closed-loop load generator, the `serve_smoke` CI
+//! round-trip bin and the integration tests: keep-alive over one
+//! `TcpStream`, `Content-Length` framing, JSON bodies.  Not a general
+//! HTTP client (no TLS, redirects, chunked encoding) and deliberately
+//! not public API beyond this crate's tooling needs.
+
+use std::io::Write;
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::minijson::{parse, Json};
+
+use super::http::{HttpError, HttpReader};
+
+/// One keep-alive connection to a `cwmix serve` instance.
+pub struct Conn {
+    writer: TcpStream,
+    reader: HttpReader<TcpStream>,
+}
+
+/// Response status + parsed JSON body.
+pub struct ClientResponse {
+    pub status: u16,
+    pub body: Json,
+}
+
+impl Conn {
+    /// Connect with a sane default timeout (10 s).
+    pub fn connect(addr: SocketAddr) -> Result<Conn> {
+        let stream = TcpStream::connect_timeout(&addr, Duration::from_secs(10))
+            .with_context(|| format!("connecting {addr}"))?;
+        stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+        stream.set_nodelay(true)?;
+        let writer = stream.try_clone()?;
+        Ok(Conn { writer, reader: HttpReader::new(stream, 64 << 20) })
+    }
+
+    /// Send one request and read the reply.
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&str>,
+    ) -> Result<ClientResponse> {
+        let body = body.unwrap_or("");
+        write!(
+            self.writer,
+            "{method} {path} HTTP/1.1\r\nHost: cwmix\r\nContent-Type: application/json\r\n\
+             Content-Length: {}\r\nConnection: keep-alive\r\n\r\n{body}",
+            body.len(),
+        )?;
+        self.writer.flush()?;
+        self.read_response()
+    }
+
+    pub fn get(&mut self, path: &str) -> Result<ClientResponse> {
+        self.request("GET", path, None)
+    }
+
+    pub fn post(&mut self, path: &str, body: &str) -> Result<ClientResponse> {
+        self.request("POST", path, Some(body))
+    }
+
+    fn read_response(&mut self) -> Result<ClientResponse> {
+        match self.reader.next_response() {
+            Ok(Some((status, body))) => {
+                let text = std::str::from_utf8(&body).context("non-UTF-8 body")?;
+                let body = if text.is_empty() { Json::Null } else { parse(text)? };
+                Ok(ClientResponse { status, body })
+            }
+            Ok(None) => bail!("connection closed before response"),
+            Err(HttpError::Bad(_, m)) => bail!("malformed response: {m}"),
+            Err(HttpError::Io(e)) => Err(e).context("reading response"),
+        }
+    }
+}
+
+/// Build the `POST /v1/infer/<bench>` request body for one sample.
+pub fn infer_body(input: &[f32]) -> String {
+    Json::obj(vec![("input", Json::arr_f32(input))]).dumps()
+}
+
+/// Pull `"output"` out of an infer reply as `f32`s.
+pub fn output_of(body: &Json) -> Result<Vec<f32>> {
+    body.get("output")?
+        .as_arr()?
+        .iter()
+        .map(|v| v.as_f64().map(|f| f as f32))
+        .collect()
+}

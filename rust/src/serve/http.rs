@@ -1,0 +1,629 @@
+//! Minimal pure-`std` HTTP/1.1 front end for the inference server.
+//!
+//! `std::net::TcpListener` + a thread per connection (bounded by
+//! `max_conns`), keep-alive, `Content-Length` bodies only (no chunked
+//! encoding — clients here are load generators and simple SDKs), JSON
+//! in and out through [`minijson`](crate::minijson).  No new
+//! dependencies, in the spirit of the pure-Rust-JSON decision the
+//! coordinator already made for manifests and result stores.
+//!
+//! Routes:
+//!
+//! * `POST /v1/infer/<bench>` — body `{"input": [f32; feat]}`; replies
+//!   `{"model", "batch", "output"}` where `batch` is the micro-batch
+//!   size the request rode in.  `503 {"error": ...}` when the bounded
+//!   queue sheds the request.
+//! * `GET /v1/models` — registry description (also the readiness
+//!   probe).
+//! * `GET /metrics` — per-model + total counters, p50/p99 latency,
+//!   batch-size histogram, shed count.
+//! * `POST /admin/shutdown` — begin a clean shutdown: stop accepting,
+//!   drain batchers, join workers.
+//!
+//! Request parsing is factored over `io::Read`
+//! ([`HttpReader`]) so the grammar is unit-testable without sockets;
+//! oversized headers/bodies and malformed framing map to 4xx replies,
+//! never panics (`minijson` is hardened against malformed bodies for
+//! the same reason).
+
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::minijson::{parse_bytes, Json};
+
+use super::batcher::SubmitError;
+use super::registry::ModelRegistry;
+
+/// Front-end configuration.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Bind address; port 0 lets the OS pick (the bound port is in
+    /// [`Server::addr`]).
+    pub addr: String,
+    /// Reject request bodies larger than this (HTTP 413).
+    pub max_body_bytes: usize,
+    /// Concurrent connections; excess gets an immediate 503.
+    pub max_conns: usize,
+    /// Per-connection read timeout (idle keep-alive reaper).
+    pub read_timeout: Duration,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            addr: "127.0.0.1:8080".to_string(),
+            max_body_bytes: 1 << 20,
+            max_conns: 64,
+            read_timeout: Duration::from_secs(10),
+        }
+    }
+}
+
+const MAX_HEADER_BYTES: usize = 16 << 10;
+
+/// Ceiling on one request's queue-wait + batch execution.  Generous —
+/// it exists so a dead batcher worker degrades to 500s instead of
+/// permanently wedged connections.
+const INFER_REPLY_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// Post-error drain bound (see [`HttpReader::drain`]): covers honest
+/// clients that overshot `max_body_bytes` by a lot; a peer announcing
+/// gigabytes past this may still see an RST instead of the 4xx.
+const DRAIN_BYTES: usize = 8 << 20;
+
+/// One parsed request.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub body: Vec<u8>,
+    pub close: bool,
+}
+
+/// A framing/protocol error that maps to an HTTP status.
+#[derive(Debug)]
+pub enum HttpError {
+    /// Connection-level I/O failure or clean EOF mid-request.
+    Io(io::Error),
+    /// Protocol violation: (status, message) to send before closing.
+    Bad(u16, String),
+}
+
+impl From<io::Error> for HttpError {
+    fn from(e: io::Error) -> HttpError {
+        HttpError::Io(e)
+    }
+}
+
+/// A framed message before request/response-specific parsing.
+struct RawMessage {
+    start_line: String,
+    body: Vec<u8>,
+    /// `Connection:` header, if present.
+    close: Option<bool>,
+}
+
+/// Buffered HTTP/1.1 request reader with keep-alive carry-over.
+pub struct HttpReader<R: Read> {
+    r: R,
+    buf: Vec<u8>,
+    max_body: usize,
+}
+
+impl<R: Read> HttpReader<R> {
+    pub fn new(r: R, max_body: usize) -> HttpReader<R> {
+        HttpReader { r, buf: Vec::with_capacity(4096), max_body }
+    }
+
+    /// Read one request.  `Ok(None)` = clean EOF between requests (the
+    /// peer closed an idle keep-alive connection).
+    pub fn next_request(&mut self) -> Result<Option<Request>, HttpError> {
+        let Some(msg) = self.next_message()? else { return Ok(None) };
+        let mut parts = msg.start_line.split(' ');
+        let (method, path, version) = match (parts.next(), parts.next(), parts.next()) {
+            (Some(m), Some(p), Some(v)) if !m.is_empty() && p.starts_with('/') => {
+                (m.to_string(), p.to_string(), v)
+            }
+            _ => {
+                return Err(HttpError::Bad(
+                    400,
+                    format!("malformed request line {:?}", msg.start_line),
+                ))
+            }
+        };
+        if version != "HTTP/1.1" && version != "HTTP/1.0" {
+            return Err(HttpError::Bad(505, format!("unsupported {version}")));
+        }
+        let close = msg.close.unwrap_or(version == "HTTP/1.0");
+        Ok(Some(Request { method, path, body: msg.body, close }))
+    }
+
+    /// Read one *response* (status line instead of request line) —
+    /// the framing half the loopback client reuses.
+    pub fn next_response(&mut self) -> Result<Option<(u16, Vec<u8>)>, HttpError> {
+        let Some(msg) = self.next_message()? else { return Ok(None) };
+        let mut parts = msg.start_line.split(' ');
+        let status = match (parts.next(), parts.next()) {
+            (Some(v), Some(code)) if v.starts_with("HTTP/") => {
+                code.parse::<u16>().map_err(|_| {
+                    HttpError::Bad(400, format!("bad status line {:?}", msg.start_line))
+                })?
+            }
+            _ => {
+                return Err(HttpError::Bad(
+                    400,
+                    format!("bad status line {:?}", msg.start_line),
+                ))
+            }
+        };
+        Ok(Some((status, msg.body)))
+    }
+
+    /// Shared framing: start line + headers + `Content-Length` body.
+    fn next_message(&mut self) -> Result<Option<RawMessage>, HttpError> {
+        let header_end = loop {
+            if let Some(pos) = find_subslice(&self.buf, b"\r\n\r\n") {
+                break pos + 4;
+            }
+            if self.buf.len() > MAX_HEADER_BYTES {
+                return Err(HttpError::Bad(431, "header too large".into()));
+            }
+            if self.fill()? == 0 {
+                if self.buf.is_empty() {
+                    return Ok(None);
+                }
+                return Err(HttpError::Io(io::ErrorKind::UnexpectedEof.into()));
+            }
+        };
+        let head = std::str::from_utf8(&self.buf[..header_end])
+            .map_err(|_| HttpError::Bad(400, "non-UTF-8 header".into()))?;
+        let mut lines = head.split("\r\n");
+        let start_line = lines.next().unwrap_or("").to_string();
+        let mut content_length = 0usize;
+        let mut close = None;
+        for line in lines {
+            let Some((k, v)) = line.split_once(':') else { continue };
+            let v = v.trim();
+            if k.eq_ignore_ascii_case("content-length") {
+                content_length = v
+                    .parse()
+                    .map_err(|_| HttpError::Bad(400, format!("bad content-length {v:?}")))?;
+            } else if k.eq_ignore_ascii_case("connection") {
+                close = Some(v.eq_ignore_ascii_case("close"));
+            } else if k.eq_ignore_ascii_case("transfer-encoding") {
+                return Err(HttpError::Bad(501, "chunked bodies unsupported".into()));
+            }
+        }
+        if content_length > self.max_body {
+            return Err(HttpError::Bad(
+                413,
+                format!("body {content_length} B > limit {} B", self.max_body),
+            ));
+        }
+        self.buf.drain(..header_end);
+        while self.buf.len() < content_length {
+            if self.fill()? == 0 {
+                return Err(HttpError::Io(io::ErrorKind::UnexpectedEof.into()));
+            }
+        }
+        let body: Vec<u8> = self.buf.drain(..content_length).collect();
+        Ok(Some(RawMessage { start_line, body, close }))
+    }
+
+    fn fill(&mut self) -> io::Result<usize> {
+        let mut chunk = [0u8; 4096];
+        let n = self.r.read(&mut chunk)?;
+        self.buf.extend_from_slice(&chunk[..n]);
+        Ok(n)
+    }
+
+    /// Best-effort read-and-discard of up to `max` bytes (stops at
+    /// EOF or any error, including the read timeout).  Closing a
+    /// socket with unread data makes the kernel send RST, which can
+    /// destroy an in-flight error reply before the peer reads it —
+    /// draining first keeps 4xx replies deliverable.
+    pub fn drain(&mut self, max: usize) {
+        let mut sink = [0u8; 4096];
+        let mut left = max;
+        while left > 0 {
+            match self.r.read(&mut sink) {
+                Ok(0) | Err(_) => return,
+                Ok(n) => left = left.saturating_sub(n),
+            }
+        }
+    }
+}
+
+fn find_subslice(haystack: &[u8], needle: &[u8]) -> Option<usize> {
+    haystack.windows(needle.len()).position(|w| w == needle)
+}
+
+fn status_reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        503 => "Service Unavailable",
+        505 => "HTTP Version Not Supported",
+        _ => "Unknown",
+    }
+}
+
+/// Serialize one JSON response.
+fn write_response(
+    w: &mut impl Write,
+    status: u16,
+    body: &Json,
+    close: bool,
+) -> io::Result<()> {
+    let body = body.dumps();
+    let conn = if close { "close" } else { "keep-alive" };
+    write!(
+        w,
+        "HTTP/1.1 {status} {}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: {conn}\r\n\r\n{body}",
+        status_reason(status),
+        body.len(),
+    )?;
+    w.flush()
+}
+
+fn err_body(msg: &str) -> Json {
+    Json::obj(vec![("error", Json::str(msg))])
+}
+
+struct ServerState {
+    registry: Arc<ModelRegistry>,
+    cfg: ServeConfig,
+    /// the bound address — the shutdown path pokes it to unblock accept()
+    addr: SocketAddr,
+    shutdown: AtomicBool,
+    active_conns: AtomicUsize,
+    started: Instant,
+}
+
+/// A running server: accept loop + handler threads.
+pub struct Server {
+    addr: SocketAddr,
+    state: Arc<ServerState>,
+    acceptor: Option<std::thread::JoinHandle<()>>,
+}
+
+/// Bind and start serving `registry` under `cfg`.
+pub fn serve(registry: Arc<ModelRegistry>, cfg: ServeConfig) -> Result<Server> {
+    let listener = TcpListener::bind(&cfg.addr)
+        .with_context(|| format!("binding {}", cfg.addr))?;
+    let addr = listener.local_addr()?;
+    let state = Arc::new(ServerState {
+        registry,
+        cfg,
+        addr,
+        shutdown: AtomicBool::new(false),
+        active_conns: AtomicUsize::new(0),
+        started: Instant::now(),
+    });
+    let accept_state = Arc::clone(&state);
+    let acceptor = std::thread::Builder::new()
+        .name("cwmix-accept".into())
+        .spawn(move || accept_loop(&listener, &accept_state))
+        .context("spawning acceptor")?;
+    Ok(Server { addr, state, acceptor: Some(acceptor) })
+}
+
+impl Server {
+    /// The actually bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// True once a shutdown has been requested.
+    pub fn shutting_down(&self) -> bool {
+        self.state.shutdown.load(Ordering::Acquire)
+    }
+
+    /// Request a clean shutdown (as `POST /admin/shutdown` does).
+    pub fn request_shutdown(&self) {
+        self.state.shutdown.store(true, Ordering::Release);
+        // poke the blocking accept() so the loop observes the flag
+        let _ = TcpStream::connect(self.addr);
+    }
+
+    /// Block until the server has shut down cleanly: acceptor joined,
+    /// in-flight connections drained (bounded wait), batchers stopped.
+    pub fn join(mut self) -> Result<()> {
+        if let Some(h) = self.acceptor.take() {
+            let _ = h.join();
+        }
+        // bounded drain: handlers hold keep-alive conns at most
+        // read_timeout; allow that plus slack, then give up and report
+        let deadline = Instant::now() + self.state.cfg.read_timeout + Duration::from_secs(2);
+        while self.state.active_conns.load(Ordering::Acquire) > 0 {
+            if Instant::now() > deadline {
+                anyhow::bail!(
+                    "{} connection(s) still active at shutdown",
+                    self.state.active_conns.load(Ordering::Acquire)
+                );
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        self.state.registry.shutdown();
+        Ok(())
+    }
+
+    /// [`Self::request_shutdown`] + [`Self::join`] — test convenience.
+    pub fn stop(self) -> Result<()> {
+        self.request_shutdown();
+        self.join()
+    }
+}
+
+fn accept_loop(listener: &TcpListener, state: &Arc<ServerState>) {
+    for stream in listener.incoming() {
+        if state.shutdown.load(Ordering::Acquire) {
+            break;
+        }
+        let stream = match stream {
+            Ok(s) => s,
+            Err(_) => {
+                // e.g. EMFILE under fd exhaustion: back off instead of
+                // hot-looping the acceptor while handlers hold the fds
+                std::thread::sleep(Duration::from_millis(10));
+                continue;
+            }
+        };
+        if state.active_conns.load(Ordering::Acquire) >= state.cfg.max_conns {
+            // over the connection cap: shed at the door
+            let mut s = stream;
+            let _ = write_response(&mut s, 503, &err_body("too many connections"), true);
+            continue;
+        }
+        state.active_conns.fetch_add(1, Ordering::AcqRel);
+        let conn_state = Arc::clone(state);
+        let res = std::thread::Builder::new()
+            .name("cwmix-conn".into())
+            .spawn(move || {
+                handle_connection(stream, &conn_state);
+                conn_state.active_conns.fetch_sub(1, Ordering::AcqRel);
+            });
+        if res.is_err() {
+            state.active_conns.fetch_sub(1, Ordering::AcqRel);
+        }
+    }
+}
+
+fn handle_connection(stream: TcpStream, state: &Arc<ServerState>) {
+    let _ = stream.set_read_timeout(Some(state.cfg.read_timeout));
+    let _ = stream.set_nodelay(true);
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let mut reader = HttpReader::new(stream, state.cfg.max_body_bytes);
+    loop {
+        if state.shutdown.load(Ordering::Acquire) {
+            break;
+        }
+        match reader.next_request() {
+            Ok(Some(req)) => {
+                let (status, body) = route(state, &req);
+                let close = req.close || state.shutdown.load(Ordering::Acquire);
+                if write_response(&mut writer, status, &body, close).is_err() || close {
+                    break;
+                }
+            }
+            Ok(None) => break, // peer closed an idle connection
+            Err(HttpError::Bad(status, msg)) => {
+                // protocol errors close the connection: framing is gone
+                let _ = write_response(&mut writer, status, &err_body(&msg), true);
+                let _ = writer.shutdown(std::net::Shutdown::Write);
+                reader.drain(DRAIN_BYTES);
+                break;
+            }
+            Err(HttpError::Io(_)) => break, // timeout / reset / EOF
+        }
+    }
+}
+
+/// Dispatch one request.  Infallible by construction: every error is a
+/// `(status, body)` pair.
+fn route(state: &Arc<ServerState>, req: &Request) -> (u16, Json) {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/v1/models") => (200, state.registry.describe()),
+        ("GET", "/metrics") => (200, metrics_body(state)),
+        ("POST", "/admin/shutdown") => {
+            state.shutdown.store(true, Ordering::Release);
+            // poke our own listening socket so accept() observes the flag
+            let _ = TcpStream::connect(state.addr);
+            (200, Json::obj(vec![("ok", Json::Bool(true))]))
+        }
+        (_, path) if path.starts_with("/v1/infer/") => {
+            let name = path.strip_prefix("/v1/infer/").unwrap_or_default();
+            if req.method != "POST" {
+                return (405, err_body("use POST"));
+            }
+            infer(state, name, &req.body)
+        }
+        ("GET", _) | ("POST", _) => (404, err_body("no such route")),
+        _ => (405, err_body("unsupported method")),
+    }
+}
+
+fn metrics_body(state: &Arc<ServerState>) -> Json {
+    let mut models = Vec::new();
+    let mut total_requests = 0u64;
+    let mut total_shed = 0u64;
+    for e in state.registry.entries() {
+        total_requests += e.metrics().requests();
+        total_shed += e.metrics().shed();
+        models.push((e.name().to_string(), e.metrics().snapshot()));
+    }
+    Json::obj(vec![
+        ("uptime_s", Json::num(state.started.elapsed().as_secs_f64())),
+        ("requests", Json::num(total_requests as f64)),
+        ("shed", Json::num(total_shed as f64)),
+        ("models", Json::Obj(models.into_iter().collect())),
+    ])
+}
+
+fn infer(state: &Arc<ServerState>, name: &str, body: &[u8]) -> (u16, Json) {
+    let Some(entry) = state.registry.get(name) else {
+        return (404, err_body(&format!("unknown model {name:?}")));
+    };
+    let parsed = match parse_bytes(body) {
+        Ok(v) => v,
+        Err(e) => return (400, err_body(&format!("bad JSON body: {e}"))),
+    };
+    let input: Vec<f32> = match parsed.get("input").and_then(|v| {
+        v.as_arr()?.iter().map(|x| x.as_f64().map(|f| f as f32)).collect()
+    }) {
+        Ok(v) => v,
+        Err(e) => return (400, err_body(&format!("bad \"input\": {e}"))),
+    };
+    let rx = match entry.batcher().submit(input) {
+        Ok(rx) => rx,
+        Err(SubmitError::Overloaded) => return (503, err_body("overloaded: queue full")),
+        Err(SubmitError::ShuttingDown) => return (503, err_body("shutting down")),
+        Err(SubmitError::BadInput(m)) => return (400, err_body(&m)),
+    };
+    // bounded wait: if the batcher worker ever died (it only can via an
+    // engine panic), queued senders stay alive and a bare recv() would
+    // wedge this connection forever — time out to a 500 instead
+    match rx.recv_timeout(INFER_REPLY_TIMEOUT) {
+        Ok(Ok(reply)) => (
+            200,
+            Json::obj(vec![
+                ("model", Json::str(name)),
+                ("batch", Json::num(reply.batch as f64)),
+                ("output", Json::arr_f32(&reply.output)),
+            ]),
+        ),
+        // no record_error here: the batcher already counted this
+        // failure once per rider when the engine call failed
+        Ok(Err(msg)) => (500, err_body(&msg)),
+        Err(mpsc::RecvTimeoutError::Timeout) => {
+            entry.metrics().record_error();
+            (500, err_body("inference timed out"))
+        }
+        Err(mpsc::RecvTimeoutError::Disconnected) => {
+            entry.metrics().record_error();
+            (500, err_body("batcher worker gone"))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn reader(bytes: &[u8]) -> HttpReader<Cursor<Vec<u8>>> {
+        HttpReader::new(Cursor::new(bytes.to_vec()), 1024)
+    }
+
+    #[test]
+    fn parses_post_with_body() {
+        let raw = b"POST /v1/infer/ic HTTP/1.1\r\nHost: x\r\nContent-Length: 5\r\n\r\nhello";
+        let req = reader(raw).next_request().unwrap().unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/infer/ic");
+        assert_eq!(req.body, b"hello");
+        assert!(!req.close);
+    }
+
+    #[test]
+    fn keep_alive_pipelining_carries_over() {
+        let raw =
+            b"POST /a HTTP/1.1\r\nContent-Length: 3\r\n\r\nabcGET /b HTTP/1.1\r\n\r\n".to_vec();
+        let mut r = HttpReader::new(Cursor::new(raw), 1024);
+        let a = r.next_request().unwrap().unwrap();
+        assert_eq!((a.path.as_str(), a.body.as_slice()), ("/a", &b"abc"[..]));
+        let b = r.next_request().unwrap().unwrap();
+        assert_eq!(b.method, "GET");
+        assert_eq!(b.path, "/b");
+        assert!(r.next_request().unwrap().is_none(), "clean EOF after last request");
+    }
+
+    #[test]
+    fn connection_close_flag() {
+        let raw = b"GET / HTTP/1.1\r\nConnection: close\r\n\r\n";
+        assert!(reader(raw).next_request().unwrap().unwrap().close);
+        let raw10 = b"GET / HTTP/1.0\r\n\r\n";
+        assert!(reader(raw10).next_request().unwrap().unwrap().close);
+    }
+
+    #[test]
+    fn oversized_body_is_413() {
+        let raw = b"POST / HTTP/1.1\r\nContent-Length: 99999\r\n\r\n";
+        match reader(raw).next_request() {
+            Err(HttpError::Bad(413, _)) => {}
+            other => panic!("expected 413, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn malformed_request_line_is_400() {
+        for raw in [&b"NONSENSE\r\n\r\n"[..], b"GET nopath HTTP/1.1\r\n\r\n"] {
+            match reader(raw).next_request() {
+                Err(HttpError::Bad(400, _)) => {}
+                other => panic!("{raw:?}: expected 400, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn truncated_body_is_io_error() {
+        let raw = b"POST / HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc";
+        match reader(raw).next_request() {
+            Err(HttpError::Io(_)) => {}
+            other => panic!("expected Io, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn chunked_encoding_is_501() {
+        let raw = b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n";
+        match reader(raw).next_request() {
+            Err(HttpError::Bad(501, _)) => {}
+            other => panic!("expected 501, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parses_response_status_line() {
+        let raw = b"HTTP/1.1 503 Service Unavailable\r\nContent-Length: 2\r\n\r\nhi";
+        let (status, body) =
+            HttpReader::new(Cursor::new(raw.to_vec()), 1024).next_response().unwrap().unwrap();
+        assert_eq!(status, 503);
+        assert_eq!(body, b"hi");
+    }
+
+    #[test]
+    fn response_roundtrips_through_reader() {
+        let mut out = Vec::new();
+        write_response(&mut out, 200, &err_body("x"), false).unwrap();
+        let (status, body) =
+            HttpReader::new(Cursor::new(out), 1024).next_response().unwrap().unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body, b"{\"error\":\"x\"}");
+    }
+
+    #[test]
+    fn response_shape() {
+        let mut out = Vec::new();
+        write_response(&mut out, 200, &err_body("x"), false).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"), "{text}");
+        assert!(text.contains("Content-Length: 13\r\n"), "{text}");
+        assert!(text.ends_with("{\"error\":\"x\"}"), "{text}");
+    }
+}

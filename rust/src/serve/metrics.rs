@@ -1,0 +1,238 @@
+//! Lock-light serving metrics: counters, a batch-size histogram and a
+//! latency reservoir, scraped as JSON by `GET /metrics`.
+//!
+//! Counters and the histogram are plain relaxed atomics (every request
+//! touches them on the hot path).  Latency percentiles need ordered
+//! data, so [`Metrics`] keeps a fixed-size ring of the most recent
+//! request latencies behind a `Mutex` — recording is a push into a
+//! preallocated slot, and the sort cost is paid only when `/metrics` is
+//! scraped.  p50/p99 over the last [`LATENCY_RING`] requests is what an
+//! operator dashboards; a full streaming quantile sketch would be
+//! overkill for this surface.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::minijson::Json;
+
+/// Batch sizes `>= BATCH_HIST_MAX` share the last histogram bucket.
+pub const BATCH_HIST_MAX: usize = 32;
+
+/// Latency reservoir length (most recent requests).
+pub const LATENCY_RING: usize = 4096;
+
+/// Recent-latency ring: fixed storage, overwrites oldest.
+struct LatencyRing {
+    us: Vec<u32>,
+    pos: usize,
+    filled: bool,
+}
+
+impl LatencyRing {
+    fn record(&mut self, us: u64) {
+        let v = us.min(u32::MAX as u64) as u32;
+        if self.us.len() < LATENCY_RING {
+            self.us.push(v);
+        } else {
+            self.us[self.pos] = v;
+            self.filled = true;
+        }
+        self.pos = (self.pos + 1) % LATENCY_RING;
+    }
+
+    /// (p50_us, p99_us, n) over the retained window.
+    fn percentiles(&self) -> (u32, u32, usize) {
+        let n = if self.filled { LATENCY_RING } else { self.us.len() };
+        if n == 0 {
+            return (0, 0, 0);
+        }
+        let mut sorted = self.us[..n].to_vec();
+        sorted.sort_unstable();
+        let at = |p: f64| sorted[((n - 1) as f64 * p).round() as usize];
+        (at(0.50), at(0.99), n)
+    }
+}
+
+/// Per-model (or aggregate) serving metrics.
+pub struct Metrics {
+    /// requests accepted into the queue
+    requests: AtomicU64,
+    /// requests refused because the queue was full (overload shed)
+    shed: AtomicU64,
+    /// requests answered with an error after admission
+    errors: AtomicU64,
+    /// `run_samples` calls executed by the batcher
+    batches: AtomicU64,
+    /// samples executed (sum of batch sizes)
+    samples: AtomicU64,
+    /// executed batch-size histogram; bucket `i` = size `i + 1`
+    batch_hist: [AtomicU64; BATCH_HIST_MAX],
+    lat: Mutex<LatencyRing>,
+}
+
+impl Default for Metrics {
+    fn default() -> Metrics {
+        Metrics {
+            requests: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            samples: AtomicU64::new(0),
+            batch_hist: std::array::from_fn(|_| AtomicU64::new(0)),
+            lat: Mutex::new(LatencyRing { us: Vec::new(), pos: 0, filled: false }),
+        }
+    }
+}
+
+impl Metrics {
+    pub fn record_request(&self) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_shed(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_error(&self) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One executed batch of `size` samples.
+    pub fn record_batch(&self, size: usize) {
+        if size == 0 {
+            return;
+        }
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.samples.fetch_add(size as u64, Ordering::Relaxed);
+        let bucket = size.min(BATCH_HIST_MAX) - 1;
+        self.batch_hist[bucket].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// End-to-end latency of one answered request (admission → reply).
+    pub fn record_latency_us(&self, us: u64) {
+        self.lat.lock().unwrap().record(us);
+    }
+
+    pub fn requests(&self) -> u64 {
+        self.requests.load(Ordering::Relaxed)
+    }
+
+    pub fn shed(&self) -> u64 {
+        self.shed.load(Ordering::Relaxed)
+    }
+
+    /// Mean executed batch size (0 when nothing ran yet).
+    pub fn mean_batch(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            0.0
+        } else {
+            self.samples.load(Ordering::Relaxed) as f64 / b as f64
+        }
+    }
+
+    /// JSON snapshot for `/metrics`.
+    pub fn snapshot(&self) -> Json {
+        let (p50, p99, window) = self.lat.lock().unwrap().percentiles();
+        let hist: Vec<(String, Json)> = self
+            .batch_hist
+            .iter()
+            .enumerate()
+            .filter_map(|(i, c)| {
+                let n = c.load(Ordering::Relaxed);
+                (n > 0).then(|| {
+                    let label = if i + 1 == BATCH_HIST_MAX {
+                        format!("{}+", BATCH_HIST_MAX)
+                    } else {
+                        format!("{}", i + 1)
+                    };
+                    (label, Json::num(n as f64))
+                })
+            })
+            .collect();
+        Json::obj(vec![
+            ("requests", Json::num(self.requests() as f64)),
+            ("shed", Json::num(self.shed() as f64)),
+            ("errors", Json::num(self.errors.load(Ordering::Relaxed) as f64)),
+            ("batches", Json::num(self.batches.load(Ordering::Relaxed) as f64)),
+            ("samples", Json::num(self.samples.load(Ordering::Relaxed) as f64)),
+            ("mean_batch", Json::num(self.mean_batch())),
+            ("latency_p50_us", Json::num(p50 as f64)),
+            ("latency_p99_us", Json::num(p99 as f64)),
+            ("latency_window", Json::num(window as f64)),
+            ("batch_size_hist", Json::Obj(hist.into_iter().collect())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_histogram() {
+        let m = Metrics::default();
+        m.record_request();
+        m.record_request();
+        m.record_shed();
+        m.record_batch(1);
+        m.record_batch(4);
+        m.record_batch(4);
+        m.record_batch(BATCH_HIST_MAX + 10); // clamps into the last bucket
+        assert_eq!(m.requests(), 2);
+        assert_eq!(m.shed(), 1);
+        let snap = m.snapshot();
+        let hist = snap.get("batch_size_hist").unwrap().as_obj().unwrap();
+        assert_eq!(hist["1"].as_f64().unwrap(), 1.0);
+        assert_eq!(hist["4"].as_f64().unwrap(), 2.0);
+        assert_eq!(hist["32+"].as_f64().unwrap(), 1.0);
+        assert_eq!(snap.get("batches").unwrap().as_f64().unwrap(), 4.0);
+    }
+
+    #[test]
+    fn mean_batch_over_executions() {
+        let m = Metrics::default();
+        assert_eq!(m.mean_batch(), 0.0);
+        m.record_batch(2);
+        m.record_batch(6);
+        assert_eq!(m.mean_batch(), 4.0);
+    }
+
+    #[test]
+    fn latency_percentiles() {
+        let m = Metrics::default();
+        for us in 1..=100u64 {
+            m.record_latency_us(us);
+        }
+        let snap = m.snapshot();
+        let p50 = snap.get("latency_p50_us").unwrap().as_f64().unwrap();
+        let p99 = snap.get("latency_p99_us").unwrap().as_f64().unwrap();
+        assert!((49.0..=52.0).contains(&p50), "p50 {p50}");
+        assert!((98.0..=100.0).contains(&p99), "p99 {p99}");
+    }
+
+    #[test]
+    fn latency_ring_wraps() {
+        let m = Metrics::default();
+        for _ in 0..LATENCY_RING {
+            m.record_latency_us(1_000_000); // old, should be evicted
+        }
+        for _ in 0..LATENCY_RING {
+            m.record_latency_us(10);
+        }
+        let snap = m.snapshot();
+        assert_eq!(snap.get("latency_p99_us").unwrap().as_f64().unwrap(), 10.0);
+        assert_eq!(
+            snap.get("latency_window").unwrap().as_f64().unwrap(),
+            LATENCY_RING as f64
+        );
+    }
+
+    #[test]
+    fn zero_size_batch_ignored() {
+        let m = Metrics::default();
+        m.record_batch(0);
+        let snap = m.snapshot();
+        assert_eq!(snap.get("batches").unwrap().as_f64().unwrap(), 0.0);
+    }
+}

@@ -1,0 +1,51 @@
+//! Resident multi-model inference server with dynamic micro-batching.
+//!
+//! Until this module, every execution caller was one-shot: compile an
+//! [`ExecPlan`](crate::engine::ExecPlan), run, exit.  `serve` is the
+//! first resident process in the stack — the scale axis of the ROADMAP
+//! north star — and it exists to exploit the engine's batch
+//! amortisation across **independent** requests:
+//!
+//! ```text
+//!            TcpListener (http.rs)
+//!   conn ──▶ handler ──submit()──▶ ┌────────────────────┐
+//!   conn ──▶ handler ──submit()──▶ │ bounded queue      │ per model
+//!   conn ──▶ handler ──submit()──▶ │ (shed when full)   │
+//!                                  └──────┬─────────────┘
+//!                                         ▼ coalesce (max_batch / max_wait_us)
+//!                                  batcher worker ──run_samples()──▶ ExecPlan
+//!                                         │                    (registry.rs,
+//!                                         ▼                     compiled once)
+//!                                  per-request replies + metrics
+//! ```
+//!
+//! * [`ModelRegistry`] — one immutable [`ExecPlan`] per served model,
+//!   compiled at startup and shared (`Arc`) by every handler and
+//!   batcher; per-worker `Arena`s exactly as `run_batch` uses them.
+//! * [`Batcher`] — the dynamic micro-batcher: pending single-sample
+//!   requests for the same plan coalesce into one `run_samples` call
+//!   under a `max_batch`/`max_wait_us` policy; the bounded queue sheds
+//!   with an explicit `503` instead of growing without bound.  Batched
+//!   outputs are bit-identical to per-sample `run_sample` calls.
+//! * [`http`] — pure-`std` HTTP/1.1 front end (`POST /v1/infer/<bench>`,
+//!   `GET /v1/models`, `GET /metrics`, `POST /admin/shutdown`), JSON
+//!   via the hardened [`minijson`](crate::minijson).
+//! * [`Metrics`] — request/shed counters, p50/p99 latency, batch-size
+//!   histogram, scraped by `GET /metrics`.
+//! * [`client`] — the loopback client used by `bench_serve`,
+//!   `serve_smoke` and the integration tests.
+//!
+//! Entry points: `cwmix serve` (CLI), [`http::serve`] (library),
+//! `benches/bench_serve.rs` (closed-loop load generator emitting
+//! `BENCH_serve.json`).
+
+pub mod batcher;
+pub mod client;
+pub mod http;
+pub mod metrics;
+pub mod registry;
+
+pub use batcher::{BatchPolicy, Batcher, InferReply, SubmitError};
+pub use http::{serve, ServeConfig, Server};
+pub use metrics::Metrics;
+pub use registry::{ModelEntry, ModelRegistry, RegistryConfig};

@@ -1,0 +1,199 @@
+//! Multi-model registry: compile once at startup, share everywhere.
+//!
+//! A [`ModelRegistry`] holds one immutable, precompiled
+//! [`ExecPlan`] per served model — compiled exactly once at startup
+//! (the plan/execute split's whole point) and shared behind an `Arc`
+//! by every connection handler and the model's [`Batcher`] worker.
+//! Per-worker [`Arena`](crate::engine::Arena)s are allocated inside
+//! `run_samples`, exactly as batch callers do today, so plans need no
+//! interior mutability.
+//!
+//! Models come from the same sources as `cwmix simulate`: geometry
+//! from the artifacts manifest when `artifacts/<bench>/manifest.json`
+//! exists, else the builtin zoo — and weights are **always** seeded
+//! synthetic state (trained parameters only exist inside an `xla`
+//! trainer session; there is no weights-on-disk format yet).  The
+//! server therefore runs on the default feature set with no training
+//! artifacts at all, and serves reference-quality numerics, not
+//! trained accuracy.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::deploy;
+use crate::engine::{backend_by_name, ExecPlan};
+use crate::minijson::Json;
+use crate::models::{zoo, Manifest};
+use crate::quant::Assignment;
+
+use super::batcher::{BatchPolicy, Batcher};
+use super::metrics::Metrics;
+
+/// Startup configuration for the registry.
+#[derive(Clone, Debug)]
+pub struct RegistryConfig {
+    /// Benchmarks to serve (`ic|kws|vww|ad`).
+    pub benches: Vec<String>,
+    /// Kernel backend (`packed|reference`).
+    pub backend: String,
+    /// Assignment spec: `stripy` (striped 2/4/8 mix) or `w<N>x<M>`.
+    pub assignment: String,
+    /// Synthetic-state seed (weights are always synthetic; see the
+    /// module docs).
+    pub seed: u64,
+    /// Artifacts directory; a bench with a manifest there uses its
+    /// *geometry* (weights stay synthetic).
+    pub artifacts: PathBuf,
+    /// Micro-batching policy applied to every model.
+    pub policy: BatchPolicy,
+}
+
+impl Default for RegistryConfig {
+    fn default() -> RegistryConfig {
+        RegistryConfig {
+            benches: zoo::BENCHES.iter().map(|b| b.to_string()).collect(),
+            backend: "packed".to_string(),
+            assignment: "stripy".to_string(),
+            seed: 0,
+            artifacts: PathBuf::from("artifacts"),
+            policy: BatchPolicy::default(),
+        }
+    }
+}
+
+/// Parse an assignment spec against a manifest.
+pub fn parse_assignment(spec: &str, manifest: &Manifest) -> Result<Assignment> {
+    if spec == "stripy" {
+        return Ok(zoo::stripy_assignment(manifest));
+    }
+    if let Some(rest) = spec.strip_prefix('w') {
+        if let Some((w, x)) = rest.split_once('x') {
+            let wbits: u32 = w.parse().context("weight bits")?;
+            let xbits: u32 = x.parse().context("activation bits")?;
+            return Ok(Assignment::fixed(
+                &manifest.qnames(),
+                &manifest.qcouts(),
+                wbits,
+                xbits,
+            ));
+        }
+    }
+    bail!("unknown assignment spec {spec:?} (stripy|w<N>x<M>, e.g. w4x8)")
+}
+
+/// One served model: the shared plan, its batcher and its metrics.
+pub struct ModelEntry {
+    name: String,
+    plan: Arc<ExecPlan>,
+    batcher: Batcher,
+    metrics: Arc<Metrics>,
+}
+
+impl ModelEntry {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn plan(&self) -> &Arc<ExecPlan> {
+        &self.plan
+    }
+
+    pub fn batcher(&self) -> &Batcher {
+        &self.batcher
+    }
+
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        &self.metrics
+    }
+
+    /// `GET /v1/models` row.
+    pub fn describe(&self, policy: &BatchPolicy) -> Json {
+        let cost = self.plan.cost();
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("backend", Json::str(self.plan.backend_name())),
+            ("feat", Json::num(self.plan.feat() as f64)),
+            ("out_len", Json::num(self.plan.out_len() as f64)),
+            ("weight_bytes", Json::num(self.plan.weight_bytes() as f64)),
+            ("est_latency_us", Json::num(cost.latency_us())),
+            ("est_energy_uj", Json::num(cost.total_energy_uj())),
+            ("max_batch", Json::num(policy.max_batch as f64)),
+        ])
+    }
+}
+
+/// All served models, keyed by bench name.
+pub struct ModelRegistry {
+    entries: BTreeMap<String, ModelEntry>,
+    policy: BatchPolicy,
+}
+
+impl ModelRegistry {
+    /// Compile every requested model and start its batcher.
+    pub fn build(cfg: &RegistryConfig) -> Result<ModelRegistry> {
+        if cfg.benches.is_empty() {
+            bail!("no benches to serve");
+        }
+        let backend = backend_by_name(&cfg.backend)?;
+        let mut entries = BTreeMap::new();
+        for bench in &cfg.benches {
+            if entries.contains_key(bench) {
+                bail!("bench {bench} listed twice");
+            }
+            let manifest = if cfg.artifacts.join(bench).join("manifest.json").exists() {
+                Manifest::load(&cfg.artifacts, bench)?
+            } else {
+                zoo::builtin_manifest(bench)?
+            };
+            let (params, bn) = zoo::synthetic_state(&manifest, cfg.seed);
+            let assignment = parse_assignment(&cfg.assignment, &manifest)?;
+            let deployed = deploy::build(&manifest, &params, &bn, &assignment)
+                .with_context(|| format!("deploying {bench}"))?;
+            let plan = Arc::new(
+                ExecPlan::compile(&deployed, &manifest.lut, backend)
+                    .with_context(|| format!("compiling {bench}"))?,
+            );
+            let metrics = Arc::new(Metrics::default());
+            let batcher = Batcher::start(
+                Arc::clone(&plan),
+                Arc::clone(&metrics),
+                cfg.policy.clone(),
+            );
+            entries.insert(
+                bench.clone(),
+                ModelEntry { name: bench.clone(), plan, batcher, metrics },
+            );
+        }
+        Ok(ModelRegistry { entries, policy: cfg.policy.clone() })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ModelEntry> {
+        self.entries.get(name)
+    }
+
+    pub fn entries(&self) -> impl Iterator<Item = &ModelEntry> {
+        self.entries.values()
+    }
+
+    pub fn policy(&self) -> &BatchPolicy {
+        &self.policy
+    }
+
+    /// `GET /v1/models` body.
+    pub fn describe(&self) -> Json {
+        Json::obj(vec![(
+            "models",
+            Json::Arr(self.entries.values().map(|e| e.describe(&self.policy)).collect()),
+        )])
+    }
+
+    /// Stop every batcher (drains queues, joins workers).  Idempotent.
+    pub fn shutdown(&self) {
+        for e in self.entries.values() {
+            e.batcher.shutdown();
+        }
+    }
+}

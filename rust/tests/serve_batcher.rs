@@ -1,0 +1,194 @@
+//! Batcher coverage (ISSUE 3 satellite): coalescing respects
+//! `max_batch`, a lone request flushes at `max_wait_us`, the shed path
+//! replies under a full queue, and batched results are bit-identical to
+//! per-sample `ExecPlan::run_sample` calls — the engine-equivalence
+//! contract extended through the serve path.
+//!
+//! Pure Rust: builtin zoo + synthetic state, no artifacts, no sockets
+//! (the HTTP layer has its own end-to-end test).
+
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use cwmix::data::{make_dataset, Split};
+use cwmix::deploy;
+use cwmix::engine::{ExecPlan, PackedBackend};
+use cwmix::models::zoo::{builtin_manifest, stripy_assignment, synthetic_state};
+use cwmix::serve::batcher::ReplyResult;
+use cwmix::serve::{BatchPolicy, Batcher, Metrics, SubmitError};
+
+/// Compile the stripy-packed plan for one bench (the server default).
+fn plan_for(bench: &str) -> Arc<ExecPlan> {
+    let manifest = builtin_manifest(bench).unwrap();
+    let (params, bn) = synthetic_state(&manifest, 0);
+    let a = stripy_assignment(&manifest);
+    let model = deploy::build(&manifest, &params, &bn, &a).unwrap();
+    Arc::new(ExecPlan::compile(&model, &manifest.lut, &PackedBackend).unwrap())
+}
+
+/// Distinct samples from the bench's synthetic test split.
+fn samples(bench: &str, n: usize, feat: usize) -> Vec<Vec<f32>> {
+    let ds = make_dataset(bench, Split::Test, n, 3);
+    (0..n).map(|i| ds.x[i * feat..(i + 1) * feat].to_vec()).collect()
+}
+
+fn recv_ok(rx: &Receiver<ReplyResult>) -> (Vec<f32>, usize) {
+    let reply = rx
+        .recv_timeout(Duration::from_secs(30))
+        .expect("batcher dropped a request")
+        .expect("engine error");
+    (reply.output, reply.batch)
+}
+
+/// Coalescing respects `max_batch`, and batched outputs are
+/// bit-identical to per-sample `run_sample` calls.
+#[test]
+fn coalesces_up_to_max_batch_bit_identically() {
+    let plan = plan_for("ad");
+    let feat = plan.feat();
+    let metrics = Arc::new(Metrics::default());
+    let policy = BatchPolicy {
+        max_batch: 4,
+        max_wait_us: 200_000, // long window: all submits land inside it
+        queue_cap: 64,
+        threads: 2,
+    };
+    let batcher = Batcher::start(Arc::clone(&plan), Arc::clone(&metrics), policy);
+
+    let inputs = samples("ad", 10, feat);
+    let rxs: Vec<_> = inputs
+        .iter()
+        .map(|x| batcher.submit(x.clone()).expect("admitted"))
+        .collect();
+
+    let mut arena = plan.arena();
+    let mut max_seen = 0;
+    for (x, rx) in inputs.iter().zip(&rxs) {
+        let (out, batch) = recv_ok(rx);
+        assert!(batch <= 4, "batch {batch} exceeds max_batch");
+        max_seen = max_seen.max(batch);
+        let want = plan.run_sample(&mut arena, x).unwrap();
+        assert_eq!(out, want, "batched output != run_sample");
+    }
+    // 10 requests admitted inside a 200 ms window against max_batch=4
+    // must have coalesced at least once
+    assert!(max_seen >= 2, "no coalescing observed (max batch {max_seen})");
+    assert_eq!(metrics.requests(), 10);
+    assert_eq!(metrics.shed(), 0);
+    batcher.shutdown();
+}
+
+/// A lone request flushes after ~max_wait_us even though the batch
+/// never fills.
+#[test]
+fn lone_request_flushes_at_max_wait() {
+    let plan = plan_for("ad");
+    let feat = plan.feat();
+    let metrics = Arc::new(Metrics::default());
+    let policy = BatchPolicy {
+        max_batch: 64,
+        max_wait_us: 20_000, // 20 ms
+        queue_cap: 8,
+        threads: 1,
+    };
+    let batcher = Batcher::start(Arc::clone(&plan), metrics, policy);
+
+    let x = samples("ad", 1, feat).remove(0);
+    let t0 = Instant::now();
+    let rx = batcher.submit(x.clone()).unwrap();
+    let (out, batch) = recv_ok(&rx);
+    let waited = t0.elapsed();
+    assert_eq!(batch, 1);
+    assert!(
+        waited < Duration::from_secs(10),
+        "lone request stalled {waited:?} (max_wait flush broken)"
+    );
+    let mut arena = plan.arena();
+    assert_eq!(out, plan.run_sample(&mut arena, &x).unwrap());
+    batcher.shutdown();
+}
+
+/// Submits against a full queue shed immediately with `Overloaded`
+/// (and are counted), instead of growing the queue without bound.
+#[test]
+fn full_queue_sheds_with_explicit_reply() {
+    let plan = plan_for("ad");
+    let feat = plan.feat();
+    let metrics = Arc::new(Metrics::default());
+    let policy = BatchPolicy {
+        max_batch: 8,
+        // the worker holds the first request for the whole window, so
+        // the queue stays populated while we overfill it
+        max_wait_us: 2_000_000,
+        queue_cap: 2,
+        threads: 1,
+    };
+    let batcher = Batcher::start(Arc::clone(&plan), Arc::clone(&metrics), policy);
+
+    let inputs = samples("ad", 3, feat);
+    let rx1 = batcher.submit(inputs[0].clone()).unwrap();
+    let rx2 = batcher.submit(inputs[1].clone()).unwrap();
+    // queue now holds 2 = queue_cap pending requests (the worker is
+    // inside its coalescing window, nothing drained yet)
+    let shed = batcher.submit(inputs[2].clone());
+    assert!(
+        matches!(shed, Err(SubmitError::Overloaded)),
+        "expected Overloaded, got {shed:?}"
+    );
+    assert_eq!(metrics.shed(), 1);
+
+    // shutdown drains: the two admitted requests still get answers
+    batcher.shutdown();
+    let (out1, _) = recv_ok(&rx1);
+    let (out2, _) = recv_ok(&rx2);
+    let mut arena = plan.arena();
+    assert_eq!(out1, plan.run_sample(&mut arena, &inputs[0]).unwrap());
+    assert_eq!(out2, plan.run_sample(&mut arena, &inputs[1]).unwrap());
+}
+
+/// Wrong-length inputs are refused at the door (they never poison a
+/// coalesced batch) and shutdown refuses new work.
+#[test]
+fn bad_input_and_shutdown_refusals() {
+    let plan = plan_for("ad");
+    let feat = plan.feat();
+    let batcher =
+        Batcher::start(Arc::clone(&plan), Arc::new(Metrics::default()), BatchPolicy::default());
+    match batcher.submit(vec![0.0; feat + 1]) {
+        Err(SubmitError::BadInput(_)) => {}
+        other => panic!("expected BadInput, got {other:?}"),
+    }
+    batcher.shutdown();
+    match batcher.submit(vec![0.0; feat]) {
+        Err(SubmitError::ShuttingDown) => {}
+        other => panic!("expected ShuttingDown, got {other:?}"),
+    }
+}
+
+/// The serve path is bit-identical on a conv model too (ad above is
+/// FC-only): kws exercises conv + depthwise + the packed gather path
+/// under threaded batch execution.
+#[test]
+fn conv_model_bit_identical_through_batcher() {
+    let plan = plan_for("kws");
+    let feat = plan.feat();
+    let policy = BatchPolicy {
+        max_batch: 8,
+        max_wait_us: 100_000,
+        queue_cap: 64,
+        threads: 4,
+    };
+    let batcher = Batcher::start(Arc::clone(&plan), Arc::new(Metrics::default()), policy);
+    let inputs = samples("kws", 8, feat);
+    let rxs: Vec<_> = inputs
+        .iter()
+        .map(|x| batcher.submit(x.clone()).expect("admitted"))
+        .collect();
+    let mut arena = plan.arena();
+    for (x, rx) in inputs.iter().zip(&rxs) {
+        let (out, _) = recv_ok(rx);
+        assert_eq!(out, plan.run_sample(&mut arena, x).unwrap());
+    }
+    batcher.shutdown();
+}

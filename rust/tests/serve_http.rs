@@ -1,0 +1,178 @@
+//! End-to-end serving test: a real `TcpListener` server, real HTTP
+//! clients, concurrent `/v1/infer` on two zoo models with outputs
+//! bit-identical to `ExecPlan::run_sample`, the documented error
+//! paths, metrics accounting, and a clean shutdown.
+//!
+//! Pure Rust, ephemeral ports, no artifacts — this is the acceptance
+//! criterion of ISSUE 3 run as a tier-1 test.
+
+use std::sync::Arc;
+
+use cwmix::data::{make_dataset, Split};
+use cwmix::minijson::Json;
+use cwmix::serve::client::{infer_body, output_of, Conn};
+use cwmix::serve::{
+    serve, BatchPolicy, ModelRegistry, RegistryConfig, ServeConfig, Server,
+};
+
+/// Registry over `benches` + a server on an ephemeral port.
+fn start(benches: &[&str], policy: BatchPolicy) -> (Arc<ModelRegistry>, Server) {
+    let reg_cfg = RegistryConfig {
+        benches: benches.iter().map(|b| b.to_string()).collect(),
+        policy,
+        ..RegistryConfig::default()
+    };
+    let registry = Arc::new(ModelRegistry::build(&reg_cfg).unwrap());
+    let cfg = ServeConfig { addr: "127.0.0.1:0".to_string(), ..ServeConfig::default() };
+    let server = serve(Arc::clone(&registry), cfg).unwrap();
+    (registry, server)
+}
+
+/// Expected output for sample `i` of a bench, straight from the plan.
+fn expected(registry: &ModelRegistry, bench: &str, i: usize) -> (Vec<f32>, Vec<f32>) {
+    let plan = registry.get(bench).unwrap().plan();
+    let feat = plan.feat();
+    let ds = make_dataset(bench, Split::Test, i + 1, 0);
+    let input = ds.x[i * feat..(i + 1) * feat].to_vec();
+    let mut arena = plan.arena();
+    let want = plan.run_sample(&mut arena, &input).unwrap();
+    (input, want)
+}
+
+#[test]
+fn concurrent_infer_two_models_bit_identical() {
+    let (registry, server) = start(&["ic", "kws"], BatchPolicy::default());
+    let addr = server.addr();
+
+    // /v1/models lists both models with their geometry
+    let mut probe = Conn::connect(addr).unwrap();
+    let models = probe.get("/v1/models").unwrap();
+    assert_eq!(models.status, 200);
+    let listed = models.body.get("models").unwrap().as_arr().unwrap();
+    assert_eq!(listed.len(), 2);
+
+    // 16 concurrent clients across both models, distinct samples —
+    // every reply must be bit-identical to the plan
+    let mut cases: Vec<(String, String, Vec<f32>)> = Vec::new();
+    for bench in ["ic", "kws"] {
+        for i in 0..4 {
+            let (input, want) = expected(&registry, bench, i);
+            cases.push((bench.to_string(), infer_body(&input), want));
+        }
+    }
+    std::thread::scope(|scope| {
+        for _ in 0..2 {
+            for (bench, body, want) in &cases {
+                scope.spawn(move || {
+                    let mut conn = Conn::connect(addr).unwrap();
+                    let resp =
+                        conn.post(&format!("/v1/infer/{bench}"), body).unwrap();
+                    assert_eq!(resp.status, 200, "{}", resp.body.dumps());
+                    assert_eq!(
+                        &output_of(&resp.body).unwrap(),
+                        want,
+                        "{bench}: served output diverged"
+                    );
+                    let batch =
+                        resp.body.get("batch").unwrap().as_f64().unwrap();
+                    assert!(batch >= 1.0);
+                });
+            }
+        }
+    });
+
+    // metrics saw all 16 infer requests across the two models (fresh
+    // connection: the probe may have idled past the server's timeout
+    // during a slow debug-build run)
+    drop(probe);
+    let mut probe = Conn::connect(addr).unwrap();
+    let metrics = probe.get("/metrics").unwrap();
+    assert_eq!(metrics.status, 200);
+    let total = metrics.body.get("requests").unwrap().as_f64().unwrap();
+    assert_eq!(total, 16.0);
+    drop(probe);
+    server.stop().unwrap();
+    registry.shutdown();
+}
+
+#[test]
+fn error_paths_answer_correctly() {
+    let (registry, server) = start(&["ad"], BatchPolicy::default());
+    let mut conn = Conn::connect(server.addr()).unwrap();
+
+    // unknown model
+    let r = conn.post("/v1/infer/nonesuch", &infer_body(&[1.0])).unwrap();
+    assert_eq!(r.status, 404);
+    // wrong method on infer
+    let r = conn.get("/v1/infer/ad").unwrap();
+    assert_eq!(r.status, 405);
+    // unknown route
+    let r = conn.get("/v2/oops").unwrap();
+    assert_eq!(r.status, 404);
+    // malformed JSON body
+    let r = conn.post("/v1/infer/ad", "{\"input\": [1, 2,").unwrap();
+    assert_eq!(r.status, 400);
+    // non-UTF-8-safe but valid JSON missing the input field
+    let r = conn.post("/v1/infer/ad", "{\"x\": 1}").unwrap();
+    assert_eq!(r.status, 400);
+    // wrong input length
+    let r = conn.post("/v1/infer/ad", &infer_body(&[1.0, 2.0])).unwrap();
+    assert_eq!(r.status, 400);
+    // deep-nesting bomb: hardened minijson answers 400, no stack blowup
+    let bomb = format!("{{\"input\": {}1{}}}", "[".repeat(4096), "]".repeat(4096));
+    let r = conn.post("/v1/infer/ad", &bomb).unwrap();
+    assert_eq!(r.status, 400);
+    // the connection survives every 4xx (framing stays intact)
+    let models = conn.get("/v1/models").unwrap();
+    assert_eq!(models.status, 200);
+    drop(conn);
+    server.stop().unwrap();
+    registry.shutdown();
+}
+
+#[test]
+fn oversized_body_is_rejected() {
+    let reg_cfg = RegistryConfig {
+        benches: vec!["ad".to_string()],
+        ..RegistryConfig::default()
+    };
+    let registry = Arc::new(ModelRegistry::build(&reg_cfg).unwrap());
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        max_body_bytes: 1024,
+        ..ServeConfig::default()
+    };
+    let server = serve(Arc::clone(&registry), cfg).unwrap();
+    let mut conn = Conn::connect(server.addr()).unwrap();
+    let big = infer_body(&vec![0.25f32; 4096]); // way past 1 KiB
+    let r = conn.post("/v1/infer/ad", &big).unwrap();
+    assert_eq!(r.status, 413);
+    drop(conn);
+    server.stop().unwrap();
+    registry.shutdown();
+}
+
+#[test]
+fn shutdown_endpoint_is_clean() {
+    let (registry, server) = start(&["ad"], BatchPolicy::default());
+    let addr = server.addr();
+    let mut conn = Conn::connect(addr).unwrap();
+
+    // answer one real request first
+    let (input, want) = expected(&registry, "ad", 0);
+    let r = conn.post("/v1/infer/ad", &infer_body(&input)).unwrap();
+    assert_eq!(r.status, 200);
+    assert_eq!(output_of(&r.body).unwrap(), want);
+
+    let bye = conn.post("/admin/shutdown", "").unwrap();
+    assert_eq!(bye.status, 200);
+    assert_eq!(bye.body.get("ok").unwrap(), &Json::Bool(true));
+    drop(conn);
+
+    // join() must return: acceptor unblocked, handlers drained,
+    // batcher workers joined
+    server.join().unwrap();
+    // post-shutdown, the batcher refuses instead of hanging
+    let entry = registry.get("ad").unwrap();
+    assert!(entry.batcher().submit(input).is_err());
+}

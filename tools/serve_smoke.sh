@@ -1,0 +1,60 @@
+#!/usr/bin/env bash
+# CI smoke for the serving layer (ISSUE 3 satellite):
+#
+#   1. spawn `cwmix serve` on an ephemeral port (all builtin zoo models)
+#   2. run `serve_smoke`, which round-trips one POST /v1/infer/<bench>
+#      per model and asserts the reply is bit-identical to a locally
+#      compiled ExecPlan::run_sample, then POSTs /admin/shutdown
+#   3. assert the server process exits 0 on its own (clean shutdown)
+#
+# Usage: tools/serve_smoke.sh   (from the repo root, after
+#        `cargo build --release`; CWMIX_BIN_DIR overrides target/release)
+set -euo pipefail
+
+BIN_DIR=${CWMIX_BIN_DIR:-target/release}
+LOG=$(mktemp)
+
+"$BIN_DIR/cwmix" serve --addr 127.0.0.1:0 >"$LOG" 2>&1 &
+SERVER_PID=$!
+trap 'kill "$SERVER_PID" 2>/dev/null || true' EXIT
+
+# the port is OS-assigned: wait for the "listening on" line
+ADDR=""
+for _ in $(seq 1 100); do
+    ADDR=$(sed -n 's/^listening on //p' "$LOG" | head -n 1)
+    [ -n "$ADDR" ] && break
+    if ! kill -0 "$SERVER_PID" 2>/dev/null; then
+        echo "server died during startup:" >&2
+        cat "$LOG" >&2
+        exit 1
+    fi
+    sleep 0.2
+done
+if [ -z "$ADDR" ]; then
+    echo "server never printed its address:" >&2
+    cat "$LOG" >&2
+    exit 1
+fi
+echo "server at $ADDR"
+
+"$BIN_DIR/serve_smoke" "$ADDR"
+
+# clean shutdown: the serve process must exit 0 by itself, promptly
+for _ in $(seq 1 150); do
+    kill -0 "$SERVER_PID" 2>/dev/null || break
+    sleep 0.2
+done
+if kill -0 "$SERVER_PID" 2>/dev/null; then
+    echo "server still running 30s after shutdown request:" >&2
+    cat "$LOG" >&2
+    exit 1
+fi
+trap - EXIT
+if ! wait "$SERVER_PID"; then
+    echo "server exited non-zero:" >&2
+    cat "$LOG" >&2
+    exit 1
+fi
+echo "--- server log ---"
+cat "$LOG"
+echo "serve smoke passed: clean shutdown"
