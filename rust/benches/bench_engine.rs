@@ -1,16 +1,18 @@
 //! Engine benchmarks: seed scalar path vs the plan/execute engine with
 //! the `reference` and `packed` backends, per benchmark model — plus a
-//! per-`(p_x, p_w)` sweep of the nine SWAR kernel-table cells.
+//! per-`(p_x, p_w)` sweep of the nine SWAR kernel-table cells and a
+//! batch-plane scaling sweep (per-sample time vs batch size B, the
+//! weight-stationary amortization the serving batcher exploits).
 //!
 //! Pure Rust — builtin model zoo + synthetic weights, no artifacts and
 //! no `xla` feature.  Each model runs a striped mixed-precision
 //! assignment (the deployment-relevant case: fragmented sub-conv groups
 //! across all three precisions); the combo sweep runs uniform
 //! `w{p_w}x{p_x}` assignments so each table cell is isolated.  Emits a
-//! machine-readable `BENCH_engine.json` at the repo root so future PRs
-//! have a perf trajectory (`tools: cargo run --bin bench_compare` diffs
-//! two of these and gates CI), and asserts bit-exactness of every path
-//! while measuring.
+//! machine-readable `BENCH_engine.json` (schema v3: v2 plus per-batch
+//! size cells) at the repo root so future PRs have a perf trajectory
+//! (`tools: cargo run --bin bench_compare` diffs two of these and gates
+//! CI), and asserts bit-exactness of every path while measuring.
 //!
 //! ```bash
 //! cargo bench --bench bench_engine            # quick (default)
@@ -42,8 +44,78 @@ fn out_path() -> String {
     }
 }
 
-/// The conv-heavy model used for the per-combo sweep.
+/// The conv-heavy model used for the per-combo and batch-plane sweeps.
 const COMBO_BENCH: &str = "ic";
+
+/// Batch sizes of the batch-plane scaling cells.
+const BATCH_SIZES: [usize; 3] = [1, 4, 8];
+
+/// Batch-plane scaling on the conv-heavy model: packed backend, one
+/// engine worker, per-sample wall clock vs batch size — the measured
+/// form of the weight-stationary amortization, alongside the MPIC cost
+/// model's amortized per-sample prediction.
+fn batch_rows() -> anyhow::Result<(Vec<(String, Json)>, bool)> {
+    let manifest = builtin_manifest(COMBO_BENCH)?;
+    let (params, bn) = synthetic_state(&manifest, 0);
+    let a = stripy(&manifest);
+    let model = deploy::build(&manifest, &params, &bn, &a)?;
+    let plan = ExecPlan::compile(&model, &manifest.lut, &PackedBackend)?;
+    let feat = manifest.feat_len();
+    let max_b = *BATCH_SIZES.iter().max().unwrap();
+    let ds = make_dataset(COMBO_BENCH, Split::Test, max_b, 4);
+    let samples: Vec<&[f32]> = ds.x.chunks_exact(feat).collect();
+
+    // bit-exactness while measuring: every batch size == per-sample
+    let mut arena = plan.arena();
+    let want: Vec<Vec<f32>> = samples
+        .iter()
+        .map(|s| plan.run_sample(&mut arena, s))
+        .collect::<anyhow::Result<_>>()?;
+
+    println!(
+        "\n[{COMBO_BENCH}] batch-plane scaling (packed, single worker, \
+         ms/sample):"
+    );
+    let mut rows = Vec::new();
+    let mut prev = f64::INFINITY;
+    let mut monotonic = true;
+    for bsz in BATCH_SIZES {
+        let mut barena = plan.batch_arena(bsz);
+        let got = plan.run_batch_planes(&mut barena, &samples[..bsz])?;
+        assert_eq!(
+            got.as_slice(),
+            &want[..bsz],
+            "B={bsz} diverged from per-sample run_sample"
+        );
+        let (ms, _, _) = measure(1, 5, || {
+            let _ = plan.run_batch_planes(&mut barena, &samples[..bsz]).unwrap();
+        });
+        let per_sample = ms / bsz as f64;
+        // 5% grace so timer noise cannot flag a flat plateau
+        if per_sample > prev * 1.05 {
+            monotonic = false;
+        }
+        prev = prev.min(per_sample);
+        let bc = plan.batch_cost(bsz);
+        println!(
+            "    B={bsz}  {per_sample:>8.3} ms/sample  (model: {:>10.0} \
+             cyc/sample, {} weight B amortized)",
+            bc.cycles_per_sample, bc.saved_weight_bytes
+        );
+        rows.push((
+            format!("b{bsz}"),
+            Json::obj(vec![
+                ("batch", Json::num(bsz as f64)),
+                ("packed_ms_per_sample", Json::num(per_sample)),
+                ("model_cycles_per_sample", Json::num(bc.cycles_per_sample)),
+                ("model_energy_pj_per_sample", Json::num(bc.energy_pj_per_sample)),
+                ("model_saved_weight_bytes", Json::num(bc.saved_weight_bytes as f64)),
+            ]),
+        ));
+    }
+    println!("    per-sample time monotonically non-increasing in B: {monotonic}");
+    Ok((rows, monotonic))
+}
 
 fn combo_rows() -> anyhow::Result<Vec<(String, Json)>> {
     let manifest = builtin_manifest(COMBO_BENCH)?;
@@ -202,15 +274,20 @@ fn main() -> anyhow::Result<()> {
 
     let combos = combo_rows()?;
     let combo_obj = Json::Obj(combos.into_iter().collect());
+    let (batch_cells, batch_monotonic) = batch_rows()?;
+    let batch_obj = Json::Obj(batch_cells.into_iter().collect());
 
     let report = Json::obj(vec![
-        ("version", Json::num(2.0)),
+        ("version", Json::num(3.0)),
         ("threads", Json::num(threads as f64)),
         ("batch", Json::num(batch as f64)),
         ("assignment", Json::str("stripy-2/4/8")),
         ("benches", Json::obj(bench_objs)),
         ("combo_bench", Json::str(COMBO_BENCH)),
         ("combos", combo_obj),
+        ("batch_bench", Json::str(COMBO_BENCH)),
+        ("batch_cells", batch_obj),
+        ("batch_monotonic_non_increasing", Json::Bool(batch_monotonic)),
     ]);
     let path = out_path();
     std::fs::write(&path, report.pretty())?;

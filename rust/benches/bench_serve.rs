@@ -9,8 +9,8 @@
 //!   call through the single batcher worker (the no-coalescing
 //!   baseline);
 //! * **micro_batch** — `max_batch = 16, max_wait_us = 1000`: pending
-//!   requests from unrelated clients coalesce into one `run_samples`
-//!   call that fans out across engine threads.
+//!   requests from unrelated clients coalesce into one batch-plane
+//!   engine call (weight-stationary amortization across riders).
 //!
 //! Per config it reports client-observed throughput, p50/p99 latency
 //! and the mean executed batch size (from the per-reply `batch` field),

@@ -1,30 +1,39 @@
-//! Perf-trajectory regression gate over two `BENCH_engine.json` files.
+//! Perf-trajectory regression gate over committed vs fresh bench JSON.
 //!
 //! ```bash
 //! cargo run --release --bin bench_compare -- \
-//!     BENCH_engine.json BENCH_engine.fresh.json [tolerance]
+//!     BENCH_engine.json BENCH_engine.fresh.json [tolerance] \
+//!     [--serve BENCH_serve.json BENCH_serve.fresh.json]
 //! ```
 //!
-//! Compares the committed trajectory (`baseline`) against a fresh
-//! `cargo bench --bench bench_engine` run and **fails (exit 1) when any
-//! model x backend cell regressed by more than `tolerance`** (default
-//! 0.20 = 20%, the ROADMAP gate).
+//! Compares the committed trajectories (`baseline`) against fresh
+//! `cargo bench` runs and **fails (exit 1) when any normalised cell
+//! regressed by more than `tolerance`** (default 0.20 = 20%, the
+//! ROADMAP gate).
 //!
-//! Raw milliseconds are machine-dependent, so cells are normalised
-//! before comparison: each engine backend's single-thread ms/inf is
-//! divided by the *same run's* seed-scalar ms/inf (the within-run
-//! speedup is what the trajectory tracks), and each `(p_x, p_w)` combo
-//! cell compares the packed/reference ratio.  The multithreaded cell is
-//! reported but not gated — its ratio to the single-thread seed scales
-//! with the runner's core count.  A cell regresses when its normalised
-//! value grows by more than `tolerance` relative to the baseline.
+//! Raw milliseconds and req/s are machine-dependent, so cells are
+//! normalised before comparison:
 //!
-//! A missing baseline or a JSON `version` mismatch skips the gate with
-//! a note (exit 0) — the first committed trajectory establishes the
-//! baseline and a format bump resets it.  A missing or unreadable
-//! *fresh* file is an error (the bench step failed to produce it), and
-//! so is a baseline cell that vanished from the fresh run: losing
-//! trajectory coverage must not pass silently.
+//! * engine: each backend's single-thread ms/inf is divided by the
+//!   *same run's* seed-scalar ms/inf; each `(p_x, p_w)` combo cell
+//!   compares the packed/reference ratio; each batch-plane cell (schema
+//!   v3) divides the packed per-sample time at batch size B by the same
+//!   run's seed scalar.  The multithreaded cell is reported but not
+//!   gated — its ratio to the single-thread seed scales with the
+//!   runner's core count.
+//! * serve: the micro-batching config relative to the *same run's*
+//!   `batch1` config — inverse throughput speedup and the p99 ratio.
+//!
+//! A cell regresses when its normalised value grows by more than
+//! `tolerance` relative to the baseline.
+//!
+//! A missing baseline or a JSON `version` mismatch skips that suite's
+//! gate with a note (exit 0) — the first committed trajectory
+//! establishes the baseline and a format bump resets it (CI's
+//! `commit-baseline` job re-commits on either condition).  A missing or
+//! unreadable *fresh* file is an error (the bench step failed to
+//! produce it), and so is a baseline cell that vanished from the fresh
+//! run: losing trajectory coverage must not pass silently.
 
 use std::path::Path;
 use std::process::ExitCode;
@@ -32,9 +41,9 @@ use std::process::ExitCode;
 use anyhow::{bail, Result};
 use cwmix::minijson::{parse_file, Json};
 
-/// A normalised trajectory cell: `(label, value)` where smaller is
-/// better and the value is machine-independent.
-fn cells(doc: &Json) -> Result<Vec<(String, f64)>> {
+/// Normalised engine-trajectory cells: `(label, value)` where smaller
+/// is better and the value is machine-independent.
+fn engine_cells(doc: &Json) -> Result<Vec<(String, f64)>> {
     let mut out = Vec::new();
     for (bench, obj) in doc.get("benches")?.as_obj()? {
         let seed = obj.get("seed_scalar_ms_per_inf")?.as_f64()?;
@@ -61,16 +70,58 @@ fn cells(doc: &Json) -> Result<Vec<(String, f64)>> {
             out.push((format!("combo/{combo}"), packed / reference));
         }
     }
+    // batch-plane cells (schema v3): packed per-sample time at batch
+    // size B over the same run's seed scalar on the same model
+    if let Some(cells) = doc.opt("batch_cells") {
+        let bench = doc.get("batch_bench")?.as_str()?.to_string();
+        let seed = doc
+            .get("benches")?
+            .get(&bench)?
+            .get("seed_scalar_ms_per_inf")?
+            .as_f64()?;
+        if seed <= 0.0 {
+            bail!("batch_bench {bench}: non-positive seed baseline");
+        }
+        for (label, obj) in cells.as_obj()? {
+            let ms = obj.get("packed_ms_per_sample")?.as_f64()?;
+            out.push((format!("batch/{label}"), ms / seed));
+        }
+    }
     Ok(out)
 }
 
-fn compare(baseline: &Json, fresh: &Json, tolerance: f64) -> Result<Vec<String>> {
-    let base: std::collections::BTreeMap<String, f64> = cells(baseline)?.into_iter().collect();
+/// Normalised serve-trajectory cells: the micro-batching config
+/// relative to the same run's no-coalescing `batch1` config.
+fn serve_cells(doc: &Json) -> Result<Vec<(String, f64)>> {
+    let b1 = doc.get("batch1")?;
+    let micro = doc.get("micro_batch")?;
+    let b1_rps = b1.get("throughput_rps")?.as_f64()?;
+    let micro_rps = micro.get("throughput_rps")?.as_f64()?;
+    let b1_p99 = b1.get("p99_ms")?.as_f64()?;
+    let micro_p99 = micro.get("p99_ms")?.as_f64()?;
+    if b1_rps <= 0.0 || micro_rps <= 0.0 || b1_p99 <= 0.0 {
+        bail!("serve trajectory has non-positive throughput/latency");
+    }
+    Ok(vec![
+        // inverse of the micro-batching speedup: grows when coalescing
+        // stops paying off
+        ("serve/throughput_batch1_over_micro".to_string(), b1_rps / micro_rps),
+        ("serve/p99_micro_over_batch1".to_string(), micro_p99 / b1_p99),
+    ])
+}
+
+fn compare(
+    base: &[(String, f64)],
+    fresh: &[(String, f64)],
+    tolerance: f64,
+) -> Vec<String> {
+    let base: std::collections::BTreeMap<&str, f64> =
+        base.iter().map(|(l, v)| (l.as_str(), *v)).collect();
     let mut regressions = Vec::new();
     let mut seen = std::collections::BTreeSet::new();
-    for (label, new_v) in cells(fresh)? {
-        seen.insert(label.clone());
-        let Some(&old_v) = base.get(&label) else {
+    for (label, new_v) in fresh {
+        seen.insert(label.as_str());
+        let Some(&old_v) = base.get(label.as_str()) else {
             println!("  new cell {label} = {new_v:.4} (no baseline, skipped)");
             continue;
         };
@@ -91,42 +142,89 @@ fn compare(baseline: &Json, fresh: &Json, tolerance: f64) -> Result<Vec<String>>
             regressions.push(format!("{label}: present in baseline, missing from fresh run"));
         }
     }
-    Ok(regressions)
+    regressions
 }
 
-fn run() -> Result<ExitCode> {
-    let args: Vec<String> = std::env::args().skip(1).collect();
-    if args.len() < 2 || args.len() > 3 {
-        bail!("usage: bench_compare <baseline.json> <fresh.json> [tolerance]");
-    }
-    let tolerance: f64 = match args.get(2) {
-        Some(t) => t.parse()?,
-        None => 0.20,
-    };
-    let (base_path, fresh_path) = (Path::new(&args[0]), Path::new(&args[1]));
+/// Gate one suite (engine or serve).  Returns the regression list, or
+/// an empty list when the gate is skipped (no baseline / version bump).
+fn gate_suite(
+    name: &str,
+    base_path: &Path,
+    fresh_path: &Path,
+    tolerance: f64,
+    cells: fn(&Json) -> Result<Vec<(String, f64)>>,
+) -> Result<Vec<String>> {
     if !base_path.exists() {
         println!(
-            "no committed baseline at {} — skipping the regression gate \
-             (commit a fresh BENCH_engine.json to establish the trajectory)",
+            "no committed {name} baseline at {} — skipping the regression \
+             gate (commit a fresh trajectory to establish it)",
             base_path.display()
         );
-        return Ok(ExitCode::SUCCESS);
+        return Ok(Vec::new());
     }
     let baseline = parse_file(base_path)?;
     let fresh = parse_file(fresh_path)?;
     let (bv, fv) = (baseline.get("version")?.as_f64()?, fresh.get("version")?.as_f64()?);
     if bv != fv {
         println!(
-            "trajectory format changed (baseline v{bv}, fresh v{fv}) — \
+            "{name} trajectory format changed (baseline v{bv}, fresh v{fv}) — \
              skipping the gate; commit the fresh file to reset the baseline"
         );
-        return Ok(ExitCode::SUCCESS);
+        return Ok(Vec::new());
     }
+    println!("{name} cells:");
+    Ok(compare(&cells(&baseline)?, &cells(&fresh)?, tolerance))
+}
+
+fn run() -> Result<ExitCode> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    // positional: <engine_base> <engine_fresh> [tolerance];
+    // optional:   --serve <serve_base> <serve_fresh>
+    let mut positional = Vec::new();
+    let mut serve_paths: Option<(String, String)> = None;
+    let mut i = 0;
+    while i < args.len() {
+        if args[i] == "--serve" {
+            if i + 2 >= args.len() {
+                bail!("--serve needs <baseline.json> <fresh.json>");
+            }
+            serve_paths = Some((args[i + 1].clone(), args[i + 2].clone()));
+            i += 3;
+        } else {
+            positional.push(args[i].clone());
+            i += 1;
+        }
+    }
+    if positional.len() < 2 || positional.len() > 3 {
+        bail!(
+            "usage: bench_compare <baseline.json> <fresh.json> [tolerance] \
+             [--serve <baseline.json> <fresh.json>]"
+        );
+    }
+    let tolerance: f64 = match positional.get(2) {
+        Some(t) => t.parse()?,
+        None => 0.20,
+    };
     println!(
         "bench_compare: normalised cells, tolerance {:.0}%",
         tolerance * 100.0
     );
-    let regressions = compare(&baseline, &fresh, tolerance)?;
+    let mut regressions = gate_suite(
+        "engine",
+        Path::new(&positional[0]),
+        Path::new(&positional[1]),
+        tolerance,
+        engine_cells,
+    )?;
+    if let Some((base, fresh)) = &serve_paths {
+        regressions.extend(gate_suite(
+            "serve",
+            Path::new(base),
+            Path::new(fresh),
+            tolerance,
+            serve_cells,
+        )?);
+    }
     if regressions.is_empty() {
         println!("no cell regressed by more than {:.0}%", tolerance * 100.0);
         return Ok(ExitCode::SUCCESS);
@@ -155,7 +253,7 @@ mod tests {
 
     fn doc(seed: f64, reference: f64, packed: f64) -> Json {
         parse(&format!(
-            r#"{{"version": 2, "benches": {{"ic": {{
+            r#"{{"version": 3, "benches": {{"ic": {{
                 "seed_scalar_ms_per_inf": {seed},
                 "engine_reference_ms_per_inf": {reference},
                 "engine_packed_ms_per_inf": {packed},
@@ -164,15 +262,33 @@ mod tests {
             "combos": {{"x2w2": {{
                 "reference_ms_per_inf": {reference},
                 "packed_ms_per_inf": {packed}
-            }}}}}}"#
+            }}}},
+            "batch_bench": "ic",
+            "batch_cells": {{
+                "b1": {{"packed_ms_per_sample": {packed}}},
+                "b8": {{"packed_ms_per_sample": {packed}}}
+            }}}}"#
         ))
         .unwrap()
+    }
+
+    fn serve_doc(b1_rps: f64, micro_rps: f64, b1_p99: f64, micro_p99: f64) -> Json {
+        parse(&format!(
+            r#"{{"version": 1,
+                "batch1": {{"throughput_rps": {b1_rps}, "p99_ms": {b1_p99}}},
+                "micro_batch": {{"throughput_rps": {micro_rps}, "p99_ms": {micro_p99}}}}}"#
+        ))
+        .unwrap()
+    }
+
+    fn diff(base: &Json, fresh: &Json, tol: f64) -> Vec<String> {
+        compare(&engine_cells(base).unwrap(), &engine_cells(fresh).unwrap(), tol)
     }
 
     #[test]
     fn same_run_is_clean() {
         let a = doc(10.0, 5.0, 2.0);
-        assert!(compare(&a, &a, 0.2).unwrap().is_empty());
+        assert!(diff(&a, &a, 0.2).is_empty());
     }
 
     #[test]
@@ -180,7 +296,7 @@ mod tests {
         // a uniformly 3x slower machine does not trip the gate
         let base = doc(10.0, 5.0, 2.0);
         let fresh = doc(30.0, 15.0, 6.0);
-        assert!(compare(&base, &fresh, 0.2).unwrap().is_empty());
+        assert!(diff(&base, &fresh, 0.2).is_empty());
     }
 
     #[test]
@@ -188,11 +304,13 @@ mod tests {
         // packed got 50% slower relative to the same run's seed
         let base = doc(10.0, 5.0, 2.0);
         let fresh = doc(10.0, 5.0, 3.0);
-        let regs = compare(&base, &fresh, 0.2).unwrap();
+        let regs = diff(&base, &fresh, 0.2);
         assert!(!regs.is_empty());
         assert!(regs.iter().any(|r| r.contains("engine_packed_ms_per_inf")));
-        // ... but a 50% tolerance lets it through
-        assert!(compare(&base, &fresh, 0.55).unwrap().is_empty());
+        // batch cells normalise by the same seed, so they trip too
+        assert!(regs.iter().any(|r| r.contains("batch/b8")));
+        // ... but a 55% tolerance lets it through
+        assert!(diff(&base, &fresh, 0.55).is_empty());
     }
 
     #[test]
@@ -203,17 +321,52 @@ mod tests {
         if let Json::Obj(o) = &mut fresh {
             o.remove("combos");
         }
-        let regs = compare(&base, &fresh, 0.2).unwrap();
+        let regs = diff(&base, &fresh, 0.2);
         assert!(regs.iter().any(|r| r.contains("missing from fresh run")));
     }
 
     #[test]
     fn cell_normalisation_shape() {
-        let c = cells(&doc(10.0, 5.0, 2.0)).unwrap();
-        // 2 single-thread backend cells + 1 combo cell; the mt cell is
-        // present in the JSON but not gated
-        assert_eq!(c.len(), 3);
+        let c = engine_cells(&doc(10.0, 5.0, 2.0)).unwrap();
+        // 2 single-thread backend cells + 1 combo cell + 2 batch cells;
+        // the mt cell is present in the JSON but not gated
+        assert_eq!(c.len(), 5);
         assert!(c.iter().any(|(l, v)| l == "combo/x2w2" && (*v - 0.4).abs() < 1e-9));
+        assert!(c.iter().any(|(l, v)| l == "batch/b8" && (*v - 0.2).abs() < 1e-9));
         assert!(!c.iter().any(|(l, _)| l.contains("mt")));
+    }
+
+    #[test]
+    fn v2_docs_without_batch_cells_still_parse() {
+        // pre-v3 baselines have no batch_cells; the extractor must not
+        // demand them (the version gate handles the schema bump, but a
+        // malformed doc should fail loudly, not silently)
+        let mut base = doc(10.0, 5.0, 2.0);
+        if let Json::Obj(o) = &mut base {
+            o.remove("batch_cells");
+            o.remove("batch_bench");
+        }
+        assert_eq!(engine_cells(&base).unwrap().len(), 3);
+    }
+
+    #[test]
+    fn serve_cells_normalise_within_run() {
+        let c = serve_cells(&serve_doc(100.0, 250.0, 20.0, 10.0)).unwrap();
+        assert_eq!(c.len(), 2);
+        assert!(c.iter().any(|(l, v)| l.ends_with("batch1_over_micro") && (*v - 0.4).abs() < 1e-9));
+        assert!(c.iter().any(|(l, v)| l.ends_with("micro_over_batch1") && (*v - 0.5).abs() < 1e-9));
+    }
+
+    #[test]
+    fn serve_regression_trips() {
+        // micro-batching throughput advantage halved: inverse speedup
+        // cell doubles
+        let base = serve_cells(&serve_doc(100.0, 250.0, 20.0, 10.0)).unwrap();
+        let fresh = serve_cells(&serve_doc(100.0, 125.0, 20.0, 10.0)).unwrap();
+        let regs = compare(&base, &fresh, 0.2);
+        assert!(regs.iter().any(|r| r.contains("throughput_batch1_over_micro")));
+        // machine speed cancels: both configs 2x slower is clean
+        let slow = serve_cells(&serve_doc(50.0, 125.0, 40.0, 20.0)).unwrap();
+        assert!(compare(&base, &slow, 0.2).is_empty());
     }
 }

@@ -1,43 +1,75 @@
-//! Per-worker scratch memory for plan execution.
+//! Per-worker scratch memory for plan execution — batch-plane layout.
 //!
-//! An [`Arena`] owns every buffer one worker thread needs to run any
-//! number of samples through an `ExecPlan`: the activation slots (two
-//! ping-pong scratch slots + one exactly-sized slot per saved residual
-//! tag) and the packed quantization/gather scratch.  Nothing is
-//! allocated per sample or per layer — the seed executor's per-layer
-//! `Vec` allocations and `HashMap<String, Act>` clones are what this
-//! replaces.
+//! An [`Arena`] owns every buffer one worker thread needs to run
+//! batches of up to `cap` samples through an `ExecPlan`, batch-major:
+//! the activation slots (two ping-pong scratch slots + one
+//! exactly-sized slot per saved residual tag), the packed
+//! quantization/gather scratch and the batched accumulator rows.
+//! Nothing is allocated per sample or per layer — the seed executor's
+//! per-layer `Vec` allocations and `HashMap<String, Act>` clones are
+//! what this replaced, and the batch-plane layout additionally removes
+//! the per-sample re-quantization the per-sample executor paid.
+//!
+//! **Stride addressing.** Every buffer holds `cap` per-sample regions
+//! at a fixed stride (the plan's per-sample sizes): sample `j`'s slice
+//! of slot `i` starts at `j * slot_len[i]`, its packed activation plane
+//! at `j * plane_len` and its im2col column at `j * col_len`.  The plan
+//! owns the strides; the arena only owns the storage.
 //!
 //! The quantization scratch is **sub-byte packed** (`u8`, not `u32`):
 //! `xplane` holds the executing layer's activation codes at its `p_x`
-//! width (one byte-aligned run per input pixel) and `col` holds the
-//! densely packed im2col column the dot kernels consume — `8 / p_x`
-//! times smaller than the unpacked lanes they replaced.
+//! width (one byte-aligned run per pixel, one plane per sample) and
+//! `col` holds the densely packed im2col columns the batched dot
+//! kernels consume — `8 / p_x` times smaller than the unpacked lanes
+//! they replaced, `cap` columns side by side so one weight fetch can
+//! ride every sample's column (weight-stationary execution).
 
-/// Scratch buffers for one execution worker.
+/// Scratch buffers for one execution worker, sized for `cap` samples.
 pub struct Arena {
-    /// activation slots, indexed by the plan's slot ids
+    /// batch capacity: samples per batch-plane pass
+    pub(super) cap: usize,
+    /// activation slots, indexed by the plan's slot ids; each holds
+    /// `cap` per-sample regions at the slot's stride
     pub(super) slots: Vec<Vec<f32>>,
-    /// packed PACT activation plane of the layer currently executing
-    /// (`p_x`-bit codes, one byte-aligned run per pixel)
+    /// packed PACT activation planes of the layer currently executing
+    /// (`p_x`-bit codes, one byte-aligned run per pixel, one plane per
+    /// sample at the plan's plane stride)
     pub(super) xplane: Vec<u8>,
-    /// densely packed im2col column / FC input codes (`p_x`-bit), with
-    /// slack bytes for the unaligned-assembly spill
+    /// densely packed im2col columns / FC input codes (`p_x`-bit), one
+    /// column per sample at the plan's column stride, each with slack
+    /// bytes for the unaligned-assembly spill
     pub(super) col: Vec<u8>,
+    /// batched `i32` dot accumulators (conv/dwconv), one per sample
+    pub(super) acc: Vec<i32>,
+    /// batched `i64` dot accumulators (FC), one per sample
+    pub(super) acc_wide: Vec<i64>,
 }
 
 impl Arena {
-    pub(super) fn new(slot_len: &[usize], plane_len: usize, col_len: usize) -> Arena {
+    pub(super) fn new(
+        slot_len: &[usize],
+        plane_len: usize,
+        col_len: usize,
+        cap: usize,
+    ) -> Arena {
         Arena {
-            slots: slot_len.iter().map(|&l| vec![0.0; l]).collect(),
-            xplane: vec![0; plane_len],
-            col: vec![0; col_len],
+            cap,
+            slots: slot_len.iter().map(|&l| vec![0.0; cap * l]).collect(),
+            xplane: vec![0; cap * plane_len],
+            col: vec![0; cap * col_len],
+            acc: vec![0; cap],
+            acc_wide: vec![0; cap],
         }
+    }
+
+    /// Samples one batch-plane pass through this arena can hold.
+    pub fn capacity(&self) -> usize {
+        self.cap
     }
 
     /// Total bytes held (diagnostics).
     pub fn bytes(&self) -> usize {
         let f: usize = self.slots.iter().map(|s| s.len() * 4).sum();
-        f + self.xplane.len() + self.col.len()
+        f + self.xplane.len() + self.col.len() + self.acc.len() * 4 + self.acc_wide.len() * 8
     }
 }

@@ -28,6 +28,18 @@
 //! [`LayerKernel::dot_wide`] accumulates in `i64` for FC layers whose
 //! `K` is unbounded.  Both match the scalar oracle exactly because
 //! integer addition is associative.
+//!
+//! **Batched entry points.** [`LayerKernel::dot_batch`] /
+//! [`LayerKernel::dot_wide_batch`] take `B` packed columns side by side
+//! (`stride` bytes apart) and fill one accumulator per column.  The
+//! packed backend's batch kernels are **weight-stationary**: each
+//! 32-bit weight word is fetched and sign-decoded **once**, then ridden
+//! across all `B` activation columns before the next word is touched —
+//! the batch-level analogue of MPIC amortizing its sub-byte weight
+//! unpack across a full `sdotp` register.  Per column the accumulation
+//! order is identical to the single-column kernel, so batched results
+//! are bit-identical by construction (asserted below for every cell,
+//! ragged K and extreme codes).
 
 use crate::deploy::DeployedLayer;
 use crate::precision_index;
@@ -41,12 +53,20 @@ pub trait KernelBackend: Send + Sync {
     fn prepare(&self, dl: &DeployedLayer) -> Box<dyn LayerKernel>;
 }
 
-/// Per-layer kernel: weight rows dotted against a packed activation
-/// column.
+/// Per-layer kernel: weight rows dotted against packed activation
+/// columns.
 ///
 /// `xcol` holds the layer's `K` activation codes (`p_x`-bit unsigned,
 /// packed densely LSB-first; slack bits zero).  The slice may be longer
 /// than `ceil(K * p_x / 8)` bytes — kernels only read the packed codes.
+///
+/// The batched entry points take `B = out.len()` columns side by side:
+/// sample `j`'s column starts at `cols[j * stride]`, each in the same
+/// packed layout `xcol` uses.  `out[j]` must be **bit-identical** to
+/// the per-column dot of column `j` — batching changes *when* weight
+/// words are fetched, never what is accumulated.  The defaults fall
+/// back to per-column dots; backends override them to amortize weight
+/// fetch + decode across the batch (weight-stationary execution).
 pub trait LayerKernel: Send + Sync {
     /// `i32` dot of output channel `c`'s weight row against `xcol`
     /// (conv/dwconv path).
@@ -54,6 +74,20 @@ pub trait LayerKernel: Send + Sync {
 
     /// `i64`-accumulating dot (FC path, unbounded K).
     fn dot_wide(&self, c: usize, xcol: &[u8]) -> i64;
+
+    /// Batched [`Self::dot`] over `out.len()` columns at `stride`.
+    fn dot_batch(&self, c: usize, cols: &[u8], stride: usize, out: &mut [i32]) {
+        for (j, o) in out.iter_mut().enumerate() {
+            *o = self.dot(c, &cols[j * stride..]);
+        }
+    }
+
+    /// Batched [`Self::dot_wide`] over `out.len()` columns at `stride`.
+    fn dot_wide_batch(&self, c: usize, cols: &[u8], stride: usize, out: &mut [i64]) {
+        for (j, o) in out.iter_mut().enumerate() {
+            *o = self.dot_wide(c, &cols[j * stride..]);
+        }
+    }
 
     /// Bytes of weight storage held by this kernel (diagnostics).
     fn weight_bytes(&self) -> usize;
@@ -163,15 +197,27 @@ pub struct PackedBackend;
 
 type RowDot = fn(&[u8], &[u8], usize) -> i32;
 type RowDotWide = fn(&[u8], &[u8], usize) -> i64;
+type RowDotBatch = fn(&[u8], usize, &[u8], usize, &mut [i32]);
+type RowDotWideBatch = fn(&[u8], usize, &[u8], usize, &mut [i64]);
 
-/// Generates one `(p_x, p_w)` SWAR kernel pair (`i32` + `i64`
-/// accumulation).  Per iteration the *wider* operand fills one 32-bit
-/// register (`LANES = 32 / max(p_x, p_w)` lane pairs, exactly one MPIC
-/// `sdotp`); the narrower operand contributes `LANES * min(p_x, p_w)`
-/// bits of the same fetch.  Tail codes past the last full register are
-/// decoded one at a time.
+/// Generates one `(p_x, p_w)` SWAR kernel family: single-column `i32` +
+/// `i64` dots and their **weight-stationary batched** variants.  Per
+/// iteration the *wider* operand fills one 32-bit register
+/// (`LANES = 32 / max(p_x, p_w)` lane pairs, exactly one MPIC `sdotp`);
+/// the narrower operand contributes `LANES * min(p_x, p_w)` bits of the
+/// same fetch.  Tail codes past the last full register are decoded one
+/// at a time.
+///
+/// The batched variants ride each fetched-and-decoded weight register
+/// across all `B = out.len()` activation columns before fetching the
+/// next one, so weight decode cost amortizes with the batch size
+/// exactly as on MPIC, where the sub-byte weight unpack dominates the
+/// `sdotp` issue rate.  Per sample the accumulation order (register
+/// ascending, lane ascending, then the scalar tail) is identical to the
+/// single-column kernel, so results are bit-identical by construction.
 macro_rules! swar_kernel {
-    ($dot:ident, $dot_wide:ident, $px:literal, $pw:literal) => {
+    ($dot:ident, $dot_wide:ident, $dot_batch:ident, $dot_wide_batch:ident,
+     $px:literal, $pw:literal) => {
         fn $dot(xcol: &[u8], wrow: &[u8], k: usize) -> i32 {
             const PX: u32 = $px;
             const PW: u32 = $pw;
@@ -222,18 +268,85 @@ macro_rules! swar_kernel {
             }
             acc
         }
+
+        fn $dot_batch(cols: &[u8], stride: usize, wrow: &[u8], k: usize, out: &mut [i32]) {
+            const PX: u32 = $px;
+            const PW: u32 = $pw;
+            const LANES: usize = (32 / if PX > PW { PX } else { PW }) as usize;
+            const XSTEP: usize = LANES * PX as usize / 8;
+            const WSTEP: usize = LANES * PW as usize / 8;
+            const XMASK: u32 = (1u32 << PX) - 1;
+            const WMASK: u32 = (1u32 << PW) - 1;
+            let full = k / LANES;
+            out.fill(0);
+            let mut ws = [0i32; LANES];
+            for i in 0..full {
+                // fetch + decode one weight register, ride every column
+                let ww = load_le(wrow, i * WSTEP, WSTEP);
+                for (lane, w) in ws.iter_mut().enumerate() {
+                    *w = sext(((ww >> (lane as u32 * PW)) & WMASK) as i32, PW);
+                }
+                let xoff = i * XSTEP;
+                for (j, acc) in out.iter_mut().enumerate() {
+                    let xw = load_le(cols, j * stride + xoff, XSTEP);
+                    for (lane, &w) in ws.iter().enumerate() {
+                        let x = ((xw >> (lane as u32 * PX)) & XMASK) as i32;
+                        *acc += x * w;
+                    }
+                }
+            }
+            for j in full * LANES..k {
+                let w = extract_weight(wrow, j, PW);
+                for (s, acc) in out.iter_mut().enumerate() {
+                    *acc += extract_code(&cols[s * stride..], j, PX) as i32 * w;
+                }
+            }
+        }
+
+        fn $dot_wide_batch(cols: &[u8], stride: usize, wrow: &[u8], k: usize, out: &mut [i64]) {
+            const PX: u32 = $px;
+            const PW: u32 = $pw;
+            const LANES: usize = (32 / if PX > PW { PX } else { PW }) as usize;
+            const XSTEP: usize = LANES * PX as usize / 8;
+            const WSTEP: usize = LANES * PW as usize / 8;
+            const XMASK: u32 = (1u32 << PX) - 1;
+            const WMASK: u32 = (1u32 << PW) - 1;
+            let full = k / LANES;
+            out.fill(0);
+            let mut ws = [0i64; LANES];
+            for i in 0..full {
+                let ww = load_le(wrow, i * WSTEP, WSTEP);
+                for (lane, w) in ws.iter_mut().enumerate() {
+                    *w = sext(((ww >> (lane as u32 * PW)) & WMASK) as i32, PW) as i64;
+                }
+                let xoff = i * XSTEP;
+                for (j, acc) in out.iter_mut().enumerate() {
+                    let xw = load_le(cols, j * stride + xoff, XSTEP);
+                    for (lane, &w) in ws.iter().enumerate() {
+                        let x = ((xw >> (lane as u32 * PX)) & XMASK) as i64;
+                        *acc += x * w;
+                    }
+                }
+            }
+            for j in full * LANES..k {
+                let w = extract_weight(wrow, j, PW) as i64;
+                for (s, acc) in out.iter_mut().enumerate() {
+                    *acc += extract_code(&cols[s * stride..], j, PX) as i64 * w;
+                }
+            }
+        }
     };
 }
 
-swar_kernel!(dot_x2_w2, dot_x2_w2_wide, 2, 2); // 16 lanes: u32 x, u32 w
-swar_kernel!(dot_x2_w4, dot_x2_w4_wide, 2, 4); //  8 lanes: u16 x, u32 w
-swar_kernel!(dot_x2_w8, dot_x2_w8_wide, 2, 8); //  4 lanes:  u8 x, u32 w
-swar_kernel!(dot_x4_w2, dot_x4_w2_wide, 4, 2); //  8 lanes: u32 x, u16 w
-swar_kernel!(dot_x4_w4, dot_x4_w4_wide, 4, 4); //  8 lanes: u32 x, u32 w
-swar_kernel!(dot_x4_w8, dot_x4_w8_wide, 4, 8); //  4 lanes: u16 x, u32 w
-swar_kernel!(dot_x8_w2, dot_x8_w2_wide, 8, 2); //  4 lanes: u32 x,  u8 w
-swar_kernel!(dot_x8_w4, dot_x8_w4_wide, 8, 4); //  4 lanes: u32 x, u16 w
-swar_kernel!(dot_x8_w8, dot_x8_w8_wide, 8, 8); //  4 lanes: u32 x, u32 w
+swar_kernel!(dot_x2_w2, dot_x2_w2_wide, dot_x2_w2_b, dot_x2_w2_wb, 2, 2); // 16 lanes
+swar_kernel!(dot_x2_w4, dot_x2_w4_wide, dot_x2_w4_b, dot_x2_w4_wb, 2, 4); //  8 lanes
+swar_kernel!(dot_x2_w8, dot_x2_w8_wide, dot_x2_w8_b, dot_x2_w8_wb, 2, 8); //  4 lanes
+swar_kernel!(dot_x4_w2, dot_x4_w2_wide, dot_x4_w2_b, dot_x4_w2_wb, 4, 2); //  8 lanes
+swar_kernel!(dot_x4_w4, dot_x4_w4_wide, dot_x4_w4_b, dot_x4_w4_wb, 4, 4); //  8 lanes
+swar_kernel!(dot_x4_w8, dot_x4_w8_wide, dot_x4_w8_b, dot_x4_w8_wb, 4, 8); //  4 lanes
+swar_kernel!(dot_x8_w2, dot_x8_w2_wide, dot_x8_w2_b, dot_x8_w2_wb, 8, 2); //  4 lanes
+swar_kernel!(dot_x8_w4, dot_x8_w4_wide, dot_x8_w4_b, dot_x8_w4_wb, 8, 4); //  4 lanes
+swar_kernel!(dot_x8_w8, dot_x8_w8_wide, dot_x8_w8_b, dot_x8_w8_wb, 8, 8); //  4 lanes
 
 /// Kernel table indexed `[precision_index(p_x)][precision_index(p_w)]`,
 /// mirroring MPIC's per-(p_x, p_w) SIMD mode CSR.  Both operands arrive
@@ -249,6 +362,20 @@ const DOT_KERNELS_WIDE: [[RowDotWide; 3]; 3] = [
     [dot_x2_w2_wide, dot_x2_w4_wide, dot_x2_w8_wide],
     [dot_x4_w2_wide, dot_x4_w4_wide, dot_x4_w8_wide],
     [dot_x8_w2_wide, dot_x8_w4_wide, dot_x8_w8_wide],
+];
+
+/// Weight-stationary batched mirror of [`DOT_KERNELS`]: one weight
+/// register fetch + decode ridden across all `B` packed columns.
+const DOT_KERNELS_BATCH: [[RowDotBatch; 3]; 3] = [
+    [dot_x2_w2_b, dot_x2_w4_b, dot_x2_w8_b],
+    [dot_x4_w2_b, dot_x4_w4_b, dot_x4_w8_b],
+    [dot_x8_w2_b, dot_x8_w4_b, dot_x8_w8_b],
+];
+
+const DOT_KERNELS_WIDE_BATCH: [[RowDotWideBatch; 3]; 3] = [
+    [dot_x2_w2_wb, dot_x2_w4_wb, dot_x2_w8_wb],
+    [dot_x4_w2_wb, dot_x4_w4_wb, dot_x4_w8_wb],
+    [dot_x8_w2_wb, dot_x8_w4_wb, dot_x8_w8_wb],
 ];
 
 struct PackedRow {
@@ -318,6 +445,18 @@ impl LayerKernel for PackedKernel {
         DOT_KERNELS_WIDE[self.aidx][widx](xcol, row, self.k)
     }
 
+    #[inline]
+    fn dot_batch(&self, c: usize, cols: &[u8], stride: usize, out: &mut [i32]) {
+        let (row, widx) = self.row(c);
+        DOT_KERNELS_BATCH[self.aidx][widx](cols, stride, row, self.k, out);
+    }
+
+    #[inline]
+    fn dot_wide_batch(&self, c: usize, cols: &[u8], stride: usize, out: &mut [i64]) {
+        let (row, widx) = self.row(c);
+        DOT_KERNELS_WIDE_BATCH[self.aidx][widx](cols, stride, row, self.k, out);
+    }
+
     fn weight_bytes(&self) -> usize {
         self.bytes.len()
     }
@@ -378,6 +517,77 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// Weight-stationary batch kernels are bit-identical to running the
+    /// single-column kernel per column — every table cell, ragged K
+    /// values, extreme codes, batch sizes including 1, and a stride
+    /// wider than the column (batch-plane slack bytes between columns).
+    #[test]
+    fn batch_kernels_match_per_column_all_cells() {
+        let mut rng = Pcg32::seeded(23);
+        for (ai, &px) in PRECISIONS.iter().enumerate() {
+            for (wi, &pw) in PRECISIONS.iter().enumerate() {
+                for k in [1usize, 5, 16, 17, 33, 127] {
+                    for b in [1usize, 2, 3, 8] {
+                        let mut w = random_row(&mut rng, k, pw);
+                        w[0] = -(1i32 << (pw - 1));
+                        let wrow = pack_subbyte(&w, pw);
+                        let col_bytes = (k * px as usize).div_ceil(8);
+                        let stride = col_bytes + 3; // slack between columns
+                        let mut cols = vec![0u8; b * stride];
+                        let mut singles32 = vec![0i32; b];
+                        let mut singles64 = vec![0i64; b];
+                        for j in 0..b {
+                            let mut x: Vec<u32> =
+                                (0..k).map(|_| rng.below(1 << px)).collect();
+                            x[0] = (1 << px) - 1;
+                            let packed = pack_acts_subbyte(&x, px);
+                            cols[j * stride..j * stride + col_bytes]
+                                .copy_from_slice(&packed);
+                            singles32[j] =
+                                DOT_KERNELS[ai][wi](&packed, &wrow, k);
+                            singles64[j] =
+                                DOT_KERNELS_WIDE[ai][wi](&packed, &wrow, k);
+                        }
+                        let mut out32 = vec![0i32; b];
+                        DOT_KERNELS_BATCH[ai][wi](&cols, stride, &wrow, k, &mut out32);
+                        assert_eq!(out32, singles32, "px={px} pw={pw} k={k} b={b}");
+                        let mut out64 = vec![0i64; b];
+                        DOT_KERNELS_WIDE_BATCH[ai][wi](&cols, stride, &wrow, k, &mut out64);
+                        assert_eq!(out64, singles64, "wide px={px} pw={pw} k={k} b={b}");
+                    }
+                }
+            }
+        }
+    }
+
+    /// The default (fallback) batched entry points on a backend that
+    /// does not override them agree with its per-column dots.
+    #[test]
+    fn default_batch_entry_points_match_per_column() {
+        let mut rng = Pcg32::seeded(29);
+        let (k, px, b) = (29usize, 4u32, 3usize);
+        let w = random_row(&mut rng, k, 8);
+        let kern = ReferenceKernel { k, act_bits: px, qw: w };
+        let col_bytes = (k * px as usize).div_ceil(8);
+        let stride = col_bytes + 1;
+        let mut cols = vec![0u8; b * stride];
+        let mut want32 = vec![0i32; b];
+        let mut want64 = vec![0i64; b];
+        for j in 0..b {
+            let x: Vec<u32> = (0..k).map(|_| rng.below(1 << px)).collect();
+            let packed = pack_acts_subbyte(&x, px);
+            cols[j * stride..j * stride + col_bytes].copy_from_slice(&packed);
+            want32[j] = kern.dot(0, &packed);
+            want64[j] = kern.dot_wide(0, &packed);
+        }
+        let mut out32 = vec![0i32; b];
+        kern.dot_batch(0, &cols, stride, &mut out32);
+        assert_eq!(out32, want32);
+        let mut out64 = vec![0i64; b];
+        kern.dot_wide_batch(0, &cols, stride, &mut out64);
+        assert_eq!(out64, want64);
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! Compile-once / run-many integer inference engine.
+//! Compile-once / run-many integer inference engine, batch-major.
 //!
 //! The seed deployed-inference path (`mpic::exec`) interprets a
 //! [`DeployedModel`](crate::deploy::DeployedModel) sample by sample,
@@ -13,22 +13,29 @@
 //!   [`InferenceCost`](crate::mpic::cost::InferenceCost)
 //!   (input-independent, accounted at compile time), and per-layer
 //!   kernels prepared by a [`KernelBackend`];
-//! * [`ExecPlan::run_sample`] / [`ExecPlan::run_batch`] execute it with
-//!   zero per-sample allocation besides the returned outputs: each
-//!   quantized layer's input is PACT-quantized **once into a packed
-//!   sub-byte plane** (`p_x`-bit codes, one byte-aligned run per pixel)
-//!   and the dot kernels consume densely packed columns gathered from
-//!   it.  Batches fan out across `std::thread::scope` workers with
-//!   per-thread [`Arena`]s;
+//! * [`ExecPlan::run_batch_planes`] executes a whole batch
+//!   **batch-major** with zero per-sample allocation besides the
+//!   returned outputs: per quantized layer, every sample's input is
+//!   PACT-quantized into a packed sub-byte plane (`p_x`-bit codes, one
+//!   byte-aligned run per pixel, one stride-addressed plane per sample
+//!   in the batch [`Arena`]) in a single pass, and the dot kernels'
+//!   batched entry points ride each fetched weight word across all `B`
+//!   packed columns (weight-stationary SWAR).  [`ExecPlan::run_sample`]
+//!   is the one-sample batch; [`ExecPlan::run_samples`] /
+//!   [`ExecPlan::run_batch`] shard across `std::thread::scope` workers
+//!   **by batch-chunk** (≤ [`MAX_BATCH_CHUNK`] samples per pass), one
+//!   batch [`Arena`] per worker;
 //! * [`KernelBackend`] is the pluggable seam for the integer dot
 //!   kernels: [`ReferenceBackend`] (scalar `i32` weight rows, the
 //!   in-engine bit-exactness oracle) and [`PackedBackend`] (sub-byte
 //!   bit-packed weight rows × packed activation columns through nine
-//!   distinct per-`(p_x, p_w)` SWAR kernels, mirroring MPIC's
+//!   distinct per-`(p_x, p_w)` SWAR kernels — each with a
+//!   weight-stationary batched variant — mirroring MPIC's
 //!   mixed-precision `sdotp` modes).  All backends are bit-identical by
 //!   contract — `tests/engine_equivalence.rs` enforces it against
 //!   `mpic::exec::run_sample` across all nine `(p_x, p_w) ∈ {2,4,8}²`
-//!   combos and the four benchmark topologies.
+//!   combos and the four benchmark topologies, and
+//!   `tests/engine_batch_plane.rs` re-enforces it per batch size.
 //!
 //! There is deliberately **no** per-call convenience wrapper that
 //! compiles and runs in one shot: every caller holds an [`ExecPlan`]
@@ -43,4 +50,4 @@ pub use backend::{
     backend_by_name, KernelBackend, LayerKernel, PackedBackend,
     ReferenceBackend,
 };
-pub use plan::{engine_threads, ExecPlan};
+pub use plan::{engine_threads, ExecPlan, MAX_BATCH_CHUNK};

@@ -21,27 +21,40 @@
 //!   (costs are input-independent), so running a sample does zero cost
 //!   bookkeeping.
 //!
-//! Per quantized layer, execution quantizes the input **once** into a
-//! packed sub-byte plane (`p_x`-bit codes, `quant::pack_acts_subbyte`
-//! layout, one byte-aligned run per pixel) held in the [`Arena`], then
-//! assembles a densely packed im2col column per output pixel that every
-//! output channel's dot kernel reuses — touching `8 / p_x` times less
-//! activation memory than unpacked `i32` lanes.  1x1 convolutions and FC
-//! layers skip the copy entirely: their column *is* a plane slice.
+//! Execution is **batch-major** ([`ExecPlan::run_batch_planes`]): the
+//! plan walks the node list once per *batch*, not once per sample.  Per
+//! quantized layer it quantizes every sample's input into a packed
+//! sub-byte plane (`p_x`-bit codes, `quant::pack_acts_subbyte` layout,
+//! one byte-aligned run per pixel, one plane per sample at a fixed
+//! stride in the [`Arena`]) in one pass — PACT scale and plane geometry
+//! are read once per layer for the whole batch — then assembles, per
+//! output pixel, one densely packed im2col column *per sample* and
+//! hands all `B` columns to the kernel's batched entry point
+//! (`dot_batch`/`dot_wide_batch`), where each fetched weight word rides
+//! every column (weight-stationary SWAR; gather tables are read once
+//! per pixel for the whole batch).  1x1 convolutions and FC layers skip
+//! the column copy entirely: their columns *are* plane slices,
+//! batch-addressed at the plane stride with zero copies.
 //!
-//! [`ExecPlan::run_batch`] fans samples out across `std::thread::scope`
-//! workers, each with its own [`Arena`].
+//! [`ExecPlan::run_samples`] shards a batch across `std::thread::scope`
+//! workers **by batch-chunk** — each worker runs contiguous chunks of
+//! up to [`MAX_BATCH_CHUNK`] samples through its own batch [`Arena`] —
+//! and [`ExecPlan::run_sample`] is the one-sample batch.
 //!
-//! Numerical contract: for any backend, outputs are **bit-identical** to
-//! the scalar oracle `mpic::exec::run_sample` — asserted layer-type by
-//! layer-type in `tests/engine_equivalence.rs`.
+//! Numerical contract: for any backend and any batch size, outputs are
+//! **bit-identical** to the scalar oracle `mpic::exec::run_sample` —
+//! batching changes *when* work happens (quantize/gather/decode once
+//! per batch instead of once per sample), never what is computed.
+//! Asserted layer-type by layer-type in `tests/engine_equivalence.rs`
+//! and batch-size by batch-size in `tests/engine_batch_plane.rs`.
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::deploy::{DeployedLayer, DeployedModel, SubConv};
 use crate::energy::CostLut;
 use crate::mpic::cost::{
-    account_group, account_memory, account_structural, InferenceCost, LayerCost,
+    account_group, account_memory, account_structural, BatchCost, InferenceCost,
+    LayerCost,
 };
 use crate::mpic::memory;
 
@@ -132,7 +145,16 @@ pub struct ExecPlan {
     permute: bool,
     cost: InferenceCost,
     weight_bytes: usize,
+    /// modeled per-sample packed weight traffic (Eq. (7) flash bytes),
+    /// the batch-amortizable share of `InferenceCost::total_mem_bytes`
+    weight_traffic_bytes: u64,
 }
+
+/// Samples per batch-plane pass (and per worker arena): bounds arena
+/// memory — every arena buffer scales with the batch capacity — while
+/// keeping weight-decode amortization essentially at its asymptote
+/// (the once-per-batch work is `1/B` of the total by B=32).
+pub const MAX_BATCH_CHUNK: usize = 32;
 
 const SCRATCH_A: usize = 0;
 const SCRATCH_B: usize = 1;
@@ -169,6 +191,7 @@ impl ExecPlan {
         let mut plane_len = 0usize;
         let mut col_len = 0usize;
         let mut weight_bytes = 0usize;
+        let mut weight_traffic_bytes = 0u64;
         let mut tags: std::collections::HashMap<String, (usize, (usize, usize, usize))> =
             std::collections::HashMap::new();
         let mut cur = SCRATCH_A;
@@ -192,6 +215,7 @@ impl ExecPlan {
                 Some(dl) => {
                     let op = Self::compile_quant(dl, (h, w, c), lut, backend, &tags, &mut lc)?;
                     weight_bytes += op.kernel.weight_bytes();
+                    weight_traffic_bytes += dl.packed_bytes() as u64;
                     plane_len = plane_len.max(op.plane_bytes);
                     col_len = col_len.max(op.col_bytes + COL_SLACK);
                     (h, w, c) = if op.fc {
@@ -282,6 +306,7 @@ impl ExecPlan {
             permute,
             cost,
             weight_bytes,
+            weight_traffic_bytes,
         })
     }
 
@@ -447,76 +472,145 @@ impl ExecPlan {
         &self.cost
     }
 
+    /// Amortized cost report for a `batch`-sample batch-plane pass:
+    /// per-group scheduling and packed weight traffic are paid once per
+    /// batch under weight-stationary execution (see
+    /// [`InferenceCost::batch_cost`]).
+    pub fn batch_cost(&self, batch: usize) -> BatchCost {
+        self.cost.batch_cost(batch, self.weight_traffic_bytes)
+    }
+
     /// Bytes of weight storage across all layer kernels.
     pub fn weight_bytes(&self) -> usize {
         self.weight_bytes
     }
 
-    /// Allocate a worker arena sized for this plan.
+    /// Allocate a one-sample worker arena for this plan.
     pub fn arena(&self) -> Arena {
-        Arena::new(&self.slot_len, self.plane_len, self.col_len)
+        self.batch_arena(1)
+    }
+
+    /// Allocate a worker arena with batch-plane capacity for `cap`
+    /// samples (every buffer holds `cap` stride-addressed regions).
+    pub fn batch_arena(&self, cap: usize) -> Arena {
+        Arena::new(&self.slot_len, self.plane_len, self.col_len, cap.max(1))
     }
 
     // ---- execution ---------------------------------------------------------
 
     /// Run one sample using `arena` scratch; returns the output
-    /// activations in natural (un-permuted) channel order.
+    /// activations in natural (un-permuted) channel order.  This is the
+    /// one-sample batch through [`Self::run_batch_planes`] — there is a
+    /// single execution path.
     pub fn run_sample(
         &self,
         arena: &mut Arena,
         input: &[f32],
     ) -> Result<Vec<f32>> {
-        if input.len() != self.feat {
-            bail!("input length {} != {}", input.len(), self.feat);
+        let mut outs = self.run_batch_planes(arena, &[input])?;
+        Ok(outs.pop().expect("one output per sample"))
+    }
+
+    /// Execute `samples` **batch-major** through `arena` (capacity must
+    /// cover the batch): per quantized layer, all `B` activation planes
+    /// are quantized/packed in one pass, gather tables are read once
+    /// per output pixel for the whole batch, and the kernels' batched
+    /// entry points ride each decoded weight word across all `B`
+    /// columns.  Outputs are in input order, bit-identical to
+    /// [`Self::run_sample`] per sample.
+    pub fn run_batch_planes(
+        &self,
+        arena: &mut Arena,
+        samples: &[&[f32]],
+    ) -> Result<Vec<Vec<f32>>> {
+        let b = samples.len();
+        if b == 0 {
+            return Ok(Vec::new());
         }
-        let Arena { slots, xplane, col } = arena;
-        slots[SCRATCH_A][..self.feat].copy_from_slice(input);
+        if b > arena.capacity() {
+            bail!("batch of {b} exceeds arena capacity {}", arena.capacity());
+        }
+        for s in samples {
+            if s.len() != self.feat {
+                bail!("input length {} != {}", s.len(), self.feat);
+            }
+        }
+        let Arena { slots, xplane, col, acc, acc_wide, .. } = arena;
+        let sl = &self.slot_len;
+        for (j, s) in samples.iter().enumerate() {
+            slots[SCRATCH_A][j * sl[SCRATCH_A]..][..self.feat].copy_from_slice(s);
+        }
 
         for node in &self.nodes {
             match &node.kind {
                 NodeKind::NoOp => {}
                 NodeKind::AvgPool { in_h, in_w, c } => {
                     let (dst, src) = pair(slots, node.dst, node.src);
-                    dst[..*c].fill(0.0);
-                    for y in 0..*in_h {
-                        for x in 0..*in_w {
-                            let base = (y * in_w + x) * c;
-                            for ch in 0..*c {
-                                dst[ch] += src[base + ch];
+                    for j in 0..b {
+                        let dst = &mut dst[j * sl[node.dst]..][..*c];
+                        let src = &src[j * sl[node.src]..];
+                        dst.fill(0.0);
+                        for y in 0..*in_h {
+                            for x in 0..*in_w {
+                                let base = (y * in_w + x) * c;
+                                for ch in 0..*c {
+                                    dst[ch] += src[base + ch];
+                                }
                             }
                         }
-                    }
-                    let n = (in_h * in_w) as f32;
-                    for v in dst[..*c].iter_mut() {
-                        *v /= n;
+                        let n = (in_h * in_w) as f32;
+                        for v in dst.iter_mut() {
+                            *v /= n;
+                        }
                     }
                 }
                 NodeKind::Add { other, len, relu } => {
                     if node.dst != node.src {
                         let (dst, src) = pair(slots, node.dst, node.src);
-                        dst[..*len].copy_from_slice(&src[..*len]);
+                        for j in 0..b {
+                            dst[j * sl[node.dst]..][..*len]
+                                .copy_from_slice(&src[j * sl[node.src]..][..*len]);
+                        }
                     }
                     let (dst, oth) = pair(slots, node.dst, *other);
-                    for (d, &o) in dst[..*len].iter_mut().zip(&oth[..*len]) {
-                        *d += o;
-                        if *relu {
-                            *d = d.max(0.0);
+                    for j in 0..b {
+                        let dst = &mut dst[j * sl[node.dst]..][..*len];
+                        let oth = &oth[j * sl[*other]..][..*len];
+                        for (d, &o) in dst.iter_mut().zip(oth) {
+                            *d += o;
+                            if *relu {
+                                *d = d.max(0.0);
+                            }
                         }
                     }
                 }
                 NodeKind::Quant(op) => {
                     {
                         let (dst, src) = pair(slots, node.dst, node.src);
-                        exec_quant(op, src, dst, xplane, col);
+                        exec_quant_batch(
+                            op,
+                            src,
+                            sl[node.src],
+                            dst,
+                            sl[node.dst],
+                            xplane,
+                            self.plane_len,
+                            col,
+                            self.col_len,
+                            &mut acc[..b],
+                            &mut acc_wide[..b],
+                        );
                     }
                     if let Some(pa) = &op.post_add {
                         let (dst, oth) = pair(slots, node.dst, pa.other);
-                        for (d, &o) in
-                            dst[..pa.len].iter_mut().zip(&oth[..pa.len])
-                        {
-                            *d += o;
-                            if pa.relu {
-                                *d = d.max(0.0);
+                        for j in 0..b {
+                            let dst = &mut dst[j * sl[node.dst]..][..pa.len];
+                            let oth = &oth[j * sl[pa.other]..][..pa.len];
+                            for (d, &o) in dst.iter_mut().zip(oth) {
+                                *d += o;
+                                if pa.relu {
+                                    *d = d.max(0.0);
+                                }
                             }
                         }
                     }
@@ -525,23 +619,29 @@ impl ExecPlan {
             if let Some(slot) = node.save {
                 if slot != node.dst {
                     let (save, out) = pair(slots, slot, node.dst);
-                    save[..node.out_len]
-                        .copy_from_slice(&out[..node.out_len]);
+                    for j in 0..b {
+                        save[j * sl[slot]..][..node.out_len]
+                            .copy_from_slice(&out[j * sl[node.dst]..][..node.out_len]);
+                    }
                 }
             }
         }
 
-        let out = &slots[self.out_slot][..self.out_len];
-        if self.permute {
-            // un-permute the output space (free relabeling on device)
-            let mut natural = vec![0.0f32; self.out_len];
-            for (new_c, &orig_c) in self.output_perm.iter().enumerate() {
-                natural[orig_c] = out[new_c];
+        let mut outs = Vec::with_capacity(b);
+        for j in 0..b {
+            let out = &slots[self.out_slot][j * sl[self.out_slot]..][..self.out_len];
+            if self.permute {
+                // un-permute the output space (free relabeling on device)
+                let mut natural = vec![0.0f32; self.out_len];
+                for (new_c, &orig_c) in self.output_perm.iter().enumerate() {
+                    natural[orig_c] = out[new_c];
+                }
+                outs.push(natural);
+            } else {
+                outs.push(out.to_vec());
             }
-            Ok(natural)
-        } else {
-            Ok(out.to_vec())
         }
+        Ok(outs)
     }
 
     /// Run a batch of flattened samples across worker threads.
@@ -583,12 +683,19 @@ impl ExecPlan {
     /// Run an explicit list of samples (not necessarily contiguous in
     /// memory) across worker threads — the execution seam the serving
     /// micro-batcher uses: coalesced requests each own their input
-    /// buffer, and this runs them as one batch without first copying
-    /// them into a single contiguous slab.
+    /// buffer, and this runs them through the batch-plane path without
+    /// first copying them into a single contiguous slab.
     ///
-    /// Outputs are returned in input order and are bit-identical to
-    /// calling [`Self::run_sample`] per sample (the same code path runs
-    /// under every worker).
+    /// Sharding is **by batch-chunk**, not by sample: each worker runs
+    /// contiguous chunks of up to [`MAX_BATCH_CHUNK`] samples through
+    /// [`Self::run_batch_planes`] with its own batch [`Arena`].  Note
+    /// the per-worker chunk is `n / threads` — a caller that fans a
+    /// small batch out to `threads >= n` workers is back to one-sample
+    /// passes with no weight-decode amortization, so amortization-aware
+    /// callers cap `threads` (the serving batcher allows at most one
+    /// worker per four riders).  Outputs are returned in input order
+    /// and are bit-identical to calling [`Self::run_sample`] per
+    /// sample.
     pub fn run_samples(
         &self,
         samples: &[&[f32]],
@@ -598,15 +705,10 @@ impl ExecPlan {
         if n == 0 {
             return Ok(Vec::new());
         }
-        if threads <= 1 || n <= 1 {
-            let mut arena = self.arena();
-            let mut outs = Vec::with_capacity(n);
-            for s in samples {
-                outs.push(self.run_sample(&mut arena, s)?);
-            }
-            return Ok(outs);
+        let threads = threads.clamp(1, n);
+        if threads == 1 {
+            return self.run_chunked(samples);
         }
-        let threads = threads.min(n);
         let chunk = n.div_ceil(threads);
         let ranges: Vec<(usize, usize)> = (0..threads)
             .map(|t| (t * chunk, ((t + 1) * chunk).min(n)))
@@ -616,13 +718,7 @@ impl ExecPlan {
             let handles: Vec<_> = ranges
                 .iter()
                 .map(|&(a, b)| {
-                    scope.spawn(move || {
-                        let mut arena = self.arena();
-                        samples[a..b]
-                            .iter()
-                            .map(|s| self.run_sample(&mut arena, s))
-                            .collect()
-                    })
+                    scope.spawn(move || self.run_chunked(&samples[a..b]))
                 })
                 .collect();
             handles
@@ -633,6 +729,17 @@ impl ExecPlan {
         let mut outs = Vec::with_capacity(n);
         for r in results {
             outs.extend(r?);
+        }
+        Ok(outs)
+    }
+
+    /// One worker's share: batch-plane passes of up to
+    /// [`MAX_BATCH_CHUNK`] samples through a single reused arena.
+    fn run_chunked(&self, samples: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        let mut arena = self.batch_arena(samples.len().min(MAX_BATCH_CHUNK));
+        let mut outs = Vec::with_capacity(samples.len());
+        for chunk in samples.chunks(MAX_BATCH_CHUNK) {
+            outs.append(&mut self.run_batch_planes(&mut arena, chunk)?);
         }
         Ok(outs)
     }
@@ -687,24 +794,38 @@ fn or_bits(dst: &mut [u8], pos: usize, src: &[u8], nbits: usize) {
     }
 }
 
-/// One quantized layer on one sample:
-/// quantize-to-packed-plane → gather packed columns → dot → epilogue.
-fn exec_quant(
+/// One quantized layer on a `B`-sample batch (`B = acc.len()`),
+/// batch-major: quantize all `B` planes → gather `B` packed columns per
+/// output pixel → batched weight-stationary dot → epilogue per sample.
+/// Per sample the arithmetic and its order are identical to the
+/// one-sample path, so results are bit-identical to `run_sample`.
+#[allow(clippy::too_many_arguments)]
+fn exec_quant_batch(
     op: &QuantOp,
-    src: &mut [f32],
+    src: &[f32],
+    src_stride: usize,
     dst: &mut [f32],
+    dst_stride: usize,
     xplane: &mut [u8],
+    plane_stride: usize,
     col: &mut [u8],
+    col_stride: usize,
+    acc: &mut [i32],
+    acc_wide: &mut [i64],
 ) {
-    // PACT quantization of the whole input buffer, fused with sub-byte
-    // packing (identical arithmetic to quant::quantize_acts_pact, same
-    // layout as quant::pack_acts_subbyte, pixels byte-aligned)
+    let b = acc.len();
+    // PACT quantization of every sample's input buffer, fused with
+    // sub-byte packing (identical arithmetic to
+    // quant::quantize_acts_pact, same layout as quant::pack_acts_subbyte,
+    // pixels byte-aligned): one pass over the batch, PACT scale and
+    // plane geometry read once for all B samples
     let a = op.act_alpha;
     let eps = op.act_eps;
     let pxs = op.act_bits as usize;
-    {
-        let plane = &mut xplane[..op.plane_bytes];
+    for j in 0..b {
+        let plane = &mut xplane[j * plane_stride..][..op.plane_bytes];
         plane.fill(0);
+        let src = &src[j * src_stride..];
         for (p, pix) in src[..op.in_len].chunks_exact(op.cin).enumerate() {
             let base = p * op.pixel_bytes * 8;
             for (ci, &v) in pix.iter().enumerate() {
@@ -714,18 +835,21 @@ fn exec_quant(
             }
         }
     }
-    let plane = &xplane[..op.plane_bytes];
+    let xplane = &*xplane;
 
     if op.fc {
-        // the packed plane IS the FC column — zero-copy
+        // the packed planes ARE the FC columns — the whole batch is
+        // addressed zero-copy at the plane stride
         for g in &op.groups {
             for c in g.start..g.start + g.len {
-                let acc = op.kernel.dot_wide(c, plane);
-                let mut y = acc as f32 * op.a_eps[c] + op.b_fold[c];
-                if op.relu_inline {
-                    y = y.max(0.0);
+                op.kernel.dot_wide_batch(c, xplane, plane_stride, acc_wide);
+                for (j, &av) in acc_wide.iter().enumerate() {
+                    let mut y = av as f32 * op.a_eps[c] + op.b_fold[c];
+                    if op.relu_inline {
+                        y = y.max(0.0);
+                    }
+                    dst[j * dst_stride + c] = y;
                 }
-                dst[c] = y;
             }
         }
         return;
@@ -734,94 +858,115 @@ fn exec_quant(
     let kk = op.kk;
     if op.depthwise {
         // depthwise: filter c reads only input channel c — extract the
-        // kk-point window per (pixel, channel) into a dense column.
-        // Pixels start byte-aligned and p_x divides 8, so a channel's
-        // code never straddles a byte.
-        let colb = &mut col[..op.col_bytes];
+        // kk-point window per (pixel, channel) into one dense column
+        // per sample.  Pixels start byte-aligned and p_x divides 8, so
+        // a channel's code never straddles a byte.
         let mask = ((1u16 << op.act_bits) - 1) as u8;
         for pix in 0..op.out_h * op.out_w {
             let tbl = &op.gather[pix * kk..(pix + 1) * kk];
             let orow = pix * op.cout;
             for g in &op.groups {
                 for c in g.start..g.start + g.len {
-                    colb.fill(0);
                     let cbit = c * pxs;
                     let (cbyte, cshift) = (cbit / 8, (cbit % 8) as u32);
-                    for (t, &base) in tbl.iter().enumerate() {
-                        if base >= 0 {
-                            let code = (plane[base as usize + cbyte] >> cshift) & mask;
-                            let dbit = t * pxs;
-                            colb[dbit / 8] |= code << (dbit % 8);
+                    for j in 0..b {
+                        let colb = &mut col[j * col_stride..][..op.col_bytes];
+                        colb.fill(0);
+                        let plane = &xplane[j * plane_stride..];
+                        for (t, &base) in tbl.iter().enumerate() {
+                            if base >= 0 {
+                                let code = (plane[base as usize + cbyte] >> cshift) & mask;
+                                let dbit = t * pxs;
+                                colb[dbit / 8] |= code << (dbit % 8);
+                            }
                         }
                     }
-                    let acc = op.kernel.dot(c, colb);
-                    let mut y = acc as f32 * op.a_eps[c] + op.b_fold[c];
-                    if op.relu_inline {
-                        y = y.max(0.0);
+                    op.kernel.dot_batch(c, col, col_stride, acc);
+                    for (j, &av) in acc.iter().enumerate() {
+                        let mut y = av as f32 * op.a_eps[c] + op.b_fold[c];
+                        if op.relu_inline {
+                            y = y.max(0.0);
+                        }
+                        dst[j * dst_stride + orow + c] = y;
                     }
-                    dst[orow + c] = y;
                 }
             }
         }
         return;
     }
 
-    // standard conv: assemble the packed receptive-field column once per
-    // output pixel, reuse it for all C_out channels
+    // standard conv: assemble the packed receptive-field columns once
+    // per output pixel — B columns side by side, reused by all C_out
+    // channels; the gather table is read once for the whole batch
     if op.seg_bits % 8 == 0 {
         // byte-aligned segments: straight byte copies per kernel
-        // position; a 1x1 conv's column is a plane slice (zero-copy)
+        // position; a 1x1 conv's columns are plane slices (zero-copy,
+        // batch-addressed at the plane stride)
         let seg_bytes = op.seg_bits / 8;
         for pix in 0..op.out_h * op.out_w {
             let tbl = &op.gather[pix * kk..(pix + 1) * kk];
-            let xcol: &[u8] = if kk == 1 && tbl[0] >= 0 {
-                &plane[tbl[0] as usize..tbl[0] as usize + seg_bytes]
+            let (cols, stride): (&[u8], usize) = if kk == 1 && tbl[0] >= 0 {
+                (&xplane[tbl[0] as usize..], plane_stride)
             } else {
-                for (t, &base) in tbl.iter().enumerate() {
-                    let d = t * seg_bytes;
-                    if base < 0 {
-                        col[d..d + seg_bytes].fill(0);
-                    } else {
-                        let b = base as usize;
-                        col[d..d + seg_bytes]
-                            .copy_from_slice(&plane[b..b + seg_bytes]);
+                for j in 0..b {
+                    let colj = &mut col[j * col_stride..];
+                    let plane = &xplane[j * plane_stride..];
+                    for (t, &base) in tbl.iter().enumerate() {
+                        let d = t * seg_bytes;
+                        if base < 0 {
+                            colj[d..d + seg_bytes].fill(0);
+                        } else {
+                            let s = base as usize;
+                            colj[d..d + seg_bytes]
+                                .copy_from_slice(&plane[s..s + seg_bytes]);
+                        }
                     }
                 }
-                col
+                (&*col, col_stride)
             };
             let orow = pix * op.cout;
             for g in &op.groups {
                 for c in g.start..g.start + g.len {
-                    let acc = op.kernel.dot(c, xcol);
-                    let mut y = acc as f32 * op.a_eps[c] + op.b_fold[c];
-                    if op.relu_inline {
-                        y = y.max(0.0);
+                    op.kernel.dot_batch(c, cols, stride, acc);
+                    for (j, &av) in acc.iter().enumerate() {
+                        let mut y = av as f32 * op.a_eps[c] + op.b_fold[c];
+                        if op.relu_inline {
+                            y = y.max(0.0);
+                        }
+                        dst[j * dst_stride + orow + c] = y;
                     }
-                    dst[orow + c] = y;
                 }
             }
         }
     } else {
-        // cin * p_x not a byte multiple: shifted OR assembly keeps the
-        // column dense so the SWAR kernels see a gap-free lane stream
+        // cin * p_x not a byte multiple: shifted OR assembly keeps each
+        // sample's column dense so the SWAR kernels see a gap-free lane
+        // stream (col_stride leaves COL_SLACK bytes of spill room per
+        // column)
         for pix in 0..op.out_h * op.out_w {
             let tbl = &op.gather[pix * kk..(pix + 1) * kk];
-            col[..op.col_bytes + COL_SLACK].fill(0);
-            for (t, &base) in tbl.iter().enumerate() {
-                if base >= 0 {
-                    let b = base as usize;
-                    or_bits(col, t * op.seg_bits, &plane[b..b + op.pixel_bytes], op.seg_bits);
+            for j in 0..b {
+                let colj = &mut col[j * col_stride..][..op.col_bytes + COL_SLACK];
+                colj.fill(0);
+                let plane = &xplane[j * plane_stride..];
+                for (t, &base) in tbl.iter().enumerate() {
+                    if base >= 0 {
+                        let s = base as usize;
+                        or_bits(colj, t * op.seg_bits, &plane[s..s + op.pixel_bytes], op.seg_bits);
+                    }
                 }
             }
             let orow = pix * op.cout;
             for g in &op.groups {
                 for c in g.start..g.start + g.len {
-                    let acc = op.kernel.dot(c, col);
-                    let mut y = acc as f32 * op.a_eps[c] + op.b_fold[c];
-                    if op.relu_inline {
-                        y = y.max(0.0);
+                    op.kernel.dot_batch(c, col, col_stride, acc);
+                    for (j, &av) in acc.iter().enumerate() {
+                        let mut y = av as f32 * op.a_eps[c] + op.b_fold[c];
+                        if op.relu_inline {
+                            y = y.max(0.0);
+                        }
+                        dst[j * dst_stride + orow + c] = y;
                     }
-                    dst[orow + c] = y;
                 }
             }
         }

@@ -57,6 +57,37 @@ pub struct InferenceCost {
     pub layers: Vec<LayerCost>,
 }
 
+/// Amortized cost report for a `batch`-sample **batch-plane,
+/// weight-stationary** pass (`engine::ExecPlan::run_batch_planes`).
+///
+/// MAC work, activation traffic and structural elementwise work scale
+/// with the batch size `B`; two terms are paid **once per batch**
+/// instead of once per sample:
+///
+/// * per sub-convolution scheduling overhead (loop setup, pointer
+///   arithmetic, the precision-mode CSR write on MPIC) — the batched
+///   kernels enter each `(layer, group)` once and ride every sample's
+///   column inside it;
+/// * packed weight traffic — each Eq. (7) flash word is fetched and
+///   decoded once per batch and ridden across all `B` activation
+///   columns.
+#[derive(Clone, Debug)]
+pub struct BatchCost {
+    pub batch: usize,
+    /// cycles for the whole batch
+    pub cycles: f64,
+    pub cycles_per_sample: f64,
+    /// energy for the whole batch (pJ)
+    pub energy_pj: f64,
+    pub energy_pj_per_sample: f64,
+    /// L2 traffic for the whole batch
+    pub mem_bytes: u64,
+    /// scheduling cycles amortized away vs `B` independent samples
+    pub saved_sched_cycles: f64,
+    /// weight bytes amortized away vs `B` independent samples
+    pub saved_weight_bytes: u64,
+}
+
 impl InferenceCost {
     pub fn total_cycles(&self) -> f64 {
         self.layers.iter().map(|l| l.total_cycles()).sum()
@@ -85,6 +116,46 @@ impl InferenceCost {
             .iter()
             .flat_map(|l| l.macs_by_group.iter().map(|&(_, m)| m))
             .sum()
+    }
+
+    pub fn total_mem_bytes(&self) -> u64 {
+        self.layers.iter().map(|l| l.mem_bytes).sum()
+    }
+
+    /// Sub-convolution scheduling cycles of one inference — the share
+    /// of `total_cycles` paid **once per batch** under weight-stationary
+    /// batch-plane execution.
+    pub fn sched_cycles(&self) -> f64 {
+        let groups: usize = self.layers.iter().map(|l| l.macs_by_group.len()).sum();
+        groups as f64 * SUBCONV_OVERHEAD_CYCLES
+    }
+
+    /// Amortized cost of a `batch`-sample batch-plane pass.
+    /// `weight_traffic_bytes` is the per-inference packed weight traffic
+    /// (the Eq. (7) flash bytes inside [`Self::total_mem_bytes`]),
+    /// fetched once per batch instead of once per sample.
+    pub fn batch_cost(&self, batch: usize, weight_traffic_bytes: u64) -> BatchCost {
+        let batch = batch.max(1);
+        let bf = batch as f64;
+        let saved_sched_cycles = (bf - 1.0) * self.sched_cycles();
+        let saved_weight_bytes = (batch as u64 - 1) * weight_traffic_bytes;
+        let cycles = bf * self.total_cycles() - saved_sched_cycles;
+        let mem_bytes = batch as u64 * self.total_mem_bytes() - saved_weight_bytes;
+        // saved scheduling cycles take their control energy with them;
+        // saved weight traffic takes its L2 energy
+        let energy_pj = bf * self.total_energy_pj()
+            - saved_sched_cycles * PJ_CTRL_PER_CYCLE
+            - saved_weight_bytes as f64 * PJ_PER_L2_BYTE;
+        BatchCost {
+            batch,
+            cycles,
+            cycles_per_sample: cycles / bf,
+            energy_pj,
+            energy_pj_per_sample: energy_pj / bf,
+            mem_bytes,
+            saved_sched_cycles,
+            saved_weight_bytes,
+        }
     }
 }
 
@@ -143,5 +214,46 @@ mod tests {
         assert!(ic.total_energy_pj() > ic.mac_energy_pj());
         assert!(ic.latency_us() > 0.0);
         assert_eq!(ic.total_macs(), 500);
+    }
+
+    fn two_group_cost() -> InferenceCost {
+        let lut = CostLut::default();
+        let mut a = LayerCost { name: "a".into(), ..Default::default() };
+        account_group(&mut a, &lut, 8, 8, 1000);
+        account_group(&mut a, &lut, 8, 2, 1000);
+        account_memory(&mut a, 400); // 150 of which are packed weights
+        account_structural(&mut a, 64);
+        InferenceCost { layers: vec![a] }
+    }
+
+    #[test]
+    fn batch_cost_of_one_equals_per_sample() {
+        let ic = two_group_cost();
+        let bc = ic.batch_cost(1, 150);
+        assert_eq!(bc.batch, 1);
+        assert!((bc.cycles - ic.total_cycles()).abs() < 1e-9);
+        assert!((bc.energy_pj - ic.total_energy_pj()).abs() < 1e-6);
+        assert_eq!(bc.mem_bytes, ic.total_mem_bytes());
+        assert_eq!(bc.saved_sched_cycles, 0.0);
+        assert_eq!(bc.saved_weight_bytes, 0);
+    }
+
+    #[test]
+    fn batch_cost_amortizes_sched_and_weight_traffic() {
+        let ic = two_group_cost();
+        assert_eq!(ic.sched_cycles(), 2.0 * SUBCONV_OVERHEAD_CYCLES);
+        let b4 = ic.batch_cost(4, 150);
+        // scheduling paid once: 3 of 4 samples' group overhead saved
+        assert!((b4.saved_sched_cycles - 3.0 * 2.0 * SUBCONV_OVERHEAD_CYCLES).abs() < 1e-9);
+        assert_eq!(b4.saved_weight_bytes, 3 * 150);
+        assert_eq!(b4.mem_bytes, 4 * 400 - 3 * 150);
+        // per-sample cost is monotonically non-increasing in B
+        let mut prev = ic.batch_cost(1, 150).cycles_per_sample;
+        for b in [2usize, 4, 8, 32] {
+            let bc = ic.batch_cost(b, 150);
+            assert!(bc.cycles_per_sample <= prev + 1e-9, "B={b}");
+            assert!(bc.energy_pj_per_sample < ic.total_energy_pj(), "B={b}");
+            prev = bc.cycles_per_sample;
+        }
     }
 }

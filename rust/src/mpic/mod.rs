@@ -19,7 +19,9 @@
 //! * [`cost`] — cycle and energy accounting per layer/sub-conv using the
 //!   [`crate::energy::CostLut`] MAC table plus load/store and
 //!   sub-convolution scheduling overheads — the refinement of Eq. (8)
-//!   that the paper measures on hardware;
+//!   that the paper measures on hardware — and the per-batch amortized
+//!   report [`cost::BatchCost`] for weight-stationary batch-plane
+//!   execution;
 //! * [`memory`] — the L2→L1 traffic model behind the memory-energy bucket.
 //!
 //! Numerical contract: for any assignment, [`exec::run_sample`] computes
@@ -34,5 +36,5 @@ pub mod isa;
 pub mod regfile;
 pub mod memory;
 
-pub use cost::{InferenceCost, LayerCost};
+pub use cost::{BatchCost, InferenceCost, LayerCost};
 pub use exec::run_sample;

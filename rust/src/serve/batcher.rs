@@ -2,7 +2,7 @@
 //!
 //! Every model entry owns one [`Batcher`]: a bounded MPSC queue plus a
 //! dedicated worker thread that coalesces pending single-sample requests
-//! into one [`ExecPlan::run_samples`] call.  The policy is the classic
+//! into one batch-plane engine call.  The policy is the classic
 //! two-knob one:
 //!
 //! * **`max_batch`** — execute as soon as this many requests are
@@ -13,19 +13,25 @@
 //!
 //! Under load the worker is always behind the queue, so batches fill to
 //! `max_batch` without ever sleeping — the wait bound only shapes the
-//! lightly-loaded tail.  Batching amortises the engine's per-call costs
-//! (thread fan-out, per-layer activation-plane quantization setup)
-//! across *unrelated* requests, the serving-side analogue of the packed
-//! plane amortising quantization across consumers within a layer.
+//! lightly-loaded tail.  The coalesced batch is handed **zero-copy**
+//! into the engine's batch-plane path: each rider's input buffer is
+//! borrowed in place (`&[f32]` list, no contiguous-slab copy), and with
+//! `threads <= 1` the worker runs [`ExecPlan::run_batch_planes`]
+//! against its own **resident batch arena** — no per-batch allocation
+//! at all.  Inside that pass the engine quantizes all riders' activation
+//! planes in one sweep and rides each decoded weight word across every
+//! rider's column, so unrelated requests amortise exactly like a
+//! training-style batch.
 //!
 //! **Admission control:** the queue is bounded (`queue_cap`).  A submit
 //! against a full queue is *shed* — the caller gets
 //! [`SubmitError::Overloaded`] immediately and the HTTP layer answers
 //! `503` instead of letting latency grow without bound.
 //!
-//! Worker-side execution uses [`ExecPlan::run_samples`], so batched
-//! outputs are bit-identical to per-sample [`ExecPlan::run_sample`]
-//! calls (`tests/serve_batcher.rs` asserts it end-to-end).
+//! Batched outputs are bit-identical to per-sample
+//! [`ExecPlan::run_sample`] calls by the engine's batch-plane contract
+//! (`tests/serve_batcher.rs` asserts it end-to-end, including that a
+//! coalesced batch equals N independent single-sample requests).
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -33,7 +39,7 @@ use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::engine::ExecPlan;
+use crate::engine::{Arena, ExecPlan, MAX_BATCH_CHUNK};
 
 use super::metrics::Metrics;
 
@@ -46,7 +52,10 @@ pub struct BatchPolicy {
     pub max_wait_us: u64,
     /// Bounded-queue admission limit; submits beyond it are shed.
     pub queue_cap: usize,
-    /// Engine worker threads per executed batch.
+    /// Engine worker threads per executed batch — an upper bound: the
+    /// batcher never fans out past one worker per `MIN_RIDE` riders,
+    /// so small coalesced batches keep their weight-stationary
+    /// amortization instead of being sharded into single-sample passes.
     pub threads: usize,
 }
 
@@ -198,6 +207,10 @@ impl Drop for Batcher {
 fn worker_loop(shared: &Shared) {
     let max_batch = shared.policy.max_batch.max(1);
     let wait = Duration::from_micros(shared.policy.max_wait_us);
+    // resident batch arena: the single-worker execution path reuses it
+    // across batches, so steady-state serving allocates nothing but the
+    // reply vectors
+    let mut arena = shared.plan.batch_arena(max_batch.min(MAX_BATCH_CHUNK));
     loop {
         let batch: Vec<Pending> = {
             let mut q = shared.queue.lock().unwrap();
@@ -230,19 +243,73 @@ fn worker_loop(shared: &Shared) {
             let take = q.len().min(max_batch);
             q.drain(..take).collect()
         };
-        execute(shared, batch);
+        execute(shared, &mut arena, batch);
     }
 }
 
-fn execute(shared: &Shared, batch: Vec<Pending>) {
+/// Minimum samples per engine worker before fanning out: splitting a
+/// coalesced batch into near-single-sample shards would forfeit the
+/// weight-stationary amortization batching exists to buy, so parallel
+/// workers are only added once each can ride at least this many
+/// samples through one batch-plane pass.
+const MIN_RIDE: usize = 4;
+
+/// The batch-plane pass sizes `n` samples execute in at `threads`
+/// workers — mirrors `run_samples`' contiguous batch-chunk sharding
+/// (ranges of `n.div_ceil(threads)`, each run in passes of at most
+/// `MAX_BATCH_CHUNK`).  This is what the batch-efficiency gauges
+/// record: the amortization actually performed, not the coalesced
+/// submission size.
+fn pass_sizes(n: usize, threads: usize) -> Vec<usize> {
+    let chunk = n.div_ceil(threads);
+    let mut out = Vec::new();
+    let mut a = 0;
+    while a < n {
+        let range = (a + chunk).min(n) - a;
+        let mut left = range;
+        while left > 0 {
+            let pass = left.min(MAX_BATCH_CHUNK);
+            out.push(pass);
+            left -= pass;
+        }
+        a += range;
+    }
+    out
+}
+
+fn execute(shared: &Shared, arena: &mut Arena, batch: Vec<Pending>) {
     if batch.is_empty() {
         return;
     }
     let n = batch.len();
-    shared.metrics.record_batch(n);
+    // zero-copy seam: every rider's input buffer is borrowed in place
     let samples: Vec<&[f32]> = batch.iter().map(|p| p.input.as_slice()).collect();
-    let threads = shared.policy.threads.clamp(1, n);
-    match shared.plan.run_samples(&samples, threads) {
+    let threads = shared.policy.threads.clamp(1, n.div_ceil(MIN_RIDE));
+    for pass in pass_sizes(n, threads) {
+        shared.metrics.record_batch(pass);
+    }
+    let result = if threads == 1 {
+        // single engine worker: whole coalesced batch through the
+        // resident arena, chunked only past the arena's capacity
+        let mut outs = Vec::with_capacity(n);
+        let mut err = None;
+        for chunk in samples.chunks(arena.capacity()) {
+            match shared.plan.run_batch_planes(arena, chunk) {
+                Ok(mut o) => outs.append(&mut o),
+                Err(e) => {
+                    err = Some(e);
+                    break;
+                }
+            }
+        }
+        match err {
+            None => Ok(outs),
+            Some(e) => Err(e),
+        }
+    } else {
+        shared.plan.run_samples(&samples, threads)
+    };
+    match result {
         Ok(outs) => {
             for (p, output) in batch.iter().zip(outs) {
                 let us = p.enqueued.elapsed().as_micros() as u64;
@@ -260,5 +327,39 @@ fn execute(shared: &Shared, batch: Vec<Pending>) {
                 let _ = p.reply.send(Err(msg.clone()));
             }
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pass_sizes_match_sharding() {
+        // single worker: one pass up to the chunk bound
+        assert_eq!(pass_sizes(1, 1), vec![1]);
+        assert_eq!(pass_sizes(8, 1), vec![8]);
+        assert_eq!(pass_sizes(MAX_BATCH_CHUNK + 4, 1), vec![MAX_BATCH_CHUNK, 4]);
+        // fan-out: contiguous ranges of n.div_ceil(threads)
+        assert_eq!(pass_sizes(8, 2), vec![4, 4]);
+        assert_eq!(pass_sizes(10, 3), vec![4, 4, 2]);
+        // every sharding covers exactly n samples
+        for n in 1..=70 {
+            for t in 1..=8 {
+                assert_eq!(pass_sizes(n, t).iter().sum::<usize>(), n, "n={n} t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn fan_out_respects_min_ride() {
+        // up to MIN_RIDE riders: never more than one worker
+        for n in 1..=MIN_RIDE {
+            assert_eq!(16usize.clamp(1, n.div_ceil(MIN_RIDE)), 1, "n={n}");
+        }
+        // 8 riders on a many-core box: two workers of 4, not 8 of 1
+        let threads = 16usize.clamp(1, 8usize.div_ceil(MIN_RIDE));
+        assert_eq!(threads, 2);
+        assert_eq!(pass_sizes(8, threads), vec![4, 4]);
     }
 }

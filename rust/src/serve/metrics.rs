@@ -1,5 +1,8 @@
-//! Lock-light serving metrics: counters, a batch-size histogram and a
-//! latency reservoir, scraped as JSON by `GET /metrics`.
+//! Lock-light serving metrics: counters, a batch-size histogram,
+//! batch-efficiency gauges (mean *ridden* batch size, batch-plane hit
+//! ratio — how much of the engine's cross-sample amortization the
+//! traffic actually realizes) and a latency reservoir, scraped as JSON
+//! by `GET /metrics`.
 //!
 //! Counters and the histogram are plain relaxed atomics (every request
 //! touches them on the hot path).  Latency percentiles need ordered
@@ -61,10 +64,16 @@ pub struct Metrics {
     shed: AtomicU64,
     /// requests answered with an error after admission
     errors: AtomicU64,
-    /// `run_samples` calls executed by the batcher
+    /// engine calls executed by the batcher
     batches: AtomicU64,
     /// samples executed (sum of batch sizes)
     samples: AtomicU64,
+    /// sum of batch² over executed batches — numerator of the
+    /// per-sample ("ridden") mean batch size Σb²/Σb
+    samples_sq: AtomicU64,
+    /// samples that rode a coalesced batch (size ≥ 2), i.e. shared
+    /// their batch-plane pass with at least one other sample
+    coalesced: AtomicU64,
     /// executed batch-size histogram; bucket `i` = size `i + 1`
     batch_hist: [AtomicU64; BATCH_HIST_MAX],
     lat: Mutex<LatencyRing>,
@@ -78,6 +87,8 @@ impl Default for Metrics {
             errors: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             samples: AtomicU64::new(0),
+            samples_sq: AtomicU64::new(0),
+            coalesced: AtomicU64::new(0),
             batch_hist: std::array::from_fn(|_| AtomicU64::new(0)),
             lat: Mutex::new(LatencyRing { us: Vec::new(), pos: 0, filled: false }),
         }
@@ -104,6 +115,10 @@ impl Metrics {
         }
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.samples.fetch_add(size as u64, Ordering::Relaxed);
+        self.samples_sq.fetch_add((size * size) as u64, Ordering::Relaxed);
+        if size >= 2 {
+            self.coalesced.fetch_add(size as u64, Ordering::Relaxed);
+        }
         let bucket = size.min(BATCH_HIST_MAX) - 1;
         self.batch_hist[bucket].fetch_add(1, Ordering::Relaxed);
     }
@@ -128,6 +143,31 @@ impl Metrics {
             0.0
         } else {
             self.samples.load(Ordering::Relaxed) as f64 / b as f64
+        }
+    }
+
+    /// Mean batch size a *sample* rode in (`Σb² / Σb`): the
+    /// sample-weighted view of coalescing, which is what amortization
+    /// scales with — a stream of 7-sample batches plus stray singles
+    /// reads ~7 here even though `mean_batch` is dragged down.
+    pub fn mean_ridden_batch(&self) -> f64 {
+        let s = self.samples.load(Ordering::Relaxed);
+        if s == 0 {
+            0.0
+        } else {
+            self.samples_sq.load(Ordering::Relaxed) as f64 / s as f64
+        }
+    }
+
+    /// Fraction of executed samples that shared their batch-plane pass
+    /// with at least one other sample (rode a batch of ≥ 2) — how often
+    /// the engine's cross-sample amortization actually engaged.
+    pub fn batch_plane_hit_ratio(&self) -> f64 {
+        let s = self.samples.load(Ordering::Relaxed);
+        if s == 0 {
+            0.0
+        } else {
+            self.coalesced.load(Ordering::Relaxed) as f64 / s as f64
         }
     }
 
@@ -157,6 +197,8 @@ impl Metrics {
             ("batches", Json::num(self.batches.load(Ordering::Relaxed) as f64)),
             ("samples", Json::num(self.samples.load(Ordering::Relaxed) as f64)),
             ("mean_batch", Json::num(self.mean_batch())),
+            ("mean_ridden_batch", Json::num(self.mean_ridden_batch())),
+            ("batch_plane_hit_ratio", Json::num(self.batch_plane_hit_ratio())),
             ("latency_p50_us", Json::num(p50 as f64)),
             ("latency_p99_us", Json::num(p99 as f64)),
             ("latency_window", Json::num(window as f64)),
@@ -196,6 +238,30 @@ mod tests {
         m.record_batch(2);
         m.record_batch(6);
         assert_eq!(m.mean_batch(), 4.0);
+    }
+
+    #[test]
+    fn batch_efficiency_gauges() {
+        let m = Metrics::default();
+        // nothing executed yet: both gauges well-defined at 0
+        assert_eq!(m.mean_ridden_batch(), 0.0);
+        assert_eq!(m.batch_plane_hit_ratio(), 0.0);
+        // 7 single-sample batches + one 7-sample batch: 14 samples,
+        // half of which rode a coalesced batch-plane pass
+        for _ in 0..7 {
+            m.record_batch(1);
+        }
+        m.record_batch(7);
+        assert_eq!(m.batch_plane_hit_ratio(), 0.5);
+        // per-sample ridden mean (7*1 + 49)/14 = 4, vs mean_batch 1.75
+        assert_eq!(m.mean_ridden_batch(), 4.0);
+        assert_eq!(m.mean_batch(), 1.75);
+        let snap = m.snapshot();
+        assert_eq!(snap.get("mean_ridden_batch").unwrap().as_f64().unwrap(), 4.0);
+        assert_eq!(
+            snap.get("batch_plane_hit_ratio").unwrap().as_f64().unwrap(),
+            0.5
+        );
     }
 
     #[test]

@@ -13,20 +13,21 @@
 //!   conn ──▶ handler ──submit()──▶ │ (shed when full)   │
 //!                                  └──────┬─────────────┘
 //!                                         ▼ coalesce (max_batch / max_wait_us)
-//!                                  batcher worker ──run_samples()──▶ ExecPlan
-//!                                         │                    (registry.rs,
-//!                                         ▼                     compiled once)
+//!                                  batcher worker ──run_batch_planes()──▶ ExecPlan
+//!                                         │      (zero-copy, resident  (registry.rs,
+//!                                         ▼       batch arena)          compiled once)
 //!                                  per-request replies + metrics
 //! ```
 //!
 //! * [`ModelRegistry`] — one immutable [`ExecPlan`] per served model,
 //!   compiled at startup and shared (`Arc`) by every handler and
-//!   batcher; per-worker `Arena`s exactly as `run_batch` uses them.
+//!   batcher.
 //! * [`Batcher`] — the dynamic micro-batcher: pending single-sample
-//!   requests for the same plan coalesce into one `run_samples` call
-//!   under a `max_batch`/`max_wait_us` policy; the bounded queue sheds
-//!   with an explicit `503` instead of growing without bound.  Batched
-//!   outputs are bit-identical to per-sample `run_sample` calls.
+//!   requests for the same plan coalesce into one batch-plane engine
+//!   call (zero input copies, worker-resident batch arena) under a
+//!   `max_batch`/`max_wait_us` policy; the bounded queue sheds with an
+//!   explicit `503` instead of growing without bound.  Batched outputs
+//!   are bit-identical to per-sample `run_sample` calls.
 //! * [`http`] — pure-`std` HTTP/1.1 front end (`POST /v1/infer/<bench>`,
 //!   `GET /v1/models`, `GET /metrics`, `POST /admin/shutdown`), JSON
 //!   via the hardened [`minijson`](crate::minijson).

@@ -4,9 +4,10 @@
 //! [`ExecPlan`] per served model — compiled exactly once at startup
 //! (the plan/execute split's whole point) and shared behind an `Arc`
 //! by every connection handler and the model's [`Batcher`] worker.
-//! Per-worker [`Arena`](crate::engine::Arena)s are allocated inside
-//! `run_samples`, exactly as batch callers do today, so plans need no
-//! interior mutability.
+//! All mutable execution state lives in per-worker batch
+//! [`Arena`](crate::engine::Arena)s (the batcher's resident arena, or
+//! per-thread arenas inside `run_samples`), so plans need no interior
+//! mutability.
 //!
 //! Models come from the same sources as `cwmix simulate`: geometry
 //! from the artifacts manifest when `artifacts/<bench>/manifest.json`

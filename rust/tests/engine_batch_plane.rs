@@ -1,0 +1,183 @@
+//! Batch-plane equivalence contract (ISSUE 4): batched execution is
+//! **bit-identical** to per-sample execution for every batch size, on
+//! all four zoo geometries × both backends × all nine `(p_x, p_w)`
+//! combos — the refactor changes *when* work happens (planes quantized
+//! once per batch, weight words decoded once and ridden across all
+//! columns), never *what* is computed.
+//!
+//! Pure Rust: builtin zoo + deterministic synthetic state, no
+//! artifacts.  Batch sizes cover the serve default `max_batch` (8), a
+//! ragged non-divisor (7), the smallest coalesced batch (2) and the
+//! degenerate batch of one.  The striped-assignment spot check also
+//! anchors each geometry against the out-of-engine oracle
+//! `mpic::exec::run_sample`, and the sharded entry points
+//! (`run_samples` / `run_batch_threads`) are asserted invariant under
+//! batch-chunk fan-out.
+
+use cwmix::data::{make_dataset, Split};
+use cwmix::deploy;
+use cwmix::engine::{ExecPlan, KernelBackend, PackedBackend, ReferenceBackend};
+use cwmix::models::zoo::{builtin_manifest, stripy_assignment, synthetic_state};
+use cwmix::quant::Assignment;
+
+/// The serve-layer default `BatchPolicy::max_batch`.
+const MAX_BATCH: usize = 8;
+
+const BATCH_SIZES: [usize; 4] = [1, 2, 7, MAX_BATCH];
+
+/// All nine `(p_x, p_w)` fixed combos on `bench`, both backends, every
+/// batch size bit-exact vs per-sample `run_sample`.
+fn check_all_nine_combos_batched(bench: &str) {
+    let manifest = builtin_manifest(bench).unwrap();
+    let (params, bn) = synthetic_state(&manifest, 0);
+    let feat = manifest.feat_len();
+    let ds = make_dataset(bench, Split::Test, MAX_BATCH, 7);
+    let samples: Vec<&[f32]> = ds.x.chunks_exact(feat).collect();
+    for xb in [2u32, 4, 8] {
+        for wb in [2u32, 4, 8] {
+            let a = Assignment::fixed(&manifest.qnames(), &manifest.qcouts(), wb, xb);
+            let model = deploy::build(&manifest, &params, &bn, &a).unwrap();
+            for backend in [&ReferenceBackend as &dyn KernelBackend, &PackedBackend] {
+                let plan = ExecPlan::compile(&model, &manifest.lut, backend).unwrap();
+                let mut arena = plan.arena();
+                let want: Vec<Vec<f32>> = samples
+                    .iter()
+                    .map(|s| plan.run_sample(&mut arena, s).unwrap())
+                    .collect();
+                let mut batch_arena = plan.batch_arena(MAX_BATCH);
+                for bsz in BATCH_SIZES {
+                    let got = plan
+                        .run_batch_planes(&mut batch_arena, &samples[..bsz])
+                        .unwrap();
+                    assert_eq!(
+                        got.as_slice(),
+                        &want[..bsz],
+                        "{bench} w{wb}x{xb} {}: batch of {bsz} diverged from \
+                         per-sample run_sample",
+                        backend.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn batch_sizes_bit_exact_all_combos_ic() {
+    check_all_nine_combos_batched("ic");
+}
+
+#[test]
+fn batch_sizes_bit_exact_all_combos_kws() {
+    check_all_nine_combos_batched("kws");
+}
+
+#[test]
+fn batch_sizes_bit_exact_all_combos_vww() {
+    check_all_nine_combos_batched("vww");
+}
+
+#[test]
+fn batch_sizes_bit_exact_all_combos_ad() {
+    check_all_nine_combos_batched("ad");
+}
+
+/// Striped per-channel assignments (fragmented sub-conv groups across
+/// all three precisions, residual joins, depthwise chains) under every
+/// batch size — anchored against the scalar oracle
+/// `mpic::exec::run_sample` (the oracle interprets slowly, so it
+/// anchors the first two samples; the rest compare against the
+/// engine's per-sample path, which those two tie to the oracle).
+#[test]
+fn striped_assignments_batched_match_oracle() {
+    for bench in ["ic", "kws", "vww", "ad"] {
+        let manifest = builtin_manifest(bench).unwrap();
+        let (params, bn) = synthetic_state(&manifest, 0);
+        let a = stripy_assignment(&manifest);
+        let model = deploy::build(&manifest, &params, &bn, &a).unwrap();
+        let feat = manifest.feat_len();
+        let ds = make_dataset(bench, Split::Test, MAX_BATCH, 11);
+        let samples: Vec<&[f32]> = ds.x.chunks_exact(feat).collect();
+        let oracle: Vec<Vec<f32>> = samples[..2]
+            .iter()
+            .map(|s| cwmix::mpic::run_sample(&model, s, &manifest.lut).unwrap().0)
+            .collect();
+        for backend in [&ReferenceBackend as &dyn KernelBackend, &PackedBackend] {
+            let plan = ExecPlan::compile(&model, &manifest.lut, backend).unwrap();
+            let mut arena = plan.arena();
+            let want: Vec<Vec<f32>> = samples
+                .iter()
+                .map(|s| plan.run_sample(&mut arena, s).unwrap())
+                .collect();
+            assert_eq!(
+                &want[..2],
+                oracle.as_slice(),
+                "{bench} {}: per-sample path diverged from the oracle",
+                backend.name()
+            );
+            let mut batch_arena = plan.batch_arena(MAX_BATCH);
+            for bsz in BATCH_SIZES {
+                let got = plan
+                    .run_batch_planes(&mut batch_arena, &samples[..bsz])
+                    .unwrap();
+                assert_eq!(
+                    got.as_slice(),
+                    &want[..bsz],
+                    "{bench} {}: batch of {bsz} diverged per-sample",
+                    backend.name()
+                );
+            }
+        }
+    }
+}
+
+/// The sharded entry points produce identical outputs whatever the
+/// worker count — sharding is by batch-chunk now, and chunk boundaries
+/// must be invisible.
+#[test]
+fn batch_chunk_sharding_invariant() {
+    let manifest = builtin_manifest("kws").unwrap();
+    let (params, bn) = synthetic_state(&manifest, 0);
+    let a = stripy_assignment(&manifest);
+    let model = deploy::build(&manifest, &params, &bn, &a).unwrap();
+    let plan = ExecPlan::compile(&model, &manifest.lut, &PackedBackend).unwrap();
+    let feat = manifest.feat_len();
+    let n = 13; // ragged against every chunking
+    let ds = make_dataset("kws", Split::Test, n, 5);
+    let samples: Vec<&[f32]> = ds.x.chunks_exact(feat).collect();
+    let seq = plan.run_samples(&samples, 1).unwrap();
+    for threads in [2usize, 3, 8] {
+        let par = plan.run_samples(&samples, threads).unwrap();
+        assert_eq!(seq, par, "threads={threads}");
+    }
+    let mut arena = plan.arena();
+    for (s, o) in samples.iter().zip(&seq) {
+        assert_eq!(&plan.run_sample(&mut arena, s).unwrap(), o);
+    }
+}
+
+/// Batch-plane validation: oversized batches and wrong-length samples
+/// are errors, not panics or corruption.
+#[test]
+fn batch_plane_rejects_bad_batches() {
+    let manifest = builtin_manifest("ad").unwrap();
+    let (params, bn) = synthetic_state(&manifest, 0);
+    let a = Assignment::fixed(&manifest.qnames(), &manifest.qcouts(), 8, 8);
+    let model = deploy::build(&manifest, &params, &bn, &a).unwrap();
+    let plan = ExecPlan::compile(&model, &manifest.lut, &PackedBackend).unwrap();
+    let feat = manifest.feat_len();
+    let xv = vec![0.0f32; feat];
+    let shortv = vec![0.0f32; feat - 1];
+    let (x, short): (&[f32], &[f32]) = (&xv, &shortv);
+    let mut arena = plan.batch_arena(2);
+    assert_eq!(arena.capacity(), 2);
+    // over capacity
+    let err = plan.run_batch_planes(&mut arena, &[x, x, x]).unwrap_err();
+    assert!(err.to_string().contains("capacity"), "{err}");
+    // wrong feature length anywhere in the batch
+    assert!(plan.run_batch_planes(&mut arena, &[x, short]).is_err());
+    // empty batch is a no-op
+    assert!(plan.run_batch_planes(&mut arena, &[]).unwrap().is_empty());
+    // the arena stays usable after rejections
+    assert_eq!(plan.run_batch_planes(&mut arena, &[x, x]).unwrap().len(), 2);
+}

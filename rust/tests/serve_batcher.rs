@@ -166,6 +166,66 @@ fn bad_input_and_shutdown_refusals() {
     }
 }
 
+/// The coalesced path equals N independent single-sample requests: the
+/// same inputs through a `max_batch = 1` batcher (every request is its
+/// own one-sample engine call) and through a coalescing batcher
+/// produce identical outputs — the serving-level statement of the
+/// batch-plane bit-exactness contract.
+#[test]
+fn coalesced_equals_independent_single_requests() {
+    let plan = plan_for("kws");
+    let feat = plan.feat();
+    let n = 10;
+    let inputs = samples("kws", n, feat);
+
+    // independent: no coalescing possible, every reply rode batch 1
+    let solo_policy = BatchPolicy {
+        max_batch: 1,
+        max_wait_us: 1_000,
+        queue_cap: 64,
+        threads: 1,
+    };
+    let solo = Batcher::start(Arc::clone(&plan), Arc::new(Metrics::default()), solo_policy);
+    let rxs: Vec<_> = inputs
+        .iter()
+        .map(|x| solo.submit(x.clone()).expect("admitted"))
+        .collect();
+    let independent: Vec<Vec<f32>> = rxs
+        .iter()
+        .map(|rx| {
+            let (out, batch) = recv_ok(rx);
+            assert_eq!(batch, 1, "max_batch=1 must never coalesce");
+            out
+        })
+        .collect();
+    solo.shutdown();
+
+    // coalescing: a long window so the batch actually fills
+    let coal_policy = BatchPolicy {
+        max_batch: n,
+        max_wait_us: 200_000,
+        queue_cap: 64,
+        threads: 1,
+    };
+    let metrics = Arc::new(Metrics::default());
+    let coal = Batcher::start(Arc::clone(&plan), Arc::clone(&metrics), coal_policy);
+    let rxs: Vec<_> = inputs
+        .iter()
+        .map(|x| coal.submit(x.clone()).expect("admitted"))
+        .collect();
+    let mut max_seen = 0;
+    for (rx, want) in rxs.iter().zip(&independent) {
+        let (out, batch) = recv_ok(rx);
+        max_seen = max_seen.max(batch);
+        assert_eq!(&out, want, "coalesced output != independent request");
+    }
+    assert!(max_seen >= 2, "no coalescing observed (max batch {max_seen})");
+    // the batch-efficiency gauges saw the coalesced traffic
+    assert!(metrics.mean_ridden_batch() >= 2.0);
+    assert!(metrics.batch_plane_hit_ratio() > 0.0);
+    coal.shutdown();
+}
+
 /// The serve path is bit-identical on a conv model too (ad above is
 /// FC-only): kws exercises conv + depthwise + the packed gather path
 /// under threaded batch execution.
