@@ -1,18 +1,21 @@
 //! Engine benchmarks: seed scalar path vs the plan/execute engine with
 //! the `reference` and `packed` backends, per benchmark model — plus a
-//! per-`(p_x, p_w)` sweep of the nine SWAR kernel-table cells and a
+//! per-`(p_x, p_w)` sweep of the nine SWAR kernel-table cells, a
 //! batch-plane scaling sweep (per-sample time vs batch size B, the
-//! weight-stationary amortization the serving batcher exploits).
+//! weight-stationary amortization the serving batcher exploits) and a
+//! cold-start sweep (`ExecPlan::compile` vs `.cwm` modelpack load per
+//! model — the registry's two startup paths).
 //!
 //! Pure Rust — builtin model zoo + synthetic weights, no artifacts and
 //! no `xla` feature.  Each model runs a striped mixed-precision
 //! assignment (the deployment-relevant case: fragmented sub-conv groups
 //! across all three precisions); the combo sweep runs uniform
 //! `w{p_w}x{p_x}` assignments so each table cell is isolated.  Emits a
-//! machine-readable `BENCH_engine.json` (schema v3: v2 plus per-batch
-//! size cells) at the repo root so future PRs have a perf trajectory
-//! (`tools: cargo run --bin bench_compare` diffs two of these and gates
-//! CI), and asserts bit-exactness of every path while measuring.
+//! machine-readable `BENCH_engine.json` (schema v4: v3 plus per-model
+//! cold-start cells) at the repo root so future PRs have a perf
+//! trajectory (`tools: cargo run --bin bench_compare` diffs two of
+//! these and gates CI), and asserts bit-exactness of every path while
+//! measuring.
 //!
 //! ```bash
 //! cargo bench --bench bench_engine            # quick (default)
@@ -115,6 +118,56 @@ fn batch_rows() -> anyhow::Result<(Vec<(String, Json)>, bool)> {
     }
     println!("    per-sample time monotonically non-increasing in B: {monotonic}");
     Ok((rows, monotonic))
+}
+
+/// Cold start per model: `ExecPlan::compile` from deployed f32 state
+/// vs `ExecPlan::from_modelpack` on the serialized artifact — the
+/// registry's two startup paths.  Load skips gather-table construction
+/// and weight packing entirely (validate-then-borrow), so it should
+/// beat compile on every model; the `cold/<bench>` trajectory cells
+/// gate the load/compile ratio.
+fn cold_start_rows() -> anyhow::Result<Vec<(String, Json)>> {
+    println!("\ncold start per model (packed, stripy): compile vs modelpack load:");
+    let mut rows = Vec::new();
+    for bench in BENCHES {
+        // the registry/`cwmix compile` construction path, so these
+        // cells measure exactly what a server cold start amortizes
+        let (manifest, model, plan) = cwmix::serve::registry::build_model(
+            bench,
+            &PackedBackend,
+            "stripy",
+            0,
+            Path::new("artifacts"),
+        )?;
+        let pack = plan.to_modelpack();
+
+        // bit-exactness of the loaded plan while measuring (the same
+        // probe `cwmix compile` gates artifacts with)
+        cwmix::serve::registry::verify_pack_roundtrip(&plan, &pack, bench)?;
+
+        let (compile_ms, _, _) = measure(1, 5, || {
+            let _ = ExecPlan::compile(&model, &manifest.lut, &PackedBackend).unwrap();
+        });
+        let (load_ms, _, _) = measure(1, 5, || {
+            let _ = ExecPlan::from_modelpack(&pack).unwrap();
+        });
+        println!(
+            "    {bench:<4} compile {compile_ms:>8.3} ms   load {load_ms:>8.3} ms   \
+             ({:>5.1}x, pack {} B)",
+            compile_ms / load_ms,
+            pack.len(),
+        );
+        rows.push((
+            bench.to_string(),
+            Json::obj(vec![
+                ("compile_ms", Json::num(compile_ms)),
+                ("modelpack_load_ms", Json::num(load_ms)),
+                ("pack_bytes", Json::num(pack.len() as f64)),
+                ("speedup_load_vs_compile", Json::num(compile_ms / load_ms)),
+            ]),
+        ));
+    }
+    Ok(rows)
 }
 
 fn combo_rows() -> anyhow::Result<Vec<(String, Json)>> {
@@ -276,9 +329,11 @@ fn main() -> anyhow::Result<()> {
     let combo_obj = Json::Obj(combos.into_iter().collect());
     let (batch_cells, batch_monotonic) = batch_rows()?;
     let batch_obj = Json::Obj(batch_cells.into_iter().collect());
+    let cold_cells = cold_start_rows()?;
+    let cold_obj = Json::Obj(cold_cells.into_iter().collect());
 
     let report = Json::obj(vec![
-        ("version", Json::num(3.0)),
+        ("version", Json::num(4.0)),
         ("threads", Json::num(threads as f64)),
         ("batch", Json::num(batch as f64)),
         ("assignment", Json::str("stripy-2/4/8")),
@@ -288,6 +343,7 @@ fn main() -> anyhow::Result<()> {
         ("batch_bench", Json::str(COMBO_BENCH)),
         ("batch_cells", batch_obj),
         ("batch_monotonic_non_increasing", Json::Bool(batch_monotonic)),
+        ("cold_start", cold_obj),
     ]);
     let path = out_path();
     std::fs::write(&path, report.pretty())?;

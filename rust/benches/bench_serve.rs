@@ -12,8 +12,11 @@
 //!   requests from unrelated clients coalesce into one batch-plane
 //!   engine call (weight-stationary amortization across riders).
 //!
-//! Per config it reports client-observed throughput, p50/p99 latency
-//! and the mean executed batch size (from the per-reply `batch` field),
+//! Per config it reports client-observed throughput, p50/p99 latency,
+//! the mean executed batch size (from the per-reply `batch` field) and
+//! the keep-alive connection-reuse count (connections opened vs
+//! requests sent — every client rides one connection unless the server
+//! drops it, and reconnects are counted so the gauge stays honest),
 //! and writes a machine-readable `BENCH_serve.json` next to
 //! `BENCH_engine.json` so the serving trajectory is versioned alongside
 //! the engine's.  Under a concurrency of 16 the micro-batch config
@@ -52,9 +55,16 @@ struct LoadStats {
     p99_ms: f64,
     mean_batch: f64,
     max_batch_seen: usize,
+    /// TCP connections opened across all clients (keep-alive reuse:
+    /// the floor is one per client; every extra one is a reconnect)
+    connections_opened: usize,
+    requests_per_connection: f64,
 }
 
-/// Drive `clients` closed-loop clients x `reqs` requests each.
+/// Drive `clients` closed-loop clients x `reqs` requests each, every
+/// client pipelining all its requests down one keep-alive connection
+/// (reconnecting — and counting it — only if the server drops the
+/// socket, e.g. the idle reaper).
 fn run_load(
     addr: SocketAddr,
     body: Arc<String>,
@@ -62,48 +72,61 @@ fn run_load(
     clients: usize,
     reqs: usize,
 ) -> anyhow::Result<LoadStats> {
+    type ClientOut = (Vec<(f64, usize)>, usize);
     let t0 = Instant::now();
     let mut all: Vec<(f64, usize)> = Vec::with_capacity(clients * reqs);
-    let results: Vec<anyhow::Result<Vec<(f64, usize)>>> =
-        std::thread::scope(|scope| {
-            let handles: Vec<_> = (0..clients)
-                .map(|_| {
-                    let body = Arc::clone(&body);
-                    let want = Arc::clone(&want);
-                    scope.spawn(move || -> anyhow::Result<Vec<(f64, usize)>> {
-                        let mut conn = Conn::connect(addr)?;
-                        let mut lats = Vec::with_capacity(reqs);
-                        for _ in 0..reqs {
-                            let t = Instant::now();
-                            let resp =
-                                conn.post(&format!("/v1/infer/{BENCH}"), &body)?;
-                            let ms = t.elapsed().as_secs_f64() * 1e3;
-                            anyhow::ensure!(
-                                resp.status == 200,
-                                "infer -> {}: {}",
-                                resp.status,
-                                resp.body.dumps()
-                            );
-                            // correctness under load: bit-identical
-                            anyhow::ensure!(
-                                output_of(&resp.body)? == *want,
-                                "served output diverged under load"
-                            );
-                            let batch =
-                                resp.body.get("batch")?.as_f64()? as usize;
-                            lats.push((ms, batch));
-                        }
-                        Ok(lats)
-                    })
+    let mut connections_opened = 0usize;
+    let results: Vec<anyhow::Result<ClientOut>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..clients)
+            .map(|_| {
+                let body = Arc::clone(&body);
+                let want = Arc::clone(&want);
+                scope.spawn(move || -> anyhow::Result<ClientOut> {
+                    let path = format!("/v1/infer/{BENCH}");
+                    let mut conn = Conn::connect(addr)?;
+                    let mut conns = 1usize;
+                    let mut lats = Vec::with_capacity(reqs);
+                    for _ in 0..reqs {
+                        let t = Instant::now();
+                        let resp = match conn.post(&path, &body) {
+                            Ok(r) => r,
+                            Err(_) => {
+                                // server closed the keep-alive socket:
+                                // reconnect once, counted so the reuse
+                                // gauge stays honest
+                                conn = Conn::connect(addr)?;
+                                conns += 1;
+                                conn.post(&path, &body)?
+                            }
+                        };
+                        let ms = t.elapsed().as_secs_f64() * 1e3;
+                        anyhow::ensure!(
+                            resp.status == 200,
+                            "infer -> {}: {}",
+                            resp.status,
+                            resp.body.dumps()
+                        );
+                        // correctness under load: bit-identical
+                        anyhow::ensure!(
+                            output_of(&resp.body)? == *want,
+                            "served output diverged under load"
+                        );
+                        let batch = resp.body.get("batch")?.as_f64()? as usize;
+                        lats.push((ms, batch));
+                    }
+                    Ok((lats, conns))
                 })
-                .collect();
-            handles
-                .into_iter()
-                .map(|h| h.join().expect("client thread panicked"))
-                .collect()
-        });
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("client thread panicked"))
+            .collect()
+    });
     for r in results {
-        all.extend(r?);
+        let (lats, conns) = r?;
+        all.extend(lats);
+        connections_opened += conns;
     }
     let wall_s = t0.elapsed().as_secs_f64();
     let n = all.len();
@@ -120,6 +143,8 @@ fn run_load(
         p99_ms: at(0.99),
         mean_batch,
         max_batch_seen,
+        connections_opened,
+        requests_per_connection: n as f64 / connections_opened.max(1) as f64,
     })
 }
 
@@ -157,6 +182,8 @@ fn stats_json(s: &LoadStats, policy: &BatchPolicy) -> Json {
         ("p99_ms", Json::num(s.p99_ms)),
         ("mean_batch", Json::num(s.mean_batch)),
         ("max_batch_seen", Json::num(s.max_batch_seen as f64)),
+        ("connections_opened", Json::num(s.connections_opened as f64)),
+        ("requests_per_connection", Json::num(s.requests_per_connection)),
     ])
 }
 
@@ -221,6 +248,15 @@ fn main() -> anyhow::Result<()> {
         micro.max_batch_seen
     );
     println!("    micro-batching throughput x{speedup:.2} vs batch1");
+    println!(
+        "    keep-alive reuse: {} + {} connections for {} requests \
+         ({:.1} / {:.1} reqs per connection)",
+        batch1.connections_opened,
+        micro.connections_opened,
+        2 * clients * reqs,
+        batch1.requests_per_connection,
+        micro.requests_per_connection,
+    );
     if micro.mean_batch < 4.0 {
         println!(
             "    note: mean batch {:.2} < 4 — machine too fast or too few \

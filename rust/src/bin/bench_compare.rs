@@ -18,9 +18,11 @@
 //!   *same run's* seed-scalar ms/inf; each `(p_x, p_w)` combo cell
 //!   compares the packed/reference ratio; each batch-plane cell (schema
 //!   v3) divides the packed per-sample time at batch size B by the same
-//!   run's seed scalar.  The multithreaded cell is reported but not
-//!   gated — its ratio to the single-thread seed scales with the
-//!   runner's core count.
+//!   run's seed scalar; each cold-start cell (schema v4) divides the
+//!   modelpack load time by the same run's compile time for that model
+//!   — the ratio the `.cwm` path exists to keep small.  The
+//!   multithreaded cell is reported but not gated — its ratio to the
+//!   single-thread seed scales with the runner's core count.
 //! * serve: the micro-batching config relative to the *same run's*
 //!   `batch1` config — inverse throughput speedup and the p99 ratio.
 //!
@@ -68,6 +70,19 @@ fn engine_cells(doc: &Json) -> Result<Vec<(String, f64)>> {
                 bail!("{combo}: non-positive reference baseline");
             }
             out.push((format!("combo/{combo}"), packed / reference));
+        }
+    }
+    // cold-start cells (schema v4): modelpack load time over the same
+    // run's compile time for the same model — machine speed cancels,
+    // a regression means loading lost its edge over recompiling
+    if let Some(cells) = doc.opt("cold_start") {
+        for (bench, obj) in cells.as_obj()? {
+            let compile = obj.get("compile_ms")?.as_f64()?;
+            let load = obj.get("modelpack_load_ms")?.as_f64()?;
+            if compile <= 0.0 {
+                bail!("cold/{bench}: non-positive compile baseline");
+            }
+            out.push((format!("cold/{bench}"), load / compile));
         }
     }
     // batch-plane cells (schema v3): packed per-sample time at batch
@@ -253,7 +268,7 @@ mod tests {
 
     fn doc(seed: f64, reference: f64, packed: f64) -> Json {
         parse(&format!(
-            r#"{{"version": 3, "benches": {{"ic": {{
+            r#"{{"version": 4, "benches": {{"ic": {{
                 "seed_scalar_ms_per_inf": {seed},
                 "engine_reference_ms_per_inf": {reference},
                 "engine_packed_ms_per_inf": {packed},
@@ -270,6 +285,19 @@ mod tests {
             }}}}"#
         ))
         .unwrap()
+    }
+
+    fn doc_with_cold(seed: f64, reference: f64, packed: f64, load_ms: f64) -> Json {
+        let mut d = doc(seed, reference, packed);
+        let cold = parse(&format!(
+            r#"{{"ic": {{"compile_ms": 10.0, "modelpack_load_ms": {load_ms},
+                 "pack_bytes": 1000, "speedup_load_vs_compile": 1.0}}}}"#
+        ))
+        .unwrap();
+        if let Json::Obj(o) = &mut d {
+            o.insert("cold_start".to_string(), cold);
+        }
+        d
     }
 
     fn serve_doc(b1_rps: f64, micro_rps: f64, b1_p99: f64, micro_p99: f64) -> Json {
@@ -334,6 +362,21 @@ mod tests {
         assert!(c.iter().any(|(l, v)| l == "combo/x2w2" && (*v - 0.4).abs() < 1e-9));
         assert!(c.iter().any(|(l, v)| l == "batch/b8" && (*v - 0.2).abs() < 1e-9));
         assert!(!c.iter().any(|(l, _)| l.contains("mt")));
+    }
+
+    #[test]
+    fn cold_start_cells_normalise_and_gate() {
+        // load/compile = 0.1 in the baseline
+        let base = doc_with_cold(10.0, 5.0, 2.0, 1.0);
+        let cells = engine_cells(&base).unwrap();
+        assert!(cells.iter().any(|(l, v)| l == "cold/ic" && (*v - 0.1).abs() < 1e-9));
+        // same ratio on a slower machine is clean …
+        let slow = doc_with_cold(30.0, 15.0, 6.0, 1.0);
+        assert!(diff(&base, &slow, 0.2).is_empty());
+        // … but load losing its edge over compile trips the gate
+        let regressed = doc_with_cold(10.0, 5.0, 2.0, 5.0);
+        let regs = diff(&base, &regressed, 0.2);
+        assert!(regs.iter().any(|r| r.contains("cold/ic")));
     }
 
     #[test]

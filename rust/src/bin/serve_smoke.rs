@@ -14,6 +14,13 @@
 //! `/admin/shutdown`; the harness asserts the server process itself
 //! exits 0 (clean shutdown).
 //!
+//! With `CWMIX_SMOKE_EXPECT_STARTUP=modelpack` (the modelpack-smoke CI
+//! job, against `cwmix serve --modelpack-dir`) it additionally asserts
+//! that **every** model's `/metrics` `startup_source` gauge says the
+//! plan cold-started from its `.cwm` artifact — combined with the
+//! bit-identical round-trip above, that is the end-to-end proof that
+//! serving from an artifact equals serving from an in-process compile.
+//!
 //! Exit code 0 = every check passed.
 
 use std::net::{SocketAddr, ToSocketAddrs};
@@ -90,6 +97,23 @@ fn main() -> Result<()> {
     let total = metrics.body.get("requests")?.as_f64()?;
     if total < served.len() as f64 {
         bail!("metrics report {total} requests after {} infers", served.len());
+    }
+    if let Ok(want_source) = std::env::var("CWMIX_SMOKE_EXPECT_STARTUP") {
+        for bench in &served {
+            let m = metrics.body.get("models")?.get(bench)?;
+            let source = m.get("startup_source")?.as_str()?;
+            if source != want_source {
+                bail!("{bench}: startup_source {source:?}, expected {want_source:?}");
+            }
+            let model_bytes = m.get("model_bytes")?.as_f64()?;
+            if model_bytes <= 0.0 {
+                bail!("{bench}: model_bytes gauge is {model_bytes}");
+            }
+            println!(
+                "  {bench}: startup_source={source} startup_us={} model_bytes={model_bytes}",
+                m.get("startup_us")?.as_f64()?
+            );
+        }
     }
 
     let bye = conn.post("/admin/shutdown", "")?;

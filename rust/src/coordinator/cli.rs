@@ -6,7 +6,10 @@
 //! cwmix baseline --bench ic --wbits 4 --xbits 8 [--quick]
 //! cwmix deploy   --bench ic [--quick]           # train, deploy, verify, simulate
 //! cwmix simulate --bench ic --wbits 8 --xbits 8 # MPIC cost model, no training
-//! cwmix serve    --benches ic,kws [--addr 127.0.0.1:8080]  # resident server
+//! cwmix compile  --out modelpacks [--benches ic,kws]  # emit .cwm artifacts
+//! cwmix inspect  --pack modelpacks/ic.cwm       # header + size accounting
+//! cwmix serve    --benches ic,kws [--addr 127.0.0.1:8080]
+//!                [--modelpack-dir modelpacks]   # resident server, cold start
 //! cwmix report   [--dir results]                # Fig.3 panels + Fig.4 dump
 //! cwmix lut                                     # print the C(px,pw) tables
 //! ```
@@ -103,12 +106,27 @@ COMMANDS
            §III-C transform + engine cost model on a fixed assignment.
            Pure Rust: uses the builtin model zoo when artifacts/ is
            absent; no training, no xla feature needed.
+  compile  [--benches ic,kws,vww,ad] [--out modelpacks]
+           [--backend packed|reference] [--assignment stripy|wNxM]
+           [--seed 0] [--artifacts artifacts]
+           Compile each model and emit a .cwm modelpack artifact per
+           bench — the durable form of ExecPlan::compile (packed
+           sub-byte weights, gather tables, folded epilogues, cost) —
+           then reload and verify it executes bit-identically.
+  inspect  --pack <file.cwm>
+           Validate a modelpack and print its header, per-layer
+           channel bit-width histogram and the packed-vs-int8-vs-f32
+           size table; exits non-zero when the packed totals disagree
+           with the cost model's Eq. (7) accounting.
   serve    [--benches ic,kws,vww,ad] [--addr 127.0.0.1:8080]
            [--backend packed|reference] [--assignment stripy|wNxM]
            [--max-batch 8] [--max-wait-us 2000] [--queue-cap 256]
            [--threads N] [--artifacts artifacts]
-           Resident multi-model inference server: compiles one ExecPlan
-           per bench at startup, micro-batches concurrent POST
+           [--modelpack-dir DIR]
+           Resident multi-model inference server: one ExecPlan per
+           bench at startup — cold-loaded from DIR/<bench>.cwm when
+           --modelpack-dir is given (falling back to compile on a
+           missing or unusable pack) — micro-batches concurrent POST
            /v1/infer/<bench> requests, exposes GET /v1/models and
            GET /metrics; POST /admin/shutdown exits cleanly.  Pure
            Rust, builtin zoo.  --addr with port 0 picks a free port
@@ -139,6 +157,8 @@ pub fn dispatch(args: &[String]) -> Result<()> {
         "baseline" => cmd_baseline(&flags),
         "deploy" => cmd_deploy(&flags),
         "simulate" => cmd_simulate(&flags),
+        "compile" => cmd_compile(&flags),
+        "inspect" => cmd_inspect(&flags),
         "serve" => cmd_serve(&flags),
         "report" => cmd_report(&flags),
         other => bail!("unknown command {other}; try `cwmix help`"),
@@ -379,6 +399,133 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+/// Compile models and emit durable `.cwm` modelpack artifacts — the
+/// on-disk witness of the paper's packed-size claim (every server
+/// start before this recompiled from raw f32 state).  Each artifact is
+/// immediately reloaded and probed bit-identical before it is kept.
+fn cmd_compile(flags: &HashMap<String, String>) -> Result<()> {
+    // the SAME construction path the serve registry's fallback uses, so
+    // a pack and the plan the server would compile cannot drift apart
+    use crate::serve::registry::{build_model, verify_pack_roundtrip};
+
+    let benches: Vec<String> = match flags.get("benches") {
+        Some(b) => b.split(',').map(|s| s.trim().to_string()).collect(),
+        None => zoo::BENCHES.iter().map(|b| b.to_string()).collect(),
+    };
+    let out_dir =
+        PathBuf::from(flags.get("out").cloned().unwrap_or_else(|| "modelpacks".into()));
+    let backend = engine::backend_by_name(
+        flags.get("backend").map(|s| s.as_str()).unwrap_or("packed"),
+    )?;
+    let spec = flags.get("assignment").map(|s| s.as_str()).unwrap_or("stripy");
+    let seed: u64 = flags.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(0);
+    let art = artifacts_dir(flags);
+    std::fs::create_dir_all(&out_dir)
+        .map_err(|e| anyhow!("creating {}: {e}", out_dir.display()))?;
+    for bench in &benches {
+        let (_, deployed, plan) = build_model(bench, backend, spec, seed, &art)?;
+        // provenance rides the pack so `serve --modelpack-dir` can
+        // refuse an artifact built under different construction flags
+        let prov = engine::Provenance { assignment: spec.to_string(), seed };
+        let pack = plan.to_modelpack_with(Some(&prov));
+
+        // an artifact is only kept if it executes bit-identically to
+        // the plan it was serialized from
+        verify_pack_roundtrip(&plan, &pack, bench)?;
+
+        let path = out_dir.join(format!("{bench}.cwm"));
+        std::fs::write(&path, &pack)
+            .map_err(|e| anyhow!("writing {}: {e}", path.display()))?;
+        let f32_bytes: usize = deployed.qlayers().map(|l| l.qweights.len() * 4).sum();
+        println!(
+            "{bench:<4} -> {} [{}]: pack {} B, packed weights {} B \
+             ({:.1}% of f32 {} B), load-verified bit-identical",
+            path.display(),
+            plan.backend_name(),
+            pack.len(),
+            deployed.packed_bytes(),
+            deployed.packed_bytes() as f64 / f32_bytes.max(1) as f64 * 100.0,
+            f32_bytes,
+        );
+    }
+    Ok(())
+}
+
+/// Validate a `.cwm` and print the artifact-level memory comparison
+/// (the paper's Fig. 3 memory axis, per layer and in total).
+fn cmd_inspect(flags: &HashMap<String, String>) -> Result<()> {
+    let path = PathBuf::from(req(flags, "pack")?);
+    let bytes =
+        std::fs::read(&path).map_err(|e| anyhow!("reading {}: {e}", path.display()))?;
+    let rep = engine::inspect(&bytes)?;
+    let sections: Vec<String> = rep
+        .sections
+        .iter()
+        .map(|&(kind, len)| format!("{kind}:{len}B"))
+        .collect();
+    println!(
+        "{}: modelpack v{}.{}, {} B, sections [{}]",
+        path.display(),
+        rep.version.0,
+        rep.version.1,
+        rep.file_bytes,
+        sections.join(", "),
+    );
+    println!(
+        "bench {} / backend {} — {} plan nodes, {} quantized layers, \
+         {} B resident kernel weights",
+        rep.bench,
+        rep.backend,
+        rep.n_nodes,
+        rep.layers.len(),
+        rep.kernel_weight_bytes,
+    );
+    match &rep.provenance {
+        Some(p) => println!("provenance: assignment {:?}, seed {}", p.assignment, p.seed),
+        None => println!("provenance: (not recorded)"),
+    }
+    println!(
+        "{:<10} {:<6} {:>5} {:>6} {:>3} {:>6} {:>6} {:>6} {:>10} {:>10} {:>10}",
+        "layer", "kind", "cout", "K", "px", "ch@2", "ch@4", "ch@8", "packed B",
+        "int8 B", "f32 B"
+    );
+    for l in &rep.layers {
+        println!(
+            "{:<10} {:<6} {:>5} {:>6} {:>3} {:>6} {:>6} {:>6} {:>10} {:>10} {:>10}",
+            l.name,
+            l.kind,
+            l.cout,
+            l.k,
+            l.act_bits,
+            l.channels_at[0],
+            l.channels_at[1],
+            l.channels_at[2],
+            l.packed_bytes,
+            l.int8_bytes,
+            l.f32_bytes,
+        );
+    }
+    let (packed, int8, f32b) = (rep.packed_total(), rep.int8_total(), rep.f32_total());
+    println!(
+        "TOTAL packed {packed} B | int8 {int8} B | f32 {f32b} B  \
+         (packed = {:.1}% of f32, {:.1}% of int8)",
+        packed as f64 / f32b.max(1) as f64 * 100.0,
+        packed as f64 / int8.max(1) as f64 * 100.0,
+    );
+    println!(
+        "cost-model packed bytes (Eq. 7): {} — {}",
+        rep.cost_model_packed_bytes,
+        if rep.matches_cost_model() { "match" } else { "MISMATCH" },
+    );
+    if !rep.matches_cost_model() {
+        bail!(
+            "packed totals ({packed} B) disagree with the mpic::cost accounting ({} B)",
+            rep.cost_model_packed_bytes
+        );
+    }
+    Ok(())
+}
+
 /// Resident multi-model inference server (pure Rust, builtin zoo).
 /// Blocks until `POST /admin/shutdown`, then drains and exits cleanly.
 fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
@@ -412,16 +559,23 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     if let Some(a) = flags.get("assignment") {
         reg_cfg.assignment = a.clone();
     }
+    if let Some(d) = flags.get("modelpack-dir") {
+        reg_cfg.modelpack_dir = Some(PathBuf::from(d));
+    }
     let registry = Arc::new(ModelRegistry::build(&reg_cfg)?);
     for e in registry.entries() {
         let cost = e.plan().cost();
+        let s = e.startup();
         println!(
-            "model {:<4} backend {:<9} feat {:>5} out {:>4} est {:.1} us/inf",
+            "model {:<4} backend {:<9} feat {:>5} out {:>4} est {:.1} us/inf \
+             ({} in {} us)",
             e.name(),
             e.plan().backend_name(),
             e.plan().feat(),
             e.plan().out_len(),
             cost.latency_us(),
+            s.source,
+            s.micros,
         );
     }
 

@@ -42,6 +42,7 @@
 //! ragged K and extreme codes).
 
 use crate::deploy::DeployedLayer;
+use crate::modelpack::{ByteArr, I32Arr};
 use crate::precision_index;
 use crate::quant::pack_subbyte;
 
@@ -51,6 +52,18 @@ pub trait KernelBackend: Send + Sync {
 
     /// Build the execution kernel for one deployed layer.
     fn prepare(&self, dl: &DeployedLayer) -> Box<dyn LayerKernel>;
+}
+
+/// A kernel's weight state, borrowed for modelpack serialization — the
+/// seam `engine::pack` uses to round-trip a plan without re-packing
+/// weights or materializing f32s.  Each variant is exactly what the
+/// matching backend needs to rebuild its [`LayerKernel`].
+pub enum KernelState<'a> {
+    /// [`ReferenceBackend`]: scalar `i32` rows.
+    Reference { k: usize, act_bits: u32, qw: &'a [i32] },
+    /// [`PackedBackend`]: the Eq. (7) sub-byte flash image plus per-row
+    /// `(byte offset, precision index)` descriptors.
+    Packed { k: usize, act_index: usize, rows: Vec<(u32, u8)>, bytes: &'a [u8] },
 }
 
 /// Per-layer kernel: weight rows dotted against packed activation
@@ -91,6 +104,9 @@ pub trait LayerKernel: Send + Sync {
 
     /// Bytes of weight storage held by this kernel (diagnostics).
     fn weight_bytes(&self) -> usize;
+
+    /// Borrow this kernel's weight state for modelpack serialization.
+    fn state(&self) -> KernelState<'_>;
 }
 
 // ---------------------------------------------------------------------------
@@ -144,7 +160,8 @@ struct ReferenceKernel {
     k: usize,
     /// `p_x` of the layer input — how `xcol` codes are decoded
     act_bits: u32,
-    qw: Vec<i32>,
+    /// owned on compile, zero-copy artifact view on modelpack load
+    qw: I32Arr,
 }
 
 impl KernelBackend for ReferenceBackend {
@@ -156,9 +173,19 @@ impl KernelBackend for ReferenceBackend {
         Box::new(ReferenceKernel {
             k: dl.k(),
             act_bits: dl.act_bits,
-            qw: dl.qweights.clone(),
+            qw: dl.qweights.clone().into(),
         })
     }
+}
+
+/// Rebuild a reference kernel from modelpack state (`engine::pack` has
+/// already validated `qw.len()`, `k` and `act_bits`).
+pub(super) fn reference_kernel_from_parts(
+    k: usize,
+    act_bits: u32,
+    qw: I32Arr,
+) -> Box<dyn LayerKernel> {
+    Box::new(ReferenceKernel { k, act_bits, qw })
 }
 
 impl LayerKernel for ReferenceKernel {
@@ -184,6 +211,10 @@ impl LayerKernel for ReferenceKernel {
 
     fn weight_bytes(&self) -> usize {
         self.qw.len() * std::mem::size_of::<i32>()
+    }
+
+    fn state(&self) -> KernelState<'_> {
+        KernelState::Reference { k: self.k, act_bits: self.act_bits, qw: &self.qw }
     }
 }
 
@@ -389,8 +420,9 @@ struct PackedKernel {
     /// K = codes per row (same for every channel of the layer)
     k: usize,
     /// all channel rows, each padded to a byte boundary (the CMix-NN
-    /// reordered-group layout `quant::packed_weight_bytes` sizes)
-    bytes: Vec<u8>,
+    /// reordered-group layout `quant::packed_weight_bytes` sizes) —
+    /// owned on compile, zero-copy artifact view on modelpack load
+    bytes: ByteArr,
     rows: Vec<PackedRow>,
     /// `precision_index(act_bits)` — selects the kernel-table row
     aidx: usize,
@@ -417,11 +449,32 @@ impl KernelBackend for PackedBackend {
         }
         Box::new(PackedKernel {
             k,
-            bytes,
+            bytes: bytes.into(),
             rows,
             aidx: precision_index(dl.act_bits),
         })
     }
+}
+
+/// Rebuild a packed kernel from modelpack state (`engine::pack` has
+/// already validated every row's `(offset, widx)` against `bytes` and
+/// `act_index` against the kernel table bounds) — the zero-copy load
+/// path: `bytes` stays the borrowed flash image, nothing is re-packed.
+pub(super) fn packed_kernel_from_parts(
+    k: usize,
+    act_index: usize,
+    rows: Vec<(u32, u8)>,
+    bytes: ByteArr,
+) -> Box<dyn LayerKernel> {
+    Box::new(PackedKernel {
+        k,
+        bytes,
+        rows: rows
+            .into_iter()
+            .map(|(offset, widx)| PackedRow { offset, widx })
+            .collect(),
+        aidx: act_index,
+    })
 }
 
 impl PackedKernel {
@@ -459,6 +512,15 @@ impl LayerKernel for PackedKernel {
 
     fn weight_bytes(&self) -> usize {
         self.bytes.len()
+    }
+
+    fn state(&self) -> KernelState<'_> {
+        KernelState::Packed {
+            k: self.k,
+            act_index: self.aidx,
+            rows: self.rows.iter().map(|r| (r.offset, r.widx)).collect(),
+            bytes: &self.bytes,
+        }
     }
 }
 
@@ -569,7 +631,7 @@ mod tests {
         let mut rng = Pcg32::seeded(29);
         let (k, px, b) = (29usize, 4u32, 3usize);
         let w = random_row(&mut rng, k, 8);
-        let kern = ReferenceKernel { k, act_bits: px, qw: w };
+        let kern = ReferenceKernel { k, act_bits: px, qw: w.into() };
         let col_bytes = (k * px as usize).div_ceil(8);
         let stride = col_bytes + 1;
         let mut cols = vec![0u8; b * stride];
@@ -601,7 +663,7 @@ mod tests {
             let w = random_row(&mut rng, k, 8);
             let xcol = pack_acts_subbyte(&x, px);
             let want: i64 = x.iter().zip(&w).map(|(&a, &b)| a as i64 * b as i64).sum();
-            let kern = ReferenceKernel { k, act_bits: px, qw: w };
+            let kern = ReferenceKernel { k, act_bits: px, qw: w.into() };
             assert_eq!(kern.dot(0, &xcol) as i64, want, "px={px}");
             assert_eq!(kern.dot_wide(0, &xcol), want, "wide px={px}");
         }

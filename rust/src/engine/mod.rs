@@ -40,14 +40,22 @@
 //! There is deliberately **no** per-call convenience wrapper that
 //! compiles and runs in one shot: every caller holds an [`ExecPlan`]
 //! (that is the point of the plan/execute split).
+//!
+//! Compiled plans are durable: [`ExecPlan::to_modelpack`] /
+//! [`ExecPlan::from_modelpack`] ([`pack`]) round-trip the *entire*
+//! compile output through the versioned `.cwm` artifact container
+//! ([`crate::modelpack`]) with bit-identical execution — the registry
+//! cold-start path and `cwmix compile`/`inspect` build on it.
 
 pub mod arena;
 pub mod backend;
+pub mod pack;
 pub mod plan;
 
 pub use arena::Arena;
 pub use backend::{
-    backend_by_name, KernelBackend, LayerKernel, PackedBackend,
+    backend_by_name, KernelBackend, KernelState, LayerKernel, PackedBackend,
     ReferenceBackend,
 };
+pub use pack::{inspect, read_provenance, InspectLayer, InspectReport, Provenance};
 pub use plan::{engine_threads, ExecPlan, MAX_BATCH_CHUNK};

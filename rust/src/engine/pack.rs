@@ -1,0 +1,936 @@
+//! `ExecPlan` ⇄ `.cwm` modelpack serialization.
+//!
+//! [`ExecPlan::to_modelpack`] serializes **everything**
+//! `ExecPlan::compile` derives — arena slot layout, node list, packed
+//! sub-byte weight rows, channel-wise sub-convolution groups, folded
+//! epilogues, im2col gather tables and the input-independent
+//! [`InferenceCost`] — into the sectioned container defined by
+//! [`crate::modelpack`].  [`ExecPlan::from_modelpack`] is the
+//! **validate-then-borrow** inverse: after the container and every
+//! record is checked, the large arrays (weight rows, `i32` gather
+//! tables, `f32` epilogues) become zero-copy views into the one owned
+//! aligned buffer — no re-packing, no f32 weight materialization, and
+//! the loaded plan executes **bit-identically** to a fresh compile
+//! (`tests/modelpack_roundtrip.rs` asserts it across the zoo × both
+//! backends).
+//!
+//! Hostile-input contract: a crafted or corrupted pack yields a typed
+//! [`PackError`]; it can never panic the loader *or* a later
+//! execution.  Decode therefore re-derives every geometry invariant
+//! the executor's unchecked indexing relies on (slot ids in range,
+//! buffer lengths consistent with `(cin, p_x, K)`, every gather entry
+//! inside the packed plane, every weight-row descriptor inside the
+//! flash image, kernel-table indices in bounds) and rejects packs that
+//! violate any of them.
+//!
+//! [`inspect`] parses a pack into an [`InspectReport`] — the artifact
+//! form of the paper's memory comparison: per-layer channel bit-width
+//! histograms and the packed-vs-int8-vs-f32 size table, cross-checked
+//! against the `mpic::cost` Eq. (7) packed-byte accounting carried in
+//! the pack.
+
+use crate::modelpack::{
+    assemble, malformed, AlignedBuf, Bytes, ByteArr, Container, DataWriter, F32Arr,
+    I32Arr, PackError, PackReader, PackWriter, SECTION_COST, SECTION_DATA,
+    SECTION_META, SECTION_PLAN, SECTION_PROV,
+};
+use crate::mpic::cost::{InferenceCost, LayerCost};
+use crate::precision_index;
+use crate::PRECISIONS;
+use std::sync::Arc;
+
+use super::backend::{
+    backend_by_name, packed_kernel_from_parts, reference_kernel_from_parts, KernelState,
+};
+use super::plan::{ExecPlan, NodeKind, PlanNode, PostAdd, QuantOp, COL_SLACK};
+
+// Caps on hostile counts/sizes: far above any real model, low enough
+// that a lying pack cannot drive pathological allocations.
+const MAX_NODES: usize = 1 << 16;
+const MAX_SLOTS: usize = 1 << 16;
+/// f32 elements per arena slot (256 MiB).
+const MAX_SLOT_ELEMS: usize = 1 << 26;
+/// f32 elements across ALL slots: every arena buffer is allocated at
+/// `cap (≤ 32) ×` these sizes, so per-slot caps alone would still let
+/// a ~0.5 MB crafted pack drive a multi-TiB allocation (and abort the
+/// process) at `plan.arena()` time.  64 MiB of f32 per sample bounds
+/// the worst hostile arena at ~2 GiB — far above any zoo model, far
+/// below an allocation-failure DoS.
+const MAX_TOTAL_SLOT_ELEMS: u64 = 1 << 24;
+/// bytes per packed plane / column buffer (also ×32 in a batch arena).
+const MAX_BUF_BYTES: usize = 1 << 26;
+const MAX_CHANNELS: usize = 1 << 24;
+const MAX_K: usize = 1 << 24;
+const MAX_COST_LAYERS: usize = 1 << 16;
+
+// Node kind tags.
+const KIND_NOOP: u8 = 0;
+const KIND_AVGPOOL: u8 = 1;
+const KIND_ADD: u8 = 2;
+const KIND_QUANT: u8 = 3;
+
+// Kernel backend tags.
+const KERNEL_REFERENCE: u8 = 0;
+const KERNEL_PACKED: u8 = 1;
+
+// ---------------------------------------------------------------------------
+// Encode.
+// ---------------------------------------------------------------------------
+
+/// Provenance of a pack's model state: the construction parameters the
+/// weights were synthesized under.  Not needed to *execute* a plan —
+/// it exists so a loader that was asked for specific parameters can
+/// refuse a pack built under different ones instead of silently
+/// serving its numerics (`ModelRegistry` cross-checks it on cold
+/// start; `cwmix compile` always writes it).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Provenance {
+    /// assignment spec (`stripy` | `w<N>x<M>`)
+    pub assignment: String,
+    /// synthetic-state seed
+    pub seed: u64,
+}
+
+impl ExecPlan {
+    /// Serialize this plan into a sealed `.cwm` byte image.
+    pub fn to_modelpack(&self) -> Vec<u8> {
+        self.to_modelpack_with(None)
+    }
+
+    /// [`Self::to_modelpack`] with an optional provenance section.
+    pub fn to_modelpack_with(&self, provenance: Option<&Provenance>) -> Vec<u8> {
+        let mut data = DataWriter::default();
+
+        // PLAN stream (fills DATA with the big arrays as it goes)
+        let mut p = PackWriter::default();
+        p.u32(self.nodes.len() as u32);
+        for node in &self.nodes {
+            p.u32(node.src as u32);
+            p.u32(node.dst as u32);
+            p.bool(node.save.is_some());
+            p.u32(node.save.unwrap_or(0) as u32);
+            p.u64(node.out_len as u64);
+            match &node.kind {
+                NodeKind::NoOp => p.u8(KIND_NOOP),
+                NodeKind::AvgPool { in_h, in_w, c } => {
+                    p.u8(KIND_AVGPOOL);
+                    p.u32(*in_h as u32);
+                    p.u32(*in_w as u32);
+                    p.u32(*c as u32);
+                }
+                NodeKind::Add { other, len, relu } => {
+                    p.u8(KIND_ADD);
+                    p.u32(*other as u32);
+                    p.u64(*len as u64);
+                    p.bool(*relu);
+                }
+                NodeKind::Quant(op) => {
+                    p.u8(KIND_QUANT);
+                    encode_quant(&mut p, &mut data, op);
+                }
+            }
+        }
+
+        // META
+        let mut m = PackWriter::default();
+        m.str(&self.bench);
+        m.str(self.backend_name);
+        m.u64(self.feat as u64);
+        m.u64(self.out_len as u64);
+        m.u32(self.out_slot as u32);
+        m.bool(self.permute);
+        m.u32(self.slot_len.len() as u32);
+        for &l in &self.slot_len {
+            m.u64(l as u64);
+        }
+        m.u64(self.plane_len as u64);
+        m.u64(self.col_len as u64);
+        m.u64(self.weight_bytes as u64);
+        m.u64(self.weight_traffic_bytes);
+        m.u32(self.output_perm.len() as u32);
+        for &c in &self.output_perm {
+            m.u32(c as u32);
+        }
+
+        // COST
+        let mut c = PackWriter::default();
+        c.u32(self.cost.layers.len() as u32);
+        for lc in &self.cost.layers {
+            c.str(&lc.name);
+            c.u32(lc.macs_by_group.len() as u32);
+            for &(bits, macs) in &lc.macs_by_group {
+                c.u32(bits);
+                c.u64(macs);
+            }
+            c.f64(lc.mac_cycles);
+            c.f64(lc.overhead_cycles);
+            c.u64(lc.mem_bytes);
+            c.f64(lc.mac_energy_pj);
+            c.f64(lc.mem_energy_pj);
+            c.f64(lc.ctrl_energy_pj);
+        }
+
+        let mut sections = vec![
+            (SECTION_META, m.into_bytes()),
+            (SECTION_PLAN, p.into_bytes()),
+            (SECTION_COST, c.into_bytes()),
+            (SECTION_DATA, data.into_bytes()),
+        ];
+        if let Some(prov) = provenance {
+            let mut pr = PackWriter::default();
+            pr.str(&prov.assignment);
+            pr.u64(prov.seed);
+            sections.push((SECTION_PROV, pr.into_bytes()));
+        }
+        assemble(&sections)
+    }
+
+    /// Deserialize a plan from `.cwm` bytes; the large arrays borrow
+    /// zero-copy from one owned aligned copy of the file.
+    pub fn from_modelpack(bytes: &[u8]) -> Result<ExecPlan, PackError> {
+        decode_plan(&Container::parse(bytes)?)
+    }
+
+    /// [`Self::from_modelpack`] plus the pack's recorded [`Provenance`]
+    /// from the same single container parse — the registry's cold-start
+    /// entry point (parsing twice would double the aligned copy and
+    /// checksum work the load path exists to keep small).
+    pub fn from_modelpack_with_provenance(
+        bytes: &[u8],
+    ) -> Result<(ExecPlan, Option<Provenance>), PackError> {
+        let container = Container::parse(bytes)?;
+        let provenance = provenance_of(&container)?;
+        Ok((decode_plan(&container)?, provenance))
+    }
+}
+
+/// Read the optional provenance section of a pack (the container —
+/// header, checksum, section table — is fully validated on the way).
+pub fn read_provenance(bytes: &[u8]) -> Result<Option<Provenance>, PackError> {
+    provenance_of(&Container::parse(bytes)?)
+}
+
+fn provenance_of(container: &Container) -> Result<Option<Provenance>, PackError> {
+    let Some(s) = container.find(SECTION_PROV) else {
+        return Ok(None);
+    };
+    let mut r = PackReader::new(&container.buf.as_bytes()[s.off..s.off + s.len]);
+    let assignment = r.str()?;
+    let seed = r.u64()?;
+    r.finish()?;
+    Ok(Some(Provenance { assignment, seed }))
+}
+
+fn encode_quant(p: &mut PackWriter, data: &mut DataWriter, op: &QuantOp) {
+    p.str(&op.name);
+    p.bool(op.fc);
+    p.bool(op.depthwise);
+    p.u64(op.k as u64);
+    p.u32(op.kk as u32);
+    p.u64(op.in_len as u64);
+    p.u32(op.out_h as u32);
+    p.u32(op.out_w as u32);
+    p.u32(op.cout as u32);
+    p.f32(op.act_alpha);
+    p.f32(op.act_eps);
+    p.u32(op.act_bits);
+    p.u64(op.cin as u64);
+    p.u64(op.pixel_bytes as u64);
+    p.u64(op.plane_bytes as u64);
+    p.u64(op.seg_bits as u64);
+    p.u64(op.col_bytes as u64);
+    p.bool(op.relu_inline);
+    p.bool(op.post_add.is_some());
+    if let Some(pa) = &op.post_add {
+        p.u32(pa.other as u32);
+        p.u64(pa.len as u64);
+        p.bool(pa.relu);
+    }
+    p.u32(op.groups.len() as u32);
+    for g in &op.groups {
+        p.u32(g.bits);
+        p.u64(g.start as u64);
+        p.u64(g.len as u64);
+    }
+    let (off, len) = data.f32s(&op.a_eps);
+    p.u64(off);
+    p.u64(len);
+    let (off, len) = data.f32s(&op.b_fold);
+    p.u64(off);
+    p.u64(len);
+    let (off, len) = data.i32s(&op.gather);
+    p.u64(off);
+    p.u64(len);
+    match op.kernel.state() {
+        KernelState::Reference { k, act_bits, qw } => {
+            p.u8(KERNEL_REFERENCE);
+            p.u64(k as u64);
+            p.u32(act_bits);
+            let (off, len) = data.i32s(qw);
+            p.u64(off);
+            p.u64(len);
+        }
+        KernelState::Packed { k, act_index, rows, bytes } => {
+            p.u8(KERNEL_PACKED);
+            p.u64(k as u64);
+            p.u8(act_index as u8);
+            p.u32(rows.len() as u32);
+            for (offset, widx) in rows {
+                p.u32(offset);
+                p.u8(widx);
+            }
+            let (off, len) = data.bytes(bytes);
+            p.u64(off);
+            p.u64(len);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Decode.
+// ---------------------------------------------------------------------------
+
+/// The DATA section as an absolute window into the container buffer;
+/// relative `(offset, len)` references resolve to bounds-checked
+/// [`Bytes`] views.
+struct DataView<'c> {
+    buf: &'c Arc<AlignedBuf>,
+    off: usize,
+    len: usize,
+}
+
+impl DataView<'_> {
+    fn slice(&self, r: &mut PackReader<'_>) -> Result<Bytes, PackError> {
+        let rel = r.len64()?;
+        let len = r.len64()?;
+        let end = rel.checked_add(len).ok_or(PackError::OffsetOutOfRange {
+            offset: rel as u64,
+            len: len as u64,
+            limit: self.len as u64,
+        })?;
+        if end > self.len {
+            return Err(PackError::OffsetOutOfRange {
+                offset: rel as u64,
+                len: len as u64,
+                limit: self.len as u64,
+            });
+        }
+        Bytes::new(self.buf, self.off + rel, len)
+    }
+}
+
+struct Meta {
+    bench: String,
+    backend_name: &'static str,
+    feat: usize,
+    out_len: usize,
+    out_slot: usize,
+    permute: bool,
+    slot_len: Vec<usize>,
+    plane_len: usize,
+    col_len: usize,
+    weight_bytes: usize,
+    weight_traffic_bytes: u64,
+    output_perm: Vec<usize>,
+}
+
+fn decode_meta(bytes: &[u8]) -> Result<Meta, PackError> {
+    let mut r = PackReader::new(bytes);
+    let bench = r.str()?;
+    let backend = r.str()?;
+    // map to the registered backend's static name (also proves the
+    // pack's backend exists in this build)
+    let backend_name = backend_by_name(&backend)
+        .map_err(|_| malformed(format!("unknown backend {backend:?}")))?
+        .name();
+    let feat = r.len64()?;
+    let out_len = r.len64()?;
+    let out_slot = r.u32()? as usize;
+    let permute = r.bool()?;
+    let n_slots = r.count(8, MAX_SLOTS)?;
+    let mut slot_len = Vec::with_capacity(n_slots);
+    let mut total_elems = 0u64;
+    for _ in 0..n_slots {
+        let l = r.len64()?;
+        if l > MAX_SLOT_ELEMS {
+            return Err(malformed(format!("slot of {l} elements")));
+        }
+        total_elems += l as u64;
+        slot_len.push(l);
+    }
+    if total_elems > MAX_TOTAL_SLOT_ELEMS {
+        return Err(malformed(format!("{total_elems} slot elements in total")));
+    }
+    let plane_len = r.len64()?;
+    let col_len = r.len64()?;
+    if plane_len > MAX_BUF_BYTES || col_len > MAX_BUF_BYTES {
+        return Err(malformed("plane/column buffer size over cap"));
+    }
+    let weight_bytes = r.len64()?;
+    let weight_traffic_bytes = r.u64()?;
+    let n_perm = r.count(4, MAX_SLOT_ELEMS)?;
+    let mut output_perm = Vec::with_capacity(n_perm);
+    for _ in 0..n_perm {
+        output_perm.push(r.u32()? as usize);
+    }
+    r.finish()?;
+
+    if slot_len.len() < 2 {
+        return Err(malformed("fewer than two scratch slots"));
+    }
+    if out_slot >= slot_len.len() {
+        return Err(malformed(format!("out_slot {out_slot} out of range")));
+    }
+    if feat > slot_len[0] || out_len > slot_len[out_slot] {
+        return Err(malformed("feat/out_len exceed their slots"));
+    }
+    if permute {
+        if output_perm.len() != out_len {
+            return Err(malformed("output permutation length mismatch"));
+        }
+        if output_perm.iter().any(|&c| c >= out_len) {
+            return Err(malformed("output permutation entry out of range"));
+        }
+    }
+    Ok(Meta {
+        bench,
+        backend_name,
+        feat,
+        out_len,
+        out_slot,
+        permute,
+        slot_len,
+        plane_len,
+        col_len,
+        weight_bytes,
+        weight_traffic_bytes,
+        output_perm,
+    })
+}
+
+fn decode_cost(bytes: &[u8]) -> Result<InferenceCost, PackError> {
+    let mut r = PackReader::new(bytes);
+    let n = r.count(4, MAX_COST_LAYERS)?;
+    let mut layers = Vec::with_capacity(n);
+    for _ in 0..n {
+        let name = r.str()?;
+        let ng = r.count(12, MAX_CHANNELS)?;
+        let mut macs_by_group = Vec::with_capacity(ng);
+        for _ in 0..ng {
+            let bits = r.u32()?;
+            let macs = r.u64()?;
+            macs_by_group.push((bits, macs));
+        }
+        layers.push(LayerCost {
+            name,
+            macs_by_group,
+            mac_cycles: r.f64()?,
+            overhead_cycles: r.f64()?,
+            mem_bytes: r.u64()?,
+            mac_energy_pj: r.f64()?,
+            mem_energy_pj: r.f64()?,
+            ctrl_energy_pj: r.f64()?,
+        });
+    }
+    r.finish()?;
+    Ok(InferenceCost { layers })
+}
+
+fn decode_plan(container: &Container) -> Result<ExecPlan, PackError> {
+    let meta = decode_meta(container.section(SECTION_META)?)?;
+    let cost = decode_cost(container.section(SECTION_COST)?)?;
+    let (doff, dlen) = container.section_range(SECTION_DATA)?;
+    let data = DataView { buf: &container.buf, off: doff, len: dlen };
+
+    let plan_bytes = container.section(SECTION_PLAN)?;
+    let mut r = PackReader::new(plan_bytes);
+    let n_nodes = r.count(14, MAX_NODES)?;
+    let n_slots = meta.slot_len.len();
+    let mut nodes = Vec::with_capacity(n_nodes);
+    // Write-coverage analysis: arenas are reused across batches, so any
+    // slot bytes a node reads (or the output/save copies emit) that were
+    // not written *this pass* would surface another request's data.
+    // Track the written prefix of every slot (elements) and reject a
+    // plan whose reads or copies reach beyond it.  The input copy
+    // defines `feat` elements of slot 0 before the first node runs.
+    let mut defined = vec![0usize; n_slots];
+    defined[0] = meta.feat;
+    for _ in 0..n_nodes {
+        let src = r.u32()? as usize;
+        let dst = r.u32()? as usize;
+        let has_save = r.bool()?;
+        let save_raw = r.u32()? as usize;
+        let save = has_save.then_some(save_raw);
+        let out_len = r.len64()?;
+        if src >= n_slots || dst >= n_slots {
+            return Err(malformed("node slot id out of range"));
+        }
+        if out_len > meta.slot_len[dst] {
+            return Err(malformed("node out_len exceeds its slot"));
+        }
+        if let Some(s) = save {
+            if s >= n_slots {
+                return Err(malformed("save slot id out of range"));
+            }
+            if out_len > meta.slot_len[s] {
+                return Err(malformed("node out_len exceeds its save slot"));
+            }
+        }
+        let kind = match r.u8()? {
+            KIND_NOOP => NodeKind::NoOp,
+            KIND_AVGPOOL => {
+                let in_h = r.u32()? as usize;
+                let in_w = r.u32()? as usize;
+                let c = r.u32()? as usize;
+                if dst == src {
+                    return Err(malformed("avgpool writes its own source slot"));
+                }
+                let in_elems = in_h
+                    .checked_mul(in_w)
+                    .and_then(|p| p.checked_mul(c))
+                    .ok_or_else(|| malformed("avgpool geometry overflow"))?;
+                if in_h * in_w == 0 || in_elems > meta.slot_len[src] || c > meta.slot_len[dst] {
+                    return Err(malformed("avgpool geometry exceeds slots"));
+                }
+                NodeKind::AvgPool { in_h, in_w, c }
+            }
+            KIND_ADD => {
+                let other = r.u32()? as usize;
+                let len = r.len64()?;
+                let relu = r.bool()?;
+                if other >= n_slots || other == dst {
+                    return Err(malformed("add tag slot invalid"));
+                }
+                if len > meta.slot_len[src]
+                    || len > meta.slot_len[dst]
+                    || len > meta.slot_len[other]
+                {
+                    return Err(malformed("add length exceeds a slot"));
+                }
+                NodeKind::Add { other, len, relu }
+            }
+            KIND_QUANT => {
+                let op = decode_quant(&mut r, &data, &meta, src, dst, out_len)?;
+                NodeKind::Quant(op)
+            }
+            other => return Err(malformed(format!("unknown node kind tag {other}"))),
+        };
+        match &kind {
+            NodeKind::NoOp => {}
+            NodeKind::AvgPool { in_h, in_w, c } => {
+                if defined[src] < in_h * in_w * c {
+                    return Err(malformed("avgpool reads beyond this pass's data"));
+                }
+                defined[dst] = *c;
+            }
+            NodeKind::Add { other, len, .. } => {
+                if defined[src] < *len || defined[*other] < *len {
+                    return Err(malformed("add reads beyond this pass's data"));
+                }
+                if dst != src {
+                    defined[dst] = *len;
+                }
+            }
+            NodeKind::Quant(op) => {
+                if defined[src] < op.in_len {
+                    return Err(malformed("layer reads beyond this pass's data"));
+                }
+                if let Some(pa) = &op.post_add {
+                    if defined[pa.other] < pa.len {
+                        return Err(malformed(
+                            "residual reads beyond this pass's data",
+                        ));
+                    }
+                }
+                defined[dst] = out_len;
+            }
+        }
+        if let Some(s) = save {
+            if defined[dst] < out_len {
+                return Err(malformed("save copies beyond this pass's data"));
+            }
+            defined[s] = out_len;
+        }
+        nodes.push(PlanNode { src, dst, save, out_len, kind });
+    }
+    r.finish()?;
+    if defined[meta.out_slot] < meta.out_len {
+        return Err(malformed("output slot is not fully written by the plan"));
+    }
+
+    Ok(ExecPlan {
+        bench: meta.bench,
+        backend_name: meta.backend_name,
+        feat: meta.feat,
+        slot_len: meta.slot_len,
+        plane_len: meta.plane_len,
+        col_len: meta.col_len,
+        nodes,
+        out_slot: meta.out_slot,
+        out_len: meta.out_len,
+        output_perm: meta.output_perm,
+        permute: meta.permute,
+        cost,
+        weight_bytes: meta.weight_bytes,
+        weight_traffic_bytes: meta.weight_traffic_bytes,
+    })
+}
+
+/// Decode one quantized-layer record and re-derive every invariant the
+/// executor's unchecked hot loops rely on.
+fn decode_quant(
+    r: &mut PackReader<'_>,
+    data: &DataView<'_>,
+    meta: &Meta,
+    src: usize,
+    dst: usize,
+    node_out_len: usize,
+) -> Result<Box<QuantOp>, PackError> {
+    let name = r.str()?;
+    let fc = r.bool()?;
+    let depthwise = r.bool()?;
+    let k = r.len64()?;
+    let kk = r.u32()? as usize;
+    let in_len = r.len64()?;
+    let out_h = r.u32()? as usize;
+    let out_w = r.u32()? as usize;
+    let cout = r.u32()? as usize;
+    let act_alpha = r.f32()?;
+    let act_eps = r.f32()?;
+    let act_bits = r.u32()?;
+    let cin = r.len64()?;
+    let pixel_bytes = r.len64()?;
+    let plane_bytes = r.len64()?;
+    let seg_bits = r.len64()?;
+    let col_bytes = r.len64()?;
+    let relu_inline = r.bool()?;
+    let post_add = if r.bool()? {
+        let other = r.u32()? as usize;
+        let len = r.len64()?;
+        let relu = r.bool()?;
+        if other >= meta.slot_len.len() || other == dst {
+            return Err(malformed(format!("{name}: residual tag slot invalid")));
+        }
+        if len != node_out_len || len > meta.slot_len[other] {
+            return Err(malformed(format!("{name}: residual length invalid")));
+        }
+        Some(PostAdd { other, len, relu })
+    } else {
+        None
+    };
+
+    let err = |msg: &str| Err(malformed(format!("{name}: {msg}")));
+    if dst == src {
+        return err("writes its own source slot");
+    }
+    if !matches!(act_bits, 2 | 4 | 8) {
+        return err("activation bits not in {2,4,8}");
+    }
+    // the executor clamps into [0, act_alpha]: a NaN or negative alpha
+    // would panic f32::clamp, so a pack carrying one is malformed
+    if !act_alpha.is_finite() || act_alpha < 0.0 || !act_eps.is_finite() || act_eps <= 0.0
+    {
+        return err("non-finite PACT quantization parameters");
+    }
+    let pxs = act_bits as usize;
+    if cout == 0 || cout > MAX_CHANNELS || k == 0 || k > MAX_K || cin == 0 || cin > MAX_K
+        || kk == 0
+    {
+        return err("degenerate or oversized geometry");
+    }
+    if in_len > meta.slot_len[src] || in_len % cin != 0 {
+        return err("input length inconsistent with source slot / C_in");
+    }
+    if pixel_bytes != (cin * pxs).div_ceil(8) {
+        return err("pixel_bytes disagrees with cin * p_x");
+    }
+    let n_pixels = in_len / cin;
+    if plane_bytes
+        != n_pixels
+            .checked_mul(pixel_bytes)
+            .ok_or_else(|| malformed(format!("{name}: plane size overflow")))?
+    {
+        return err("plane_bytes disagrees with pixel count");
+    }
+    if plane_bytes > meta.plane_len {
+        return err("plane exceeds the arena plane buffer");
+    }
+    if col_bytes != (k * pxs).div_ceil(8) {
+        return err("col_bytes disagrees with K * p_x");
+    }
+    if col_bytes + COL_SLACK > meta.col_len {
+        return err("column exceeds the arena column buffer");
+    }
+    let cin_g = if depthwise { 1 } else { cin };
+    if fc {
+        if in_len != k || cin != k {
+            return err("fc input length != K");
+        }
+        if node_out_len != cout {
+            return err("fc out_len != C_out");
+        }
+    } else {
+        if seg_bits != cin_g * pxs {
+            return err("seg_bits disagrees with cin_g * p_x");
+        }
+        if k != kk * cin_g {
+            return err("K disagrees with kk * cin_g");
+        }
+        if depthwise && cout != cin {
+            return err("depthwise C_out != C_in");
+        }
+        let out_pixels = out_h
+            .checked_mul(out_w)
+            .ok_or_else(|| malformed(format!("{name}: output size overflow")))?;
+        if out_pixels
+            .checked_mul(cout)
+            .ok_or_else(|| malformed(format!("{name}: output size overflow")))?
+            != node_out_len
+        {
+            return err("out_h * out_w * C_out != out_len");
+        }
+    }
+
+    let n_groups = r.count(20, cout)?;
+    let mut groups = Vec::with_capacity(n_groups);
+    // the sub-conv groups must tile [0, cout) exactly: the executor
+    // writes outputs only per group, so an uncovered channel would
+    // leave stale arena data from a previous batch in the output (a
+    // cross-request leak under the serving batcher's resident arena)
+    let mut next_start = 0usize;
+    for _ in 0..n_groups {
+        let bits = r.u32()?;
+        let start = r.len64()?;
+        let len = r.len64()?;
+        if !matches!(bits, 2 | 4 | 8) {
+            return err("group bits not in {2,4,8}");
+        }
+        if len == 0 || start != next_start {
+            return err("groups do not tile the channel range");
+        }
+        next_start = match start.checked_add(len) {
+            Some(e) if e <= cout => e,
+            _ => return err("group channel range out of bounds"),
+        };
+        groups.push(crate::deploy::SubConv { bits, start, len });
+    }
+    if next_start != cout {
+        return err("groups do not cover every output channel");
+    }
+
+    let a_eps_b = data.slice(r)?;
+    let b_fold_b = data.slice(r)?;
+    let gather_b = data.slice(r)?;
+    if a_eps_b.len() != cout * 4 || b_fold_b.len() != cout * 4 {
+        return err("epilogue arrays are not C_out f32s");
+    }
+    let a_eps = F32Arr::from_le(a_eps_b)?;
+    let b_fold = F32Arr::from_le(b_fold_b)?;
+    let gather = I32Arr::from_le(gather_b)?;
+    if fc {
+        if !gather.is_empty() {
+            return err("fc layer carries a gather table");
+        }
+    } else {
+        if gather.len() != out_h * out_w * kk {
+            return err("gather table size disagrees with geometry");
+        }
+        for &g in gather.iter() {
+            if g != -1
+                && (g < 0
+                    || (g as usize)
+                        .checked_add(pixel_bytes)
+                        .is_none_or(|e| e > plane_bytes))
+            {
+                return err("gather entry outside the packed plane");
+            }
+        }
+    }
+
+    let kernel = match r.u8()? {
+        KERNEL_REFERENCE => {
+            let kern_k = r.len64()?;
+            let kern_bits = r.u32()?;
+            let qw_b = data.slice(r)?;
+            if kern_k != k || kern_bits != act_bits {
+                return err("reference kernel geometry mismatch");
+            }
+            if qw_b.len()
+                != cout
+                    .checked_mul(k)
+                    .and_then(|n| n.checked_mul(4))
+                    .ok_or_else(|| malformed(format!("{name}: weight size overflow")))?
+            {
+                return err("reference kernel rows are not C_out * K i32s");
+            }
+            reference_kernel_from_parts(k, act_bits, I32Arr::from_le(qw_b)?)
+        }
+        KERNEL_PACKED => {
+            let kern_k = r.len64()?;
+            let act_index = r.u8()? as usize;
+            if kern_k != k || act_index != precision_index(act_bits) {
+                return err("packed kernel geometry mismatch");
+            }
+            let n_rows = r.count(5, cout)?;
+            if n_rows != cout {
+                return err("packed kernel row count != C_out");
+            }
+            let mut rows = Vec::with_capacity(n_rows);
+            for _ in 0..n_rows {
+                rows.push((r.u32()?, r.u8()?));
+            }
+            let bytes_b = data.slice(r)?;
+            for &(offset, widx) in &rows {
+                let Some(&bits) = PRECISIONS.get(widx as usize) else {
+                    return err("packed row precision index out of range");
+                };
+                let row_bytes = (k * bits as usize).div_ceil(8);
+                if (offset as usize)
+                    .checked_add(row_bytes)
+                    .is_none_or(|end| end > bytes_b.len())
+                {
+                    return err("packed row reaches past the flash image");
+                }
+            }
+            packed_kernel_from_parts(k, act_index, rows, ByteArr::view(bytes_b))
+        }
+        other => return Err(malformed(format!("{name}: unknown kernel tag {other}"))),
+    };
+
+    Ok(Box::new(QuantOp {
+        name,
+        fc,
+        depthwise,
+        k,
+        kk,
+        in_len,
+        out_h,
+        out_w,
+        cout,
+        act_alpha,
+        act_eps,
+        act_bits,
+        cin,
+        pixel_bytes,
+        plane_bytes,
+        seg_bits,
+        col_bytes,
+        gather,
+        groups,
+        a_eps,
+        b_fold,
+        relu_inline,
+        post_add,
+        kernel,
+    }))
+}
+
+// ---------------------------------------------------------------------------
+// Inspect.
+// ---------------------------------------------------------------------------
+
+/// One quantized layer's size accounting, as stored in the artifact.
+pub struct InspectLayer {
+    pub name: String,
+    pub kind: &'static str,
+    pub cout: usize,
+    pub k: usize,
+    pub act_bits: u32,
+    /// channels at 2/4/8 weight bits (indexed by `precision_index`)
+    pub channels_at: [usize; 3],
+    /// Eq. (7) packed flash bytes (per-channel rows, byte-padded)
+    pub packed_bytes: usize,
+    /// uniform-int8 bytes for the same weights
+    pub int8_bytes: usize,
+    /// f32 bytes for the same weights
+    pub f32_bytes: usize,
+}
+
+/// Artifact-level report of a `.cwm`: header facts plus the paper's
+/// memory comparison (packed vs int8 vs f32) per layer and in total.
+pub struct InspectReport {
+    pub version: (u16, u16),
+    pub flags: u32,
+    pub file_bytes: usize,
+    /// every section `(kind, payload bytes)`, unknown kinds included
+    pub sections: Vec<(u32, usize)>,
+    pub bench: String,
+    pub backend: String,
+    /// construction parameters, when the writer recorded them
+    pub provenance: Option<Provenance>,
+    pub n_nodes: usize,
+    pub layers: Vec<InspectLayer>,
+    /// the `mpic::cost` Eq. (7) packed-weight accounting carried in the
+    /// pack (what the cost model charged for weight traffic)
+    pub cost_model_packed_bytes: u64,
+    /// in-memory weight bytes of the kernels (backend-dependent)
+    pub kernel_weight_bytes: usize,
+}
+
+impl InspectReport {
+    pub fn packed_total(&self) -> usize {
+        self.layers.iter().map(|l| l.packed_bytes).sum()
+    }
+
+    pub fn int8_total(&self) -> usize {
+        self.layers.iter().map(|l| l.int8_bytes).sum()
+    }
+
+    pub fn f32_total(&self) -> usize {
+        self.layers.iter().map(|l| l.f32_bytes).sum()
+    }
+
+    /// Does the per-channel accounting derived from the stored groups
+    /// agree with the cost model's Eq. (7) packed-byte total?
+    pub fn matches_cost_model(&self) -> bool {
+        self.packed_total() as u64 == self.cost_model_packed_bytes
+    }
+}
+
+/// Parse and fully validate a `.cwm`, then report its size accounting.
+pub fn inspect(bytes: &[u8]) -> Result<InspectReport, PackError> {
+    let container = Container::parse(bytes)?;
+    let provenance = provenance_of(&container)?;
+    let plan = decode_plan(&container)?;
+    let mut layers = Vec::new();
+    for node in &plan.nodes {
+        if let NodeKind::Quant(op) = &node.kind {
+            let mut channels_at = [0usize; 3];
+            let mut packed = 0usize;
+            for g in &op.groups {
+                channels_at[precision_index(g.bits)] += g.len;
+                packed += g.len * (op.k * g.bits as usize).div_ceil(8);
+            }
+            layers.push(InspectLayer {
+                name: op.name.clone(),
+                kind: if op.fc {
+                    "fc"
+                } else if op.depthwise {
+                    "dwconv"
+                } else {
+                    "conv"
+                },
+                cout: op.cout,
+                k: op.k,
+                act_bits: op.act_bits,
+                channels_at,
+                packed_bytes: packed,
+                int8_bytes: op.cout * op.k,
+                f32_bytes: op.cout * op.k * 4,
+            });
+        }
+    }
+    Ok(InspectReport {
+        version: container.version,
+        flags: container.flags,
+        file_bytes: container.buf.len(),
+        sections: container.sections.iter().map(|s| (s.kind, s.len)).collect(),
+        bench: plan.bench.clone(),
+        backend: plan.backend_name.to_string(),
+        provenance,
+        n_nodes: plan.nodes.len(),
+        layers,
+        cost_model_packed_bytes: plan.weight_traffic_bytes,
+        kernel_weight_bytes: plan.weight_bytes,
+    })
+}

@@ -52,6 +52,7 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::deploy::{DeployedLayer, DeployedModel, SubConv};
 use crate::energy::CostLut;
+use crate::modelpack::{F32Arr, I32Arr};
 use crate::mpic::cost::{
     account_group, account_memory, account_structural, BatchCost, InferenceCost,
     LayerCost,
@@ -66,54 +67,60 @@ use super::LayerKernel;
 use crate::mpic::exec::same_pad;
 
 /// Residual epilogue fused onto a quantized layer (`spec.add_from`).
-struct PostAdd {
-    other: usize,
-    len: usize,
-    relu: bool,
+pub(super) struct PostAdd {
+    pub(super) other: usize,
+    pub(super) len: usize,
+    pub(super) relu: bool,
 }
 
-/// One quantized layer, fully precompiled.
-struct QuantOp {
-    fc: bool,
-    depthwise: bool,
+/// One quantized layer, fully precompiled.  The large arrays (gather
+/// table, folded epilogues) are view-backed so a modelpack-loaded plan
+/// borrows them zero-copy from the artifact buffer; a compiled plan
+/// owns them.  Fields are `pub(super)` for the `engine::pack`
+/// serializer — execution semantics live entirely in this module.
+pub(super) struct QuantOp {
+    /// layer name (`spec.name`) — diagnostics and `cwmix inspect`
+    pub(super) name: String,
+    pub(super) fc: bool,
+    pub(super) depthwise: bool,
     /// weights per output channel
-    k: usize,
+    pub(super) k: usize,
     /// kernel spatial positions (`kx * ky`)
-    kk: usize,
-    in_len: usize,
-    out_h: usize,
-    out_w: usize,
-    cout: usize,
+    pub(super) kk: usize,
+    pub(super) in_len: usize,
+    pub(super) out_h: usize,
+    pub(super) out_w: usize,
+    pub(super) cout: usize,
     /// PACT clip (already floored at 1e-6) and step
-    act_alpha: f32,
-    act_eps: f32,
+    pub(super) act_alpha: f32,
+    pub(super) act_eps: f32,
     /// input activation precision `p_x` — the packed plane's code width
-    act_bits: u32,
+    pub(super) act_bits: u32,
     /// input channels per pixel (K for FC: the whole input is one run)
-    cin: usize,
+    pub(super) cin: usize,
     /// bytes per packed input pixel (`ceil(cin * p_x / 8)`)
-    pixel_bytes: usize,
+    pub(super) pixel_bytes: usize,
     /// total packed plane bytes (`n_pixels * pixel_bytes`)
-    plane_bytes: usize,
+    pub(super) plane_bytes: usize,
     /// bits each kernel position contributes to the column (`cin_g * p_x`)
-    seg_bits: usize,
+    pub(super) seg_bits: usize,
     /// dense packed column bytes (`ceil(K * p_x / 8)`)
-    col_bytes: usize,
+    pub(super) col_bytes: usize,
     /// per output pixel x kernel position: base **byte** offset of the
     /// source pixel in the packed plane, or -1 outside the image (zero
     /// padding)
-    gather: Vec<i32>,
-    groups: Vec<SubConv>,
+    pub(super) gather: I32Arr,
+    pub(super) groups: Vec<SubConv>,
     /// `a_fold[c] * act_eps` (same f32 product the oracle forms per
     /// element) and the additive epilogue term
-    a_eps: Vec<f32>,
-    b_fold: Vec<f32>,
-    relu_inline: bool,
-    post_add: Option<PostAdd>,
-    kernel: Box<dyn LayerKernel>,
+    pub(super) a_eps: F32Arr,
+    pub(super) b_fold: F32Arr,
+    pub(super) relu_inline: bool,
+    pub(super) post_add: Option<PostAdd>,
+    pub(super) kernel: Box<dyn LayerKernel>,
 }
 
-enum NodeKind {
+pub(super) enum NodeKind {
     Quant(Box<QuantOp>),
     AvgPool { in_h: usize, in_w: usize, c: usize },
     Add { other: usize, len: usize, relu: bool },
@@ -121,33 +128,33 @@ enum NodeKind {
     NoOp,
 }
 
-struct PlanNode {
-    src: usize,
-    dst: usize,
+pub(super) struct PlanNode {
+    pub(super) src: usize,
+    pub(super) dst: usize,
     /// copy the node's output into this tag slot afterwards (`save_as`)
-    save: Option<usize>,
-    out_len: usize,
-    kind: NodeKind,
+    pub(super) save: Option<usize>,
+    pub(super) out_len: usize,
+    pub(super) kind: NodeKind,
 }
 
 /// A compiled, reusable execution plan for one deployed model.
 pub struct ExecPlan {
-    bench: String,
-    backend_name: &'static str,
-    feat: usize,
-    slot_len: Vec<usize>,
-    plane_len: usize,
-    col_len: usize,
-    nodes: Vec<PlanNode>,
-    out_slot: usize,
-    out_len: usize,
-    output_perm: Vec<usize>,
-    permute: bool,
-    cost: InferenceCost,
-    weight_bytes: usize,
+    pub(super) bench: String,
+    pub(super) backend_name: &'static str,
+    pub(super) feat: usize,
+    pub(super) slot_len: Vec<usize>,
+    pub(super) plane_len: usize,
+    pub(super) col_len: usize,
+    pub(super) nodes: Vec<PlanNode>,
+    pub(super) out_slot: usize,
+    pub(super) out_len: usize,
+    pub(super) output_perm: Vec<usize>,
+    pub(super) permute: bool,
+    pub(super) cost: InferenceCost,
+    pub(super) weight_bytes: usize,
     /// modeled per-sample packed weight traffic (Eq. (7) flash bytes),
     /// the batch-amortizable share of `InferenceCost::total_mem_bytes`
-    weight_traffic_bytes: u64,
+    pub(super) weight_traffic_bytes: u64,
 }
 
 /// Samples per batch-plane pass (and per worker arena): bounds arena
@@ -161,7 +168,7 @@ const SCRATCH_B: usize = 1;
 
 /// Slack bytes past a packed column: the unaligned OR-assembly writes
 /// one spill byte past the last data byte (always zero bits there).
-const COL_SLACK: usize = 2;
+pub(super) const COL_SLACK: usize = 2;
 
 /// Pick the write slot for an out-of-place op: the scratch slot that is
 /// not the source (tag slots are never written by compute nodes).
@@ -421,6 +428,7 @@ impl ExecPlan {
         }
 
         Ok(Box::new(QuantOp {
+            name: s.name.clone(),
             fc,
             depthwise,
             k,
@@ -437,10 +445,10 @@ impl ExecPlan {
             plane_bytes,
             seg_bits,
             col_bytes,
-            gather,
+            gather: gather.into(),
             groups: dl.groups.clone(),
-            a_eps,
-            b_fold: dl.b_fold.clone(),
+            a_eps: a_eps.into(),
+            b_fold: dl.b_fold.clone().into(),
             relu_inline: s.relu && s.add_from.is_none(),
             post_add,
             kernel: backend.prepare(dl),

@@ -37,7 +37,11 @@
 //! * [`engine`] — compile-once/run-many inference engine: `ExecPlan`
 //!   plan/execute split, pluggable [`engine::KernelBackend`]s
 //!   (`reference` scalar oracle, `packed` sub-byte kernels), threaded
-//!   batch execution.
+//!   batch execution, `.cwm` modelpack serialization
+//!   ([`engine::pack`]).
+//! * [`modelpack`] — the `.cwm` compiled-model artifact container:
+//!   versioned/checksummed sections, hostile-input-hardened readers,
+//!   zero-copy views into one owned aligned buffer.
 //! * [`serve`] — resident multi-model inference server: `ModelRegistry`
 //!   of precompiled `ExecPlan`s, dynamic micro-batching with bounded
 //!   admission, pure-`std` HTTP/1.1 front end, serving metrics.
@@ -55,6 +59,7 @@ pub mod deploy;
 pub mod energy;
 pub mod engine;
 pub mod minijson;
+pub mod modelpack;
 pub mod models;
 pub mod mpic;
 pub mod nas;

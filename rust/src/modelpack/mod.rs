@@ -1,0 +1,1038 @@
+//! `.cwm` — the compiled-model artifact container (modelpack).
+//!
+//! The paper's headline result is **memory**: channel-wise bit-width
+//! assignment cuts model size by up to 63% vs layer-wise, yet until
+//! this module the packed sub-byte weight layout only ever existed
+//! *transiently* inside `ExecPlan::compile` — every server start
+//! recompiled every plan from raw f32 state and nothing on disk
+//! witnessed the size reduction.  A modelpack is the durable form of a
+//! compiled plan: a versioned, checksummed binary container holding
+//! everything `ExecPlan::compile` derives (channel-wise assignment
+//! groups, packed sub-byte weight words, folded epilogues, im2col
+//! gather tables, arena slot layout, the `InferenceCost`), laid out so
+//! loading is a **validate-then-borrow** pass — zero-copy views into
+//! one owned 8-aligned buffer, no re-packing, no f32 weight
+//! materialization.
+//!
+//! This module owns the *container*: header, section table, checksum,
+//! bounds-checked stream primitives and the shared-buffer view types.
+//! The plan-specific record encoding lives next to the plan internals
+//! in [`engine::pack`](crate::engine::pack).
+//!
+//! ## File layout (all integers little-endian)
+//!
+//! ```text
+//! offset  size  field
+//!      0     8  magic  b"CWMIXPAK"
+//!      8     2  version_major (= 1; a loader rejects a different major)
+//!     10     2  version_minor (informational; any value accepted)
+//!     12     4  flags (v1 defines none; unknown bits are rejected —
+//!                      a flag marks a change an old loader must NOT skip)
+//!     16     8  file_len (total bytes incl. this header)
+//!     24     8  checksum: FNV-1a 64 over bytes [0, 24) ++ [32, EOF)
+//!     32     4  n_sections
+//!     36     4  reserved (0)
+//!     40   24n  section table: { kind u32, pad u32, offset u64, len u64 }
+//!      …        section payloads, each 8-aligned
+//! ```
+//!
+//! Unknown section *kinds* are skipped (forward compatibility: a newer
+//! writer may add sections an old reader ignores); unknown *flags* and
+//! a different *major* version are errors.  Every failure mode of a
+//! hostile or truncated file — bad magic, checksum mismatch, offsets
+//! past EOF, misaligned sections, short reads, lying element counts —
+//! maps to a typed [`PackError`], never a panic and never UB.
+//!
+//! ## Zero-copy views
+//!
+//! [`Container::parse`] copies the file once into an [`AlignedBuf`]
+//! (8-aligned backing store, the mmap stand-in) behind an `Arc`.
+//! [`Bytes`] is a bounds-checked borrowed range of that buffer;
+//! [`ByteArr`]/[`I32Arr`]/[`F32Arr`] are array handles that either
+//! *view* such a range in place (packed weight rows, gather tables,
+//! folded epilogues — on little-endian targets, after an alignment
+//! check) or own a decoded copy (the big-endian / misaligned
+//! fallback).  The deref target is a plain slice either way, so the
+//! engine's hot paths are agnostic to where the data lives.
+
+use std::fmt;
+use std::ops::Deref;
+use std::sync::Arc;
+
+/// File magic, first 8 bytes of every `.cwm`.
+pub const MAGIC: [u8; 8] = *b"CWMIXPAK";
+
+/// Container major version this build reads and writes.
+pub const VERSION_MAJOR: u16 = 1;
+
+/// Container minor version this build writes.
+pub const VERSION_MINOR: u16 = 0;
+
+/// Fixed header bytes before the section table.
+pub const HEADER_LEN: usize = 40;
+
+/// Bytes per section-table entry.
+pub const SECTION_ENTRY_LEN: usize = 24;
+
+/// Section kinds defined by v1.  Readers skip kinds they don't know.
+pub const SECTION_META: u32 = 1;
+pub const SECTION_PLAN: u32 = 2;
+pub const SECTION_COST: u32 = 3;
+pub const SECTION_DATA: u32 = 4;
+/// Optional provenance (assignment spec + synthetic-state seed): not
+/// needed to execute, checked by loaders that were asked for specific
+/// construction parameters.
+pub const SECTION_PROV: u32 = 5;
+
+/// Length cap for any serialized string (layer/bench names).
+pub const MAX_STR_LEN: usize = 4096;
+
+// ---------------------------------------------------------------------------
+// Errors.
+// ---------------------------------------------------------------------------
+
+/// Typed modelpack failure.  Every hostile-input path lands here; no
+/// code in this module or in `engine::pack` panics on untrusted bytes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PackError {
+    /// Fewer bytes than a field or payload requires.
+    Truncated { need: usize, have: usize },
+    /// First 8 bytes are not [`MAGIC`].
+    BadMagic,
+    /// Major version differs from [`VERSION_MAJOR`].
+    VersionSkew { major: u16, minor: u16 },
+    /// Header flags contain bits this reader does not understand.
+    UnsupportedFlags(u32),
+    /// Header `file_len` disagrees with the actual byte count.
+    LengthMismatch { header: u64, actual: u64 },
+    /// Stored checksum does not match the recomputed one.
+    ChecksumMismatch { stored: u64, computed: u64 },
+    /// A section or data reference reaches past the end of its buffer.
+    OffsetOutOfRange { offset: u64, len: u64, limit: u64 },
+    /// A section payload is not 8-aligned.
+    Misaligned { offset: u64 },
+    /// A known section kind appears twice.
+    DuplicateSection(u32),
+    /// A required section is absent.
+    MissingSection(u32),
+    /// Structurally valid container, semantically invalid content
+    /// (bad tag bytes, lying counts, inconsistent plan geometry, …).
+    Malformed(String),
+}
+
+impl fmt::Display for PackError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PackError::Truncated { need, have } => {
+                write!(f, "truncated modelpack: need {need} bytes, have {have}")
+            }
+            PackError::BadMagic => write!(f, "not a modelpack (bad magic)"),
+            PackError::VersionSkew { major, minor } => write!(
+                f,
+                "modelpack version {major}.{minor} incompatible with \
+                 reader {VERSION_MAJOR}.{VERSION_MINOR}"
+            ),
+            PackError::UnsupportedFlags(bits) => {
+                write!(f, "modelpack uses unsupported flags {bits:#x}")
+            }
+            PackError::LengthMismatch { header, actual } => write!(
+                f,
+                "header claims {header} bytes, file has {actual}"
+            ),
+            PackError::ChecksumMismatch { stored, computed } => write!(
+                f,
+                "checksum mismatch: stored {stored:#018x}, computed {computed:#018x}"
+            ),
+            PackError::OffsetOutOfRange { offset, len, limit } => write!(
+                f,
+                "range [{offset}, {offset}+{len}) past end {limit}"
+            ),
+            PackError::Misaligned { offset } => {
+                write!(f, "section payload at {offset} is not 8-aligned")
+            }
+            PackError::DuplicateSection(kind) => {
+                write!(f, "duplicate section kind {kind}")
+            }
+            PackError::MissingSection(kind) => {
+                write!(f, "missing required section kind {kind}")
+            }
+            PackError::Malformed(msg) => write!(f, "malformed modelpack: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for PackError {}
+
+/// Shorthand constructor for [`PackError::Malformed`].
+pub fn malformed(msg: impl Into<String>) -> PackError {
+    PackError::Malformed(msg.into())
+}
+
+/// Checked `u64 → usize` (32-bit hosts must not wrap hostile lengths).
+pub fn as_usize(v: u64) -> Result<usize, PackError> {
+    usize::try_from(v).map_err(|_| malformed(format!("length {v} exceeds address space")))
+}
+
+// ---------------------------------------------------------------------------
+// Checksum.
+// ---------------------------------------------------------------------------
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// FNV-1a 64 over a concatenation of byte slices.
+pub fn fnv1a64(parts: &[&[u8]]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for part in parts {
+        for &b in *part {
+            h ^= b as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+    }
+    h
+}
+
+fn checksum_of(bytes: &[u8]) -> u64 {
+    // everything except the checksum field itself at [24, 32)
+    fnv1a64(&[&bytes[..24], &bytes[32..]])
+}
+
+/// Recompute and store the checksum of an assembled (or test-mutated)
+/// container in place.  No-op on buffers shorter than the header.
+pub fn reseal(bytes: &mut [u8]) {
+    if bytes.len() < HEADER_LEN {
+        return;
+    }
+    let sum = checksum_of(bytes);
+    bytes[24..32].copy_from_slice(&sum.to_le_bytes());
+}
+
+// ---------------------------------------------------------------------------
+// Aligned backing store + zero-copy views.
+// ---------------------------------------------------------------------------
+
+/// Owned byte buffer with guaranteed 8-byte base alignment — the
+/// in-memory stand-in for an mmap'd `.cwm`.  `Vec<u8>` guarantees only
+/// 1-byte alignment, which would make the in-file 8-aligned section
+/// layout useless; backing the bytes with `Vec<u64>` makes every
+/// 8-aligned file offset 8-aligned in memory too, so `i32`/`f32`
+/// payloads can be viewed in place.
+pub struct AlignedBuf {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl AlignedBuf {
+    /// Copy `bytes` into fresh 8-aligned storage (the one copy a load
+    /// pays; everything downstream borrows).
+    pub fn copy_from(bytes: &[u8]) -> AlignedBuf {
+        let mut words = vec![0u64; bytes.len().div_ceil(8)];
+        // SAFETY: `words` is fully initialised and its allocation covers
+        // `bytes.len()` bytes; u8 has no validity requirements.
+        let dst = unsafe {
+            std::slice::from_raw_parts_mut(words.as_mut_ptr() as *mut u8, bytes.len())
+        };
+        dst.copy_from_slice(bytes);
+        AlignedBuf { words, len: bytes.len() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn as_bytes(&self) -> &[u8] {
+        // SAFETY: the allocation holds at least `len` initialised bytes
+        // and is never mutated after construction.
+        unsafe { std::slice::from_raw_parts(self.words.as_ptr() as *const u8, self.len) }
+    }
+}
+
+/// A bounds-checked borrowed byte range of a loaded modelpack; cloning
+/// clones the `Arc`, not the bytes.
+#[derive(Clone)]
+pub struct Bytes {
+    buf: Arc<AlignedBuf>,
+    off: usize,
+    len: usize,
+}
+
+impl Bytes {
+    /// Borrow `[off, off + len)` of `buf`; out-of-range is an error.
+    pub fn new(buf: &Arc<AlignedBuf>, off: usize, len: usize) -> Result<Bytes, PackError> {
+        let end = off.checked_add(len).ok_or(PackError::OffsetOutOfRange {
+            offset: off as u64,
+            len: len as u64,
+            limit: buf.len() as u64,
+        })?;
+        if end > buf.len() {
+            return Err(PackError::OffsetOutOfRange {
+                offset: off as u64,
+                len: len as u64,
+                limit: buf.len() as u64,
+            });
+        }
+        Ok(Bytes { buf: Arc::clone(buf), off, len })
+    }
+}
+
+impl Deref for Bytes {
+    type Target = [u8];
+
+    fn deref(&self) -> &[u8] {
+        &self.buf.as_bytes()[self.off..self.off + self.len]
+    }
+}
+
+/// Byte-array handle: an owned vector or a zero-copy [`Bytes`] view.
+pub struct ByteArr(ByteRepr);
+
+enum ByteRepr {
+    Owned(Vec<u8>),
+    View(Bytes),
+}
+
+impl ByteArr {
+    pub fn view(bytes: Bytes) -> ByteArr {
+        ByteArr(ByteRepr::View(bytes))
+    }
+}
+
+impl From<Vec<u8>> for ByteArr {
+    fn from(v: Vec<u8>) -> ByteArr {
+        ByteArr(ByteRepr::Owned(v))
+    }
+}
+
+impl Deref for ByteArr {
+    type Target = [u8];
+
+    fn deref(&self) -> &[u8] {
+        match &self.0 {
+            ByteRepr::Owned(v) => v,
+            ByteRepr::View(b) => b,
+        }
+    }
+}
+
+/// `i32`-array handle over little-endian file bytes: a zero-copy view
+/// when the target is little-endian and the range is 4-aligned (the
+/// 8-aligned layout guarantees it for honestly written packs), an
+/// owned decode otherwise.
+pub struct I32Arr(I32Repr);
+
+enum I32Repr {
+    Owned(Vec<i32>),
+    // invariant: len % 4 == 0, base pointer 4-aligned, LE target
+    View(Bytes),
+}
+
+impl I32Arr {
+    /// Interpret `bytes` as little-endian `i32`s.  `bytes.len()` must
+    /// be a multiple of 4.
+    pub fn from_le(bytes: Bytes) -> Result<I32Arr, PackError> {
+        if bytes.len() % 4 != 0 {
+            return Err(malformed(format!("i32 array of {} bytes", bytes.len())));
+        }
+        if cfg!(target_endian = "little") && (bytes.as_ptr() as usize) % 4 == 0 {
+            Ok(I32Arr(I32Repr::View(bytes)))
+        } else {
+            Ok(I32Arr(I32Repr::Owned(
+                bytes
+                    .chunks_exact(4)
+                    .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            )))
+        }
+    }
+}
+
+impl From<Vec<i32>> for I32Arr {
+    fn from(v: Vec<i32>) -> I32Arr {
+        I32Arr(I32Repr::Owned(v))
+    }
+}
+
+impl Deref for I32Arr {
+    type Target = [i32];
+
+    fn deref(&self) -> &[i32] {
+        match &self.0 {
+            I32Repr::Owned(v) => v,
+            // SAFETY: construction checked 4-alignment, length % 4 == 0
+            // and a little-endian target; the Arc'd buffer is immutable
+            // and outlives the view.
+            I32Repr::View(b) => unsafe {
+                std::slice::from_raw_parts(b.as_ptr() as *const i32, b.len() / 4)
+            },
+        }
+    }
+}
+
+/// `f32`-array handle over little-endian file bytes (see [`I32Arr`]).
+pub struct F32Arr(F32Repr);
+
+enum F32Repr {
+    Owned(Vec<f32>),
+    // invariant: len % 4 == 0, base pointer 4-aligned, LE target
+    View(Bytes),
+}
+
+impl F32Arr {
+    /// Interpret `bytes` as little-endian `f32`s (bit patterns are
+    /// preserved exactly — folded epilogues stay bit-identical).
+    pub fn from_le(bytes: Bytes) -> Result<F32Arr, PackError> {
+        if bytes.len() % 4 != 0 {
+            return Err(malformed(format!("f32 array of {} bytes", bytes.len())));
+        }
+        if cfg!(target_endian = "little") && (bytes.as_ptr() as usize) % 4 == 0 {
+            Ok(F32Arr(F32Repr::View(bytes)))
+        } else {
+            Ok(F32Arr(F32Repr::Owned(
+                bytes
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            )))
+        }
+    }
+}
+
+impl From<Vec<f32>> for F32Arr {
+    fn from(v: Vec<f32>) -> F32Arr {
+        F32Arr(F32Repr::Owned(v))
+    }
+}
+
+impl Deref for F32Arr {
+    type Target = [f32];
+
+    fn deref(&self) -> &[f32] {
+        match &self.0 {
+            F32Repr::Owned(v) => v,
+            // SAFETY: as for I32Arr::deref.
+            F32Repr::View(b) => unsafe {
+                std::slice::from_raw_parts(b.as_ptr() as *const f32, b.len() / 4)
+            },
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Stream primitives.
+// ---------------------------------------------------------------------------
+
+/// Append-only writer for a structured section stream.
+#[derive(Default)]
+pub struct PackWriter {
+    buf: Vec<u8>,
+}
+
+impl PackWriter {
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn bool(&mut self, v: bool) {
+        self.buf.push(v as u8);
+    }
+
+    pub fn u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// `u32` length + UTF-8 bytes.
+    pub fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Bounds-checked reader over a structured section stream.  Every read
+/// returns `Err` past the end — hostile streams cannot index out of
+/// bounds or panic.
+pub struct PackReader<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> PackReader<'a> {
+    pub fn new(b: &'a [u8]) -> PackReader<'a> {
+        PackReader { b, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.b.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], PackError> {
+        let end = self.pos.checked_add(n).ok_or(PackError::Truncated {
+            need: usize::MAX,
+            have: self.b.len(),
+        })?;
+        if end > self.b.len() {
+            return Err(PackError::Truncated { need: end, have: self.b.len() });
+        }
+        let s = &self.b[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8, PackError> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn bool(&mut self) -> Result<bool, PackError> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            other => Err(malformed(format!("bool byte {other}"))),
+        }
+    }
+
+    pub fn u16(&mut self) -> Result<u16, PackError> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    pub fn u32(&mut self) -> Result<u32, PackError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn u64(&mut self) -> Result<u64, PackError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    /// `u64` read into `usize` (bounds-safe on 32-bit hosts).
+    pub fn len64(&mut self) -> Result<usize, PackError> {
+        as_usize(self.u64()?)
+    }
+
+    pub fn f32(&mut self) -> Result<f32, PackError> {
+        let b = self.take(4)?;
+        Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn f64(&mut self) -> Result<f64, PackError> {
+        let b = self.take(8)?;
+        Ok(f64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    pub fn str(&mut self) -> Result<String, PackError> {
+        let n = self.u32()? as usize;
+        if n > MAX_STR_LEN {
+            return Err(malformed(format!("string of {n} bytes")));
+        }
+        let b = self.take(n)?;
+        String::from_utf8(b.to_vec()).map_err(|_| malformed("non-UTF-8 string"))
+    }
+
+    /// Element count for a following repeated record.  Capped at `max`
+    /// and at what the remaining bytes could possibly hold
+    /// (`elem_min_bytes` each), so a lying count can neither
+    /// over-allocate nor out-read.
+    pub fn count(&mut self, elem_min_bytes: usize, max: usize) -> Result<usize, PackError> {
+        let n = self.u32()? as usize;
+        if n > max {
+            return Err(malformed(format!("count {n} exceeds cap {max}")));
+        }
+        let need = n.saturating_mul(elem_min_bytes.max(1));
+        if need > self.remaining() {
+            return Err(PackError::Truncated {
+                need: self.pos.saturating_add(need),
+                have: self.b.len(),
+            });
+        }
+        Ok(n)
+    }
+
+    /// Require the stream to be fully consumed (trailing garbage in a
+    /// known section is a malformed pack, not padding).
+    pub fn finish(&self) -> Result<(), PackError> {
+        if self.remaining() != 0 {
+            return Err(malformed(format!("{} trailing bytes in section", self.remaining())));
+        }
+        Ok(())
+    }
+}
+
+/// Builder for the 8-aligned DATA section: every array is appended on
+/// an 8-byte boundary and referenced by `(offset, len)` from the
+/// structured sections.
+#[derive(Default)]
+pub struct DataWriter {
+    buf: Vec<u8>,
+}
+
+impl DataWriter {
+    fn align8(&mut self) {
+        while self.buf.len() % 8 != 0 {
+            self.buf.push(0);
+        }
+    }
+
+    /// Append raw bytes; returns `(offset, len)` within the section.
+    pub fn bytes(&mut self, b: &[u8]) -> (u64, u64) {
+        self.align8();
+        let off = self.buf.len() as u64;
+        self.buf.extend_from_slice(b);
+        (off, b.len() as u64)
+    }
+
+    /// Append `i32`s as little-endian bytes.
+    pub fn i32s(&mut self, v: &[i32]) -> (u64, u64) {
+        self.align8();
+        let off = self.buf.len() as u64;
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+        (off, (v.len() * 4) as u64)
+    }
+
+    /// Append `f32`s as little-endian bytes (exact bit patterns).
+    pub fn f32s(&mut self, v: &[f32]) -> (u64, u64) {
+        self.align8();
+        let off = self.buf.len() as u64;
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+        (off, (v.len() * 4) as u64)
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Container assembly + parsing.
+// ---------------------------------------------------------------------------
+
+/// Assemble a sealed `.cwm` file from `(kind, payload)` sections.
+pub fn assemble(sections: &[(u32, Vec<u8>)]) -> Vec<u8> {
+    let table_end = HEADER_LEN + sections.len() * SECTION_ENTRY_LEN;
+    let mut offsets = Vec::with_capacity(sections.len());
+    let mut off = table_end;
+    for (_, payload) in sections {
+        off = (off + 7) & !7; // 8-align every payload
+        offsets.push(off);
+        off += payload.len();
+    }
+    let file_len = off;
+    let mut out = vec![0u8; file_len];
+    out[0..8].copy_from_slice(&MAGIC);
+    out[8..10].copy_from_slice(&VERSION_MAJOR.to_le_bytes());
+    out[10..12].copy_from_slice(&VERSION_MINOR.to_le_bytes());
+    out[12..16].copy_from_slice(&0u32.to_le_bytes());
+    out[16..24].copy_from_slice(&(file_len as u64).to_le_bytes());
+    out[32..36].copy_from_slice(&(sections.len() as u32).to_le_bytes());
+    for (i, ((kind, payload), &poff)) in sections.iter().zip(&offsets).enumerate() {
+        let e = HEADER_LEN + i * SECTION_ENTRY_LEN;
+        out[e..e + 4].copy_from_slice(&kind.to_le_bytes());
+        out[e + 8..e + 16].copy_from_slice(&(poff as u64).to_le_bytes());
+        out[e + 16..e + 24].copy_from_slice(&(payload.len() as u64).to_le_bytes());
+        out[poff..poff + payload.len()].copy_from_slice(payload);
+    }
+    reseal(&mut out);
+    out
+}
+
+/// One validated section-table entry.
+#[derive(Clone, Copy, Debug)]
+pub struct SectionRef {
+    pub kind: u32,
+    pub off: usize,
+    pub len: usize,
+}
+
+/// A parsed, checksum-verified container over an aligned owned buffer.
+pub struct Container {
+    pub buf: Arc<AlignedBuf>,
+    pub version: (u16, u16),
+    pub flags: u32,
+    pub sections: Vec<SectionRef>,
+}
+
+impl Container {
+    /// Validate the header, checksum and section table of `bytes` and
+    /// take an aligned owned copy (the "mmap" the views borrow from).
+    pub fn parse(bytes: &[u8]) -> Result<Container, PackError> {
+        if bytes.len() < HEADER_LEN {
+            return Err(PackError::Truncated { need: HEADER_LEN, have: bytes.len() });
+        }
+        if bytes[0..8] != MAGIC {
+            return Err(PackError::BadMagic);
+        }
+        let major = u16::from_le_bytes([bytes[8], bytes[9]]);
+        let minor = u16::from_le_bytes([bytes[10], bytes[11]]);
+        if major != VERSION_MAJOR {
+            return Err(PackError::VersionSkew { major, minor });
+        }
+        let flags = u32::from_le_bytes([bytes[12], bytes[13], bytes[14], bytes[15]]);
+        if flags != 0 {
+            return Err(PackError::UnsupportedFlags(flags));
+        }
+        let file_len = u64::from_le_bytes(bytes[16..24].try_into().expect("8 bytes"));
+        if file_len != bytes.len() as u64 {
+            return Err(PackError::LengthMismatch {
+                header: file_len,
+                actual: bytes.len() as u64,
+            });
+        }
+        let stored = u64::from_le_bytes(bytes[24..32].try_into().expect("8 bytes"));
+        let computed = checksum_of(bytes);
+        if stored != computed {
+            return Err(PackError::ChecksumMismatch { stored, computed });
+        }
+        let n_sections =
+            u32::from_le_bytes(bytes[32..36].try_into().expect("4 bytes")) as usize;
+        let table_need = n_sections
+            .checked_mul(SECTION_ENTRY_LEN)
+            .and_then(|t| t.checked_add(HEADER_LEN))
+            .ok_or_else(|| malformed("section count overflow"))?;
+        if table_need > bytes.len() {
+            return Err(PackError::Truncated { need: table_need, have: bytes.len() });
+        }
+        let mut sections = Vec::with_capacity(n_sections);
+        let mut seen = [false; 6];
+        for i in 0..n_sections {
+            let e = HEADER_LEN + i * SECTION_ENTRY_LEN;
+            let kind = u32::from_le_bytes(bytes[e..e + 4].try_into().expect("4 bytes"));
+            let off = u64::from_le_bytes(bytes[e + 8..e + 16].try_into().expect("8 bytes"));
+            let len = u64::from_le_bytes(bytes[e + 16..e + 24].try_into().expect("8 bytes"));
+            if off % 8 != 0 {
+                return Err(PackError::Misaligned { offset: off });
+            }
+            let end = off.checked_add(len).ok_or(PackError::OffsetOutOfRange {
+                offset: off,
+                len,
+                limit: file_len,
+            })?;
+            if (off as usize) < table_need || end > file_len {
+                return Err(PackError::OffsetOutOfRange { offset: off, len, limit: file_len });
+            }
+            let k = kind as usize;
+            if k > 0 && k < seen.len() {
+                if seen[k] {
+                    return Err(PackError::DuplicateSection(kind));
+                }
+                seen[k] = true;
+            }
+            sections.push(SectionRef { kind, off: as_usize(off)?, len: as_usize(len)? });
+        }
+        Ok(Container {
+            buf: Arc::new(AlignedBuf::copy_from(bytes)),
+            version: (major, minor),
+            flags,
+            sections,
+        })
+    }
+
+    /// Find a section by kind (unknown kinds are simply never asked for
+    /// — that is the skip).
+    pub fn find(&self, kind: u32) -> Option<SectionRef> {
+        self.sections.iter().copied().find(|s| s.kind == kind)
+    }
+
+    /// A required section's payload bytes.
+    pub fn section(&self, kind: u32) -> Result<&[u8], PackError> {
+        let s = self.find(kind).ok_or(PackError::MissingSection(kind))?;
+        Ok(&self.buf.as_bytes()[s.off..s.off + s.len])
+    }
+
+    /// A required section's absolute `(offset, len)` within the buffer
+    /// (how DATA references become [`Bytes`] views).
+    pub fn section_range(&self, kind: u32) -> Result<(usize, usize), PackError> {
+        let s = self.find(kind).ok_or(PackError::MissingSection(kind))?;
+        Ok((s.off, s.len))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_sections() -> Vec<(u32, Vec<u8>)> {
+        vec![
+            (SECTION_META, b"meta-payload".to_vec()),
+            (SECTION_DATA, vec![1, 2, 3, 4, 5, 6, 7, 8, 9]),
+        ]
+    }
+
+    #[test]
+    fn assemble_parse_roundtrip() {
+        let file = assemble(&sample_sections());
+        let c = Container::parse(&file).unwrap();
+        assert_eq!(c.version, (VERSION_MAJOR, VERSION_MINOR));
+        assert_eq!(c.section(SECTION_META).unwrap(), b"meta-payload");
+        assert_eq!(c.section(SECTION_DATA).unwrap(), &[1, 2, 3, 4, 5, 6, 7, 8, 9]);
+        assert!(matches!(
+            c.section(SECTION_PLAN),
+            Err(PackError::MissingSection(SECTION_PLAN))
+        ));
+        // every section payload is 8-aligned in the file AND in memory
+        for s in &c.sections {
+            assert_eq!(s.off % 8, 0);
+            assert_eq!(c.buf.as_bytes()[s.off..].as_ptr() as usize % 8, 0);
+        }
+    }
+
+    #[test]
+    fn every_truncation_is_typed_error() {
+        let file = assemble(&sample_sections());
+        for cut in 0..file.len() {
+            let err = Container::parse(&file[..cut]).unwrap_err();
+            match err {
+                PackError::Truncated { .. }
+                | PackError::BadMagic
+                | PackError::LengthMismatch { .. } => {}
+                other => panic!("cut {cut}: unexpected error {other}"),
+            }
+        }
+    }
+
+    #[test]
+    fn bad_magic_and_version_and_flags() {
+        let file = assemble(&sample_sections());
+        let mut bad = file.clone();
+        bad[0] = b'X';
+        reseal(&mut bad);
+        assert_eq!(Container::parse(&bad).unwrap_err(), PackError::BadMagic);
+
+        let mut skew = file.clone();
+        skew[8] = 2; // major = 2
+        reseal(&mut skew);
+        assert!(matches!(
+            Container::parse(&skew).unwrap_err(),
+            PackError::VersionSkew { major: 2, .. }
+        ));
+
+        // minor skew is forward-compatible
+        let mut minor = file.clone();
+        minor[10] = 9;
+        reseal(&mut minor);
+        assert!(Container::parse(&minor).is_ok());
+
+        let mut flagged = file.clone();
+        flagged[12] = 1;
+        reseal(&mut flagged);
+        assert_eq!(
+            Container::parse(&flagged).unwrap_err(),
+            PackError::UnsupportedFlags(1)
+        );
+    }
+
+    #[test]
+    fn corrupted_byte_is_checksum_mismatch() {
+        let file = assemble(&sample_sections());
+        for &pos in &[HEADER_LEN + 2, file.len() - 1] {
+            let mut bad = file.clone();
+            bad[pos] ^= 0xff;
+            assert!(matches!(
+                Container::parse(&bad).unwrap_err(),
+                PackError::ChecksumMismatch { .. }
+            ));
+        }
+    }
+
+    #[test]
+    fn section_offset_past_eof_is_error() {
+        let mut file = assemble(&sample_sections());
+        // first table entry's offset field
+        let e = HEADER_LEN + 8;
+        file[e..e + 8].copy_from_slice(&(1u64 << 40).to_le_bytes());
+        reseal(&mut file);
+        assert!(matches!(
+            Container::parse(&file).unwrap_err(),
+            PackError::OffsetOutOfRange { .. }
+        ));
+    }
+
+    #[test]
+    fn misaligned_section_is_error() {
+        let mut file = assemble(&sample_sections());
+        let e = HEADER_LEN + 8;
+        let off = u64::from_le_bytes(file[e..e + 8].try_into().unwrap());
+        file[e..e + 8].copy_from_slice(&(off + 1).to_le_bytes());
+        reseal(&mut file);
+        assert!(matches!(
+            Container::parse(&file).unwrap_err(),
+            PackError::Misaligned { .. }
+        ));
+    }
+
+    #[test]
+    fn duplicate_known_section_is_error() {
+        let file = assemble(&[
+            (SECTION_META, vec![1]),
+            (SECTION_META, vec![2]),
+        ]);
+        assert_eq!(
+            Container::parse(&file).unwrap_err(),
+            PackError::DuplicateSection(SECTION_META)
+        );
+    }
+
+    #[test]
+    fn unknown_sections_are_carried_and_skipped() {
+        let mut sections = sample_sections();
+        sections.push((99, b"from-the-future".to_vec()));
+        let file = assemble(&sections);
+        let c = Container::parse(&file).unwrap();
+        assert_eq!(c.sections.len(), 3);
+        assert_eq!(c.section(99).unwrap(), b"from-the-future");
+        // known sections unaffected
+        assert_eq!(c.section(SECTION_META).unwrap(), b"meta-payload");
+    }
+
+    #[test]
+    fn writer_reader_primitives_roundtrip() {
+        let mut w = PackWriter::default();
+        w.u8(7);
+        w.bool(true);
+        w.u16(0xbeef);
+        w.u32(0xdead_beef);
+        w.u64(0x0123_4567_89ab_cdef);
+        w.f32(-1.5);
+        w.f64(std::f64::consts::PI);
+        w.str("héllo");
+        let bytes = w.into_bytes();
+        let mut r = PackReader::new(&bytes);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert!(r.bool().unwrap());
+        assert_eq!(r.u16().unwrap(), 0xbeef);
+        assert_eq!(r.u32().unwrap(), 0xdead_beef);
+        assert_eq!(r.u64().unwrap(), 0x0123_4567_89ab_cdef);
+        assert_eq!(r.f32().unwrap(), -1.5);
+        assert_eq!(r.f64().unwrap(), std::f64::consts::PI);
+        assert_eq!(r.str().unwrap(), "héllo");
+        r.finish().unwrap();
+        // reading past the end errors
+        assert!(matches!(r.u8(), Err(PackError::Truncated { .. })));
+    }
+
+    #[test]
+    fn reader_rejects_hostile_counts_and_strings() {
+        // count claiming more elements than bytes remain
+        let mut w = PackWriter::default();
+        w.u32(1_000_000);
+        let bytes = w.into_bytes();
+        assert!(PackReader::new(&bytes).count(4, usize::MAX).is_err());
+        // count over the semantic cap
+        let mut w = PackWriter::default();
+        w.u32(10);
+        w.u64(0); // some payload so remaining() is ample
+        let bytes = w.into_bytes();
+        assert!(matches!(
+            PackReader::new(&bytes).count(1, 5),
+            Err(PackError::Malformed(_))
+        ));
+        // string length past the end
+        let mut w = PackWriter::default();
+        w.u32(50);
+        let bytes = w.into_bytes();
+        assert!(PackReader::new(&bytes).str().is_err());
+        // non-UTF-8 string bytes
+        let mut w = PackWriter::default();
+        w.u32(2);
+        let mut bytes = w.into_bytes();
+        bytes.extend_from_slice(&[0xff, 0xfe]);
+        assert!(matches!(
+            PackReader::new(&bytes).str(),
+            Err(PackError::Malformed(_))
+        ));
+        // bad bool byte
+        assert!(PackReader::new(&[2]).bool().is_err());
+    }
+
+    #[test]
+    fn data_writer_aligns_every_array() {
+        let mut d = DataWriter::default();
+        let (o1, l1) = d.bytes(&[1, 2, 3]);
+        let (o2, l2) = d.i32s(&[-1, 2]);
+        let (o3, l3) = d.f32s(&[0.5]);
+        assert_eq!((o1, l1), (0, 3));
+        assert_eq!((o2 % 8, l2), (0, 8));
+        assert!(o2 >= 3);
+        assert_eq!((o3 % 8, l3), (0, 4));
+        let bytes = d.into_bytes();
+        assert_eq!(&bytes[o2 as usize..o2 as usize + 4], &(-1i32).to_le_bytes());
+    }
+
+    #[test]
+    fn views_deref_and_bounds_check() {
+        let data: Vec<u8> = (0..32).collect();
+        let buf = Arc::new(AlignedBuf::copy_from(&data));
+        assert_eq!(buf.as_bytes(), &data[..]);
+        assert_eq!(buf.as_bytes().as_ptr() as usize % 8, 0);
+
+        let b = Bytes::new(&buf, 8, 8).unwrap();
+        assert_eq!(&*b, &data[8..16]);
+        assert!(matches!(
+            Bytes::new(&buf, 30, 8),
+            Err(PackError::OffsetOutOfRange { .. })
+        ));
+        assert!(Bytes::new(&buf, usize::MAX, 2).is_err());
+
+        let ints = I32Arr::from_le(Bytes::new(&buf, 8, 8).unwrap()).unwrap();
+        assert_eq!(
+            &*ints,
+            &[
+                i32::from_le_bytes([8, 9, 10, 11]),
+                i32::from_le_bytes([12, 13, 14, 15])
+            ]
+        );
+        assert!(I32Arr::from_le(Bytes::new(&buf, 8, 7).unwrap()).is_err());
+
+        let floats = F32Arr::from_le(Bytes::new(&buf, 0, 4).unwrap()).unwrap();
+        assert_eq!(floats[0].to_le_bytes(), [0, 1, 2, 3]);
+
+        let owned: I32Arr = vec![5, 6].into();
+        assert_eq!(&*owned, &[5, 6]);
+        let owned: F32Arr = vec![1.0f32].into();
+        assert_eq!(&*owned, &[1.0]);
+        let owned: ByteArr = vec![9u8].into();
+        assert_eq!(&*owned, &[9]);
+        let viewed = ByteArr::view(Bytes::new(&buf, 0, 2).unwrap());
+        assert_eq!(&*viewed, &[0, 1]);
+    }
+
+    #[test]
+    fn fnv_and_reseal() {
+        assert_eq!(fnv1a64(&[b""]), 0xcbf2_9ce4_8422_2325);
+        // split points don't change the digest
+        assert_eq!(fnv1a64(&[b"ab", b"c"]), fnv1a64(&[b"abc"]));
+        let mut file = assemble(&sample_sections());
+        file[HEADER_LEN] ^= 1;
+        assert!(Container::parse(&file).is_err());
+        reseal(&mut file);
+        assert!(Container::parse(&file).is_ok());
+        // reseal on a too-short buffer is a no-op, not a panic
+        reseal(&mut [0u8; 4]);
+    }
+}

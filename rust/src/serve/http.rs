@@ -462,15 +462,33 @@ fn metrics_body(state: &Arc<ServerState>) -> Json {
     let mut models = Vec::new();
     let mut total_requests = 0u64;
     let mut total_shed = 0u64;
+    let mut total_model_bytes = 0u64;
     for e in state.registry.entries() {
         total_requests += e.metrics().requests();
         total_shed += e.metrics().shed();
-        models.push((e.name().to_string(), e.metrics().snapshot()));
+        total_model_bytes += e.plan().weight_bytes() as u64;
+        let mut snap = e.metrics().snapshot();
+        // registry-level gauges ride each model's snapshot: resident
+        // weight bytes and what this model's cold start cost
+        if let Json::Obj(o) = &mut snap {
+            o.insert(
+                "model_bytes".to_string(),
+                Json::num(e.plan().weight_bytes() as f64),
+            );
+            let s = e.startup();
+            o.insert("startup_source".to_string(), Json::str(s.source));
+            o.insert("startup_us".to_string(), Json::num(s.micros as f64));
+            if let Some(b) = s.artifact_bytes {
+                o.insert("artifact_bytes".to_string(), Json::num(b as f64));
+            }
+        }
+        models.push((e.name().to_string(), snap));
     }
     Json::obj(vec![
         ("uptime_s", Json::num(state.started.elapsed().as_secs_f64())),
         ("requests", Json::num(total_requests as f64)),
         ("shed", Json::num(total_shed as f64)),
+        ("model_bytes", Json::num(total_model_bytes as f64)),
         ("models", Json::Obj(models.into_iter().collect())),
     ])
 }

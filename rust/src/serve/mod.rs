@@ -49,4 +49,4 @@ pub mod registry;
 pub use batcher::{BatchPolicy, Batcher, InferReply, SubmitError};
 pub use http::{serve, ServeConfig, Server};
 pub use metrics::Metrics;
-pub use registry::{ModelEntry, ModelRegistry, RegistryConfig};
+pub use registry::{ModelEntry, ModelRegistry, RegistryConfig, StartupStats};

@@ -1,7 +1,8 @@
-//! Multi-model registry: compile once at startup, share everywhere.
+//! Multi-model registry: compile (or cold-load) once at startup,
+//! share everywhere.
 //!
 //! A [`ModelRegistry`] holds one immutable, precompiled
-//! [`ExecPlan`] per served model — compiled exactly once at startup
+//! [`ExecPlan`] per served model — built exactly once at startup
 //! (the plan/execute split's whole point) and shared behind an `Arc`
 //! by every connection handler and the model's [`Batcher`] worker.
 //! All mutable execution state lives in per-worker batch
@@ -9,23 +10,36 @@
 //! per-thread arenas inside `run_samples`), so plans need no interior
 //! mutability.
 //!
-//! Models come from the same sources as `cwmix simulate`: geometry
-//! from the artifacts manifest when `artifacts/<bench>/manifest.json`
-//! exists, else the builtin zoo — and weights are **always** seeded
-//! synthetic state (trained parameters only exist inside an `xla`
-//! trainer session; there is no weights-on-disk format yet).  The
-//! server therefore runs on the default feature set with no training
-//! artifacts at all, and serves reference-quality numerics, not
-//! trained accuracy.
+//! Two startup paths per model:
+//!
+//! * **modelpack cold start** — when
+//!   [`RegistryConfig::modelpack_dir`] is set and `<dir>/<bench>.cwm`
+//!   exists, the plan is loaded with
+//!   [`ExecPlan::from_modelpack`]: a validate-then-borrow pass over
+//!   the artifact (no recompilation, no weight re-packing), serving
+//!   outputs bit-identical to an in-process compile.  A pack that is
+//!   unreadable, corrupt, or built for a different bench/backend
+//!   falls back to compilation with a warning — a stale artifact
+//!   directory must never take the server down or change its
+//!   numerics.
+//! * **compile** — the original path: geometry from the artifacts
+//!   manifest when `artifacts/<bench>/manifest.json` exists, else the
+//!   builtin zoo, with seeded synthetic weights (trained parameters
+//!   only exist inside an `xla` trainer session).
+//!
+//! Either way the per-model [`StartupStats`] (source, wall time,
+//! artifact bytes) are exported through `/metrics` so operators can
+//! see what a cold start actually cost.
 
 use std::collections::BTreeMap;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
+use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
 use crate::deploy;
-use crate::engine::{backend_by_name, ExecPlan};
+use crate::engine::{backend_by_name, ExecPlan, KernelBackend};
 use crate::minijson::Json;
 use crate::models::{zoo, Manifest};
 use crate::quant::Assignment;
@@ -48,6 +62,10 @@ pub struct RegistryConfig {
     /// Artifacts directory; a bench with a manifest there uses its
     /// *geometry* (weights stay synthetic).
     pub artifacts: PathBuf,
+    /// Compiled-model artifact directory: a bench with a
+    /// `<bench>.cwm` there cold-starts from it instead of compiling
+    /// (`cwmix serve --modelpack-dir`, populated by `cwmix compile`).
+    pub modelpack_dir: Option<PathBuf>,
     /// Micro-batching policy applied to every model.
     pub policy: BatchPolicy,
 }
@@ -60,9 +78,21 @@ impl Default for RegistryConfig {
             assignment: "stripy".to_string(),
             seed: 0,
             artifacts: PathBuf::from("artifacts"),
+            modelpack_dir: None,
             policy: BatchPolicy::default(),
         }
     }
+}
+
+/// How one model's plan came to be at startup.
+#[derive(Clone, Copy, Debug)]
+pub struct StartupStats {
+    /// `"modelpack"` (cold-loaded from a `.cwm`) or `"compile"`.
+    pub source: &'static str,
+    /// Wall time of the load or compile, microseconds.
+    pub micros: u64,
+    /// `.cwm` file size when loaded from a modelpack.
+    pub artifact_bytes: Option<u64>,
 }
 
 /// Parse an assignment spec against a manifest.
@@ -91,6 +121,7 @@ pub struct ModelEntry {
     plan: Arc<ExecPlan>,
     batcher: Batcher,
     metrics: Arc<Metrics>,
+    startup: StartupStats,
 }
 
 impl ModelEntry {
@@ -110,6 +141,10 @@ impl ModelEntry {
         &self.metrics
     }
 
+    pub fn startup(&self) -> StartupStats {
+        self.startup
+    }
+
     /// `GET /v1/models` row.
     pub fn describe(&self, policy: &BatchPolicy) -> Json {
         let cost = self.plan.cost();
@@ -122,6 +157,8 @@ impl ModelEntry {
             ("est_latency_us", Json::num(cost.latency_us())),
             ("est_energy_uj", Json::num(cost.total_energy_uj())),
             ("max_batch", Json::num(policy.max_batch as f64)),
+            ("startup_source", Json::str(self.startup.source)),
+            ("startup_us", Json::num(self.startup.micros as f64)),
         ])
     }
 }
@@ -132,8 +169,96 @@ pub struct ModelRegistry {
     policy: BatchPolicy,
 }
 
+/// Build one model from scratch: geometry from the artifacts manifest
+/// when present (else the builtin zoo), seeded synthetic state, the
+/// assignment spec, the §III-C deploy transform, and `ExecPlan::compile`.
+/// This is the **single** compile path shared by the registry's
+/// fallback, `cwmix compile` and `cwmix simulate`-style tooling — packs
+/// and serve-time fallbacks are constructed identically by definition,
+/// so they cannot drift apart.
+pub fn build_model(
+    bench: &str,
+    backend: &dyn KernelBackend,
+    assignment: &str,
+    seed: u64,
+    artifacts: &Path,
+) -> Result<(Manifest, deploy::DeployedModel, ExecPlan)> {
+    let manifest = if artifacts.join(bench).join("manifest.json").exists() {
+        Manifest::load(artifacts, bench)?
+    } else {
+        zoo::builtin_manifest(bench)?
+    };
+    let (params, bn) = zoo::synthetic_state(&manifest, seed);
+    let a = parse_assignment(assignment, &manifest)?;
+    let deployed = deploy::build(&manifest, &params, &bn, &a)
+        .with_context(|| format!("deploying {bench}"))?;
+    let plan = ExecPlan::compile(&deployed, &manifest.lut, backend)
+        .with_context(|| format!("compiling {bench}"))?;
+    Ok((manifest, deployed, plan))
+}
+
+/// Reload `pack` and prove it executes **bit-identically** to `plan`
+/// on a deterministic probe sample — the shared emit-time check
+/// (`cwmix compile` refuses to keep an artifact that fails it; the
+/// cold-start bench asserts it while measuring).  Returns the loaded
+/// plan for callers that want to keep exercising it.
+pub fn verify_pack_roundtrip(plan: &ExecPlan, pack: &[u8], bench: &str) -> Result<ExecPlan> {
+    let loaded = ExecPlan::from_modelpack(pack)
+        .with_context(|| format!("reloading the {bench} pack"))?;
+    let ds = crate::data::make_dataset(bench, crate::data::Split::Test, 1, 0);
+    let feat = plan.feat();
+    let mut arena = plan.arena();
+    let want = plan.run_sample(&mut arena, &ds.x[..feat])?;
+    let mut arena = loaded.arena();
+    let got = loaded.run_sample(&mut arena, &ds.x[..feat])?;
+    if got != want {
+        bail!("{bench}: modelpack round-trip diverged from the compiled plan");
+    }
+    Ok(loaded)
+}
+
+/// Load one model's plan from a `.cwm` artifact and cross-check it
+/// against what the registry was asked to serve: bench, backend, and
+/// (when the pack records provenance — `cwmix compile` always writes
+/// it) the assignment spec and synthetic-state seed.  Any mismatch
+/// refuses the pack so a stale artifact can never silently serve
+/// different numerics than the flags requested.
+fn load_modelpack(
+    path: &Path,
+    bench: &str,
+    backend: &str,
+    cfg: &RegistryConfig,
+) -> Result<(ExecPlan, u64)> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    let (plan, prov) = ExecPlan::from_modelpack_with_provenance(&bytes)
+        .with_context(|| format!("loading {}", path.display()))?;
+    if plan.bench() != bench {
+        bail!("pack is for bench {:?}, not {bench:?}", plan.bench());
+    }
+    if plan.backend_name() != backend {
+        bail!(
+            "pack was compiled for backend {:?}, server wants {backend:?}",
+            plan.backend_name()
+        );
+    }
+    if let Some(prov) = prov {
+        if prov.assignment != cfg.assignment || prov.seed != cfg.seed {
+            bail!(
+                "pack was compiled for assignment {:?} seed {}, server wants \
+                 {:?} seed {}",
+                prov.assignment,
+                prov.seed,
+                cfg.assignment,
+                cfg.seed
+            );
+        }
+    }
+    Ok((plan, bytes.len() as u64))
+}
+
 impl ModelRegistry {
-    /// Compile every requested model and start its batcher.
+    /// Build every requested model (modelpack cold start when
+    /// available, else compile) and start its batcher.
     pub fn build(cfg: &RegistryConfig) -> Result<ModelRegistry> {
         if cfg.benches.is_empty() {
             bail!("no benches to serve");
@@ -144,19 +269,72 @@ impl ModelRegistry {
             if entries.contains_key(bench) {
                 bail!("bench {bench} listed twice");
             }
-            let manifest = if cfg.artifacts.join(bench).join("manifest.json").exists() {
-                Manifest::load(&cfg.artifacts, bench)?
-            } else {
-                zoo::builtin_manifest(bench)?
+            let t0 = Instant::now();
+            let pack_path = cfg.modelpack_dir.as_ref().map(|d| d.join(format!("{bench}.cwm")));
+            let pack_path = match pack_path {
+                Some(p) if p.exists() => Some(p),
+                Some(p) => {
+                    // the operator explicitly asked for cold starts; a
+                    // missing artifact deserves as loud a note as a
+                    // corrupt one, not a silent recompile
+                    eprintln!(
+                        "model {bench}: no modelpack at {} — compiling instead",
+                        p.display()
+                    );
+                    None
+                }
+                None => None,
             };
-            let (params, bn) = zoo::synthetic_state(&manifest, cfg.seed);
-            let assignment = parse_assignment(&cfg.assignment, &manifest)?;
-            let deployed = deploy::build(&manifest, &params, &bn, &assignment)
-                .with_context(|| format!("deploying {bench}"))?;
-            let plan = Arc::new(
-                ExecPlan::compile(&deployed, &manifest.lut, backend)
-                    .with_context(|| format!("compiling {bench}"))?,
-            );
+            let mut startup = None;
+            if let Some(path) = &pack_path {
+                match load_modelpack(path, bench, backend.name(), cfg) {
+                    Ok((plan, artifact_bytes)) => {
+                        let micros = t0.elapsed().as_micros() as u64;
+                        println!(
+                            "model {bench}: cold start from {} ({artifact_bytes} B) \
+                             in {micros} us",
+                            path.display()
+                        );
+                        startup = Some((
+                            plan,
+                            StartupStats {
+                                source: "modelpack",
+                                micros,
+                                artifact_bytes: Some(artifact_bytes),
+                            },
+                        ));
+                    }
+                    Err(e) => {
+                        // a stale/corrupt artifact must not take the
+                        // server down or silently change numerics
+                        eprintln!(
+                            "model {bench}: modelpack {} unusable ({e:#}); \
+                             falling back to compile",
+                            path.display()
+                        );
+                    }
+                }
+            }
+            let (plan, startup) = match startup {
+                Some(ps) => ps,
+                None => {
+                    let t0 = Instant::now();
+                    let (_, _, plan) = build_model(
+                        bench,
+                        backend,
+                        &cfg.assignment,
+                        cfg.seed,
+                        &cfg.artifacts,
+                    )?;
+                    let stats = StartupStats {
+                        source: "compile",
+                        micros: t0.elapsed().as_micros() as u64,
+                        artifact_bytes: None,
+                    };
+                    (plan, stats)
+                }
+            };
+            let plan = Arc::new(plan);
             let metrics = Arc::new(Metrics::default());
             let batcher = Batcher::start(
                 Arc::clone(&plan),
@@ -165,7 +343,7 @@ impl ModelRegistry {
             );
             entries.insert(
                 bench.clone(),
-                ModelEntry { name: bench.clone(), plan, batcher, metrics },
+                ModelEntry { name: bench.clone(), plan, batcher, metrics, startup },
             );
         }
         Ok(ModelRegistry { entries, policy: cfg.policy.clone() })

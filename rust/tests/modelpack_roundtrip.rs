@@ -1,0 +1,387 @@
+//! Modelpack contract (ISSUE 5): a `.cwm` artifact round-trips the
+//! *entire* compile output — `from_modelpack` executions are
+//! **bit-identical** to the fresh `ExecPlan::compile` they came from,
+//! across all four zoo models × both backends × striped assignments —
+//! and hostile bytes (truncations at every boundary, corrupted
+//! checksums, version skew, offsets past EOF, semantic corruption)
+//! always yield typed [`PackError`]s, never panics.
+//!
+//! Pure Rust: builtin zoo + deterministic synthetic state.
+
+use cwmix::data::{make_dataset, Split};
+use cwmix::deploy;
+use cwmix::engine::{
+    inspect, read_provenance, ExecPlan, KernelBackend, PackedBackend, Provenance,
+    ReferenceBackend,
+};
+use cwmix::modelpack::{self, PackError};
+use cwmix::models::zoo::{
+    builtin_manifest, stripy_assignment, synthetic_state, BENCHES,
+};
+
+fn backends() -> [&'static dyn KernelBackend; 2] {
+    [&ReferenceBackend, &PackedBackend]
+}
+
+/// Compile `bench` with the striped assignment (the adversarial case:
+/// fragmented sub-conv groups across all three precisions).
+fn compiled(bench: &str, backend: &dyn KernelBackend) -> (deploy::DeployedModel, ExecPlan) {
+    let manifest = builtin_manifest(bench).unwrap();
+    let (params, bn) = synthetic_state(&manifest, 0);
+    let a = stripy_assignment(&manifest);
+    let model = deploy::build(&manifest, &params, &bn, &a).unwrap();
+    let plan = ExecPlan::compile(&model, &manifest.lut, backend).unwrap();
+    (model, plan)
+}
+
+#[test]
+fn roundtrip_bit_identical_all_models_both_backends() {
+    for bench in BENCHES {
+        let manifest = builtin_manifest(bench).unwrap();
+        let feat = manifest.feat_len();
+        let ds = make_dataset(bench, Split::Test, 4, 3);
+        let samples: Vec<&[f32]> = ds.x.chunks_exact(feat).collect();
+        for backend in backends() {
+            let (_, plan) = compiled(bench, backend);
+            let pack = plan.to_modelpack();
+            let loaded = ExecPlan::from_modelpack(&pack)
+                .unwrap_or_else(|e| panic!("{bench}/{}: {e}", backend.name()));
+
+            // metadata round-trips
+            assert_eq!(loaded.bench(), plan.bench());
+            assert_eq!(loaded.backend_name(), plan.backend_name());
+            assert_eq!(loaded.feat(), plan.feat());
+            assert_eq!(loaded.out_len(), plan.out_len());
+            assert_eq!(loaded.weight_bytes(), plan.weight_bytes());
+
+            // the input-independent cost round-trips exactly
+            assert_eq!(loaded.cost().total_cycles(), plan.cost().total_cycles());
+            assert_eq!(
+                loaded.cost().total_energy_pj(),
+                plan.cost().total_energy_pj()
+            );
+            assert_eq!(loaded.cost().total_macs(), plan.cost().total_macs());
+            assert_eq!(loaded.cost().total_mem_bytes(), plan.cost().total_mem_bytes());
+            assert_eq!(
+                loaded.batch_cost(8).saved_weight_bytes,
+                plan.batch_cost(8).saved_weight_bytes
+            );
+
+            // execution is bit-identical, per sample and batched
+            let want = plan.run_samples(&samples, 1).unwrap();
+            let got = loaded.run_samples(&samples, 1).unwrap();
+            assert_eq!(got, want, "{bench}/{}: batched outputs diverged", backend.name());
+            let mut arena = loaded.batch_arena(samples.len());
+            let planes = loaded.run_batch_planes(&mut arena, &samples).unwrap();
+            assert_eq!(planes, want, "{bench}/{}: batch planes diverged", backend.name());
+        }
+    }
+}
+
+#[test]
+fn inspect_totals_match_cost_model_and_deployment() {
+    for bench in BENCHES {
+        for backend in backends() {
+            let (model, plan) = compiled(bench, backend);
+            let rep = inspect(&plan.to_modelpack()).unwrap();
+            // the per-channel accounting reconstructed from the stored
+            // groups equals the §III-C transform's Eq. (7) bytes AND the
+            // cost model's packed-weight traffic charge
+            assert_eq!(rep.packed_total(), model.packed_bytes(), "{bench}");
+            assert!(rep.matches_cost_model(), "{bench}/{}", backend.name());
+            let f32_total: usize =
+                model.qlayers().map(|l| l.qweights.len() * 4).sum();
+            assert_eq!(rep.f32_total(), f32_total);
+            assert_eq!(rep.int8_total() * 4, f32_total);
+            // histogram covers every channel of every layer
+            for (il, dl) in rep.layers.iter().zip(model.qlayers()) {
+                assert_eq!(il.channels_at.iter().sum::<usize>(), dl.spec.cout);
+                assert_eq!(il.name, dl.spec.name);
+            }
+            assert_eq!(rep.bench, bench);
+            assert_eq!(rep.backend, backend.name());
+            // packed weights are genuinely sub-byte: the headline claim
+            assert!(rep.packed_total() < rep.int8_total(), "{bench}");
+        }
+    }
+}
+
+#[test]
+fn truncation_at_every_boundary_is_typed_error() {
+    let (_, plan) = compiled("kws", &PackedBackend);
+    let pack = plan.to_modelpack();
+    // every section boundary, the header/table edges, and a stride of
+    // interior cuts (a full per-byte sweep is O(n²) in checksum work)
+    let mut cuts: Vec<usize> = vec![0, 1, 7, 8, 24, 31, 32, 39, 40, pack.len() - 1];
+    let container = modelpack::Container::parse(&pack).unwrap();
+    for s in &container.sections {
+        cuts.extend([s.off, s.off + 1, s.off + s.len]);
+    }
+    cuts.extend((0..pack.len()).step_by(997));
+    for cut in cuts {
+        let cut = cut.min(pack.len() - 1);
+        let err = ExecPlan::from_modelpack(&pack[..cut])
+            .err()
+            .unwrap_or_else(|| panic!("cut {cut} loaded"));
+        assert!(
+            matches!(
+                err,
+                PackError::Truncated { .. }
+                    | PackError::BadMagic
+                    | PackError::LengthMismatch { .. }
+            ),
+            "cut {cut}: unexpected {err}"
+        );
+    }
+}
+
+#[test]
+fn corrupted_bytes_and_bad_headers_are_typed_errors() {
+    let (_, plan) = compiled("ad", &PackedBackend);
+    let pack = plan.to_modelpack();
+
+    // flipped payload byte without resealing → checksum mismatch
+    let mut bad = pack.clone();
+    let last = bad.len() - 1;
+    bad[last] ^= 0x55;
+    assert!(matches!(
+        ExecPlan::from_modelpack(&bad).unwrap_err(),
+        PackError::ChecksumMismatch { .. }
+    ));
+
+    // bad magic
+    let mut bad = pack.clone();
+    bad[0] = b'!';
+    modelpack::reseal(&mut bad);
+    assert_eq!(ExecPlan::from_modelpack(&bad).unwrap_err(), PackError::BadMagic);
+
+    // major version skew (resealed, so only the version differs)
+    let mut bad = pack.clone();
+    bad[8] = 7;
+    modelpack::reseal(&mut bad);
+    assert!(matches!(
+        ExecPlan::from_modelpack(&bad).unwrap_err(),
+        PackError::VersionSkew { major: 7, .. }
+    ));
+
+    // minor version skew is forward-compatible
+    let mut ok = pack.clone();
+    ok[10] = 42;
+    modelpack::reseal(&mut ok);
+    assert!(ExecPlan::from_modelpack(&ok).is_ok());
+
+    // unknown flag bits are an error (they mark unskippable changes)
+    let mut bad = pack.clone();
+    bad[12] = 0x80;
+    modelpack::reseal(&mut bad);
+    assert!(matches!(
+        ExecPlan::from_modelpack(&bad).unwrap_err(),
+        PackError::UnsupportedFlags(_)
+    ));
+
+    // a section offset pushed past EOF
+    let mut bad = pack.clone();
+    let entry_off = modelpack::HEADER_LEN + 8;
+    bad[entry_off..entry_off + 8].copy_from_slice(&(1u64 << 42).to_le_bytes());
+    modelpack::reseal(&mut bad);
+    assert!(matches!(
+        ExecPlan::from_modelpack(&bad).unwrap_err(),
+        PackError::OffsetOutOfRange { .. }
+    ));
+}
+
+#[test]
+fn semantic_corruption_never_panics() {
+    // flip each byte of the PLAN and META sections in turn (resealing
+    // the checksum so the corruption reaches the semantic validators):
+    // the loader must return SOME error or a plan whose execution was
+    // proven safe by validation — it must never panic.  Exhaustive over
+    // the small ad model's sections.
+    let (_, plan) = compiled("ad", &ReferenceBackend);
+    let pack = plan.to_modelpack();
+    let container = modelpack::Container::parse(&pack).unwrap();
+    let mut targets = Vec::new();
+    for kind in [modelpack::SECTION_META, modelpack::SECTION_PLAN] {
+        let s = container.find(kind).unwrap();
+        targets.extend(s.off..s.off + s.len);
+    }
+    for pos in targets {
+        let mut bad = pack.clone();
+        bad[pos] ^= 0x01;
+        modelpack::reseal(&mut bad);
+        // Ok or Err both fine; what is being asserted is "no panic"
+        // (and, when it loads, that running it stays safe)
+        if let Ok(p) = ExecPlan::from_modelpack(&bad) {
+            let feat = p.feat();
+            if feat == plan.feat() {
+                let ds = make_dataset("ad", Split::Test, 1, 0);
+                let mut arena = p.arena();
+                let _ = p.run_sample(&mut arena, &ds.x[..feat]);
+            }
+        }
+    }
+}
+
+#[test]
+fn unknown_sections_are_skipped_on_load() {
+    let (_, plan) = compiled("ic", &PackedBackend);
+    let pack = plan.to_modelpack();
+    let container = modelpack::Container::parse(&pack).unwrap();
+    // re-assemble with an extra future-kind section appended
+    let mut sections: Vec<(u32, Vec<u8>)> = container
+        .sections
+        .iter()
+        .map(|s| (s.kind, container.section(s.kind).unwrap().to_vec()))
+        .collect();
+    sections.push((777, b"a section from a future writer".to_vec()));
+    let future = modelpack::assemble(&sections);
+    let loaded = ExecPlan::from_modelpack(&future).unwrap();
+
+    let manifest = builtin_manifest("ic").unwrap();
+    let feat = manifest.feat_len();
+    let ds = make_dataset("ic", Split::Test, 1, 0);
+    let mut arena = plan.arena();
+    let want = plan.run_sample(&mut arena, &ds.x[..feat]).unwrap();
+    let mut arena = loaded.arena();
+    let got = loaded.run_sample(&mut arena, &ds.x[..feat]).unwrap();
+    assert_eq!(got, want, "future-section pack diverged");
+}
+
+#[test]
+fn provenance_roundtrips_and_guards_the_registry_cold_start() {
+    use cwmix::serve::{ModelRegistry, RegistryConfig};
+
+    let (_, plan) = compiled("ad", &PackedBackend);
+    // plain packs carry no provenance; provenance'd packs round-trip it
+    // and still load + execute
+    assert_eq!(read_provenance(&plan.to_modelpack()).unwrap(), None);
+    let prov = Provenance { assignment: "stripy".to_string(), seed: 0 };
+    let pack = plan.to_modelpack_with(Some(&prov));
+    assert_eq!(read_provenance(&pack).unwrap(), Some(prov.clone()));
+    assert_eq!(inspect(&pack).unwrap().provenance, Some(prov.clone()));
+    let loaded = ExecPlan::from_modelpack(&pack).unwrap();
+    let ds = make_dataset("ad", Split::Test, 1, 0);
+    let feat = plan.feat();
+    let mut arena = plan.arena();
+    let want = plan.run_sample(&mut arena, &ds.x[..feat]).unwrap();
+    let mut arena = loaded.arena();
+    assert_eq!(loaded.run_sample(&mut arena, &ds.x[..feat]).unwrap(), want);
+
+    // registry: a matching pack cold-starts; a provenance mismatch is
+    // refused and falls back to compilation (the numerics guard)
+    let dir = std::env::temp_dir().join(format!("cwm_prov_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = RegistryConfig {
+        benches: vec!["ad".to_string()],
+        modelpack_dir: Some(dir.clone()),
+        ..RegistryConfig::default()
+    };
+    std::fs::write(dir.join("ad.cwm"), &pack).unwrap();
+    let reg = ModelRegistry::build(&cfg).unwrap();
+    assert_eq!(reg.get("ad").unwrap().startup().source, "modelpack");
+    reg.shutdown();
+
+    let skewed = Provenance { assignment: "w8x8".to_string(), seed: 9 };
+    std::fs::write(dir.join("ad.cwm"), plan.to_modelpack_with(Some(&skewed))).unwrap();
+    let reg = ModelRegistry::build(&cfg).unwrap();
+    assert_eq!(reg.get("ad").unwrap().startup().source, "compile");
+    reg.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Walk the PLAN stream of `pack` to the first quant record and return
+/// the absolute offset of its group-count field (the layout is pinned
+/// by `engine::pack`'s encoder, which this test intentionally mirrors).
+fn first_group_count_offset(pack: &[u8]) -> usize {
+    let c = modelpack::Container::parse(pack).unwrap();
+    let s = c.find(modelpack::SECTION_PLAN).unwrap();
+    let b = &pack[s.off..s.off + s.len];
+    let rd_u32 = |p: usize| u32::from_le_bytes(b[p..p + 4].try_into().unwrap());
+    let mut p = 4; // n_nodes
+    loop {
+        p += 4 + 4 + 1 + 4 + 8; // src, dst, save flag, save slot, out_len
+        let tag = b[p];
+        p += 1;
+        match tag {
+            0 => {}       // NoOp
+            1 => p += 12, // AvgPool
+            2 => p += 13, // Add
+            3 => {
+                p += 4 + rd_u32(p) as usize; // name
+                p += 1 + 1; // fc, depthwise
+                p += 8 + 4 + 8 + 4 + 4 + 4; // k, kk, in_len, out_h, out_w, cout
+                p += 4 + 4 + 4; // act_alpha, act_eps, act_bits
+                p += 8 * 5; // cin, pixel_bytes, plane_bytes, seg_bits, col_bytes
+                p += 1; // relu_inline
+                let has_post = b[p];
+                p += 1;
+                if has_post == 1 {
+                    p += 4 + 8 + 1; // other, len, relu
+                }
+                return s.off + p;
+            }
+            other => panic!("unknown node tag {other}"),
+        }
+    }
+}
+
+#[test]
+fn uncovered_channel_groups_are_rejected() {
+    // a pack whose sub-conv groups do not tile [0, cout) must be
+    // refused: the executor writes outputs only per group, so an
+    // uncovered channel would surface stale arena data from a previous
+    // batch (a cross-request leak under the serving batcher's resident
+    // arena).
+    let (_, plan) = compiled("ad", &ReferenceBackend);
+    let pack = plan.to_modelpack();
+    assert!(ExecPlan::from_modelpack(&pack).is_ok(), "baseline pack must load");
+
+    let ngroups_off = first_group_count_offset(&pack);
+    // group 0's len field: after the count u32 and the group's bits
+    // u32 + start u64
+    let len_off = ngroups_off + 4 + 4 + 8;
+    let len0 = u64::from_le_bytes(pack[len_off..len_off + 8].try_into().unwrap());
+    assert!(len0 >= 1);
+
+    // shrink group 0 by one channel: a gap opens in the tiling
+    let mut bad = pack.clone();
+    bad[len_off..len_off + 8].copy_from_slice(&(len0 - 1).to_le_bytes());
+    modelpack::reseal(&mut bad);
+    assert!(matches!(
+        ExecPlan::from_modelpack(&bad).unwrap_err(),
+        PackError::Malformed(_)
+    ));
+
+    // drop the trailing groups entirely: the tail channels go uncovered
+    let n_groups = u32::from_le_bytes(pack[ngroups_off..ngroups_off + 4].try_into().unwrap());
+    assert!(n_groups >= 2, "stripy assignment fragments into several groups");
+    let mut bad = pack.clone();
+    bad[ngroups_off..ngroups_off + 4].copy_from_slice(&1u32.to_le_bytes());
+    modelpack::reseal(&mut bad);
+    assert!(ExecPlan::from_modelpack(&bad).is_err());
+}
+
+#[test]
+fn missing_required_section_is_typed_error() {
+    let (_, plan) = compiled("ad", &PackedBackend);
+    let pack = plan.to_modelpack();
+    let container = modelpack::Container::parse(&pack).unwrap();
+    for dropped in [
+        modelpack::SECTION_META,
+        modelpack::SECTION_PLAN,
+        modelpack::SECTION_COST,
+        modelpack::SECTION_DATA,
+    ] {
+        let sections: Vec<(u32, Vec<u8>)> = container
+            .sections
+            .iter()
+            .filter(|s| s.kind != dropped)
+            .map(|s| (s.kind, container.section(s.kind).unwrap().to_vec()))
+            .collect();
+        let partial = modelpack::assemble(&sections);
+        assert_eq!(
+            ExecPlan::from_modelpack(&partial).unwrap_err(),
+            PackError::MissingSection(dropped)
+        );
+    }
+}

@@ -1,0 +1,83 @@
+#!/usr/bin/env bash
+# CI smoke for the modelpack artifact path (ISSUE 5):
+#
+#   1. `cwmix compile` every builtin zoo model into <dir>/<bench>.cwm
+#      (each artifact is reload-verified bit-identical at emit time)
+#   2. `cwmix inspect` every artifact — validates the container end to
+#      end and exits non-zero unless the packed size totals match the
+#      mpic::cost Eq. (7) packed-byte accounting carried in the pack
+#   3. spawn `cwmix serve --modelpack-dir <dir>` on an ephemeral port
+#      and run `serve_smoke` with CWMIX_SMOKE_EXPECT_STARTUP=modelpack:
+#      every served reply must be bit-identical to an in-process
+#      ExecPlan::compile AND /metrics must show every model actually
+#      cold-started from its artifact
+#   4. assert the server process exits 0 on its own (clean shutdown)
+#
+# Usage: tools/modelpack_smoke.sh   (from the repo root, after
+#        `cargo build --release`; CWMIX_BIN_DIR overrides target/release,
+#        CWMIX_PACK_DIR overrides the artifact directory)
+set -euo pipefail
+
+BIN_DIR=${CWMIX_BIN_DIR:-target/release}
+PACK_DIR=${CWMIX_PACK_DIR:-modelpacks}
+
+echo "--- cwmix compile ---"
+"$BIN_DIR/cwmix" compile --out "$PACK_DIR"
+
+echo "--- cwmix inspect ---"
+for f in "$PACK_DIR"/*.cwm; do
+    "$BIN_DIR/cwmix" inspect --pack "$f"
+done
+
+echo "--- cwmix serve --modelpack-dir ---"
+LOG=$(mktemp)
+"$BIN_DIR/cwmix" serve --addr 127.0.0.1:0 --modelpack-dir "$PACK_DIR" >"$LOG" 2>&1 &
+SERVER_PID=$!
+trap 'kill "$SERVER_PID" 2>/dev/null || true' EXIT
+
+# the port is OS-assigned: wait for the "listening on" line
+ADDR=""
+for _ in $(seq 1 100); do
+    ADDR=$(sed -n 's/^listening on //p' "$LOG" | head -n 1)
+    [ -n "$ADDR" ] && break
+    if ! kill -0 "$SERVER_PID" 2>/dev/null; then
+        echo "server died during startup:" >&2
+        cat "$LOG" >&2
+        exit 1
+    fi
+    sleep 0.2
+done
+if [ -z "$ADDR" ]; then
+    echo "server never printed its address:" >&2
+    cat "$LOG" >&2
+    exit 1
+fi
+echo "server at $ADDR"
+
+# every model must have cold-started from its artifact, and replies
+# must be bit-identical to an in-process compile
+CWMIX_SMOKE_EXPECT_STARTUP=modelpack "$BIN_DIR/serve_smoke" "$ADDR"
+
+# clean shutdown: the serve process must exit 0 by itself, promptly
+for _ in $(seq 1 150); do
+    kill -0 "$SERVER_PID" 2>/dev/null || break
+    sleep 0.2
+done
+if kill -0 "$SERVER_PID" 2>/dev/null; then
+    echo "server still running 30s after shutdown request:" >&2
+    cat "$LOG" >&2
+    exit 1
+fi
+trap - EXIT
+if ! wait "$SERVER_PID"; then
+    echo "server exited non-zero:" >&2
+    cat "$LOG" >&2
+    exit 1
+fi
+echo "--- server log ---"
+cat "$LOG"
+if ! grep -q "cold start from" "$LOG"; then
+    echo "server log never mentioned a modelpack cold start" >&2
+    exit 1
+fi
+echo "modelpack smoke passed: compile -> inspect -> cold-start serve -> clean shutdown"
