@@ -11,11 +11,11 @@
 //! assignment (the deployment-relevant case: fragmented sub-conv groups
 //! across all three precisions); the combo sweep runs uniform
 //! `w{p_w}x{p_x}` assignments so each table cell is isolated.  Emits a
-//! machine-readable `BENCH_engine.json` (schema v4: v3 plus per-model
-//! cold-start cells) at the repo root so future PRs have a perf
-//! trajectory (`tools: cargo run --bin bench_compare` diffs two of
-//! these and gates CI), and asserts bit-exactness of every path while
-//! measuring.
+//! machine-readable `BENCH_engine.json` (schema v5: v4 plus per-model
+//! fused-vs-unfused requantize cells with their Eq. (7) activation-byte
+//! deltas) at the repo root so future PRs have a perf trajectory
+//! (`tools: cargo run --bin bench_compare` diffs two of these and gates
+//! CI), and asserts bit-exactness of every path while measuring.
 //!
 //! ```bash
 //! cargo bench --bench bench_engine            # quick (default)
@@ -164,6 +164,86 @@ fn cold_start_rows() -> anyhow::Result<Vec<(String, Json)>> {
                 ("modelpack_load_ms", Json::num(load_ms)),
                 ("pack_bytes", Json::num(pack.len() as f64)),
                 ("speedup_load_vs_compile", Json::num(compile_ms / load_ms)),
+            ]),
+        ));
+    }
+    Ok(rows)
+}
+
+/// Fused requantize per model: `ExecPlan::compile` (fusion on) vs
+/// `compile_with(.., false)` (the two-pass oracle) on the packed
+/// backend and the striped assignment — asserting bit-exactness while
+/// measuring, and reporting the per-sample activation bytes the fusion
+/// pass removed from the quantized producer→consumer edges (the
+/// Eq. (7) activation-traffic share).
+fn fused_rows() -> anyhow::Result<Vec<(String, Json)>> {
+    const B: usize = 8;
+    println!("\nfused requantize per model (packed, stripy, B={B}, ms/sample):");
+    let mut rows = Vec::new();
+    for bench in BENCHES {
+        let manifest = builtin_manifest(bench)?;
+        let (params, bn) = synthetic_state(&manifest, 0);
+        let a = stripy(&manifest);
+        let model = deploy::build(&manifest, &params, &bn, &a)?;
+        let fused = ExecPlan::compile(&model, &manifest.lut, &PackedBackend)?;
+        let unfused =
+            ExecPlan::compile_with(&model, &manifest.lut, &PackedBackend, false)?;
+        let stats = fused.fusion();
+        assert!(stats.fused_edges > 0, "{bench}: no fusion coverage");
+        assert!(
+            stats.act_bytes_fused < stats.act_bytes_unfused,
+            "{bench}: fusion coverage > 0 must reduce activation bytes moved"
+        );
+
+        let feat = manifest.feat_len();
+        let ds = make_dataset(bench, Split::Test, B, 6);
+        let samples: Vec<&[f32]> = ds.x.chunks_exact(feat).collect();
+        let mut fa = fused.batch_arena(B);
+        let mut ua = unfused.batch_arena(B);
+
+        // bit-exactness while measuring: fused == two-pass, whole batch
+        let got = fused.run_batch_planes(&mut fa, &samples)?;
+        let want = unfused.run_batch_planes(&mut ua, &samples)?;
+        assert_eq!(got, want, "{bench}: fused diverged from the two-pass path");
+
+        let (fused_ms, _, _) = measure(1, 5, || {
+            let _ = fused.run_batch_planes(&mut fa, &samples).unwrap();
+        });
+        let (unfused_ms, _, _) = measure(1, 5, || {
+            let _ = unfused.run_batch_planes(&mut ua, &samples).unwrap();
+        });
+        let (fused_per, unfused_per) = (fused_ms / B as f64, unfused_ms / B as f64);
+        println!(
+            "    {bench:<4} fused {fused_per:>8.3}  two-pass {unfused_per:>8.3}  \
+             ({:>5.2}x, {}/{} edges, {} act B/sample saved)",
+            unfused_per / fused_per,
+            stats.fused_edges,
+            stats.total_edges,
+            stats.act_bytes_saved(),
+        );
+        rows.push((
+            bench.to_string(),
+            Json::obj(vec![
+                ("fused_ms_per_sample", Json::num(fused_per)),
+                ("unfused_ms_per_sample", Json::num(unfused_per)),
+                ("speedup_fused_vs_unfused", Json::num(unfused_per / fused_per)),
+                ("total_edges", Json::num(stats.total_edges as f64)),
+                ("fused_edges", Json::num(stats.fused_edges as f64)),
+                ("requant_fused_ratio", Json::num(stats.fused_ratio())),
+                ("elided_f32_slots", Json::num(stats.elided_f32 as f64)),
+                ("residual_plane_reuse_hits", Json::num(stats.reuse_hits as f64)),
+                (
+                    "act_bytes_unfused_per_sample",
+                    Json::num(stats.act_bytes_unfused as f64),
+                ),
+                (
+                    "act_bytes_fused_per_sample",
+                    Json::num(stats.act_bytes_fused as f64),
+                ),
+                (
+                    "act_bytes_saved_per_sample",
+                    Json::num(stats.act_bytes_saved() as f64),
+                ),
             ]),
         ));
     }
@@ -331,9 +411,11 @@ fn main() -> anyhow::Result<()> {
     let batch_obj = Json::Obj(batch_cells.into_iter().collect());
     let cold_cells = cold_start_rows()?;
     let cold_obj = Json::Obj(cold_cells.into_iter().collect());
+    let fused_cells = fused_rows()?;
+    let fused_obj = Json::Obj(fused_cells.into_iter().collect());
 
     let report = Json::obj(vec![
-        ("version", Json::num(4.0)),
+        ("version", Json::num(5.0)),
         ("threads", Json::num(threads as f64)),
         ("batch", Json::num(batch as f64)),
         ("assignment", Json::str("stripy-2/4/8")),
@@ -344,6 +426,7 @@ fn main() -> anyhow::Result<()> {
         ("batch_cells", batch_obj),
         ("batch_monotonic_non_increasing", Json::Bool(batch_monotonic)),
         ("cold_start", cold_obj),
+        ("fused", fused_obj),
     ]);
     let path = out_path();
     std::fs::write(&path, report.pretty())?;

@@ -20,9 +20,12 @@
 //!   v3) divides the packed per-sample time at batch size B by the same
 //!   run's seed scalar; each cold-start cell (schema v4) divides the
 //!   modelpack load time by the same run's compile time for that model
-//!   — the ratio the `.cwm` path exists to keep small.  The
-//!   multithreaded cell is reported but not gated — its ratio to the
-//!   single-thread seed scales with the runner's core count.
+//!   — the ratio the `.cwm` path exists to keep small; each fused cell
+//!   (schema v5) divides the fused-requantize per-sample time by the
+//!   same run's two-pass time for that model — the ratio the fusion
+//!   pass exists to keep below one.  The multithreaded cell is reported
+//!   but not gated — its ratio to the single-thread seed scales with
+//!   the runner's core count.
 //! * serve: the micro-batching config relative to the *same run's*
 //!   `batch1` config — inverse throughput speedup and the p99 ratio.
 //!
@@ -83,6 +86,20 @@ fn engine_cells(doc: &Json) -> Result<Vec<(String, f64)>> {
                 bail!("cold/{bench}: non-positive compile baseline");
             }
             out.push((format!("cold/{bench}"), load / compile));
+        }
+    }
+    // fused-requantize cells (schema v5): fused per-sample time over
+    // the same run's two-pass time on the same model — machine speed
+    // cancels, a regression means the fused exit stopped paying for
+    // itself
+    if let Some(cells) = doc.opt("fused") {
+        for (bench, obj) in cells.as_obj()? {
+            let fused = obj.get("fused_ms_per_sample")?.as_f64()?;
+            let unfused = obj.get("unfused_ms_per_sample")?.as_f64()?;
+            if unfused <= 0.0 {
+                bail!("fused/{bench}: non-positive two-pass baseline");
+            }
+            out.push((format!("fused/{bench}"), fused / unfused));
         }
     }
     // batch-plane cells (schema v3): packed per-sample time at batch
@@ -268,7 +285,7 @@ mod tests {
 
     fn doc(seed: f64, reference: f64, packed: f64) -> Json {
         parse(&format!(
-            r#"{{"version": 4, "benches": {{"ic": {{
+            r#"{{"version": 5, "benches": {{"ic": {{
                 "seed_scalar_ms_per_inf": {seed},
                 "engine_reference_ms_per_inf": {reference},
                 "engine_packed_ms_per_inf": {packed},
@@ -296,6 +313,20 @@ mod tests {
         .unwrap();
         if let Json::Obj(o) = &mut d {
             o.insert("cold_start".to_string(), cold);
+        }
+        d
+    }
+
+    fn doc_with_fused(seed: f64, reference: f64, packed: f64, fused_ms: f64) -> Json {
+        let mut d = doc(seed, reference, packed);
+        let fused = parse(&format!(
+            r#"{{"ic": {{"fused_ms_per_sample": {fused_ms},
+                 "unfused_ms_per_sample": 2.0, "requant_fused_ratio": 0.5,
+                 "act_bytes_saved_per_sample": 1000}}}}"#
+        ))
+        .unwrap();
+        if let Json::Obj(o) = &mut d {
+            o.insert("fused".to_string(), fused);
         }
         d
     }
@@ -377,6 +408,22 @@ mod tests {
         let regressed = doc_with_cold(10.0, 5.0, 2.0, 5.0);
         let regs = diff(&base, &regressed, 0.2);
         assert!(regs.iter().any(|r| r.contains("cold/ic")));
+    }
+
+    #[test]
+    fn fused_cells_normalise_and_gate() {
+        // fused/two-pass = 0.75 in the baseline
+        let base = doc_with_fused(10.0, 5.0, 2.0, 1.5);
+        let cells = engine_cells(&base).unwrap();
+        assert!(cells.iter().any(|(l, v)| l == "fused/ic" && (*v - 0.75).abs() < 1e-9));
+        // same ratio on a slower machine is clean … (the within-run
+        // two-pass denominator in doc_with_fused is fixed, so scale
+        // only the fused cell consistently)
+        assert!(diff(&base, &base, 0.2).is_empty());
+        // … but the fused exit losing its edge trips the gate
+        let regressed = doc_with_fused(10.0, 5.0, 2.0, 2.4);
+        let regs = diff(&base, &regressed, 0.2);
+        assert!(regs.iter().any(|r| r.contains("fused/ic")));
     }
 
     #[test]

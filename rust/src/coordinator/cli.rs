@@ -485,13 +485,24 @@ fn cmd_inspect(flags: &HashMap<String, String>) -> Result<()> {
         None => println!("provenance: (not recorded)"),
     }
     println!(
-        "{:<10} {:<6} {:>5} {:>6} {:>3} {:>6} {:>6} {:>6} {:>10} {:>10} {:>10}",
+        "{:<10} {:<6} {:>5} {:>6} {:>3} {:>6} {:>6} {:>6} {:>10} {:>10} {:>10} {:<7}",
         "layer", "kind", "cout", "K", "px", "ch@2", "ch@4", "ch@8", "packed B",
-        "int8 B", "f32 B"
+        "int8 B", "f32 B", "fused"
     );
     for l in &rep.layers {
+        // per-layer fusion coverage: `in` = input plane coded by an
+        // earlier node, `out` = exit codes a consumer plane, `out!` =
+        // same with the f32 slot write elided entirely
+        let mut tags: Vec<&str> = Vec::new();
+        if l.plane_reused {
+            tags.push("in");
+        }
+        if l.fused_out {
+            tags.push(if l.f32_elided { "out!" } else { "out" });
+        }
+        let fused = if tags.is_empty() { "-".to_string() } else { tags.join(",") };
         println!(
-            "{:<10} {:<6} {:>5} {:>6} {:>3} {:>6} {:>6} {:>6} {:>10} {:>10} {:>10}",
+            "{:<10} {:<6} {:>5} {:>6} {:>3} {:>6} {:>6} {:>6} {:>10} {:>10} {:>10} {:<7}",
             l.name,
             l.kind,
             l.cout,
@@ -503,6 +514,7 @@ fn cmd_inspect(flags: &HashMap<String, String>) -> Result<()> {
             l.packed_bytes,
             l.int8_bytes,
             l.f32_bytes,
+            fused,
         );
     }
     let (packed, int8, f32b) = (rep.packed_total(), rep.int8_total(), rep.f32_total());
@@ -511,6 +523,20 @@ fn cmd_inspect(flags: &HashMap<String, String>) -> Result<()> {
          (packed = {:.1}% of f32, {:.1}% of int8)",
         packed as f64 / f32b.max(1) as f64 * 100.0,
         packed as f64 / int8.max(1) as f64 * 100.0,
+    );
+    let f = &rep.fusion;
+    println!(
+        "fused requantize: {}/{} edges ({:.0}% coverage), {} f32 slots elided, \
+         {} residual plane reuse hits, {} plane slots, \
+         activation bytes/sample {} -> {} on fused edges",
+        f.fused_edges,
+        f.total_edges,
+        f.fused_ratio() * 100.0,
+        f.elided_f32,
+        f.reuse_hits,
+        rep.plane_slots,
+        f.act_bytes_unfused,
+        f.act_bytes_fused,
     );
     println!(
         "cost-model packed bytes (Eq. 7): {} — {}",

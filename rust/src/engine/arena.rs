@@ -12,17 +12,31 @@
 //!
 //! **Stride addressing.** Every buffer holds `cap` per-sample regions
 //! at a fixed stride (the plan's per-sample sizes): sample `j`'s slice
-//! of slot `i` starts at `j * slot_len[i]`, its packed activation plane
-//! at `j * plane_len` and its im2col column at `j * col_len`.  The plan
-//! owns the strides; the arena only owns the storage.
+//! of slot `i` starts at `j * slot_len[i]`, its packed activation
+//! planes at `j * plane_len` (within each plane slot) and its im2col
+//! column at `j * col_len`.  The plan owns the strides; the arena only
+//! owns the storage.
 //!
 //! The quantization scratch is **sub-byte packed** (`u8`, not `u32`):
-//! `xplane` holds the executing layer's activation codes at its `p_x`
-//! width (one byte-aligned run per pixel, one plane per sample) and
-//! `col` holds the densely packed im2col columns the batched dot
-//! kernels consume — `8 / p_x` times smaller than the unpacked lanes
-//! they replaced, `cap` columns side by side so one weight fetch can
-//! ride every sample's column (weight-stationary execution).
+//! `planes` holds packed `p_x`-bit activation codes (one byte-aligned
+//! run per pixel, one plane per sample) and `col` holds the densely
+//! packed im2col columns the batched dot kernels consume — `8 / p_x`
+//! times smaller than the unpacked lanes they replaced, `cap` columns
+//! side by side so one weight fetch can ride every sample's column
+//! (weight-stationary execution).
+//!
+//! **Plane slots.** An unfused plan uses a single plane buffer (the
+//! executing layer's input, dead once the layer finishes).  A plan with
+//! fused requantize keeps more than one plane live at a time — a fused
+//! producer codes the *consumer's* plane while reading its own, and a
+//! residual tap's shared plane survives across intervening layers — so
+//! `planes` holds `plane_slots` equally-sized buffers indexed by the
+//! plan's plane-slot ids (0/1 flip between adjacent fused pairs, ids
+//! ≥ 2 are dedicated reuse planes).
+//!
+//! Fully-fused chains also shrink the f32 side: a producer whose value
+//! has no f32 reader skips its slot write entirely, and the fusion pass
+//! drops the dead tag-slot saves, so those bytes are never touched.
 
 /// Scratch buffers for one execution worker, sized for `cap` samples.
 pub struct Arena {
@@ -31,10 +45,10 @@ pub struct Arena {
     /// activation slots, indexed by the plan's slot ids; each holds
     /// `cap` per-sample regions at the slot's stride
     pub(super) slots: Vec<Vec<f32>>,
-    /// packed PACT activation planes of the layer currently executing
-    /// (`p_x`-bit codes, one byte-aligned run per pixel, one plane per
-    /// sample at the plan's plane stride)
-    pub(super) xplane: Vec<u8>,
+    /// packed PACT activation planes (`p_x`-bit codes, one byte-aligned
+    /// run per pixel, one plane per sample at the plan's plane stride),
+    /// indexed by the plan's plane-slot ids
+    pub(super) planes: Vec<Vec<u8>>,
     /// densely packed im2col columns / FC input codes (`p_x`-bit), one
     /// column per sample at the plan's column stride, each with slack
     /// bytes for the unaligned-assembly spill
@@ -49,13 +63,16 @@ impl Arena {
     pub(super) fn new(
         slot_len: &[usize],
         plane_len: usize,
+        plane_slots: usize,
         col_len: usize,
         cap: usize,
     ) -> Arena {
         Arena {
             cap,
             slots: slot_len.iter().map(|&l| vec![0.0; cap * l]).collect(),
-            xplane: vec![0; cap * plane_len],
+            planes: (0..plane_slots.max(1))
+                .map(|_| vec![0; cap * plane_len])
+                .collect(),
             col: vec![0; cap * col_len],
             acc: vec![0; cap],
             acc_wide: vec![0; cap],
@@ -70,6 +87,7 @@ impl Arena {
     /// Total bytes held (diagnostics).
     pub fn bytes(&self) -> usize {
         let f: usize = self.slots.iter().map(|s| s.len() * 4).sum();
-        f + self.xplane.len() + self.col.len() + self.acc.len() * 4 + self.acc_wide.len() * 8
+        let p: usize = self.planes.iter().map(|p| p.len()).sum();
+        f + p + self.col.len() + self.acc.len() * 4 + self.acc_wide.len() * 8
     }
 }

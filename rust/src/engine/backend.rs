@@ -40,6 +40,15 @@
 //! order is identical to the single-column kernel, so batched results
 //! are bit-identical by construction (asserted below for every cell,
 //! ragged K and extreme codes).
+//!
+//! **Fused requantize lives above this seam.** Kernels stay
+//! plane-agnostic: they read packed columns and return integer dots,
+//! and the executor's *epilogue* decides whether the f32 result lands
+//! in an arena slot, in the consumer layer's packed plane, or both
+//! (`engine::plan::fuse_requant`).  That keeps all nine `(p_x, p_w)`
+//! SWAR cells — and any future SIMD backend — oblivious to fusion: a
+//! backend is correct for the fused path iff it is correct for the
+//! two-pass path, which is exactly what the oracle contract asserts.
 
 use crate::deploy::DeployedLayer;
 use crate::modelpack::{ByteArr, I32Arr};

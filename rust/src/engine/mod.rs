@@ -20,7 +20,13 @@
 //!   byte-aligned run per pixel, one stride-addressed plane per sample
 //!   in the batch [`Arena`]) in a single pass, and the dot kernels'
 //!   batched entry points ride each fetched weight word across all `B`
-//!   packed columns (weight-stationary SWAR).  [`ExecPlan::run_sample`]
+//!   packed columns (weight-stationary SWAR).  A compile-time fusion
+//!   pass additionally folds the PACT quantize+pack of fusible
+//!   layer-to-layer edges into the producer's epilogue exit (**fused
+//!   requantize**): the producer codes the consumer's packed plane
+//!   directly, eliding the f32 round-trip, and residual taps whose
+//!   branches agree on `p_x` reuse one saved packed plane — coverage is
+//!   reported per plan by [`FusionStats`].  [`ExecPlan::run_sample`]
 //!   is the one-sample batch; [`ExecPlan::run_samples`] /
 //!   [`ExecPlan::run_batch`] shard across `std::thread::scope` workers
 //!   **by batch-chunk** (≤ [`MAX_BATCH_CHUNK`] samples per pass), one
@@ -58,4 +64,4 @@ pub use backend::{
     ReferenceBackend,
 };
 pub use pack::{inspect, read_provenance, InspectLayer, InspectReport, Provenance};
-pub use plan::{engine_threads, ExecPlan, MAX_BATCH_CHUNK};
+pub use plan::{engine_threads, ExecPlan, FusionStats, MAX_BATCH_CHUNK};

@@ -42,7 +42,9 @@ use std::sync::Arc;
 use super::backend::{
     backend_by_name, packed_kernel_from_parts, reference_kernel_from_parts, KernelState,
 };
-use super::plan::{ExecPlan, NodeKind, PlanNode, PostAdd, QuantOp, COL_SLACK};
+use super::plan::{
+    ExecPlan, FusionStats, NodeKind, OutFuse, PlanNode, PostAdd, QuantOp, COL_SLACK,
+};
 
 // Caps on hostile counts/sizes: far above any real model, low enough
 // that a lying pack cannot drive pathological allocations.
@@ -62,12 +64,20 @@ const MAX_BUF_BYTES: usize = 1 << 26;
 const MAX_CHANNELS: usize = 1 << 24;
 const MAX_K: usize = 1 << 24;
 const MAX_COST_LAYERS: usize = 1 << 16;
+/// packed-plane arena slots a fused plan may declare (real plans use a
+/// handful: two flip slots + one per residual-reuse group)
+const MAX_PLANE_SLOTS: usize = 1 << 12;
 
 // Node kind tags.
 const KIND_NOOP: u8 = 0;
 const KIND_AVGPOOL: u8 = 1;
 const KIND_ADD: u8 = 2;
 const KIND_QUANT: u8 = 3;
+/// a quantized layer carrying fused-requantize state (format minor ≥ 1):
+/// the full [`KIND_QUANT`] record followed by the fusion extension —
+/// layers without fusion state keep tag 3, so unfused plans stay
+/// byte-identical to minor-0 packs
+const KIND_QUANT_FUSED: u8 = 4;
 
 // Kernel backend tags.
 const KERNEL_REFERENCE: u8 = 0;
@@ -125,8 +135,14 @@ impl ExecPlan {
                     p.bool(*relu);
                 }
                 NodeKind::Quant(op) => {
-                    p.u8(KIND_QUANT);
+                    let fused = op.in_plane_slot != 0
+                        || op.in_plane_ready
+                        || op.out_fuse.is_some();
+                    p.u8(if fused { KIND_QUANT_FUSED } else { KIND_QUANT });
                     encode_quant(&mut p, &mut data, op);
+                    if fused {
+                        encode_fusion(&mut p, op);
+                    }
                 }
             }
         }
@@ -150,6 +166,18 @@ impl ExecPlan {
         m.u32(self.output_perm.len() as u32);
         for &c in &self.output_perm {
             m.u32(c as u32);
+        }
+        // fused-requantize extension (format minor ≥ 1), written only
+        // when there is fusion state to carry: unfused plans stay
+        // byte-identical to minor-0 packs
+        if self.plane_slots > 1 || self.fusion != FusionStats::default() {
+            m.u32(self.plane_slots as u32);
+            m.u32(self.fusion.total_edges as u32);
+            m.u32(self.fusion.fused_edges as u32);
+            m.u32(self.fusion.elided_f32 as u32);
+            m.u32(self.fusion.reuse_hits as u32);
+            m.u64(self.fusion.act_bytes_unfused);
+            m.u64(self.fusion.act_bytes_fused);
         }
 
         // COST
@@ -286,6 +314,24 @@ fn encode_quant(p: &mut PackWriter, data: &mut DataWriter, op: &QuantOp) {
     }
 }
 
+/// The [`KIND_QUANT_FUSED`] extension, appended after the base quant
+/// record (kernel included).
+fn encode_fusion(p: &mut PackWriter, op: &QuantOp) {
+    p.u32(op.in_plane_slot as u32);
+    p.bool(op.in_plane_ready);
+    p.bool(op.out_fuse.is_some());
+    if let Some(of) = &op.out_fuse {
+        p.u32(of.plane_slot as u32);
+        p.u32(of.bits);
+        p.f32(of.alpha);
+        p.f32(of.eps);
+        p.u64(of.cin as u64);
+        p.u64(of.pixel_bytes as u64);
+        p.u64(of.plane_bytes as u64);
+        p.bool(of.keep_f32);
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Decode.
 // ---------------------------------------------------------------------------
@@ -328,10 +374,12 @@ struct Meta {
     permute: bool,
     slot_len: Vec<usize>,
     plane_len: usize,
+    plane_slots: usize,
     col_len: usize,
     weight_bytes: usize,
     weight_traffic_bytes: u64,
     output_perm: Vec<usize>,
+    fusion: FusionStats,
 }
 
 fn decode_meta(bytes: &[u8]) -> Result<Meta, PackError> {
@@ -373,6 +421,29 @@ fn decode_meta(bytes: &[u8]) -> Result<Meta, PackError> {
     for _ in 0..n_perm {
         output_perm.push(r.u32()? as usize);
     }
+    // fused-requantize extension (format minor ≥ 1): present only when
+    // the writer had fusion state — minor-0 packs and unfused plans end
+    // here and decode with the single-plane defaults
+    let (plane_slots, fusion) = if r.remaining() > 0 {
+        let ps = r.u32()? as usize;
+        if ps == 0 || ps > MAX_PLANE_SLOTS {
+            return Err(malformed(format!("{ps} plane slots")));
+        }
+        if ps.saturating_mul(plane_len) > MAX_BUF_BYTES {
+            return Err(malformed("plane buffers exceed the size cap"));
+        }
+        let fusion = FusionStats {
+            total_edges: r.u32()? as usize,
+            fused_edges: r.u32()? as usize,
+            elided_f32: r.u32()? as usize,
+            reuse_hits: r.u32()? as usize,
+            act_bytes_unfused: r.u64()?,
+            act_bytes_fused: r.u64()?,
+        };
+        (ps, fusion)
+    } else {
+        (1, FusionStats::default())
+    };
     r.finish()?;
 
     if slot_len.len() < 2 {
@@ -401,10 +472,12 @@ fn decode_meta(bytes: &[u8]) -> Result<Meta, PackError> {
         permute,
         slot_len,
         plane_len,
+        plane_slots,
         col_len,
         weight_bytes,
         weight_traffic_bytes,
         output_perm,
+        fusion,
     })
 }
 
@@ -455,6 +528,15 @@ fn decode_plan(container: &Container) -> Result<ExecPlan, PackError> {
     // defines `feat` elements of slot 0 before the first node runs.
     let mut defined = vec![0usize; n_slots];
     defined[0] = meta.feat;
+    // Plane-coverage analysis, the packed-plane analogue of `defined`:
+    // plane buffers persist across batches too, so a consumer marked
+    // `in_plane_ready` must read a plane some earlier node of this pass
+    // coded **with the consumer's own signature** (p_x, PACT clip/step
+    // bit patterns, plane geometry) — anything else would surface stale
+    // codes from another request, or reinterpret a differently-shaped
+    // plane.
+    let mut plane_sig: Vec<Option<(u32, u32, u32, usize, usize, usize)>> =
+        vec![None; meta.plane_slots];
     for _ in 0..n_nodes {
         let src = r.u32()? as usize;
         let dst = r.u32()? as usize;
@@ -510,7 +592,11 @@ fn decode_plan(container: &Container) -> Result<ExecPlan, PackError> {
                 NodeKind::Add { other, len, relu }
             }
             KIND_QUANT => {
-                let op = decode_quant(&mut r, &data, &meta, src, dst, out_len)?;
+                let op = decode_quant(&mut r, &data, &meta, src, dst, out_len, false)?;
+                NodeKind::Quant(op)
+            }
+            KIND_QUANT_FUSED => {
+                let op = decode_quant(&mut r, &data, &meta, src, dst, out_len, true)?;
                 NodeKind::Quant(op)
             }
             other => return Err(malformed(format!("unknown node kind tag {other}"))),
@@ -532,8 +618,28 @@ fn decode_plan(container: &Container) -> Result<ExecPlan, PackError> {
                 }
             }
             NodeKind::Quant(op) => {
-                if defined[src] < op.in_len {
-                    return Err(malformed("layer reads beyond this pass's data"));
+                let own_sig = (
+                    op.act_bits,
+                    op.act_alpha.to_bits(),
+                    op.act_eps.to_bits(),
+                    op.cin,
+                    op.pixel_bytes,
+                    op.plane_bytes,
+                );
+                if op.in_plane_ready {
+                    // a ready consumer never touches its f32 source, so
+                    // the `defined` read check is waived — the plane
+                    // signature check replaces it
+                    if plane_sig[op.in_plane_slot] != Some(own_sig) {
+                        return Err(malformed(
+                            "layer reads a plane no prior node coded for it",
+                        ));
+                    }
+                } else {
+                    if defined[src] < op.in_len {
+                        return Err(malformed("layer reads beyond this pass's data"));
+                    }
+                    plane_sig[op.in_plane_slot] = Some(own_sig);
                 }
                 if let Some(pa) = &op.post_add {
                     if defined[pa.other] < pa.len {
@@ -542,7 +648,26 @@ fn decode_plan(container: &Container) -> Result<ExecPlan, PackError> {
                         ));
                     }
                 }
-                defined[dst] = out_len;
+                if let Some(of) = &op.out_fuse {
+                    plane_sig[of.plane_slot] = Some((
+                        of.bits,
+                        of.alpha.to_bits(),
+                        of.eps.to_bits(),
+                        of.cin,
+                        of.pixel_bytes,
+                        of.plane_bytes,
+                    ));
+                }
+                // a fully-fused exit (no f32 reader, no residual
+                // staging) never writes its f32 slot, so it defines
+                // nothing there
+                let write_f32 = op
+                    .out_fuse
+                    .as_ref()
+                    .is_none_or(|of| of.keep_f32 || op.post_add.is_some());
+                if write_f32 {
+                    defined[dst] = out_len;
+                }
             }
         }
         if let Some(s) = save {
@@ -564,6 +689,7 @@ fn decode_plan(container: &Container) -> Result<ExecPlan, PackError> {
         feat: meta.feat,
         slot_len: meta.slot_len,
         plane_len: meta.plane_len,
+        plane_slots: meta.plane_slots,
         col_len: meta.col_len,
         nodes,
         out_slot: meta.out_slot,
@@ -573,11 +699,15 @@ fn decode_plan(container: &Container) -> Result<ExecPlan, PackError> {
         cost,
         weight_bytes: meta.weight_bytes,
         weight_traffic_bytes: meta.weight_traffic_bytes,
+        fusion: meta.fusion,
     })
 }
 
 /// Decode one quantized-layer record and re-derive every invariant the
-/// executor's unchecked hot loops rely on.
+/// executor's unchecked hot loops rely on.  `fused` selects the
+/// [`KIND_QUANT_FUSED`] layout (the base record plus the fusion
+/// extension).
+#[allow(clippy::too_many_arguments)]
 fn decode_quant(
     r: &mut PackReader<'_>,
     data: &DataView<'_>,
@@ -585,6 +715,7 @@ fn decode_quant(
     src: usize,
     dst: usize,
     node_out_len: usize,
+    fused: bool,
 ) -> Result<Box<QuantOp>, PackError> {
     let name = r.str()?;
     let fc = r.bool()?;
@@ -797,6 +928,64 @@ fn decode_quant(
         other => return Err(malformed(format!("{name}: unknown kernel tag {other}"))),
     };
 
+    // Fusion extension ([`KIND_QUANT_FUSED`] only).  Every field is
+    // re-validated against the geometry decoded above — the executor's
+    // fused epilogue indexes planes unchecked, so nothing from the file
+    // may reach it unexamined (validate-then-borrow).
+    let (in_plane_slot, in_plane_ready, out_fuse) = if fused {
+        let in_plane_slot = r.u32()? as usize;
+        let in_plane_ready = r.bool()?;
+        let out_fuse = if r.bool()? {
+            let plane_slot = r.u32()? as usize;
+            let bits = r.u32()?;
+            let alpha = r.f32()?;
+            let eps = r.f32()?;
+            let of_cin = r.len64()?;
+            let of_pixel_bytes = r.len64()?;
+            let of_plane_bytes = r.len64()?;
+            let keep_f32 = r.bool()?;
+            if plane_slot >= meta.plane_slots || plane_slot == in_plane_slot {
+                return err("fused output plane slot invalid");
+            }
+            if !matches!(bits, 2 | 4 | 8) {
+                return err("fused output precision not in {2,4,8}");
+            }
+            if !alpha.is_finite() || alpha < 0.0 || !eps.is_finite() || eps <= 0.0 {
+                return err("fused output clip/step not finite positive");
+            }
+            if of_cin == 0 || of_cin > MAX_K || node_out_len % of_cin != 0 {
+                return err("fused output channel count does not tile the layer");
+            }
+            if of_pixel_bytes != (of_cin * bits as usize).div_ceil(8) {
+                return err("fused output pixel stride disagrees with geometry");
+            }
+            if of_plane_bytes != (node_out_len / of_cin) * of_pixel_bytes {
+                return err("fused output plane size disagrees with geometry");
+            }
+            if of_plane_bytes > meta.plane_len {
+                return err("fused output plane exceeds the plane stride");
+            }
+            Some(OutFuse {
+                plane_slot,
+                bits,
+                alpha,
+                eps,
+                cin: of_cin,
+                pixel_bytes: of_pixel_bytes,
+                plane_bytes: of_plane_bytes,
+                keep_f32,
+            })
+        } else {
+            None
+        };
+        if in_plane_slot >= meta.plane_slots {
+            return err("input plane slot out of range");
+        }
+        (in_plane_slot, in_plane_ready, out_fuse)
+    } else {
+        (0, false, None)
+    };
+
     Ok(Box::new(QuantOp {
         name,
         fc,
@@ -821,6 +1010,9 @@ fn decode_quant(
         b_fold,
         relu_inline,
         post_add,
+        in_plane_slot,
+        in_plane_ready,
+        out_fuse,
         kernel,
     }))
 }
@@ -844,6 +1036,13 @@ pub struct InspectLayer {
     pub int8_bytes: usize,
     /// f32 bytes for the same weights
     pub f32_bytes: usize,
+    /// this layer's exit codes a consumer plane (fused requantize)
+    pub fused_out: bool,
+    /// this layer's f32 output slot write is elided entirely
+    pub f32_elided: bool,
+    /// this layer's input plane was coded by an earlier node (fused
+    /// producer or shared residual plane)
+    pub plane_reused: bool,
 }
 
 /// Artifact-level report of a `.cwm`: header facts plus the paper's
@@ -865,6 +1064,10 @@ pub struct InspectReport {
     pub cost_model_packed_bytes: u64,
     /// in-memory weight bytes of the kernels (backend-dependent)
     pub kernel_weight_bytes: usize,
+    /// arena plane slots the plan requires (1 when unfused)
+    pub plane_slots: usize,
+    /// compile-time fused-requantize coverage carried in the pack
+    pub fusion: FusionStats,
 }
 
 impl InspectReport {
@@ -917,6 +1120,12 @@ pub fn inspect(bytes: &[u8]) -> Result<InspectReport, PackError> {
                 packed_bytes: packed,
                 int8_bytes: op.cout * op.k,
                 f32_bytes: op.cout * op.k * 4,
+                fused_out: op.out_fuse.is_some(),
+                f32_elided: op
+                    .out_fuse
+                    .as_ref()
+                    .is_some_and(|of| !of.keep_f32 && op.post_add.is_none()),
+                plane_reused: op.in_plane_ready,
             });
         }
     }
@@ -932,5 +1141,7 @@ pub fn inspect(bytes: &[u8]) -> Result<InspectReport, PackError> {
         layers,
         cost_model_packed_bytes: plan.weight_traffic_bytes,
         kernel_weight_bytes: plan.weight_bytes,
+        plane_slots: plan.plane_slots,
+        fusion: plan.fusion.clone(),
     })
 }

@@ -36,6 +36,26 @@
 //! the column copy entirely: their columns *are* plane slices,
 //! batch-addressed at the plane stride with zero copies.
 //!
+//! **Fused requantize.** Compilation ends with a fusion pass
+//! (`fuse_requant`) over the built node list: it recovers the value
+//! flow from slot reads/writes and, wherever a quantized layer's output
+//! is consumed only by quantized layers that agree on one PACT
+//! signature `(p_x, α, ε)` and plane geometry, rewrites the producer to
+//! code the consumer's packed plane directly at its epilogue exit
+//! (`OutFuse`) — the consumer skips its quantize pass entirely
+//! (`in_plane_ready`), and when nothing else reads the f32 form the
+//! producer's f32 slot write is elided too.  Residual taps whose
+//! branches share the producer's `p_x` reuse **one** saved packed plane
+//! (a dedicated plane slot, id ≥ 2, that stays live across intervening
+//! layers); mismatched branches fall back to the f32 path.  A producer
+//! with a residual add still stages f32 and quantizes the added result
+//! into the consumer plane in the same post-add pass.  Plane slots 0/1
+//! flip between adjacent fused pairs so a producer never overwrites the
+//! plane it is reading.  Fusion is on for every backend except
+//! `reference`, which stays on the two-pass path as the oracle
+//! ([`ExecPlan::compile_with`] exposes the switch); coverage is
+//! reported by [`ExecPlan::fusion`] ([`FusionStats`]).
+//!
 //! [`ExecPlan::run_samples`] shards a batch across `std::thread::scope`
 //! workers **by batch-chunk** — each worker runs contiguous chunks of
 //! up to [`MAX_BATCH_CHUNK`] samples through its own batch [`Arena`] —
@@ -44,9 +64,13 @@
 //! Numerical contract: for any backend and any batch size, outputs are
 //! **bit-identical** to the scalar oracle `mpic::exec::run_sample` —
 //! batching changes *when* work happens (quantize/gather/decode once
-//! per batch instead of once per sample), never what is computed.
-//! Asserted layer-type by layer-type in `tests/engine_equivalence.rs`
-//! and batch-size by batch-size in `tests/engine_batch_plane.rs`.
+//! per batch instead of once per sample), never what is computed, and
+//! the fused exit computes the exact f32 epilogue value the two-pass
+//! path writes before coding it with the consumer's own quantize
+//! arithmetic.  Asserted layer-type by layer-type in
+//! `tests/engine_equivalence.rs`, batch-size by batch-size in
+//! `tests/engine_batch_plane.rs`, and fused-vs-oracle in
+//! `tests/engine_fused_requant.rs`.
 
 use anyhow::{anyhow, bail, Result};
 
@@ -71,6 +95,68 @@ pub(super) struct PostAdd {
     pub(super) other: usize,
     pub(super) len: usize,
     pub(super) relu: bool,
+}
+
+/// Fused requantize exit: the producer codes the consumer layer's
+/// packed `p_x`-bit plane directly from the epilogue value `y`, using
+/// the consumer's own PACT parameters and plane geometry — the exact
+/// bytes the consumer's quantize pass would have produced from the f32
+/// slot.  With `keep_f32` false (and no residual add staging), the
+/// producer's f32 slot write is elided entirely.
+pub(super) struct OutFuse {
+    /// arena plane slot the consumer reads (`QuantOp::in_plane_slot`)
+    pub(super) plane_slot: usize,
+    /// consumer's `p_x` (code width)
+    pub(super) bits: u32,
+    /// consumer's PACT clip and step
+    pub(super) alpha: f32,
+    pub(super) eps: f32,
+    /// consumer's plane geometry (pixel run length / packed bytes)
+    pub(super) cin: usize,
+    pub(super) pixel_bytes: usize,
+    pub(super) plane_bytes: usize,
+    /// also write the f32 slot: some consumer still needs the f32 form
+    /// (residual tap read, avgpool, structural add, network output)
+    pub(super) keep_f32: bool,
+}
+
+/// Compile-time fused-requantize coverage, reported per plan
+/// ([`ExecPlan::fusion`]) and exported by `/metrics` and
+/// `cwmix inspect`.  `act_bytes_*` are the per-sample activation bytes
+/// moved across quantized producer→consumer edges (the Eq. (7)
+/// activation-traffic share): f32 slot writes + f32 re-reads + packed
+/// plane writes on the two-pass path versus the fused path.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FusionStats {
+    /// quantized producer → quantized consumer value edges
+    pub total_edges: usize,
+    /// edges whose consumer plane is written without an f32 re-read
+    pub fused_edges: usize,
+    /// producers whose f32 slot write is elided entirely
+    pub elided_f32: usize,
+    /// consumers served by a shared saved packed plane beyond the
+    /// first (residual plane reuse)
+    pub reuse_hits: usize,
+    /// per-sample activation bytes on these edges, two-pass path
+    pub act_bytes_unfused: u64,
+    /// same edges, fused path
+    pub act_bytes_fused: u64,
+}
+
+impl FusionStats {
+    /// `fused_edges / total_edges` (0 when the plan has no such edges).
+    pub fn fused_ratio(&self) -> f64 {
+        if self.total_edges == 0 {
+            0.0
+        } else {
+            self.fused_edges as f64 / self.total_edges as f64
+        }
+    }
+
+    /// Per-sample activation bytes the fusion pass removed.
+    pub fn act_bytes_saved(&self) -> u64 {
+        self.act_bytes_unfused.saturating_sub(self.act_bytes_fused)
+    }
 }
 
 /// One quantized layer, fully precompiled.  The large arrays (gather
@@ -117,6 +203,14 @@ pub(super) struct QuantOp {
     pub(super) b_fold: F32Arr,
     pub(super) relu_inline: bool,
     pub(super) post_add: Option<PostAdd>,
+    /// arena plane slot this layer's packed input lives in
+    pub(super) in_plane_slot: usize,
+    /// the input plane was already written — by a fused producer or by
+    /// a sibling consumer sharing a saved plane — so the quantize pass
+    /// is skipped
+    pub(super) in_plane_ready: bool,
+    /// fused exit: code the consumer's plane at the epilogue
+    pub(super) out_fuse: Option<OutFuse>,
     pub(super) kernel: Box<dyn LayerKernel>,
 }
 
@@ -144,6 +238,9 @@ pub struct ExecPlan {
     pub(super) feat: usize,
     pub(super) slot_len: Vec<usize>,
     pub(super) plane_len: usize,
+    /// packed-plane arena slots: 1 on the unfused path; fused plans use
+    /// two flip slots (0/1) plus one dedicated slot per reused plane
+    pub(super) plane_slots: usize,
     pub(super) col_len: usize,
     pub(super) nodes: Vec<PlanNode>,
     pub(super) out_slot: usize,
@@ -155,6 +252,8 @@ pub struct ExecPlan {
     /// modeled per-sample packed weight traffic (Eq. (7) flash bytes),
     /// the batch-amortizable share of `InferenceCost::total_mem_bytes`
     pub(super) weight_traffic_bytes: u64,
+    /// fused-requantize coverage decided at compile time
+    pub(super) fusion: FusionStats,
 }
 
 /// Samples per batch-plane pass (and per worker arena): bounds arena
@@ -181,11 +280,25 @@ fn other_scratch(src: usize) -> usize {
 }
 
 impl ExecPlan {
-    /// Compile `model` once against `backend`.
+    /// Compile `model` once against `backend`.  Requantize fusion is on
+    /// for every backend except `reference`, which stays on the
+    /// two-pass path as the bit-exactness oracle.
     pub fn compile(
         model: &DeployedModel,
         lut: &CostLut,
         backend: &dyn KernelBackend,
+    ) -> Result<ExecPlan> {
+        Self::compile_with(model, lut, backend, backend.name() != "reference")
+    }
+
+    /// [`Self::compile`] with the fused-requantize pass explicitly on
+    /// or off — the unfused plan of the same backend is the oracle the
+    /// fused plan is tested (and benchmarked) against.
+    pub fn compile_with(
+        model: &DeployedModel,
+        lut: &CostLut,
+        backend: &dyn KernelBackend,
+        fuse: bool,
     ) -> Result<ExecPlan> {
         let (mut h, mut w, mut c) = match model.input_shape.len() {
             3 => (model.input_shape[0], model.input_shape[1], model.input_shape[2]),
@@ -290,6 +403,11 @@ impl ExecPlan {
 
         slot_len[SCRATCH_A] = max_len;
         slot_len[SCRATCH_B] = max_len;
+        let (plane_slots, fusion) = if fuse {
+            fuse_requant(&mut nodes, slot_len.len(), cur)
+        } else {
+            (1, FusionStats::default())
+        };
         let out_len = h * w * c;
         let permute = !model.output_perm.is_empty()
             && model.output_perm.iter().enumerate().any(|(i, &p)| i != p);
@@ -305,6 +423,7 @@ impl ExecPlan {
             feat,
             slot_len,
             plane_len,
+            plane_slots,
             col_len,
             nodes,
             out_slot: cur,
@@ -314,6 +433,7 @@ impl ExecPlan {
             cost,
             weight_bytes,
             weight_traffic_bytes,
+            fusion,
         })
     }
 
@@ -451,6 +571,9 @@ impl ExecPlan {
             b_fold: dl.b_fold.clone().into(),
             relu_inline: s.relu && s.add_from.is_none(),
             post_add,
+            in_plane_slot: 0,
+            in_plane_ready: false,
+            out_fuse: None,
             kernel: backend.prepare(dl),
         }))
     }
@@ -493,6 +616,12 @@ impl ExecPlan {
         self.weight_bytes
     }
 
+    /// Fused-requantize coverage decided at compile time (all zeros on
+    /// an unfused plan).
+    pub fn fusion(&self) -> &FusionStats {
+        &self.fusion
+    }
+
     /// Allocate a one-sample worker arena for this plan.
     pub fn arena(&self) -> Arena {
         self.batch_arena(1)
@@ -501,7 +630,13 @@ impl ExecPlan {
     /// Allocate a worker arena with batch-plane capacity for `cap`
     /// samples (every buffer holds `cap` stride-addressed regions).
     pub fn batch_arena(&self, cap: usize) -> Arena {
-        Arena::new(&self.slot_len, self.plane_len, self.col_len, cap.max(1))
+        Arena::new(
+            &self.slot_len,
+            self.plane_len,
+            self.plane_slots,
+            self.col_len,
+            cap.max(1),
+        )
     }
 
     // ---- execution ---------------------------------------------------------
@@ -543,7 +678,7 @@ impl ExecPlan {
                 bail!("input length {} != {}", s.len(), self.feat);
             }
         }
-        let Arena { slots, xplane, col, acc, acc_wide, .. } = arena;
+        let Arena { slots, planes, col, acc, acc_wide, .. } = arena;
         let sl = &self.slot_len;
         for (j, s) in samples.iter().enumerate() {
             slots[SCRATCH_A][j * sl[SCRATCH_A]..][..self.feat].copy_from_slice(s);
@@ -601,7 +736,7 @@ impl ExecPlan {
                             sl[node.src],
                             dst,
                             sl[node.dst],
-                            xplane,
+                            planes,
                             self.plane_len,
                             col,
                             self.col_len,
@@ -619,6 +754,26 @@ impl ExecPlan {
                                 if pa.relu {
                                     *d = d.max(0.0);
                                 }
+                            }
+                        }
+                        // deferred fused exit: the residual add had to
+                        // run over the f32 staging slot first, so the
+                        // consumer plane is coded here, from the exact
+                        // values the two-pass path would re-read
+                        if let Some(of) = &op.out_fuse {
+                            let dst = &slots[node.dst][..];
+                            let plane = &mut planes[of.plane_slot][..];
+                            for j in 0..b {
+                                quantize_into_plane(
+                                    &dst[j * sl[node.dst]..][..pa.len],
+                                    of.alpha,
+                                    of.eps,
+                                    of.bits as usize,
+                                    of.cin,
+                                    of.pixel_bytes,
+                                    &mut plane[j * self.plane_len..]
+                                        [..of.plane_bytes],
+                                );
                             }
                         }
                     }
@@ -766,6 +921,231 @@ pub fn engine_threads(n: usize) -> usize {
         .clamp(1, n.max(1))
 }
 
+/// The quantized layer behind node `i` (fusion-pass internal: indices
+/// come from the value analysis, which only records quantized nodes).
+fn quant_of(nodes: &[PlanNode], i: usize) -> &QuantOp {
+    match &nodes[i].kind {
+        NodeKind::Quant(op) => op,
+        _ => unreachable!("value analysis recorded a non-quantized node"),
+    }
+}
+
+fn quant_of_mut(nodes: &mut [PlanNode], i: usize) -> &mut QuantOp {
+    match &mut nodes[i].kind {
+        NodeKind::Quant(op) => op,
+        _ => unreachable!("value analysis recorded a non-quantized node"),
+    }
+}
+
+/// A consumer's PACT signature + plane geometry: fusion requires every
+/// quantized consumer of a value to agree on all of it (clip and step
+/// compared by bit pattern).
+fn plane_sig(nodes: &[PlanNode], i: usize) -> (u32, u32, u32, usize, usize, usize) {
+    let op = quant_of(nodes, i);
+    (
+        op.act_bits,
+        op.act_alpha.to_bits(),
+        op.act_eps.to_bits(),
+        op.cin,
+        op.pixel_bytes,
+        op.plane_bytes,
+    )
+}
+
+/// Everything the fusion pass learned about one value (one activation
+/// tensor version) while replaying the node list's slot reads/writes.
+#[derive(Default)]
+struct ValInfo {
+    /// node index of the quantized layer that produced it
+    producer: Option<usize>,
+    /// quantized layers reading it as their main (packed-plane) input
+    quant_consumers: Vec<usize>,
+    /// something reads the f32 form: a residual tap (`PostAdd`), a
+    /// structural add/avgpool, or the network output
+    f32_read: bool,
+    /// nodes whose `save` copies it into a tag slot
+    saves: Vec<usize>,
+}
+
+/// The fused-requantize pass (see module docs): recover the value flow
+/// from the built nodes' slot reads/writes, then for every value whose
+/// quantized consumers agree on one plane signature, rewrite the
+/// producer to code the consumer plane at its epilogue exit and mark
+/// the consumers' planes ready.
+///
+/// Plane-slot discipline (aliasing safety): a producer may code into
+/// the flip slot (`0`/`1`, whichever it is not reading) **only** when
+/// its single consumer is the immediately-next quantized node — no
+/// other quantized layer runs in between, so nothing can clobber the
+/// coded plane.  Every other fusible shape — a residual tap feeding
+/// several branches, or a non-adjacent single consumer — gets a
+/// dedicated plane slot (ids ≥ 2, one per value, never shared), which
+/// stays live across intervening layers by construction.  When no f32
+/// reader remains, the value's tag-slot saves are elided and the
+/// producer skips its f32 slot write entirely.
+fn fuse_requant(
+    nodes: &mut [PlanNode],
+    n_slots: usize,
+    out_slot: usize,
+) -> (usize, FusionStats) {
+    // value analysis: which value lives in each slot as nodes execute
+    const NO_VAL: usize = usize::MAX;
+    let mut slot_val = vec![NO_VAL; n_slots];
+    let mut vals: Vec<ValInfo> = vec![ValInfo::default()]; // 0 = network input
+    slot_val[SCRATCH_A] = 0;
+    for (i, node) in nodes.iter().enumerate() {
+        match &node.kind {
+            NodeKind::NoOp => {} // tap/flatten: the value flows through
+            NodeKind::AvgPool { .. } => {
+                vals[slot_val[node.src]].f32_read = true;
+                slot_val[node.dst] = vals.len();
+                vals.push(ValInfo::default());
+            }
+            NodeKind::Add { other, .. } => {
+                vals[slot_val[node.src]].f32_read = true;
+                vals[slot_val[*other]].f32_read = true;
+                slot_val[node.dst] = vals.len();
+                vals.push(ValInfo::default());
+            }
+            NodeKind::Quant(op) => {
+                vals[slot_val[node.src]].quant_consumers.push(i);
+                if let Some(pa) = &op.post_add {
+                    vals[slot_val[pa.other]].f32_read = true;
+                }
+                slot_val[node.dst] = vals.len();
+                vals.push(ValInfo { producer: Some(i), ..ValInfo::default() });
+            }
+        }
+        if let Some(s) = node.save {
+            let v = slot_val[node.dst];
+            slot_val[s] = v;
+            vals[v].saves.push(i);
+        }
+    }
+    vals[slot_val[out_slot]].f32_read = true;
+
+    // the next quantized node after each node — the adjacency test for
+    // flip-slot fusion
+    let mut next_quant = vec![None; nodes.len()];
+    let mut nq = None;
+    for i in (0..nodes.len()).rev() {
+        next_quant[i] = nq;
+        if matches!(nodes[i].kind, NodeKind::Quant(_)) {
+            nq = Some(i);
+        }
+    }
+
+    let mut stats = FusionStats::default();
+    let mut plane_slots = 1usize;
+    let mut next_dedicated = 2usize;
+    // values are created in node order, so by the time a value is
+    // decided its producer's own input-plane slot is already final —
+    // which the flip-slot choice below depends on
+    for v in 0..vals.len() {
+        let (consumers, f32_read, saves, producer) = {
+            let info = &vals[v];
+            (
+                info.quant_consumers.clone(),
+                info.f32_read,
+                info.saves.clone(),
+                info.producer,
+            )
+        };
+        if consumers.is_empty() {
+            continue;
+        }
+        let sig0 = plane_sig(nodes, consumers[0]);
+        let sig_match = consumers.iter().all(|&c| plane_sig(nodes, c) == sig0);
+        let Some(p) = producer else {
+            // value produced outside the quantized graph (the network
+            // input, or a pool output): nothing codes it for free, but
+            // agreeing sibling consumers can still share one plane —
+            // the first quantizes it, the rest reuse it
+            if consumers.len() >= 2 && sig_match {
+                let slot = next_dedicated;
+                next_dedicated += 1;
+                plane_slots = plane_slots.max(slot + 1);
+                for (nth, &c) in consumers.iter().enumerate() {
+                    let opc = quant_of_mut(nodes, c);
+                    opc.in_plane_slot = slot;
+                    opc.in_plane_ready = nth > 0;
+                }
+                stats.reuse_hits += consumers.len() - 1;
+            }
+            continue;
+        };
+
+        // two-pass traffic on this edge set (per sample): the
+        // producer's f32 slot write plus every consumer's f32 re-read
+        // and packed-plane write
+        stats.total_edges += consumers.len();
+        let n_out = nodes[p].out_len as u64;
+        let mut unfused = 4 * n_out;
+        for &c in &consumers {
+            unfused += 4 * n_out + quant_of(nodes, c).plane_bytes as u64;
+        }
+        stats.act_bytes_unfused += unfused;
+        if !sig_match {
+            // mixed consumer precisions (residual-reuse fallback): the
+            // f32 path stays, every consumer quantizes for itself
+            stats.act_bytes_fused += unfused;
+            continue;
+        }
+
+        let p_in = quant_of(nodes, p).in_plane_slot;
+        let p_has_post = quant_of(nodes, p).post_add.is_some();
+        let slot = if consumers.len() == 1 && next_quant[p] == Some(consumers[0]) {
+            if p_in == 0 { 1 } else { 0 }
+        } else {
+            let s = next_dedicated;
+            next_dedicated += 1;
+            s
+        };
+        plane_slots = plane_slots.max(slot + 1);
+        for &c in &consumers {
+            let opc = quant_of_mut(nodes, c);
+            opc.in_plane_slot = slot;
+            opc.in_plane_ready = true;
+        }
+        if !f32_read {
+            // no f32 reader anywhere: the tag-slot copies of this
+            // value are dead too
+            for &s in &saves {
+                nodes[s].save = None;
+            }
+        }
+        let (bits, cin, pixel_bytes, plane_bytes) = {
+            let c0 = quant_of(nodes, consumers[0]);
+            (c0.act_bits, c0.cin, c0.pixel_bytes, c0.plane_bytes)
+        };
+        {
+            let opp = quant_of_mut(nodes, p);
+            opp.out_fuse = Some(OutFuse {
+                plane_slot: slot,
+                bits,
+                alpha: f32::from_bits(sig0.1),
+                eps: f32::from_bits(sig0.2),
+                cin,
+                pixel_bytes,
+                plane_bytes,
+                keep_f32: f32_read,
+            });
+        }
+        stats.fused_edges += consumers.len();
+        if consumers.len() > 1 {
+            stats.reuse_hits += consumers.len() - 1;
+        }
+        if !f32_read && !p_has_post {
+            stats.elided_f32 += 1;
+        }
+        // fused traffic: one plane write, plus the f32 staging slot
+        // when a residual add or an f32 reader still needs it
+        let staged = if f32_read || p_has_post { 4 * n_out } else { 0 };
+        stats.act_bytes_fused += staged + plane_bytes as u64;
+    }
+    (plane_slots, stats)
+}
+
 /// Disjoint mutable access to two arena slots.
 fn pair<'a>(
     slots: &'a mut [Vec<f32>],
@@ -778,6 +1158,24 @@ fn pair<'a>(
         (&mut lo[a][..], &mut hi[0][..])
     } else {
         let (lo, hi) = slots.split_at_mut(a);
+        (&mut hi[0][..], &mut lo[b][..])
+    }
+}
+
+/// Disjoint mutable access to two arena planes (a fused producer reads
+/// its input plane while coding the consumer's — the fusion pass
+/// guarantees the slots differ).
+fn plane_pair<'a>(
+    planes: &'a mut [Vec<u8>],
+    a: usize,
+    b: usize,
+) -> (&'a mut [u8], &'a mut [u8]) {
+    debug_assert_ne!(a, b);
+    if a < b {
+        let (lo, hi) = planes.split_at_mut(b);
+        (&mut lo[a][..], &mut hi[0][..])
+    } else {
+        let (lo, hi) = planes.split_at_mut(a);
         (&mut hi[0][..], &mut lo[b][..])
     }
 }
@@ -802,6 +1200,77 @@ fn or_bits(dst: &mut [u8], pos: usize, src: &[u8], nbits: usize) {
     }
 }
 
+/// PACT-quantize `vals` and pack them into `plane` (zeroed first):
+/// identical arithmetic to `quant::quantize_acts_pact`, identical
+/// layout to `quant::pack_acts_subbyte` (one byte-aligned run per
+/// pixel).  Shared by the per-layer quantize pass and the deferred
+/// (post-residual) fused exit, so both code the same bytes.
+fn quantize_into_plane(
+    vals: &[f32],
+    alpha: f32,
+    eps: f32,
+    bits: usize,
+    cin: usize,
+    pixel_bytes: usize,
+    plane: &mut [u8],
+) {
+    plane.fill(0);
+    for (p, pix) in vals.chunks_exact(cin).enumerate() {
+        let base = p * pixel_bytes * 8;
+        for (ci, &v) in pix.iter().enumerate() {
+            let code = ((v.clamp(0.0, alpha)) / eps).round_ties_even() as u32 as u8;
+            let bit = base + ci * bits;
+            plane[bit / 8] |= code << (bit % 8);
+        }
+    }
+}
+
+/// Borrowed fused-exit state for one layer: the consumer's plane
+/// (pre-zeroed per sample) and its coding parameters.
+struct FusedOut<'a> {
+    buf: &'a mut [u8],
+    stride: usize,
+    alpha: f32,
+    eps: f32,
+    bits: usize,
+    cin: usize,
+    pixel_bytes: usize,
+}
+
+impl FusedOut<'_> {
+    /// Code `y` as output element `g` of sample `j` — the exact bytes
+    /// the consumer's own quantize pass would produce from the f32
+    /// slot.  Covers conv→conv (`cin' = cout`: the element's pixel and
+    /// channel fall out of `g`) and →FC (`cin' = K`: one run, pixel 0).
+    #[inline]
+    fn put(&mut self, j: usize, g: usize, y: f32) {
+        let code =
+            ((y.clamp(0.0, self.alpha)) / self.eps).round_ties_even() as u32 as u8;
+        let bit = (g / self.cin) * self.pixel_bytes * 8 + (g % self.cin) * self.bits;
+        self.buf[j * self.stride + bit / 8] |= code << (bit % 8);
+    }
+}
+
+/// Epilogue writeback: the f32 slot (unless elided by fusion) and/or
+/// the consumer's packed plane.
+#[inline]
+fn emit(
+    dst: &mut [f32],
+    dst_stride: usize,
+    write_f32: bool,
+    fused: &mut Option<FusedOut<'_>>,
+    j: usize,
+    g: usize,
+    y: f32,
+) {
+    if write_f32 {
+        dst[j * dst_stride + g] = y;
+    }
+    if let Some(f) = fused {
+        f.put(j, g, y);
+    }
+}
+
 /// One quantized layer on a `B`-sample batch (`B = acc.len()`),
 /// batch-major: quantize all `B` planes → gather `B` packed columns per
 /// output pixel → batched weight-stationary dot → epilogue per sample.
@@ -814,7 +1283,7 @@ fn exec_quant_batch(
     src_stride: usize,
     dst: &mut [f32],
     dst_stride: usize,
-    xplane: &mut [u8],
+    planes: &mut [Vec<u8>],
     plane_stride: usize,
     col: &mut [u8],
     col_stride: usize,
@@ -822,28 +1291,54 @@ fn exec_quant_batch(
     acc_wide: &mut [i64],
 ) {
     let b = acc.len();
-    // PACT quantization of every sample's input buffer, fused with
-    // sub-byte packing (identical arithmetic to
-    // quant::quantize_acts_pact, same layout as quant::pack_acts_subbyte,
-    // pixels byte-aligned): one pass over the batch, PACT scale and
-    // plane geometry read once for all B samples
-    let a = op.act_alpha;
-    let eps = op.act_eps;
     let pxs = op.act_bits as usize;
-    for j in 0..b {
-        let plane = &mut xplane[j * plane_stride..][..op.plane_bytes];
-        plane.fill(0);
-        let src = &src[j * src_stride..];
-        for (p, pix) in src[..op.in_len].chunks_exact(op.cin).enumerate() {
-            let base = p * op.pixel_bytes * 8;
-            for (ci, &v) in pix.iter().enumerate() {
-                let code = ((v.clamp(0.0, a)) / eps).round_ties_even() as u32 as u8;
-                let bit = base + ci * pxs;
-                plane[bit / 8] |= code << (bit % 8);
-            }
+    if !op.in_plane_ready {
+        // PACT quantization of every sample's input buffer, fused with
+        // sub-byte packing: one pass over the batch, PACT scale and
+        // plane geometry read once for all B samples.  Skipped entirely
+        // when a fused producer (or a sibling consumer sharing a saved
+        // plane) already coded this layer's input plane.
+        let xp = &mut planes[op.in_plane_slot][..];
+        for j in 0..b {
+            quantize_into_plane(
+                &src[j * src_stride..][..op.in_len],
+                op.act_alpha,
+                op.act_eps,
+                pxs,
+                op.cin,
+                op.pixel_bytes,
+                &mut xp[j * plane_stride..][..op.plane_bytes],
+            );
         }
     }
-    let xplane = &*xplane;
+    // fused exit: the epilogue codes the consumer's plane in this same
+    // pass (a residual add defers coding to the post-add pass instead,
+    // so the f32 staging slot is always written in that case)
+    let write_f32 = match &op.out_fuse {
+        Some(of) => of.keep_f32 || op.post_add.is_some(),
+        None => true,
+    };
+    let (xplane, mut fused): (&[u8], Option<FusedOut<'_>>) = match &op.out_fuse {
+        Some(of) if op.post_add.is_none() => {
+            let (out, inp) = plane_pair(planes, of.plane_slot, op.in_plane_slot);
+            for j in 0..b {
+                out[j * plane_stride..][..of.plane_bytes].fill(0);
+            }
+            (
+                inp,
+                Some(FusedOut {
+                    buf: out,
+                    stride: plane_stride,
+                    alpha: of.alpha,
+                    eps: of.eps,
+                    bits: of.bits as usize,
+                    cin: of.cin,
+                    pixel_bytes: of.pixel_bytes,
+                }),
+            )
+        }
+        _ => (&planes[op.in_plane_slot][..], None),
+    };
 
     if op.fc {
         // the packed planes ARE the FC columns — the whole batch is
@@ -856,7 +1351,7 @@ fn exec_quant_batch(
                     if op.relu_inline {
                         y = y.max(0.0);
                     }
-                    dst[j * dst_stride + c] = y;
+                    emit(dst, dst_stride, write_f32, &mut fused, j, c, y);
                 }
             }
         }
@@ -895,7 +1390,7 @@ fn exec_quant_batch(
                         if op.relu_inline {
                             y = y.max(0.0);
                         }
-                        dst[j * dst_stride + orow + c] = y;
+                        emit(dst, dst_stride, write_f32, &mut fused, j, orow + c, y);
                     }
                 }
             }
@@ -941,7 +1436,7 @@ fn exec_quant_batch(
                         if op.relu_inline {
                             y = y.max(0.0);
                         }
-                        dst[j * dst_stride + orow + c] = y;
+                        emit(dst, dst_stride, write_f32, &mut fused, j, orow + c, y);
                     }
                 }
             }
@@ -973,7 +1468,7 @@ fn exec_quant_batch(
                         if op.relu_inline {
                             y = y.max(0.0);
                         }
-                        dst[j * dst_stride + orow + c] = y;
+                        emit(dst, dst_stride, write_f32, &mut fused, j, orow + c, y);
                     }
                 }
             }

@@ -65,8 +65,11 @@ pub const MAGIC: [u8; 8] = *b"CWMIXPAK";
 /// Container major version this build reads and writes.
 pub const VERSION_MAJOR: u16 = 1;
 
-/// Container minor version this build writes.
-pub const VERSION_MINOR: u16 = 0;
+/// Container minor version this build writes.  Minor 1 adds the
+/// fused-requantize plan state (`KIND_QUANT_FUSED` node records and the
+/// META fusion extension); minor-0 packs remain fully readable, and
+/// unfused plans still encode byte-identically to minor-0 bodies.
+pub const VERSION_MINOR: u16 = 1;
 
 /// Fixed header bytes before the section table.
 pub const HEADER_LEN: usize = 40;

@@ -37,6 +37,7 @@ use anyhow::{Context, Result};
 use crate::minijson::{parse_bytes, Json};
 
 use super::batcher::SubmitError;
+use super::metrics;
 use super::registry::ModelRegistry;
 
 /// Front-end configuration.
@@ -480,6 +481,9 @@ fn metrics_body(state: &Arc<ServerState>) -> Json {
             o.insert("startup_us".to_string(), Json::num(s.micros as f64));
             if let Some(b) = s.artifact_bytes {
                 o.insert("artifact_bytes".to_string(), Json::num(b as f64));
+            }
+            for (k, v) in metrics::fusion_gauges(e.plan().fusion()) {
+                o.insert(k.to_string(), v);
             }
         }
         models.push((e.name().to_string(), snap));

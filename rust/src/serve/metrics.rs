@@ -207,6 +207,18 @@ impl Metrics {
     }
 }
 
+/// Plan-level fused-requantize gauges for a `/metrics` body: compile-time
+/// facts of the served [`ExecPlan`](crate::engine::ExecPlan), not runtime
+/// counters — they change only when the plan changes, and give an
+/// operator the fusion coverage (`fused edges / total quantized edges`)
+/// and residual-plane reuse the engine is running with.
+pub fn fusion_gauges(f: &crate::engine::FusionStats) -> Vec<(&'static str, Json)> {
+    vec![
+        ("requant_fused_ratio", Json::num(f.fused_ratio())),
+        ("residual_plane_reuse_hits", Json::num(f.reuse_hits as f64)),
+    ]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

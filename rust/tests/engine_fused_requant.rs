@@ -1,0 +1,250 @@
+//! Fused-requantize contract (ISSUE 6): a plan whose producers code
+//! their consumers' packed planes at the epilogue exit is
+//! **bit-identical** to the two-pass plan that materializes every f32
+//! slot and re-quantizes on the consumer side — on all four zoo
+//! geometries × all nine `(p_x, p_w)` combos × every batch size, with
+//! the `reference` backend (which never fuses) and the engine's own
+//! unfused compile (`ExecPlan::compile_with(.., false)`) as oracles.
+//!
+//! Also pinned here: the compile-time [`FusionStats`] the pass reports
+//! (uniform assignments fuse every quantized edge; striped assignments
+//! fall back wherever residual branches disagree on `p_x`), the
+//! residual-plane *reuse* vs *fallback* split on the ic residual
+//! topology, and PACT clip-boundary inputs (exact clip, overshoot,
+//! negatives, half-step ties) through the fused exit.
+
+use cwmix::data::{make_dataset, Split};
+use cwmix::deploy;
+use cwmix::engine::{ExecPlan, FusionStats, PackedBackend, ReferenceBackend};
+use cwmix::models::zoo::{builtin_manifest, stripy_assignment, synthetic_state};
+use cwmix::quant::Assignment;
+
+/// The serve-layer default `BatchPolicy::max_batch`.
+const MAX_BATCH: usize = 8;
+
+/// Degenerate, ragged and full batches.
+const BATCH_SIZES: [usize; 3] = [1, 7, MAX_BATCH];
+
+/// Run `samples` through `plan` per batch size, reusing one arena so a
+/// fused plan's extra plane slots are also exercised for cross-batch
+/// staleness.
+fn batch_outputs(plan: &ExecPlan, samples: &[&[f32]]) -> Vec<Vec<Vec<f32>>> {
+    let mut arena = plan.batch_arena(MAX_BATCH);
+    BATCH_SIZES
+        .iter()
+        .map(|&b| plan.run_batch_planes(&mut arena, &samples[..b]).unwrap())
+        .collect()
+}
+
+/// Fused vs both oracles on `bench`, all nine fixed `(p_x, p_w)`
+/// combos, every batch size.
+fn check_all_nine_combos_fused(bench: &str) {
+    let manifest = builtin_manifest(bench).unwrap();
+    let (params, bn) = synthetic_state(&manifest, 0);
+    let feat = manifest.feat_len();
+    let ds = make_dataset(bench, Split::Test, MAX_BATCH, 13);
+    let samples: Vec<&[f32]> = ds.x.chunks_exact(feat).collect();
+    for xb in [2u32, 4, 8] {
+        for wb in [2u32, 4, 8] {
+            let a = Assignment::fixed(&manifest.qnames(), &manifest.qcouts(), wb, xb);
+            let model = deploy::build(&manifest, &params, &bn, &a).unwrap();
+            let fused = ExecPlan::compile(&model, &manifest.lut, &PackedBackend).unwrap();
+            let unfused =
+                ExecPlan::compile_with(&model, &manifest.lut, &PackedBackend, false)
+                    .unwrap();
+            let reference =
+                ExecPlan::compile(&model, &manifest.lut, &ReferenceBackend).unwrap();
+
+            // the oracles really are unfused; the fused plan really is
+            // fused — uniform assignments make every signature agree,
+            // so coverage must be total
+            assert_eq!(unfused.fusion(), &FusionStats::default());
+            assert_eq!(reference.fusion(), &FusionStats::default());
+            let stats = fused.fusion();
+            assert!(stats.total_edges > 0, "{bench}: no quantized edges");
+            assert_eq!(
+                stats.fused_edges, stats.total_edges,
+                "{bench} w{wb}x{xb}: uniform assignment must fuse every edge"
+            );
+            assert!(
+                stats.act_bytes_fused < stats.act_bytes_unfused,
+                "{bench} w{wb}x{xb}: fusion moved no fewer activation bytes"
+            );
+            assert!(stats.act_bytes_saved() > 0);
+
+            let want = batch_outputs(&unfused, &samples);
+            let got = batch_outputs(&fused, &samples);
+            assert_eq!(
+                got, want,
+                "{bench} w{wb}x{xb}: fused diverged from unfused PackedBackend"
+            );
+            let oracle = batch_outputs(&reference, &samples);
+            assert_eq!(
+                got, oracle,
+                "{bench} w{wb}x{xb}: fused diverged from the reference backend"
+            );
+        }
+    }
+}
+
+#[test]
+fn fused_bit_exact_all_combos_ic() {
+    check_all_nine_combos_fused("ic");
+}
+
+#[test]
+fn fused_bit_exact_all_combos_kws() {
+    check_all_nine_combos_fused("kws");
+}
+
+#[test]
+fn fused_bit_exact_all_combos_vww() {
+    check_all_nine_combos_fused("vww");
+}
+
+#[test]
+fn fused_bit_exact_all_combos_ad() {
+    check_all_nine_combos_fused("ad");
+}
+
+/// Striped per-channel assignments (activation bits cycling 2/4/8 down
+/// the layers): the fusion pass must fall back wherever consumers of a
+/// residual tap disagree on `p_x`, and the result must still be
+/// bit-exact — anchored to the out-of-engine oracle
+/// `mpic::exec::run_sample` on the first two samples.
+#[test]
+fn striped_assignments_fused_match_oracle() {
+    for bench in ["ic", "kws", "vww", "ad"] {
+        let manifest = builtin_manifest(bench).unwrap();
+        let (params, bn) = synthetic_state(&manifest, 0);
+        let a = stripy_assignment(&manifest);
+        let model = deploy::build(&manifest, &params, &bn, &a).unwrap();
+        let feat = manifest.feat_len();
+        let ds = make_dataset(bench, Split::Test, MAX_BATCH, 11);
+        let samples: Vec<&[f32]> = ds.x.chunks_exact(feat).collect();
+        let oracle: Vec<Vec<f32>> = samples[..2]
+            .iter()
+            .map(|s| cwmix::mpic::run_sample(&model, s, &manifest.lut).unwrap().0)
+            .collect();
+        let fused = ExecPlan::compile(&model, &manifest.lut, &PackedBackend).unwrap();
+        let unfused =
+            ExecPlan::compile_with(&model, &manifest.lut, &PackedBackend, false).unwrap();
+        let want = batch_outputs(&unfused, &samples);
+        let got = batch_outputs(&fused, &samples);
+        assert_eq!(got, want, "{bench}: fused striped diverged from unfused");
+        // the full-batch row ties the first two outputs to the oracle
+        assert_eq!(
+            &got[BATCH_SIZES.len() - 1][..2],
+            oracle.as_slice(),
+            "{bench}: fused striped diverged from mpic::exec::run_sample"
+        );
+    }
+}
+
+/// The ic residual topology, both fusion regimes:
+///
+/// * uniform `w8x8` — every consumer of a block-output tap agrees on
+///   `p_x`, so the two conv-shortcut blocks each share one saved packed
+///   plane (2 reuse hits), all 8 quantized edges fuse, and the three
+///   inner `c1` layers (whose values have no f32 reader) skip their f32
+///   slot writes entirely;
+/// * striped — the tap consumers land on different `p_x`, so both
+///   2-consumer groups fall back to the f32 path (4 of 8 edges fuse, no
+///   reuse) and execution stays bit-exact.
+#[test]
+fn residual_plane_reuse_and_fallback() {
+    let manifest = builtin_manifest("ic").unwrap();
+    let (params, bn) = synthetic_state(&manifest, 0);
+    let feat = manifest.feat_len();
+    let ds = make_dataset("ic", Split::Test, MAX_BATCH, 29);
+    let samples: Vec<&[f32]> = ds.x.chunks_exact(feat).collect();
+
+    let a = Assignment::fixed(&manifest.qnames(), &manifest.qcouts(), 8, 8);
+    let model = deploy::build(&manifest, &params, &bn, &a).unwrap();
+    let fused = ExecPlan::compile(&model, &manifest.lut, &PackedBackend).unwrap();
+    let stats = fused.fusion();
+    assert_eq!(stats.total_edges, 8);
+    assert_eq!(stats.fused_edges, 8);
+    assert_eq!(stats.reuse_hits, 2, "one shared plane per conv-shortcut block");
+    assert_eq!(stats.elided_f32, 3, "the three c1 values have no f32 reader");
+    let unfused =
+        ExecPlan::compile_with(&model, &manifest.lut, &PackedBackend, false).unwrap();
+    assert_eq!(
+        batch_outputs(&fused, &samples),
+        batch_outputs(&unfused, &samples),
+        "ic w8x8: plane reuse diverged from the two-pass path"
+    );
+
+    let a = stripy_assignment(&manifest);
+    let model = deploy::build(&manifest, &params, &bn, &a).unwrap();
+    let fused = ExecPlan::compile(&model, &manifest.lut, &PackedBackend).unwrap();
+    let stats = fused.fusion();
+    assert_eq!(stats.total_edges, 8);
+    assert_eq!(
+        stats.fused_edges, 4,
+        "striped tap consumers disagree on p_x: both groups must fall back"
+    );
+    assert_eq!(stats.reuse_hits, 0);
+    let unfused =
+        ExecPlan::compile_with(&model, &manifest.lut, &PackedBackend, false).unwrap();
+    assert_eq!(
+        batch_outputs(&fused, &samples),
+        batch_outputs(&unfused, &samples),
+        "ic striped: residual fallback diverged from the two-pass path"
+    );
+}
+
+/// Inputs crafted at the PACT quantizer's decision boundaries — exact
+/// clip `alpha`, overshoot, negatives, signed zero and `k + 0.5`
+/// half-step ties for every `p_x` step size at the zoo clip
+/// `alpha = 6.0` — where one misplaced rounding or clamp in the fused
+/// exit would flip a code.
+fn boundary_inputs(feat: usize, n: usize) -> Vec<Vec<f32>> {
+    let alpha = 6.0f32;
+    let mut vals = vec![-2.5f32, -0.0, 0.0, alpha, alpha + 3.25, 7.5];
+    for bits in [2u32, 4, 8] {
+        let eps = alpha / ((1u32 << bits) - 1) as f32;
+        for k in [0.5f32, 1.5, 2.5] {
+            vals.push(eps * k);
+        }
+    }
+    (0..n)
+        .map(|i| (0..feat).map(|j| vals[(i + j) % vals.len()]).collect())
+        .collect()
+}
+
+#[test]
+fn clip_boundary_inputs_bit_exact() {
+    for bench in ["ic", "ad"] {
+        let manifest = builtin_manifest(bench).unwrap();
+        let (params, bn) = synthetic_state(&manifest, 0);
+        let feat = manifest.feat_len();
+        let inputs = boundary_inputs(feat, MAX_BATCH);
+        let samples: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+        for xb in [2u32, 4, 8] {
+            for wb in [2u32, 4, 8] {
+                let a =
+                    Assignment::fixed(&manifest.qnames(), &manifest.qcouts(), wb, xb);
+                let model = deploy::build(&manifest, &params, &bn, &a).unwrap();
+                let fused =
+                    ExecPlan::compile(&model, &manifest.lut, &PackedBackend).unwrap();
+                let unfused =
+                    ExecPlan::compile_with(&model, &manifest.lut, &PackedBackend, false)
+                        .unwrap();
+                let got = batch_outputs(&fused, &samples);
+                assert_eq!(
+                    got,
+                    batch_outputs(&unfused, &samples),
+                    "{bench} w{wb}x{xb}: boundary inputs diverged fused vs unfused"
+                );
+                let oracle = cwmix::mpic::run_sample(&model, samples[0], &manifest.lut)
+                    .unwrap()
+                    .0;
+                assert_eq!(
+                    got[0][0], oracle,
+                    "{bench} w{wb}x{xb}: boundary input diverged from the oracle"
+                );
+            }
+        }
+    }
+}

@@ -11,13 +11,14 @@
 use cwmix::data::{make_dataset, Split};
 use cwmix::deploy;
 use cwmix::engine::{
-    inspect, read_provenance, ExecPlan, KernelBackend, PackedBackend, Provenance,
-    ReferenceBackend,
+    inspect, read_provenance, ExecPlan, FusionStats, KernelBackend, PackedBackend,
+    Provenance, ReferenceBackend,
 };
 use cwmix::modelpack::{self, PackError};
 use cwmix::models::zoo::{
     builtin_manifest, stripy_assignment, synthetic_state, BENCHES,
 };
+use cwmix::quant::Assignment;
 
 fn backends() -> [&'static dyn KernelBackend; 2] {
     [&ReferenceBackend, &PackedBackend]
@@ -359,6 +360,109 @@ fn uncovered_channel_groups_are_rejected() {
     bad[ngroups_off..ngroups_off + 4].copy_from_slice(&1u32.to_le_bytes());
     modelpack::reseal(&mut bad);
     assert!(ExecPlan::from_modelpack(&bad).is_err());
+}
+
+/// Fused plans (format minor 1: `KIND_QUANT_FUSED` records + the META
+/// fusion extension) round-trip the *entire* fusion state — plane-slot
+/// layout, per-layer fuse/reuse/elision flags, coverage stats — and the
+/// loaded plan executes bit-identically, batched and per sample.
+#[test]
+fn fused_plan_roundtrip_preserves_fusion_state() {
+    for bench in BENCHES {
+        let manifest = builtin_manifest(bench).unwrap();
+        let (params, bn) = synthetic_state(&manifest, 0);
+        // uniform assignment: every quantized edge fuses (and ic's
+        // residual taps share planes), the richest fusion state
+        let a = Assignment::fixed(&manifest.qnames(), &manifest.qcouts(), 8, 8);
+        let model = deploy::build(&manifest, &params, &bn, &a).unwrap();
+        let plan = ExecPlan::compile(&model, &manifest.lut, &PackedBackend).unwrap();
+        assert!(plan.fusion().fused_edges > 0, "{bench}: nothing fused");
+
+        let pack = plan.to_modelpack();
+        let loaded = ExecPlan::from_modelpack(&pack)
+            .unwrap_or_else(|e| panic!("{bench}: {e}"));
+        assert_eq!(loaded.fusion(), plan.fusion(), "{bench}: stats diverged");
+        let rep = inspect(&pack).unwrap();
+        assert_eq!(&rep.fusion, plan.fusion());
+        assert!(rep.plane_slots > 1, "{bench}: fused plan needs extra planes");
+        assert!(rep.layers.iter().any(|l| l.fused_out));
+
+        let feat = manifest.feat_len();
+        let ds = make_dataset(bench, Split::Test, 4, 3);
+        let samples: Vec<&[f32]> = ds.x.chunks_exact(feat).collect();
+        let want = plan.run_samples(&samples, 1).unwrap();
+        assert_eq!(loaded.run_samples(&samples, 1).unwrap(), want, "{bench}");
+        let mut arena = loaded.batch_arena(samples.len());
+        let got = loaded.run_batch_planes(&mut arena, &samples).unwrap();
+        assert_eq!(got, want, "{bench}: loaded fused batch planes diverged");
+    }
+}
+
+/// Byte-flip sweep over a *fused* pack's PLAN and META sections (the
+/// new record kind and the fusion extension): the loader must return a
+/// typed error or a plan whose execution validation proved safe —
+/// never panic.
+#[test]
+fn fused_pack_semantic_corruption_never_panics() {
+    let (_, plan) = compiled("ad", &PackedBackend);
+    assert!(plan.fusion().fused_edges > 0, "ad/packed must fuse");
+    let pack = plan.to_modelpack();
+    let container = modelpack::Container::parse(&pack).unwrap();
+    let mut targets = Vec::new();
+    for kind in [modelpack::SECTION_META, modelpack::SECTION_PLAN] {
+        let s = container.find(kind).unwrap();
+        targets.extend(s.off..s.off + s.len);
+    }
+    for pos in targets {
+        let mut bad = pack.clone();
+        bad[pos] ^= 0x01;
+        modelpack::reseal(&mut bad);
+        if let Ok(p) = ExecPlan::from_modelpack(&bad) {
+            let feat = p.feat();
+            if feat == plan.feat() {
+                let ds = make_dataset("ad", Split::Test, 1, 0);
+                let mut arena = p.arena();
+                let _ = p.run_sample(&mut arena, &ds.x[..feat]);
+            }
+        }
+    }
+}
+
+/// A minor-0 pack (written before fused requantize existed) must still
+/// load and execute.  An unfused plan's body encodes byte-identically
+/// to the minor-0 format, so stamping the old version onto one
+/// reproduces a genuine old artifact.
+#[test]
+fn minor_zero_unfused_packs_load_and_execute() {
+    let manifest = builtin_manifest("kws").unwrap();
+    let (params, bn) = synthetic_state(&manifest, 0);
+    let a = stripy_assignment(&manifest);
+    let model = deploy::build(&manifest, &params, &bn, &a).unwrap();
+    let plan =
+        ExecPlan::compile_with(&model, &manifest.lut, &PackedBackend, false).unwrap();
+    assert_eq!(plan.fusion(), &FusionStats::default());
+
+    let mut pack = plan.to_modelpack();
+    pack[10] = 0; // version_minor lives at header bytes 10..12
+    pack[11] = 0;
+    modelpack::reseal(&mut pack);
+    let loaded = ExecPlan::from_modelpack(&pack).unwrap();
+    assert_eq!(loaded.fusion(), &FusionStats::default());
+    let rep = inspect(&pack).unwrap();
+    assert_eq!(rep.version, (1, 0));
+    assert_eq!(rep.plane_slots, 1);
+    assert!(rep.layers.iter().all(|l| !l.fused_out && !l.plane_reused));
+
+    // and it computes exactly what today's fused compile computes
+    let fused = ExecPlan::compile(&model, &manifest.lut, &PackedBackend).unwrap();
+    let feat = manifest.feat_len();
+    let ds = make_dataset("kws", Split::Test, 4, 3);
+    let samples: Vec<&[f32]> = ds.x.chunks_exact(feat).collect();
+    assert_eq!(
+        loaded.run_samples(&samples, 1).unwrap(),
+        fused.run_samples(&samples, 1).unwrap(),
+        "minor-0 pack diverged from the fused engine"
+    );
 }
 
 #[test]
