@@ -61,6 +61,54 @@ struct LoadStats {
     requests_per_connection: f64,
 }
 
+/// Supervision gauges scraped from `/metrics` at the end of a config's
+/// load run (server still up).  The bench runs with faults disarmed, so
+/// every counter must be zero and the breaker closed — recording them
+/// in the trajectory makes a supervision regression (a spurious panic
+/// or deadline expiry under plain load) visible in the artifact diff.
+struct SupervisionGauges {
+    worker_panics: f64,
+    worker_respawns: f64,
+    deadline_expired: f64,
+    breaker_state: f64,
+    breaker_opens: f64,
+    slow_client_closes: f64,
+}
+
+/// Scrape + sanity-check the supervision surface for `BENCH`.
+fn scrape_supervision(addr: SocketAddr) -> anyhow::Result<SupervisionGauges> {
+    let mut conn = Conn::connect(addr)?;
+    let m = conn.get("/metrics")?;
+    anyhow::ensure!(m.status == 200, "GET /metrics -> {}", m.status);
+    let model = m.body.get("models")?.get(BENCH)?;
+    let g = SupervisionGauges {
+        worker_panics: model.get("worker_panics")?.as_f64()?,
+        worker_respawns: model.get("worker_respawns")?.as_f64()?,
+        deadline_expired: model.get("deadline_expired_total")?.as_f64()?,
+        breaker_state: model.get("breaker_state")?.as_f64()?,
+        breaker_opens: model.get("breaker_opens")?.as_f64()?,
+        slow_client_closes: m.body.get("slow_client_closes")?.as_f64()?,
+    };
+    // disarmed faults must be perfect no-ops under load
+    anyhow::ensure!(
+        g.worker_panics == 0.0 && g.worker_respawns == 0.0,
+        "worker panicked during a disarmed bench run \
+         (panics {}, respawns {})",
+        g.worker_panics,
+        g.worker_respawns
+    );
+    anyhow::ensure!(
+        g.breaker_state == 0.0 && g.breaker_opens == 0.0,
+        "breaker not closed after a disarmed bench run"
+    );
+    anyhow::ensure!(
+        g.deadline_expired == 0.0,
+        "{} requests expired their deadline under plain load",
+        g.deadline_expired
+    );
+    Ok(g)
+}
+
 /// Drive `clients` closed-loop clients x `reqs` requests each, every
 /// client pipelining all its requests down one keep-alive connection
 /// (reconnecting — and counting it — only if the server drops the
@@ -155,7 +203,7 @@ fn run_config(
     want: &Arc<Vec<f32>>,
     clients: usize,
     reqs: usize,
-) -> anyhow::Result<LoadStats> {
+) -> anyhow::Result<(LoadStats, SupervisionGauges)> {
     let reg_cfg = RegistryConfig {
         benches: vec![BENCH.to_string()],
         policy,
@@ -169,11 +217,16 @@ fn run_config(
     };
     let server = serve(registry, cfg)?;
     let stats = run_load(server.addr(), Arc::clone(body), Arc::clone(want), clients, reqs);
+    // scrape the supervision surface before the server goes away
+    let gauges = match &stats {
+        Ok(_) => Some(scrape_supervision(server.addr())?),
+        Err(_) => None,
+    };
     server.stop()?;
-    stats
+    Ok((stats?, gauges.expect("gauges scraped on success")))
 }
 
-fn stats_json(s: &LoadStats, policy: &BatchPolicy) -> Json {
+fn stats_json(s: &LoadStats, g: &SupervisionGauges, policy: &BatchPolicy) -> Json {
     Json::obj(vec![
         ("max_batch", Json::num(policy.max_batch as f64)),
         ("max_wait_us", Json::num(policy.max_wait_us as f64)),
@@ -184,6 +237,15 @@ fn stats_json(s: &LoadStats, policy: &BatchPolicy) -> Json {
         ("max_batch_seen", Json::num(s.max_batch_seen as f64)),
         ("connections_opened", Json::num(s.connections_opened as f64)),
         ("requests_per_connection", Json::num(s.requests_per_connection)),
+        // supervision gauges (all zero on a healthy disarmed run —
+        // scrape_supervision hard-fails otherwise; recorded so the
+        // trajectory artifact documents that invariant)
+        ("worker_panics", Json::num(g.worker_panics)),
+        ("worker_respawns", Json::num(g.worker_respawns)),
+        ("deadline_expired_total", Json::num(g.deadline_expired)),
+        ("breaker_state", Json::num(g.breaker_state)),
+        ("breaker_opens", Json::num(g.breaker_opens)),
+        ("slow_client_closes", Json::num(g.slow_client_closes)),
     ])
 }
 
@@ -229,8 +291,10 @@ fn main() -> anyhow::Result<()> {
         ..BatchPolicy::default()
     };
 
-    let batch1 = run_config(batch1_policy.clone(), &body, &want, clients, reqs)?;
-    let micro = run_config(micro_policy.clone(), &body, &want, clients, reqs)?;
+    let (batch1, batch1_sup) =
+        run_config(batch1_policy.clone(), &body, &want, clients, reqs)?;
+    let (micro, micro_sup) =
+        run_config(micro_policy.clone(), &body, &want, clients, reqs)?;
 
     let speedup = micro.throughput_rps / batch1.throughput_rps;
     println!(
@@ -264,14 +328,18 @@ fn main() -> anyhow::Result<()> {
             micro.mean_batch
         );
     }
+    println!(
+        "    supervision (disarmed run): 0 panics, 0 respawns, breaker \
+         closed, 0 deadline expiries — gauges recorded in the trajectory"
+    );
 
     let report = Json::obj(vec![
         ("version", Json::num(1.0)),
         ("bench", Json::str(BENCH)),
         ("concurrency", Json::num(clients as f64)),
         ("reqs_per_client", Json::num(reqs as f64)),
-        ("batch1", stats_json(&batch1, &batch1_policy)),
-        ("micro_batch", stats_json(&micro, &micro_policy)),
+        ("batch1", stats_json(&batch1, &batch1_sup, &batch1_policy)),
+        ("micro_batch", stats_json(&micro, &micro_sup, &micro_policy)),
         ("speedup_microbatch_vs_batch1", Json::num(speedup)),
     ]);
     let path = out_path();

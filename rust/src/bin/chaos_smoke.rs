@@ -1,0 +1,189 @@
+//! CI chaos client for `cwmix serve` under an armed fault plan.
+//!
+//! ```bash
+//! CWMIX_FAULTS=engine_panic:ic:once cwmix serve --addr 127.0.0.1:0 &
+//! cargo run --release --bin chaos_smoke -- 127.0.0.1:<port> ic
+//! ```
+//!
+//! The acceptance sequence for supervised serving, run against a real
+//! server process (the library-level equivalents live in
+//! `tests/serve_chaos.rs` — this binary proves the same story holds
+//! across a process boundary with the fault plan armed via the env
+//! var):
+//!
+//! 1. `/readyz` answers 200 with every breaker closed.
+//! 2. The first infer on the faulted model rides the injected panic —
+//!    an explicit 5xx, never a hang, never a dead server.
+//! 3. `/metrics` shows the supervisor at work: `worker_panics` = 1,
+//!    `worker_respawns` ≥ 1 for the faulted model (polled — the
+//!    respawn races the 5xx reply by a backoff).
+//! 4. Post-respawn infers on the faulted model are **bit-identical**
+//!    to a locally compiled `ExecPlan::run_sample` — the respawned
+//!    worker's fresh arena serves the same numerics.
+//! 5. Every other model serves bit-identically with zero panics: the
+//!    failure domain is one worker, not the process.
+//! 6. The breaker stayed closed (one panic < K) and the supervision
+//!    gauges are all present for the scrape.
+//! 7. `/admin/shutdown` answers 200; the harness script asserts the
+//!    server process itself exits 0.
+//!
+//! Exit code 0 = every check passed.
+
+use std::net::{SocketAddr, ToSocketAddrs};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use cwmix::data::{make_dataset, Split};
+use cwmix::minijson::Json;
+use cwmix::serve::client::{infer_body, output_of, Conn};
+use cwmix::serve::{ModelRegistry, RegistryConfig};
+
+fn gauge(metrics: &Json, bench: &str, key: &str) -> Result<f64> {
+    metrics.get("models")?.get(bench)?.get(key)?.as_f64()
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (addr, faulted) = match args.as_slice() {
+        [addr] => (addr.clone(), "ic".to_string()),
+        [addr, faulted] => (addr.clone(), faulted.clone()),
+        _ => bail!("usage: chaos_smoke <host:port> [faulted-model]"),
+    };
+    let addr: SocketAddr = addr
+        .to_socket_addrs()
+        .with_context(|| format!("resolving {addr}"))?
+        .next()
+        .context("no address")?;
+
+    let mut conn = Conn::connect(addr)?;
+    let models = conn.get("/v1/models")?;
+    if models.status != 200 {
+        bail!("GET /v1/models -> {}", models.status);
+    }
+    let served: Vec<String> = models
+        .body
+        .get("models")?
+        .as_arr()?
+        .iter()
+        .map(|m| m.get("name").and_then(|n| n.as_str().map(str::to_string)))
+        .collect::<Result<_>>()?;
+    if !served.contains(&faulted) {
+        bail!("server does not serve the faulted model {faulted:?}: {served:?}");
+    }
+    println!(
+        "chaos_smoke: {} model(s), faulted={faulted}: {}",
+        served.len(),
+        served.join(", ")
+    );
+
+    // 1. healthy + ready before the fault fires
+    let rz = conn.get("/readyz")?;
+    if rz.status != 200 {
+        bail!("GET /readyz -> {} before any fault", rz.status);
+    }
+
+    // local oracle: the server's default registry construction
+    let reg_cfg = RegistryConfig { benches: served.clone(), ..RegistryConfig::default() };
+    let local = ModelRegistry::build(&reg_cfg)?;
+    let expected = |bench: &str| -> Result<(Vec<f32>, Vec<f32>)> {
+        let plan = local.get(bench).context("local registry missing bench")?.plan();
+        let feat = plan.feat();
+        let ds = make_dataset(bench, Split::Test, 1, 0);
+        let input = ds.x[..feat].to_vec();
+        let mut arena = plan.arena();
+        let want = plan.run_sample(&mut arena, &input)?;
+        Ok((input, want))
+    };
+
+    // 2. the injected panic: an explicit error reply, not a dead server
+    let (input, want) = expected(&faulted)?;
+    let r = conn.post(&format!("/v1/infer/{faulted}"), &infer_body(&input))?;
+    if r.status < 500 {
+        bail!(
+            "{faulted}: first infer should ride the injected panic, got {}: {}",
+            r.status,
+            r.body.dumps()
+        );
+    }
+    println!("  {faulted}: injected panic answered {} (explicit, no hang)", r.status);
+
+    // 3. the supervisor respawned the worker (poll: the respawn lags
+    //    the error reply by the backoff)
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let m = conn.get("/metrics")?;
+        if m.status != 200 {
+            bail!("GET /metrics -> {}", m.status);
+        }
+        if gauge(&m.body, &faulted, "worker_respawns")? >= 1.0 {
+            let panics = gauge(&m.body, &faulted, "worker_panics")?;
+            if panics != 1.0 {
+                bail!("{faulted}: worker_panics {panics}, expected exactly 1");
+            }
+            break;
+        }
+        if Instant::now() > deadline {
+            bail!("{faulted}: worker never respawned (metrics: {})", m.body.dumps());
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    println!("  {faulted}: worker respawned");
+
+    // 4. recovery is bit-identical to the local oracle
+    let r = conn.post(&format!("/v1/infer/{faulted}"), &infer_body(&input))?;
+    if r.status != 200 {
+        bail!("{faulted}: post-respawn infer -> {}: {}", r.status, r.body.dumps());
+    }
+    if output_of(&r.body)? != want {
+        bail!("{faulted}: post-respawn output diverged from ExecPlan::run_sample");
+    }
+    println!("  {faulted}: post-respawn reply bit-identical");
+
+    // 5. the failure domain was one worker: every other model clean
+    let m = conn.get("/metrics")?;
+    for bench in served.iter().filter(|b| **b != faulted) {
+        let (input, want) = expected(bench)?;
+        let r = conn.post(&format!("/v1/infer/{bench}"), &infer_body(&input))?;
+        if r.status != 200 {
+            bail!("{bench}: infer -> {}: {}", r.status, r.body.dumps());
+        }
+        if output_of(&r.body)? != want {
+            bail!("{bench}: output diverged from ExecPlan::run_sample");
+        }
+        let panics = gauge(&m.body, bench, "worker_panics")?;
+        if panics != 0.0 {
+            bail!("{bench}: worker_panics {panics} on an unfaulted model");
+        }
+        println!("  {bench}: unaffected, bit-identical");
+    }
+
+    // 6. breaker gauges: closed (one panic < K), present for scrapes
+    let m = conn.get("/metrics")?;
+    for (key, val) in
+        [("breaker_state", 0.0), ("breaker_opens", 0.0), ("deadline_expired_total", 0.0)]
+    {
+        let got = gauge(&m.body, &faulted, key)?;
+        if got != val {
+            bail!("{faulted}: {key} = {got}, expected {val}");
+        }
+    }
+    let name = m
+        .body
+        .get("models")?
+        .get(&faulted)?
+        .get("breaker_state_name")?
+        .as_str()?
+        .to_string();
+    if name != "closed" {
+        bail!("{faulted}: breaker_state_name {name:?}, expected \"closed\"");
+    }
+
+    // 7. clean shutdown (the harness asserts the process exits 0)
+    let bye = conn.post("/admin/shutdown", "")?;
+    if bye.status != 200 {
+        bail!("POST /admin/shutdown -> {}", bye.status);
+    }
+    println!("chaos_smoke: all checks passed, shutdown requested");
+    Ok(())
+}

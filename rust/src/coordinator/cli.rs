@@ -121,16 +121,26 @@ COMMANDS
   serve    [--benches ic,kws,vww,ad] [--addr 127.0.0.1:8080]
            [--backend packed|reference] [--assignment stripy|wNxM]
            [--max-batch 8] [--max-wait-us 2000] [--queue-cap 256]
-           [--threads N] [--artifacts artifacts]
-           [--modelpack-dir DIR]
+           [--threads N] [--infer-budget-us 30000000]
+           [--artifacts artifacts] [--modelpack-dir DIR]
+           [--breaker-k 3] [--breaker-cooldown-ms 1000]
+           [--faults SPEC] [--faults-seed 0]
            Resident multi-model inference server: one ExecPlan per
            bench at startup — cold-loaded from DIR/<bench>.cwm when
            --modelpack-dir is given (falling back to compile on a
            missing or unusable pack) — micro-batches concurrent POST
-           /v1/infer/<bench> requests, exposes GET /v1/models and
-           GET /metrics; POST /admin/shutdown exits cleanly.  Pure
-           Rust, builtin zoo.  --addr with port 0 picks a free port
-           (printed on stdout).
+           /v1/infer/<bench> requests, exposes GET /v1/models,
+           GET /healthz, GET /readyz and GET /metrics; POST
+           /admin/shutdown drains and exits cleanly.  Workers are
+           supervised: an engine panic respawns the worker (bounded
+           backoff); --breaker-k consecutive panics open a per-model
+           circuit breaker (503 + Retry-After).  Every request gets a
+           max_wait + infer-budget deadline (expired -> 504).
+           --faults arms deterministic failpoints for chaos testing
+           (kind:model:trigger[:ms], see serve/faults.rs; also via
+           CWMIX_FAULTS / CWMIX_FAULTS_SEED).  Pure Rust, builtin
+           zoo.  --addr with port 0 picks a free port (printed on
+           stdout).
   report   [--dir results]
            Render every stored sweep as a Fig.3 panel + headline savings.
   lut      Print the MPIC C(p_x, p_w) energy/latency tables.
@@ -555,7 +565,9 @@ fn cmd_inspect(flags: &HashMap<String, String>) -> Result<()> {
 /// Resident multi-model inference server (pure Rust, builtin zoo).
 /// Blocks until `POST /admin/shutdown`, then drains and exits cleanly.
 fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
-    use crate::serve::{self, BatchPolicy, ModelRegistry, RegistryConfig, ServeConfig};
+    use crate::serve::{
+        self, BatchPolicy, Faults, ModelRegistry, RegistryConfig, ServeConfig,
+    };
     use std::sync::Arc;
 
     let mut policy = BatchPolicy::default();
@@ -571,11 +583,38 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     if let Some(v) = flags.get("threads") {
         policy.threads = v.parse().map_err(|e| anyhow!("bad --threads: {e}"))?;
     }
+    if let Some(v) = flags.get("infer-budget-us") {
+        policy.infer_budget_us =
+            v.parse().map_err(|e| anyhow!("bad --infer-budget-us: {e}"))?;
+    }
+    // fault plan: the --faults flag wins over CWMIX_FAULTS
+    let faults = match flags.get("faults") {
+        Some(spec) => {
+            let seed = match flags.get("faults-seed") {
+                Some(s) => s.parse().map_err(|e| anyhow!("bad --faults-seed: {e}"))?,
+                None => 0,
+            };
+            Arc::new(Faults::parse(spec, seed).map_err(|e| anyhow!("bad --faults: {e:#}"))?)
+        }
+        None => Faults::from_env()?,
+    };
+    if faults.armed() {
+        println!("fault plan armed: {}", faults.describe());
+    }
     let mut reg_cfg = RegistryConfig {
         artifacts: artifacts_dir(flags),
         policy,
+        faults: Arc::clone(&faults),
         ..RegistryConfig::default()
     };
+    if let Some(v) = flags.get("breaker-k") {
+        reg_cfg.supervisor.breaker_k =
+            v.parse().map_err(|e| anyhow!("bad --breaker-k: {e}"))?;
+    }
+    if let Some(v) = flags.get("breaker-cooldown-ms") {
+        reg_cfg.supervisor.cooldown_ms =
+            v.parse().map_err(|e| anyhow!("bad --breaker-cooldown-ms: {e}"))?;
+    }
     if let Some(b) = flags.get("benches") {
         reg_cfg.benches = b.split(',').map(|s| s.trim().to_string()).collect();
     }
@@ -605,7 +644,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         );
     }
 
-    let mut cfg = ServeConfig::default();
+    let mut cfg = ServeConfig { faults, ..ServeConfig::default() };
     if let Some(a) = flags.get("addr") {
         cfg.addr = a.clone();
     }

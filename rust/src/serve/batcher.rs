@@ -1,9 +1,10 @@
-//! Dynamic micro-batching over one precompiled `ExecPlan`.
+//! Dynamic micro-batching over one precompiled `ExecPlan`, under
+//! supervision.
 //!
 //! Every model entry owns one [`Batcher`]: a bounded MPSC queue plus a
-//! dedicated worker thread that coalesces pending single-sample requests
-//! into one batch-plane engine call.  The policy is the classic
-//! two-knob one:
+//! dedicated worker thread that coalesces pending single-sample
+//! requests into one batch-plane engine call.  The policy is the
+//! classic two-knob one:
 //!
 //! * **`max_batch`** — execute as soon as this many requests are
 //!   pending;
@@ -18,22 +19,43 @@
 //! borrowed in place (`&[f32]` list, no contiguous-slab copy), and with
 //! `threads <= 1` the worker runs [`ExecPlan::run_batch_planes`]
 //! against its own **resident batch arena** — no per-batch allocation
-//! at all.  Inside that pass the engine quantizes all riders' activation
-//! planes in one sweep and rides each decoded weight word across every
-//! rider's column, so unrelated requests amortise exactly like a
-//! training-style batch.
+//! at all.
 //!
-//! **Admission control:** the queue is bounded (`queue_cap`).  A submit
-//! against a full queue is *shed* — the caller gets
-//! [`SubmitError::Overloaded`] immediately and the HTTP layer answers
-//! `503` instead of letting latency grow without bound.
+//! **Request lifecycle (this is the robustness surface):**
+//!
+//! * *Admission*: the queue is bounded (`queue_cap`); a full queue
+//!   sheds with [`SubmitError::Overloaded`] → HTTP 503.  A model whose
+//!   circuit breaker is open refuses with
+//!   [`SubmitError::BreakerOpen`] → 503 + `Retry-After`.  Wrong-length
+//!   inputs are refused at the door.
+//! * *Deadline*: every admitted request carries
+//!   `enqueued + max_wait_us + infer_budget_us`.  Expired requests are
+//!   answered [`ReplyError::Expired`] (HTTP 504) **at dequeue**,
+//!   without riding a batch — a stalled worker sheds its backlog as
+//!   explicit timeouts instead of executing work nobody is waiting for.
+//! * *Supervision*: the worker runs under
+//!   [`supervisor::supervise`] — an engine panic fails only the
+//!   in-flight batch (riders observe a dropped reply channel → HTTP
+//!   500), the worker respawns with a **fresh arena** after bounded
+//!   backoff, and `breaker_k` consecutive panics open the per-model
+//!   circuit breaker.  All queue locking is poison-free
+//!   ([`lock_unpoisoned`]), so a panicking worker can never cascade
+//!   panics into HTTP threads that merely touch the queue.
+//! * *Shutdown*: drain-then-close.  The worker executes everything
+//!   admitted before exiting, and [`Batcher::shutdown`] serves any
+//!   request that raced in behind the worker's exit — an admitted
+//!   request gets a real reply or an explicit
+//!   [`ReplyError::ShuttingDown`], never a dropped sender.
 //!
 //! Batched outputs are bit-identical to per-sample
 //! [`ExecPlan::run_sample`] calls by the engine's batch-plane contract
 //! (`tests/serve_batcher.rs` asserts it end-to-end, including that a
-//! coalesced batch equals N independent single-sample requests).
+//! coalesced batch equals N independent single-sample requests;
+//! `tests/serve_chaos.rs` asserts the replies stay bit-identical
+//! *across a worker respawn*).
 
 use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
@@ -41,7 +63,12 @@ use std::time::{Duration, Instant};
 
 use crate::engine::{Arena, ExecPlan, MAX_BATCH_CHUNK};
 
+use super::faults::{EngineFault, Faults};
 use super::metrics::Metrics;
+use super::supervisor::{
+    self, lock_unpoisoned, wait_timeout_unpoisoned, wait_unpoisoned, Supervision,
+    SupervisorCfg,
+};
 
 /// Micro-batching policy knobs.
 #[derive(Clone, Debug)]
@@ -57,6 +84,10 @@ pub struct BatchPolicy {
     /// so small coalesced batches keep their weight-stationary
     /// amortization instead of being sharded into single-sample passes.
     pub threads: usize,
+    /// Post-queue execution budget: a request's deadline is
+    /// `enqueued + max_wait_us + infer_budget_us`, enforced at dequeue
+    /// (expired requests answer 504 without riding a batch).
+    pub infer_budget_us: u64,
 }
 
 impl Default for BatchPolicy {
@@ -66,6 +97,35 @@ impl Default for BatchPolicy {
             max_wait_us: 2_000,
             queue_cap: 256,
             threads: std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1),
+            infer_budget_us: 30_000_000,
+        }
+    }
+}
+
+impl BatchPolicy {
+    /// The full per-request deadline window (queue wait + execution).
+    pub fn deadline(&self) -> Duration {
+        Duration::from_micros(self.max_wait_us.saturating_add(self.infer_budget_us))
+    }
+}
+
+/// Non-policy worker wiring: identity, fault plan, supervision knobs.
+#[derive(Clone)]
+pub struct WorkerOpts {
+    /// Model name — fault matching, log lines, breaker gauges.
+    pub model: String,
+    /// Fault-injection plan (disarmed by default).
+    pub faults: Arc<Faults>,
+    /// Supervision knobs (breaker K, cooldowns, respawn backoff).
+    pub supervisor: SupervisorCfg,
+}
+
+impl Default for WorkerOpts {
+    fn default() -> WorkerOpts {
+        WorkerOpts {
+            model: "model".to_string(),
+            faults: Faults::disarmed(),
+            supervisor: SupervisorCfg::default(),
         }
     }
 }
@@ -83,6 +143,13 @@ pub struct InferReply {
 pub enum SubmitError {
     /// Queue full — request shed (HTTP 503).
     Overloaded,
+    /// Circuit breaker open after repeated worker panics — refuse with
+    /// a retry hint instead of queueing into a known-bad model
+    /// (HTTP 503 + `Retry-After`).
+    BreakerOpen {
+        /// Seconds until the breaker half-opens.
+        retry_after_s: u64,
+    },
     /// Batcher is shutting down.
     ShuttingDown,
     /// Input failed validation (wrong length) — never enqueued, so one
@@ -94,19 +161,45 @@ impl std::fmt::Display for SubmitError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             SubmitError::Overloaded => write!(f, "queue full, request shed"),
+            SubmitError::BreakerOpen { retry_after_s } => {
+                write!(f, "circuit breaker open, retry in {retry_after_s}s")
+            }
             SubmitError::ShuttingDown => write!(f, "server shutting down"),
             SubmitError::BadInput(m) => write!(f, "bad input: {m}"),
         }
     }
 }
 
-/// What the worker sends back: the reply or an engine error string.
-pub type ReplyResult = Result<InferReply, String>;
+/// Why an *admitted* request got an error reply.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ReplyError {
+    /// Deadline passed before the request could ride a batch
+    /// (HTTP 504).
+    Expired,
+    /// Shutdown landed before the request could execute (HTTP 503).
+    ShuttingDown,
+    /// The engine call failed (HTTP 500).
+    Engine(String),
+}
+
+impl std::fmt::Display for ReplyError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ReplyError::Expired => write!(f, "deadline exceeded before execution"),
+            ReplyError::ShuttingDown => write!(f, "server shutting down"),
+            ReplyError::Engine(m) => write!(f, "engine error: {m}"),
+        }
+    }
+}
+
+/// What the worker sends back: the reply or a typed error.
+pub type ReplyResult = Result<InferReply, ReplyError>;
 
 struct Pending {
     input: Vec<f32>,
     reply: mpsc::Sender<ReplyResult>,
     enqueued: Instant,
+    deadline: Instant,
 }
 
 struct Shared {
@@ -116,17 +209,25 @@ struct Shared {
     policy: BatchPolicy,
     plan: Arc<ExecPlan>,
     metrics: Arc<Metrics>,
+    model: String,
+    faults: Arc<Faults>,
+    sup: Supervision,
 }
 
-/// Bounded queue + coalescing worker for one model.
+/// Bounded queue + supervised coalescing worker for one model.
 pub struct Batcher {
     shared: Arc<Shared>,
     worker: Mutex<Option<std::thread::JoinHandle<()>>>,
 }
 
 impl Batcher {
-    /// Spawn the coalescing worker for `plan`.
-    pub fn start(plan: Arc<ExecPlan>, metrics: Arc<Metrics>, policy: BatchPolicy) -> Batcher {
+    /// Spawn the supervised coalescing worker for `plan`.
+    pub fn start(
+        plan: Arc<ExecPlan>,
+        metrics: Arc<Metrics>,
+        policy: BatchPolicy,
+        opts: WorkerOpts,
+    ) -> Batcher {
         let shared = Arc::new(Shared {
             queue: Mutex::new(VecDeque::new()),
             notify: Condvar::new(),
@@ -134,19 +235,32 @@ impl Batcher {
             policy,
             plan,
             metrics,
+            model: opts.model,
+            faults: opts.faults,
+            sup: Supervision::new(opts.supervisor),
         });
         let w = Arc::clone(&shared);
         let worker = std::thread::Builder::new()
             .name("cwmix-batcher".into())
-            .spawn(move || worker_loop(&w))
+            .spawn(move || {
+                let s = Arc::clone(&w);
+                supervisor::supervise(
+                    &w.model,
+                    &w.sup,
+                    &w.metrics,
+                    || w.shutdown.load(Ordering::Acquire),
+                    move || worker_loop(&s),
+                );
+            })
             .expect("spawning batcher worker");
         Batcher { shared, worker: Mutex::new(Some(worker)) }
     }
 
     /// Enqueue one sample.  Returns the reply channel, or refuses at
-    /// the door (shed / shutdown / bad input).  The worker always
-    /// answers every admitted request, so `recv()` on the returned
-    /// channel cannot deadlock while the batcher is alive.
+    /// the door (shed / breaker / shutdown / bad input).  Every
+    /// admitted request is answered — by the worker, or by the
+    /// shutdown drain — so `recv()` on the returned channel cannot
+    /// deadlock while the batcher is alive.
     pub fn submit(&self, input: Vec<f32>) -> Result<mpsc::Receiver<ReplyResult>, SubmitError> {
         let feat = self.shared.plan.feat();
         if input.len() != feat {
@@ -155,13 +269,21 @@ impl Batcher {
                 input.len()
             )));
         }
+        if let Err(retry_after_s) = self.shared.sup.admit() {
+            self.shared.metrics.record_breaker_reject();
+            return Err(SubmitError::BreakerOpen { retry_after_s });
+        }
+        if self.shared.faults.queue_full(&self.shared.model) {
+            self.shared.metrics.record_shed();
+            return Err(SubmitError::Overloaded);
+        }
         let (tx, rx) = mpsc::channel();
         {
             // the shutdown check happens under the queue lock: shutdown()
             // drains the queue under the same lock *after* setting the
             // flag, so a request can never slip in unanswered behind the
             // worker's exit
-            let mut q = self.shared.queue.lock().unwrap();
+            let mut q = lock_unpoisoned(&self.shared.queue);
             if self.shared.shutdown.load(Ordering::Acquire) {
                 return Err(SubmitError::ShuttingDown);
             }
@@ -169,7 +291,13 @@ impl Batcher {
                 self.shared.metrics.record_shed();
                 return Err(SubmitError::Overloaded);
             }
-            q.push_back(Pending { input, reply: tx, enqueued: Instant::now() });
+            let now = Instant::now();
+            q.push_back(Pending {
+                input,
+                reply: tx,
+                enqueued: now,
+                deadline: now + self.shared.policy.deadline(),
+            });
         }
         self.shared.metrics.record_request();
         self.shared.notify.notify_one();
@@ -178,22 +306,46 @@ impl Batcher {
 
     /// Pending queue depth (diagnostics / tests).
     pub fn queued(&self) -> usize {
-        self.shared.queue.lock().unwrap().len()
+        lock_unpoisoned(&self.shared.queue).len()
+    }
+
+    /// Supervision state: panic/respawn counters + breaker (gauges for
+    /// `/metrics` and `/readyz`).
+    pub fn supervision(&self) -> &Supervision {
+        &self.shared.sup
     }
 
     /// Stop accepting work, drain what is queued, join the worker.
-    /// Idempotent.
+    /// Drain-then-close: requests that raced in behind the worker's
+    /// exit are *executed* here (or answered `ShuttingDown` if the
+    /// engine is unusable) — an admitted request never sees a silently
+    /// dropped sender.  Idempotent.
     pub fn shutdown(&self) {
         self.shared.shutdown.store(true, Ordering::Release);
         self.shared.notify.notify_all();
-        if let Some(h) = self.worker.lock().unwrap().take() {
+        if let Some(h) = lock_unpoisoned(&self.worker).take() {
             let _ = h.join();
         }
-        // answer anything that raced past the worker's final drain
-        let stragglers: Vec<Pending> =
-            self.shared.queue.lock().unwrap().drain(..).collect();
-        for p in stragglers {
-            let _ = p.reply.send(Err("server shutting down".to_string()));
+        let max_batch = self.shared.policy.max_batch.max(1);
+        loop {
+            let batch: Vec<Pending> = {
+                let mut q = lock_unpoisoned(&self.shared.queue);
+                let take = q.len().min(max_batch);
+                q.drain(..take).collect()
+            };
+            if batch.is_empty() {
+                break;
+            }
+            // the worker (and its resident arena) is gone; serve the
+            // stragglers with a one-off arena.  Armed faults can still
+            // panic this engine call — contain it so shutdown cannot
+            // cascade, the riders then observe the dropped senders.
+            let shared = Arc::clone(&self.shared);
+            let n = batch.len().min(MAX_BATCH_CHUNK);
+            let _ = catch_unwind(AssertUnwindSafe(move || {
+                let mut arena = shared.plan.batch_arena(n);
+                execute(&shared, &mut arena, batch);
+            }));
         }
     }
 }
@@ -209,11 +361,12 @@ fn worker_loop(shared: &Shared) {
     let wait = Duration::from_micros(shared.policy.max_wait_us);
     // resident batch arena: the single-worker execution path reuses it
     // across batches, so steady-state serving allocates nothing but the
-    // reply vectors
+    // reply vectors.  A respawned worker builds a fresh one — whatever
+    // state a panic left behind is discarded with the old stack.
     let mut arena = shared.plan.batch_arena(max_batch.min(MAX_BATCH_CHUNK));
     loop {
-        let batch: Vec<Pending> = {
-            let mut q = shared.queue.lock().unwrap();
+        let drained: Vec<Pending> = {
+            let mut q = lock_unpoisoned(&shared.queue);
             // sleep until there is work (or shutdown with an empty queue)
             loop {
                 if !q.is_empty() {
@@ -222,7 +375,7 @@ fn worker_loop(shared: &Shared) {
                 if shared.shutdown.load(Ordering::Acquire) {
                     return;
                 }
-                q = shared.notify.wait(q).unwrap();
+                q = wait_unpoisoned(&shared.notify, q);
             }
             // coalesce: hold the oldest request at most `max_wait_us`
             // (measured from ITS enqueue — time spent while we were
@@ -233,16 +386,27 @@ fn worker_loop(shared: &Shared) {
                 if now >= deadline {
                     break;
                 }
-                let (guard, timeout) =
-                    shared.notify.wait_timeout(q, deadline - now).unwrap();
+                let (guard, timed_out) =
+                    wait_timeout_unpoisoned(&shared.notify, q, deadline - now);
                 q = guard;
-                if timeout.timed_out() {
+                if timed_out {
                     break;
                 }
             }
             let take = q.len().min(max_batch);
             q.drain(..take).collect()
         };
+        // deadline enforcement at dequeue: an expired request answers
+        // 504 NOW instead of riding a batch nobody is waiting for —
+        // this is what lets a stalled worker shed its backlog the
+        // moment it recovers
+        let now = Instant::now();
+        let (batch, expired): (Vec<Pending>, Vec<Pending>) =
+            drained.into_iter().partition(|p| now < p.deadline);
+        for p in expired {
+            shared.metrics.record_deadline_expired();
+            let _ = p.reply.send(Err(ReplyError::Expired));
+        }
         execute(shared, &mut arena, batch);
     }
 }
@@ -281,6 +445,17 @@ fn execute(shared: &Shared, arena: &mut Arena, batch: Vec<Pending>) {
     if batch.is_empty() {
         return;
     }
+    // fault hooks, in the worker so the supervisor owns the blast
+    // radius: a panic here unwinds through catch_unwind (riders of
+    // THIS batch error out, the queue and other models are untouched);
+    // a stall ages the queue so deadlines trip at the next dequeue
+    match shared.faults.engine(&shared.model) {
+        Some(EngineFault::Panic) => {
+            panic!("injected engine_panic fault ({})", shared.model)
+        }
+        Some(EngineFault::Stall(d)) => std::thread::sleep(d),
+        None => {}
+    }
     let n = batch.len();
     // zero-copy seam: every rider's input buffer is borrowed in place
     let samples: Vec<&[f32]> = batch.iter().map(|p| p.input.as_slice()).collect();
@@ -311,6 +486,7 @@ fn execute(shared: &Shared, arena: &mut Arena, batch: Vec<Pending>) {
     };
     match result {
         Ok(outs) => {
+            shared.sup.on_success();
             for (p, output) in batch.iter().zip(outs) {
                 let us = p.enqueued.elapsed().as_micros() as u64;
                 shared.metrics.record_latency_us(us);
@@ -321,10 +497,10 @@ fn execute(shared: &Shared, arena: &mut Arena, batch: Vec<Pending>) {
         Err(e) => {
             // submit() validates lengths, so this is an engine-internal
             // failure: every rider gets the error
-            let msg = format!("engine error: {e:#}");
+            let msg = format!("{e:#}");
             for p in &batch {
                 shared.metrics.record_error();
-                let _ = p.reply.send(Err(msg.clone()));
+                let _ = p.reply.send(Err(ReplyError::Engine(msg.clone())));
             }
         }
     }
@@ -361,5 +537,15 @@ mod tests {
         let threads = 16usize.clamp(1, 8usize.div_ceil(MIN_RIDE));
         assert_eq!(threads, 2);
         assert_eq!(pass_sizes(8, threads), vec![4, 4]);
+    }
+
+    #[test]
+    fn deadline_window_is_wait_plus_budget() {
+        let p = BatchPolicy {
+            max_wait_us: 2_000,
+            infer_budget_us: 8_000,
+            ..BatchPolicy::default()
+        };
+        assert_eq!(p.deadline(), Duration::from_micros(10_000));
     }
 }

@@ -1,0 +1,480 @@
+//! Deterministic fault injection for the serve subsystem.
+//!
+//! A [`Faults`] plan is a catalog of **failpoints** — named places in
+//! the request lifecycle where the server can be made to misbehave on
+//! purpose — armed from a spec string (`CWMIX_FAULTS` env var or the
+//! `cwmix serve --faults` flag) and threaded as an `Arc` through the
+//! registry, batcher and HTTP layers.  Disarmed (the default: an empty
+//! plan), every hook is a branch on an empty `Vec` that the optimizer
+//! sinks to nothing — `bench_serve` runs against the same binary the
+//! chaos suite does, and the perf gate holds because the hooks cost
+//! nothing until a spec arms them.
+//!
+//! Spec grammar (comma-separated failpoints):
+//!
+//! ```text
+//!   <kind>:<model>:<trigger>[:<arg>]
+//!
+//!   kind    engine_panic | engine_stall | queue_full | slow_socket
+//!           | registry_load_error | artifact_corrupt
+//!   model   bench name, or * for any model
+//!   trigger once | always | times=N | nth=N | prob=P
+//!   arg     milliseconds for engine_stall / slow_socket (default 100)
+//! ```
+//!
+//! Examples: `engine_panic:ic:once` (the chaos-smoke CI spec),
+//! `engine_stall:ad:always:300`, `engine_panic:ic:times=3,queue_full:kws:nth=2`.
+//!
+//! **Determinism:** every trigger is a pure function of the
+//! failpoint's evaluation counter (an atomic, incremented per check)
+//! and — for `prob=P` — a seeded per-point xorshift stream, so a chaos
+//! run replays identically under the same spec + seed.  No wall clock,
+//! no global RNG.
+//!
+//! The failpoints and where they fire:
+//!
+//! * `engine_panic` — the batcher worker panics just before the engine
+//!   call (the supervisor must catch, respawn, and keep other models
+//!   live).
+//! * `engine_stall` — the worker sleeps `arg` ms before the engine
+//!   call (queued requests age past their deadline → 504 at dequeue).
+//! * `queue_full` — `Batcher::submit` behaves as if the bounded queue
+//!   were full (explicit 503 shed path).
+//! * `slow_socket` — the HTTP handler sleeps `arg` ms before routing a
+//!   parsed request (injected network latency).
+//! * `registry_load_error` — a modelpack load fails with an injected
+//!   error (the registry must fall back to compile, loudly).
+//! * `artifact_corrupt` — a deterministic byte of the `.cwm` bytes is
+//!   flipped after read (the hostile-input-hardened loader must reject
+//!   it and the registry must fall back to compile).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+/// What the engine-call failpoint asks the worker to do.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineFault {
+    /// Panic the worker thread (supervised respawn path).
+    Panic,
+    /// Sleep this long before executing the batch.
+    Stall(Duration),
+}
+
+/// Failpoint kinds (see the module docs for where each fires).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Kind {
+    EnginePanic,
+    EngineStall,
+    QueueFull,
+    SlowSocket,
+    RegistryLoadError,
+    ArtifactCorrupt,
+}
+
+impl Kind {
+    fn name(self) -> &'static str {
+        match self {
+            Kind::EnginePanic => "engine_panic",
+            Kind::EngineStall => "engine_stall",
+            Kind::QueueFull => "queue_full",
+            Kind::SlowSocket => "slow_socket",
+            Kind::RegistryLoadError => "registry_load_error",
+            Kind::ArtifactCorrupt => "artifact_corrupt",
+        }
+    }
+}
+
+/// When a matched failpoint actually fires, as a pure function of its
+/// evaluation counter.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Trigger {
+    /// First evaluation only.
+    Once,
+    /// Every evaluation.
+    Always,
+    /// The first N evaluations.
+    Times(u64),
+    /// Exactly the Nth evaluation (1-based).
+    Nth(u64),
+    /// Evaluation `i` fires iff the seeded per-point stream's `i`-th
+    /// draw is below P.
+    Prob(f64),
+}
+
+/// One armed failpoint.
+struct Point {
+    kind: Kind,
+    /// `None` = `*` (any model).
+    model: Option<String>,
+    trigger: Trigger,
+    /// Milliseconds for stall/slow kinds.
+    arg_ms: u64,
+    /// Evaluations so far (0-based index handed to the trigger).
+    hits: AtomicU64,
+    /// Times this point actually fired (diagnostics).
+    fired: AtomicU64,
+    /// Per-point deterministic stream seed (for `prob=`).
+    seed: u64,
+}
+
+impl Point {
+    fn matches(&self, model: &str) -> bool {
+        match &self.model {
+            None => true,
+            Some(m) => m == model,
+        }
+    }
+
+    /// Count one evaluation and decide whether this one fires.
+    fn evaluate(&self) -> bool {
+        let i = self.hits.fetch_add(1, Ordering::Relaxed);
+        let fire = match self.trigger {
+            Trigger::Once => i == 0,
+            Trigger::Always => true,
+            Trigger::Times(n) => i < n,
+            Trigger::Nth(n) => i + 1 == n,
+            Trigger::Prob(p) => unit_draw(self.seed, i) < p,
+        };
+        if fire {
+            self.fired.fetch_add(1, Ordering::Relaxed);
+        }
+        fire
+    }
+}
+
+/// Draw `i` of a seeded xorshift64* stream, mapped to [0, 1).
+fn unit_draw(seed: u64, i: u64) -> f64 {
+    let mut x = (seed ^ i.wrapping_mul(0x9e37_79b9_7f4a_7c15)) | 1;
+    x ^= x << 13;
+    x ^= x >> 7;
+    x ^= x << 17;
+    let x = x.wrapping_mul(0x2545_f491_4f6c_dd1d);
+    (x >> 11) as f64 / (1u64 << 53) as f64
+}
+
+/// FNV-1a-64 over a label — stable per-point seed derivation.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// An armed (or empty = disarmed) fault-injection plan.  Cheap to
+/// share (`Arc`) and cheap to consult: every hook first checks
+/// [`Faults::armed`], which is `!points.is_empty()`.
+#[derive(Default)]
+pub struct Faults {
+    points: Vec<Point>,
+}
+
+impl std::fmt::Debug for Faults {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.points.is_empty() {
+            write!(f, "Faults(disarmed)")
+        } else {
+            write!(f, "Faults({})", self.describe())
+        }
+    }
+}
+
+impl Faults {
+    /// The no-op plan: every hook returns "no fault" after one branch.
+    pub fn disarmed() -> Arc<Faults> {
+        Arc::new(Faults::default())
+    }
+
+    /// Parse a spec string (see the module docs for the grammar).
+    pub fn parse(spec: &str, seed: u64) -> Result<Faults> {
+        let mut points = Vec::new();
+        for entry in spec.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+            let fields: Vec<&str> = entry.split(':').collect();
+            if fields.len() < 3 || fields.len() > 4 {
+                bail!(
+                    "failpoint {entry:?}: want <kind>:<model>:<trigger>[:<ms>]"
+                );
+            }
+            let kind = match fields[0] {
+                "engine_panic" => Kind::EnginePanic,
+                "engine_stall" => Kind::EngineStall,
+                "queue_full" => Kind::QueueFull,
+                "slow_socket" => Kind::SlowSocket,
+                "registry_load_error" => Kind::RegistryLoadError,
+                "artifact_corrupt" => Kind::ArtifactCorrupt,
+                other => bail!("unknown failpoint kind {other:?}"),
+            };
+            let model = match fields[1] {
+                "" | "*" => None,
+                m => Some(m.to_string()),
+            };
+            let trigger = parse_trigger(fields[2])
+                .with_context(|| format!("failpoint {entry:?}"))?;
+            let arg_ms = match fields.get(3) {
+                Some(ms) => ms
+                    .parse()
+                    .with_context(|| format!("failpoint {entry:?}: bad ms arg"))?,
+                None => 100,
+            };
+            points.push(Point {
+                kind,
+                trigger,
+                arg_ms,
+                hits: AtomicU64::new(0),
+                fired: AtomicU64::new(0),
+                seed: seed ^ fnv1a(entry.as_bytes()),
+                model,
+            });
+        }
+        Ok(Faults { points })
+    }
+
+    /// Arm from `CWMIX_FAULTS` / `CWMIX_FAULTS_SEED`.  No env var =
+    /// disarmed; a malformed spec is a hard error (a typo'd chaos run
+    /// must not silently test nothing).
+    pub fn from_env() -> Result<Arc<Faults>> {
+        let Ok(spec) = std::env::var("CWMIX_FAULTS") else {
+            return Ok(Faults::disarmed());
+        };
+        let seed = match std::env::var("CWMIX_FAULTS_SEED") {
+            Ok(s) => s.parse().context("bad CWMIX_FAULTS_SEED")?,
+            Err(_) => 0,
+        };
+        Ok(Arc::new(Faults::parse(&spec, seed).context("CWMIX_FAULTS")?))
+    }
+
+    /// Whether any failpoint is armed (the hooks' fast-path check).
+    pub fn armed(&self) -> bool {
+        !self.points.is_empty()
+    }
+
+    /// Human-readable catalog for the startup log.
+    pub fn describe(&self) -> String {
+        self.points
+            .iter()
+            .map(|p| {
+                format!(
+                    "{}:{}:{:?}",
+                    p.kind.name(),
+                    p.model.as_deref().unwrap_or("*"),
+                    p.trigger
+                )
+            })
+            .collect::<Vec<_>>()
+            .join(", ")
+    }
+
+    /// First matching point of `kind` for `model` that fires.
+    fn fire(&self, kind: Kind, model: &str) -> Option<&Point> {
+        self.points
+            .iter()
+            .find(|p| p.kind == kind && p.matches(model) && p.evaluate())
+    }
+
+    /// Engine-call failpoint (batcher worker, just before execution).
+    pub fn engine(&self, model: &str) -> Option<EngineFault> {
+        if !self.armed() {
+            return None;
+        }
+        if self.fire(Kind::EnginePanic, model).is_some() {
+            return Some(EngineFault::Panic);
+        }
+        self.fire(Kind::EngineStall, model)
+            .map(|p| EngineFault::Stall(Duration::from_millis(p.arg_ms)))
+    }
+
+    /// Admission failpoint: behave as if the bounded queue were full.
+    pub fn queue_full(&self, model: &str) -> bool {
+        self.armed() && self.fire(Kind::QueueFull, model).is_some()
+    }
+
+    /// HTTP handler failpoint: injected latency before routing.
+    pub fn slow_socket(&self) -> Option<Duration> {
+        if !self.armed() {
+            return None;
+        }
+        self.fire(Kind::SlowSocket, "*")
+            .map(|p| Duration::from_millis(p.arg_ms))
+    }
+
+    /// Modelpack-load failpoint: an injected load error for `bench`.
+    pub fn registry_load_error(&self, bench: &str) -> Option<String> {
+        if !self.armed() {
+            return None;
+        }
+        self.fire(Kind::RegistryLoadError, bench)
+            .map(|_| format!("injected registry_load_error for {bench}"))
+    }
+
+    /// Artifact-corruption failpoint: deterministically flip one byte
+    /// of `bytes` (position derived from the point's seed).  Returns
+    /// true when a corruption was applied.
+    pub fn corrupt_artifact(&self, bench: &str, bytes: &mut [u8]) -> bool {
+        if !self.armed() || bytes.is_empty() {
+            return false;
+        }
+        match self.fire(Kind::ArtifactCorrupt, bench) {
+            Some(p) => {
+                let at = (p.seed as usize) % bytes.len();
+                bytes[at] ^= 0xa5;
+                true
+            }
+            None => false,
+        }
+    }
+}
+
+fn parse_trigger(s: &str) -> Result<Trigger> {
+    if s == "once" {
+        return Ok(Trigger::Once);
+    }
+    if s == "always" {
+        return Ok(Trigger::Always);
+    }
+    if let Some(n) = s.strip_prefix("times=") {
+        return Ok(Trigger::Times(n.parse().context("times=N")?));
+    }
+    if let Some(n) = s.strip_prefix("nth=") {
+        let n: u64 = n.parse().context("nth=N")?;
+        if n == 0 {
+            bail!("nth= is 1-based");
+        }
+        return Ok(Trigger::Nth(n));
+    }
+    if let Some(p) = s.strip_prefix("prob=") {
+        let p: f64 = p.parse().context("prob=P")?;
+        if !(0.0..=1.0).contains(&p) {
+            bail!("prob= wants [0, 1]");
+        }
+        return Ok(Trigger::Prob(p));
+    }
+    bail!("unknown trigger {s:?} (once|always|times=N|nth=N|prob=P)")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disarmed_is_all_noops() {
+        let f = Faults::disarmed();
+        assert!(!f.armed());
+        assert!(f.engine("ic").is_none());
+        assert!(!f.queue_full("ic"));
+        assert!(f.slow_socket().is_none());
+        assert!(f.registry_load_error("ic").is_none());
+        let mut b = vec![1u8, 2, 3];
+        assert!(!f.corrupt_artifact("ic", &mut b));
+        assert_eq!(b, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn once_fires_exactly_once_per_point() {
+        let f = Faults::parse("engine_panic:ic:once", 0).unwrap();
+        assert_eq!(f.engine("ic"), Some(EngineFault::Panic));
+        assert_eq!(f.engine("ic"), None);
+        assert_eq!(f.engine("ic"), None);
+    }
+
+    #[test]
+    fn model_matching_and_wildcard() {
+        let f = Faults::parse("engine_panic:ic:always", 0).unwrap();
+        assert_eq!(f.engine("kws"), None, "other models unaffected");
+        assert_eq!(f.engine("ic"), Some(EngineFault::Panic));
+        let any = Faults::parse("queue_full:*:always", 0).unwrap();
+        assert!(any.queue_full("ic"));
+        assert!(any.queue_full("kws"));
+    }
+
+    #[test]
+    fn times_and_nth_triggers() {
+        let f = Faults::parse("engine_panic:ic:times=3", 0).unwrap();
+        for _ in 0..3 {
+            assert_eq!(f.engine("ic"), Some(EngineFault::Panic));
+        }
+        assert_eq!(f.engine("ic"), None);
+
+        let f = Faults::parse("queue_full:ic:nth=2", 0).unwrap();
+        assert!(!f.queue_full("ic"));
+        assert!(f.queue_full("ic"));
+        assert!(!f.queue_full("ic"));
+    }
+
+    #[test]
+    fn stall_carries_duration() {
+        let f = Faults::parse("engine_stall:ad:always:250", 0).unwrap();
+        assert_eq!(
+            f.engine("ad"),
+            Some(EngineFault::Stall(Duration::from_millis(250)))
+        );
+    }
+
+    #[test]
+    fn panic_point_shadows_stall_point() {
+        let f =
+            Faults::parse("engine_panic:ic:once,engine_stall:ic:always:50", 0).unwrap();
+        assert_eq!(f.engine("ic"), Some(EngineFault::Panic));
+        assert_eq!(
+            f.engine("ic"),
+            Some(EngineFault::Stall(Duration::from_millis(50)))
+        );
+    }
+
+    #[test]
+    fn prob_stream_is_seed_deterministic() {
+        let a = Faults::parse("queue_full:ic:prob=0.5", 42).unwrap();
+        let b = Faults::parse("queue_full:ic:prob=0.5", 42).unwrap();
+        let sa: Vec<bool> = (0..64).map(|_| a.queue_full("ic")).collect();
+        let sb: Vec<bool> = (0..64).map(|_| b.queue_full("ic")).collect();
+        assert_eq!(sa, sb, "same seed must replay identically");
+        assert!(sa.iter().any(|&x| x) && sa.iter().any(|&x| !x));
+        let c = Faults::parse("queue_full:ic:prob=0.5", 43).unwrap();
+        let sc: Vec<bool> = (0..64).map(|_| c.queue_full("ic")).collect();
+        assert_ne!(sa, sc, "different seed, different stream");
+    }
+
+    #[test]
+    fn corrupt_flips_one_deterministic_byte() {
+        let f = Faults::parse("artifact_corrupt:ic:once", 7).unwrap();
+        let orig: Vec<u8> = (0..64).collect();
+        let mut b = orig.clone();
+        assert!(f.corrupt_artifact("ic", &mut b));
+        let diffs: Vec<usize> =
+            (0..64).filter(|&i| b[i] != orig[i]).collect();
+        assert_eq!(diffs.len(), 1);
+        // once: the second evaluation leaves bytes alone
+        let mut b2 = orig.clone();
+        assert!(!f.corrupt_artifact("ic", &mut b2));
+        assert_eq!(b2, orig);
+    }
+
+    #[test]
+    fn malformed_specs_are_errors() {
+        for bad in [
+            "nonsense:ic:once",
+            "engine_panic:ic",
+            "engine_panic:ic:sometimes",
+            "engine_panic:ic:nth=0",
+            "engine_panic:ic:prob=1.5",
+            "engine_stall:ic:always:abc",
+            "engine_panic:ic:once:10:extra",
+        ] {
+            assert!(Faults::parse(bad, 0).is_err(), "{bad:?} should not parse");
+        }
+        // empty spec = disarmed, not an error
+        assert!(!Faults::parse("", 0).unwrap().armed());
+    }
+
+    #[test]
+    fn describe_lists_every_point() {
+        let f =
+            Faults::parse("engine_panic:ic:once,queue_full:*:always", 0).unwrap();
+        let d = f.describe();
+        assert!(d.contains("engine_panic:ic"), "{d}");
+        assert!(d.contains("queue_full:*"), "{d}");
+    }
+}

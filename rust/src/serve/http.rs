@@ -11,14 +11,28 @@
 //!
 //! * `POST /v1/infer/<bench>` — body `{"input": [f32; feat]}`; replies
 //!   `{"model", "batch", "output"}` where `batch` is the micro-batch
-//!   size the request rode in.  `503 {"error": ...}` when the bounded
-//!   queue sheds the request.
-//! * `GET /v1/models` — registry description (also the readiness
-//!   probe).
+//!   size the request rode in.  Error mapping: `503` shed / shutting
+//!   down / breaker open (the latter with `Retry-After`), `504`
+//!   deadline exceeded, `500` engine error or crashed worker.
+//! * `GET /healthz` — liveness: 200 while the process serves HTTP at
+//!   all.
+//! * `GET /readyz` — readiness: 200 while at least one model's
+//!   circuit breaker admits traffic; per-model breaker detail in the
+//!   body; 503 once shutdown begins (load balancers drain first).
+//! * `GET /v1/models` — registry description.
 //! * `GET /metrics` — per-model + total counters, p50/p99 latency,
-//!   batch-size histogram, shed count.
+//!   batch-size histogram, shed count, supervision gauges
+//!   (worker respawns, breaker state, deadline expiries, slow-client
+//!   closes).
 //! * `POST /admin/shutdown` — begin a clean shutdown: stop accepting,
 //!   drain batchers, join workers.
+//!
+//! **Failure containment:** every socket has a read *and* write
+//! timeout, so a peer that stops reading (or trickles a request) is
+//! classified — mid-request stalls count as `slow_client_closes`, idle
+//! keep-alive expiries as `idle_reaped` — and its thread reclaimed.
+//! A request already in flight when shutdown lands still gets its
+//! reply (drain-then-close; see `handle_connection`).
 //!
 //! Request parsing is factored over `io::Read`
 //! ([`HttpReader`]) so the grammar is unit-testable without sockets;
@@ -28,7 +42,7 @@
 
 use std::io::{self, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
@@ -36,9 +50,11 @@ use anyhow::{Context, Result};
 
 use crate::minijson::{parse_bytes, Json};
 
-use super::batcher::SubmitError;
+use super::batcher::{ReplyError, SubmitError};
+use super::faults::Faults;
 use super::metrics;
 use super::registry::ModelRegistry;
+use super::supervisor::BreakerState;
 
 /// Front-end configuration.
 #[derive(Clone, Debug)]
@@ -50,8 +66,15 @@ pub struct ServeConfig {
     pub max_body_bytes: usize,
     /// Concurrent connections; excess gets an immediate 503.
     pub max_conns: usize,
-    /// Per-connection read timeout (idle keep-alive reaper).
+    /// Per-connection read timeout (idle keep-alive reaper; also the
+    /// trickle-request bound).
     pub read_timeout: Duration,
+    /// Per-connection write timeout: a peer that stops reading cannot
+    /// hold a handler thread past this.
+    pub write_timeout: Duration,
+    /// Fault-injection plan (disarmed by default; `slow_socket` fires
+    /// here).
+    pub faults: Arc<Faults>,
 }
 
 impl Default for ServeConfig {
@@ -61,16 +84,24 @@ impl Default for ServeConfig {
             max_body_bytes: 1 << 20,
             max_conns: 64,
             read_timeout: Duration::from_secs(10),
+            write_timeout: Duration::from_secs(10),
+            faults: Faults::disarmed(),
         }
     }
 }
 
 const MAX_HEADER_BYTES: usize = 16 << 10;
 
-/// Ceiling on one request's queue-wait + batch execution.  Generous —
-/// it exists so a dead batcher worker degrades to 500s instead of
-/// permanently wedged connections.
-const INFER_REPLY_TIMEOUT: Duration = Duration::from_secs(120);
+/// Slack on top of the batcher's own deadline window
+/// (`max_wait + infer_budget`) before the HTTP handler gives up on a
+/// reply.  The batcher answers expired requests itself at dequeue, so
+/// this ceiling only trips when the worker is wedged mid-respawn — it
+/// degrades to a 504 instead of a permanently wedged connection.
+const REPLY_TIMEOUT_SLACK: Duration = Duration::from_secs(10);
+
+/// Once shutdown begins, a handler gives the peer this long to finish
+/// writing a request already in flight before closing (drain-then-close).
+const SHUTDOWN_DRAIN_WINDOW: Duration = Duration::from_millis(100);
 
 /// Post-error drain bound (see [`HttpReader::drain`]): covers honest
 /// clients that overshot `max_body_bytes` by a lot; a peer announcing
@@ -223,6 +254,13 @@ impl<R: Read> HttpReader<R> {
         Ok(n)
     }
 
+    /// True when a request is partially buffered — a read timeout now
+    /// means a *slow client* (started a request, stopped sending), not
+    /// an idle keep-alive connection.
+    pub fn mid_request(&self) -> bool {
+        !self.buf.is_empty()
+    }
+
     /// Best-effort read-and-discard of up to `max` bytes (stops at
     /// EOF or any error, including the read timeout).  Closing a
     /// socket with unread data makes the kernel send RST, which can
@@ -250,29 +288,37 @@ fn status_reason(status: u16) -> &'static str {
         400 => "Bad Request",
         404 => "Not Found",
         405 => "Method Not Allowed",
+        408 => "Request Timeout",
         413 => "Payload Too Large",
         431 => "Request Header Fields Too Large",
         500 => "Internal Server Error",
         501 => "Not Implemented",
         503 => "Service Unavailable",
+        504 => "Gateway Timeout",
         505 => "HTTP Version Not Supported",
         _ => "Unknown",
     }
 }
 
-/// Serialize one JSON response.
+/// Serialize one JSON response; `retry_after` adds a `Retry-After`
+/// header (seconds) — the breaker's 503s carry one.
 fn write_response(
     w: &mut impl Write,
     status: u16,
     body: &Json,
     close: bool,
+    retry_after: Option<u64>,
 ) -> io::Result<()> {
     let body = body.dumps();
     let conn = if close { "close" } else { "keep-alive" };
+    let retry = match retry_after {
+        Some(s) => format!("Retry-After: {s}\r\n"),
+        None => String::new(),
+    };
     write!(
         w,
         "HTTP/1.1 {status} {}\r\nContent-Type: application/json\r\n\
-         Content-Length: {}\r\nConnection: {conn}\r\n\r\n{body}",
+         Content-Length: {}\r\nConnection: {conn}\r\n{retry}\r\n{body}",
         status_reason(status),
         body.len(),
     )?;
@@ -291,6 +337,11 @@ struct ServerState {
     shutdown: AtomicBool,
     active_conns: AtomicUsize,
     started: Instant,
+    /// Connections closed on a peer that went quiet *mid-request* or
+    /// stopped reading its reply (the slow-client reaper).
+    slow_client_closes: AtomicU64,
+    /// Idle keep-alive connections reaped by the read timeout.
+    idle_reaped: AtomicU64,
 }
 
 /// A running server: accept loop + handler threads.
@@ -312,6 +363,8 @@ pub fn serve(registry: Arc<ModelRegistry>, cfg: ServeConfig) -> Result<Server> {
         shutdown: AtomicBool::new(false),
         active_conns: AtomicUsize::new(0),
         started: Instant::now(),
+        slow_client_closes: AtomicU64::new(0),
+        idle_reaped: AtomicU64::new(0),
     });
     let accept_state = Arc::clone(&state);
     let acceptor = std::thread::Builder::new()
@@ -385,7 +438,8 @@ fn accept_loop(listener: &TcpListener, state: &Arc<ServerState>) {
         if state.active_conns.load(Ordering::Acquire) >= state.cfg.max_conns {
             // over the connection cap: shed at the door
             let mut s = stream;
-            let _ = write_response(&mut s, 503, &err_body("too many connections"), true);
+            let _ =
+                write_response(&mut s, 503, &err_body("too many connections"), true, None);
             continue;
         }
         state.active_conns.fetch_add(1, Ordering::AcqRel);
@@ -402,61 +456,157 @@ fn accept_loop(listener: &TcpListener, state: &Arc<ServerState>) {
     }
 }
 
+fn is_timeout(e: &io::Error) -> bool {
+    matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut)
+}
+
 fn handle_connection(stream: TcpStream, state: &Arc<ServerState>) {
     let _ = stream.set_read_timeout(Some(state.cfg.read_timeout));
+    let _ = stream.set_write_timeout(Some(state.cfg.write_timeout));
     let _ = stream.set_nodelay(true);
     let mut writer = match stream.try_clone() {
         Ok(w) => w,
         Err(_) => return,
     };
     let mut reader = HttpReader::new(stream, state.cfg.max_body_bytes);
+    let mut draining = false;
     loop {
-        if state.shutdown.load(Ordering::Acquire) {
-            break;
+        if state.shutdown.load(Ordering::Acquire) && !draining {
+            // drain-then-close: shutdown must not drop a request the
+            // peer already sent (or is about to finish sending).  Give
+            // one short read window to pick it up, answer it with
+            // `Connection: close`, then leave.  The clones share one
+            // socket, so the writer sets the reader's timeout too.
+            draining = true;
+            let _ = writer.set_read_timeout(Some(SHUTDOWN_DRAIN_WINDOW));
         }
         match reader.next_request() {
             Ok(Some(req)) => {
-                let (status, body) = route(state, &req);
-                let close = req.close || state.shutdown.load(Ordering::Acquire);
-                if write_response(&mut writer, status, &body, close).is_err() || close {
-                    break;
+                if let Some(d) = state.cfg.faults.slow_socket() {
+                    // injected network latency (fault plan)
+                    std::thread::sleep(d);
+                }
+                let (status, body, retry_after) = route(state, &req);
+                let close =
+                    req.close || draining || state.shutdown.load(Ordering::Acquire);
+                match write_response(&mut writer, status, &body, close, retry_after) {
+                    Ok(()) if !close => {}
+                    Ok(()) => break,
+                    Err(e) => {
+                        if is_timeout(&e) {
+                            // peer stopped reading its reply
+                            state.slow_client_closes.fetch_add(1, Ordering::Relaxed);
+                        }
+                        break;
+                    }
                 }
             }
             Ok(None) => break, // peer closed an idle connection
             Err(HttpError::Bad(status, msg)) => {
                 // protocol errors close the connection: framing is gone
-                let _ = write_response(&mut writer, status, &err_body(&msg), true);
+                let _ = write_response(&mut writer, status, &err_body(&msg), true, None);
                 let _ = writer.shutdown(std::net::Shutdown::Write);
                 reader.drain(DRAIN_BYTES);
                 break;
             }
-            Err(HttpError::Io(_)) => break, // timeout / reset / EOF
+            Err(HttpError::Io(e)) => {
+                if is_timeout(&e) && !draining {
+                    // the reaper: classify what the timeout caught
+                    if reader.mid_request() {
+                        state.slow_client_closes.fetch_add(1, Ordering::Relaxed);
+                        let _ = write_response(
+                            &mut writer,
+                            408,
+                            &err_body("request timed out"),
+                            true,
+                            None,
+                        );
+                    } else {
+                        state.idle_reaped.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                break; // timeout / reset / EOF
+            }
         }
     }
 }
 
+/// A dispatched reply: status, JSON body, optional `Retry-After`
+/// seconds.
+type Reply = (u16, Json, Option<u64>);
+
+fn reply(status: u16, body: Json) -> Reply {
+    (status, body, None)
+}
+
 /// Dispatch one request.  Infallible by construction: every error is a
-/// `(status, body)` pair.
-fn route(state: &Arc<ServerState>, req: &Request) -> (u16, Json) {
+/// status + body pair.
+fn route(state: &Arc<ServerState>, req: &Request) -> Reply {
     match (req.method.as_str(), req.path.as_str()) {
-        ("GET", "/v1/models") => (200, state.registry.describe()),
-        ("GET", "/metrics") => (200, metrics_body(state)),
+        ("GET", "/v1/models") => reply(200, state.registry.describe()),
+        ("GET", "/metrics") => reply(200, metrics_body(state)),
+        ("GET", "/healthz") => reply(
+            200,
+            Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("uptime_s", Json::num(state.started.elapsed().as_secs_f64())),
+            ]),
+        ),
+        ("GET", "/readyz") => readyz(state),
         ("POST", "/admin/shutdown") => {
             state.shutdown.store(true, Ordering::Release);
             // poke our own listening socket so accept() observes the flag
             let _ = TcpStream::connect(state.addr);
-            (200, Json::obj(vec![("ok", Json::Bool(true))]))
+            reply(200, Json::obj(vec![("ok", Json::Bool(true))]))
         }
         (_, path) if path.starts_with("/v1/infer/") => {
             let name = path.strip_prefix("/v1/infer/").unwrap_or_default();
             if req.method != "POST" {
-                return (405, err_body("use POST"));
+                return reply(405, err_body("use POST"));
             }
             infer(state, name, &req.body)
         }
-        ("GET", _) | ("POST", _) => (404, err_body("no such route")),
-        _ => (405, err_body("unsupported method")),
+        ("GET", _) | ("POST", _) => reply(404, err_body("no such route")),
+        _ => reply(405, err_body("unsupported method")),
     }
+}
+
+/// `GET /readyz`: 200 while at least one model's breaker admits
+/// traffic (a single faulted model must not pull the whole node out of
+/// rotation — its own requests already answer 503).  503 during
+/// shutdown, so load balancers drain before the listener goes away.
+fn readyz(state: &Arc<ServerState>) -> Reply {
+    if state.shutdown.load(Ordering::Acquire) {
+        return reply(
+            503,
+            Json::obj(vec![
+                ("ready", Json::Bool(false)),
+                ("reason", Json::str("shutting down")),
+            ]),
+        );
+    }
+    let mut models = Vec::new();
+    let mut any_ready = false;
+    for e in state.registry.entries() {
+        let b = e.batcher().supervision().breaker_state();
+        let ready = b != BreakerState::Open;
+        any_ready |= ready;
+        models.push((
+            e.name().to_string(),
+            Json::obj(vec![
+                ("ready", Json::Bool(ready)),
+                ("breaker", Json::str(b.name())),
+            ]),
+        ));
+    }
+    let status = if any_ready { 200 } else { 503 };
+    reply(
+        status,
+        Json::obj(vec![
+            ("ready", Json::Bool(any_ready)),
+            ("models", Json::Obj(models.into_iter().collect())),
+        ]),
+    )
 }
 
 fn metrics_body(state: &Arc<ServerState>) -> Json {
@@ -485,6 +635,16 @@ fn metrics_body(state: &Arc<ServerState>) -> Json {
             for (k, v) in metrics::fusion_gauges(e.plan().fusion()) {
                 o.insert(k.to_string(), v);
             }
+            // supervision gauges read live (the breaker transitions
+            // lazily — asking it is what advances open → half-open)
+            let sup = e.batcher().supervision();
+            let b = sup.breaker_state();
+            o.insert("breaker_state".to_string(), Json::num(b.code() as f64));
+            o.insert("breaker_state_name".to_string(), Json::str(b.name()));
+            o.insert(
+                "breaker_opens".to_string(),
+                Json::num(sup.breaker_opens() as f64),
+            );
         }
         models.push((e.name().to_string(), snap));
     }
@@ -493,52 +653,78 @@ fn metrics_body(state: &Arc<ServerState>) -> Json {
         ("requests", Json::num(total_requests as f64)),
         ("shed", Json::num(total_shed as f64)),
         ("model_bytes", Json::num(total_model_bytes as f64)),
+        (
+            "slow_client_closes",
+            Json::num(state.slow_client_closes.load(Ordering::Relaxed) as f64),
+        ),
+        (
+            "idle_reaped",
+            Json::num(state.idle_reaped.load(Ordering::Relaxed) as f64),
+        ),
         ("models", Json::Obj(models.into_iter().collect())),
     ])
 }
 
-fn infer(state: &Arc<ServerState>, name: &str, body: &[u8]) -> (u16, Json) {
+fn infer(state: &Arc<ServerState>, name: &str, body: &[u8]) -> Reply {
     let Some(entry) = state.registry.get(name) else {
-        return (404, err_body(&format!("unknown model {name:?}")));
+        return reply(404, err_body(&format!("unknown model {name:?}")));
     };
     let parsed = match parse_bytes(body) {
         Ok(v) => v,
-        Err(e) => return (400, err_body(&format!("bad JSON body: {e}"))),
+        Err(e) => return reply(400, err_body(&format!("bad JSON body: {e}"))),
     };
     let input: Vec<f32> = match parsed.get("input").and_then(|v| {
         v.as_arr()?.iter().map(|x| x.as_f64().map(|f| f as f32)).collect()
     }) {
         Ok(v) => v,
-        Err(e) => return (400, err_body(&format!("bad \"input\": {e}"))),
+        Err(e) => return reply(400, err_body(&format!("bad \"input\": {e}"))),
     };
     let rx = match entry.batcher().submit(input) {
         Ok(rx) => rx,
-        Err(SubmitError::Overloaded) => return (503, err_body("overloaded: queue full")),
-        Err(SubmitError::ShuttingDown) => return (503, err_body("shutting down")),
-        Err(SubmitError::BadInput(m)) => return (400, err_body(&m)),
+        Err(SubmitError::Overloaded) => {
+            return reply(503, err_body("overloaded: queue full"))
+        }
+        Err(SubmitError::BreakerOpen { retry_after_s }) => {
+            return (
+                503,
+                Json::obj(vec![
+                    ("error", Json::str("circuit breaker open")),
+                    ("retry_after_s", Json::num(retry_after_s as f64)),
+                ]),
+                Some(retry_after_s),
+            )
+        }
+        Err(SubmitError::ShuttingDown) => return reply(503, err_body("shutting down")),
+        Err(SubmitError::BadInput(m)) => return reply(400, err_body(&m)),
     };
-    // bounded wait: if the batcher worker ever died (it only can via an
-    // engine panic), queued senders stay alive and a bare recv() would
-    // wedge this connection forever — time out to a 500 instead
-    match rx.recv_timeout(INFER_REPLY_TIMEOUT) {
-        Ok(Ok(reply)) => (
+    // bounded wait past the request's own deadline window: the batcher
+    // answers expired requests at dequeue, so this only trips while a
+    // panicked worker is mid-respawn — degrade to 504, never a wedged
+    // connection
+    let timeout = state.registry.policy().deadline() + REPLY_TIMEOUT_SLACK;
+    match rx.recv_timeout(timeout) {
+        Ok(Ok(r)) => reply(
             200,
             Json::obj(vec![
                 ("model", Json::str(name)),
-                ("batch", Json::num(reply.batch as f64)),
-                ("output", Json::arr_f32(&reply.output)),
+                ("batch", Json::num(r.batch as f64)),
+                ("output", Json::arr_f32(&r.output)),
             ]),
         ),
-        // no record_error here: the batcher already counted this
-        // failure once per rider when the engine call failed
-        Ok(Err(msg)) => (500, err_body(&msg)),
+        // no record_error for Expired/Engine: the batcher already
+        // counted those once per rider
+        Ok(Err(ReplyError::Expired)) => reply(504, err_body("deadline exceeded")),
+        Ok(Err(ReplyError::ShuttingDown)) => reply(503, err_body("shutting down")),
+        Ok(Err(ReplyError::Engine(m))) => reply(500, err_body(&m)),
         Err(mpsc::RecvTimeoutError::Timeout) => {
             entry.metrics().record_error();
-            (500, err_body("inference timed out"))
+            reply(504, err_body("inference timed out"))
         }
         Err(mpsc::RecvTimeoutError::Disconnected) => {
+            // the worker panicked with this request in its in-flight
+            // batch; it respawns — the client should just retry
             entry.metrics().record_error();
-            (500, err_body("batcher worker gone"))
+            reply(500, err_body("worker crashed; retry"))
         }
     }
 }
@@ -632,7 +818,7 @@ mod tests {
     #[test]
     fn response_roundtrips_through_reader() {
         let mut out = Vec::new();
-        write_response(&mut out, 200, &err_body("x"), false).unwrap();
+        write_response(&mut out, 200, &err_body("x"), false, None).unwrap();
         let (status, body) =
             HttpReader::new(Cursor::new(out), 1024).next_response().unwrap().unwrap();
         assert_eq!(status, 200);
@@ -642,10 +828,34 @@ mod tests {
     #[test]
     fn response_shape() {
         let mut out = Vec::new();
-        write_response(&mut out, 200, &err_body("x"), false).unwrap();
+        write_response(&mut out, 200, &err_body("x"), false, None).unwrap();
         let text = String::from_utf8(out).unwrap();
         assert!(text.starts_with("HTTP/1.1 200 OK\r\n"), "{text}");
         assert!(text.contains("Content-Length: 13\r\n"), "{text}");
         assert!(text.ends_with("{\"error\":\"x\"}"), "{text}");
+    }
+
+    #[test]
+    fn retry_after_header_is_emitted() {
+        let mut out = Vec::new();
+        write_response(&mut out, 503, &err_body("open"), true, Some(7)).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.contains("Retry-After: 7\r\n"), "{text}");
+        // still parses as one well-framed response
+        let (status, body) = HttpReader::new(Cursor::new(text.into_bytes()), 1024)
+            .next_response()
+            .unwrap()
+            .unwrap();
+        assert_eq!(status, 503);
+        assert_eq!(body, b"{\"error\":\"open\"}");
+    }
+
+    #[test]
+    fn mid_request_distinguishes_idle_from_slow() {
+        let mut r = reader(b"POST /v1/infer/ic HTTP/1.1\r\nContent-Le");
+        assert!(!r.mid_request(), "nothing buffered yet");
+        // a truncated read leaves partial bytes buffered
+        let _ = r.next_request();
+        assert!(r.mid_request(), "partial request must read as slow, not idle");
     }
 }

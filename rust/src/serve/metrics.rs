@@ -18,6 +18,8 @@ use std::sync::Mutex;
 
 use crate::minijson::Json;
 
+use super::supervisor::lock_unpoisoned;
+
 /// Batch sizes `>= BATCH_HIST_MAX` share the last histogram bucket.
 pub const BATCH_HIST_MAX: usize = 32;
 
@@ -77,6 +79,14 @@ pub struct Metrics {
     /// executed batch-size histogram; bucket `i` = size `i + 1`
     batch_hist: [AtomicU64; BATCH_HIST_MAX],
     lat: Mutex<LatencyRing>,
+    /// worker panics caught by the supervisor
+    worker_panics: AtomicU64,
+    /// worker respawns performed by the supervisor
+    worker_respawns: AtomicU64,
+    /// requests answered 504 at dequeue (deadline already passed)
+    deadline_expired: AtomicU64,
+    /// submits refused because the circuit breaker was open
+    breaker_rejects: AtomicU64,
 }
 
 impl Default for Metrics {
@@ -91,6 +101,10 @@ impl Default for Metrics {
             coalesced: AtomicU64::new(0),
             batch_hist: std::array::from_fn(|_| AtomicU64::new(0)),
             lat: Mutex::new(LatencyRing { us: Vec::new(), pos: 0, filled: false }),
+            worker_panics: AtomicU64::new(0),
+            worker_respawns: AtomicU64::new(0),
+            deadline_expired: AtomicU64::new(0),
+            breaker_rejects: AtomicU64::new(0),
         }
     }
 }
@@ -106,6 +120,22 @@ impl Metrics {
 
     pub fn record_error(&self) {
         self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_worker_panic(&self) {
+        self.worker_panics.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_worker_respawn(&self) {
+        self.worker_respawns.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_deadline_expired(&self) {
+        self.deadline_expired.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_breaker_reject(&self) {
+        self.breaker_rejects.fetch_add(1, Ordering::Relaxed);
     }
 
     /// One executed batch of `size` samples.
@@ -124,8 +154,9 @@ impl Metrics {
     }
 
     /// End-to-end latency of one answered request (admission → reply).
+    /// Poison-free: a latency record must survive any past panic.
     pub fn record_latency_us(&self, us: u64) {
-        self.lat.lock().unwrap().record(us);
+        lock_unpoisoned(&self.lat).record(us);
     }
 
     pub fn requests(&self) -> u64 {
@@ -134,6 +165,26 @@ impl Metrics {
 
     pub fn shed(&self) -> u64 {
         self.shed.load(Ordering::Relaxed)
+    }
+
+    pub fn errors(&self) -> u64 {
+        self.errors.load(Ordering::Relaxed)
+    }
+
+    pub fn worker_panics(&self) -> u64 {
+        self.worker_panics.load(Ordering::Relaxed)
+    }
+
+    pub fn worker_respawns(&self) -> u64 {
+        self.worker_respawns.load(Ordering::Relaxed)
+    }
+
+    pub fn deadline_expired(&self) -> u64 {
+        self.deadline_expired.load(Ordering::Relaxed)
+    }
+
+    pub fn breaker_rejects(&self) -> u64 {
+        self.breaker_rejects.load(Ordering::Relaxed)
     }
 
     /// Mean executed batch size (0 when nothing ran yet).
@@ -173,7 +224,7 @@ impl Metrics {
 
     /// JSON snapshot for `/metrics`.
     pub fn snapshot(&self) -> Json {
-        let (p50, p99, window) = self.lat.lock().unwrap().percentiles();
+        let (p50, p99, window) = lock_unpoisoned(&self.lat).percentiles();
         let hist: Vec<(String, Json)> = self
             .batch_hist
             .iter()
@@ -203,6 +254,10 @@ impl Metrics {
             ("latency_p99_us", Json::num(p99 as f64)),
             ("latency_window", Json::num(window as f64)),
             ("batch_size_hist", Json::Obj(hist.into_iter().collect())),
+            ("worker_panics", Json::num(self.worker_panics() as f64)),
+            ("worker_respawns", Json::num(self.worker_respawns() as f64)),
+            ("deadline_expired_total", Json::num(self.deadline_expired() as f64)),
+            ("breaker_rejects", Json::num(self.breaker_rejects() as f64)),
         ])
     }
 }

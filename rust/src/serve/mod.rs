@@ -29,12 +29,29 @@
 //!   explicit `503` instead of growing without bound.  Batched outputs
 //!   are bit-identical to per-sample `run_sample` calls.
 //! * [`http`] — pure-`std` HTTP/1.1 front end (`POST /v1/infer/<bench>`,
-//!   `GET /v1/models`, `GET /metrics`, `POST /admin/shutdown`), JSON
-//!   via the hardened [`minijson`](crate::minijson).
+//!   `GET /v1/models`, `GET /healthz`, `GET /readyz`, `GET /metrics`,
+//!   `POST /admin/shutdown`), JSON via the hardened
+//!   [`minijson`](crate::minijson); socket read/write timeouts with a
+//!   slow-client/idle-connection reaper.
+//! * [`supervisor`] — panic isolation for batcher workers:
+//!   `catch_unwind` + bounded-backoff respawn, a per-model circuit
+//!   breaker (K consecutive panics → 503 + `Retry-After`), and the
+//!   poison-free lock helpers every serve lock goes through.
+//! * [`faults`] — deterministic fault injection (`CWMIX_FAULTS` /
+//!   `--faults`): seeded failpoints for engine panic/stall, queue-full,
+//!   slow sockets, and registry load/corruption, compiled to no-ops
+//!   when disarmed.  The chaos suite (`tests/serve_chaos.rs`,
+//!   `tools/chaos_smoke.sh`) drives them over real sockets.
 //! * [`Metrics`] — request/shed counters, p50/p99 latency, batch-size
-//!   histogram, scraped by `GET /metrics`.
+//!   histogram, supervision gauges (panics, respawns, deadline
+//!   expiries, breaker rejects), scraped by `GET /metrics`.
 //! * [`client`] — the loopback client used by `bench_serve`,
-//!   `serve_smoke` and the integration tests.
+//!   `serve_smoke`, `chaos_smoke` and the integration tests.
+//!
+//! Every request carries a deadline (`max_wait + infer_budget`)
+//! enforced at dequeue: expired requests answer 504 without riding a
+//! batch, so a recovered worker sheds a stalled backlog instead of
+//! executing work nobody is waiting for.
 //!
 //! Entry points: `cwmix serve` (CLI), [`http::serve`] (library),
 //! `benches/bench_serve.rs` (closed-loop load generator emitting
@@ -42,11 +59,17 @@
 
 pub mod batcher;
 pub mod client;
+pub mod faults;
 pub mod http;
 pub mod metrics;
 pub mod registry;
+pub mod supervisor;
 
-pub use batcher::{BatchPolicy, Batcher, InferReply, SubmitError};
+pub use batcher::{
+    BatchPolicy, Batcher, InferReply, ReplyError, SubmitError, WorkerOpts,
+};
+pub use faults::{EngineFault, Faults};
 pub use http::{serve, ServeConfig, Server};
 pub use metrics::Metrics;
 pub use registry::{ModelEntry, ModelRegistry, RegistryConfig, StartupStats};
+pub use supervisor::{BreakerState, Supervision, SupervisorCfg};

@@ -44,8 +44,10 @@ use crate::minijson::Json;
 use crate::models::{zoo, Manifest};
 use crate::quant::Assignment;
 
-use super::batcher::{BatchPolicy, Batcher};
+use super::batcher::{BatchPolicy, Batcher, WorkerOpts};
+use super::faults::Faults;
 use super::metrics::Metrics;
+use super::supervisor::SupervisorCfg;
 
 /// Startup configuration for the registry.
 #[derive(Clone, Debug)]
@@ -68,6 +70,12 @@ pub struct RegistryConfig {
     pub modelpack_dir: Option<PathBuf>,
     /// Micro-batching policy applied to every model.
     pub policy: BatchPolicy,
+    /// Fault-injection plan shared by every model's load path and
+    /// batcher worker (disarmed by default).
+    pub faults: Arc<Faults>,
+    /// Supervision knobs (breaker K, cooldowns, respawn backoff)
+    /// applied to every model's worker.
+    pub supervisor: SupervisorCfg,
 }
 
 impl Default for RegistryConfig {
@@ -80,6 +88,8 @@ impl Default for RegistryConfig {
             artifacts: PathBuf::from("artifacts"),
             modelpack_dir: None,
             policy: BatchPolicy::default(),
+            faults: Faults::disarmed(),
+            supervisor: SupervisorCfg::default(),
         }
     }
 }
@@ -229,7 +239,18 @@ fn load_modelpack(
     backend: &str,
     cfg: &RegistryConfig,
 ) -> Result<(ExecPlan, u64)> {
-    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    let mut bytes =
+        std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    // fault hooks: an injected load error, or a deterministic one-byte
+    // corruption the hostile-input-hardened loader must then reject —
+    // either way the caller's fallback-to-compile path is what is
+    // actually under test
+    if let Some(msg) = cfg.faults.registry_load_error(bench) {
+        bail!("{msg}");
+    }
+    if cfg.faults.corrupt_artifact(bench, &mut bytes) {
+        eprintln!("model {bench}: artifact_corrupt fault flipped a byte of the pack");
+    }
     let (plan, prov) = ExecPlan::from_modelpack_with_provenance(&bytes)
         .with_context(|| format!("loading {}", path.display()))?;
     if plan.bench() != bench {
@@ -340,6 +361,11 @@ impl ModelRegistry {
                 Arc::clone(&plan),
                 Arc::clone(&metrics),
                 cfg.policy.clone(),
+                WorkerOpts {
+                    model: bench.clone(),
+                    faults: Arc::clone(&cfg.faults),
+                    supervisor: cfg.supervisor.clone(),
+                },
             );
             entries.insert(
                 bench.clone(),

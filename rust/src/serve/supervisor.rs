@@ -1,0 +1,458 @@
+//! Worker supervision: panic isolation, bounded-backoff respawn, and a
+//! per-model circuit breaker.
+//!
+//! Before this module, one engine panic permanently killed a model's
+//! batcher worker — every later request to that model wedged until the
+//! HTTP reply timeout — and the panic poisoned the queue mutex, so even
+//! *touching* the queue from an HTTP thread cascaded the panic.  The
+//! supervisor turns an engine panic into a bounded, observable event:
+//!
+//! ```text
+//!        supervisor thread (one per model)
+//!   ┌──▶ catch_unwind( worker_loop )
+//!   │        │ Ok(())          → clean shutdown, exit
+//!   │        │ Err(panic)      → riders of the in-flight batch see an
+//!   │        ▼                   error; queued requests stay queued
+//!   │    on_panic(): consecutive += 1
+//!   │        │ consecutive ≥ K, or panic while half-open
+//!   │        ▼
+//!   │    breaker OPEN for cooldown·2^(opens-1) (capped):
+//!   │      submit() → 503 + Retry-After, no queueing
+//!   │        │ cooldown elapsed → HALF-OPEN: probe traffic admitted
+//!   └── backoff (base·2^(consecutive-1), capped), then respawn with a
+//!       FRESH arena; first successful batch → consecutive = 0,
+//!       breaker CLOSED
+//! ```
+//!
+//! **Poison-free locking:** a panicking worker must never make the
+//! queue unusable for threads that merely submit.  [`lock_unpoisoned`]
+//! and the condvar wrappers recover the inner guard from a poisoned
+//! lock (`PoisonError::into_inner`) — correct here because every
+//! critical section over the shared queue leaves it structurally valid
+//! at every await/panic point (push/drain of whole `Pending` entries,
+//! no partial states).
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use super::metrics::Metrics;
+
+/// Lock a mutex, recovering the guard if a panicking holder poisoned
+/// it.  See the module docs for why this is sound for serve's locks.
+pub fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// `Condvar::wait` with poison recovery.
+pub fn wait_unpoisoned<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+) -> MutexGuard<'a, T> {
+    cv.wait(guard).unwrap_or_else(|e| e.into_inner())
+}
+
+/// `Condvar::wait_timeout` with poison recovery; returns
+/// `(guard, timed_out)`.
+pub fn wait_timeout_unpoisoned<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    dur: Duration,
+) -> (MutexGuard<'a, T>, bool) {
+    match cv.wait_timeout(guard, dur) {
+        Ok((g, t)) => (g, t.timed_out()),
+        Err(e) => {
+            let (g, t) = e.into_inner();
+            (g, t.timed_out())
+        }
+    }
+}
+
+/// Supervision knobs (per model).
+#[derive(Clone, Debug)]
+pub struct SupervisorCfg {
+    /// Consecutive worker panics that open the circuit breaker.
+    pub breaker_k: u32,
+    /// First breaker-open duration; doubles per consecutive open.
+    pub cooldown_ms: u64,
+    /// Ceiling on the doubled cooldown.
+    pub cooldown_cap_ms: u64,
+    /// First respawn backoff; doubles per consecutive panic.
+    pub backoff_base_ms: u64,
+    /// Ceiling on the doubled backoff.
+    pub backoff_cap_ms: u64,
+}
+
+impl Default for SupervisorCfg {
+    fn default() -> SupervisorCfg {
+        SupervisorCfg {
+            breaker_k: 3,
+            cooldown_ms: 1_000,
+            cooldown_cap_ms: 30_000,
+            backoff_base_ms: 10,
+            backoff_cap_ms: 2_000,
+        }
+    }
+}
+
+/// Circuit-breaker state, exported by `/readyz` and `/metrics`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BreakerState {
+    /// Normal operation.
+    Closed,
+    /// Cooling down after the open; probe traffic is admitted.
+    HalfOpen,
+    /// Refusing requests (503 + `Retry-After`).
+    Open,
+}
+
+impl BreakerState {
+    pub fn name(self) -> &'static str {
+        match self {
+            BreakerState::Closed => "closed",
+            BreakerState::HalfOpen => "half_open",
+            BreakerState::Open => "open",
+        }
+    }
+
+    /// Numeric gauge encoding: 0 closed, 1 half-open, 2 open.
+    pub fn code(self) -> u32 {
+        match self {
+            BreakerState::Closed => 0,
+            BreakerState::HalfOpen => 1,
+            BreakerState::Open => 2,
+        }
+    }
+}
+
+struct BreakerInner {
+    state: BreakerState,
+    /// Valid while `state == Open`.
+    open_until: Instant,
+    /// Consecutive opens (cooldown doubling); reset when the breaker
+    /// closes.
+    opens_run: u32,
+}
+
+/// Per-model supervision state: panic counters + the circuit breaker.
+/// Shared between the supervisor thread (records outcomes) and the
+/// submit/HTTP paths (admission + gauges).
+pub struct Supervision {
+    cfg: SupervisorCfg,
+    consecutive: AtomicU32,
+    panics: AtomicU64,
+    respawns: AtomicU64,
+    opens_total: AtomicU64,
+    breaker: Mutex<BreakerInner>,
+}
+
+impl Supervision {
+    pub fn new(cfg: SupervisorCfg) -> Supervision {
+        Supervision {
+            cfg,
+            consecutive: AtomicU32::new(0),
+            panics: AtomicU64::new(0),
+            respawns: AtomicU64::new(0),
+            opens_total: AtomicU64::new(0),
+            breaker: Mutex::new(BreakerInner {
+                state: BreakerState::Closed,
+                open_until: Instant::now(),
+                opens_run: 0,
+            }),
+        }
+    }
+
+    pub fn cfg(&self) -> &SupervisorCfg {
+        &self.cfg
+    }
+
+    /// Total worker panics caught.
+    pub fn panics(&self) -> u64 {
+        self.panics.load(Ordering::Relaxed)
+    }
+
+    /// Total worker respawns performed.
+    pub fn respawns(&self) -> u64 {
+        self.respawns.load(Ordering::Relaxed)
+    }
+
+    /// Total breaker opens.
+    pub fn breaker_opens(&self) -> u64 {
+        self.opens_total.load(Ordering::Relaxed)
+    }
+
+    /// Current breaker state; an expired `Open` lazily becomes
+    /// `HalfOpen` (probe traffic allowed).
+    pub fn breaker_state(&self) -> BreakerState {
+        let mut b = lock_unpoisoned(&self.breaker);
+        if b.state == BreakerState::Open && Instant::now() >= b.open_until {
+            b.state = BreakerState::HalfOpen;
+        }
+        b.state
+    }
+
+    /// Admission check for `submit`: `Err(retry_after_s)` while the
+    /// breaker is open.  Half-open admits (the probe that can close
+    /// the breaker again).
+    pub fn admit(&self) -> Result<(), u64> {
+        let mut b = lock_unpoisoned(&self.breaker);
+        if b.state == BreakerState::Open {
+            let now = Instant::now();
+            if now >= b.open_until {
+                b.state = BreakerState::HalfOpen;
+            } else {
+                let left = b.open_until - now;
+                return Err(left.as_secs().max(1));
+            }
+        }
+        Ok(())
+    }
+
+    /// A batch executed successfully: panics are no longer
+    /// consecutive, and a half-open breaker closes.
+    pub fn on_success(&self) {
+        self.consecutive.store(0, Ordering::Relaxed);
+        let mut b = lock_unpoisoned(&self.breaker);
+        if b.state == BreakerState::HalfOpen {
+            b.state = BreakerState::Closed;
+        }
+        if b.state == BreakerState::Closed {
+            b.opens_run = 0;
+        }
+    }
+
+    /// The worker panicked.  Returns the consecutive-panic count; the
+    /// breaker opens at `breaker_k` consecutive panics, or immediately
+    /// when the panic burned a half-open probe.
+    pub fn on_panic(&self) -> u32 {
+        self.panics.fetch_add(1, Ordering::Relaxed);
+        let consecutive = self.consecutive.fetch_add(1, Ordering::Relaxed) + 1;
+        let mut b = lock_unpoisoned(&self.breaker);
+        let probe_burned = b.state == BreakerState::HalfOpen;
+        if consecutive >= self.cfg.breaker_k || probe_burned {
+            b.opens_run = b.opens_run.saturating_add(1);
+            let mult = 1u64 << (b.opens_run - 1).min(10);
+            let cooldown = self
+                .cfg
+                .cooldown_ms
+                .saturating_mul(mult)
+                .min(self.cfg.cooldown_cap_ms);
+            b.state = BreakerState::Open;
+            b.open_until = Instant::now() + Duration::from_millis(cooldown);
+            self.opens_total.fetch_add(1, Ordering::Relaxed);
+        }
+        consecutive
+    }
+
+    fn record_respawn(&self) {
+        self.respawns.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Respawn backoff for the current consecutive-panic run:
+    /// `base · 2^(consecutive-1)`, capped.
+    fn backoff(&self, consecutive: u32) -> Duration {
+        let mult = 1u64 << consecutive.saturating_sub(1).min(16);
+        Duration::from_millis(
+            self.cfg
+                .backoff_base_ms
+                .saturating_mul(mult)
+                .min(self.cfg.backoff_cap_ms),
+        )
+    }
+}
+
+/// Best-effort panic-payload message for the log line.
+fn payload_msg(payload: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        s
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s
+    } else {
+        "non-string panic payload"
+    }
+}
+
+/// Run `body` (one worker lifetime) under supervision: a panic is
+/// caught, recorded, backed off and respawned; a normal return (clean
+/// shutdown) ends supervision.  `is_shutdown` keeps the backoff sleep
+/// responsive — during shutdown the supervisor exits instead of
+/// respawning, and the batcher's drain path answers what is queued.
+pub fn supervise<F, S>(name: &str, sup: &Supervision, metrics: &Metrics, is_shutdown: S, mut body: F)
+where
+    F: FnMut(),
+    S: Fn() -> bool,
+{
+    loop {
+        match catch_unwind(AssertUnwindSafe(&mut body)) {
+            Ok(()) => return,
+            Err(payload) => {
+                let consecutive = sup.on_panic();
+                metrics.record_worker_panic();
+                eprintln!(
+                    "worker {name}: panic #{} (consecutive {consecutive}): {}",
+                    sup.panics(),
+                    payload_msg(payload.as_ref()),
+                );
+                if is_shutdown() {
+                    return;
+                }
+                // bounded exponential backoff, sliced so shutdown is
+                // never blocked behind a long sleep
+                let deadline = Instant::now() + sup.backoff(consecutive);
+                loop {
+                    if is_shutdown() {
+                        return;
+                    }
+                    let now = Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    std::thread::sleep((deadline - now).min(Duration::from_millis(10)));
+                }
+                sup.record_respawn();
+                metrics.record_worker_respawn();
+                eprintln!("worker {name}: respawning (respawn #{})", sup.respawns());
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicBool;
+    use std::sync::Arc;
+
+    fn cfg() -> SupervisorCfg {
+        SupervisorCfg {
+            breaker_k: 3,
+            cooldown_ms: 40,
+            cooldown_cap_ms: 400,
+            backoff_base_ms: 1,
+            backoff_cap_ms: 8,
+        }
+    }
+
+    #[test]
+    fn lock_unpoisoned_recovers_after_holder_panics() {
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.lock().is_err(), "mutex should be poisoned");
+        assert_eq!(*lock_unpoisoned(&m), 7, "value still accessible");
+        *lock_unpoisoned(&m) = 9;
+        assert_eq!(*lock_unpoisoned(&m), 9);
+    }
+
+    #[test]
+    fn breaker_opens_after_k_consecutive_panics() {
+        let sup = Supervision::new(cfg());
+        assert_eq!(sup.breaker_state(), BreakerState::Closed);
+        sup.on_panic();
+        sup.on_panic();
+        assert_eq!(sup.breaker_state(), BreakerState::Closed, "k-1 panics stay closed");
+        assert!(sup.admit().is_ok());
+        sup.on_panic();
+        assert_eq!(sup.breaker_state(), BreakerState::Open);
+        let ra = sup.admit().expect_err("open breaker must refuse");
+        assert!(ra >= 1);
+        assert_eq!(sup.breaker_opens(), 1);
+    }
+
+    #[test]
+    fn success_resets_the_consecutive_run() {
+        let sup = Supervision::new(cfg());
+        sup.on_panic();
+        sup.on_panic();
+        sup.on_success();
+        sup.on_panic();
+        sup.on_panic();
+        assert_eq!(
+            sup.breaker_state(),
+            BreakerState::Closed,
+            "successes break the consecutive run"
+        );
+    }
+
+    #[test]
+    fn breaker_half_opens_then_closes_on_success() {
+        let sup = Supervision::new(cfg());
+        for _ in 0..3 {
+            sup.on_panic();
+        }
+        assert_eq!(sup.breaker_state(), BreakerState::Open);
+        std::thread::sleep(Duration::from_millis(60));
+        assert_eq!(sup.breaker_state(), BreakerState::HalfOpen);
+        assert!(sup.admit().is_ok(), "half-open admits the probe");
+        sup.on_success();
+        assert_eq!(sup.breaker_state(), BreakerState::Closed);
+    }
+
+    #[test]
+    fn panic_during_half_open_reopens_with_longer_cooldown() {
+        let sup = Supervision::new(cfg());
+        for _ in 0..3 {
+            sup.on_panic();
+        }
+        std::thread::sleep(Duration::from_millis(60));
+        assert_eq!(sup.breaker_state(), BreakerState::HalfOpen);
+        // the probe burns: one panic reopens immediately (no K needed)
+        sup.on_panic();
+        assert_eq!(sup.breaker_state(), BreakerState::Open);
+        assert_eq!(sup.breaker_opens(), 2);
+        // doubled cooldown: still open after the first cooldown length
+        std::thread::sleep(Duration::from_millis(60));
+        assert_eq!(sup.breaker_state(), BreakerState::Open);
+    }
+
+    #[test]
+    fn supervise_respawns_until_body_stops_panicking() {
+        let sup = Supervision::new(cfg());
+        let metrics = Metrics::default();
+        let n = AtomicU32::new(0);
+        supervise(
+            "test",
+            &sup,
+            &metrics,
+            || false,
+            || {
+                if n.fetch_add(1, Ordering::Relaxed) < 2 {
+                    panic!("injected");
+                }
+            },
+        );
+        assert_eq!(n.load(Ordering::Relaxed), 3, "2 panics + 1 clean run");
+        assert_eq!(sup.panics(), 2);
+        assert_eq!(sup.respawns(), 2);
+    }
+
+    #[test]
+    fn supervise_exits_without_respawn_on_shutdown() {
+        let sup = Supervision::new(cfg());
+        let metrics = Metrics::default();
+        let down = AtomicBool::new(true);
+        supervise(
+            "test",
+            &sup,
+            &metrics,
+            || down.load(Ordering::Relaxed),
+            || panic!("injected"),
+        );
+        assert_eq!(sup.panics(), 1);
+        assert_eq!(sup.respawns(), 0, "no respawn during shutdown");
+    }
+
+    #[test]
+    fn backoff_is_bounded() {
+        let sup = Supervision::new(cfg());
+        assert_eq!(sup.backoff(1), Duration::from_millis(1));
+        assert_eq!(sup.backoff(2), Duration::from_millis(2));
+        assert_eq!(sup.backoff(4), Duration::from_millis(8));
+        assert_eq!(sup.backoff(30), Duration::from_millis(8), "capped");
+    }
+}

@@ -1,11 +1,14 @@
-//! Batcher coverage (ISSUE 3 satellite): coalescing respects
-//! `max_batch`, a lone request flushes at `max_wait_us`, the shed path
-//! replies under a full queue, and batched results are bit-identical to
-//! per-sample `ExecPlan::run_sample` calls — the engine-equivalence
-//! contract extended through the serve path.
+//! Batcher coverage: coalescing respects `max_batch`, a lone request
+//! flushes at `max_wait_us`, the shed path replies under a full queue,
+//! batched results are bit-identical to per-sample `ExecPlan::run_sample`
+//! calls — the engine-equivalence contract extended through the serve
+//! path — and the supervised lifecycle holds: drain semantics at
+//! shutdown (every admitted sender gets a reply or an explicit error,
+//! never a hang) and panic → respawn → bit-identical recovery.
 //!
 //! Pure Rust: builtin zoo + synthetic state, no artifacts, no sockets
-//! (the HTTP layer has its own end-to-end test).
+//! (the HTTP layer has its own end-to-end test; the socket-level chaos
+//! scenarios live in `serve_chaos.rs`).
 
 use std::sync::mpsc::Receiver;
 use std::sync::Arc;
@@ -15,8 +18,8 @@ use cwmix::data::{make_dataset, Split};
 use cwmix::deploy;
 use cwmix::engine::{ExecPlan, PackedBackend};
 use cwmix::models::zoo::{builtin_manifest, stripy_assignment, synthetic_state};
-use cwmix::serve::batcher::ReplyResult;
-use cwmix::serve::{BatchPolicy, Batcher, Metrics, SubmitError};
+use cwmix::serve::batcher::{ReplyError, ReplyResult};
+use cwmix::serve::{BatchPolicy, Batcher, Faults, Metrics, SubmitError, WorkerOpts};
 
 /// Compile the stripy-packed plan for one bench (the server default).
 fn plan_for(bench: &str) -> Arc<ExecPlan> {
@@ -53,8 +56,14 @@ fn coalesces_up_to_max_batch_bit_identically() {
         max_wait_us: 200_000, // long window: all submits land inside it
         queue_cap: 64,
         threads: 2,
+        ..BatchPolicy::default()
     };
-    let batcher = Batcher::start(Arc::clone(&plan), Arc::clone(&metrics), policy);
+    let batcher = Batcher::start(
+        Arc::clone(&plan),
+        Arc::clone(&metrics),
+        policy,
+        WorkerOpts::default(),
+    );
 
     let inputs = samples("ad", 10, feat);
     let rxs: Vec<_> = inputs
@@ -91,8 +100,9 @@ fn lone_request_flushes_at_max_wait() {
         max_wait_us: 20_000, // 20 ms
         queue_cap: 8,
         threads: 1,
+        ..BatchPolicy::default()
     };
-    let batcher = Batcher::start(Arc::clone(&plan), metrics, policy);
+    let batcher = Batcher::start(Arc::clone(&plan), metrics, policy, WorkerOpts::default());
 
     let x = samples("ad", 1, feat).remove(0);
     let t0 = Instant::now();
@@ -123,8 +133,14 @@ fn full_queue_sheds_with_explicit_reply() {
         max_wait_us: 2_000_000,
         queue_cap: 2,
         threads: 1,
+        ..BatchPolicy::default()
     };
-    let batcher = Batcher::start(Arc::clone(&plan), Arc::clone(&metrics), policy);
+    let batcher = Batcher::start(
+        Arc::clone(&plan),
+        Arc::clone(&metrics),
+        policy,
+        WorkerOpts::default(),
+    );
 
     let inputs = samples("ad", 3, feat);
     let rx1 = batcher.submit(inputs[0].clone()).unwrap();
@@ -153,8 +169,12 @@ fn full_queue_sheds_with_explicit_reply() {
 fn bad_input_and_shutdown_refusals() {
     let plan = plan_for("ad");
     let feat = plan.feat();
-    let batcher =
-        Batcher::start(Arc::clone(&plan), Arc::new(Metrics::default()), BatchPolicy::default());
+    let batcher = Batcher::start(
+        Arc::clone(&plan),
+        Arc::new(Metrics::default()),
+        BatchPolicy::default(),
+        WorkerOpts::default(),
+    );
     match batcher.submit(vec![0.0; feat + 1]) {
         Err(SubmitError::BadInput(_)) => {}
         other => panic!("expected BadInput, got {other:?}"),
@@ -184,8 +204,14 @@ fn coalesced_equals_independent_single_requests() {
         max_wait_us: 1_000,
         queue_cap: 64,
         threads: 1,
+        ..BatchPolicy::default()
     };
-    let solo = Batcher::start(Arc::clone(&plan), Arc::new(Metrics::default()), solo_policy);
+    let solo = Batcher::start(
+        Arc::clone(&plan),
+        Arc::new(Metrics::default()),
+        solo_policy,
+        WorkerOpts::default(),
+    );
     let rxs: Vec<_> = inputs
         .iter()
         .map(|x| solo.submit(x.clone()).expect("admitted"))
@@ -206,9 +232,15 @@ fn coalesced_equals_independent_single_requests() {
         max_wait_us: 200_000,
         queue_cap: 64,
         threads: 1,
+        ..BatchPolicy::default()
     };
     let metrics = Arc::new(Metrics::default());
-    let coal = Batcher::start(Arc::clone(&plan), Arc::clone(&metrics), coal_policy);
+    let coal = Batcher::start(
+        Arc::clone(&plan),
+        Arc::clone(&metrics),
+        coal_policy,
+        WorkerOpts::default(),
+    );
     let rxs: Vec<_> = inputs
         .iter()
         .map(|x| coal.submit(x.clone()).expect("admitted"))
@@ -238,8 +270,14 @@ fn conv_model_bit_identical_through_batcher() {
         max_wait_us: 100_000,
         queue_cap: 64,
         threads: 4,
+        ..BatchPolicy::default()
     };
-    let batcher = Batcher::start(Arc::clone(&plan), Arc::new(Metrics::default()), policy);
+    let batcher = Batcher::start(
+        Arc::clone(&plan),
+        Arc::new(Metrics::default()),
+        policy,
+        WorkerOpts::default(),
+    );
     let inputs = samples("kws", 8, feat);
     let rxs: Vec<_> = inputs
         .iter()
@@ -250,5 +288,149 @@ fn conv_model_bit_identical_through_batcher() {
         let (out, _) = recv_ok(rx);
         assert_eq!(out, plan.run_sample(&mut arena, x).unwrap());
     }
+    batcher.shutdown();
+}
+
+/// Drain semantics (supervised-serving satellite): enqueue N requests
+/// into a long coalescing window, trigger shutdown mid-batch, and
+/// assert **every** sender receives either a result or an explicit
+/// shutting-down error — never a hang, never a silently dropped
+/// sender.
+#[test]
+fn shutdown_mid_batch_answers_every_sender() {
+    let plan = plan_for("ad");
+    let feat = plan.feat();
+    let policy = BatchPolicy {
+        max_batch: 3, // several drain iterations for 8 requests
+        // a window long enough that shutdown lands mid-coalescing
+        max_wait_us: 5_000_000,
+        queue_cap: 64,
+        threads: 1,
+        ..BatchPolicy::default()
+    };
+    let batcher = Batcher::start(
+        Arc::clone(&plan),
+        Arc::new(Metrics::default()),
+        policy,
+        WorkerOpts::default(),
+    );
+
+    let n = 8;
+    let inputs = samples("ad", n, feat);
+    let rxs: Vec<_> = inputs
+        .iter()
+        .map(|x| batcher.submit(x.clone()).expect("admitted"))
+        .collect();
+    batcher.shutdown();
+
+    let mut arena = plan.arena();
+    for (i, (x, rx)) in inputs.iter().zip(&rxs).enumerate() {
+        // the bounded recv is the no-hang assertion
+        match rx.recv_timeout(Duration::from_secs(30)) {
+            Ok(Ok(reply)) => {
+                let want = plan.run_sample(&mut arena, x).unwrap();
+                assert_eq!(reply.output, want, "request {i}: drained reply diverged");
+            }
+            Ok(Err(ReplyError::ShuttingDown)) => {}
+            Ok(Err(e)) => panic!("request {i}: unexpected error {e}"),
+            Err(e) => panic!("request {i}: sender dropped without a reply ({e})"),
+        }
+    }
+}
+
+/// Supervision at the batcher level: an injected engine panic fails
+/// only the in-flight batch (those riders see an explicit failure, not
+/// a hang), the worker respawns, and subsequent replies are
+/// bit-identical to `run_sample` — the recovery contract
+/// `serve_chaos.rs` re-proves over sockets.
+#[test]
+fn worker_panic_respawns_and_recovers_bit_identically() {
+    let plan = plan_for("ad");
+    let feat = plan.feat();
+    let metrics = Arc::new(Metrics::default());
+    let policy = BatchPolicy {
+        max_batch: 4,
+        max_wait_us: 1_000,
+        queue_cap: 64,
+        threads: 1,
+        ..BatchPolicy::default()
+    };
+    let opts = WorkerOpts {
+        model: "ad".to_string(),
+        faults: Arc::new(Faults::parse("engine_panic:ad:once", 0).unwrap()),
+        ..WorkerOpts::default()
+    };
+    let batcher = Batcher::start(Arc::clone(&plan), Arc::clone(&metrics), policy, opts);
+
+    let inputs = samples("ad", 2, feat);
+    // first request rides the panicking batch: its reply sender dies
+    // with the worker stack — an explicit disconnect, not a hang
+    let rx = batcher.submit(inputs[0].clone()).unwrap();
+    match rx.recv_timeout(Duration::from_secs(30)) {
+        Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {}
+        other => panic!("expected a dropped sender from the panicked batch, got {other:?}"),
+    }
+
+    // the supervisor respawns the worker; the next request must
+    // succeed bit-identically (fresh arena, same plan)
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        assert!(Instant::now() < deadline, "worker never respawned");
+        if metrics.worker_respawns() >= 1 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let rx = batcher.submit(inputs[1].clone()).unwrap();
+    let (out, _) = recv_ok(&rx);
+    let mut arena = plan.arena();
+    assert_eq!(out, plan.run_sample(&mut arena, &inputs[1]).unwrap());
+    assert_eq!(metrics.worker_panics(), 1);
+    assert_eq!(batcher.supervision().panics(), 1);
+    batcher.shutdown();
+}
+
+/// Deadline enforcement at dequeue: a stalled worker ages the queue
+/// past `max_wait + infer_budget`, and the aged requests answer
+/// `Expired` (the HTTP 504 path) without riding a batch.
+#[test]
+fn stalled_worker_expires_queued_requests() {
+    let plan = plan_for("ad");
+    let feat = plan.feat();
+    let metrics = Arc::new(Metrics::default());
+    let policy = BatchPolicy {
+        max_batch: 1, // the stall victim rides alone; the rest queue up
+        max_wait_us: 1_000,
+        queue_cap: 64,
+        threads: 1,
+        infer_budget_us: 20_000, // 21 ms deadline window
+    };
+    let opts = WorkerOpts {
+        model: "ad".to_string(),
+        // the first batch stalls 300 ms — far past every queued
+        // request's deadline
+        faults: Arc::new(Faults::parse("engine_stall:ad:once:300", 0).unwrap()),
+        ..WorkerOpts::default()
+    };
+    let batcher = Batcher::start(Arc::clone(&plan), Arc::clone(&metrics), policy, opts);
+
+    let inputs = samples("ad", 3, feat);
+    let rx_stalled = batcher.submit(inputs[0].clone()).unwrap();
+    let rx_a = batcher.submit(inputs[1].clone()).unwrap();
+    let rx_b = batcher.submit(inputs[2].clone()).unwrap();
+
+    // the stalled batch itself still completes (slow, not dead)
+    let (out, _) = recv_ok(&rx_stalled);
+    let mut arena = plan.arena();
+    assert_eq!(out, plan.run_sample(&mut arena, &inputs[0]).unwrap());
+
+    // the queued requests aged past their deadline during the stall
+    for (i, rx) in [rx_a, rx_b].iter().enumerate() {
+        match rx.recv_timeout(Duration::from_secs(30)) {
+            Ok(Err(ReplyError::Expired)) => {}
+            other => panic!("queued request {i}: expected Expired, got {other:?}"),
+        }
+    }
+    assert_eq!(metrics.deadline_expired(), 2);
     batcher.shutdown();
 }

@@ -1,0 +1,456 @@
+//! Chaos suite: every armed failpoint driven end-to-end over real
+//! sockets (the supervised-serving acceptance criterion).
+//!
+//! The scenarios prove the supervision story the serve module
+//! advertises:
+//!
+//! * an injected engine panic never kills the server — the worker
+//!   respawns and subsequent replies are **bit-identical** to
+//!   `ExecPlan::run_sample`, while the other model's requests never see
+//!   an error;
+//! * an engine stall ages the queue past the request deadline and the
+//!   backlog sheds as explicit 504s, while the other model stays live;
+//! * K consecutive panics open the per-model circuit breaker (503 +
+//!   `Retry-After`), which half-opens after its cooldown and closes on
+//!   the first success;
+//! * the queue-full failpoint exercises the 503 shed path without real
+//!   overload;
+//! * slow clients and idle keep-alive connections are reaped and
+//!   counted;
+//! * injected registry load errors / artifact corruption make the cold
+//!   start fall back to compilation instead of taking the server down.
+//!
+//! Faults are armed through the library config (`Arc<Faults>`), not the
+//! env var, so scenarios cannot leak into each other or into the rest
+//! of the test binary; the `CWMIX_FAULTS` env path is exercised by
+//! `tools/chaos_smoke.sh` in CI.
+
+use std::io::{Read, Write};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use cwmix::data::{make_dataset, Split};
+use cwmix::minijson::Json;
+use cwmix::serve::client::{infer_body, output_of, Conn};
+use cwmix::serve::{
+    serve, BatchPolicy, Faults, ModelRegistry, RegistryConfig, ServeConfig, Server,
+    SupervisorCfg,
+};
+
+/// Fast supervision knobs so breaker/backoff scenarios run in
+/// milliseconds, not the production-scale defaults.
+fn fast_supervisor() -> SupervisorCfg {
+    SupervisorCfg {
+        breaker_k: 3,
+        cooldown_ms: 300,
+        cooldown_cap_ms: 3_000,
+        backoff_base_ms: 5,
+        backoff_cap_ms: 50,
+    }
+}
+
+/// Registry + server on an ephemeral port with `spec` armed.
+fn start_faulted(
+    benches: &[&str],
+    policy: BatchPolicy,
+    spec: &str,
+) -> (Arc<ModelRegistry>, Server) {
+    let faults = Arc::new(Faults::parse(spec, 0).unwrap());
+    let reg_cfg = RegistryConfig {
+        benches: benches.iter().map(|b| b.to_string()).collect(),
+        policy,
+        faults: Arc::clone(&faults),
+        supervisor: fast_supervisor(),
+        ..RegistryConfig::default()
+    };
+    let registry = Arc::new(ModelRegistry::build(&reg_cfg).unwrap());
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        faults,
+        ..ServeConfig::default()
+    };
+    let server = serve(Arc::clone(&registry), cfg).unwrap();
+    (registry, server)
+}
+
+/// Input + oracle output for sample `i` of a bench, straight from the
+/// served plan (batching and respawns must stay bit-identical to this).
+fn expected(registry: &ModelRegistry, bench: &str, i: usize) -> (Vec<f32>, Vec<f32>) {
+    let plan = registry.get(bench).unwrap().plan();
+    let feat = plan.feat();
+    let ds = make_dataset(bench, Split::Test, i + 1, 0);
+    let input = ds.x[i * feat..(i + 1) * feat].to_vec();
+    let mut arena = plan.arena();
+    let want = plan.run_sample(&mut arena, &input).unwrap();
+    (input, want)
+}
+
+/// Poll one model's `/metrics` gauge until `pred` holds (30 s cap).
+fn poll_gauge(
+    addr: std::net::SocketAddr,
+    bench: &str,
+    key: &str,
+    pred: impl Fn(f64) -> bool,
+) -> f64 {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let mut conn = Conn::connect(addr).unwrap();
+        let m = conn.get("/metrics").unwrap();
+        assert_eq!(m.status, 200);
+        let v = m
+            .body
+            .get("models")
+            .unwrap()
+            .get(bench)
+            .unwrap()
+            .get(key)
+            .unwrap()
+            .as_f64()
+            .unwrap();
+        if pred(v) {
+            return v;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "gauge {bench}.{key} never satisfied predicate (last {v})"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// The acceptance scenario: an injected engine panic fails exactly the
+/// in-flight ic request, the worker respawns, ic replies come back
+/// bit-identical to `run_sample`, and kws never sees an error.
+#[test]
+fn engine_panic_respawns_and_recovery_is_bit_identical() {
+    let (registry, server) = start_faulted(
+        &["ic", "kws"],
+        BatchPolicy { max_wait_us: 1_000, ..BatchPolicy::default() },
+        "engine_panic:ic:once",
+    );
+    let addr = server.addr();
+    let (ic_in, ic_want) = expected(&registry, "ic", 0);
+    let (kws_in, kws_want) = expected(&registry, "kws", 0);
+
+    // the faulted model's first request rides the panicking batch:
+    // an explicit 500, never a hang, never a dead server
+    let mut conn = Conn::connect(addr).unwrap();
+    let r = conn.post("/v1/infer/ic", &infer_body(&ic_in)).unwrap();
+    assert_eq!(r.status, 500, "panicked batch must answer 500: {}", r.body.dumps());
+
+    // the other model is untouched, before the respawn even lands
+    let r = conn.post("/v1/infer/kws", &infer_body(&kws_in)).unwrap();
+    assert_eq!(r.status, 200, "{}", r.body.dumps());
+    assert_eq!(output_of(&r.body).unwrap(), kws_want);
+
+    // supervision: the panic was counted and the worker respawned
+    poll_gauge(addr, "ic", "worker_respawns", |v| v >= 1.0);
+    let panics = poll_gauge(addr, "ic", "worker_panics", |v| v >= 1.0);
+    assert_eq!(panics, 1.0);
+
+    // recovered replies are bit-identical to the plan oracle
+    for i in 0..3 {
+        let (input, want) = expected(&registry, "ic", i);
+        let r = conn.post("/v1/infer/ic", &infer_body(&input)).unwrap();
+        assert_eq!(r.status, 200, "post-respawn infer failed: {}", r.body.dumps());
+        assert_eq!(
+            output_of(&r.body).unwrap(),
+            want,
+            "ic sample {i}: post-respawn reply diverged from run_sample"
+        );
+    }
+
+    // only the faulted model saw failures
+    let kws_panics = poll_gauge(addr, "kws", "worker_panics", |v| v == 0.0);
+    assert_eq!(kws_panics, 0.0);
+    let m = conn.get("/metrics").unwrap();
+    let kws = m.body.get("models").unwrap().get("kws").unwrap();
+    assert_eq!(kws.get("errors").unwrap().as_f64().unwrap(), 0.0);
+    drop(conn);
+    server.stop().unwrap();
+    registry.shutdown();
+}
+
+/// A stalled ic worker ages its queue past `max_wait + infer_budget`:
+/// the backlog sheds as 504s at dequeue, the stalled batch itself still
+/// completes, and kws stays live throughout.
+#[test]
+fn engine_stall_expires_backlog_while_other_model_stays_live() {
+    let policy = BatchPolicy {
+        max_batch: 1, // the stall victim rides alone; the rest queue up
+        max_wait_us: 1_000,
+        infer_budget_us: 50_000, // 51 ms deadline window
+        ..BatchPolicy::default()
+    };
+    let (registry, server) =
+        start_faulted(&["ic", "kws"], policy, "engine_stall:ic:always:400");
+    let addr = server.addr();
+    let (ic_in, ic_want) = expected(&registry, "ic", 0);
+    let (kws_in, kws_want) = expected(&registry, "kws", 0);
+
+    // slow victim: dequeued fresh (inside its deadline), then stalled
+    // 400 ms mid-execution — late but correct
+    let ic_in_slow = ic_in.clone();
+    let slow = std::thread::spawn(move || {
+        let mut conn = Conn::connect(addr).unwrap();
+        conn.post("/v1/infer/ic", &infer_body(&ic_in_slow)).unwrap()
+    });
+    // while the worker stalls, these age past their 51 ms deadline
+    std::thread::sleep(Duration::from_millis(100));
+    let backlog: Vec<_> = (0..2)
+        .map(|_| {
+            let input = ic_in.clone();
+            std::thread::spawn(move || {
+                let mut conn = Conn::connect(addr).unwrap();
+                conn.post("/v1/infer/ic", &infer_body(&input)).unwrap()
+            })
+        })
+        .collect();
+    // kws lives through the whole ic stall
+    let mut conn = Conn::connect(addr).unwrap();
+    let r = conn.post("/v1/infer/kws", &infer_body(&kws_in)).unwrap();
+    assert_eq!(r.status, 200, "{}", r.body.dumps());
+    assert_eq!(output_of(&r.body).unwrap(), kws_want);
+
+    let r = slow.join().unwrap();
+    assert_eq!(r.status, 200, "stalled-but-live batch must complete: {}", r.body.dumps());
+    assert_eq!(output_of(&r.body).unwrap(), ic_want);
+    for (i, h) in backlog.into_iter().enumerate() {
+        let r = h.join().unwrap();
+        assert_eq!(
+            r.status, 504,
+            "backlog request {i}: expected a deadline 504, got {} {}",
+            r.status,
+            r.body.dumps()
+        );
+    }
+    poll_gauge(addr, "ic", "deadline_expired_total", |v| v >= 2.0);
+    poll_gauge(addr, "kws", "deadline_expired_total", |v| v == 0.0);
+    drop(conn);
+    server.stop().unwrap();
+    registry.shutdown();
+}
+
+/// K consecutive panics open the breaker: refusals answer 503 with a
+/// retry hint, `/readyz` reports the model (and here the whole node)
+/// not ready, the breaker half-opens after its cooldown, and the first
+/// success closes it again — with bit-identical numerics.
+#[test]
+fn breaker_opens_after_k_panics_then_half_closes() {
+    let (registry, server) = start_faulted(
+        &["ic"],
+        BatchPolicy { max_wait_us: 1_000, ..BatchPolicy::default() },
+        "engine_panic:ic:times=3",
+    );
+    let addr = server.addr();
+    let (input, want) = expected(&registry, "ic", 0);
+    let mut conn = Conn::connect(addr).unwrap();
+
+    // three sequential requests = three one-request batches = three
+    // consecutive panics (replies arrive at panic time, so waiting for
+    // each 500 keeps the batches separate)
+    for i in 0..3 {
+        let r = conn.post("/v1/infer/ic", &infer_body(&input)).unwrap();
+        assert_eq!(r.status, 500, "panic {i}: {}", r.body.dumps());
+    }
+    // the 500 reply races the supervisor's on_panic by a hair (the
+    // sender drops during unwinding); wait for the breaker gauge
+    // before testing admission
+    poll_gauge(addr, "ic", "breaker_state", |v| v == 2.0);
+
+    // breaker open: refused at the door with a retry hint
+    let r = conn.post("/v1/infer/ic", &infer_body(&input)).unwrap();
+    assert_eq!(r.status, 503, "open breaker must refuse: {}", r.body.dumps());
+    let retry = r.body.get("retry_after_s").unwrap().as_f64().unwrap();
+    assert!(retry >= 1.0, "refusal must carry a retry hint, got {retry}");
+    let rz = conn.get("/readyz").unwrap();
+    assert_eq!(rz.status, 503, "only model open => node not ready");
+    let ic = rz.body.get("models").unwrap().get("ic").unwrap();
+    assert_eq!(ic.get("breaker").unwrap().as_str().unwrap(), "open");
+
+    // cooldown elapses -> half-open admits a probe; the fault budget
+    // (times=3) is exhausted, so the probe succeeds and closes the
+    // breaker
+    std::thread::sleep(Duration::from_millis(400));
+    let r = conn.post("/v1/infer/ic", &infer_body(&input)).unwrap();
+    assert_eq!(r.status, 200, "half-open probe must pass: {}", r.body.dumps());
+    assert_eq!(output_of(&r.body).unwrap(), want, "post-breaker reply diverged");
+    let rz = conn.get("/readyz").unwrap();
+    assert_eq!(rz.status, 200, "closed breaker => ready: {}", rz.body.dumps());
+
+    let m = conn.get("/metrics").unwrap();
+    let ic = m.body.get("models").unwrap().get("ic").unwrap();
+    assert_eq!(ic.get("breaker_opens").unwrap().as_f64().unwrap(), 1.0);
+    assert_eq!(ic.get("breaker_state").unwrap().as_f64().unwrap(), 0.0);
+    assert_eq!(ic.get("breaker_state_name").unwrap().as_str().unwrap(), "closed");
+    assert_eq!(ic.get("worker_panics").unwrap().as_f64().unwrap(), 3.0);
+    assert!(ic.get("breaker_rejects").unwrap().as_f64().unwrap() >= 1.0);
+    drop(conn);
+    server.stop().unwrap();
+    registry.shutdown();
+}
+
+/// The queue-full failpoint exercises the shed path without real
+/// overload: one 503, then normal service.
+#[test]
+fn queue_full_fault_sheds_once_then_recovers() {
+    let (registry, server) =
+        start_faulted(&["ad"], BatchPolicy::default(), "queue_full:ad:once");
+    let addr = server.addr();
+    let (input, want) = expected(&registry, "ad", 0);
+    let mut conn = Conn::connect(addr).unwrap();
+
+    let r = conn.post("/v1/infer/ad", &infer_body(&input)).unwrap();
+    assert_eq!(r.status, 503, "queue_full fault must shed: {}", r.body.dumps());
+    let r = conn.post("/v1/infer/ad", &infer_body(&input)).unwrap();
+    assert_eq!(r.status, 200, "{}", r.body.dumps());
+    assert_eq!(output_of(&r.body).unwrap(), want);
+
+    let m = conn.get("/metrics").unwrap();
+    let ad = m.body.get("models").unwrap().get("ad").unwrap();
+    assert_eq!(ad.get("shed").unwrap().as_f64().unwrap(), 1.0);
+    drop(conn);
+    server.stop().unwrap();
+    registry.shutdown();
+}
+
+/// The reaper: a client that goes quiet mid-request is answered 408
+/// and counted as a slow-client close; an idle keep-alive connection is
+/// reaped silently — both visible in `/metrics`.
+#[test]
+fn slow_and_idle_clients_are_reaped_and_counted() {
+    let reg_cfg = RegistryConfig {
+        benches: vec!["ad".to_string()],
+        ..RegistryConfig::default()
+    };
+    let registry = Arc::new(ModelRegistry::build(&reg_cfg).unwrap());
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        read_timeout: Duration::from_millis(300),
+        ..ServeConfig::default()
+    };
+    let server = serve(Arc::clone(&registry), cfg).unwrap();
+    let addr = server.addr();
+
+    // slow client: half a request, then silence — the reaper must
+    // answer 408 and close, freeing the handler thread
+    let mut slow = std::net::TcpStream::connect(addr).unwrap();
+    slow.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    slow.write_all(b"POST /v1/infer/ad HTTP/1.1\r\nContent-Length: 64\r\n\r\n{\"inp")
+        .unwrap();
+    slow.flush().unwrap();
+    let mut reply = String::new();
+    slow.read_to_string(&mut reply).unwrap(); // server closes after the 408
+    assert!(reply.starts_with("HTTP/1.1 408 "), "slow client got: {reply:?}");
+
+    // idle client: connects, says nothing, gets reaped without a reply
+    let mut idle = std::net::TcpStream::connect(addr).unwrap();
+    idle.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut end = Vec::new();
+    idle.read_to_end(&mut end).unwrap();
+    assert!(end.is_empty(), "idle reap must be silent, got {end:?}");
+
+    let mut conn = Conn::connect(addr).unwrap();
+    let m = conn.get("/metrics").unwrap();
+    assert_eq!(m.status, 200);
+    assert!(m.body.get("slow_client_closes").unwrap().as_f64().unwrap() >= 1.0);
+    assert!(m.body.get("idle_reaped").unwrap().as_f64().unwrap() >= 1.0);
+    drop(conn);
+    server.stop().unwrap();
+    registry.shutdown();
+}
+
+/// Registry-side failpoints: an injected load error or a flipped byte
+/// in the `.cwm` must fall back to compilation — never a dead server,
+/// never silently different numerics.
+#[test]
+fn registry_load_faults_fall_back_to_compile() {
+    use cwmix::engine::{PackedBackend, Provenance};
+    use cwmix::serve::registry::build_model;
+
+    let dir = std::env::temp_dir().join(format!("cwm_chaos_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let prov = Provenance { assignment: "stripy".to_string(), seed: 0 };
+    for bench in ["ic", "ad"] {
+        let (_, _, plan) =
+            build_model(bench, &PackedBackend, "stripy", 0, &dir.join("no-artifacts"))
+                .unwrap();
+        std::fs::write(
+            dir.join(format!("{bench}.cwm")),
+            plan.to_modelpack_with(Some(&prov)),
+        )
+        .unwrap();
+    }
+
+    // control: disarmed faults cold-start both models from their packs
+    let cfg = RegistryConfig {
+        benches: vec!["ic".to_string(), "ad".to_string()],
+        modelpack_dir: Some(dir.clone()),
+        ..RegistryConfig::default()
+    };
+    let reg = ModelRegistry::build(&cfg).unwrap();
+    assert_eq!(reg.get("ic").unwrap().startup().source, "modelpack");
+    assert_eq!(reg.get("ad").unwrap().startup().source, "modelpack");
+    reg.shutdown();
+
+    // armed: ic's pack read "fails", ad's pack is corrupted in memory —
+    // both models must come up anyway, via the compile path
+    let cfg = RegistryConfig {
+        faults: Arc::new(
+            Faults::parse("registry_load_error:ic:once,artifact_corrupt:ad:once", 0)
+                .unwrap(),
+        ),
+        ..cfg
+    };
+    let reg = ModelRegistry::build(&cfg).unwrap();
+    assert_eq!(reg.get("ic").unwrap().startup().source, "compile");
+    assert_eq!(reg.get("ad").unwrap().startup().source, "compile");
+    // and the fallback serves the same numerics the pack would have
+    for bench in ["ic", "ad"] {
+        let plan = reg.get(bench).unwrap().plan();
+        let feat = plan.feat();
+        let ds = make_dataset(bench, Split::Test, 1, 0);
+        let mut arena = plan.arena();
+        let got = plan.run_sample(&mut arena, &ds.x[..feat]).unwrap();
+        let loaded = cwmix::engine::ExecPlan::from_modelpack(
+            &std::fs::read(dir.join(format!("{bench}.cwm"))).unwrap(),
+        )
+        .unwrap();
+        let mut arena = loaded.arena();
+        assert_eq!(
+            got,
+            loaded.run_sample(&mut arena, &ds.x[..feat]).unwrap(),
+            "{bench}: fallback compile diverged from the pack"
+        );
+    }
+    reg.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Json sanity for the supervision surface: `/metrics` stays parseable
+/// with gauges injected (guards the bench_serve scrape).
+#[test]
+fn metrics_supervision_gauges_have_stable_names() {
+    let (registry, server) = start_faulted(&["ad"], BatchPolicy::default(), "");
+    let mut conn = Conn::connect(server.addr()).unwrap();
+    let m = conn.get("/metrics").unwrap();
+    assert_eq!(m.status, 200);
+    let ad = m.body.get("models").unwrap().get("ad").unwrap();
+    for key in [
+        "worker_panics",
+        "worker_respawns",
+        "deadline_expired_total",
+        "breaker_rejects",
+        "breaker_state",
+        "breaker_opens",
+    ] {
+        assert!(
+            matches!(ad.get(key), Ok(Json::Num(_))),
+            "missing or wrong-typed gauge {key}"
+        );
+    }
+    assert_eq!(ad.get("breaker_state_name").unwrap().as_str().unwrap(), "closed");
+    drop(conn);
+    server.stop().unwrap();
+    registry.shutdown();
+}

@@ -152,6 +152,95 @@ fn oversized_body_is_rejected() {
     registry.shutdown();
 }
 
+/// Liveness + readiness probes: healthy server answers both; every
+/// model reports a closed breaker; readiness flips to 503 once
+/// shutdown begins (drain-then-close for load balancers).
+#[test]
+fn healthz_and_readyz_report_breaker_state() {
+    let (registry, server) = start(&["ic", "kws"], BatchPolicy::default());
+    let mut conn = Conn::connect(server.addr()).unwrap();
+
+    let h = conn.get("/healthz").unwrap();
+    assert_eq!(h.status, 200);
+    assert_eq!(h.body.get("ok").unwrap(), &Json::Bool(true));
+
+    let r = conn.get("/readyz").unwrap();
+    assert_eq!(r.status, 200, "{}", r.body.dumps());
+    assert_eq!(r.body.get("ready").unwrap(), &Json::Bool(true));
+    for bench in ["ic", "kws"] {
+        let m = r.body.get("models").unwrap().get(bench).unwrap();
+        assert_eq!(m.get("ready").unwrap(), &Json::Bool(true));
+        assert_eq!(m.get("breaker").unwrap().as_str().unwrap(), "closed");
+    }
+
+    // supervision gauges ride /metrics from the start (all zero here)
+    let m = conn.get("/metrics").unwrap();
+    assert_eq!(m.status, 200);
+    let ic = m.body.get("models").unwrap().get("ic").unwrap();
+    assert_eq!(ic.get("worker_respawns").unwrap().as_f64().unwrap(), 0.0);
+    assert_eq!(ic.get("breaker_state").unwrap().as_f64().unwrap(), 0.0);
+    assert_eq!(ic.get("deadline_expired_total").unwrap().as_f64().unwrap(), 0.0);
+    assert!(m.body.get("slow_client_closes").is_ok());
+    assert!(m.body.get("idle_reaped").is_ok());
+
+    // once shutdown lands, readiness reports not-ready
+    let bye = conn.post("/admin/shutdown", "").unwrap();
+    assert_eq!(bye.status, 200);
+    let mut late = Conn::connect(server.addr());
+    if let Ok(conn2) = late.as_mut() {
+        // the acceptor may or may not still pick us up mid-shutdown;
+        // if it does, readyz must say not-ready
+        if let Ok(r) = conn2.get("/readyz") {
+            assert_eq!(r.status, 503);
+            assert_eq!(r.body.get("ready").unwrap(), &Json::Bool(false));
+        }
+    }
+    drop(conn);
+    drop(late);
+    server.join().unwrap();
+    registry.shutdown();
+}
+
+/// Shutdown-race regression (supervised-serving satellite): a request
+/// in flight when `POST /admin/shutdown` lands must still get its
+/// bit-identical reply — drain-then-close, never a dropped-sender
+/// error.
+#[test]
+fn inflight_request_survives_admin_shutdown() {
+    // a long coalescing window keeps the infer in flight while the
+    // shutdown lands; the drain must execute it (and the shutdown
+    // notify must flush it promptly, not after the full window)
+    let policy = BatchPolicy {
+        max_batch: 8,
+        max_wait_us: 3_000_000,
+        ..BatchPolicy::default()
+    };
+    let (registry, server) = start(&["ad"], policy);
+    let addr = server.addr();
+    let (input, want) = expected(&registry, "ad", 0);
+
+    let inflight = std::thread::spawn(move || {
+        let mut conn = Conn::connect(addr).unwrap();
+        conn.post("/v1/infer/ad", &infer_body(&input)).unwrap()
+    });
+    // let the request reach the batcher queue before shutting down
+    std::thread::sleep(std::time::Duration::from_millis(150));
+    let mut admin = Conn::connect(addr).unwrap();
+    let bye = admin.post("/admin/shutdown", "").unwrap();
+    assert_eq!(bye.status, 200);
+    drop(admin);
+
+    let resp = inflight.join().expect("in-flight client panicked");
+    assert_eq!(resp.status, 200, "in-flight request dropped: {}", resp.body.dumps());
+    assert_eq!(
+        output_of(&resp.body).unwrap(),
+        want,
+        "drained reply diverged from run_sample"
+    );
+    server.join().unwrap();
+    registry.shutdown();
+}
+
 #[test]
 fn shutdown_endpoint_is_clean() {
     let (registry, server) = start(&["ad"], BatchPolicy::default());

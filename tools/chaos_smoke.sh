@@ -1,0 +1,77 @@
+#!/usr/bin/env bash
+# CI chaos smoke for supervised serving:
+#
+#   1. spawn `cwmix serve` on an ephemeral port with a fault plan armed
+#      via the env var (CWMIX_FAULTS=engine_panic:ic:once — the server
+#      must log the armed plan)
+#   2. run `chaos_smoke`, which drives the acceptance sequence: the
+#      injected panic answers an explicit 5xx, the worker respawns,
+#      recovery is bit-identical to a locally compiled run_sample, the
+#      other models never see an error, and the supervision gauges
+#      (worker_panics / worker_respawns / breaker_state) are scrapeable
+#   3. assert the server process exits 0 on its own (a panicked worker
+#      must not poison the shutdown path)
+#
+# Usage: tools/chaos_smoke.sh   (from the repo root, after
+#        `cargo build --release`; CWMIX_BIN_DIR overrides target/release)
+set -euo pipefail
+
+BIN_DIR=${CWMIX_BIN_DIR:-target/release}
+LOG=$(mktemp)
+FAULTS=${CWMIX_CHAOS_FAULTS:-engine_panic:ic:once}
+FAULTED=${CWMIX_CHAOS_MODEL:-ic}
+
+CWMIX_FAULTS="$FAULTS" CWMIX_FAULTS_SEED=0 \
+    "$BIN_DIR/cwmix" serve --addr 127.0.0.1:0 >"$LOG" 2>&1 &
+SERVER_PID=$!
+trap 'kill "$SERVER_PID" 2>/dev/null || true' EXIT
+
+# the port is OS-assigned: wait for the "listening on" line
+ADDR=""
+for _ in $(seq 1 100); do
+    ADDR=$(sed -n 's/^listening on //p' "$LOG" | head -n 1)
+    [ -n "$ADDR" ] && break
+    if ! kill -0 "$SERVER_PID" 2>/dev/null; then
+        echo "server died during startup:" >&2
+        cat "$LOG" >&2
+        exit 1
+    fi
+    sleep 0.2
+done
+if [ -z "$ADDR" ]; then
+    echo "server never printed its address:" >&2
+    cat "$LOG" >&2
+    exit 1
+fi
+echo "server at $ADDR (faults: $FAULTS)"
+
+# a typo'd chaos run must not silently test nothing: the server logs
+# the armed plan at startup
+if ! grep -q "fault plan armed" "$LOG"; then
+    echo "server never logged the armed fault plan:" >&2
+    cat "$LOG" >&2
+    exit 1
+fi
+
+"$BIN_DIR/chaos_smoke" "$ADDR" "$FAULTED"
+
+# clean shutdown: the serve process must exit 0 by itself, promptly —
+# an injected panic must not leak into the exit status
+for _ in $(seq 1 150); do
+    kill -0 "$SERVER_PID" 2>/dev/null || break
+    sleep 0.2
+done
+if kill -0 "$SERVER_PID" 2>/dev/null; then
+    echo "server still running 30s after shutdown request:" >&2
+    cat "$LOG" >&2
+    exit 1
+fi
+trap - EXIT
+if ! wait "$SERVER_PID"; then
+    echo "server exited non-zero:" >&2
+    cat "$LOG" >&2
+    exit 1
+fi
+echo "--- server log ---"
+cat "$LOG"
+echo "chaos smoke passed: panic -> respawn -> bit-identical recovery -> clean shutdown"
