@@ -11,9 +11,10 @@
 //! assignment (the deployment-relevant case: fragmented sub-conv groups
 //! across all three precisions); the combo sweep runs uniform
 //! `w{p_w}x{p_x}` assignments so each table cell is isolated.  Emits a
-//! machine-readable `BENCH_engine.json` (schema v5: v4 plus per-model
-//! fused-vs-unfused requantize cells with their Eq. (7) activation-byte
-//! deltas) at the repo root so future PRs have a perf trajectory
+//! machine-readable `BENCH_engine.json` (schema v6: v5 plus per-model
+//! simd-vs-packed batched kernel cells and the SIMD tier the `simd`
+//! backend dispatched to on this host) at the repo root so future PRs
+//! have a perf trajectory
 //! (`tools: cargo run --bin bench_compare` diffs two of these and gates
 //! CI), and asserts bit-exactness of every path while measuring.
 //!
@@ -26,7 +27,9 @@ use std::path::Path;
 
 use cwmix::data::{make_dataset, Split};
 use cwmix::deploy;
-use cwmix::engine::{engine_threads, ExecPlan, PackedBackend, ReferenceBackend};
+use cwmix::engine::{
+    engine_threads, ExecPlan, PackedBackend, ReferenceBackend, SimdBackend,
+};
 use cwmix::minijson::Json;
 use cwmix::models::zoo::{
     builtin_manifest, stripy_assignment as stripy, synthetic_state, BENCHES,
@@ -250,6 +253,60 @@ fn fused_rows() -> anyhow::Result<Vec<(String, Json)>> {
     Ok(rows)
 }
 
+/// SIMD backend per model: batched (B=8) weight-stationary execution,
+/// simd vs packed on the striped assignment.  The batch axis is where
+/// the vector tiers live — `run_sample` (B=1) delegates to the SWAR
+/// cells by construction — so these cells measure `run_batch_planes`
+/// per sample.  Bit-exactness is asserted while measuring; on a host
+/// without AVX2 the dispatched tier is `swar` and the ratio hovers
+/// around 1.0 (`bench_compare` skips its speedup gate there).
+fn simd_rows() -> anyhow::Result<Vec<(String, Json)>> {
+    const B: usize = 8;
+    let tier = cwmix::engine::simd::active_tier_name();
+    println!("\nsimd backend per model (tier {tier}, stripy, B={B}, ms/sample):");
+    let mut rows = Vec::new();
+    for bench in BENCHES {
+        let manifest = builtin_manifest(bench)?;
+        let (params, bn) = synthetic_state(&manifest, 0);
+        let a = stripy(&manifest);
+        let model = deploy::build(&manifest, &params, &bn, &a)?;
+        let packed = ExecPlan::compile(&model, &manifest.lut, &PackedBackend)?;
+        let simd = ExecPlan::compile(&model, &manifest.lut, &SimdBackend)?;
+        let feat = manifest.feat_len();
+        let ds = make_dataset(bench, Split::Test, B, 9);
+        let samples: Vec<&[f32]> = ds.x.chunks_exact(feat).collect();
+        let mut pa = packed.batch_arena(B);
+        let mut sa = simd.batch_arena(B);
+
+        // bit-exactness while measuring, whole batch
+        let want = packed.run_batch_planes(&mut pa, &samples)?;
+        let got = simd.run_batch_planes(&mut sa, &samples)?;
+        assert_eq!(got, want, "{bench}: simd diverged from packed");
+
+        let (packed_ms, _, _) = measure(1, 5, || {
+            let _ = packed.run_batch_planes(&mut pa, &samples).unwrap();
+        });
+        let (simd_ms, _, _) = measure(1, 5, || {
+            let _ = simd.run_batch_planes(&mut sa, &samples).unwrap();
+        });
+        let (simd_per, packed_per) = (simd_ms / B as f64, packed_ms / B as f64);
+        println!(
+            "    {bench:<4} simd {simd_per:>8.3}  packed {packed_per:>8.3}  \
+             ({:>5.2}x)",
+            packed_per / simd_per
+        );
+        rows.push((
+            bench.to_string(),
+            Json::obj(vec![
+                ("simd_ms_per_sample", Json::num(simd_per)),
+                ("packed_ms_per_sample", Json::num(packed_per)),
+                ("speedup_simd_vs_packed", Json::num(packed_per / simd_per)),
+            ]),
+        ));
+    }
+    Ok(rows)
+}
+
 fn combo_rows() -> anyhow::Result<Vec<(String, Json)>> {
     let manifest = builtin_manifest(COMBO_BENCH)?;
     let (params, bn) = synthetic_state(&manifest, 0);
@@ -413,9 +470,11 @@ fn main() -> anyhow::Result<()> {
     let cold_obj = Json::Obj(cold_cells.into_iter().collect());
     let fused_cells = fused_rows()?;
     let fused_obj = Json::Obj(fused_cells.into_iter().collect());
+    let simd_cells = simd_rows()?;
+    let simd_obj = Json::Obj(simd_cells.into_iter().collect());
 
     let report = Json::obj(vec![
-        ("version", Json::num(5.0)),
+        ("version", Json::num(6.0)),
         ("threads", Json::num(threads as f64)),
         ("batch", Json::num(batch as f64)),
         ("assignment", Json::str("stripy-2/4/8")),
@@ -427,6 +486,8 @@ fn main() -> anyhow::Result<()> {
         ("batch_monotonic_non_increasing", Json::Bool(batch_monotonic)),
         ("cold_start", cold_obj),
         ("fused", fused_obj),
+        ("simd_tier", Json::str(cwmix::engine::simd::active_tier_name())),
+        ("simd", simd_obj),
     ]);
     let path = out_path();
     std::fs::write(&path, report.pretty())?;

@@ -23,9 +23,19 @@
 //!   — the ratio the `.cwm` path exists to keep small; each fused cell
 //!   (schema v5) divides the fused-requantize per-sample time by the
 //!   same run's two-pass time for that model — the ratio the fusion
-//!   pass exists to keep below one.  The multithreaded cell is reported
-//!   but not gated — its ratio to the single-thread seed scales with
-//!   the runner's core count.
+//!   pass exists to keep below one; each simd cell (schema v6) divides
+//!   the simd backend's batched per-sample time by the same run's
+//!   packed time for that model — the ratio the vector tiers exist to
+//!   keep below one (~1.0 when the host dispatched to `swar`).  The
+//!   multithreaded cell is reported but not gated — its ratio to the
+//!   single-thread seed scales with the runner's core count.
+//!
+//! On top of the baseline diff, the *fresh* engine doc carries its own
+//! within-run simd gate: whenever it records a real SIMD tier
+//! (`simd_tier` ≠ `swar`), every `speedup_simd_vs_packed` cell must
+//! stay ≥ 1.0 (with a 5% timer grace).  It needs no baseline, and
+//! skips with a note on hosts whose tier is `swar` (non-x86, or
+//! `CWMIX_SIMD=off`).
 //! * serve: the micro-batching config relative to the *same run's*
 //!   `batch1` config — inverse throughput speedup and the p99 ratio.
 //!
@@ -102,6 +112,20 @@ fn engine_cells(doc: &Json) -> Result<Vec<(String, f64)>> {
             out.push((format!("fused/{bench}"), fused / unfused));
         }
     }
+    // simd cells (schema v6): simd batched per-sample time over the
+    // same run's packed time on the same model — machine speed cancels;
+    // a regression means the vector tiers lost their edge (or the
+    // runner pool lost its SIMD tier, which is a real coverage loss)
+    if let Some(cells) = doc.opt("simd") {
+        for (bench, obj) in cells.as_obj()? {
+            let simd = obj.get("simd_ms_per_sample")?.as_f64()?;
+            let packed = obj.get("packed_ms_per_sample")?.as_f64()?;
+            if packed <= 0.0 {
+                bail!("simd/{bench}: non-positive packed baseline");
+            }
+            out.push((format!("simd/{bench}"), simd / packed));
+        }
+    }
     // batch-plane cells (schema v3): packed per-sample time at batch
     // size B over the same run's seed scalar on the same model
     if let Some(cells) = doc.opt("batch_cells") {
@@ -140,6 +164,41 @@ fn serve_cells(doc: &Json) -> Result<Vec<(String, f64)>> {
         ("serve/throughput_batch1_over_micro".to_string(), b1_rps / micro_rps),
         ("serve/p99_micro_over_batch1".to_string(), micro_p99 / b1_p99),
     ])
+}
+
+/// Within-run simd gate on the fresh engine doc (no baseline needed):
+/// when the run dispatched to a real SIMD tier, the batched simd cells
+/// must not be slower than packed.  Hosts whose tier is `swar`
+/// (non-x86, or forced off) skip with a note — there is nothing to
+/// assert about the fallback racing itself.
+fn simd_speedup_failures(doc: &Json) -> Result<Vec<String>> {
+    let Some(cells) = doc.opt("simd") else {
+        println!("fresh engine doc has no simd cells — skipping the simd gate");
+        return Ok(Vec::new());
+    };
+    let tier = match doc.opt("simd_tier") {
+        Some(t) => t.as_str()?.to_string(),
+        None => "swar".to_string(),
+    };
+    if tier == "swar" {
+        println!("simd tier is swar on this host — skipping the simd speedup gate");
+        return Ok(Vec::new());
+    }
+    println!("simd speedup (tier {tier}, fresh run, want >= 1.0):");
+    let mut failures = Vec::new();
+    for (bench, obj) in cells.as_obj()? {
+        let speedup = obj.get("speedup_simd_vs_packed")?.as_f64()?;
+        println!("  simd/{bench}: {speedup:.3}x vs packed");
+        // 5% grace, matching bench_engine's batch-plateau allowance,
+        // so timer noise on a genuinely-even cell cannot flake CI
+        if speedup < 0.95 {
+            failures.push(format!(
+                "simd/{bench}: {speedup:.3}x — simd batched kernels slower than \
+                 packed under the {tier} tier"
+            ));
+        }
+    }
+    Ok(failures)
 }
 
 fn compare(
@@ -248,6 +307,9 @@ fn run() -> Result<ExitCode> {
         tolerance,
         engine_cells,
     )?;
+    // the fresh-run simd gate runs even when the baseline diff was
+    // skipped (it is a within-run ratio, not a trajectory)
+    regressions.extend(simd_speedup_failures(&parse_file(Path::new(&positional[1]))?)?);
     if let Some((base, fresh)) = &serve_paths {
         regressions.extend(gate_suite(
             "serve",
@@ -327,6 +389,21 @@ mod tests {
         .unwrap();
         if let Json::Obj(o) = &mut d {
             o.insert("fused".to_string(), fused);
+        }
+        d
+    }
+
+    fn doc_with_simd(tier: &str, speedup: f64) -> Json {
+        let mut d = doc(10.0, 5.0, 2.0);
+        let simd = parse(&format!(
+            r#"{{"ic": {{"simd_ms_per_sample": {}, "packed_ms_per_sample": 2.0,
+                 "speedup_simd_vs_packed": {speedup}}}}}"#,
+            2.0 / speedup
+        ))
+        .unwrap();
+        if let Json::Obj(o) = &mut d {
+            o.insert("simd_tier".to_string(), Json::str(tier));
+            o.insert("simd".to_string(), simd);
         }
         d
     }
@@ -424,6 +501,36 @@ mod tests {
         let regressed = doc_with_fused(10.0, 5.0, 2.0, 2.4);
         let regs = diff(&base, &regressed, 0.2);
         assert!(regs.iter().any(|r| r.contains("fused/ic")));
+    }
+
+    #[test]
+    fn simd_cells_normalise_and_gate() {
+        // simd/packed = 0.5 in the baseline
+        let base = doc_with_simd("avx2", 2.0);
+        let cells = engine_cells(&base).unwrap();
+        assert!(cells.iter().any(|(l, v)| l == "simd/ic" && (*v - 0.5).abs() < 1e-9));
+        // same ratio elsewhere is clean
+        assert!(diff(&base, &base, 0.2).is_empty());
+        // the runner losing its vector edge (tier back to swar) trips
+        let regressed = doc_with_simd("swar", 1.0);
+        let regs = diff(&base, &regressed, 0.2);
+        assert!(regs.iter().any(|r| r.contains("simd/ic")));
+    }
+
+    #[test]
+    fn simd_speedup_gate_skips_swar_and_trips_slowdowns() {
+        // swar tier: nothing to assert about the fallback racing itself
+        assert!(simd_speedup_failures(&doc_with_simd("swar", 0.5)).unwrap().is_empty());
+        // pre-v6 docs have no simd section: skip, not error
+        assert!(simd_speedup_failures(&doc(10.0, 5.0, 2.0)).unwrap().is_empty());
+        // a real tier slower than packed fails the gate
+        let fails = simd_speedup_failures(&doc_with_simd("avx2", 0.8)).unwrap();
+        assert!(fails.iter().any(|f| f.contains("simd/ic")));
+        // faster passes, and the 5% grace absorbs an even cell's noise
+        assert!(simd_speedup_failures(&doc_with_simd("avx2", 1.5)).unwrap().is_empty());
+        assert!(simd_speedup_failures(&doc_with_simd("avx512", 0.97))
+            .unwrap()
+            .is_empty());
     }
 
     #[test]

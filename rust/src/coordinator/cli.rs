@@ -102,12 +102,13 @@ COMMANDS
   deploy   --bench B [--quick]
            Short search, §III-C transform, HLO-vs-simulator verification,
            MPIC cost breakdown.
-  simulate --bench B [--wbits N] [--xbits M] [--backend packed|reference]
+  simulate --bench B [--wbits N] [--xbits M]
+           [--backend packed|reference|simd]
            §III-C transform + engine cost model on a fixed assignment.
            Pure Rust: uses the builtin model zoo when artifacts/ is
            absent; no training, no xla feature needed.
   compile  [--benches ic,kws,vww,ad] [--out modelpacks]
-           [--backend packed|reference] [--assignment stripy|wNxM]
+           [--backend packed|reference|simd] [--assignment stripy|wNxM]
            [--seed 0] [--artifacts artifacts]
            Compile each model and emit a .cwm modelpack artifact per
            bench — the durable form of ExecPlan::compile (packed
@@ -119,7 +120,7 @@ COMMANDS
            size table; exits non-zero when the packed totals disagree
            with the cost model's Eq. (7) accounting.
   serve    [--benches ic,kws,vww,ad] [--addr 127.0.0.1:8080]
-           [--backend packed|reference] [--assignment stripy|wNxM]
+           [--backend packed|reference|simd] [--assignment stripy|wNxM]
            [--max-batch 8] [--max-wait-us 2000] [--queue-cap 256]
            [--threads N] [--infer-budget-us 30000000]
            [--artifacts artifacts] [--modelpack-dir DIR]
@@ -136,6 +137,10 @@ COMMANDS
            backoff); --breaker-k consecutive panics open a per-model
            circuit breaker (503 + Retry-After).  Every request gets a
            max_wait + infer-budget deadline (expired -> 504).
+           --backend simd dispatches kernels to the best SIMD tier the
+           CPU reports (avx512 > avx2 > swar; override via CWMIX_SIMD=
+           off|avx2|avx512|auto); the tier is printed at startup and
+           exported per model in /metrics.
            --faults arms deterministic failpoints for chaos testing
            (kind:model:trigger[:ms], see serve/faults.rs; also via
            CWMIX_FAULTS / CWMIX_FAULTS_SEED).  Pure Rust, builtin
@@ -482,10 +487,11 @@ fn cmd_inspect(flags: &HashMap<String, String>) -> Result<()> {
         sections.join(", "),
     );
     println!(
-        "bench {} / backend {} — {} plan nodes, {} quantized layers, \
-         {} B resident kernel weights",
+        "bench {} / backend {} (kernel tier {} on this host) — {} plan \
+         nodes, {} quantized layers, {} B resident kernel weights",
         rep.bench,
         rep.backend,
+        rep.kernel_tier,
         rep.n_nodes,
         rep.layers.len(),
         rep.kernel_weight_bytes,
@@ -632,10 +638,11 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         let cost = e.plan().cost();
         let s = e.startup();
         println!(
-            "model {:<4} backend {:<9} feat {:>5} out {:>4} est {:.1} us/inf \
-             ({} in {} us)",
+            "model {:<4} backend {:<9} tier {:<6} feat {:>5} out {:>4} \
+             est {:.1} us/inf ({} in {} us)",
             e.name(),
             e.plan().backend_name(),
+            e.plan().kernel_tier(),
             e.plan().feat(),
             e.plan().out_len(),
             cost.latency_us(),

@@ -5,7 +5,7 @@
 //! pixel, output channel) with the **packed** activation column: `K`
 //! unsigned codes of the layer's `p_x` width, packed densely LSB-first
 //! into bytes by the executor's quantize/gather stage (see
-//! `engine::plan`).  Two implementations ship:
+//! `engine::plan`).  Three implementations ship:
 //!
 //! * [`ReferenceBackend`] — scalar `i32` weight rows dotted against
 //!   codes decoded one at a time, kept bit-for-bit identical to
@@ -21,7 +21,16 @@
 //!   `sdotp` modes (`mpic::regfile` is the per-lane reference).  Integer
 //!   decode is exact, so results are bit-identical to the reference
 //!   backend while touching `8/p_w` times less weight memory *and*
-//!   `8/p_x` times less activation memory per dot.
+//!   `8/p_x` times less activation memory per dot;
+//! * [`SimdBackend`] — the same Eq. (7) weight layout executed through
+//!   explicit x86 vector kernels (`engine::simd`): the **batch axis is
+//!   the vector axis** (each sample owns one vector lane), the dispatch
+//!   tier (AVX-512 → AVX2 → SWAR) is picked **once per process** via
+//!   `is_x86_feature_detected!` (overridable with
+//!   `CWMIX_SIMD=off|avx2|avx512|auto`), and per sample the
+//!   accumulation order is unchanged — the tier is a throughput knob,
+//!   never a numerics knob.  On non-x86 hosts, or with `CWMIX_SIMD=off`,
+//!   the backend *is* the SWAR fallback.
 //!
 //! Accumulation contract: [`LayerKernel::dot`] accumulates in `i32`
 //! (convolutions: `K * 255 * 127` fits comfortably), while
@@ -46,10 +55,12 @@
 //! and the executor's *epilogue* decides whether the f32 result lands
 //! in an arena slot, in the consumer layer's packed plane, or both
 //! (`engine::plan::fuse_requant`).  That keeps all nine `(p_x, p_w)`
-//! SWAR cells — and any future SIMD backend — oblivious to fusion: a
-//! backend is correct for the fused path iff it is correct for the
-//! two-pass path, which is exactly what the oracle contract asserts.
+//! SWAR cells — and every `engine::simd` vector tier — oblivious to
+//! fusion: a backend is correct for the fused path iff it is correct
+//! for the two-pass path, which is exactly what the oracle contract
+//! asserts.
 
+use super::simd;
 use crate::deploy::DeployedLayer;
 use crate::modelpack::{ByteArr, I32Arr};
 use crate::precision_index;
@@ -58,6 +69,15 @@ use crate::quant::pack_subbyte;
 /// A backend prepares per-layer weight storage + dot kernels.
 pub trait KernelBackend: Send + Sync {
     fn name(&self) -> &'static str;
+
+    /// The dispatch tier actually executing this backend's kernels —
+    /// `name()` for single-tier backends; the `simd` backend reports
+    /// the CPU tier (`avx512`/`avx2`/`swar`) selected at load.  Bench
+    /// JSON and `/metrics` record this so every number names the code
+    /// path that produced it.
+    fn tier(&self) -> &'static str {
+        self.name()
+    }
 
     /// Build the execution kernel for one deployed layer.
     fn prepare(&self, dl: &DeployedLayer) -> Box<dyn LayerKernel>;
@@ -123,7 +143,7 @@ pub trait LayerKernel: Send + Sync {
 // ---------------------------------------------------------------------------
 
 #[inline(always)]
-fn sext(v: i32, bits: u32) -> i32 {
+pub(super) fn sext(v: i32, bits: u32) -> i32 {
     // two's-complement sign extension of a `bits`-wide field in v's LSBs
     if v & (1 << (bits - 1)) != 0 {
         v - (1 << bits)
@@ -135,7 +155,7 @@ fn sext(v: i32, bits: u32) -> i32 {
 /// Little-endian load of `nbytes` (1/2/4) bytes into a `u32`.  With a
 /// constant `nbytes` this compiles to a single unaligned load.
 #[inline(always)]
-fn load_le(buf: &[u8], off: usize, nbytes: usize) -> u32 {
+pub(super) fn load_le(buf: &[u8], off: usize, nbytes: usize) -> u32 {
     let mut w = 0u32;
     for (i, &b) in buf[off..off + nbytes].iter().enumerate() {
         w |= (b as u32) << (8 * i);
@@ -154,7 +174,7 @@ pub(super) fn extract_code(buf: &[u8], idx: usize, bits: u32) -> u32 {
 
 /// Decode signed weight code `idx` (sign-extending) from a packed row.
 #[inline(always)]
-fn extract_weight(buf: &[u8], idx: usize, bits: u32) -> i32 {
+pub(super) fn extract_weight(buf: &[u8], idx: usize, bits: u32) -> i32 {
     sext(extract_code(buf, idx, bits) as i32, bits)
 }
 
@@ -235,10 +255,10 @@ impl LayerKernel for ReferenceKernel {
 /// by per-`(p_x, p_w)` SWAR kernels against packed activation columns.
 pub struct PackedBackend;
 
-type RowDot = fn(&[u8], &[u8], usize) -> i32;
-type RowDotWide = fn(&[u8], &[u8], usize) -> i64;
-type RowDotBatch = fn(&[u8], usize, &[u8], usize, &mut [i32]);
-type RowDotWideBatch = fn(&[u8], usize, &[u8], usize, &mut [i64]);
+pub(super) type RowDot = fn(&[u8], &[u8], usize) -> i32;
+pub(super) type RowDotWide = fn(&[u8], &[u8], usize) -> i64;
+pub(super) type RowDotBatch = fn(&[u8], usize, &[u8], usize, &mut [i32]);
+pub(super) type RowDotWideBatch = fn(&[u8], usize, &[u8], usize, &mut [i64]);
 
 /// Generates one `(p_x, p_w)` SWAR kernel family: single-column `i32` +
 /// `i64` dots and their **weight-stationary batched** variants.  Per
@@ -392,13 +412,13 @@ swar_kernel!(dot_x8_w8, dot_x8_w8_wide, dot_x8_w8_b, dot_x8_w8_wb, 8, 8); //  4 
 /// mirroring MPIC's per-(p_x, p_w) SIMD mode CSR.  Both operands arrive
 /// packed, so every cell is a genuinely distinct SWAR body: the lane
 /// grid, fetch widths and decode masks all depend on the combination.
-const DOT_KERNELS: [[RowDot; 3]; 3] = [
+pub(super) const DOT_KERNELS: [[RowDot; 3]; 3] = [
     [dot_x2_w2, dot_x2_w4, dot_x2_w8],
     [dot_x4_w2, dot_x4_w4, dot_x4_w8],
     [dot_x8_w2, dot_x8_w4, dot_x8_w8],
 ];
 
-const DOT_KERNELS_WIDE: [[RowDotWide; 3]; 3] = [
+pub(super) const DOT_KERNELS_WIDE: [[RowDotWide; 3]; 3] = [
     [dot_x2_w2_wide, dot_x2_w4_wide, dot_x2_w8_wide],
     [dot_x4_w2_wide, dot_x4_w4_wide, dot_x4_w8_wide],
     [dot_x8_w2_wide, dot_x8_w4_wide, dot_x8_w8_wide],
@@ -406,13 +426,13 @@ const DOT_KERNELS_WIDE: [[RowDotWide; 3]; 3] = [
 
 /// Weight-stationary batched mirror of [`DOT_KERNELS`]: one weight
 /// register fetch + decode ridden across all `B` packed columns.
-const DOT_KERNELS_BATCH: [[RowDotBatch; 3]; 3] = [
+pub(super) const DOT_KERNELS_BATCH: [[RowDotBatch; 3]; 3] = [
     [dot_x2_w2_b, dot_x2_w4_b, dot_x2_w8_b],
     [dot_x4_w2_b, dot_x4_w4_b, dot_x4_w8_b],
     [dot_x8_w2_b, dot_x8_w4_b, dot_x8_w8_b],
 ];
 
-const DOT_KERNELS_WIDE_BATCH: [[RowDotWideBatch; 3]; 3] = [
+pub(super) const DOT_KERNELS_WIDE_BATCH: [[RowDotWideBatch; 3]; 3] = [
     [dot_x2_w2_wb, dot_x2_w4_wb, dot_x2_w8_wb],
     [dot_x4_w2_wb, dot_x4_w4_wb, dot_x4_w8_wb],
     [dot_x8_w2_wb, dot_x8_w4_wb, dot_x8_w8_wb],
@@ -437,31 +457,35 @@ struct PackedKernel {
     aidx: usize,
 }
 
+/// Pack one deployed layer into the Eq. (7) flash image: one byte-
+/// aligned sub-byte row per output channel.  Shared by the packed and
+/// simd backends — both execute the identical weight layout, so a
+/// `.cwm` serialized by one loads into the other bit-for-bit.
+fn pack_layer(dl: &DeployedLayer) -> (usize, ByteArr, Vec<PackedRow>, usize) {
+    let k = dl.k();
+    let cout = dl.spec.cout;
+    let mut bytes = Vec::with_capacity(dl.packed_bytes());
+    let mut rows = Vec::with_capacity(cout);
+    for c in 0..cout {
+        let bits = dl.weight_bits[c];
+        let packed = pack_subbyte(&dl.qweights[c * k..(c + 1) * k], bits);
+        rows.push(PackedRow {
+            offset: bytes.len() as u32,
+            widx: precision_index(bits) as u8,
+        });
+        bytes.extend_from_slice(&packed);
+    }
+    (k, bytes.into(), rows, precision_index(dl.act_bits))
+}
+
 impl KernelBackend for PackedBackend {
     fn name(&self) -> &'static str {
         "packed"
     }
 
     fn prepare(&self, dl: &DeployedLayer) -> Box<dyn LayerKernel> {
-        let k = dl.k();
-        let cout = dl.spec.cout;
-        let mut bytes = Vec::with_capacity(dl.packed_bytes());
-        let mut rows = Vec::with_capacity(cout);
-        for c in 0..cout {
-            let bits = dl.weight_bits[c];
-            let packed = pack_subbyte(&dl.qweights[c * k..(c + 1) * k], bits);
-            rows.push(PackedRow {
-                offset: bytes.len() as u32,
-                widx: precision_index(bits) as u8,
-            });
-            bytes.extend_from_slice(&packed);
-        }
-        Box::new(PackedKernel {
-            k,
-            bytes: bytes.into(),
-            rows,
-            aidx: precision_index(dl.act_bits),
-        })
+        let (k, bytes, rows, aidx) = pack_layer(dl);
+        Box::new(PackedKernel { k, bytes, rows, aidx })
     }
 }
 
@@ -533,12 +557,131 @@ impl LayerKernel for PackedKernel {
     }
 }
 
+// ---------------------------------------------------------------------------
+// SIMD backend: packed layout, runtime-dispatched x86 vector kernels.
+// ---------------------------------------------------------------------------
+
+/// The [`PackedBackend`] weight layout executed through the
+/// `engine::simd` vector kernels.  The batched weight-stationary entry
+/// points are the hot seam: each 32-bit weight word is decoded once and
+/// ridden across all `B` columns with the **batch axis as the vector
+/// axis**, so per sample nothing about the accumulation changes and the
+/// results stay bit-identical to [`ReferenceBackend`] on every tier.
+///
+/// The tier (AVX-512 → AVX2 → SWAR) is resolved once per process at
+/// first model load — `simd::active` — and reported via
+/// [`KernelBackend::tier`].  Single-column dots delegate to the SWAR
+/// cells directly: `B = 1` has no batch axis to vectorize.
+pub struct SimdBackend;
+
+struct SimdKernel {
+    k: usize,
+    /// same flash image [`PackedKernel`] holds — serialized identically
+    bytes: ByteArr,
+    rows: Vec<PackedRow>,
+    aidx: usize,
+    /// tier tables resolved at load (process-wide, never changes after)
+    tables: &'static simd::Tables,
+}
+
+impl KernelBackend for SimdBackend {
+    fn name(&self) -> &'static str {
+        "simd"
+    }
+
+    fn tier(&self) -> &'static str {
+        simd::active_tier_name()
+    }
+
+    fn prepare(&self, dl: &DeployedLayer) -> Box<dyn LayerKernel> {
+        let (k, bytes, rows, aidx) = pack_layer(dl);
+        Box::new(SimdKernel { k, bytes, rows, aidx, tables: simd::active() })
+    }
+}
+
+/// Rebuild a simd kernel from modelpack state — the weight image is the
+/// [`KernelState::Packed`] layout verbatim (`engine::pack` validation
+/// already ran); only the dispatch tables differ from the packed
+/// backend, and those are re-resolved on the *loading* host, so a
+/// `.cwm` compiled on an AVX-512 box runs correctly on a SWAR-only one.
+pub(super) fn simd_kernel_from_parts(
+    k: usize,
+    act_index: usize,
+    rows: Vec<(u32, u8)>,
+    bytes: ByteArr,
+) -> Box<dyn LayerKernel> {
+    Box::new(SimdKernel {
+        k,
+        bytes,
+        rows: rows
+            .into_iter()
+            .map(|(offset, widx)| PackedRow { offset, widx })
+            .collect(),
+        aidx: act_index,
+        tables: simd::active(),
+    })
+}
+
+impl SimdKernel {
+    #[inline(always)]
+    fn row(&self, c: usize) -> (&[u8], usize) {
+        let r = &self.rows[c];
+        (&self.bytes[r.offset as usize..], r.widx as usize)
+    }
+}
+
+impl LayerKernel for SimdKernel {
+    #[inline]
+    fn dot(&self, c: usize, xcol: &[u8]) -> i32 {
+        let (row, widx) = self.row(c);
+        DOT_KERNELS[self.aidx][widx](xcol, row, self.k)
+    }
+
+    #[inline]
+    fn dot_wide(&self, c: usize, xcol: &[u8]) -> i64 {
+        let (row, widx) = self.row(c);
+        DOT_KERNELS_WIDE[self.aidx][widx](xcol, row, self.k)
+    }
+
+    #[inline]
+    fn dot_batch(&self, c: usize, cols: &[u8], stride: usize, out: &mut [i32]) {
+        let (row, widx) = self.row(c);
+        self.tables.batch[self.aidx][widx](cols, stride, row, self.k, out);
+    }
+
+    #[inline]
+    fn dot_wide_batch(&self, c: usize, cols: &[u8], stride: usize, out: &mut [i64]) {
+        let (row, widx) = self.row(c);
+        self.tables.wide_batch[self.aidx][widx](cols, stride, row, self.k, out);
+    }
+
+    fn weight_bytes(&self) -> usize {
+        self.bytes.len()
+    }
+
+    fn state(&self) -> KernelState<'_> {
+        // identical layout to PackedKernel — the artifact records the
+        // backend *name*, not the tier, so packs stay host-portable
+        KernelState::Packed {
+            k: self.k,
+            act_index: self.aidx,
+            rows: self.rows.iter().map(|r| (r.offset, r.widx)).collect(),
+            bytes: &self.bytes,
+        }
+    }
+}
+
 /// Resolve a backend by CLI/bench name.
 pub fn backend_by_name(name: &str) -> anyhow::Result<&'static dyn KernelBackend> {
     match name {
         "reference" | "ref" => Ok(&ReferenceBackend),
         "packed" => Ok(&PackedBackend),
-        other => anyhow::bail!("unknown backend {other:?} (reference|packed)"),
+        "simd" => Ok(&SimdBackend),
+        other => anyhow::bail!(
+            "unknown backend {other:?} (valid: reference|packed|simd; \
+             simd would dispatch to the {:?} tier on this host)",
+            simd::active_tier_name()
+        ),
     }
 }
 
@@ -703,6 +846,83 @@ mod tests {
     fn backend_names_resolve() {
         assert_eq!(backend_by_name("packed").unwrap().name(), "packed");
         assert_eq!(backend_by_name("ref").unwrap().name(), "reference");
-        assert!(backend_by_name("simd").is_err());
+        assert_eq!(backend_by_name("simd").unwrap().name(), "simd");
+    }
+
+    #[test]
+    fn unknown_backend_error_lists_names_and_tier() {
+        let err = backend_by_name("vliw").unwrap_err().to_string();
+        for needle in ["reference", "packed", "simd", SimdBackend.tier()] {
+            assert!(err.contains(needle), "{err:?} should mention {needle:?}");
+        }
+    }
+
+    #[test]
+    fn simd_backend_reports_a_known_tier() {
+        let tier = SimdBackend.tier();
+        assert!(
+            ["swar", "avx2", "avx512"].contains(&tier),
+            "unexpected tier {tier:?}"
+        );
+        // single-tier backends report their own name
+        assert_eq!(PackedBackend.tier(), "packed");
+        assert_eq!(ReferenceBackend.tier(), "reference");
+    }
+
+    /// Every vector tier available on this host is bit-identical to the
+    /// single-column SWAR kernels — all nine cells, ragged K, extreme
+    /// codes, batch sizes straddling both vector widths (8-wide i32 /
+    /// 4-wide i64 on AVX2, 16/8 on AVX-512) plus their remainders, and
+    /// a stride wider than the column.
+    #[test]
+    fn simd_tier_batch_kernels_match_swar_all_cells() {
+        let mut rng = Pcg32::seeded(37);
+        for tables in simd::available_tables() {
+            for (ai, &px) in PRECISIONS.iter().enumerate() {
+                for (wi, &pw) in PRECISIONS.iter().enumerate() {
+                    for k in [1usize, 5, 17, 33, 127] {
+                        for b in [1usize, 3, 7, 8, 9, 15, 16, 17, 33] {
+                            let mut w = random_row(&mut rng, k, pw);
+                            w[0] = -(1i32 << (pw - 1));
+                            let wrow = pack_subbyte(&w, pw);
+                            let col_bytes = (k * px as usize).div_ceil(8);
+                            // no slack: the *last* column must end flush
+                            // at the buffer end, like the zero-copy FC
+                            // planes — catches any vector over-read
+                            let stride = col_bytes;
+                            let mut cols = vec![0u8; b * stride];
+                            let mut singles32 = vec![0i32; b];
+                            let mut singles64 = vec![0i64; b];
+                            for j in 0..b {
+                                let mut x: Vec<u32> =
+                                    (0..k).map(|_| rng.below(1 << px)).collect();
+                                x[0] = (1 << px) - 1;
+                                let packed = pack_acts_subbyte(&x, px);
+                                cols[j * stride..j * stride + col_bytes]
+                                    .copy_from_slice(&packed);
+                                singles32[j] = DOT_KERNELS[ai][wi](&packed, &wrow, k);
+                                singles64[j] =
+                                    DOT_KERNELS_WIDE[ai][wi](&packed, &wrow, k);
+                            }
+                            let tier = tables.tier.name();
+                            let mut out32 = vec![0i32; b];
+                            tables.batch[ai][wi](&cols, stride, &wrow, k, &mut out32);
+                            assert_eq!(
+                                out32, singles32,
+                                "{tier} px={px} pw={pw} k={k} b={b}"
+                            );
+                            let mut out64 = vec![0i64; b];
+                            tables.wide_batch[ai][wi](
+                                &cols, stride, &wrow, k, &mut out64,
+                            );
+                            assert_eq!(
+                                out64, singles64,
+                                "{tier} wide px={px} pw={pw} k={k} b={b}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
     }
 }

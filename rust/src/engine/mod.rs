@@ -33,15 +33,19 @@
 //!   batch [`Arena`] per worker;
 //! * [`KernelBackend`] is the pluggable seam for the integer dot
 //!   kernels: [`ReferenceBackend`] (scalar `i32` weight rows, the
-//!   in-engine bit-exactness oracle) and [`PackedBackend`] (sub-byte
+//!   in-engine bit-exactness oracle), [`PackedBackend`] (sub-byte
 //!   bit-packed weight rows × packed activation columns through nine
 //!   distinct per-`(p_x, p_w)` SWAR kernels — each with a
 //!   weight-stationary batched variant — mirroring MPIC's
-//!   mixed-precision `sdotp` modes).  All backends are bit-identical by
-//!   contract — `tests/engine_equivalence.rs` enforces it against
-//!   `mpic::exec::run_sample` across all nine `(p_x, p_w) ∈ {2,4,8}²`
-//!   combos and the four benchmark topologies, and
-//!   `tests/engine_batch_plane.rs` re-enforces it per batch size.
+//!   mixed-precision `sdotp` modes), and [`SimdBackend`] (the same
+//!   packed layout driven through explicit x86 vector kernels
+//!   ([`simd`]), the batch axis as the vector axis, with the
+//!   AVX-512 → AVX2 → SWAR dispatch tier resolved once per process by
+//!   `is_x86_feature_detected!` / `CWMIX_SIMD`).  All backends are
+//!   bit-identical by contract — `tests/engine_equivalence.rs`
+//!   enforces it against `mpic::exec::run_sample` across all nine
+//!   `(p_x, p_w) ∈ {2,4,8}²` combos and the four benchmark topologies,
+//!   and `tests/engine_batch_plane.rs` re-enforces it per batch size.
 //!
 //! There is deliberately **no** per-call convenience wrapper that
 //! compiles and runs in one shot: every caller holds an [`ExecPlan`]
@@ -57,11 +61,12 @@ pub mod arena;
 pub mod backend;
 pub mod pack;
 pub mod plan;
+pub mod simd;
 
 pub use arena::Arena;
 pub use backend::{
     backend_by_name, KernelBackend, KernelState, LayerKernel, PackedBackend,
-    ReferenceBackend,
+    ReferenceBackend, SimdBackend,
 };
 pub use pack::{inspect, read_provenance, InspectLayer, InspectReport, Provenance};
 pub use plan::{engine_threads, ExecPlan, FusionStats, MAX_BATCH_CHUNK};

@@ -40,7 +40,8 @@ use crate::PRECISIONS;
 use std::sync::Arc;
 
 use super::backend::{
-    backend_by_name, packed_kernel_from_parts, reference_kernel_from_parts, KernelState,
+    backend_by_name, packed_kernel_from_parts, reference_kernel_from_parts,
+    simd_kernel_from_parts, KernelState,
 };
 use super::plan::{
     ExecPlan, FusionStats, NodeKind, OutFuse, PlanNode, PostAdd, QuantOp, COL_SLACK,
@@ -368,6 +369,9 @@ impl DataView<'_> {
 struct Meta {
     bench: String,
     backend_name: &'static str,
+    /// dispatch tier on the *loading* host (re-resolved, not stored in
+    /// the artifact — a `.cwm` stays portable across CPU generations)
+    kernel_tier: &'static str,
     feat: usize,
     out_len: usize,
     out_slot: usize,
@@ -387,10 +391,12 @@ fn decode_meta(bytes: &[u8]) -> Result<Meta, PackError> {
     let bench = r.str()?;
     let backend = r.str()?;
     // map to the registered backend's static name (also proves the
-    // pack's backend exists in this build)
-    let backend_name = backend_by_name(&backend)
-        .map_err(|_| malformed(format!("unknown backend {backend:?}")))?
-        .name();
+    // pack's backend exists in this build); the dispatch tier is
+    // re-resolved on this host, never trusted from the file
+    let resolved = backend_by_name(&backend)
+        .map_err(|_| malformed(format!("unknown backend {backend:?}")))?;
+    let backend_name = resolved.name();
+    let kernel_tier = resolved.tier();
     let feat = r.len64()?;
     let out_len = r.len64()?;
     let out_slot = r.u32()? as usize;
@@ -466,6 +472,7 @@ fn decode_meta(bytes: &[u8]) -> Result<Meta, PackError> {
     Ok(Meta {
         bench,
         backend_name,
+        kernel_tier,
         feat,
         out_len,
         out_slot,
@@ -686,6 +693,7 @@ fn decode_plan(container: &Container) -> Result<ExecPlan, PackError> {
     Ok(ExecPlan {
         bench: meta.bench,
         backend_name: meta.backend_name,
+        kernel_tier: meta.kernel_tier,
         feat: meta.feat,
         slot_len: meta.slot_len,
         plane_len: meta.plane_len,
@@ -923,7 +931,14 @@ fn decode_quant(
                     return err("packed row reaches past the flash image");
                 }
             }
-            packed_kernel_from_parts(k, act_index, rows, ByteArr::view(bytes_b))
+            // the simd backend serializes the identical flash image
+            // under the same tag — only the dispatch tables differ,
+            // and those come from the loading host, not the file
+            if meta.backend_name == "simd" {
+                simd_kernel_from_parts(k, act_index, rows, ByteArr::view(bytes_b))
+            } else {
+                packed_kernel_from_parts(k, act_index, rows, ByteArr::view(bytes_b))
+            }
         }
         other => return Err(malformed(format!("{name}: unknown kernel tag {other}"))),
     };
@@ -1055,6 +1070,10 @@ pub struct InspectReport {
     pub sections: Vec<(u32, usize)>,
     pub bench: String,
     pub backend: String,
+    /// dispatch tier the plan's kernels resolve to on *this* host
+    /// (`avx512`/`avx2`/`swar` for the simd backend, else the backend
+    /// name — never stored in the artifact)
+    pub kernel_tier: &'static str,
     /// construction parameters, when the writer recorded them
     pub provenance: Option<Provenance>,
     pub n_nodes: usize,
@@ -1136,6 +1155,7 @@ pub fn inspect(bytes: &[u8]) -> Result<InspectReport, PackError> {
         sections: container.sections.iter().map(|s| (s.kind, s.len)).collect(),
         bench: plan.bench.clone(),
         backend: plan.backend_name.to_string(),
+        kernel_tier: plan.kernel_tier,
         provenance,
         n_nodes: plan.nodes.len(),
         layers,

@@ -235,6 +235,10 @@ pub(super) struct PlanNode {
 pub struct ExecPlan {
     pub(super) bench: String,
     pub(super) backend_name: &'static str,
+    /// dispatch tier that executes this plan's kernels — equals
+    /// `backend_name` except for the `simd` backend, which resolves
+    /// `avx512`/`avx2`/`swar` once per process at load
+    pub(super) kernel_tier: &'static str,
     pub(super) feat: usize,
     pub(super) slot_len: Vec<usize>,
     pub(super) plane_len: usize,
@@ -420,6 +424,7 @@ impl ExecPlan {
         Ok(ExecPlan {
             bench: model.bench.clone(),
             backend_name: backend.name(),
+            kernel_tier: backend.tier(),
             feat,
             slot_len,
             plane_len,
@@ -586,6 +591,13 @@ impl ExecPlan {
 
     pub fn backend_name(&self) -> &'static str {
         self.backend_name
+    }
+
+    /// Kernel dispatch tier (`avx512`/`avx2`/`swar` for the `simd`
+    /// backend, otherwise the backend name) — recorded in `/metrics`
+    /// and bench JSON so every number names its code path.
+    pub fn kernel_tier(&self) -> &'static str {
+        self.kernel_tier
     }
 
     /// Per-sample input length.

@@ -1,0 +1,215 @@
+//! AVX2 tier: eight samples per `i32` register, four per `i64`.
+//!
+//! Each kernel is the weight-stationary SWAR batch cell with the batch
+//! axis vectorized.  Column words are assembled with bounds-checked
+//! scalar [`load_le`] fetches (never a wide load — the zero-copy FC
+//! planes end flush at the buffer end), weight lanes are sign-decoded
+//! scalar once per register and broadcast, and only the
+//! multiply-accumulate runs vector-wide.  Per sample the accumulation
+//! order (register ascending, lane ascending, scalar tail) is the SWAR
+//! order, and `i32`/`i64` adds are exact, so every result is
+//! bit-identical to the scalar cell.  Ragged batch remainders
+//! (`B mod 8` / `B mod 4` columns) cascade to the SWAR cell on a
+//! column sub-slice.
+
+use std::arch::x86_64::*;
+
+use crate::engine::backend::{
+    extract_code, extract_weight, load_le, sext, RowDotBatch, RowDotWideBatch,
+    DOT_KERNELS_BATCH as SWAR_BATCH, DOT_KERNELS_WIDE_BATCH as SWAR_WIDE_BATCH,
+};
+use crate::precision_index;
+
+/// Generates one `(p_x, p_w)` AVX2 cell pair: the batched `i32` dot
+/// (8 columns per `__m256i`) and the batched `i64` dot (4 columns).
+/// The safe wrappers are what the dispatch tables hold; the `unsafe`
+/// inner fns are only reachable through tables that `engine::simd`
+/// installs after `is_x86_feature_detected!("avx2")` returned true.
+macro_rules! avx2_kernel {
+    ($batch:ident, $batch_impl:ident, $wide:ident, $wide_impl:ident,
+     $px:literal, $pw:literal) => {
+        pub(super) fn $batch(
+            cols: &[u8],
+            stride: usize,
+            wrow: &[u8],
+            k: usize,
+            out: &mut [i32],
+        ) {
+            // SAFETY: installed behind runtime AVX2 detection (module doc)
+            unsafe { $batch_impl(cols, stride, wrow, k, out) }
+        }
+
+        #[target_feature(enable = "avx2")]
+        unsafe fn $batch_impl(
+            cols: &[u8],
+            stride: usize,
+            wrow: &[u8],
+            k: usize,
+            out: &mut [i32],
+        ) {
+            const PX: u32 = $px;
+            const PW: u32 = $pw;
+            const LANES: usize = (32 / if PX > PW { PX } else { PW }) as usize;
+            const XSTEP: usize = LANES * PX as usize / 8;
+            const WSTEP: usize = LANES * PW as usize / 8;
+            const XMASK: u32 = (1u32 << PX) - 1;
+            const WMASK: u32 = (1u32 << PW) - 1;
+            let b = out.len();
+            let full = k / LANES;
+            let xmask = _mm256_set1_epi32(XMASK as i32);
+            let mut j = 0;
+            while j + 8 <= b {
+                let base = j * stride;
+                let mut acc = _mm256_setzero_si256();
+                for i in 0..full {
+                    let ww = load_le(wrow, i * WSTEP, WSTEP);
+                    let xoff = base + i * XSTEP;
+                    let xv = _mm256_set_epi32(
+                        load_le(cols, xoff + 7 * stride, XSTEP) as i32,
+                        load_le(cols, xoff + 6 * stride, XSTEP) as i32,
+                        load_le(cols, xoff + 5 * stride, XSTEP) as i32,
+                        load_le(cols, xoff + 4 * stride, XSTEP) as i32,
+                        load_le(cols, xoff + 3 * stride, XSTEP) as i32,
+                        load_le(cols, xoff + 2 * stride, XSTEP) as i32,
+                        load_le(cols, xoff + stride, XSTEP) as i32,
+                        load_le(cols, xoff, XSTEP) as i32,
+                    );
+                    for lane in 0..LANES as u32 {
+                        let w = sext(((ww >> (lane * PW)) & WMASK) as i32, PW);
+                        let x = _mm256_and_si256(
+                            _mm256_srl_epi32(xv, _mm_cvtsi32_si128((lane * PX) as i32)),
+                            xmask,
+                        );
+                        acc = _mm256_add_epi32(
+                            acc,
+                            _mm256_mullo_epi32(x, _mm256_set1_epi32(w)),
+                        );
+                    }
+                }
+                let mut sums = [0i32; 8];
+                _mm256_storeu_si256(sums.as_mut_ptr() as *mut __m256i, acc);
+                for (t, s) in sums.iter().enumerate() {
+                    let mut a = *s;
+                    let col = &cols[(j + t) * stride..];
+                    for jj in full * LANES..k {
+                        a += extract_code(col, jj, PX) as i32 * extract_weight(wrow, jj, PW);
+                    }
+                    out[j + t] = a;
+                }
+                j += 8;
+            }
+            if j < b {
+                SWAR_BATCH[precision_index(PX)][precision_index(PW)](
+                    &cols[j * stride..],
+                    stride,
+                    wrow,
+                    k,
+                    &mut out[j..],
+                );
+            }
+        }
+
+        pub(super) fn $wide(
+            cols: &[u8],
+            stride: usize,
+            wrow: &[u8],
+            k: usize,
+            out: &mut [i64],
+        ) {
+            // SAFETY: installed behind runtime AVX2 detection (module doc)
+            unsafe { $wide_impl(cols, stride, wrow, k, out) }
+        }
+
+        #[target_feature(enable = "avx2")]
+        unsafe fn $wide_impl(
+            cols: &[u8],
+            stride: usize,
+            wrow: &[u8],
+            k: usize,
+            out: &mut [i64],
+        ) {
+            const PX: u32 = $px;
+            const PW: u32 = $pw;
+            const LANES: usize = (32 / if PX > PW { PX } else { PW }) as usize;
+            const XSTEP: usize = LANES * PX as usize / 8;
+            const WSTEP: usize = LANES * PW as usize / 8;
+            const XMASK: u32 = (1u32 << PX) - 1;
+            const WMASK: u32 = (1u32 << PW) - 1;
+            let b = out.len();
+            let full = k / LANES;
+            let xmask = _mm256_set1_epi64x(XMASK as i64);
+            let mut j = 0;
+            while j + 4 <= b {
+                let base = j * stride;
+                let mut acc = _mm256_setzero_si256();
+                for i in 0..full {
+                    let ww = load_le(wrow, i * WSTEP, WSTEP);
+                    let xoff = base + i * XSTEP;
+                    let xv = _mm256_set_epi64x(
+                        load_le(cols, xoff + 3 * stride, XSTEP) as i64,
+                        load_le(cols, xoff + 2 * stride, XSTEP) as i64,
+                        load_le(cols, xoff + stride, XSTEP) as i64,
+                        load_le(cols, xoff, XSTEP) as i64,
+                    );
+                    for lane in 0..LANES as u32 {
+                        let w = sext(((ww >> (lane * PW)) & WMASK) as i32, PW);
+                        let x = _mm256_and_si256(
+                            _mm256_srl_epi64(xv, _mm_cvtsi32_si128((lane * PX) as i32)),
+                            xmask,
+                        );
+                        // mul_epi32 sign-extends each 64-bit lane's low
+                        // 32 bits: x < 2^8 stays positive, w keeps its
+                        // sign — the product is exact in i64
+                        acc = _mm256_add_epi64(
+                            acc,
+                            _mm256_mul_epi32(x, _mm256_set1_epi64x(w as i64)),
+                        );
+                    }
+                }
+                let mut sums = [0i64; 4];
+                _mm256_storeu_si256(sums.as_mut_ptr() as *mut __m256i, acc);
+                for (t, s) in sums.iter().enumerate() {
+                    let mut a = *s;
+                    let col = &cols[(j + t) * stride..];
+                    for jj in full * LANES..k {
+                        a += extract_code(col, jj, PX) as i64
+                            * extract_weight(wrow, jj, PW) as i64;
+                    }
+                    out[j + t] = a;
+                }
+                j += 4;
+            }
+            if j < b {
+                SWAR_WIDE_BATCH[precision_index(PX)][precision_index(PW)](
+                    &cols[j * stride..],
+                    stride,
+                    wrow,
+                    k,
+                    &mut out[j..],
+                );
+            }
+        }
+    };
+}
+
+avx2_kernel!(b_x2_w2, b_x2_w2_impl, wb_x2_w2, wb_x2_w2_impl, 2, 2);
+avx2_kernel!(b_x2_w4, b_x2_w4_impl, wb_x2_w4, wb_x2_w4_impl, 2, 4);
+avx2_kernel!(b_x2_w8, b_x2_w8_impl, wb_x2_w8, wb_x2_w8_impl, 2, 8);
+avx2_kernel!(b_x4_w2, b_x4_w2_impl, wb_x4_w2, wb_x4_w2_impl, 4, 2);
+avx2_kernel!(b_x4_w4, b_x4_w4_impl, wb_x4_w4, wb_x4_w4_impl, 4, 4);
+avx2_kernel!(b_x4_w8, b_x4_w8_impl, wb_x4_w8, wb_x4_w8_impl, 4, 8);
+avx2_kernel!(b_x8_w2, b_x8_w2_impl, wb_x8_w2, wb_x8_w2_impl, 8, 2);
+avx2_kernel!(b_x8_w4, b_x8_w4_impl, wb_x8_w4, wb_x8_w4_impl, 8, 4);
+avx2_kernel!(b_x8_w8, b_x8_w8_impl, wb_x8_w8, wb_x8_w8_impl, 8, 8);
+
+pub(super) const KERNELS_BATCH: [[RowDotBatch; 3]; 3] = [
+    [b_x2_w2, b_x2_w4, b_x2_w8],
+    [b_x4_w2, b_x4_w4, b_x4_w8],
+    [b_x8_w2, b_x8_w4, b_x8_w8],
+];
+
+pub(super) const KERNELS_WIDE_BATCH: [[RowDotWideBatch; 3]; 3] = [
+    [wb_x2_w2, wb_x2_w4, wb_x2_w8],
+    [wb_x4_w2, wb_x4_w4, wb_x4_w8],
+    [wb_x8_w2, wb_x8_w4, wb_x8_w8],
+];

@@ -1,0 +1,209 @@
+//! AVX-512 tier: sixteen samples per `i32` register, eight per `i64`.
+//!
+//! Structurally identical to the AVX2 tier (see `avx2.rs` — scalar
+//! bounds-checked column fetches, scalar weight decode, vector MAC
+//! only, SWAR accumulation order per sample) at twice the width.
+//! Ragged batch remainders cascade to the AVX2 cell, which in turn
+//! cascades its own remainder to SWAR — this tier is only installed
+//! when both feature bits were detected, so the whole cascade is
+//! runtime-proven.
+
+use std::arch::x86_64::*;
+
+use super::avx2;
+use crate::engine::backend::{
+    extract_code, extract_weight, load_le, sext, RowDotBatch, RowDotWideBatch,
+};
+
+/// Generates one `(p_x, p_w)` AVX-512 cell pair; `$fb`/`$fbw` are the
+/// matching AVX2 cells the `B mod 16` / `B mod 8` remainders cascade
+/// to.  Safety argument as in `avx2.rs`: the `unsafe` inner fns are
+/// only reachable through tables installed after
+/// `is_x86_feature_detected!("avx512f")` (and `"avx2"`) returned true.
+macro_rules! avx512_kernel {
+    ($batch:ident, $batch_impl:ident, $wide:ident, $wide_impl:ident,
+     $px:literal, $pw:literal, $fb:path, $fbw:path) => {
+        pub(super) fn $batch(
+            cols: &[u8],
+            stride: usize,
+            wrow: &[u8],
+            k: usize,
+            out: &mut [i32],
+        ) {
+            // SAFETY: installed behind runtime AVX-512 detection
+            unsafe { $batch_impl(cols, stride, wrow, k, out) }
+        }
+
+        #[target_feature(enable = "avx512f")]
+        unsafe fn $batch_impl(
+            cols: &[u8],
+            stride: usize,
+            wrow: &[u8],
+            k: usize,
+            out: &mut [i32],
+        ) {
+            const PX: u32 = $px;
+            const PW: u32 = $pw;
+            const LANES: usize = (32 / if PX > PW { PX } else { PW }) as usize;
+            const XSTEP: usize = LANES * PX as usize / 8;
+            const WSTEP: usize = LANES * PW as usize / 8;
+            const XMASK: u32 = (1u32 << PX) - 1;
+            const WMASK: u32 = (1u32 << PW) - 1;
+            let b = out.len();
+            let full = k / LANES;
+            let xmask = _mm512_set1_epi32(XMASK as i32);
+            let mut j = 0;
+            while j + 16 <= b {
+                let base = j * stride;
+                let mut acc = _mm512_setzero_si512();
+                for i in 0..full {
+                    let ww = load_le(wrow, i * WSTEP, WSTEP);
+                    let xoff = base + i * XSTEP;
+                    let xv = _mm512_set_epi32(
+                        load_le(cols, xoff + 15 * stride, XSTEP) as i32,
+                        load_le(cols, xoff + 14 * stride, XSTEP) as i32,
+                        load_le(cols, xoff + 13 * stride, XSTEP) as i32,
+                        load_le(cols, xoff + 12 * stride, XSTEP) as i32,
+                        load_le(cols, xoff + 11 * stride, XSTEP) as i32,
+                        load_le(cols, xoff + 10 * stride, XSTEP) as i32,
+                        load_le(cols, xoff + 9 * stride, XSTEP) as i32,
+                        load_le(cols, xoff + 8 * stride, XSTEP) as i32,
+                        load_le(cols, xoff + 7 * stride, XSTEP) as i32,
+                        load_le(cols, xoff + 6 * stride, XSTEP) as i32,
+                        load_le(cols, xoff + 5 * stride, XSTEP) as i32,
+                        load_le(cols, xoff + 4 * stride, XSTEP) as i32,
+                        load_le(cols, xoff + 3 * stride, XSTEP) as i32,
+                        load_le(cols, xoff + 2 * stride, XSTEP) as i32,
+                        load_le(cols, xoff + stride, XSTEP) as i32,
+                        load_le(cols, xoff, XSTEP) as i32,
+                    );
+                    for lane in 0..LANES as u32 {
+                        let w = sext(((ww >> (lane * PW)) & WMASK) as i32, PW);
+                        let x = _mm512_and_si512(
+                            _mm512_srl_epi32(xv, _mm_cvtsi32_si128((lane * PX) as i32)),
+                            xmask,
+                        );
+                        acc = _mm512_add_epi32(
+                            acc,
+                            _mm512_mullo_epi32(x, _mm512_set1_epi32(w)),
+                        );
+                    }
+                }
+                let mut sums = [0i32; 16];
+                _mm512_storeu_epi32(sums.as_mut_ptr(), acc);
+                for (t, s) in sums.iter().enumerate() {
+                    let mut a = *s;
+                    let col = &cols[(j + t) * stride..];
+                    for jj in full * LANES..k {
+                        a += extract_code(col, jj, PX) as i32 * extract_weight(wrow, jj, PW);
+                    }
+                    out[j + t] = a;
+                }
+                j += 16;
+            }
+            if j < b {
+                $fb(&cols[j * stride..], stride, wrow, k, &mut out[j..]);
+            }
+        }
+
+        pub(super) fn $wide(
+            cols: &[u8],
+            stride: usize,
+            wrow: &[u8],
+            k: usize,
+            out: &mut [i64],
+        ) {
+            // SAFETY: installed behind runtime AVX-512 detection
+            unsafe { $wide_impl(cols, stride, wrow, k, out) }
+        }
+
+        #[target_feature(enable = "avx512f")]
+        unsafe fn $wide_impl(
+            cols: &[u8],
+            stride: usize,
+            wrow: &[u8],
+            k: usize,
+            out: &mut [i64],
+        ) {
+            const PX: u32 = $px;
+            const PW: u32 = $pw;
+            const LANES: usize = (32 / if PX > PW { PX } else { PW }) as usize;
+            const XSTEP: usize = LANES * PX as usize / 8;
+            const WSTEP: usize = LANES * PW as usize / 8;
+            const XMASK: u32 = (1u32 << PX) - 1;
+            const WMASK: u32 = (1u32 << PW) - 1;
+            let b = out.len();
+            let full = k / LANES;
+            let xmask = _mm512_set1_epi64(XMASK as i64);
+            let mut j = 0;
+            while j + 8 <= b {
+                let base = j * stride;
+                let mut acc = _mm512_setzero_si512();
+                for i in 0..full {
+                    let ww = load_le(wrow, i * WSTEP, WSTEP);
+                    let xoff = base + i * XSTEP;
+                    let xv = _mm512_set_epi64(
+                        load_le(cols, xoff + 7 * stride, XSTEP) as i64,
+                        load_le(cols, xoff + 6 * stride, XSTEP) as i64,
+                        load_le(cols, xoff + 5 * stride, XSTEP) as i64,
+                        load_le(cols, xoff + 4 * stride, XSTEP) as i64,
+                        load_le(cols, xoff + 3 * stride, XSTEP) as i64,
+                        load_le(cols, xoff + 2 * stride, XSTEP) as i64,
+                        load_le(cols, xoff + stride, XSTEP) as i64,
+                        load_le(cols, xoff, XSTEP) as i64,
+                    );
+                    for lane in 0..LANES as u32 {
+                        let w = sext(((ww >> (lane * PW)) & WMASK) as i32, PW);
+                        let x = _mm512_and_si512(
+                            _mm512_srl_epi64(xv, _mm_cvtsi32_si128((lane * PX) as i32)),
+                            xmask,
+                        );
+                        // mul_epi32: low-32 sign-extended multiply per
+                        // 64-bit lane — exact, as in the AVX2 tier
+                        acc = _mm512_add_epi64(
+                            acc,
+                            _mm512_mul_epi32(x, _mm512_set1_epi64(w as i64)),
+                        );
+                    }
+                }
+                let mut sums = [0i64; 8];
+                _mm512_storeu_epi64(sums.as_mut_ptr(), acc);
+                for (t, s) in sums.iter().enumerate() {
+                    let mut a = *s;
+                    let col = &cols[(j + t) * stride..];
+                    for jj in full * LANES..k {
+                        a += extract_code(col, jj, PX) as i64
+                            * extract_weight(wrow, jj, PW) as i64;
+                    }
+                    out[j + t] = a;
+                }
+                j += 8;
+            }
+            if j < b {
+                $fbw(&cols[j * stride..], stride, wrow, k, &mut out[j..]);
+            }
+        }
+    };
+}
+
+avx512_kernel!(b_x2_w2, b_x2_w2_impl, wb_x2_w2, wb_x2_w2_impl, 2, 2, avx2::b_x2_w2, avx2::wb_x2_w2);
+avx512_kernel!(b_x2_w4, b_x2_w4_impl, wb_x2_w4, wb_x2_w4_impl, 2, 4, avx2::b_x2_w4, avx2::wb_x2_w4);
+avx512_kernel!(b_x2_w8, b_x2_w8_impl, wb_x2_w8, wb_x2_w8_impl, 2, 8, avx2::b_x2_w8, avx2::wb_x2_w8);
+avx512_kernel!(b_x4_w2, b_x4_w2_impl, wb_x4_w2, wb_x4_w2_impl, 4, 2, avx2::b_x4_w2, avx2::wb_x4_w2);
+avx512_kernel!(b_x4_w4, b_x4_w4_impl, wb_x4_w4, wb_x4_w4_impl, 4, 4, avx2::b_x4_w4, avx2::wb_x4_w4);
+avx512_kernel!(b_x4_w8, b_x4_w8_impl, wb_x4_w8, wb_x4_w8_impl, 4, 8, avx2::b_x4_w8, avx2::wb_x4_w8);
+avx512_kernel!(b_x8_w2, b_x8_w2_impl, wb_x8_w2, wb_x8_w2_impl, 8, 2, avx2::b_x8_w2, avx2::wb_x8_w2);
+avx512_kernel!(b_x8_w4, b_x8_w4_impl, wb_x8_w4, wb_x8_w4_impl, 8, 4, avx2::b_x8_w4, avx2::wb_x8_w4);
+avx512_kernel!(b_x8_w8, b_x8_w8_impl, wb_x8_w8, wb_x8_w8_impl, 8, 8, avx2::b_x8_w8, avx2::wb_x8_w8);
+
+pub(super) const KERNELS_BATCH: [[RowDotBatch; 3]; 3] = [
+    [b_x2_w2, b_x2_w4, b_x2_w8],
+    [b_x4_w2, b_x4_w4, b_x4_w8],
+    [b_x8_w2, b_x8_w4, b_x8_w8],
+];
+
+pub(super) const KERNELS_WIDE_BATCH: [[RowDotWideBatch; 3]; 3] = [
+    [wb_x2_w2, wb_x2_w4, wb_x2_w8],
+    [wb_x4_w2, wb_x4_w4, wb_x4_w8],
+    [wb_x8_w2, wb_x8_w4, wb_x8_w8],
+];

@@ -1,0 +1,276 @@
+//! Runtime-dispatched x86 vector kernels for the `simd` backend.
+//!
+//! The SWAR cells in `engine::backend` decode packed sub-byte operands
+//! one 32-bit register at a time — MPIC's `sdotp` modeled in scalar
+//! code.  This module keeps that decode structure but turns the
+//! **batch axis into the vector axis**: one AVX2 register holds eight
+//! samples' i32 accumulators (four i64 on the FC path; AVX-512 doubles
+//! both), each fetched-and-decoded weight lane is broadcast and ridden
+//! across all of them, and per sample the accumulation order (register
+//! ascending, lane ascending, then the scalar tail) is exactly the
+//! SWAR order — so every tier is bit-identical to the `reference`
+//! oracle by construction, not by tolerance.
+//!
+//! **Tier selection happens once per process** ([`active`]): the
+//! highest of AVX-512 → AVX2 → SWAR that
+//! `is_x86_feature_detected!` confirms, overridable with
+//! `CWMIX_SIMD=off|avx2|avx512|auto` (CI runs the equivalence suites
+//! under both `auto` and `off` so the scalar fallback stays exercised
+//! on vector-capable runners).  A vector kernel is only ever installed
+//! in the active tables *after* its feature bit was detected — that
+//! runtime proof is the safety argument for every `unsafe` intrinsic
+//! block below.  Non-x86 hosts always resolve to the SWAR tier, which
+//! aliases the `engine::backend` batch tables verbatim.
+//!
+//! **No over-read, by construction.**  The FC path hands kernels
+//! zero-copy packed planes whose last column ends flush at the buffer
+//! end, so the vector kernels never issue wide loads over column data:
+//! they assemble registers from bounds-checked scalar `load_le`
+//! fetches (exactly `XSTEP ≤ 4` bytes each) and vectorize only the
+//! multiply-accumulate.  Ragged batch remainders cascade down one tier
+//! (AVX-512 → AVX2 → SWAR) on a column sub-slice, which preserves
+//! per-column accumulation order trivially.
+
+use std::sync::OnceLock;
+
+use super::backend::{RowDotBatch, RowDotWideBatch, DOT_KERNELS_BATCH, DOT_KERNELS_WIDE_BATCH};
+
+#[cfg(target_arch = "x86_64")]
+mod avx2;
+#[cfg(target_arch = "x86_64")]
+mod avx512;
+
+/// One dispatch tier.  Ordered by preference; `auto` picks the highest
+/// the CPU supports.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Tier {
+    /// universal fallback: the scalar SWAR batch cells
+    Swar,
+    /// 256-bit: 8 samples/register (i32), 4 (i64)
+    Avx2,
+    /// 512-bit: 16 samples/register (i32), 8 (i64)
+    Avx512,
+}
+
+impl Tier {
+    pub fn name(self) -> &'static str {
+        match self {
+            Tier::Swar => "swar",
+            Tier::Avx2 => "avx2",
+            Tier::Avx512 => "avx512",
+        }
+    }
+}
+
+/// The kernel tables of one tier, indexed like the SWAR tables:
+/// `[precision_index(p_x)][precision_index(p_w)]`.
+pub(in crate::engine) struct Tables {
+    pub(in crate::engine) tier: Tier,
+    pub(in crate::engine) batch: &'static [[RowDotBatch; 3]; 3],
+    pub(in crate::engine) wide_batch: &'static [[RowDotWideBatch; 3]; 3],
+}
+
+static SWAR_TABLES: Tables = Tables {
+    tier: Tier::Swar,
+    batch: &DOT_KERNELS_BATCH,
+    wide_batch: &DOT_KERNELS_WIDE_BATCH,
+};
+
+#[cfg(target_arch = "x86_64")]
+static AVX2_TABLES: Tables = Tables {
+    tier: Tier::Avx2,
+    batch: &avx2::KERNELS_BATCH,
+    wide_batch: &avx2::KERNELS_WIDE_BATCH,
+};
+
+#[cfg(target_arch = "x86_64")]
+static AVX512_TABLES: Tables = Tables {
+    tier: Tier::Avx512,
+    batch: &avx512::KERNELS_BATCH,
+    wide_batch: &avx512::KERNELS_WIDE_BATCH,
+};
+
+/// Pure tier policy, separated from detection + env so it unit-tests
+/// without process-global state: `env` is the `CWMIX_SIMD` value,
+/// `avx2`/`avx512` the detection results.  Returns the tier and an
+/// optional warning (requested tier unavailable / unknown value).
+/// A tier is only ever *granted* when its feature bit is true — the
+/// override can force a lower tier, never fake a higher one.
+fn tier_from(env: Option<&str>, avx2: bool, avx512: bool) -> (Tier, Option<String>) {
+    let auto = || {
+        if avx512 && avx2 {
+            Tier::Avx512
+        } else if avx2 {
+            Tier::Avx2
+        } else {
+            Tier::Swar
+        }
+    };
+    match env {
+        None | Some("") | Some("auto") => (auto(), None),
+        Some("off") | Some("swar") => (Tier::Swar, None),
+        Some("avx2") => {
+            if avx2 {
+                (Tier::Avx2, None)
+            } else {
+                (
+                    Tier::Swar,
+                    Some("CWMIX_SIMD=avx2: AVX2 not detected, using swar".into()),
+                )
+            }
+        }
+        Some("avx512") => {
+            if avx512 && avx2 {
+                (Tier::Avx512, None)
+            } else {
+                let (t, _) = tier_from(None, avx2, false);
+                (
+                    t,
+                    Some(format!(
+                        "CWMIX_SIMD=avx512: AVX-512 not detected, using {}",
+                        t.name()
+                    )),
+                )
+            }
+        }
+        Some(other) => (
+            auto(),
+            Some(format!(
+                "CWMIX_SIMD={other:?} not recognized (off|avx2|avx512|auto), using auto"
+            )),
+        ),
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect() -> (bool, bool) {
+    (
+        is_x86_feature_detected!("avx2"),
+        is_x86_feature_detected!("avx512f"),
+    )
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn detect() -> (bool, bool) {
+    (false, false)
+}
+
+fn tables_for(tier: Tier) -> &'static Tables {
+    match tier {
+        Tier::Swar => &SWAR_TABLES,
+        #[cfg(target_arch = "x86_64")]
+        Tier::Avx2 => &AVX2_TABLES,
+        #[cfg(target_arch = "x86_64")]
+        Tier::Avx512 => &AVX512_TABLES,
+        // tier_from never grants a vector tier without its feature bit,
+        // and detection is compile-time false off x86
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => &SWAR_TABLES,
+    }
+}
+
+/// The process-wide active tier tables: detection + `CWMIX_SIMD` are
+/// consulted exactly once, at the first model load, and every kernel
+/// built afterwards shares the result — a plan's tier can never change
+/// under it.
+pub(in crate::engine) fn active() -> &'static Tables {
+    static ACTIVE: OnceLock<&'static Tables> = OnceLock::new();
+    ACTIVE.get_or_init(|| {
+        let (avx2, avx512) = detect();
+        let (tier, warning) = tier_from(std::env::var("CWMIX_SIMD").ok().as_deref(), avx2, avx512);
+        if let Some(w) = warning {
+            eprintln!("cwmix: {w}");
+        }
+        tables_for(tier)
+    })
+}
+
+/// Name of the tier [`active`] resolved (or would resolve) to.
+pub fn active_tier_name() -> &'static str {
+    active().tier.name()
+}
+
+/// Every tier runnable on this host, for the exactness suites: SWAR
+/// always, plus each vector tier whose feature bit is detected —
+/// independent of `CWMIX_SIMD`, so the suites cover tiers the override
+/// disabled for dispatch.
+#[cfg(test)]
+pub(in crate::engine) fn available_tables() -> Vec<&'static Tables> {
+    let mut v = vec![&SWAR_TABLES];
+    #[cfg(target_arch = "x86_64")]
+    {
+        let (avx2, avx512) = detect();
+        if avx2 {
+            v.push(&AVX2_TABLES);
+        }
+        if avx2 && avx512 {
+            v.push(&AVX512_TABLES);
+        }
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn auto_picks_highest_detected_tier() {
+        assert_eq!(tier_from(None, false, false).0, Tier::Swar);
+        assert_eq!(tier_from(None, true, false).0, Tier::Avx2);
+        assert_eq!(tier_from(None, true, true).0, Tier::Avx512);
+        assert_eq!(tier_from(Some("auto"), true, true).0, Tier::Avx512);
+        assert_eq!(tier_from(Some(""), true, false).0, Tier::Avx2);
+        // avx512 bit without avx2 never happens on real silicon, but
+        // the policy must not grant a tier whose kernels cascade to it
+        assert_eq!(tier_from(None, false, true).0, Tier::Swar);
+    }
+
+    #[test]
+    fn off_forces_swar_everywhere() {
+        for (a2, a512) in [(false, false), (true, false), (true, true)] {
+            let (tier, warn) = tier_from(Some("off"), a2, a512);
+            assert_eq!(tier, Tier::Swar);
+            assert!(warn.is_none());
+        }
+        assert_eq!(tier_from(Some("swar"), true, true).0, Tier::Swar);
+    }
+
+    #[test]
+    fn forced_tier_granted_only_when_detected() {
+        assert_eq!(tier_from(Some("avx2"), true, true).0, Tier::Avx2);
+        let (tier, warn) = tier_from(Some("avx2"), false, false);
+        assert_eq!(tier, Tier::Swar);
+        assert!(warn.unwrap().contains("not detected"));
+        assert_eq!(tier_from(Some("avx512"), true, true).0, Tier::Avx512);
+        let (tier, warn) = tier_from(Some("avx512"), true, false);
+        assert_eq!(tier, Tier::Avx2);
+        assert!(warn.unwrap().contains("avx2"));
+    }
+
+    #[test]
+    fn unknown_value_warns_and_falls_back_to_auto() {
+        let (tier, warn) = tier_from(Some("neon"), true, false);
+        assert_eq!(tier, Tier::Avx2);
+        assert!(warn.unwrap().contains("neon"));
+    }
+
+    #[test]
+    fn active_tier_is_consistent_and_named() {
+        // whatever the host + env resolve to, the name round-trips and
+        // the tables carry the matching tier tag
+        let t = active();
+        assert_eq!(t.tier.name(), active_tier_name());
+        assert!(["swar", "avx2", "avx512"].contains(&active_tier_name()));
+    }
+
+    #[test]
+    fn available_tables_start_with_swar() {
+        let tables = available_tables();
+        assert_eq!(tables[0].tier, Tier::Swar);
+        // tiers are listed in ascending width order, no duplicates
+        for pair in tables.windows(2) {
+            assert!((pair[0].tier as u8) < (pair[1].tier as u8));
+        }
+    }
+}

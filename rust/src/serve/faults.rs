@@ -16,10 +16,11 @@
 //!   <kind>:<model>:<trigger>[:<arg>]
 //!
 //!   kind    engine_panic | engine_stall | queue_full | slow_socket
-//!           | registry_load_error | artifact_corrupt
+//!           | write_stall | registry_load_error | artifact_corrupt
 //!   model   bench name, or * for any model
 //!   trigger once | always | times=N | nth=N | prob=P
-//!   arg     milliseconds for engine_stall / slow_socket (default 100)
+//!   arg     milliseconds for engine_stall / slow_socket / write_stall
+//!           (default 100)
 //! ```
 //!
 //! Examples: `engine_panic:ic:once` (the chaos-smoke CI spec),
@@ -42,6 +43,12 @@
 //!   were full (explicit 503 shed path).
 //! * `slow_socket` — the HTTP handler sleeps `arg` ms before routing a
 //!   parsed request (injected network latency).
+//! * `write_stall` — the HTTP handler flushes a partial reply, sleeps
+//!   `arg` ms mid-write, then finishes and closes the connection (a
+//!   client that stops draining, or a path-MTU black hole, on the
+//!   *reply* half of the socket — the read half is `slow_socket`'s
+//!   job).  The server must neither corrupt the reply nor let the
+//!   stalled writer pin its handler slot beyond the write deadline.
 //! * `registry_load_error` — a modelpack load fails with an injected
 //!   error (the registry must fall back to compile, loudly).
 //! * `artifact_corrupt` — a deterministic byte of the `.cwm` bytes is
@@ -70,6 +77,7 @@ enum Kind {
     EngineStall,
     QueueFull,
     SlowSocket,
+    WriteStall,
     RegistryLoadError,
     ArtifactCorrupt,
 }
@@ -81,6 +89,7 @@ impl Kind {
             Kind::EngineStall => "engine_stall",
             Kind::QueueFull => "queue_full",
             Kind::SlowSocket => "slow_socket",
+            Kind::WriteStall => "write_stall",
             Kind::RegistryLoadError => "registry_load_error",
             Kind::ArtifactCorrupt => "artifact_corrupt",
         }
@@ -204,6 +213,7 @@ impl Faults {
                 "engine_stall" => Kind::EngineStall,
                 "queue_full" => Kind::QueueFull,
                 "slow_socket" => Kind::SlowSocket,
+                "write_stall" => Kind::WriteStall,
                 "registry_load_error" => Kind::RegistryLoadError,
                 "artifact_corrupt" => Kind::ArtifactCorrupt,
                 other => bail!("unknown failpoint kind {other:?}"),
@@ -301,6 +311,17 @@ impl Faults {
             .map(|p| Duration::from_millis(p.arg_ms))
     }
 
+    /// HTTP reply failpoint: stall this long between two flushes of the
+    /// response bytes (the write half of the socket; `slow_socket`
+    /// covers the read half).
+    pub fn write_stall(&self) -> Option<Duration> {
+        if !self.armed() {
+            return None;
+        }
+        self.fire(Kind::WriteStall, "*")
+            .map(|p| Duration::from_millis(p.arg_ms))
+    }
+
     /// Modelpack-load failpoint: an injected load error for `bench`.
     pub fn registry_load_error(&self, bench: &str) -> Option<String> {
         if !self.armed() {
@@ -366,6 +387,7 @@ mod tests {
         assert!(f.engine("ic").is_none());
         assert!(!f.queue_full("ic"));
         assert!(f.slow_socket().is_none());
+        assert!(f.write_stall().is_none());
         assert!(f.registry_load_error("ic").is_none());
         let mut b = vec![1u8, 2, 3];
         assert!(!f.corrupt_artifact("ic", &mut b));
@@ -411,6 +433,16 @@ mod tests {
             f.engine("ad"),
             Some(EngineFault::Stall(Duration::from_millis(250)))
         );
+    }
+
+    #[test]
+    fn write_stall_carries_duration_and_respects_trigger() {
+        let f = Faults::parse("write_stall:*:once:150", 0).unwrap();
+        assert_eq!(f.write_stall(), Some(Duration::from_millis(150)));
+        assert_eq!(f.write_stall(), None, "once: second reply unaffected");
+        // default arg
+        let f = Faults::parse("write_stall:*:always", 0).unwrap();
+        assert_eq!(f.write_stall(), Some(Duration::from_millis(100)));
     }
 
     #[test]

@@ -21,9 +21,9 @@
 //!   body; 503 once shutdown begins (load balancers drain first).
 //! * `GET /v1/models` — registry description.
 //! * `GET /metrics` — per-model + total counters, p50/p99 latency,
-//!   batch-size histogram, shed count, supervision gauges
-//!   (worker respawns, breaker state, deadline expiries, slow-client
-//!   closes).
+//!   batch-size histogram, shed count, kernel dispatch gauges (backend
+//!   + SIMD tier), supervision gauges (worker respawns, breaker state,
+//!   deadline expiries, slow-client closes, injected write stalls).
 //! * `POST /admin/shutdown` — begin a clean shutdown: stop accepting,
 //!   drain batchers, join workers.
 //!
@@ -72,8 +72,8 @@ pub struct ServeConfig {
     /// Per-connection write timeout: a peer that stops reading cannot
     /// hold a handler thread past this.
     pub write_timeout: Duration,
-    /// Fault-injection plan (disarmed by default; `slow_socket` fires
-    /// here).
+    /// Fault-injection plan (disarmed by default; `slow_socket` and
+    /// `write_stall` fire here).
     pub faults: Arc<Faults>,
 }
 
@@ -342,6 +342,9 @@ struct ServerState {
     slow_client_closes: AtomicU64,
     /// Idle keep-alive connections reaped by the read timeout.
     idle_reaped: AtomicU64,
+    /// Replies deliberately stalled mid-write by the `write_stall`
+    /// failpoint (each one also forces `Connection: close`).
+    write_stalls: AtomicU64,
 }
 
 /// A running server: accept loop + handler threads.
@@ -365,6 +368,7 @@ pub fn serve(registry: Arc<ModelRegistry>, cfg: ServeConfig) -> Result<Server> {
         started: Instant::now(),
         slow_client_closes: AtomicU64::new(0),
         idle_reaped: AtomicU64::new(0),
+        write_stalls: AtomicU64::new(0),
     });
     let accept_state = Arc::clone(&state);
     let acceptor = std::thread::Builder::new()
@@ -487,9 +491,35 @@ fn handle_connection(stream: TcpStream, state: &Arc<ServerState>) {
                     std::thread::sleep(d);
                 }
                 let (status, body, retry_after) = route(state, &req);
-                let close =
-                    req.close || draining || state.shutdown.load(Ordering::Acquire);
-                match write_response(&mut writer, status, &body, close, retry_after) {
+                let stall = state.cfg.faults.write_stall();
+                let close = req.close
+                    || draining
+                    || stall.is_some()
+                    || state.shutdown.load(Ordering::Acquire);
+                let res = match stall {
+                    Some(d) => {
+                        // fault plan: flush half the serialized reply,
+                        // stall, then finish — the bytes on the wire
+                        // must still frame one intact response, and the
+                        // forced close keeps the stalled writer from
+                        // pinning a keep-alive slot
+                        state.write_stalls.fetch_add(1, Ordering::Relaxed);
+                        let mut bytes = Vec::new();
+                        write_response(&mut bytes, status, &body, close, retry_after)
+                            .expect("Vec writes are infallible");
+                        let split = bytes.len() / 2;
+                        writer
+                            .write_all(&bytes[..split])
+                            .and_then(|()| writer.flush())
+                            .and_then(|()| {
+                                std::thread::sleep(d);
+                                writer.write_all(&bytes[split..])
+                            })
+                            .and_then(|()| writer.flush())
+                    }
+                    None => write_response(&mut writer, status, &body, close, retry_after),
+                };
+                match res {
                     Ok(()) if !close => {}
                     Ok(()) => break,
                     Err(e) => {
@@ -635,6 +665,11 @@ fn metrics_body(state: &Arc<ServerState>) -> Json {
             for (k, v) in metrics::fusion_gauges(e.plan().fusion()) {
                 o.insert(k.to_string(), v);
             }
+            for (k, v) in
+                metrics::kernel_gauges(e.plan().backend_name(), e.plan().kernel_tier())
+            {
+                o.insert(k.to_string(), v);
+            }
             // supervision gauges read live (the breaker transitions
             // lazily — asking it is what advances open → half-open)
             let sup = e.batcher().supervision();
@@ -660,6 +695,10 @@ fn metrics_body(state: &Arc<ServerState>) -> Json {
         (
             "idle_reaped",
             Json::num(state.idle_reaped.load(Ordering::Relaxed) as f64),
+        ),
+        (
+            "write_stalls",
+            Json::num(state.write_stalls.load(Ordering::Relaxed) as f64),
         ),
         ("models", Json::Obj(models.into_iter().collect())),
     ])

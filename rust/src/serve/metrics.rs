@@ -274,6 +274,18 @@ pub fn fusion_gauges(f: &crate::engine::FusionStats) -> Vec<(&'static str, Json)
     ]
 }
 
+/// Kernel-dispatch gauges for a `/metrics` body: which backend a model's
+/// plan compiled against and which SIMD tier its kernels dispatched to
+/// at load (`swar` for the universal fallback and for non-simd
+/// backends, where the tier is just the backend name).  Compile-time
+/// facts like [`fusion_gauges`], not runtime counters.
+pub fn kernel_gauges(backend: &str, tier: &str) -> Vec<(&'static str, Json)> {
+    vec![
+        ("kernel_backend", Json::str(backend)),
+        ("kernel_tier", Json::str(tier)),
+    ]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -359,6 +371,15 @@ mod tests {
             snap.get("latency_window").unwrap().as_f64().unwrap(),
             LATENCY_RING as f64
         );
+    }
+
+    #[test]
+    fn kernel_gauges_name_backend_and_tier() {
+        let g = kernel_gauges("simd", "avx2");
+        assert_eq!(g.len(), 2);
+        assert_eq!(g[0].1.as_str().unwrap(), "simd");
+        assert_eq!(g[1].0, "kernel_tier");
+        assert_eq!(g[1].1.as_str().unwrap(), "avx2");
     }
 
     #[test]

@@ -39,7 +39,8 @@
 //!   poison-free lock helpers every serve lock goes through.
 //! * [`faults`] — deterministic fault injection (`CWMIX_FAULTS` /
 //!   `--faults`): seeded failpoints for engine panic/stall, queue-full,
-//!   slow sockets, and registry load/corruption, compiled to no-ops
+//!   slow sockets, mid-reply write stalls, and registry
+//!   load/corruption, compiled to no-ops
 //!   when disarmed.  The chaos suite (`tests/serve_chaos.rs`,
 //!   `tools/chaos_smoke.sh`) drives them over real sockets.
 //! * [`Metrics`] — request/shed counters, p50/p99 latency, batch-size

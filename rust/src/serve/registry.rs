@@ -54,7 +54,7 @@ use super::supervisor::SupervisorCfg;
 pub struct RegistryConfig {
     /// Benchmarks to serve (`ic|kws|vww|ad`).
     pub benches: Vec<String>,
-    /// Kernel backend (`packed|reference`).
+    /// Kernel backend (`packed|reference|simd`).
     pub backend: String,
     /// Assignment spec: `stripy` (striped 2/4/8 mix) or `w<N>x<M>`.
     pub assignment: String,
@@ -161,6 +161,7 @@ impl ModelEntry {
         Json::obj(vec![
             ("name", Json::str(&self.name)),
             ("backend", Json::str(self.plan.backend_name())),
+            ("kernel_tier", Json::str(self.plan.kernel_tier())),
             ("feat", Json::num(self.plan.feat() as f64)),
             ("out_len", Json::num(self.plan.out_len() as f64)),
             ("weight_bytes", Json::num(self.plan.weight_bytes() as f64)),

@@ -4,11 +4,14 @@
 //! geometry comes from the builtin zoo, weights from the deterministic
 //! synthetic initialiser.  Asserts:
 //!
-//! * `packed` is **bit-identical** to `reference` (and both to the
-//!   scalar oracle `mpic::exec::run_sample`) across all nine
+//! * `packed` and `simd` are **bit-identical** to `reference` (and all
+//!   to the scalar oracle `mpic::exec::run_sample`) across all nine
 //!   `(p_x, p_w) ∈ {2,4,8}²` fixed combos — on the FC-only topology
 //!   *and* on a conv/depthwise topology, so every cell of the SWAR
 //!   kernel table runs against ragged K values (conv K = 27/9/...);
+//!   the `simd` assertions honor `CWMIX_SIMD`, and CI runs this suite
+//!   under both `auto` and `off` so the vector tiers *and* the scalar
+//!   fallback stay proven on the same runner;
 //! * the same bit-exactness on all four benchmark topologies under an
 //!   adversarially striped per-channel assignment (residual joins,
 //!   depthwise chains, FC-only);
@@ -22,7 +25,7 @@
 
 use cwmix::data::{make_dataset, Split};
 use cwmix::deploy::{self, DeployedModel};
-use cwmix::engine::{ExecPlan, KernelBackend, PackedBackend, ReferenceBackend};
+use cwmix::engine::{ExecPlan, KernelBackend, PackedBackend, ReferenceBackend, SimdBackend};
 use cwmix::models::zoo::{builtin_manifest, stripy_assignment as stripy, synthetic_state};
 use cwmix::models::Manifest;
 use cwmix::quant::{pack_subbyte, unpack_subbyte, Assignment};
@@ -95,10 +98,13 @@ fn check_all_nine_combos(bench: &str, n: usize) {
             let (want, oc) = oracle_run(&model, &manifest, &ds.x, n);
             let (ref_out, rc) = engine_run(&model, &manifest, &ReferenceBackend, &ds.x, n);
             let (packed_out, pc) = engine_run(&model, &manifest, &PackedBackend, &ds.x, n);
+            let (simd_out, sc) = engine_run(&model, &manifest, &SimdBackend, &ds.x, n);
             assert_eq!(ref_out, want, "{bench}: reference vs oracle w{wb}x{xb}");
             assert_eq!(packed_out, want, "{bench}: packed vs oracle w{wb}x{xb}");
+            assert_eq!(simd_out, want, "{bench}: simd vs oracle w{wb}x{xb}");
             assert_costs_equal(bench, &rc, &oc);
             assert_costs_equal(bench, &pc, &oc);
+            assert_costs_equal(bench, &sc, &oc);
         }
     }
 }
@@ -127,7 +133,7 @@ fn pact_clip_boundary_bit_exact() {
     let feat = manifest.feat_len();
     let hot = vec![1.0e6f32; feat];
     let (want, _) = cwmix::mpic::run_sample(&model, &hot, &manifest.lut).unwrap();
-    for backend in [&ReferenceBackend as &dyn KernelBackend, &PackedBackend] {
+    for backend in [&ReferenceBackend as &dyn KernelBackend, &PackedBackend, &SimdBackend] {
         let plan = ExecPlan::compile(&model, &manifest.lut, backend).unwrap();
         let mut arena = plan.arena();
         let got = plan.run_sample(&mut arena, &hot).unwrap();
@@ -146,10 +152,48 @@ fn all_four_geometries_bit_exact_striped() {
         let (want, oc) = oracle_run(&model, &manifest, &ds.x, n);
         let (ref_out, rc) = engine_run(&model, &manifest, &ReferenceBackend, &ds.x, n);
         let (packed_out, pc) = engine_run(&model, &manifest, &PackedBackend, &ds.x, n);
+        let (simd_out, sc) = engine_run(&model, &manifest, &SimdBackend, &ds.x, n);
         assert_eq!(ref_out, want, "{bench}: reference vs oracle");
         assert_eq!(packed_out, want, "{bench}: packed vs oracle");
+        assert_eq!(simd_out, want, "{bench}: simd vs oracle");
         assert_costs_equal(bench, &rc, &oc);
         assert_costs_equal(bench, &pc, &oc);
+        assert_costs_equal(bench, &sc, &oc);
+    }
+}
+
+/// The simd backend across batch sizes {1, 7, 8} on all four zoo
+/// geometries under striped assignments: the vector kernels see full
+/// vector blocks (B=8), pure remainders (B=7, all-SWAR cascade on the
+/// i32 path) and the no-batch-axis case (B=1), and every output is
+/// bit-identical to the packed backend and the out-of-engine oracle.
+/// Honors `CWMIX_SIMD`, so the CI `off` run exercises the scalar
+/// fallback through the same assertions.
+#[test]
+fn simd_backend_batch_sizes_bit_exact_striped() {
+    for bench in ["ic", "kws", "vww", "ad"] {
+        let manifest = builtin_manifest(bench).unwrap();
+        let a = stripy(&manifest);
+        let model = build(&manifest, &a);
+        let feat = manifest.feat_len();
+        let ds = make_dataset(bench, Split::Test, 8, 7);
+        let samples: Vec<&[f32]> = ds.x.chunks_exact(feat).collect();
+        let simd = ExecPlan::compile(&model, &manifest.lut, &SimdBackend).unwrap();
+        let packed = ExecPlan::compile(&model, &manifest.lut, &PackedBackend).unwrap();
+        assert_eq!(simd.backend_name(), "simd");
+        assert_eq!(simd.kernel_tier(), SimdBackend.tier());
+        let mut sa = simd.batch_arena(8);
+        let mut pa = packed.batch_arena(8);
+        for b in [1usize, 7, 8] {
+            let got = simd.run_batch_planes(&mut sa, &samples[..b]).unwrap();
+            let want = packed.run_batch_planes(&mut pa, &samples[..b]).unwrap();
+            assert_eq!(got, want, "{bench} b={b}: simd vs packed");
+        }
+        let oracle = cwmix::mpic::run_sample(&model, samples[0], &manifest.lut)
+            .unwrap()
+            .0;
+        let got = simd.run_batch_planes(&mut sa, &samples[..1]).unwrap();
+        assert_eq!(got[0], oracle, "{bench}: simd vs mpic::exec oracle");
     }
 }
 

@@ -15,7 +15,7 @@
 
 use cwmix::data::{make_dataset, Split};
 use cwmix::deploy;
-use cwmix::engine::{ExecPlan, FusionStats, PackedBackend, ReferenceBackend};
+use cwmix::engine::{ExecPlan, FusionStats, PackedBackend, ReferenceBackend, SimdBackend};
 use cwmix::models::zoo::{builtin_manifest, stripy_assignment, synthetic_state};
 use cwmix::quant::Assignment;
 
@@ -83,6 +83,17 @@ fn check_all_nine_combos_fused(bench: &str) {
                 got, oracle,
                 "{bench} w{wb}x{xb}: fused diverged from the reference backend"
             );
+
+            // the simd backend fuses for free (the fusion seam sits
+            // above the kernel boundary) and must stay bit-identical
+            // through the fused exit on every tier
+            let simd = ExecPlan::compile(&model, &manifest.lut, &SimdBackend).unwrap();
+            assert_eq!(simd.fusion().fused_edges, stats.fused_edges);
+            assert_eq!(
+                batch_outputs(&simd, &samples),
+                oracle,
+                "{bench} w{wb}x{xb}: fused simd diverged from the reference backend"
+            );
         }
     }
 }
@@ -132,6 +143,12 @@ fn striped_assignments_fused_match_oracle() {
         let want = batch_outputs(&unfused, &samples);
         let got = batch_outputs(&fused, &samples);
         assert_eq!(got, want, "{bench}: fused striped diverged from unfused");
+        let simd = ExecPlan::compile(&model, &manifest.lut, &SimdBackend).unwrap();
+        assert_eq!(
+            batch_outputs(&simd, &samples),
+            want,
+            "{bench}: fused striped simd diverged from unfused packed"
+        );
         // the full-batch row ties the first two outputs to the oracle
         assert_eq!(
             &got[BATCH_SIZES.len() - 1][..2],

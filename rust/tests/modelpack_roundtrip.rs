@@ -1,7 +1,9 @@
 //! Modelpack contract (ISSUE 5): a `.cwm` artifact round-trips the
 //! *entire* compile output — `from_modelpack` executions are
 //! **bit-identical** to the fresh `ExecPlan::compile` they came from,
-//! across all four zoo models × both backends × striped assignments —
+//! across all four zoo models × all three backends × striped
+//! assignments (the `simd` backend shares the packed flash image and
+//! re-resolves its dispatch tier on the loading host) —
 //! and hostile bytes (truncations at every boundary, corrupted
 //! checksums, version skew, offsets past EOF, semantic corruption)
 //! always yield typed [`PackError`]s, never panics.
@@ -12,7 +14,7 @@ use cwmix::data::{make_dataset, Split};
 use cwmix::deploy;
 use cwmix::engine::{
     inspect, read_provenance, ExecPlan, FusionStats, KernelBackend, PackedBackend,
-    Provenance, ReferenceBackend,
+    Provenance, ReferenceBackend, SimdBackend,
 };
 use cwmix::modelpack::{self, PackError};
 use cwmix::models::zoo::{
@@ -20,8 +22,8 @@ use cwmix::models::zoo::{
 };
 use cwmix::quant::Assignment;
 
-fn backends() -> [&'static dyn KernelBackend; 2] {
-    [&ReferenceBackend, &PackedBackend]
+fn backends() -> [&'static dyn KernelBackend; 3] {
+    [&ReferenceBackend, &PackedBackend, &SimdBackend]
 }
 
 /// Compile `bench` with the striped assignment (the adversarial case:
@@ -36,7 +38,7 @@ fn compiled(bench: &str, backend: &dyn KernelBackend) -> (deploy::DeployedModel,
 }
 
 #[test]
-fn roundtrip_bit_identical_all_models_both_backends() {
+fn roundtrip_bit_identical_all_models_all_backends() {
     for bench in BENCHES {
         let manifest = builtin_manifest(bench).unwrap();
         let feat = manifest.feat_len();
@@ -48,9 +50,11 @@ fn roundtrip_bit_identical_all_models_both_backends() {
             let loaded = ExecPlan::from_modelpack(&pack)
                 .unwrap_or_else(|e| panic!("{bench}/{}: {e}", backend.name()));
 
-            // metadata round-trips
+            // metadata round-trips (the tier is re-resolved on load,
+            // which on one host yields the same answer)
             assert_eq!(loaded.bench(), plan.bench());
             assert_eq!(loaded.backend_name(), plan.backend_name());
+            assert_eq!(loaded.kernel_tier(), plan.kernel_tier());
             assert_eq!(loaded.feat(), plan.feat());
             assert_eq!(loaded.out_len(), plan.out_len());
             assert_eq!(loaded.weight_bytes(), plan.weight_bytes());

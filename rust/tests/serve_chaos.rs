@@ -17,6 +17,8 @@
 //!   overload;
 //! * slow clients and idle keep-alive connections are reaped and
 //!   counted;
+//! * a mid-reply write stall delivers the delayed reply intact, closes
+//!   the connection, and is gauged as `write_stalls`;
 //! * injected registry load errors / artifact corruption make the cold
 //!   start fall back to compilation instead of taking the server down.
 //!
@@ -309,6 +311,60 @@ fn queue_full_fault_sheds_once_then_recovers() {
     let m = conn.get("/metrics").unwrap();
     let ad = m.body.get("models").unwrap().get("ad").unwrap();
     assert_eq!(ad.get("shed").unwrap().as_f64().unwrap(), 1.0);
+    drop(conn);
+    server.stop().unwrap();
+    registry.shutdown();
+}
+
+/// The write half of the socket: a `write_stall` failpoint flushes a
+/// partial reply, sleeps, then finishes.  The delayed reply must still
+/// frame one intact response with bit-correct output, the server must
+/// close the connection (no stalled keep-alive slot), and the stall
+/// must be visible in the top-level `write_stalls` gauge.
+#[test]
+fn write_stall_delivers_intact_reply_then_closes() {
+    let (registry, server) =
+        start_faulted(&["ad"], BatchPolicy::default(), "write_stall:*:once:150");
+    let addr = server.addr();
+    let (input, want) = expected(&registry, "ad", 0);
+
+    // raw socket: read_to_string only returns at EOF, so a completed
+    // read proves the forced `Connection: close` actually closed us
+    let payload = infer_body(&input);
+    let mut s = std::net::TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let t0 = Instant::now();
+    write!(
+        s,
+        "POST /v1/infer/ad HTTP/1.1\r\nContent-Length: {}\r\n\r\n{}",
+        payload.len(),
+        payload
+    )
+    .unwrap();
+    s.flush().unwrap();
+    let mut reply = String::new();
+    s.read_to_string(&mut reply).unwrap();
+    assert!(
+        t0.elapsed() >= Duration::from_millis(150),
+        "reply arrived before the injected stall elapsed"
+    );
+    assert!(reply.starts_with("HTTP/1.1 200 "), "stalled reply got: {reply:?}");
+    assert!(reply.contains("Connection: close\r\n"), "{reply:?}");
+    let body_at = reply.find("\r\n\r\n").unwrap() + 4;
+    let body = cwmix::minijson::parse_bytes(reply[body_at..].as_bytes()).unwrap();
+    assert_eq!(
+        output_of(&body).unwrap(),
+        want,
+        "mid-write stall corrupted the reply"
+    );
+
+    // once: the next request is unstalled and keeps its connection
+    let mut conn = Conn::connect(addr).unwrap();
+    let r = conn.post("/v1/infer/ad", &infer_body(&input)).unwrap();
+    assert_eq!(r.status, 200, "{}", r.body.dumps());
+    assert_eq!(output_of(&r.body).unwrap(), want);
+    let m = conn.get("/metrics").unwrap();
+    assert!(m.body.get("write_stalls").unwrap().as_f64().unwrap() >= 1.0);
     drop(conn);
     server.stop().unwrap();
     registry.shutdown();
