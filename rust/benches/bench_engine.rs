@@ -11,9 +11,10 @@
 //! assignment (the deployment-relevant case: fragmented sub-conv groups
 //! across all three precisions); the combo sweep runs uniform
 //! `w{p_w}x{p_x}` assignments so each table cell is isolated.  Emits a
-//! machine-readable `BENCH_engine.json` (schema v6: v5 plus per-model
-//! simd-vs-packed batched kernel cells and the SIMD tier the `simd`
-//! backend dispatched to on this host) at the repo root so future PRs
+//! machine-readable `BENCH_engine.json` (schema v7: v6 plus per-model
+//! `profile/<bench>` cells — profiled-vs-plain `run_batch_planes`
+//! overhead ratio and the cost-model Spearman fit from the per-node
+//! measurement hooks) at the repo root so future PRs
 //! have a perf trajectory
 //! (`tools: cargo run --bin bench_compare` diffs two of these and gates
 //! CI), and asserts bit-exactness of every path while measuring.
@@ -307,6 +308,71 @@ fn simd_rows() -> anyhow::Result<Vec<(String, Json)>> {
     Ok(rows)
 }
 
+/// Profiling-hook overhead per model: `run_batch_planes` plain vs
+/// under a live `PlanProfile` (B=8, packed, stripy).  The hooks read
+/// two clocks per node, so the ratio should hover near 1.0; the cell
+/// also records the Spearman fit between measured node wall time and
+/// the cost model's predicted cycles — the `cwmix profile` headline
+/// number, kept on the perf trajectory.
+fn profile_rows() -> anyhow::Result<Vec<(String, Json)>> {
+    const B: usize = 8;
+    println!("\nprofiling hooks per model (packed, stripy, B={B}, ms/sample):");
+    let mut rows = Vec::new();
+    for bench in BENCHES {
+        let manifest = builtin_manifest(bench)?;
+        let (params, bn) = synthetic_state(&manifest, 0);
+        let a = stripy(&manifest);
+        let model = deploy::build(&manifest, &params, &bn, &a)?;
+        let plan = ExecPlan::compile(&model, &manifest.lut, &PackedBackend)?;
+        let feat = manifest.feat_len();
+        let ds = make_dataset(bench, Split::Test, B, 11);
+        let samples: Vec<&[f32]> = ds.x.chunks_exact(feat).collect();
+        let mut arena = plan.batch_arena(B);
+        let mut prof = plan.profile();
+
+        // bit-exactness while measuring: the hooks only read clocks
+        let want = plan.run_batch_planes(&mut arena, &samples)?;
+        let got = plan.run_batch_planes_profiled(&mut arena, &samples, &mut prof)?;
+        assert_eq!(got, want, "{bench}: profiled pass diverged from plain");
+
+        let (plain_ms, _, _) = measure(1, 5, || {
+            let _ = plan.run_batch_planes(&mut arena, &samples).unwrap();
+        });
+        let (prof_ms, _, _) = measure(1, 5, || {
+            let _ = plan
+                .run_batch_planes_profiled(&mut arena, &samples, &mut prof)
+                .unwrap();
+        });
+        let (plain_per, prof_per) = (plain_ms / B as f64, prof_ms / B as f64);
+
+        let cost = plan.cost();
+        let (mut measured, mut predicted) = (Vec::new(), Vec::new());
+        for node in &prof.nodes {
+            if let Some(ix) = node.cost_ix {
+                measured.push(node.wall_ns() as f64);
+                predicted.push(cost.layers[ix].total_cycles());
+            }
+        }
+        let fit = cwmix::util::stats::spearman(&measured, &predicted);
+        println!(
+            "    {bench:<4} plain {plain_per:>8.3}  profiled {prof_per:>8.3}  \
+             ({:>5.2}x overhead, spearman {fit:.3})",
+            prof_per / plain_per
+        );
+        rows.push((
+            bench.to_string(),
+            Json::obj(vec![
+                ("plain_ms_per_sample", Json::num(plain_per)),
+                ("profiled_ms_per_sample", Json::num(prof_per)),
+                ("overhead_profiled_vs_plain", Json::num(prof_per / plain_per)),
+                ("spearman_measured_vs_model", Json::num(fit)),
+                ("profiled_nodes", Json::num(measured.len() as f64)),
+            ]),
+        ));
+    }
+    Ok(rows)
+}
+
 fn combo_rows() -> anyhow::Result<Vec<(String, Json)>> {
     let manifest = builtin_manifest(COMBO_BENCH)?;
     let (params, bn) = synthetic_state(&manifest, 0);
@@ -472,9 +538,11 @@ fn main() -> anyhow::Result<()> {
     let fused_obj = Json::Obj(fused_cells.into_iter().collect());
     let simd_cells = simd_rows()?;
     let simd_obj = Json::Obj(simd_cells.into_iter().collect());
+    let profile_cells = profile_rows()?;
+    let profile_obj = Json::Obj(profile_cells.into_iter().collect());
 
     let report = Json::obj(vec![
-        ("version", Json::num(6.0)),
+        ("version", Json::num(7.0)),
         ("threads", Json::num(threads as f64)),
         ("batch", Json::num(batch as f64)),
         ("assignment", Json::str("stripy-2/4/8")),
@@ -488,6 +556,7 @@ fn main() -> anyhow::Result<()> {
         ("fused", fused_obj),
         ("simd_tier", Json::str(cwmix::engine::simd::active_tier_name())),
         ("simd", simd_obj),
+        ("profile", profile_obj),
     ]);
     let path = out_path();
     std::fs::write(&path, report.pretty())?;

@@ -26,7 +26,10 @@
 //!   pass exists to keep below one; each simd cell (schema v6) divides
 //!   the simd backend's batched per-sample time by the same run's
 //!   packed time for that model — the ratio the vector tiers exist to
-//!   keep below one (~1.0 when the host dispatched to `swar`).  The
+//!   keep below one (~1.0 when the host dispatched to `swar`); each
+//!   profile cell (schema v7) divides the profiled `run_batch_planes`
+//!   per-sample time by the same run's plain time for that model — the
+//!   ratio the near-free measurement hooks exist to keep near one.  The
 //!   multithreaded cell is reported but not gated — its ratio to the
 //!   single-thread seed scales with the runner's core count.
 //!
@@ -124,6 +127,20 @@ fn engine_cells(doc: &Json) -> Result<Vec<(String, f64)>> {
                 bail!("simd/{bench}: non-positive packed baseline");
             }
             out.push((format!("simd/{bench}"), simd / packed));
+        }
+    }
+    // profiling-hook cells (schema v7): profiled per-sample time over
+    // the same run's plain time on the same model — machine speed
+    // cancels; a regression means the measurement hooks stopped being
+    // (near-)free and the always-on `None` branch promise broke
+    if let Some(cells) = doc.opt("profile") {
+        for (bench, obj) in cells.as_obj()? {
+            let profiled = obj.get("profiled_ms_per_sample")?.as_f64()?;
+            let plain = obj.get("plain_ms_per_sample")?.as_f64()?;
+            if plain <= 0.0 {
+                bail!("profile/{bench}: non-positive plain baseline");
+            }
+            out.push((format!("profile/{bench}"), profiled / plain));
         }
     }
     // batch-plane cells (schema v3): packed per-sample time at batch
@@ -531,6 +548,33 @@ mod tests {
         assert!(simd_speedup_failures(&doc_with_simd("avx512", 0.97))
             .unwrap()
             .is_empty());
+    }
+
+    #[test]
+    fn profile_cells_normalise_and_gate() {
+        let with_profile = |profiled: f64| {
+            let mut d = doc(10.0, 5.0, 2.0);
+            let prof = parse(&format!(
+                r#"{{"ic": {{"plain_ms_per_sample": 2.0,
+                     "profiled_ms_per_sample": {profiled},
+                     "overhead_profiled_vs_plain": {},
+                     "spearman_measured_vs_model": 0.9}}}}"#,
+                profiled / 2.0
+            ))
+            .unwrap();
+            if let Json::Obj(o) = &mut d {
+                o.insert("profile".to_string(), prof);
+            }
+            d
+        };
+        // profiled/plain = 1.02 in the baseline
+        let base = with_profile(2.04);
+        let cells = engine_cells(&base).unwrap();
+        assert!(cells.iter().any(|(l, v)| l == "profile/ic" && (*v - 1.02).abs() < 1e-9));
+        assert!(diff(&base, &base, 0.2).is_empty());
+        // hooks growing to 1.5x plain trips the gate
+        let regs = diff(&base, &with_profile(3.06), 0.2);
+        assert!(regs.iter().any(|r| r.contains("profile/ic")));
     }
 
     #[test]

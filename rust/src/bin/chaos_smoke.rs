@@ -1,7 +1,8 @@
 //! CI chaos client for `cwmix serve` under an armed fault plan.
 //!
 //! ```bash
-//! CWMIX_FAULTS=engine_panic:ic:once cwmix serve --addr 127.0.0.1:0 &
+//! CWMIX_FAULTS=engine_panic:ic:once CWMIX_TRACE=1 \
+//!     cwmix serve --addr 127.0.0.1:0 &
 //! cargo run --release --bin chaos_smoke -- 127.0.0.1:<port> ic
 //! ```
 //!
@@ -13,7 +14,11 @@
 //!
 //! 1. `/readyz` answers 200 with every breaker closed.
 //! 2. The first infer on the faulted model rides the injected panic —
-//!    an explicit 5xx, never a hang, never a dead server.
+//!    an explicit 5xx, never a hang, never a dead server — and the
+//!    reply still carries its admission-stamped `request_id`; with
+//!    tracing armed (`CWMIX_TRACE=1`, as the harness script sets), the
+//!    spans recorded before the worker died (request / admission /
+//!    queue_wait) are scrapeable from `GET /v1/trace`.
 //! 3. `/metrics` shows the supervisor at work: `worker_panics` = 1,
 //!    `worker_respawns` ≥ 1 for the faulted model (polled — the
 //!    respawn races the 5xx reply by a backoff).
@@ -107,6 +112,38 @@ fn main() -> Result<()> {
         );
     }
     println!("  {faulted}: injected panic answered {} (explicit, no hang)", r.status);
+
+    // 2b. the 5xx reply still carries its admission-stamped request id,
+    //     and the spans recorded before the worker died are scrapeable
+    let rid = r.body.get("request_id")?.as_f64()?;
+    if rid < 1.0 {
+        bail!("{faulted}: panicked reply lost its request id: {}", r.body.dumps());
+    }
+    let t = conn.get("/v1/trace?last=4096")?;
+    if t.status != 200 {
+        bail!("GET /v1/trace -> {}", t.status);
+    }
+    let mine: Vec<String> = t
+        .body
+        .get("traceEvents")?
+        .as_arr()?
+        .iter()
+        .filter(|e| {
+            e.opt("args")
+                .and_then(|a| a.opt("req"))
+                .and_then(|r| r.as_f64().ok())
+                .map(|r| r == rid)
+                .unwrap_or(false)
+        })
+        .map(|e| e.get("name").and_then(|n| n.as_str().map(str::to_string)))
+        .collect::<Result<_>>()?;
+    for want in ["request", "admission", "queue_wait"] {
+        // batch_ride died with the worker — only the pre-crash chain survives
+        if !mine.iter().any(|n| n == want) {
+            bail!("{faulted}: request {rid} missing a {want:?} span: {mine:?}");
+        }
+    }
+    println!("  {faulted}: request {rid} left {} spans in /v1/trace", mine.len());
 
     // 3. the supervisor respawned the worker (poll: the respawn lags
     //    the error reply by the backoff)

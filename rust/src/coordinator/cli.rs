@@ -8,6 +8,7 @@
 //! cwmix simulate --bench ic --wbits 8 --xbits 8 # MPIC cost model, no training
 //! cwmix compile  --out modelpacks [--benches ic,kws]  # emit .cwm artifacts
 //! cwmix inspect  --pack modelpacks/ic.cwm       # header + size accounting
+//! cwmix profile  [--bench ic] [--iters 30]      # measured vs predicted per layer
 //! cwmix serve    --benches ic,kws [--addr 127.0.0.1:8080]
 //!                [--modelpack-dir modelpacks]   # resident server, cold start
 //! cwmix report   [--dir results]                # Fig.3 panels + Fig.4 dump
@@ -119,6 +120,15 @@ COMMANDS
            channel bit-width histogram and the packed-vs-int8-vs-f32
            size table; exits non-zero when the packed totals disagree
            with the cost model's Eq. (7) accounting.
+  profile  [--bench <all|ic|kws|vww|ad>] [--backend packed|reference|simd]
+           [--assignment stripy|wNxM] [--seed 0] [--iters 30] [--batch 8]
+           [--json [-|FILE]] [--artifacts artifacts]
+           Per-layer engine profiler: run the compiled plan under the
+           measurement hooks and print, per layer, measured wall time
+           vs the share the analytical MPIC cost model predicts, plus
+           modeled bytes moved and a Spearman rank-agreement summary
+           (how well Eq. 4/5 cycles rank the real hotspots).  --json
+           emits the same numbers machine-readable (- = stdout).
   serve    [--benches ic,kws,vww,ad] [--addr 127.0.0.1:8080]
            [--backend packed|reference|simd] [--assignment stripy|wNxM]
            [--max-batch 8] [--max-wait-us 2000] [--queue-cap 256]
@@ -126,6 +136,7 @@ COMMANDS
            [--artifacts artifacts] [--modelpack-dir DIR]
            [--breaker-k 3] [--breaker-cooldown-ms 1000]
            [--faults SPEC] [--faults-seed 0]
+           [--trace] [--trace-out trace.json]
            Resident multi-model inference server: one ExecPlan per
            bench at startup — cold-loaded from DIR/<bench>.cwm when
            --modelpack-dir is given (falling back to compile on a
@@ -143,9 +154,13 @@ COMMANDS
            exported per model in /metrics.
            --faults arms deterministic failpoints for chaos testing
            (kind:model:trigger[:ms], see serve/faults.rs; also via
-           CWMIX_FAULTS / CWMIX_FAULTS_SEED).  Pure Rust, builtin
-           zoo.  --addr with port 0 picks a free port (printed on
-           stdout).
+           CWMIX_FAULTS / CWMIX_FAULTS_SEED).  --trace (or
+           CWMIX_TRACE=1) turns span recording on: every request gets
+           admission/queue/batch-ride/engine spans keyed by its id,
+           scraped live via GET /v1/trace?last=N; --trace-out also
+           writes the chrome://tracing JSON on shutdown.  Pure Rust,
+           builtin zoo.  --addr with port 0 picks a free port (printed
+           on stdout).
   report   [--dir results]
            Render every stored sweep as a Fig.3 panel + headline savings.
   lut      Print the MPIC C(p_x, p_w) energy/latency tables.
@@ -174,6 +189,7 @@ pub fn dispatch(args: &[String]) -> Result<()> {
         "simulate" => cmd_simulate(&flags),
         "compile" => cmd_compile(&flags),
         "inspect" => cmd_inspect(&flags),
+        "profile" => cmd_profile(&flags),
         "serve" => cmd_serve(&flags),
         "report" => cmd_report(&flags),
         other => bail!("unknown command {other}; try `cwmix help`"),
@@ -568,6 +584,150 @@ fn cmd_inspect(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+/// Per-layer engine profiler (DESIGN.md §9): runs the compiled plan
+/// under the `run_batch_planes_profiled` hooks and reports measured
+/// per-node wall time against the share the analytical MPIC cost model
+/// predicts — the empirical check that Eq. 4/5 cycles rank the real
+/// hotspots on this host.
+fn cmd_profile(flags: &HashMap<String, String>) -> Result<()> {
+    use crate::minijson::Json;
+    use crate::serve::registry::build_model;
+    use crate::util::stats::spearman;
+    use std::time::Instant;
+
+    let benches: Vec<String> = match flags.get("bench").map(|s| s.as_str()) {
+        None | Some("all") => zoo::BENCHES.iter().map(|b| b.to_string()).collect(),
+        Some(b) => vec![b.to_string()],
+    };
+    let backend = engine::backend_by_name(
+        flags.get("backend").map(|s| s.as_str()).unwrap_or("packed"),
+    )?;
+    let spec = flags.get("assignment").map(|s| s.as_str()).unwrap_or("stripy");
+    let seed: u64 = flags.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(0);
+    let iters: usize =
+        flags.get("iters").map(|s| s.parse()).transpose()?.unwrap_or(30).max(1);
+    let batch: usize = flags
+        .get("batch")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(8)
+        .clamp(1, engine::MAX_BATCH_CHUNK);
+    let json_to = flags.get("json").map(|s| s.as_str());
+    let art = artifacts_dir(flags);
+
+    let mut bench_docs: Vec<Json> = Vec::new();
+    for bench in &benches {
+        let (_, _, plan) = build_model(bench, backend, spec, seed, &art)?;
+        let cost = plan.cost();
+        let feat = plan.feat();
+        let ds = make_dataset(bench, Split::Test, batch, seed);
+        let samples: Vec<&[f32]> = ds.x.chunks(feat).take(batch).collect();
+        let mut arena = plan.batch_arena(batch);
+        let mut prof = plan.profile();
+        // one unprofiled warmup pass: page in weights, touch the arena
+        plan.run_batch_planes(&mut arena, &samples)?;
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            plan.run_batch_planes_profiled(&mut arena, &samples, &mut prof)?;
+        }
+        let total_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let pass_ms = prof.wall_ns as f64 / 1e6;
+        let sum_node_ms = prof.node_wall_ns() as f64 / 1e6;
+
+        // measured vs predicted shares over the accounted nodes; the
+        // rank fit deliberately compares *shares*, so clock speed and
+        // batch amortisation cancel out of the agreement score
+        let node_total_ns = prof.node_wall_ns().max(1) as f64;
+        let cycles_total = cost.total_cycles().max(1e-9);
+        let mut measured: Vec<f64> = Vec::new();
+        let mut predicted: Vec<f64> = Vec::new();
+        let mut layer_docs: Vec<Json> = Vec::new();
+        if json_to.is_none() {
+            println!(
+                "== {bench} [{}] batch={batch} iters={iters} ==",
+                plan.backend_name()
+            );
+            println!(
+                "{:<10} {:<7} {:>9} {:>8} {:>8} {:>7} {:>10}",
+                "layer", "kind", "ms", "share", "pred", "ratio", "KB moved"
+            );
+        }
+        for node in &prof.nodes {
+            let Some(ix) = node.cost_ix else { continue };
+            let ms = node.wall_ns() as f64 / 1e6;
+            let share = node.wall_ns() as f64 / node_total_ns;
+            let pred = cost.layers[ix].total_cycles() / cycles_total;
+            let ratio = if pred > 0.0 { share / pred } else { 0.0 };
+            measured.push(node.wall_ns() as f64);
+            predicted.push(cost.layers[ix].total_cycles());
+            if json_to.is_none() {
+                println!(
+                    "{:<10} {:<7} {:>9.3} {:>8.3} {:>8.3} {:>7.2} {:>10.1}",
+                    node.name,
+                    node.kind,
+                    ms,
+                    share,
+                    pred,
+                    ratio,
+                    node.bytes_moved as f64 / 1e3,
+                );
+            }
+            layer_docs.push(Json::obj(vec![
+                ("name", Json::str(&node.name)),
+                ("kind", Json::str(node.kind)),
+                ("cost_ix", Json::num(ix as f64)),
+                ("calls", Json::num(node.calls as f64)),
+                ("ms", Json::num(ms)),
+                ("share", Json::num(share)),
+                ("predicted_share", Json::num(pred)),
+                ("ratio", Json::num(ratio)),
+                ("bytes_moved", Json::num(node.bytes_moved as f64)),
+            ]));
+        }
+        let fit = spearman(&measured, &predicted);
+        if json_to.is_none() {
+            println!(
+                "coverage: nodes {sum_node_ms:.3} ms / pass {pass_ms:.3} ms / \
+                 e2e {total_ms:.3} ms ({:.1}% of e2e attributed)",
+                sum_node_ms / total_ms.max(1e-9) * 100.0,
+            );
+            println!(
+                "fit: spearman={fit:.3} over {} layers (predicted {:.1} us/inf)",
+                measured.len(),
+                cost.latency_us(),
+            );
+            println!();
+        }
+        bench_docs.push(Json::obj(vec![
+            ("bench", Json::str(bench)),
+            ("backend", Json::str(plan.backend_name())),
+            ("batch", Json::num(batch as f64)),
+            ("iters", Json::num(iters as f64)),
+            ("batches", Json::num(prof.batches as f64)),
+            ("samples", Json::num(prof.samples as f64)),
+            ("total_ms", Json::num(total_ms)),
+            ("pass_ms", Json::num(pass_ms)),
+            ("sum_node_ms", Json::num(sum_node_ms)),
+            ("spearman", Json::num(fit)),
+            ("layers", Json::Arr(layer_docs)),
+        ]));
+    }
+    if let Some(dst) = json_to {
+        let doc = Json::obj(vec![
+            ("version", Json::num(1.0)),
+            ("benches", Json::Arr(bench_docs)),
+        ]);
+        let text = doc.dumps();
+        if dst == "-" || dst == "true" {
+            println!("{text}");
+        } else {
+            std::fs::write(dst, &text).map_err(|e| anyhow!("writing {dst}: {e}"))?;
+            println!("wrote {dst}");
+        }
+    }
+    Ok(())
+}
+
 /// Resident multi-model inference server (pure Rust, builtin zoo).
 /// Blocks until `POST /admin/shutdown`, then drains and exits cleanly.
 fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
@@ -606,6 +766,15 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     };
     if faults.armed() {
         println!("fault plan armed: {}", faults.describe());
+    }
+    // span recording: --trace / --trace-out win over CWMIX_TRACE=1
+    let trace_out = flags.get("trace-out").map(PathBuf::from);
+    if flags.contains_key("trace")
+        || trace_out.is_some()
+        || std::env::var("CWMIX_TRACE").map(|v| v == "1").unwrap_or(false)
+    {
+        crate::trace::set_enabled(true);
+        println!("tracing enabled (GET /v1/trace?last=N)");
     }
     let mut reg_cfg = RegistryConfig {
         artifacts: artifacts_dir(flags),
@@ -658,7 +827,17 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     let server = serve::serve(registry, cfg)?;
     // machine-parseable: the smoke harness greps this line for the port
     println!("listening on {}", server.addr());
-    server.join()
+    let joined = server.join();
+    if let Some(path) = trace_out {
+        crate::trace::write_chrome_trace(&path, usize::MAX)
+            .map_err(|e| anyhow!("writing {}: {e}", path.display()))?;
+        println!(
+            "wrote {} ({} spans recorded)",
+            path.display(),
+            crate::trace::recorded()
+        );
+    }
+    joined
 }
 
 fn cmd_report(flags: &HashMap<String, String>) -> Result<()> {

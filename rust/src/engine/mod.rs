@@ -51,6 +51,14 @@
 //! compiles and runs in one shot: every caller holds an [`ExecPlan`]
 //! (that is the point of the plan/execute split).
 //!
+//! For observability, [`ExecPlan::run_batch_planes_profiled`]
+//! accumulates per-node wall time (quantize vs. kernel+epilogue split),
+//! modeled bytes moved and executed-batch histograms into a
+//! [`PlanProfile`] — the measurement side of the `cwmix profile`
+//! cost-model-fit report (DESIGN.md §9) — and every pass emits
+//! `engine_pass`/`node` spans through [`crate::trace`] when tracing is
+//! enabled (a single predicted branch per site when it is not).
+//!
 //! Compiled plans are durable: [`ExecPlan::to_modelpack`] /
 //! [`ExecPlan::from_modelpack`] ([`pack`]) round-trip the *entire*
 //! compile output through the versioned `.cwm` artifact container
@@ -69,4 +77,6 @@ pub use backend::{
     ReferenceBackend, SimdBackend,
 };
 pub use pack::{inspect, read_provenance, InspectLayer, InspectReport, Provenance};
-pub use plan::{engine_threads, ExecPlan, FusionStats, MAX_BATCH_CHUNK};
+pub use plan::{
+    engine_threads, ExecPlan, FusionStats, NodeProfile, PlanProfile, MAX_BATCH_CHUNK,
+};

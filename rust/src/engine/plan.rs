@@ -72,6 +72,8 @@
 //! `tests/engine_batch_plane.rs`, and fused-vs-oracle in
 //! `tests/engine_fused_requant.rs`.
 
+use std::time::Instant;
+
 use anyhow::{anyhow, bail, Result};
 
 use crate::deploy::{DeployedLayer, DeployedModel, SubConv};
@@ -82,6 +84,7 @@ use crate::mpic::cost::{
     LayerCost,
 };
 use crate::mpic::memory;
+use crate::trace;
 
 use super::arena::Arena;
 use super::backend::KernelBackend;
@@ -156,6 +159,72 @@ impl FusionStats {
     /// Per-sample activation bytes the fusion pass removed.
     pub fn act_bytes_saved(&self) -> u64 {
         self.act_bytes_unfused.saturating_sub(self.act_bytes_fused)
+    }
+}
+
+/// Measured execution profile of one plan node, accumulated by
+/// [`ExecPlan::run_batch_planes_profiled`].
+///
+/// `quant_ns` is the PACT quantize+pack pass (zero for structural
+/// nodes, for fused consumers whose plane arrives pre-coded, and for
+/// the plain path); `exec_ns` is everything else the node does
+/// (gather, kernel dot, epilogue, residual add).  `bytes_moved` is the
+/// *modeled* traffic of the executed calls — f32 slot reads/writes,
+/// packed-plane writes and the once-per-batch weight fetch — derived
+/// from plan geometry, not hardware counters.
+#[derive(Clone, Debug)]
+pub struct NodeProfile {
+    /// layer name (`spec.name`; structural nodes inherit the cost
+    /// layer's name, tap/flatten fall back to the kind)
+    pub name: String,
+    /// `conv | dwconv | fc | avgpool | add | noop`
+    pub kind: &'static str,
+    /// index of this node's [`LayerCost`] in `InferenceCost::layers`
+    /// (`None` for tap/flatten, which are never accounted)
+    pub cost_ix: Option<usize>,
+    /// executed batch passes that ran this node
+    pub calls: u64,
+    /// quantize+pack pass wall time
+    pub quant_ns: u64,
+    /// gather + kernel + epilogue wall time
+    pub exec_ns: u64,
+    /// modeled bytes moved across the executed calls
+    pub bytes_moved: u64,
+}
+
+impl NodeProfile {
+    /// Total measured wall time of this node.
+    pub fn wall_ns(&self) -> u64 {
+        self.quant_ns + self.exec_ns
+    }
+}
+
+/// Accumulated engine profile: per-node wall time + bytes moved and an
+/// executed-batch-size histogram.  Build one with [`ExecPlan::profile`]
+/// and feed it to [`ExecPlan::run_batch_planes_profiled`]; the plain
+/// [`ExecPlan::run_batch_planes`] path pays one `None` branch per node
+/// and nothing else.
+#[derive(Clone, Debug)]
+pub struct PlanProfile {
+    /// executed batch-plane passes
+    pub batches: u64,
+    /// samples across those passes
+    pub samples: u64,
+    /// wall time inside `run_batch_planes` (node loop + I/O staging)
+    pub wall_ns: u64,
+    /// `batch_hist[i]` = passes that executed `i + 1` samples (the
+    /// last bucket also holds anything ≥ [`MAX_BATCH_CHUNK`])
+    pub batch_hist: [u64; MAX_BATCH_CHUNK],
+    /// one entry per plan node, in execution order
+    pub nodes: Vec<NodeProfile>,
+}
+
+impl PlanProfile {
+    /// Sum of per-node wall times — the share of [`Self::wall_ns`]
+    /// attributed to a specific node (the rest is batch staging:
+    /// input copies, output collection, permutation).
+    pub fn node_wall_ns(&self) -> u64 {
+        self.nodes.iter().map(|n| n.wall_ns()).sum()
     }
 }
 
@@ -634,6 +703,65 @@ impl ExecPlan {
         &self.fusion
     }
 
+    /// A zeroed [`PlanProfile`] matching this plan's node list, ready
+    /// for [`Self::run_batch_planes_profiled`].  Structural nodes take
+    /// their name from the cost layer they were accounted under (the
+    /// k-th accounted node is the k-th [`LayerCost`] — compile pushes
+    /// them in the same order).
+    pub fn profile(&self) -> PlanProfile {
+        let mut cost_k = 0usize;
+        let nodes = self
+            .nodes
+            .iter()
+            .map(|node| {
+                let (kind, accounted) = match &node.kind {
+                    NodeKind::Quant(op) => (
+                        if op.fc {
+                            "fc"
+                        } else if op.depthwise {
+                            "dwconv"
+                        } else {
+                            "conv"
+                        },
+                        true,
+                    ),
+                    NodeKind::AvgPool { .. } => ("avgpool", true),
+                    NodeKind::Add { .. } => ("add", true),
+                    NodeKind::NoOp => ("noop", false),
+                };
+                let cost_ix = if accounted {
+                    let i = cost_k;
+                    cost_k += 1;
+                    (i < self.cost.layers.len()).then_some(i)
+                } else {
+                    None
+                };
+                let name = match &node.kind {
+                    NodeKind::Quant(op) => op.name.clone(),
+                    _ => cost_ix
+                        .map(|i| self.cost.layers[i].name.clone())
+                        .unwrap_or_else(|| kind.to_string()),
+                };
+                NodeProfile {
+                    name,
+                    kind,
+                    cost_ix,
+                    calls: 0,
+                    quant_ns: 0,
+                    exec_ns: 0,
+                    bytes_moved: 0,
+                }
+            })
+            .collect();
+        PlanProfile {
+            batches: 0,
+            samples: 0,
+            wall_ns: 0,
+            batch_hist: [0; MAX_BATCH_CHUNK],
+            nodes,
+        }
+    }
+
     /// Allocate a one-sample worker arena for this plan.
     pub fn arena(&self) -> Arena {
         self.batch_arena(1)
@@ -678,6 +806,36 @@ impl ExecPlan {
         arena: &mut Arena,
         samples: &[&[f32]],
     ) -> Result<Vec<Vec<f32>>> {
+        self.run_batch_inner(arena, samples, None)
+    }
+
+    /// [`Self::run_batch_planes`] with per-node profiling: wall time,
+    /// modeled bytes moved and executed-batch sizes accumulate into
+    /// `prof` (create it with [`Self::profile`]).  Outputs stay
+    /// bit-identical to the unprofiled path — the hooks only read
+    /// clocks around node boundaries.
+    pub fn run_batch_planes_profiled(
+        &self,
+        arena: &mut Arena,
+        samples: &[&[f32]],
+        prof: &mut PlanProfile,
+    ) -> Result<Vec<Vec<f32>>> {
+        if prof.nodes.len() != self.nodes.len() {
+            bail!(
+                "profile has {} node entries, plan has {} (use ExecPlan::profile)",
+                prof.nodes.len(),
+                self.nodes.len()
+            );
+        }
+        self.run_batch_inner(arena, samples, Some(prof))
+    }
+
+    fn run_batch_inner(
+        &self,
+        arena: &mut Arena,
+        samples: &[&[f32]],
+        mut prof: Option<&mut PlanProfile>,
+    ) -> Result<Vec<Vec<f32>>> {
         let b = samples.len();
         if b == 0 {
             return Ok(Vec::new());
@@ -690,13 +848,18 @@ impl ExecPlan {
                 bail!("input length {} != {}", s.len(), self.feat);
             }
         }
+        let _pass_span = trace::span_arg(trace::SpanName::EnginePass, 0, b as u64);
+        let t_pass = prof.is_some().then(Instant::now);
         let Arena { slots, planes, col, acc, acc_wide, .. } = arena;
         let sl = &self.slot_len;
         for (j, s) in samples.iter().enumerate() {
             slots[SCRATCH_A][j * sl[SCRATCH_A]..][..self.feat].copy_from_slice(s);
         }
 
-        for node in &self.nodes {
+        for (ni, node) in self.nodes.iter().enumerate() {
+            let _node_span = trace::span_arg(trace::SpanName::Node, 0, ni as u64);
+            let t_node = prof.is_some().then(Instant::now);
+            let quant_before = prof.as_deref().map(|p| p.nodes[ni].quant_ns);
             match &node.kind {
                 NodeKind::NoOp => {}
                 NodeKind::AvgPool { in_h, in_w, c } => {
@@ -754,6 +917,7 @@ impl ExecPlan {
                             self.col_len,
                             &mut acc[..b],
                             &mut acc_wide[..b],
+                            prof.as_deref_mut().map(|p| &mut p.nodes[ni]),
                         );
                     }
                     if let Some(pa) = &op.post_add {
@@ -800,6 +964,24 @@ impl ExecPlan {
                     }
                 }
             }
+            if let Some(t) = t_node {
+                let p = prof.as_deref_mut().expect("prof present when timed");
+                let np = &mut p.nodes[ni];
+                // exec_quant_batch already banked its quantize share
+                // into quant_ns; keep wall = quant + exec additive
+                let quant_delta = np.quant_ns - quant_before.unwrap_or(0);
+                np.calls += 1;
+                let wall = t.elapsed().as_nanos() as u64;
+                np.exec_ns += wall.saturating_sub(quant_delta);
+                np.bytes_moved += node_bytes_moved(node, b as u64);
+            }
+        }
+        if let Some(t) = t_pass {
+            let p = prof.as_deref_mut().expect("prof present when timed");
+            p.batches += 1;
+            p.samples += b as u64;
+            p.wall_ns += t.elapsed().as_nanos() as u64;
+            p.batch_hist[(b - 1).min(MAX_BATCH_CHUNK - 1)] += 1;
         }
 
         let mut outs = Vec::with_capacity(b);
@@ -1263,6 +1445,26 @@ impl FusedOut<'_> {
     }
 }
 
+/// Modeled bytes moved by one execution of `node` on a `b`-sample
+/// batch: f32 slot reads/writes, the packed-plane write when the node
+/// quantizes its own input, and one packed weight-stream read per
+/// batch (decoded once, ridden across all `b` columns).
+fn node_bytes_moved(node: &PlanNode, b: u64) -> u64 {
+    match &node.kind {
+        NodeKind::NoOp => 0,
+        NodeKind::AvgPool { in_h, in_w, c } => ((in_h * in_w * c + c) * 4) as u64 * b,
+        NodeKind::Add { len, .. } => (len * 3 * 4) as u64 * b,
+        NodeKind::Quant(op) => {
+            let quant = if op.in_plane_ready {
+                0
+            } else {
+                op.in_len * 4 + op.plane_bytes
+            };
+            (quant + node.out_len * 4) as u64 * b + op.kernel.weight_bytes() as u64
+        }
+    }
+}
+
 /// Epilogue writeback: the f32 slot (unless elided by fusion) and/or
 /// the consumer's packed plane.
 #[inline]
@@ -1301,6 +1503,7 @@ fn exec_quant_batch(
     col_stride: usize,
     acc: &mut [i32],
     acc_wide: &mut [i64],
+    prof: Option<&mut NodeProfile>,
 ) {
     let b = acc.len();
     let pxs = op.act_bits as usize;
@@ -1310,6 +1513,7 @@ fn exec_quant_batch(
         // plane geometry read once for all B samples.  Skipped entirely
         // when a fused producer (or a sibling consumer sharing a saved
         // plane) already coded this layer's input plane.
+        let t_q = prof.is_some().then(Instant::now);
         let xp = &mut planes[op.in_plane_slot][..];
         for j in 0..b {
             quantize_into_plane(
@@ -1321,6 +1525,9 @@ fn exec_quant_batch(
                 op.pixel_bytes,
                 &mut xp[j * plane_stride..][..op.plane_bytes],
             );
+        }
+        if let (Some(p), Some(t)) = (prof, t_q) {
+            p.quant_ns += t.elapsed().as_nanos() as u64;
         }
     }
     // fused exit: the epilogue codes the consumer's plane in this same

@@ -45,6 +45,9 @@
 //! * [`serve`] — resident multi-model inference server: `ModelRegistry`
 //!   of precompiled `ExecPlan`s, dynamic micro-batching with bounded
 //!   admission, pure-`std` HTTP/1.1 front end, serving metrics.
+//! * [`trace`] — end-to-end request tracing: lock-free per-thread span
+//!   rings (single-branch disabled path), request-id allocation,
+//!   chrome://tracing export (`GET /v1/trace`, `--trace-out`).
 //! * [`runtime`] — PJRT client wrapper executing `artifacts/*.hlo.txt`
 //!   (`xla` feature).
 //! * [`nas`] — the Alg. 1 three-phase DNAS driver (trainer: `xla`).
@@ -69,6 +72,7 @@ pub mod report;
 pub mod runtime;
 pub mod serve;
 pub mod tensor;
+pub mod trace;
 pub mod util;
 
 /// The searched bit-width set `P_W = P_X = {2, 4, 8}` (paper §III).

@@ -62,6 +62,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::engine::{Arena, ExecPlan, MAX_BATCH_CHUNK};
+use crate::trace::{self, SpanName};
 
 use super::faults::{EngineFault, Faults};
 use super::metrics::Metrics;
@@ -196,6 +197,9 @@ impl std::fmt::Display for ReplyError {
 pub type ReplyResult = Result<InferReply, ReplyError>;
 
 struct Pending {
+    /// Request id stamped at admission ([`crate::trace::next_request_id`])
+    /// — the correlation key across trace spans, log lines and replies.
+    id: u64,
     input: Vec<f32>,
     reply: mpsc::Sender<ReplyResult>,
     enqueued: Instant,
@@ -212,6 +216,11 @@ struct Shared {
     model: String,
     faults: Arc<Faults>,
     sup: Supervision,
+    /// Request ids riding the batch currently inside the engine —
+    /// sampled by the supervisor's panic log line so a worker death is
+    /// attributable to specific requests.  Deliberately left populated
+    /// when `execute` panics (that is the read the supervisor makes).
+    inflight: Mutex<Vec<u64>>,
 }
 
 /// Bounded queue + supervised coalescing worker for one model.
@@ -238,17 +247,20 @@ impl Batcher {
             model: opts.model,
             faults: opts.faults,
             sup: Supervision::new(opts.supervisor),
+            inflight: Mutex::new(Vec::new()),
         });
         let w = Arc::clone(&shared);
         let worker = std::thread::Builder::new()
             .name("cwmix-batcher".into())
             .spawn(move || {
                 let s = Arc::clone(&w);
+                let c = Arc::clone(&w);
                 supervisor::supervise(
                     &w.model,
                     &w.sup,
                     &w.metrics,
                     || w.shutdown.load(Ordering::Acquire),
+                    move || format!("inflight={:?}", *lock_unpoisoned(&c.inflight)),
                     move || worker_loop(&s),
                 );
             })
@@ -256,12 +268,17 @@ impl Batcher {
         Batcher { shared, worker: Mutex::new(Some(worker)) }
     }
 
-    /// Enqueue one sample.  Returns the reply channel, or refuses at
-    /// the door (shed / breaker / shutdown / bad input).  Every
-    /// admitted request is answered — by the worker, or by the
-    /// shutdown drain — so `recv()` on the returned channel cannot
-    /// deadlock while the batcher is alive.
-    pub fn submit(&self, input: Vec<f32>) -> Result<mpsc::Receiver<ReplyResult>, SubmitError> {
+    /// Enqueue one sample under request id `id` (stamped by the caller
+    /// at admission — [`crate::trace::next_request_id`]).  Returns the
+    /// reply channel, or refuses at the door (shed / breaker /
+    /// shutdown / bad input).  Every admitted request is answered — by
+    /// the worker, or by the shutdown drain — so `recv()` on the
+    /// returned channel cannot deadlock while the batcher is alive.
+    pub fn submit(
+        &self,
+        input: Vec<f32>,
+        id: u64,
+    ) -> Result<mpsc::Receiver<ReplyResult>, SubmitError> {
         let feat = self.shared.plan.feat();
         if input.len() != feat {
             return Err(SubmitError::BadInput(format!(
@@ -293,6 +310,7 @@ impl Batcher {
             }
             let now = Instant::now();
             q.push_back(Pending {
+                id,
                 input,
                 reply: tx,
                 enqueued: now,
@@ -445,6 +463,19 @@ fn execute(shared: &Shared, arena: &mut Arena, batch: Vec<Pending>) {
     if batch.is_empty() {
         return;
     }
+    // dequeue closes every rider's queue-wait span and opens its
+    // batch-ride span (single `enabled` branch when tracing is off)
+    let ride_start = Instant::now();
+    if trace::enabled() {
+        for p in &batch {
+            trace::record_since(SpanName::QueueWait, p.id, 0, p.enqueued);
+        }
+    }
+    {
+        let mut inflight = lock_unpoisoned(&shared.inflight);
+        inflight.clear();
+        inflight.extend(batch.iter().map(|p| p.id));
+    }
     // fault hooks, in the worker so the supervisor owns the blast
     // radius: a panic here unwinds through catch_unwind (riders of
     // THIS batch error out, the queue and other models are untouched);
@@ -504,6 +535,12 @@ fn execute(shared: &Shared, arena: &mut Arena, batch: Vec<Pending>) {
             }
         }
     }
+    if trace::enabled() {
+        for p in &batch {
+            trace::record_since(SpanName::BatchRide, p.id, n as u64, ride_start);
+        }
+    }
+    lock_unpoisoned(&shared.inflight).clear();
 }
 
 #[cfg(test)]

@@ -62,21 +62,37 @@ impl Conn {
         self.request("GET", path, None)
     }
 
+    /// GET a route that answers plain text (the prometheus exposition)
+    /// — status + unparsed body.
+    pub fn get_text(&mut self, path: &str) -> Result<(u16, String)> {
+        write!(
+            self.writer,
+            "GET {path} HTTP/1.1\r\nHost: cwmix\r\nContent-Length: 0\r\n\
+             Connection: keep-alive\r\n\r\n",
+        )?;
+        self.writer.flush()?;
+        let (status, body) = self.read_raw()?;
+        Ok((status, String::from_utf8(body).context("non-UTF-8 body")?))
+    }
+
     pub fn post(&mut self, path: &str, body: &str) -> Result<ClientResponse> {
         self.request("POST", path, Some(body))
     }
 
-    fn read_response(&mut self) -> Result<ClientResponse> {
+    fn read_raw(&mut self) -> Result<(u16, Vec<u8>)> {
         match self.reader.next_response() {
-            Ok(Some((status, body))) => {
-                let text = std::str::from_utf8(&body).context("non-UTF-8 body")?;
-                let body = if text.is_empty() { Json::Null } else { parse(text)? };
-                Ok(ClientResponse { status, body })
-            }
+            Ok(Some((status, body))) => Ok((status, body)),
             Ok(None) => bail!("connection closed before response"),
             Err(HttpError::Bad(_, m)) => bail!("malformed response: {m}"),
             Err(HttpError::Io(e)) => Err(e).context("reading response"),
         }
+    }
+
+    fn read_response(&mut self) -> Result<ClientResponse> {
+        let (status, body) = self.read_raw()?;
+        let text = std::str::from_utf8(&body).context("non-UTF-8 body")?;
+        let body = if text.is_empty() { Json::Null } else { parse(text)? };
+        Ok(ClientResponse { status, body })
     }
 }
 

@@ -20,12 +20,25 @@
 //!   circuit breaker admits traffic; per-model breaker detail in the
 //!   body; 503 once shutdown begins (load balancers drain first).
 //! * `GET /v1/models` — registry description.
-//! * `GET /metrics` — per-model + total counters, p50/p99 latency,
-//!   batch-size histogram, shed count, kernel dispatch gauges (backend
-//!   + SIMD tier), supervision gauges (worker respawns, breaker state,
-//!   deadline expiries, slow-client closes, injected write stalls).
+//! * `GET /metrics` — per-model + total counters, p50/p99/p99.9
+//!   latency, batch-size histogram, shed count, kernel dispatch gauges
+//!   (backend + SIMD tier), supervision gauges (worker respawns,
+//!   breaker state, deadline expiries, slow-client closes, injected
+//!   write stalls).  `?format=prometheus` returns the same data as
+//!   Prometheus text exposition (`cwmix_*` families, `model` labels).
+//! * `GET /v1/trace?last=N` — the newest `N` recorded spans as
+//!   chrome://tracing JSON ([`crate::trace::export_last`]); empty
+//!   unless tracing is enabled (`--trace` / `CWMIX_TRACE=1`).
 //! * `POST /admin/shutdown` — begin a clean shutdown: stop accepting,
 //!   drain batchers, join workers.
+//!
+//! Every infer request is stamped with a process-unique **request id**
+//! at admission; the id is returned in the reply body
+//! (`"request_id"`), keys all of the request's trace spans, appears in
+//! the supervisor's panic log line if a worker dies with the request
+//! in flight, and is emitted in a `key=value` per-request log line
+//! (5xx always, except 503 shed storms; others sampled via
+//! `CWMIX_LOG_SAMPLE=N`, default off).
 //!
 //! **Failure containment:** every socket has a read *and* write
 //! timeout, so a peer that stops reading (or trickles a request) is
@@ -49,10 +62,11 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use crate::minijson::{parse_bytes, Json};
+use crate::trace::{self, SpanName};
 
 use super::batcher::{ReplyError, SubmitError};
 use super::faults::Faults;
-use super::metrics;
+use super::metrics::{self, Metrics};
 use super::registry::ModelRegistry;
 use super::supervisor::BreakerState;
 
@@ -325,6 +339,33 @@ fn write_response(
     w.flush()
 }
 
+/// Serialize one plain-text response (the Prometheus exposition).
+fn write_text(w: &mut impl Write, status: u16, text: &str, close: bool) -> io::Result<()> {
+    let conn = if close { "close" } else { "keep-alive" };
+    write!(
+        w,
+        "HTTP/1.1 {status} {}\r\nContent-Type: text/plain; version=0.0.4\r\n\
+         Content-Length: {}\r\nConnection: {conn}\r\n\r\n{text}",
+        status_reason(status),
+        text.len(),
+    )?;
+    w.flush()
+}
+
+/// Serialize a dispatched reply of either body kind.
+fn write_reply(
+    w: &mut impl Write,
+    status: u16,
+    body: &Body,
+    close: bool,
+    retry_after: Option<u64>,
+) -> io::Result<()> {
+    match body {
+        Body::Json(j) => write_response(w, status, j, close, retry_after),
+        Body::Text(t) => write_text(w, status, t, close),
+    }
+}
+
 fn err_body(msg: &str) -> Json {
     Json::obj(vec![("error", Json::str(msg))])
 }
@@ -505,7 +546,7 @@ fn handle_connection(stream: TcpStream, state: &Arc<ServerState>) {
                         // pinning a keep-alive slot
                         state.write_stalls.fetch_add(1, Ordering::Relaxed);
                         let mut bytes = Vec::new();
-                        write_response(&mut bytes, status, &body, close, retry_after)
+                        write_reply(&mut bytes, status, &body, close, retry_after)
                             .expect("Vec writes are infallible");
                         let split = bytes.len() / 2;
                         writer
@@ -517,7 +558,7 @@ fn handle_connection(stream: TcpStream, state: &Arc<ServerState>) {
                             })
                             .and_then(|()| writer.flush())
                     }
-                    None => write_response(&mut writer, status, &body, close, retry_after),
+                    None => write_reply(&mut writer, status, &body, close, retry_after),
                 };
                 match res {
                     Ok(()) if !close => {}
@@ -561,20 +602,64 @@ fn handle_connection(stream: TcpStream, state: &Arc<ServerState>) {
     }
 }
 
-/// A dispatched reply: status, JSON body, optional `Retry-After`
+/// A dispatched JSON reply: status, JSON body, optional `Retry-After`
 /// seconds.
 type Reply = (u16, Json, Option<u64>);
+
+/// A wire reply body: JSON everywhere except the Prometheus text
+/// exposition.
+enum Body {
+    Json(Json),
+    Text(String),
+}
+
+/// What `route` hands the connection handler.
+type WireReply = (u16, Body, Option<u64>);
 
 fn reply(status: u16, body: Json) -> Reply {
     (status, body, None)
 }
 
+/// `?key=value` lookup in a raw query string.
+fn query_param<'a>(query: Option<&'a str>, key: &str) -> Option<&'a str> {
+    query?.split('&').find_map(|kv| {
+        let (k, v) = kv.split_once('=')?;
+        (k == key).then_some(v)
+    })
+}
+
 /// Dispatch one request.  Infallible by construction: every error is a
 /// status + body pair.
-fn route(state: &Arc<ServerState>, req: &Request) -> Reply {
-    match (req.method.as_str(), req.path.as_str()) {
+fn route(state: &Arc<ServerState>, req: &Request) -> WireReply {
+    let (path, query) = match req.path.split_once('?') {
+        Some((p, q)) => (p, Some(q)),
+        None => (req.path.as_str(), None),
+    };
+    if req.method == "GET"
+        && path == "/metrics"
+        && query_param(query, "format") == Some("prometheus")
+    {
+        return (200, Body::Text(prometheus_body(state)), None);
+    }
+    let (status, body, retry) = route_json(state, req, path, query);
+    (status, Body::Json(body), retry)
+}
+
+fn route_json(
+    state: &Arc<ServerState>,
+    req: &Request,
+    path: &str,
+    query: Option<&str>,
+) -> Reply {
+    match (req.method.as_str(), path) {
         ("GET", "/v1/models") => reply(200, state.registry.describe()),
         ("GET", "/metrics") => reply(200, metrics_body(state)),
+        ("GET", "/v1/trace") => {
+            let last = query_param(query, "last")
+                .and_then(|v| v.parse::<usize>().ok())
+                .unwrap_or(512);
+            reply(200, trace::export_last(last))
+        }
         ("GET", "/healthz") => reply(
             200,
             Json::obj(vec![
@@ -704,7 +789,97 @@ fn metrics_body(state: &Arc<ServerState>) -> Json {
     ])
 }
 
+/// The `/metrics?format=prometheus` exposition: every per-model family
+/// from [`metrics::prometheus_text`], plus the server-level gauges
+/// (uptime, resident model bytes, breaker state).
+fn prometheus_body(state: &Arc<ServerState>) -> String {
+    let entries: Vec<_> = state.registry.entries().collect();
+    let pairs: Vec<(&str, &Metrics)> =
+        entries.iter().map(|e| (e.name(), e.metrics().as_ref())).collect();
+    let mut out = metrics::prometheus_text(&pairs);
+    out.push_str("# TYPE cwmix_uptime_seconds gauge\n");
+    metrics::prom_sample(
+        &mut out,
+        "cwmix_uptime_seconds",
+        &[],
+        state.started.elapsed().as_secs_f64(),
+    );
+    out.push_str("# TYPE cwmix_model_bytes gauge\n");
+    for e in &entries {
+        metrics::prom_sample(
+            &mut out,
+            "cwmix_model_bytes",
+            &[("model", e.name())],
+            e.plan().weight_bytes() as f64,
+        );
+    }
+    out.push_str("# TYPE cwmix_breaker_state gauge\n");
+    for e in &entries {
+        metrics::prom_sample(
+            &mut out,
+            "cwmix_breaker_state",
+            &[("model", e.name())],
+            e.batcher().supervision().breaker_state().code() as f64,
+        );
+    }
+    out
+}
+
+/// `CWMIX_LOG_SAMPLE=N`: log every Nth non-5xx request line (0 = off).
+fn log_sample_every() -> u64 {
+    static N: std::sync::OnceLock<u64> = std::sync::OnceLock::new();
+    *N.get_or_init(|| {
+        std::env::var("CWMIX_LOG_SAMPLE").ok().and_then(|v| v.parse().ok()).unwrap_or(0)
+    })
+}
+
+/// Structured per-request log line.  5xx failures always log (a crashed
+/// worker must be attributable) **except** 503 — overload shed is a
+/// storm by design and would drown the log exactly when it matters;
+/// everything else is sampled by [`log_sample_every`].
+fn log_request(model: &str, id: u64, status: u16, latency_us: u64, batch: usize) {
+    let always = status >= 500 && status != 503;
+    if !always {
+        let every = log_sample_every();
+        if every == 0 {
+            return;
+        }
+        static CTR: AtomicU64 = AtomicU64::new(0);
+        if CTR.fetch_add(1, Ordering::Relaxed) % every != 0 {
+            return;
+        }
+    }
+    eprintln!(
+        "request model={model} id={id} status={status} latency_us={latency_us} \
+         batch={batch}"
+    );
+}
+
+/// Stamp the request id into a JSON reply body — every infer reply
+/// carries the correlation key, success and error alike.
+fn id_body(mut body: Json, id: u64) -> Json {
+    if let Json::Obj(o) = &mut body {
+        o.insert("request_id".to_string(), Json::num(id as f64));
+    }
+    body
+}
+
 fn infer(state: &Arc<ServerState>, name: &str, body: &[u8]) -> Reply {
+    // admission stamps the id: it exists before any validation, so even
+    // a 400 reply is correlatable with the client's attempt
+    let id = trace::next_request_id();
+    let start = Instant::now();
+    let (status, body, retry) = {
+        let _req_span = trace::span(SpanName::Request, id);
+        infer_inner(state, name, body, id)
+    };
+    let batch =
+        body.opt("batch").and_then(|b| b.as_f64().ok()).unwrap_or(0.0) as usize;
+    log_request(name, id, status, start.elapsed().as_micros() as u64, batch);
+    (status, id_body(body, id), retry)
+}
+
+fn infer_inner(state: &Arc<ServerState>, name: &str, body: &[u8], id: u64) -> Reply {
     let Some(entry) = state.registry.get(name) else {
         return reply(404, err_body(&format!("unknown model {name:?}")));
     };
@@ -718,7 +893,11 @@ fn infer(state: &Arc<ServerState>, name: &str, body: &[u8]) -> Reply {
         Ok(v) => v,
         Err(e) => return reply(400, err_body(&format!("bad \"input\": {e}"))),
     };
-    let rx = match entry.batcher().submit(input) {
+    let submitted = {
+        let _adm_span = trace::span(SpanName::Admission, id);
+        entry.batcher().submit(input, id)
+    };
+    let rx = match submitted {
         Ok(rx) => rx,
         Err(SubmitError::Overloaded) => {
             return reply(503, err_body("overloaded: queue full"))

@@ -1,60 +1,103 @@
-//! Lock-light serving metrics: counters, a batch-size histogram,
+//! Lock-free serving metrics: counters, a batch-size histogram,
 //! batch-efficiency gauges (mean *ridden* batch size, batch-plane hit
 //! ratio — how much of the engine's cross-sample amortization the
-//! traffic actually realizes) and a latency reservoir, scraped as JSON
-//! by `GET /metrics`.
+//! traffic actually realizes) and a log-bucketed latency histogram,
+//! scraped as JSON by `GET /metrics` or as Prometheus text exposition
+//! by `GET /metrics?format=prometheus` ([`prometheus_text`]).
 //!
-//! Counters and the histogram are plain relaxed atomics (every request
-//! touches them on the hot path).  Latency percentiles need ordered
-//! data, so [`Metrics`] keeps a fixed-size ring of the most recent
-//! request latencies behind a `Mutex` — recording is a push into a
-//! preallocated slot, and the sort cost is paid only when `/metrics` is
-//! scraped.  p50/p99 over the last [`LATENCY_RING`] requests is what an
-//! operator dashboards; a full streaming quantile sketch would be
-//! overkill for this surface.
+//! Everything is plain relaxed atomics — there is **no lock anywhere**
+//! on the record path and no sort under the scrape.  Latency
+//! percentiles come from a fixed [`LatencyHist`]: exact unit buckets
+//! below 32 µs, then [`LAT_SUB`] sub-buckets per power-of-two octave
+//! (HDR-histogram style), so any reported quantile is within
+//! `1/(2·LAT_SUB)` ≈ 3% of the true value while `record` is one
+//! `fetch_add`.  The histogram accumulates over the process lifetime
+//! (the `latency_window` JSON key reports the total count observed,
+//! not a ring length — the key is kept for dashboard stability).
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
 
 use crate::minijson::Json;
-
-use super::supervisor::lock_unpoisoned;
 
 /// Batch sizes `>= BATCH_HIST_MAX` share the last histogram bucket.
 pub const BATCH_HIST_MAX: usize = 32;
 
-/// Latency reservoir length (most recent requests).
-pub const LATENCY_RING: usize = 4096;
+/// Latency-histogram resolution: sub-buckets per octave.  Values below
+/// `2 * LAT_SUB` land in exact unit buckets (width 1); above that,
+/// bucket width is `2^e` for the octave starting at `LAT_SUB << e`,
+/// i.e. relative quantile error ≤ `1/(2·LAT_SUB)`.
+pub const LAT_SUB: usize = 16;
 
-/// Recent-latency ring: fixed storage, overwrites oldest.
-struct LatencyRing {
-    us: Vec<u32>,
-    pos: usize,
-    filled: bool,
+/// Bucket count covering the full clamped `u32` microsecond range:
+/// `LAT_SUB` exact leading buckets + 28 octaves × `LAT_SUB`.
+const LAT_BUCKETS: usize = LAT_SUB + 28 * LAT_SUB;
+
+/// Bucket index for a microsecond latency (clamped to `u32`).
+fn lat_bucket(us: u64) -> usize {
+    let v = us.min(u32::MAX as u64) as u32;
+    if (v as usize) < LAT_SUB {
+        return v as usize;
+    }
+    let e = (31 - v.leading_zeros()) as usize - 4;
+    LAT_SUB + e * LAT_SUB + ((v >> e) as usize - LAT_SUB)
 }
 
-impl LatencyRing {
-    fn record(&mut self, us: u64) {
-        let v = us.min(u32::MAX as u64) as u32;
-        if self.us.len() < LATENCY_RING {
-            self.us.push(v);
-        } else {
-            self.us[self.pos] = v;
-            self.filled = true;
-        }
-        self.pos = (self.pos + 1) % LATENCY_RING;
+/// Inclusive lower bound of bucket `i`.
+fn lat_bucket_lo(i: usize) -> u64 {
+    if i < LAT_SUB {
+        i as u64
+    } else {
+        let e = (i - LAT_SUB) / LAT_SUB;
+        ((LAT_SUB + (i - LAT_SUB) % LAT_SUB) as u64) << e
+    }
+}
+
+/// Width of bucket `i` (1 for the exact range, else the octave step).
+fn lat_bucket_width(i: usize) -> u64 {
+    if i < LAT_SUB {
+        1
+    } else {
+        1u64 << ((i - LAT_SUB) / LAT_SUB)
+    }
+}
+
+/// Fixed log-bucketed latency histogram; see the module docs.
+struct LatencyHist {
+    buckets: [AtomicU64; LAT_BUCKETS],
+}
+
+impl LatencyHist {
+    fn new() -> LatencyHist {
+        LatencyHist { buckets: std::array::from_fn(|_| AtomicU64::new(0)) }
     }
 
-    /// (p50_us, p99_us, n) over the retained window.
-    fn percentiles(&self) -> (u32, u32, usize) {
-        let n = if self.filled { LATENCY_RING } else { self.us.len() };
-        if n == 0 {
-            return (0, 0, 0);
+    fn record(&self, us: u64) {
+        self.buckets[lat_bucket(us)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// `(p50_us, p99_us, p999_us, n)` derived from the buckets.  A
+    /// quantile's representative value is the bucket midpoint (the
+    /// exact value for width-1 buckets); the rank convention matches
+    /// sorted-array indexing `sorted[round(q * (n-1))]`.
+    fn summary(&self) -> (u64, u64, u64, u64) {
+        let counts: Vec<u64> =
+            self.buckets.iter().map(|c| c.load(Ordering::Relaxed)).collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return (0, 0, 0, 0);
         }
-        let mut sorted = self.us[..n].to_vec();
-        sorted.sort_unstable();
-        let at = |p: f64| sorted[((n - 1) as f64 * p).round() as usize];
-        (at(0.50), at(0.99), n)
+        let at = |q: f64| -> u64 {
+            let rank = (q * (total - 1) as f64).round() as u64;
+            let mut cum = 0u64;
+            for (i, &c) in counts.iter().enumerate() {
+                cum += c;
+                if cum > rank {
+                    return lat_bucket_lo(i) + lat_bucket_width(i) / 2;
+                }
+            }
+            lat_bucket_lo(LAT_BUCKETS - 1)
+        };
+        (at(0.50), at(0.99), at(0.999), total)
     }
 }
 
@@ -76,9 +119,13 @@ pub struct Metrics {
     /// samples that rode a coalesced batch (size ≥ 2), i.e. shared
     /// their batch-plane pass with at least one other sample
     coalesced: AtomicU64,
-    /// executed batch-size histogram; bucket `i` = size `i + 1`
+    /// executed batch-size histogram; bucket `i` = size `i + 1`, and
+    /// the last bucket (`BATCH_HIST_MAX`) absorbs every size `>=`
+    /// [`BATCH_HIST_MAX`] — its JSON label is `"32+"`.  The snapshot is
+    /// **sparse**: all-zero buckets are omitted, including the
+    /// clamp bucket (a dashboard reads a missing key as 0).
     batch_hist: [AtomicU64; BATCH_HIST_MAX],
-    lat: Mutex<LatencyRing>,
+    lat: LatencyHist,
     /// worker panics caught by the supervisor
     worker_panics: AtomicU64,
     /// worker respawns performed by the supervisor
@@ -100,7 +147,7 @@ impl Default for Metrics {
             samples_sq: AtomicU64::new(0),
             coalesced: AtomicU64::new(0),
             batch_hist: std::array::from_fn(|_| AtomicU64::new(0)),
-            lat: Mutex::new(LatencyRing { us: Vec::new(), pos: 0, filled: false }),
+            lat: LatencyHist::new(),
             worker_panics: AtomicU64::new(0),
             worker_respawns: AtomicU64::new(0),
             deadline_expired: AtomicU64::new(0),
@@ -153,10 +200,10 @@ impl Metrics {
         self.batch_hist[bucket].fetch_add(1, Ordering::Relaxed);
     }
 
-    /// End-to-end latency of one answered request (admission → reply).
-    /// Poison-free: a latency record must survive any past panic.
+    /// End-to-end latency of one answered request (admission → reply):
+    /// one relaxed `fetch_add` into a log bucket, no lock, panic-immune.
     pub fn record_latency_us(&self, us: u64) {
-        lock_unpoisoned(&self.lat).record(us);
+        self.lat.record(us);
     }
 
     pub fn requests(&self) -> u64 {
@@ -222,9 +269,11 @@ impl Metrics {
         }
     }
 
-    /// JSON snapshot for `/metrics`.
+    /// JSON snapshot for `/metrics`.  `latency_window` is the total
+    /// number of latencies observed (histogram population, not a ring
+    /// length); `batch_size_hist` is sparse — see the field docs.
     pub fn snapshot(&self) -> Json {
-        let (p50, p99, window) = lock_unpoisoned(&self.lat).percentiles();
+        let (p50, p99, p999, window) = self.lat.summary();
         let hist: Vec<(String, Json)> = self
             .batch_hist
             .iter()
@@ -252,6 +301,7 @@ impl Metrics {
             ("batch_plane_hit_ratio", Json::num(self.batch_plane_hit_ratio())),
             ("latency_p50_us", Json::num(p50 as f64)),
             ("latency_p99_us", Json::num(p99 as f64)),
+            ("latency_p999_us", Json::num(p999 as f64)),
             ("latency_window", Json::num(window as f64)),
             ("batch_size_hist", Json::Obj(hist.into_iter().collect())),
             ("worker_panics", Json::num(self.worker_panics() as f64)),
@@ -284,6 +334,142 @@ pub fn kernel_gauges(backend: &str, tier: &str) -> Vec<(&'static str, Json)> {
         ("kernel_backend", Json::str(backend)),
         ("kernel_tier", Json::str(tier)),
     ]
+}
+
+/// Append one Prometheus text-exposition sample: `name{labels} value`.
+/// Integral values print without a fraction; label values are emitted
+/// verbatim (callers pass model/quantile names that need no escaping).
+pub fn prom_sample(out: &mut String, name: &str, labels: &[(&str, &str)], v: f64) {
+    out.push_str(name);
+    if !labels.is_empty() {
+        out.push('{');
+        for (i, (k, val)) in labels.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(k);
+            out.push_str("=\"");
+            out.push_str(val);
+            out.push('"');
+        }
+        out.push('}');
+    }
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        out.push_str(&format!(" {}\n", v as i64));
+    } else {
+        out.push_str(&format!(" {v}\n"));
+    }
+}
+
+/// Prometheus text exposition (`GET /metrics?format=prometheus`) over a
+/// set of `(model, metrics)` pairs.  Name-major: each family's
+/// `# TYPE` header appears once, followed by one sample per model with
+/// a `model="…"` label.  The metric names below are a stable scrape
+/// interface — `prometheus_names_are_stable` pins them.
+pub fn prometheus_text(models: &[(&str, &Metrics)]) -> String {
+    type Get = fn(&Metrics) -> f64;
+    const COUNTERS: &[(&str, &str, Get)] = &[
+        ("cwmix_requests_total", "requests accepted into the queue", |m| {
+            m.requests() as f64
+        }),
+        ("cwmix_shed_total", "requests refused at admission (queue full)", |m| {
+            m.shed() as f64
+        }),
+        ("cwmix_errors_total", "requests answered with an error after admission", |m| {
+            m.errors() as f64
+        }),
+        ("cwmix_batches_total", "engine calls executed by the batcher", |m| {
+            m.batches.load(Ordering::Relaxed) as f64
+        }),
+        ("cwmix_samples_total", "samples executed (sum of batch sizes)", |m| {
+            m.samples.load(Ordering::Relaxed) as f64
+        }),
+        ("cwmix_worker_panics_total", "worker panics caught by the supervisor", |m| {
+            m.worker_panics() as f64
+        }),
+        ("cwmix_worker_respawns_total", "worker respawns by the supervisor", |m| {
+            m.worker_respawns() as f64
+        }),
+        ("cwmix_deadline_expired_total", "requests answered 504 at dequeue", |m| {
+            m.deadline_expired() as f64
+        }),
+        ("cwmix_breaker_rejects_total", "submits refused by the open breaker", |m| {
+            m.breaker_rejects() as f64
+        }),
+    ];
+    const GAUGES: &[(&str, &str, Get)] = &[
+        ("cwmix_mean_batch", "mean executed batch size", |m| m.mean_batch()),
+        ("cwmix_mean_ridden_batch", "sample-weighted mean batch size", |m| {
+            m.mean_ridden_batch()
+        }),
+        (
+            "cwmix_batch_plane_hit_ratio",
+            "fraction of samples that rode a coalesced batch",
+            |m| m.batch_plane_hit_ratio(),
+        ),
+    ];
+    let mut out = String::new();
+    for (kind, fams) in [("counter", COUNTERS), ("gauge", GAUGES)] {
+        for (name, help, get) in fams {
+            out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
+            for (model, m) in models {
+                prom_sample(&mut out, name, &[("model", model)], get(m));
+            }
+        }
+    }
+    out.push_str(
+        "# HELP cwmix_latency_us end-to-end request latency (microseconds)\n\
+         # TYPE cwmix_latency_us summary\n",
+    );
+    for (model, m) in models {
+        let (p50, p99, p999, n) = m.lat.summary();
+        for (q, v) in [("0.5", p50), ("0.99", p99), ("0.999", p999)] {
+            prom_sample(
+                &mut out,
+                "cwmix_latency_us",
+                &[("model", model), ("quantile", q)],
+                v as f64,
+            );
+        }
+        prom_sample(&mut out, "cwmix_latency_us_count", &[("model", model)], n as f64);
+    }
+    out.push_str(
+        "# HELP cwmix_batch_size executed batch sizes\n\
+         # TYPE cwmix_batch_size histogram\n",
+    );
+    for (model, m) in models {
+        let mut cum = 0u64;
+        for i in 0..BATCH_HIST_MAX - 1 {
+            cum += m.batch_hist[i].load(Ordering::Relaxed);
+            let le = format!("{}", i + 1);
+            prom_sample(
+                &mut out,
+                "cwmix_batch_size_bucket",
+                &[("model", model), ("le", &le)],
+                cum as f64,
+            );
+        }
+        cum += m.batch_hist[BATCH_HIST_MAX - 1].load(Ordering::Relaxed);
+        prom_sample(
+            &mut out,
+            "cwmix_batch_size_bucket",
+            &[("model", model), ("le", "+Inf")],
+            cum as f64,
+        );
+        prom_sample(
+            &mut out,
+            "cwmix_batch_size_sum",
+            &[("model", model)],
+            m.samples.load(Ordering::Relaxed) as f64,
+        );
+        prom_sample(
+            &mut out,
+            "cwmix_batch_size_count",
+            &[("model", model)],
+            m.batches.load(Ordering::Relaxed) as f64,
+        );
+    }
+    out
 }
 
 #[cfg(test)]
@@ -357,20 +543,113 @@ mod tests {
     }
 
     #[test]
-    fn latency_ring_wraps() {
+    fn latency_hist_exact_below_resolution() {
+        // values under 2 * LAT_SUB land in width-1 buckets: quantiles
+        // of a constant stream are exact, and the window is the total
+        // population (the histogram never evicts)
         let m = Metrics::default();
-        for _ in 0..LATENCY_RING {
-            m.record_latency_us(1_000_000); // old, should be evicted
-        }
-        for _ in 0..LATENCY_RING {
+        for _ in 0..5000 {
             m.record_latency_us(10);
         }
         let snap = m.snapshot();
+        assert_eq!(snap.get("latency_p50_us").unwrap().as_f64().unwrap(), 10.0);
         assert_eq!(snap.get("latency_p99_us").unwrap().as_f64().unwrap(), 10.0);
-        assert_eq!(
-            snap.get("latency_window").unwrap().as_f64().unwrap(),
-            LATENCY_RING as f64
-        );
+        assert_eq!(snap.get("latency_p999_us").unwrap().as_f64().unwrap(), 10.0);
+        assert_eq!(snap.get("latency_window").unwrap().as_f64().unwrap(), 5000.0);
+    }
+
+    #[test]
+    fn latency_bucket_scheme_round_trips() {
+        // every index must own a contiguous value range: lo(i) maps
+        // back to i, and lo(i) + width(i) is lo(i + 1)
+        for i in 0..LAT_BUCKETS - 1 {
+            assert_eq!(lat_bucket(lat_bucket_lo(i)), i, "lo of bucket {i}");
+            assert_eq!(
+                lat_bucket_lo(i) + lat_bucket_width(i),
+                lat_bucket_lo(i + 1),
+                "bucket {i} not contiguous"
+            );
+        }
+        // clamp: anything ≥ u32::MAX lands in the last bucket
+        assert_eq!(lat_bucket(u64::MAX), lat_bucket(u32::MAX as u64));
+    }
+
+    #[test]
+    fn latency_p999_tracks_tail() {
+        let m = Metrics::default();
+        for _ in 0..999 {
+            m.record_latency_us(100);
+        }
+        m.record_latency_us(100_000);
+        let snap = m.snapshot();
+        let p99 = snap.get("latency_p99_us").unwrap().as_f64().unwrap();
+        let p999 = snap.get("latency_p999_us").unwrap().as_f64().unwrap();
+        assert!((95.0..=105.0).contains(&p99), "p99 {p99}");
+        // one-in-a-thousand outlier visible only at p999, within the
+        // 1/(2·LAT_SUB) relative bucket error
+        assert!((95_000.0..=105_000.0).contains(&p999), "p999 {p999}");
+    }
+
+    #[test]
+    fn batch_hist_boundary_size_clamps_with_label() {
+        let m = Metrics::default();
+        m.record_batch(BATCH_HIST_MAX); // exactly at the clamp boundary
+        let snap = m.snapshot();
+        let hist = snap.get("batch_size_hist").unwrap().as_obj().unwrap();
+        assert_eq!(hist.len(), 1, "sparse: only the hit bucket is emitted");
+        assert_eq!(hist["32+"].as_f64().unwrap(), 1.0);
+        // the clamp bucket is indistinguishable from larger sizes
+        m.record_batch(BATCH_HIST_MAX + 1);
+        let snap = m.snapshot();
+        let hist = snap.get("batch_size_hist").unwrap().as_obj().unwrap();
+        assert_eq!(hist["32+"].as_f64().unwrap(), 2.0);
+    }
+
+    #[test]
+    fn prometheus_names_are_stable() {
+        let m = Metrics::default();
+        m.record_request();
+        m.record_batch(3);
+        m.record_latency_us(42);
+        let text = prometheus_text(&[("kws", &m)]);
+        for name in [
+            "# TYPE cwmix_requests_total counter",
+            "# TYPE cwmix_shed_total counter",
+            "# TYPE cwmix_errors_total counter",
+            "# TYPE cwmix_batches_total counter",
+            "# TYPE cwmix_samples_total counter",
+            "# TYPE cwmix_worker_panics_total counter",
+            "# TYPE cwmix_worker_respawns_total counter",
+            "# TYPE cwmix_deadline_expired_total counter",
+            "# TYPE cwmix_breaker_rejects_total counter",
+            "# TYPE cwmix_mean_batch gauge",
+            "# TYPE cwmix_mean_ridden_batch gauge",
+            "# TYPE cwmix_batch_plane_hit_ratio gauge",
+            "# TYPE cwmix_latency_us summary",
+            "# TYPE cwmix_batch_size histogram",
+        ] {
+            assert!(text.contains(name), "missing exposition line: {name}");
+        }
+        assert!(text.contains("cwmix_requests_total{model=\"kws\"} 1\n"));
+        assert!(text.contains("cwmix_latency_us{model=\"kws\",quantile=\"0.5\"} 42\n"));
+        assert!(text.contains("cwmix_latency_us_count{model=\"kws\"} 1\n"));
+        // histogram buckets are cumulative and end at +Inf
+        assert!(text.contains("cwmix_batch_size_bucket{model=\"kws\",le=\"3\"} 1\n"));
+        assert!(text.contains("cwmix_batch_size_bucket{model=\"kws\",le=\"+Inf\"} 1\n"));
+        assert!(text.contains("cwmix_batch_size_sum{model=\"kws\"} 3\n"));
+        assert!(text.contains("cwmix_batch_size_count{model=\"kws\"} 1\n"));
+    }
+
+    #[test]
+    fn prometheus_multi_model_is_name_major() {
+        let a = Metrics::default();
+        let b = Metrics::default();
+        a.record_request();
+        let text = prometheus_text(&[("a", &a), ("b", &b)]);
+        let ra = text.find("cwmix_requests_total{model=\"a\"} 1").unwrap();
+        let rb = text.find("cwmix_requests_total{model=\"b\"} 0").unwrap();
+        let shed = text.find("# TYPE cwmix_shed_total").unwrap();
+        assert!(ra < rb && rb < shed, "samples grouped under one TYPE header");
     }
 
     #[test]

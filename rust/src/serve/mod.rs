@@ -43,11 +43,23 @@
 //!   load/corruption, compiled to no-ops
 //!   when disarmed.  The chaos suite (`tests/serve_chaos.rs`,
 //!   `tools/chaos_smoke.sh`) drives them over real sockets.
-//! * [`Metrics`] — request/shed counters, p50/p99 latency, batch-size
-//!   histogram, supervision gauges (panics, respawns, deadline
-//!   expiries, breaker rejects), scraped by `GET /metrics`.
+//! * [`Metrics`] — request/shed counters, lock-free log-bucketed
+//!   latency histogram (p50/p99/p99.9), batch-size histogram,
+//!   supervision gauges (panics, respawns, deadline expiries, breaker
+//!   rejects), scraped by `GET /metrics` as JSON or
+//!   `?format=prometheus` text exposition.
 //! * [`client`] — the loopback client used by `bench_serve`,
 //!   `serve_smoke`, `chaos_smoke` and the integration tests.
+//!
+//! Observability (DESIGN.md §9): every request is stamped with a
+//! process-unique id at admission ([`crate::trace::next_request_id`])
+//! that keys its trace spans (`request` → `admission` → `queue_wait` →
+//! `batch_ride` → `engine_pass`), rides the reply body and the
+//! structured per-request log line, and is listed in the supervisor's
+//! panic line when a worker dies with it in flight.  Spans are
+//! exported by `GET /v1/trace?last=N` (chrome://tracing JSON); the
+//! whole surface costs one predicted branch per site when tracing is
+//! disabled (the default).
 //!
 //! Every request carries a deadline (`max_wait + infer_budget`)
 //! enforced at dequeue: expired requests answer 504 without riding a

@@ -278,10 +278,22 @@ fn payload_msg(payload: &(dyn std::any::Any + Send)) -> &str {
 /// shutdown) ends supervision.  `is_shutdown` keeps the backoff sleep
 /// responsive — during shutdown the supervisor exits instead of
 /// respawning, and the batcher's drain path answers what is queued.
-pub fn supervise<F, S>(name: &str, sup: &Supervision, metrics: &Metrics, is_shutdown: S, mut body: F)
-where
+///
+/// `ctx` is sampled **at panic time** and spliced into the panic log
+/// line — the batcher passes the in-flight request ids, so a chaos
+/// failure is attributable to the exact requests that rode the fatal
+/// batch (`key=value` form, e.g. `inflight=[12,13]`).
+pub fn supervise<F, S, C>(
+    name: &str,
+    sup: &Supervision,
+    metrics: &Metrics,
+    is_shutdown: S,
+    ctx: C,
+    mut body: F,
+) where
     F: FnMut(),
     S: Fn() -> bool,
+    C: Fn() -> String,
 {
     loop {
         match catch_unwind(AssertUnwindSafe(&mut body)) {
@@ -289,9 +301,11 @@ where
             Err(payload) => {
                 let consecutive = sup.on_panic();
                 metrics.record_worker_panic();
+                let c = ctx();
                 eprintln!(
-                    "worker {name}: panic #{} (consecutive {consecutive}): {}",
+                    "worker {name}: panic #{} (consecutive {consecutive}){}{c}: {}",
                     sup.panics(),
+                    if c.is_empty() { "" } else { " " },
                     payload_msg(payload.as_ref()),
                 );
                 if is_shutdown() {
@@ -420,6 +434,7 @@ mod tests {
             &sup,
             &metrics,
             || false,
+            String::new,
             || {
                 if n.fetch_add(1, Ordering::Relaxed) < 2 {
                     panic!("injected");
@@ -441,6 +456,7 @@ mod tests {
             &sup,
             &metrics,
             || down.load(Ordering::Relaxed),
+            String::new,
             || panic!("injected"),
         );
         assert_eq!(sup.panics(), 1);

@@ -1,0 +1,440 @@
+//! End-to-end request tracing: lock-free per-thread span buffers with a
+//! single-branch disabled path.
+//!
+//! The serving layer's `/metrics` aggregates answer *how much* and *how
+//! fast on average*; they cannot attribute one slow request to queueing
+//! vs. quantization vs. a specific conv node.  This module records
+//! **spans** — named `(start, duration)` intervals stamped with the
+//! request id — across the whole lifecycle:
+//!
+//! ```text
+//!   request ──┬ admission      submit(): validate + breaker + enqueue
+//!             ├ queue_wait     enqueued → dequeued by the worker
+//!             └ batch_ride     dequeued → reply sent
+//!                 └ engine_pass    one executed batch-plane pass
+//!                     └ node       one plan node (arg = node index)
+//! ```
+//!
+//! **Disabled path.** Tracing is off by default.  Every span site is a
+//! single relaxed [`enabled`] load (the disarmed-failpoint pattern from
+//! `serve::faults`: one branch, no allocation, no clock read), so the
+//! traced-but-disabled binary stays inside the `bench_serve` /
+//! `bench_engine` perf gates.
+//!
+//! **Record path.** When enabled, a span is written into one of
+//! [`SHARDS`] fixed-capacity rings of [`RING_SPANS`] cells.  Each
+//! thread is pinned to a shard once (round-robin); a write claims a
+//! slot with one relaxed `fetch_add` on the shard cursor and publishes
+//! the span fields through a seqlock (`seq` odd while writing, even
+//! when stable, `Release` on publish).  No lock is ever taken on the
+//! record path, and the scrape side ([`export_last`]) detects and skips
+//! torn cells by re-reading `seq`.  The rings overwrite oldest-first,
+//! so memory is bounded at `SHARDS * RING_SPANS` spans regardless of
+//! how long tracing stays on.
+//!
+//! **Export.** [`export_last`] renders the newest `n` stable spans as
+//! chrome://tracing JSON (`traceEvents` with `ph:"X"` complete events;
+//! `args.req` carries the request id, `args.arg` the span's extra
+//! value, e.g. the plan-node index).  Served by `GET /v1/trace?last=N`
+//! and written to a file by `cwmix serve --trace-out`.
+//!
+//! Request ids themselves ([`next_request_id`]) are allocated whether
+//! or not tracing is on — the structured per-request log lines and the
+//! `request_id` reply field need them even when nobody records spans.
+
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+use crate::minijson::Json;
+
+/// Per-thread span rings (threads are pinned round-robin).
+pub const SHARDS: usize = 8;
+
+/// Spans per ring; the global buffer holds `SHARDS * RING_SPANS`
+/// spans and overwrites oldest-first.
+pub const RING_SPANS: usize = 4096;
+
+/// The fixed span-name catalog — record sites never intern strings,
+/// they store an index into this table.
+pub const SPAN_NAMES: &[&str] = &[
+    "request",
+    "admission",
+    "queue_wait",
+    "batch_ride",
+    "engine_pass",
+    "node",
+];
+
+/// A span site's name (index into [`SPAN_NAMES`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpanName {
+    /// Whole HTTP request: admission through reply serialization.
+    Request = 0,
+    /// `Batcher::submit`: validation, breaker admission, enqueue.
+    Admission = 1,
+    /// Enqueued → dequeued by the batcher worker.
+    QueueWait = 2,
+    /// Dequeued → reply sent (includes the engine pass).
+    BatchRide = 3,
+    /// One executed engine batch-plane pass (arg = batch size).
+    EnginePass = 4,
+    /// One plan node inside a pass (arg = node index).
+    Node = 5,
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+
+/// Whether span sites record (one relaxed load — THE disabled-path
+/// branch).
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn span recording on or off (`cwmix serve --trace`, tests).
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Allocate the next request id (process-wide, starts at 1).  Always
+/// live — ids stamp log lines and replies even when tracing is off.
+pub fn next_request_id() -> u64 {
+    NEXT_ID.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Microseconds since the process trace epoch (first use).
+pub fn now_us() -> u64 {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    EPOCH.get_or_init(Instant::now).elapsed().as_micros() as u64
+}
+
+/// One published span cell.  A single seqlock (`seq` odd = writing)
+/// protects the payload; each field is its own relaxed atomic so a
+/// torn read can never be UB, only detected garbage.
+struct Cell {
+    seq: AtomicU64,
+    name: AtomicU32,
+    tid: AtomicU32,
+    id: AtomicU64,
+    arg: AtomicU64,
+    start_us: AtomicU64,
+    dur_us: AtomicU64,
+}
+
+impl Cell {
+    fn new() -> Cell {
+        Cell {
+            seq: AtomicU64::new(0),
+            name: AtomicU32::new(0),
+            tid: AtomicU32::new(0),
+            id: AtomicU64::new(0),
+            arg: AtomicU64::new(0),
+            start_us: AtomicU64::new(0),
+            dur_us: AtomicU64::new(0),
+        }
+    }
+}
+
+struct Shard {
+    /// Slots claimed so far (slot = pos % RING_SPANS).
+    pos: AtomicU64,
+    cells: Vec<Cell>,
+}
+
+struct Tracer {
+    shards: Vec<Shard>,
+}
+
+fn tracer() -> &'static Tracer {
+    static TRACER: OnceLock<Tracer> = OnceLock::new();
+    TRACER.get_or_init(|| Tracer {
+        shards: (0..SHARDS)
+            .map(|_| Shard {
+                pos: AtomicU64::new(0),
+                cells: (0..RING_SPANS).map(|_| Cell::new()).collect(),
+            })
+            .collect(),
+    })
+}
+
+/// This thread's (shard, display tid) — assigned once, round-robin.
+fn thread_slot() -> (usize, u32) {
+    static NEXT_TID: AtomicU32 = AtomicU32::new(0);
+    thread_local! {
+        static SLOT: (usize, u32) = {
+            let n = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+            (n as usize % SHARDS, n)
+        };
+    }
+    SLOT.with(|s| *s)
+}
+
+/// Record a finished span (absolute times in [`now_us`] microseconds).
+/// One relaxed `fetch_add` claims a ring slot; the seqlock publish
+/// never blocks.
+pub fn record_span(name: SpanName, id: u64, arg: u64, start_us: u64, end_us: u64) {
+    if !enabled() {
+        return;
+    }
+    let (shard_ix, tid) = thread_slot();
+    let shard = &tracer().shards[shard_ix];
+    let slot = shard.pos.fetch_add(1, Ordering::Relaxed) as usize % RING_SPANS;
+    let c = &shard.cells[slot];
+    c.seq.fetch_add(1, Ordering::Relaxed); // odd: writing
+    c.name.store(name as u32, Ordering::Relaxed);
+    c.tid.store(tid, Ordering::Relaxed);
+    c.id.store(id, Ordering::Relaxed);
+    c.arg.store(arg, Ordering::Relaxed);
+    c.start_us.store(start_us, Ordering::Relaxed);
+    c.dur_us.store(end_us.saturating_sub(start_us), Ordering::Relaxed);
+    c.seq.fetch_add(1, Ordering::Release); // even: stable
+}
+
+/// Record a span that started at `start` and ends now.
+pub fn record_since(name: SpanName, id: u64, arg: u64, start: Instant) {
+    if !enabled() {
+        return;
+    }
+    let end = now_us();
+    let dur = start.elapsed().as_micros() as u64;
+    record_span(name, id, arg, end.saturating_sub(dur), end);
+}
+
+/// A live span: records on drop.  [`span`] returns `None` when tracing
+/// is disabled, so a disabled site is one branch and no clock read.
+pub struct SpanGuard {
+    name: SpanName,
+    id: u64,
+    arg: u64,
+    start_us: u64,
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        record_span(self.name, self.id, self.arg, self.start_us, now_us());
+    }
+}
+
+/// Open a span for request `id` (None when tracing is disabled).
+#[inline]
+pub fn span(name: SpanName, id: u64) -> Option<SpanGuard> {
+    span_arg(name, id, 0)
+}
+
+/// [`span`] with an extra argument (batch size, node index, ...).
+#[inline]
+pub fn span_arg(name: SpanName, id: u64, arg: u64) -> Option<SpanGuard> {
+    if !enabled() {
+        return None;
+    }
+    Some(SpanGuard { name, id, arg, start_us: now_us() })
+}
+
+/// Total spans recorded so far (including overwritten ones).
+pub fn recorded() -> u64 {
+    tracer().shards.iter().map(|s| s.pos.load(Ordering::Relaxed)).sum()
+}
+
+/// A stable, decoded span.
+#[derive(Clone, Debug)]
+pub struct Span {
+    pub name: u32,
+    pub tid: u32,
+    pub id: u64,
+    pub arg: u64,
+    pub start_us: u64,
+    pub dur_us: u64,
+}
+
+impl Span {
+    pub fn name_str(&self) -> &'static str {
+        SPAN_NAMES.get(self.name as usize).copied().unwrap_or("span")
+    }
+}
+
+/// Seqlock read: `None` for never-written, in-flight, or torn cells.
+fn read_cell(c: &Cell) -> Option<Span> {
+    let s1 = c.seq.load(Ordering::Acquire);
+    if s1 == 0 || s1 % 2 == 1 {
+        return None;
+    }
+    let span = Span {
+        name: c.name.load(Ordering::Relaxed),
+        tid: c.tid.load(Ordering::Relaxed),
+        id: c.id.load(Ordering::Relaxed),
+        arg: c.arg.load(Ordering::Relaxed),
+        start_us: c.start_us.load(Ordering::Relaxed),
+        dur_us: c.dur_us.load(Ordering::Relaxed),
+    };
+    std::sync::atomic::fence(Ordering::Acquire);
+    if c.seq.load(Ordering::Relaxed) != s1 {
+        return None;
+    }
+    Some(span)
+}
+
+/// Snapshot the newest `n` stable spans, oldest first.
+pub fn snapshot_last(n: usize) -> Vec<Span> {
+    let mut spans: Vec<Span> = tracer()
+        .shards
+        .iter()
+        .flat_map(|s| s.cells.iter().filter_map(read_cell))
+        .collect();
+    spans.sort_by_key(|s| (s.start_us.saturating_add(s.dur_us), s.start_us));
+    if spans.len() > n {
+        spans.drain(..spans.len() - n);
+    }
+    spans
+}
+
+/// The newest `n` spans as a chrome://tracing document: load the
+/// `dumps()` of this in `chrome://tracing` / Perfetto directly.
+pub fn export_last(n: usize) -> Json {
+    let events: Vec<Json> = snapshot_last(n)
+        .iter()
+        .map(|s| {
+            Json::obj(vec![
+                ("name", Json::str(s.name_str())),
+                ("cat", Json::str("cwmix")),
+                ("ph", Json::str("X")),
+                ("ts", Json::num(s.start_us as f64)),
+                ("dur", Json::num(s.dur_us as f64)),
+                ("pid", Json::num(1.0)),
+                ("tid", Json::num(s.tid as f64)),
+                (
+                    "args",
+                    Json::obj(vec![
+                        ("req", Json::num(s.id as f64)),
+                        ("arg", Json::num(s.arg as f64)),
+                    ]),
+                ),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::str("ms")),
+    ])
+}
+
+/// Write the newest `n` spans to `path` as chrome://tracing JSON
+/// (`cwmix serve --trace-out`).
+pub fn write_chrome_trace(path: &std::path::Path, n: usize) -> std::io::Result<()> {
+    std::fs::write(path, export_last(n).dumps())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    /// Tracing state is process-global; serialize the tests that flip
+    /// it so `cargo test`'s threads cannot race each other's setup.
+    fn lock() -> std::sync::MutexGuard<'static, ()> {
+        static M: Mutex<()> = Mutex::new(());
+        M.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn spans_for(id: u64) -> Vec<Span> {
+        snapshot_last(SHARDS * RING_SPANS).into_iter().filter(|s| s.id == id).collect()
+    }
+
+    #[test]
+    fn disabled_records_nothing() {
+        let _g = lock();
+        set_enabled(false);
+        let before = recorded();
+        assert!(span(SpanName::Request, 0xD15A_B1ED).is_none());
+        record_since(SpanName::QueueWait, 0xD15A_B1ED, 0, Instant::now());
+        record_span(SpanName::Node, 0xD15A_B1ED, 3, 1, 2);
+        assert_eq!(recorded(), before, "disabled sites must not publish");
+        assert!(spans_for(0xD15A_B1ED).is_empty());
+    }
+
+    #[test]
+    fn disabled_site_is_near_free() {
+        let _g = lock();
+        set_enabled(false);
+        let t0 = Instant::now();
+        for i in 0..1_000_000u64 {
+            // the branch the hot paths pay per span site
+            if let Some(_s) = span(SpanName::Node, i) {
+                unreachable!("tracing is disabled");
+            }
+        }
+        let per_site = t0.elapsed().as_nanos() / 1_000_000;
+        // generous CI bound: a relaxed load + branch is single-digit ns
+        assert!(per_site < 500, "disabled span site took {per_site} ns");
+    }
+
+    #[test]
+    fn enabled_records_and_exports_chrome_json() {
+        let _g = lock();
+        set_enabled(true);
+        let id = 0xE0_0001;
+        {
+            let _s = span_arg(SpanName::Request, id, 7).expect("enabled");
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        record_since(SpanName::QueueWait, id, 0, Instant::now());
+        set_enabled(false);
+        let got = spans_for(id);
+        assert_eq!(got.len(), 2, "both spans published");
+        let req = got.iter().find(|s| s.name_str() == "request").unwrap();
+        assert!(req.dur_us >= 1_000, "slept 1ms inside the span");
+        assert_eq!(req.arg, 7);
+
+        let doc = export_last(16).dumps();
+        let parsed = crate::minijson::parse_bytes(doc.as_bytes()).expect("valid JSON");
+        let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        assert!(!events.is_empty());
+        for ev in events {
+            assert_eq!(ev.get("ph").unwrap().as_str().unwrap(), "X");
+            assert!(ev.get("ts").unwrap().as_f64().is_ok());
+            assert!(ev.get("dur").unwrap().as_f64().is_ok());
+            assert!(SPAN_NAMES.contains(&ev.get("name").unwrap().as_str().unwrap()));
+        }
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_and_bounds_memory() {
+        let _g = lock();
+        set_enabled(true);
+        let before = recorded();
+        for i in 0..(RING_SPANS as u64 + 64) {
+            record_span(SpanName::Node, 0xF10_0D00 + i, 0, i, i + 1);
+        }
+        set_enabled(false);
+        assert_eq!(recorded() - before, RING_SPANS as u64 + 64);
+        // this thread's shard holds at most RING_SPANS of them
+        let mine: Vec<Span> = snapshot_last(SHARDS * RING_SPANS)
+            .into_iter()
+            .filter(|s| s.id >= 0xF10_0D00)
+            .collect();
+        assert!(mine.len() <= RING_SPANS);
+        // the newest span always survives a wrap
+        assert!(mine.iter().any(|s| s.id == 0xF10_0D00 + RING_SPANS as u64 + 63));
+    }
+
+    #[test]
+    fn export_last_truncates_to_newest() {
+        let _g = lock();
+        set_enabled(true);
+        for i in 0..32u64 {
+            record_span(SpanName::Node, 0xCAFE, 0, 1_000_000 + i, 1_000_001 + i);
+        }
+        set_enabled(false);
+        let doc = export_last(4);
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 4);
+    }
+
+    #[test]
+    fn request_ids_are_unique_and_monotonic() {
+        let a = next_request_id();
+        let b = next_request_id();
+        assert!(b > a);
+    }
+}

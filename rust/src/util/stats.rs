@@ -31,6 +31,61 @@ pub fn argmax(xs: &[f32]) -> usize {
     best
 }
 
+/// Average ranks (1-based, ties share the mean of their positions).
+fn average_ranks(xs: &[f64]) -> Vec<f64> {
+    let n = xs.len();
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| xs[a].partial_cmp(&xs[b]).unwrap());
+    let mut rank = vec![0.0f64; n];
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && xs[idx[j + 1]] == xs[idx[i]] {
+            j += 1;
+        }
+        let avg = (i + j) as f64 / 2.0 + 1.0;
+        for k in i..=j {
+            rank[idx[k]] = avg;
+        }
+        i = j + 1;
+    }
+    rank
+}
+
+/// Spearman rank correlation with average-rank tie handling.
+///
+/// Computed as the Pearson correlation of the two rank vectors (the
+/// tie-correct definition, not the `1 - 6Σd²/...` shortcut which is
+/// only valid without ties).  Returns 0 for n < 2 or when either input
+/// is constant (no rank variance).  Used by `cwmix profile` to score
+/// how well the analytical [`InferenceCost`](crate::cost::InferenceCost)
+/// model ranks layers against measured per-node wall time.
+pub fn spearman(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len();
+    if n < 2 {
+        return 0.0;
+    }
+    let rx = average_ranks(xs);
+    let ry = average_ranks(ys);
+    let mx = rx.iter().sum::<f64>() / n as f64;
+    let my = ry.iter().sum::<f64>() / n as f64;
+    let mut cov = 0.0;
+    let mut vx = 0.0;
+    let mut vy = 0.0;
+    for i in 0..n {
+        let dx = rx[i] - mx;
+        let dy = ry[i] - my;
+        cov += dx * dy;
+        vx += dx * dx;
+        vy += dy * dy;
+    }
+    if vx == 0.0 || vy == 0.0 {
+        return 0.0;
+    }
+    cov / (vx * vy).sqrt()
+}
+
 /// Area under the ROC curve via the Mann–Whitney U statistic.
 ///
 /// `scores` are anomaly scores (higher = more anomalous), `labels` are
@@ -79,6 +134,30 @@ mod tests {
     #[test]
     fn argmax_ties_first() {
         assert_eq!(argmax(&[1.0, 3.0, 3.0, 2.0]), 1);
+    }
+
+    #[test]
+    fn spearman_monotone_is_one() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let ys = [10.0, 100.0, 1000.0, 10000.0];
+        assert!((spearman(&xs, &ys) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn spearman_reversed_is_minus_one() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let ys = [4.0, 3.0, 2.0, 1.0];
+        assert!((spearman(&xs, &ys) + 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn spearman_ties_and_degenerate() {
+        // constant input has no rank variance -> defined as 0
+        assert_eq!(spearman(&[1.0, 1.0, 1.0], &[1.0, 2.0, 3.0]), 0.0);
+        assert_eq!(spearman(&[5.0], &[7.0]), 0.0);
+        // ties share average ranks; correlation stays in [-1, 1]
+        let s = spearman(&[1.0, 2.0, 2.0, 3.0], &[1.0, 2.0, 3.0, 4.0]);
+        assert!(s > 0.8 && s <= 1.0);
     }
 
     #[test]

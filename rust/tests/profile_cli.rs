@@ -1,0 +1,107 @@
+//! `cwmix profile` acceptance: the per-layer profiler is deterministic
+//! across runs on the same seed (same layer sequence, same predicted
+//! shares — the measured times may wobble, the *structure* may not),
+//! its JSON doc is well-formed, and the human table carries the
+//! per-layer rows plus the model-fit summary.
+//!
+//! Spawns the real binary (`CARGO_BIN_EXE_cwmix`), so this also guards
+//! the flag surface the `profile-smoke` CI job drives.
+
+use std::process::Command;
+
+use cwmix::minijson::{parse, Json};
+
+fn run_profile(args: &[&str]) -> (String, String) {
+    let out = Command::new(env!("CARGO_BIN_EXE_cwmix"))
+        .arg("profile")
+        .args(args)
+        .output()
+        .expect("spawning cwmix profile");
+    assert!(
+        out.status.success(),
+        "cwmix profile {args:?} failed:\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    (
+        String::from_utf8(out.stdout).expect("non-UTF-8 stdout"),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+    )
+}
+
+fn bench_doc(doc: &Json) -> &Json {
+    &doc.get("benches").unwrap().as_arr().unwrap()[0]
+}
+
+/// (name, predicted_share) sequence — the deterministic skeleton.
+fn skeleton(doc: &Json) -> Vec<(String, f64)> {
+    bench_doc(doc)
+        .get("layers")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|l| {
+            (
+                l.get("name").unwrap().as_str().unwrap().to_string(),
+                l.get("predicted_share").unwrap().as_f64().unwrap(),
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn two_runs_same_seed_agree_on_structure() {
+    let args = ["--bench", "ad", "--iters", "5", "--batch", "4", "--json", "-"];
+    let (out1, _) = run_profile(&args);
+    let (out2, _) = run_profile(&args);
+    let d1 = parse(&out1).expect("run 1 stdout is not JSON");
+    let d2 = parse(&out2).expect("run 2 stdout is not JSON");
+
+    let s1 = skeleton(&d1);
+    let s2 = skeleton(&d2);
+    assert!(!s1.is_empty(), "no layers profiled");
+    assert_eq!(s1, s2, "layer sequence / predicted shares diverged across runs");
+
+    for d in [&d1, &d2] {
+        let b = bench_doc(d);
+        assert_eq!(b.get("bench").unwrap().as_str().unwrap(), "ad");
+        let fit = b.get("spearman").unwrap().as_f64().unwrap();
+        assert!((-1.0..=1.0).contains(&fit), "spearman {fit} out of range");
+        // shares are normalized over the accounted nodes
+        let sum: f64 = b
+            .get("layers")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|l| l.get("share").unwrap().as_f64().unwrap())
+            .sum();
+        assert!((sum - 1.0).abs() < 1e-6, "measured shares sum to {sum}");
+        // every profiled layer executed every pass
+        let iters = b.get("iters").unwrap().as_f64().unwrap();
+        for l in b.get("layers").unwrap().as_arr().unwrap() {
+            assert_eq!(l.get("calls").unwrap().as_f64().unwrap(), iters);
+            assert!(l.get("bytes_moved").unwrap().as_f64().unwrap() > 0.0);
+        }
+    }
+}
+
+#[test]
+fn table_mode_prints_rows_and_fit_summary() {
+    let (out, _) = run_profile(&["--bench", "ad", "--iters", "3", "--batch", "2"]);
+    assert!(out.contains("== ad [packed] batch=2 iters=3 =="), "{out}");
+    assert!(out.contains("layer"), "missing table header:\n{out}");
+    assert!(out.contains("fit: spearman="), "missing fit summary:\n{out}");
+    assert!(out.contains("coverage: nodes"), "missing coverage line:\n{out}");
+}
+
+#[test]
+fn json_file_output_lands_on_disk() {
+    let path = std::env::temp_dir().join(format!("cwmix_prof_{}.json", std::process::id()));
+    let path_s = path.to_str().unwrap();
+    let _ = run_profile(&["--bench", "ad", "--iters", "2", "--json", path_s]);
+    let text = std::fs::read_to_string(&path).expect("profile JSON not written");
+    let doc = parse(&text).expect("file output is not JSON");
+    assert_eq!(doc.get("version").unwrap().as_f64().unwrap(), 1.0);
+    std::fs::remove_file(&path).ok();
+}

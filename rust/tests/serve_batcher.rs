@@ -68,7 +68,8 @@ fn coalesces_up_to_max_batch_bit_identically() {
     let inputs = samples("ad", 10, feat);
     let rxs: Vec<_> = inputs
         .iter()
-        .map(|x| batcher.submit(x.clone()).expect("admitted"))
+        .enumerate()
+        .map(|(i, x)| batcher.submit(x.clone(), i as u64 + 1).expect("admitted"))
         .collect();
 
     let mut arena = plan.arena();
@@ -106,7 +107,7 @@ fn lone_request_flushes_at_max_wait() {
 
     let x = samples("ad", 1, feat).remove(0);
     let t0 = Instant::now();
-    let rx = batcher.submit(x.clone()).unwrap();
+    let rx = batcher.submit(x.clone(), 1).unwrap();
     let (out, batch) = recv_ok(&rx);
     let waited = t0.elapsed();
     assert_eq!(batch, 1);
@@ -143,11 +144,11 @@ fn full_queue_sheds_with_explicit_reply() {
     );
 
     let inputs = samples("ad", 3, feat);
-    let rx1 = batcher.submit(inputs[0].clone()).unwrap();
-    let rx2 = batcher.submit(inputs[1].clone()).unwrap();
+    let rx1 = batcher.submit(inputs[0].clone(), 1).unwrap();
+    let rx2 = batcher.submit(inputs[1].clone(), 2).unwrap();
     // queue now holds 2 = queue_cap pending requests (the worker is
     // inside its coalescing window, nothing drained yet)
-    let shed = batcher.submit(inputs[2].clone());
+    let shed = batcher.submit(inputs[2].clone(), 3);
     assert!(
         matches!(shed, Err(SubmitError::Overloaded)),
         "expected Overloaded, got {shed:?}"
@@ -175,12 +176,12 @@ fn bad_input_and_shutdown_refusals() {
         BatchPolicy::default(),
         WorkerOpts::default(),
     );
-    match batcher.submit(vec![0.0; feat + 1]) {
+    match batcher.submit(vec![0.0; feat + 1], 1) {
         Err(SubmitError::BadInput(_)) => {}
         other => panic!("expected BadInput, got {other:?}"),
     }
     batcher.shutdown();
-    match batcher.submit(vec![0.0; feat]) {
+    match batcher.submit(vec![0.0; feat], 2) {
         Err(SubmitError::ShuttingDown) => {}
         other => panic!("expected ShuttingDown, got {other:?}"),
     }
@@ -214,7 +215,8 @@ fn coalesced_equals_independent_single_requests() {
     );
     let rxs: Vec<_> = inputs
         .iter()
-        .map(|x| solo.submit(x.clone()).expect("admitted"))
+        .enumerate()
+        .map(|(i, x)| solo.submit(x.clone(), i as u64 + 1).expect("admitted"))
         .collect();
     let independent: Vec<Vec<f32>> = rxs
         .iter()
@@ -243,7 +245,8 @@ fn coalesced_equals_independent_single_requests() {
     );
     let rxs: Vec<_> = inputs
         .iter()
-        .map(|x| coal.submit(x.clone()).expect("admitted"))
+        .enumerate()
+        .map(|(i, x)| coal.submit(x.clone(), i as u64 + 1).expect("admitted"))
         .collect();
     let mut max_seen = 0;
     for (rx, want) in rxs.iter().zip(&independent) {
@@ -281,7 +284,8 @@ fn conv_model_bit_identical_through_batcher() {
     let inputs = samples("kws", 8, feat);
     let rxs: Vec<_> = inputs
         .iter()
-        .map(|x| batcher.submit(x.clone()).expect("admitted"))
+        .enumerate()
+        .map(|(i, x)| batcher.submit(x.clone(), i as u64 + 1).expect("admitted"))
         .collect();
     let mut arena = plan.arena();
     for (x, rx) in inputs.iter().zip(&rxs) {
@@ -319,7 +323,8 @@ fn shutdown_mid_batch_answers_every_sender() {
     let inputs = samples("ad", n, feat);
     let rxs: Vec<_> = inputs
         .iter()
-        .map(|x| batcher.submit(x.clone()).expect("admitted"))
+        .enumerate()
+        .map(|(i, x)| batcher.submit(x.clone(), i as u64 + 1).expect("admitted"))
         .collect();
     batcher.shutdown();
 
@@ -365,7 +370,7 @@ fn worker_panic_respawns_and_recovers_bit_identically() {
     let inputs = samples("ad", 2, feat);
     // first request rides the panicking batch: its reply sender dies
     // with the worker stack — an explicit disconnect, not a hang
-    let rx = batcher.submit(inputs[0].clone()).unwrap();
+    let rx = batcher.submit(inputs[0].clone(), 1).unwrap();
     match rx.recv_timeout(Duration::from_secs(30)) {
         Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {}
         other => panic!("expected a dropped sender from the panicked batch, got {other:?}"),
@@ -381,7 +386,7 @@ fn worker_panic_respawns_and_recovers_bit_identically() {
         }
         std::thread::sleep(Duration::from_millis(5));
     }
-    let rx = batcher.submit(inputs[1].clone()).unwrap();
+    let rx = batcher.submit(inputs[1].clone(), 2).unwrap();
     let (out, _) = recv_ok(&rx);
     let mut arena = plan.arena();
     assert_eq!(out, plan.run_sample(&mut arena, &inputs[1]).unwrap());
@@ -415,9 +420,9 @@ fn stalled_worker_expires_queued_requests() {
     let batcher = Batcher::start(Arc::clone(&plan), Arc::clone(&metrics), policy, opts);
 
     let inputs = samples("ad", 3, feat);
-    let rx_stalled = batcher.submit(inputs[0].clone()).unwrap();
-    let rx_a = batcher.submit(inputs[1].clone()).unwrap();
-    let rx_b = batcher.submit(inputs[2].clone()).unwrap();
+    let rx_stalled = batcher.submit(inputs[0].clone(), 1).unwrap();
+    let rx_a = batcher.submit(inputs[1].clone(), 2).unwrap();
+    let rx_b = batcher.submit(inputs[2].clone(), 3).unwrap();
 
     // the stalled batch itself still completes (slow, not dead)
     let (out, _) = recv_ok(&rx_stalled);

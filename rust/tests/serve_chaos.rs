@@ -483,6 +483,59 @@ fn registry_load_faults_fall_back_to_compile() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// Request-id chaos (DESIGN.md §9): a request whose worker panics
+/// still carries its admission-stamped id into the explicit 500 reply,
+/// and the spans recorded before the worker died — request, admission,
+/// queue_wait — survive in `/v1/trace`.  The shell harness
+/// (`tools/chaos_smoke.sh`) additionally greps the same id out of the
+/// server's structured log line; here we prove the in-process half.
+#[test]
+fn request_id_survives_worker_panic() {
+    cwmix::trace::set_enabled(true);
+    let (registry, server) = start_faulted(
+        &["ad"],
+        BatchPolicy { max_wait_us: 1_000, ..BatchPolicy::default() },
+        "engine_panic:ad:once",
+    );
+    let addr = server.addr();
+    let (input, want) = expected(&registry, "ad", 0);
+    let mut conn = Conn::connect(addr).unwrap();
+
+    let r = conn.post("/v1/infer/ad", &infer_body(&input)).unwrap();
+    assert_eq!(r.status, 500, "panicked batch must answer 500: {}", r.body.dumps());
+    let id = r.body.get("request_id").unwrap().as_f64().unwrap();
+    assert!(id >= 1.0, "500 reply lost its request id: {}", r.body.dumps());
+
+    // spans recorded at admission/dequeue time outlive the worker
+    let t = conn.get("/v1/trace?last=4096").unwrap();
+    assert_eq!(t.status, 200);
+    let events = t.body.get("traceEvents").unwrap().as_arr().unwrap();
+    let names: Vec<String> = events
+        .iter()
+        .filter(|e| {
+            e.get("args").unwrap().get("req").unwrap().as_f64().unwrap() == id
+        })
+        .map(|e| e.get("name").unwrap().as_str().unwrap().to_string())
+        .collect();
+    for need in ["request", "admission", "queue_wait"] {
+        assert!(
+            names.iter().any(|n| n == need),
+            "span {need} missing after panic: {names:?}"
+        );
+    }
+
+    // recovery answers bit-identically with a fresh, later id
+    poll_gauge(addr, "ad", "worker_respawns", |v| v >= 1.0);
+    let r = conn.post("/v1/infer/ad", &infer_body(&input)).unwrap();
+    assert_eq!(r.status, 200, "{}", r.body.dumps());
+    assert_eq!(output_of(&r.body).unwrap(), want);
+    let id2 = r.body.get("request_id").unwrap().as_f64().unwrap();
+    assert!(id2 > id, "request ids must be monotone ({id2} after {id})");
+    drop(conn);
+    server.stop().unwrap();
+    registry.shutdown();
+}
+
 /// Json sanity for the supervision surface: `/metrics` stays parseable
 /// with gauges injected (guards the bench_serve scrape).
 #[test]

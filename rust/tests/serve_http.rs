@@ -263,5 +263,97 @@ fn shutdown_endpoint_is_clean() {
     server.join().unwrap();
     // post-shutdown, the batcher refuses instead of hanging
     let entry = registry.get("ad").unwrap();
-    assert!(entry.batcher().submit(input).is_err());
+    assert!(entry.batcher().submit(input, 1).is_err());
+}
+
+/// Observability round trip (DESIGN.md §9): with tracing on, one
+/// served inference stamps a request id into the reply body and
+/// leaves its span chain — request, admission, queue_wait, batch_ride
+/// — scrapeable from `GET /v1/trace` as chrome://tracing events, with
+/// every child span contained by the request envelope.
+#[test]
+fn trace_spans_and_request_id_round_trip() {
+    cwmix::trace::set_enabled(true);
+    let (registry, server) = start(&["ad"], BatchPolicy::default());
+    let mut conn = Conn::connect(server.addr()).unwrap();
+
+    let (input, want) = expected(&registry, "ad", 0);
+    let r = conn.post("/v1/infer/ad", &infer_body(&input)).unwrap();
+    assert_eq!(r.status, 200, "{}", r.body.dumps());
+    assert_eq!(output_of(&r.body).unwrap(), want);
+    let id = r.body.get("request_id").unwrap().as_f64().unwrap();
+    assert!(id >= 1.0, "request id must start at 1 (got {id})");
+
+    let t = conn.get("/v1/trace?last=4096").unwrap();
+    assert_eq!(t.status, 200);
+    assert_eq!(t.body.get("displayTimeUnit").unwrap().as_str().unwrap(), "ms");
+    let events = t.body.get("traceEvents").unwrap().as_arr().unwrap();
+    let mine: Vec<&Json> = events
+        .iter()
+        .filter(|e| {
+            e.get("args").unwrap().get("req").unwrap().as_f64().unwrap() == id
+        })
+        .collect();
+    let name_of = |e: &Json| e.get("name").unwrap().as_str().unwrap().to_string();
+    let names: Vec<String> = mine.iter().map(|&e| name_of(e)).collect();
+    for need in ["request", "admission", "queue_wait", "batch_ride"] {
+        assert!(
+            names.iter().any(|n| n == need),
+            "span {need} missing for request {id}: {names:?}"
+        );
+    }
+    // children are contained by the request envelope (same µs clock)
+    let window = |e: &Json| {
+        let ts = e.get("ts").unwrap().as_f64().unwrap();
+        (ts, ts + e.get("dur").unwrap().as_f64().unwrap())
+    };
+    let req_ev = *mine.iter().find(|&&e| name_of(e) == "request").unwrap();
+    let (r0, r1) = window(req_ev);
+    for &e in &mine {
+        if name_of(e) == "request" {
+            continue;
+        }
+        let (c0, c1) = window(e);
+        // 1 ms slack: start/end are captured on different threads
+        assert!(
+            c0 >= r0 - 1_000.0 && c1 <= r1 + 1_000.0,
+            "span {} [{c0}, {c1}] escapes request [{r0}, {r1}]",
+            name_of(e)
+        );
+    }
+    drop(conn);
+    server.stop().unwrap();
+    registry.shutdown();
+}
+
+/// `GET /metrics?format=prometheus` renders the text exposition: one
+/// `# TYPE` header per family, per-model labels, and the latency
+/// summary quantiles — while the default JSON route stays unchanged.
+#[test]
+fn prometheus_exposition_over_http() {
+    let (registry, server) = start(&["ad"], BatchPolicy::default());
+    let mut conn = Conn::connect(server.addr()).unwrap();
+
+    let (input, _) = expected(&registry, "ad", 0);
+    let r = conn.post("/v1/infer/ad", &infer_body(&input)).unwrap();
+    assert_eq!(r.status, 200);
+
+    let (status, text) = conn.get_text("/metrics?format=prometheus").unwrap();
+    assert_eq!(status, 200);
+    assert!(
+        text.contains("# TYPE cwmix_requests_total counter"),
+        "missing requests family:\n{text}"
+    );
+    assert!(text.contains("cwmix_requests_total{model=\"ad\"} 1"));
+    assert!(text.contains("cwmix_latency_us{model=\"ad\",quantile=\"0.99\"}"));
+    assert!(text.contains("cwmix_batch_size_bucket{model=\"ad\",le=\"+Inf\"}"));
+    assert!(text.contains("cwmix_uptime_seconds"));
+    assert!(text.contains("cwmix_model_bytes{model=\"ad\"}"));
+    // the JSON default is untouched
+    let m = conn.get("/metrics").unwrap();
+    assert_eq!(m.status, 200);
+    assert!(m.body.get("models").is_ok());
+    drop(conn);
+    server.stop().unwrap();
+    registry.shutdown();
 }

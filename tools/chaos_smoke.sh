@@ -3,13 +3,17 @@
 #
 #   1. spawn `cwmix serve` on an ephemeral port with a fault plan armed
 #      via the env var (CWMIX_FAULTS=engine_panic:ic:once — the server
-#      must log the armed plan)
+#      must log the armed plan) and span recording on (CWMIX_TRACE=1)
 #   2. run `chaos_smoke`, which drives the acceptance sequence: the
-#      injected panic answers an explicit 5xx, the worker respawns,
-#      recovery is bit-identical to a locally compiled run_sample, the
-#      other models never see an error, and the supervision gauges
-#      (worker_panics / worker_respawns / breaker_state) are scrapeable
-#   3. assert the server process exits 0 on its own (a panicked worker
+#      injected panic answers an explicit 5xx that still carries its
+#      request id, the pre-crash span chain is scrapeable from
+#      /v1/trace, the worker respawns, recovery is bit-identical to a
+#      locally compiled run_sample, the other models never see an
+#      error, and the supervision gauges (worker_panics /
+#      worker_respawns / breaker_state) are scrapeable
+#   3. assert the panicked request left a structured `request ...`
+#      log line (the out-of-process half of the request-id story)
+#   4. assert the server process exits 0 on its own (a panicked worker
 #      must not poison the shutdown path)
 #
 # Usage: tools/chaos_smoke.sh   (from the repo root, after
@@ -21,7 +25,7 @@ LOG=$(mktemp)
 FAULTS=${CWMIX_CHAOS_FAULTS:-engine_panic:ic:once}
 FAULTED=${CWMIX_CHAOS_MODEL:-ic}
 
-CWMIX_FAULTS="$FAULTS" CWMIX_FAULTS_SEED=0 \
+CWMIX_FAULTS="$FAULTS" CWMIX_FAULTS_SEED=0 CWMIX_TRACE=1 \
     "$BIN_DIR/cwmix" serve --addr 127.0.0.1:0 >"$LOG" 2>&1 &
 SERVER_PID=$!
 trap 'kill "$SERVER_PID" 2>/dev/null || true' EXIT
@@ -52,8 +56,21 @@ if ! grep -q "fault plan armed" "$LOG"; then
     cat "$LOG" >&2
     exit 1
 fi
+if ! grep -q "tracing enabled" "$LOG"; then
+    echo "server never logged that tracing is enabled (CWMIX_TRACE=1):" >&2
+    cat "$LOG" >&2
+    exit 1
+fi
 
 "$BIN_DIR/chaos_smoke" "$ADDR" "$FAULTED"
+
+# the panicked request must have left a structured request log line —
+# 5xx replies are always logged, regardless of CWMIX_LOG_SAMPLE
+if ! grep -E "^request model=$FAULTED id=[0-9]+ status=5" "$LOG" >/dev/null; then
+    echo "no structured request log line for the panicked request:" >&2
+    cat "$LOG" >&2
+    exit 1
+fi
 
 # clean shutdown: the serve process must exit 0 by itself, promptly —
 # an injected panic must not leak into the exit status

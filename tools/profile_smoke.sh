@@ -1,0 +1,44 @@
+#!/usr/bin/env bash
+# CI profile smoke: run `cwmix profile` against two zoo models and
+# assert the per-layer table, the coverage line, and the cost-model-fit
+# summary all render.  This drives the same flag surface the
+# `profile_cli` integration tests cover in-process, but through the
+# release binary CI actually ships — a broken table format or a
+# profiler that panics on a real model fails here even if the JSON
+# path stays green.
+#
+# Usage: tools/profile_smoke.sh   (from the repo root, after
+#        `cargo build --release`; CWMIX_BIN_DIR overrides target/release)
+set -euo pipefail
+
+BIN_DIR=${CWMIX_BIN_DIR:-target/release}
+ITERS=${CWMIX_PROFILE_ITERS:-5}
+
+for bench in ad kws; do
+    OUT=$("$BIN_DIR/cwmix" profile --bench "$bench" --iters "$ITERS" --batch 4)
+    echo "$OUT"
+    for want in \
+        "== $bench [packed] batch=4 iters=$ITERS ==" \
+        "layer" \
+        "coverage: nodes" \
+        "fit: spearman="; do
+        if ! grep -qF -- "$want" <<<"$OUT"; then
+            echo "profile output for $bench missing \"$want\"" >&2
+            exit 1
+        fi
+    done
+done
+
+# the machine-readable path: --json - must emit pure JSON on stdout
+"$BIN_DIR/cwmix" profile --bench ad --iters 2 --batch 2 --json - | python3 -c '
+import json, sys
+doc = json.load(sys.stdin)
+assert doc["version"] == 1.0, doc
+layers = doc["benches"][0]["layers"]
+assert layers, "no layers profiled"
+share = sum(l["share"] for l in layers)
+assert abs(share - 1.0) < 1e-6, f"measured shares sum to {share}"
+print(f"profile json ok: {len(layers)} layers, shares sum {share:.6f}")
+'
+
+echo "profile smoke passed: per-layer tables + fit summary + JSON doc"
